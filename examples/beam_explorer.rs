@@ -1,0 +1,80 @@
+//! Beam-search hyperparameter explorer (the appendix A.5 / Fig 9
+//! single-method setting): runs several (N, W, C) beam configurations on
+//! a handful of hard queries and prints the accuracy/token/latency
+//! profile of each, showing the tradeoff surface the beam-only adaptive
+//! router optimizes over.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example beam_explorer
+//! ```
+
+use ttc::config::Config;
+use ttc::engine::Engine;
+use ttc::strategies::{Executor, Strategy};
+use ttc::taskgen::Problem;
+use ttc::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let engine = Engine::start(&cfg)?;
+    let executor = Executor::new(engine.handle(), engine.clock.clone(), cfg.engine.temperature);
+
+    // hard problems (k = 6, 7): where the paper finds beam search shines
+    let mut rng = Rng::new(0xBEA7, 0);
+    let problems: Vec<Problem> = (0..6)
+        .map(|i| Problem::sample(&mut rng, 6 + i % 2))
+        .collect();
+
+    let configs = [
+        Strategy::beam(2, 2, 12),
+        Strategy::beam(4, 2, 12),
+        Strategy::beam(4, 4, 12),
+        Strategy::beam(4, 2, 6), // smaller chunk: more PRM checkpoints
+    ];
+
+    println!(
+        "{:<14} {:>8} {:>9} {:>11} {:>7}",
+        "config", "acc", "tokens", "latency_ms", "calls"
+    );
+    for strategy in &configs {
+        let mut correct = 0usize;
+        let mut tokens = 0usize;
+        let mut latency = 0.0f64;
+        let mut calls = 0usize;
+        for p in &problems {
+            let o = executor.run(strategy, &p.query_text())?;
+            correct += o.is_correct(&p.answer().to_string()) as usize;
+            tokens += o.tokens;
+            latency += o.latency_ms;
+            calls += o.engine_calls;
+        }
+        let n = problems.len();
+        println!(
+            "{:<14} {:>8.2} {:>9.0} {:>11.0} {:>7}",
+            strategy.id(),
+            correct as f64 / n as f64,
+            tokens as f64 / n as f64,
+            latency / n as f64,
+            calls / n,
+        );
+    }
+    println!("\n(compare with majority_vote@4 on the same problems)");
+    let mv = Strategy::mv(4);
+    let mut correct = 0;
+    let mut tokens = 0;
+    let mut latency = 0.0;
+    for p in &problems {
+        let o = executor.run(&mv, &p.query_text())?;
+        correct += o.is_correct(&p.answer().to_string()) as usize;
+        tokens += o.tokens;
+        latency += o.latency_ms;
+    }
+    println!(
+        "{:<14} {:>8.2} {:>9.0} {:>11.0}",
+        mv.id(),
+        correct as f64 / problems.len() as f64,
+        tokens as f64 / problems.len() as f64,
+        latency / problems.len() as f64,
+    );
+    Ok(())
+}

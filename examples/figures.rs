@@ -1,0 +1,16 @@
+//! Regenerate every figure in the paper from the collected matrices.
+//! Thin wrapper over `ttc figures --fig all` so the reproduction entry
+//! point is also a library example.
+//!
+//! ```bash
+//! cargo run --release --example figures            # all figures
+//! cargo run --release --example figures -- 1a      # one panel
+//! ```
+
+fn main() -> anyhow::Result<()> {
+    let fig = std::env::args().nth(1).unwrap_or_else(|| "all".into());
+    let args = vec!["figures".to_string(), "--fig".to_string(), fig];
+    ttc::server::commands::cmd_figures(&args)?;
+    println!("figures written under results/figures/");
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! The probe pipeline end to end on a miniature budget: collect a small
+//! evaluation matrix, train the accuracy probe through the AOT'd Adam
+//! step, Platt-calibrate, and print per-difficulty predictions — a
+//! self-contained demonstration that the *rust* side owns the full
+//! adaptive loop (python never sees the labels).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example probe_pipeline
+//! ```
+
+use ttc::config::Config;
+use ttc::data::Splits;
+use ttc::engine::{EmbedKind, Engine};
+use ttc::matrix;
+use ttc::probe::{train_probe, FeatureBuilder};
+use ttc::strategies::{Executor, Strategy};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::default();
+    // miniature strategy space + query budget so this finishes in minutes
+    cfg.space.mv_ns = vec![1, 4];
+    cfg.space.bon_ns = vec![4];
+    cfg.space.beam = vec![(2, 2, 12)];
+    let engine = Engine::start(&cfg)?;
+    let executor = Executor::new(engine.handle(), engine.clock.clone(), cfg.engine.temperature);
+    let splits = Splits::load(&cfg.paths().data_dir())?;
+    let strategies = Strategy::enumerate(&cfg.space);
+
+    let tmp = std::env::temp_dir().join(format!("ttc_probe_pipeline_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp)?;
+    let train_q = &splits.train[..16.min(splits.train.len())];
+    let calib_q = &splits.calib[..12.min(splits.calib.len())];
+    println!(
+        "collecting {}×{} matrix (train) + {}×{} (calib)...",
+        train_q.len(),
+        strategies.len(),
+        calib_q.len(),
+        strategies.len()
+    );
+    let train_m = matrix::collect(
+        &executor, train_q, "train", &strategies, 2, &tmp.join("m_train.jsonl"),
+    )?;
+    let calib_m = matrix::collect(
+        &executor, calib_q, "calib", &strategies, 1, &tmp.join("m_calib.jsonl"),
+    )?;
+
+    let info = engine.handle().info()?;
+    let features = info.req("shapes")?.req_usize("probe_features")?;
+    let fb = FeatureBuilder::new(features - 9, cfg.space.beam_max_rounds);
+    let (probe, report) = train_probe(
+        &engine.handle(),
+        &train_m,
+        &calib_m,
+        train_q,
+        calib_q,
+        &fb,
+        EmbedKind::Pool,
+        &cfg.probe,
+        7,
+    )?;
+    println!("probe report: {}", report.pretty());
+
+    // show â_s(x) for an easy and a hard query across the space
+    let tok = ttc::tokenizer::Tokenizer::new();
+    for q in [&splits.test[0], &splits.test[splits.test.len() - 1]] {
+        let emb = engine
+            .handle()
+            .embed(EmbedKind::Pool, vec![tok.encode(&q.query)?])?
+            .remove(0);
+        let qlen = tok.encode(&q.query)?.len();
+        let feats: Vec<Vec<f32>> = strategies.iter().map(|s| fb.build(&emb, s, qlen)).collect();
+        let probs = probe.predict(&engine.handle(), feats)?;
+        println!("\nquery {} (k={}):", q.id, q.k);
+        for (s, p) in strategies.iter().zip(probs) {
+            println!("  â[{:<14}] = {p:.3}", s.id());
+        }
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: load the AOT artifacts, ask one math query, and compare a
+//! cheap strategy (majority voting @4) against beam search on the same
+//! query — printing answers, token costs and latencies.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use ttc::config::Config;
+use ttc::engine::Engine;
+use ttc::strategies::{Executor, Strategy};
+use ttc::taskgen::Problem;
+use ttc::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    if !cfg.paths.artifacts.join("hlo_index.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(2);
+    }
+
+    // 1. start the engine (loads weights, lazily compiles executables)
+    let engine = Engine::start(&cfg)?;
+    let executor = Executor::new(engine.handle(), engine.clock.clone(), cfg.engine.temperature);
+
+    // 2. sample a problem the generator has never seen
+    let mut rng = Rng::new(0xD15C0, 0);
+    let problem = Problem::sample(&mut rng, 5);
+    let query = problem.query_text();
+    println!("query : {}", query.trim());
+    println!("truth : {}", problem.answer());
+
+    // 3. run two strategies on it
+    for strategy in [Strategy::mv(4), Strategy::beam(4, 2, 12)] {
+        let outcome = executor.run(&strategy, &query)?;
+        println!(
+            "{:<14} -> answer {:<4} ({}) | {:>4} tokens | {:>7.0} ms | {} engine calls",
+            strategy.id(),
+            outcome.answer.clone().unwrap_or_else(|| "?".into()),
+            if outcome.is_correct(&problem.answer().to_string()) {
+                "correct"
+            } else {
+                "wrong"
+            },
+            outcome.tokens,
+            outcome.latency_ms,
+            outcome.engine_calls,
+        );
+    }
+
+    // 4. engine diagnostics
+    println!("\nengine: {}", engine.handle().info()?.pretty());
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! End-to-end serving driver (the repo's E2E validation example).
+//!
+//! Loads the trained generator + PRM + calibrated probe, then serves a
+//! batch of real test queries through the **query-adaptive router** under
+//! Poisson arrivals, reporting accuracy, token cost, latency percentiles
+//! and throughput — and contrasts it against a static strategy at the
+//! same load.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --bin ttc -- collect            # evaluation matrix
+//! cargo run --release --bin ttc -- train-probe        # probe + calibration
+//! cargo run --release --example serve_adaptive
+//! ```
+
+use ttc::config::Config;
+use ttc::costmodel::CostModel;
+use ttc::data::Splits;
+use ttc::engine::Engine;
+use ttc::probe::{FeatureBuilder, ProbeCheckpoint};
+use ttc::router::{Lambdas, Router};
+use ttc::server::driver::{self, Mode};
+use ttc::server::loadgen::{self, Arrivals};
+use ttc::strategies::{Executor, Strategy};
+use ttc::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let engine = Engine::start(&cfg)?;
+    let executor = Executor::new(engine.handle(), engine.clock.clone(), cfg.engine.temperature);
+    let splits = Splits::load(&cfg.paths().data_dir())?;
+
+    // adaptive mode needs the trained probe + cost model
+    let probe = ProbeCheckpoint::load(&cfg.paths.results.join("probe_pool"))?;
+    probe.install(&engine.handle())?;
+    let costs = CostModel::from_json(&ttc::util::json::parse(&std::fs::read_to_string(
+        cfg.paths.results.join("cost_model.json"),
+    )?)?)?;
+    let info = engine.handle().info()?;
+    let features = info.req("shapes")?.req_usize("probe_features")?;
+    let fb = FeatureBuilder::new(features - 9, cfg.space.beam_max_rounds);
+    let router = Router::new(Strategy::enumerate(&cfg.space), probe, costs, fb);
+
+    // pre-compile every executable the adaptive mix can touch so live
+    // requests never pay lazy XLA compilation
+    driver::warmup(&executor, &router.strategies, &splits.test[0].query)?;
+
+    let n_requests = std::env::var("TTC_SERVE_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(24);
+    let rate = 0.5; // req/s — keeps the 1-core testbed below saturation
+    let mut rng = Rng::new(cfg.seed, 0xAD);
+    println!("== adaptive routing (λ_T=1e-4, λ_L=1e-5), {n_requests} reqs @ {rate}/s ==");
+    let schedule = loadgen::schedule(
+        &splits.test,
+        n_requests,
+        Arrivals::Poisson { rate },
+        &mut rng,
+    );
+    let report = driver::run(
+        &executor,
+        &Mode::Adaptive(router, Lambdas::new(1e-4, 1e-5)),
+        schedule,
+        4,
+    )?;
+    report.log_summary("adaptive");
+    println!("{}", report.to_json().pretty());
+
+    println!("== static baseline (majority_vote@8), same load ==");
+    let mut rng = Rng::new(cfg.seed, 0xAD); // same schedule
+    let schedule = loadgen::schedule(
+        &splits.test,
+        n_requests,
+        Arrivals::Poisson { rate },
+        &mut rng,
+    );
+    let report = driver::run(&executor, &Mode::Static(Strategy::mv(8)), schedule, 4)?;
+    report.log_summary("static mv@8");
+    println!("{}", report.to_json().pretty());
+    Ok(())
+}

@@ -1,0 +1,3 @@
+# Build-time compile path: JAX model (L2) + Pallas kernels (L1) + AOT lowering.
+# Nothing in this package is imported at serving time — the rust coordinator
+# consumes only the artifacts this package emits.

@@ -1,0 +1,290 @@
+"""AOT lowering: every engine entry point → HLO text artifacts.
+
+This is the only bridge between the python build path and the rust
+request path. For each (function × batch-bucket × length-bucket) we:
+
+1. ``jax.jit(fn).lower(*example_args)`` with the *trained* weight pytree
+   as the first argument — weights stay runtime parameters, fed once by
+   rust and kept device-resident;
+2. convert the StableHLO module to an XlaComputation and dump **HLO
+   text** (NOT a serialized proto: jax ≥ 0.5 emits 64-bit instruction
+   ids that the crate's xla_extension 0.5.1 rejects; the text parser
+   reassigns ids — see /opt/xla-example/README.md);
+3. record the call signature in ``hlo_index.json`` so the rust runtime
+   can type-check buffers before execution.
+
+The generation loop lives **in-graph** (``model.lm_generate``): the xla
+crate returns executable outputs as one tuple buffer, so a rust-side
+per-token loop would round-trip the whole KV cache through host literals
+each step. With in-graph generation the cache never leaves the device.
+
+Entry points per batch bucket B ∈ {1, 4, 8, 16, 32}:
+  ``lm_generate_b{B}``       — full candidate generation (T=96, stop \\n)
+  ``lm_chunk_b{B}_l{L}``     — one beam-search step (T=16, stop \\n or ;)
+                               for prefix length buckets L ∈ {32,64,96,128}
+  ``prm_score_b{B}``         — PRM prefix scoring (length 128)
+  ``embed_pool_b{B}``        — max-pooled hidden-state query embedding
+  ``embed_small_b{B}``       — mean-pooled token-embedding variant
+plus ``probe_fwd_b32`` and ``probe_train_b64``.
+
+Usage: python -m compile.aot --out ../artifacts [--report]
+"""
+
+import argparse
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.weights_io import flatten_with_names, load_weights
+
+BATCH_BUCKETS = [1, 4, 8, 16, 32]
+CHUNK_LENS = [32, 64, 96, 128]
+QUERY_LEN = 32
+PRM_LEN = 128
+GEN_MAX_NEW = 96
+CHUNK_MAX_NEW = 16
+PROBE_FWD_BATCH = 32
+PROBE_TRAIN_BATCH = 64
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def arg_sig(name, s):
+    return {"name": name, "dtype": str(s.dtype), "shape": list(s.shape)}
+
+
+class Lowerer:
+    def __init__(self, out_dir, report=False):
+        self.out_dir = out_dir
+        self.index = []
+        self.report = report
+        self.op_counts = {}
+
+    def lower(self, name, fn, weights, weight_set, args):
+        """Lower fn(weights, *args) and record its signature."""
+        t0 = time.time()
+        arg_specs = [spec(a["shape"], a["dtype"]) for a in args]
+        # keep_unused: the engine feeds the FULL weight list positionally,
+        # so entry points that don't touch every tensor (e.g. embed_pool
+        # never reads the LM head) must keep the unused parameters.
+        if weights is not None:
+            lowered = jax.jit(fn, keep_unused=True).lower(weights, *arg_specs)
+        else:
+            lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = f"hlo/{name}.hlo.txt"
+        with open(f"{self.out_dir}/{path}", "w") as f:
+            f.write(text)
+        out_tree = jax.tree_util.tree_map(
+            lambda x: {"dtype": str(x.dtype), "shape": list(x.shape)},
+            lowered.out_info,
+        )
+        out_flat = jax.tree_util.tree_leaves(
+            out_tree, is_leaf=lambda x: isinstance(x, dict) and "dtype" in x
+        )
+        self.index.append(
+            {
+                "name": name,
+                "file": path,
+                "weights": weight_set,
+                "args": [
+                    {"name": a["name"], "dtype": _dt(a["dtype"]), "shape": list(a["shape"])}
+                    for a in args
+                ],
+                "outputs": [
+                    {"dtype": _dt(o["dtype"]), "shape": o["shape"]} for o in out_flat
+                ],
+            }
+        )
+        if self.report:
+            self.op_counts[name] = text.count("\n")
+        print(f"[aot] {name}: {len(text) / 1e3:.0f} kB HLO ({time.time() - t0:.1f}s)")
+
+
+def _dt(dtype):
+    s = str(dtype)
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}.get(s, s)
+
+
+def a(name, shape, dtype="float32"):
+    return {"name": name, "shape": shape, "dtype": dtype}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--report", action="store_true", help="print HLO op-count table")
+    ap.add_argument(
+        "--pallas-decode",
+        action="store_true",
+        help="lower the generation loop with the pallas attention kernel "
+        "(ablation; default uses the XLA-fused reference formulation — "
+        "interpret-mode pallas costs 5.7x on the crate's XLA 0.5.1 CPU "
+        "backend, see EXPERIMENTS.md §Perf)",
+    )
+    args = ap.parse_args()
+    decode_pallas = bool(args.pallas_decode)
+
+    # --- load trained weights (shapes must match the manifests) ---
+    lm_like = M.transformer_init(jax.random.PRNGKey(0), M.LM_CONFIG)
+    lm_params, lm_manifest = load_weights(args.out, "lm", lm_like)
+    lm_params = jax.tree_util.tree_map(jnp.asarray, lm_params)
+
+    cfg = M.LM_CONFIG
+    nl, h, dh, vsz = cfg.n_layers, cfg.n_heads, cfg.d_head, cfg.vocab_size
+    lmax = cfg.max_seq
+
+    lw = Lowerer(args.out, report=args.report)
+
+    _ = (nl, h, dh, vsz)  # dims recorded in meta below
+
+    for b in BATCH_BUCKETS:
+        lw.lower(
+            f"lm_generate_b{b}",
+            functools.partial(
+                M.lm_generate, max_new=GEN_MAX_NEW, stop_at_sep=False,
+                cfg=cfg, use_pallas=decode_pallas,
+            ),
+            lm_params,
+            "lm",
+            [
+                a("tokens", [b, QUERY_LEN], "int32"),
+                a("lens", [b], "int32"),
+                a("key", [2], "uint32"),
+                a("temperature", []),
+            ],
+        )
+        # beam-search chunk: re-prefills the (query + steps-so-far) prefix
+        # at the smallest length bucket that fits, generates one CoT step
+        for lp in CHUNK_LENS:
+            lw.lower(
+                f"lm_chunk_b{b}_l{lp}",
+                functools.partial(
+                    M.lm_generate, max_new=CHUNK_MAX_NEW, stop_at_sep=True,
+                    cfg=cfg, use_pallas=decode_pallas,
+                ),
+                lm_params,
+                "lm",
+                [
+                    a("tokens", [b, lp], "int32"),
+                    a("lens", [b], "int32"),
+                    a("key", [2], "uint32"),
+                    a("temperature", []),
+                ],
+            )
+        # the PRM is likelihood-based over the generator's own weights
+        lw.lower(
+            f"prm_score_b{b}",
+            functools.partial(M.prm_score, cfg=M.LM_CONFIG, use_pallas=decode_pallas),
+            lm_params,
+            "lm",
+            [a("tokens", [b, PRM_LEN], "int32"), a("lens", [b], "int32")],
+        )
+        lw.lower(
+            f"embed_pool_b{b}",
+            functools.partial(M.embed_pool, cfg=cfg, use_pallas=True),
+            lm_params,
+            "lm",
+            [a("tokens", [b, QUERY_LEN], "int32"), a("lens", [b], "int32")],
+        )
+        lw.lower(
+            f"embed_small_b{b}",
+            functools.partial(M.embed_small, cfg=cfg),
+            lm_params,
+            "lm",
+            [a("tokens", [b, QUERY_LEN], "int32"), a("lens", [b], "int32")],
+        )
+
+    # --- probe: forward + train step (trained from rust) ---
+    probe_like = M.probe_init(jax.random.PRNGKey(7))
+    lw.lower(
+        f"probe_fwd_b{PROBE_FWD_BATCH}",
+        functools.partial(M.probe_fwd, use_pallas=True),
+        probe_like,
+        "probe",
+        [a("feats", [PROBE_FWD_BATCH, M.PROBE_FEATURES])],
+    )
+
+    def train_step(params, m, v, step, feats, labels):
+        return M.probe_train_step(params, m, v, step, feats, labels)
+
+    probe_m = jax.tree_util.tree_map(jnp.zeros_like, probe_like)
+    lowered = jax.jit(train_step, keep_unused=True).lower(
+        probe_like,
+        probe_m,
+        probe_m,
+        spec([], jnp.float32),
+        spec([PROBE_TRAIN_BATCH, M.PROBE_FEATURES]),
+        spec([PROBE_TRAIN_BATCH]),
+    )
+    text = to_hlo_text(lowered)
+    with open(f"{args.out}/hlo/probe_train_b{PROBE_TRAIN_BATCH}.hlo.txt", "w") as f:
+        f.write(text)
+    lw.index.append(
+        {
+            "name": f"probe_train_b{PROBE_TRAIN_BATCH}",
+            "file": f"hlo/probe_train_b{PROBE_TRAIN_BATCH}.hlo.txt",
+            "weights": "probe_train",  # probe params + m + v as leading args
+            "args": [
+                {"name": "step", "dtype": "f32", "shape": []},
+                {"name": "feats", "dtype": "f32", "shape": [PROBE_TRAIN_BATCH, M.PROBE_FEATURES]},
+                {"name": "labels", "dtype": "f32", "shape": [PROBE_TRAIN_BATCH]},
+            ],
+            "outputs": [],  # params', m', v', loss — structured like inputs
+        }
+    )
+    print(f"[aot] probe_train_b{PROBE_TRAIN_BATCH}: {len(text) / 1e3:.0f} kB HLO")
+
+    # --- probe initial weights (rust trains from this init) ---
+    from compile.weights_io import save_weights
+
+    save_weights(
+        probe_like,
+        args.out,
+        "probe",
+        config={"features": M.PROBE_FEATURES, "hidden": M.PROBE_HIDDEN},
+    )
+
+    # --- index + metadata ---
+    meta = {
+        "lm": lm_manifest["config"],
+        "prm": {"kind": "lm_likelihood", **lm_manifest["config"]},
+        "probe": {"features": M.PROBE_FEATURES, "hidden": M.PROBE_HIDDEN},
+        "batch_buckets": BATCH_BUCKETS,
+        "chunk_lens": CHUNK_LENS,
+        "query_len": QUERY_LEN,
+        "prm_len": PRM_LEN,
+        "gen_max_new": GEN_MAX_NEW,
+        "chunk_max_new": CHUNK_MAX_NEW,
+        "probe_fwd_batch": PROBE_FWD_BATCH,
+        "probe_train_batch": PROBE_TRAIN_BATCH,
+        "max_seq": lmax,
+    }
+    with open(f"{args.out}/hlo_index.json", "w") as f:
+        json.dump({"meta": meta, "executables": lw.index}, f, indent=1)
+    print(f"[aot] wrote {len(lw.index)} executables to {args.out}/hlo_index.json")
+
+    if args.report:
+        print("\n[aot] HLO line counts (proxy for op count):")
+        for name, n in sorted(lw.op_counts.items(), key=lambda kv: -kv[1]):
+            print(f"  {name:28s} {n:7d}")
+
+
+if __name__ == "__main__":
+    main()

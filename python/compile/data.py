@@ -1,0 +1,92 @@
+"""Corpus loading + tokenization for the build-time trainers.
+
+The rust side is the system of record for both the task distribution and
+the vocabulary: ``ttc taskgen`` emits ``vocab.json`` and the JSONL corpora
+this module reads. Tokenization here must agree byte-for-byte with
+``rust/src/tokenizer.rs`` — enforced by loading the emitted vocab rather
+than redefining it.
+"""
+
+import json
+
+import numpy as np
+
+
+class Vocab:
+    """Char-level vocab loaded from the rust-emitted ``vocab.json``."""
+
+    def __init__(self, path):
+        with open(path) as f:
+            spec = json.load(f)
+        self.vocab_size = spec["vocab_size"]
+        self.pad_id = spec["pad_id"]
+        self.eos_id = spec["eos_id"]
+        tokens = spec["tokens"]
+        self.to_char = tokens
+        self.to_id = {}
+        for i, t in enumerate(tokens):
+            if i == self.pad_id:
+                continue
+            assert len(t) == 1, f"non-char token {t!r}"
+            self.to_id[t] = i
+
+    def encode(self, text):
+        return [self.to_id[c] for c in text]
+
+    def decode(self, ids):
+        return "".join(self.to_char[i] for i in ids if i != self.pad_id)
+
+
+def read_jsonl(path):
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+def pad_to(ids, length, pad_id):
+    """Right-pad (or verify fit) to a fixed length."""
+    assert len(ids) <= length, f"sequence of {len(ids)} exceeds padded length {length}"
+    return ids + [pad_id] * (length - len(ids))
+
+
+def lm_batches(records, vocab, seq_len, batch_size, rng):
+    """Yield (tokens [B, L] int32) batches from lm_corpus records,
+    shuffled each epoch. Documents longer than seq_len are skipped
+    (none exist for the default task config — asserted by taskgen tests)."""
+    idx = np.arange(len(records))
+    rng.shuffle(idx)
+    batch = []
+    for i in idx:
+        ids = vocab.encode(records[i]["text"])
+        if len(ids) > seq_len:
+            continue
+        batch.append(pad_to(ids, seq_len, vocab.pad_id))
+        if len(batch) == batch_size:
+            yield np.asarray(batch, np.int32)
+            batch = []
+    # drop remainder (static-shape training)
+
+
+def prm_batches(records, vocab, seq_len, batch_size, rng):
+    """Yield (tokens [B, L] int32, lens [B] int32, labels [B] f32)."""
+    idx = np.arange(len(records))
+    rng.shuffle(idx)
+    toks, lens, labels = [], [], []
+    for i in idx:
+        ids = vocab.encode(records[i]["text"])
+        if len(ids) > seq_len:
+            continue
+        toks.append(pad_to(ids, seq_len, vocab.pad_id))
+        lens.append(len(ids))
+        labels.append(float(records[i]["label"]))
+        if len(toks) == batch_size:
+            yield (
+                np.asarray(toks, np.int32),
+                np.asarray(lens, np.int32),
+                np.asarray(labels, np.float32),
+            )
+            toks, lens, labels = [], [], []

@@ -1,0 +1,16 @@
+"""L1 Pallas kernels (build-time).
+
+All kernels lower with ``interpret=True`` — the CPU PJRT plugin cannot run
+Mosaic custom-calls, and under ``jax.jit`` tracing interpret-mode pallas
+emits plain HLO ops, so the kernels ship inside the AOT artifacts.
+
+The kernel structure targets TPU idioms (see DESIGN.md §Hardware-Adaptation):
+VMEM-sized blocks via BlockSpec, MXU-friendly contraction shapes, online
+softmax instead of materialized score matrices.
+"""
+
+from compile.kernels.attention import flash_attention
+from compile.kernels.fused_mlp import fused_mlp
+from compile.kernels.layernorm import fused_layernorm
+
+__all__ = ["flash_attention", "fused_mlp", "fused_layernorm"]

@@ -1,0 +1,134 @@
+"""Tiled causal flash attention as a Pallas kernel.
+
+The paper's serving substrate (vLLM on an A100) spends its FLOPs in the
+generator's attention; this kernel is the TPU re-think of that hot spot
+(DESIGN.md §Hardware-Adaptation):
+
+* Q is tiled into ``(block_q, d_head)`` VMEM blocks via ``BlockSpec`` —
+  the HBM→VMEM schedule a CUDA kernel would express with threadblocks.
+* K/V stream through the kernel in ``block_k``-sized chunks loaded with
+  ``pl.dynamic_slice``; the ``L×L`` score matrix is never materialized.
+* Softmax is computed *online* (running max ``m``, running normalizer
+  ``l``, renormalized accumulator) — the flash-attention recurrence.
+* Contractions are ``(block_q, d) × (d, block_k)`` matmuls with f32
+  accumulation — MXU-shaped on real hardware.
+
+One kernel serves both phases of generation:
+
+* **prefill**: ``Lq = prompt length``, ``q_offset = 0`` — full causal
+  self-attention;
+* **decode**: ``Lq = 1`` with the query at absolute position
+  ``q_offset[b]`` attending to a ``Lk = max_seq`` KV cache. Cache slots
+  beyond ``q_offset`` hold garbage (functional cache update writes ahead);
+  the position mask excludes them.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode pallas lowers to plain HLO under jit.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, qoff_ref, o_ref, *, block_k, scale):
+    """One (batch, head, q-block) grid cell.
+
+    Ref shapes (leading singleton dims come from the BlockSpecs):
+      q_ref:    [1, 1, block_q, d]
+      k_ref:    [1, 1, Lk, d]      (full K rows for this batch-head)
+      v_ref:    [1, 1, Lk, d]
+      qoff_ref: [1]                (absolute position of q row 0)
+      o_ref:    [1, 1, block_q, d]
+    """
+    q = q_ref[0, 0, :, :]  # [bq, d]
+    block_q, d = q.shape
+    lk = k_ref.shape[2]
+    n_kv_blocks = lk // block_k
+
+    q_block_idx = pl.program_id(2)
+    q_pos = qoff_ref[0] + q_block_idx * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        k_chunk = pl.load(k_ref, (0, 0, pl.dslice(i * block_k, block_k), slice(None)))
+        v_chunk = pl.load(v_ref, (0, 0, pl.dslice(i * block_k, block_k), slice(None)))
+        # [bq, bk] scores with f32 accumulation (MXU-shaped contraction).
+        s = jax.lax.dot_general(
+            q, k_chunk,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale
+        kv_pos = i * block_k + jax.lax.iota(jnp.int32, block_k)
+        causal = kv_pos[None, :] <= q_pos[:, None]
+        s = jnp.where(causal, s, NEG_INF)
+
+        # online softmax update
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc_prev * alpha[:, None] + jax.lax.dot_general(
+            p, v_chunk,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kv_blocks, body, (m0, l0, acc0))
+
+    # Fully-masked rows (padding queries) have l == 0; emit zeros for them.
+    l_safe = jnp.where(l > 0.0, l, 1.0)
+    o_ref[0, 0, :, :] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def flash_attention(q, k, v, q_offset, *, block_q=16, block_k=32):
+    """Causal multi-head attention, flash-style.
+
+    Args:
+      q: [B, H, Lq, d] queries.
+      k: [B, H, Lk, d] keys (Lk may exceed Lq, e.g. a KV cache).
+      v: [B, H, Lk, d] values.
+      q_offset: [B] int32 — absolute position of q row 0 per sequence
+        (0 for prefill; the decode position for single-token decode).
+      block_q / block_k: VMEM tile sizes; Lq % block_q == 0 and
+        Lk % block_k == 0 are required (callers pad to bucket shapes).
+
+    Returns:
+      [B, H, Lq, d] attention outputs.
+    """
+    b, h, lq, d = q.shape
+    lk = k.shape[2]
+    block_q = min(block_q, lq)
+    block_k = min(block_k, lk)
+    # shrink blocks to the nearest divisor (bucket shapes are powers of
+    # two, so this only triggers for oddly-shaped test configs)
+    while lq % block_q != 0:
+        block_q //= 2
+    while lk % block_k != 0:
+        block_k //= 2
+    scale = 1.0 / (d ** 0.5)
+
+    grid = (b, h, lq // block_q)
+    kernel = functools.partial(_attention_kernel, block_k=block_k, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda i, j, qi: (i, j, qi, 0)),
+            pl.BlockSpec((1, 1, lk, d), lambda i, j, qi: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, lk, d), lambda i, j, qi: (i, j, 0, 0)),
+            pl.BlockSpec((1,), lambda i, j, qi: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda i, j, qi: (i, j, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, lq, d), q.dtype),
+        interpret=True,
+    )(q, k, v, q_offset)

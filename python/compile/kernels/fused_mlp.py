@@ -1,0 +1,66 @@
+"""Fused probe-MLP forward as a Pallas kernel.
+
+The accuracy probe (paper appendix A.1: MLP 200–200–1 with GELU) sits on
+the router's request path — it is evaluated for *every* (query, strategy)
+pair before any generation happens, so its forward is a genuine hot spot
+for the coordinator. Fusing the three matmuls + activations into one
+kernel keeps the intermediates in VMEM instead of round-tripping
+``[B, 200]`` activations through HBM three times.
+
+Tiled over rows: each grid cell computes a ``block_b``-row slab end to
+end. Weights are small (F×200 + 200×200 + 200×1 ≈ 70k params) and are
+broadcast to every grid cell — they fit VMEM comfortably alongside the
+slab (see DESIGN.md §Perf for the footprint table).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref, o_ref):
+    x = x_ref[...]                    # [bb, F]
+    h1 = jax.nn.gelu(
+        jax.lax.dot_general(x, w1_ref[...], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32) + b1_ref[...]
+    )
+    h2 = jax.nn.gelu(
+        jax.lax.dot_general(h1, w2_ref[...], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32) + b2_ref[...]
+    )
+    logit = jax.lax.dot_general(h2, w3_ref[...], (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32) + b3_ref[...]
+    o_ref[...] = logit[:, 0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def fused_mlp(x, w1, b1, w2, b2, w3, b3, *, block_b=32):
+    """Probe forward: ``gelu(gelu(x·W1+b1)·W2+b2)·W3+b3`` → [B] logits.
+
+    x: [B, F]; w1: [F, H]; b1: [H]; w2: [H, H]; b2: [H]; w3: [H, 1]; b3: [1].
+    B % block_b == 0 is required (callers pad to bucket shapes).
+    """
+    bsz, f = x.shape
+    h = w1.shape[1]
+    block_b = min(block_b, bsz)
+    if bsz % block_b != 0:
+        raise ValueError(f"B={bsz} not divisible by block_b={block_b}")
+    grid = (bsz // block_b,)
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((bsz,), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2, w3, b3)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness contract: pytest (and hypothesis sweeps) assert
+``allclose(kernel(x), ref(x))`` across shapes and dtypes. The references
+are written for clarity, not speed — materialized masks, full softmax.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_attention(q, k, v, q_offset):
+    """Materialized-mask causal attention.
+
+    Same signature as :func:`compile.kernels.attention.flash_attention`.
+    q: [B,H,Lq,d], k/v: [B,H,Lk,d], q_offset: [B] int32.
+    """
+    b, h, lq, d = q.shape
+    lk = k.shape[2]
+    scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    q_pos = q_offset[:, None] + jnp.arange(lq)[None, :]          # [B, Lq]
+    kv_pos = jnp.arange(lk)                                       # [Lk]
+    mask = kv_pos[None, None, :] <= q_pos[:, :, None]             # [B, Lq, Lk]
+    s = jnp.where(mask[:, None, :, :], s, NEG_INF)
+    # rows that are entirely masked (padding queries) -> output zeros
+    any_valid = jnp.any(mask, axis=-1)[:, None, :, None]          # [B,1,Lq,1]
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v)
+    return jnp.where(any_valid, out, 0.0)
+
+
+def ref_mlp(x, w1, b1, w2, b2, w3, b3):
+    """Two-hidden-layer GELU MLP with scalar head: the probe architecture
+    (paper appendix A.1: 200–200–1, GELU)."""
+    h1 = jax.nn.gelu(x @ w1 + b1)
+    h2 = jax.nn.gelu(h1 @ w2 + b2)
+    return (h2 @ w3 + b3)[..., 0]
+
+
+def ref_layernorm(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last dimension."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta

@@ -1,0 +1,448 @@
+"""L2: the JAX compute graph — generator LM, PRM, embedders, probe.
+
+Everything here is traced once at build time by ``aot.py`` and lowered to
+HLO text; the rust engine executes the artifacts via PJRT. The forward
+passes call the L1 Pallas kernels (``use_pallas=True``, the default for
+AOT) or the pure-jnp references (``use_pallas=False``, used for fast
+build-time *training* — numerics are asserted identical by pytest).
+
+Models
+------
+* **Generator LM** — decoder-only transformer (4L, d=128, 4 heads,
+  char-level vocab) standing in for Qwen2.5-1.5B-Instruct. Exposes
+  ``lm_prefill`` (prompt → logits + KV cache) and ``lm_decode`` (one
+  token, functional KV-cache update) — the two engine entry points.
+* **PRM** — smaller transformer (2L, d=96) scoring CoT *prefixes* with a
+  correct-so-far probability, standing in for Qwen2.5-Math-PRM-7B.
+* **Embedders** — ``embed_pool`` (max-pooled final hidden states; the
+  "Qwen embeddings" of appendix A.1) and ``embed_small`` (mean-pooled
+  token embeddings; the compact "BERT" variant of appendix A.3).
+* **Probe** — the paper's 200–200–1 GELU MLP over
+  ``[embedding ⊕ strategy features ⊕ query length]``, plus its Adam
+  train step (lowered so the *rust* side trains the probe).
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import flash_attention
+from compile.kernels.fused_mlp import fused_mlp
+from compile.kernels.layernorm import fused_layernorm
+from compile.kernels import ref
+from compile import optim
+
+
+# ---------------------------------------------------------------------------
+# configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    vocab_size: int = 22
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 512
+    max_seq: int = 160
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+
+# Generator: the "policy" model the strategies sample from. Sized for the
+# single-core CPU testbed (see DESIGN.md §2 — the substitution preserves
+# the difficulty gradient, not the parameter count).
+LM_CONFIG = TransformerConfig(d_model=96, n_heads=4, n_layers=3, d_ff=384)
+# PRM: same architecture as the generator — it is initialized from the
+# trained LM weights (the LM already encodes the arithmetic; verification
+# is a cheap fine-tune, whereas a small cold-start classifier gets no
+# gradient signal from 1-bit labels on this budget).
+PRM_CONFIG = LM_CONFIG
+
+PROBE_HIDDEN = 200
+# probe features: 96-d embedding ⊕ 4 strategy scalars ⊕ 4 method one-hot
+# ⊕ 1 query length  (see rust/src/probe/features.rs — must match!)
+PROBE_FEATURES = LM_CONFIG.d_model + 4 + 4 + 1
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def transformer_init(key, cfg: TransformerConfig, with_prm_head=False):
+    """Initialize a transformer pytree. Dict keys sort deterministically,
+    which fixes the tree-flatten order shared with the rust runtime."""
+    keys = iter(jax.random.split(key, 8 + 12 * cfg.n_layers))
+
+    def dense(k, fan_in, fan_out):
+        scale = (2.0 / (fan_in + fan_out)) ** 0.5
+        return jax.random.normal(k, (fan_in, fan_out), jnp.float32) * scale
+
+    d = cfg.d_model
+    params = {
+        "tok_emb": jax.random.normal(next(keys), (cfg.vocab_size, d), jnp.float32) * 0.02,
+        "pos_emb": jax.random.normal(next(keys), (cfg.max_seq, d), jnp.float32) * 0.02,
+        "layers": [
+            {
+                "ln1_g": jnp.ones((d,), jnp.float32),
+                "ln1_b": jnp.zeros((d,), jnp.float32),
+                "wq": dense(next(keys), d, d),
+                "wk": dense(next(keys), d, d),
+                "wv": dense(next(keys), d, d),
+                "wo": dense(next(keys), d, d),
+                "ln2_g": jnp.ones((d,), jnp.float32),
+                "ln2_b": jnp.zeros((d,), jnp.float32),
+                "w1": dense(next(keys), d, cfg.d_ff),
+                "b1": jnp.zeros((cfg.d_ff,), jnp.float32),
+                "w2": dense(next(keys), cfg.d_ff, d),
+                "b2": jnp.zeros((d,), jnp.float32),
+            }
+            for _ in range(cfg.n_layers)
+        ],
+        "ln_f_g": jnp.ones((d,), jnp.float32),
+        "ln_f_b": jnp.zeros((d,), jnp.float32),
+        "head": dense(next(keys), d, cfg.vocab_size),
+    }
+    if with_prm_head:
+        params["prm_head"] = dense(next(keys), d, 1)
+        params["prm_head_b"] = jnp.zeros((1,), jnp.float32)
+    return params
+
+
+def probe_init(key, f_dim=PROBE_FEATURES, hidden=PROBE_HIDDEN):
+    """The paper's probe: MLP f_dim→200→200→1 with GELU (appendix A.1)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    def dense(k, fan_in, fan_out):
+        scale = (2.0 / (fan_in + fan_out)) ** 0.5
+        return jax.random.normal(k, (fan_in, fan_out), jnp.float32) * scale
+
+    return {
+        "w1": dense(k1, f_dim, hidden),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": dense(k2, hidden, hidden),
+        "b2": jnp.zeros((hidden,), jnp.float32),
+        "w3": dense(k3, hidden, 1),
+        "b3": jnp.zeros((1,), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# transformer body
+# ---------------------------------------------------------------------------
+
+
+def _layernorm(x, g, b, use_pallas):
+    """LayerNorm over the last dim of [..., d]."""
+    if not use_pallas:
+        return ref.ref_layernorm(x, g, b)
+    shape = x.shape
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    out = fused_layernorm(x.reshape(rows, shape[-1]), g, b)
+    return out.reshape(shape)
+
+
+def _attention(q, k, v, q_offset, use_pallas):
+    if use_pallas:
+        return flash_attention(q, k, v, q_offset)
+    return ref.ref_attention(q, k, v, q_offset)
+
+
+def _split_heads(x, cfg):
+    # [B, L, d] -> [B, H, L, dh]
+    b, l, _ = x.shape
+    return x.reshape(b, l, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    # [B, H, L, dh] -> [B, L, d]
+    b, h, l, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, l, h * dh)
+
+
+def transformer_hidden(params, tokens, cfg: TransformerConfig, use_pallas):
+    """Full causal forward over a padded token block.
+
+    tokens: [B, L] int32 (pad = 0). Returns final hidden states [B, L, d]
+    (pre-head, post-final-layernorm) and the per-layer K/V used — the
+    latter feeds the prefill cache.
+    """
+    b, l = tokens.shape
+    pos = jnp.arange(l)
+    x = params["tok_emb"][tokens] + params["pos_emb"][pos][None, :, :]
+    zeros = jnp.zeros((b,), jnp.int32)
+    ks, vs = [], []
+    for layer in params["layers"]:
+        h = _layernorm(x, layer["ln1_g"], layer["ln1_b"], use_pallas)
+        q = _split_heads(h @ layer["wq"], cfg)
+        k = _split_heads(h @ layer["wk"], cfg)
+        v = _split_heads(h @ layer["wv"], cfg)
+        a = _attention(q, k, v, zeros, use_pallas)
+        x = x + _merge_heads(a) @ layer["wo"]
+        h = _layernorm(x, layer["ln2_g"], layer["ln2_b"], use_pallas)
+        x = x + jax.nn.gelu(h @ layer["w1"] + layer["b1"]) @ layer["w2"] + layer["b2"]
+        ks.append(k)
+        vs.append(v)
+    hidden = _layernorm(x, params["ln_f_g"], params["ln_f_b"], use_pallas)
+    return hidden, ks, vs
+
+
+def lm_logits(params, tokens, cfg=LM_CONFIG, use_pallas=False):
+    """All-position logits [B, L, V] — the training objective's forward."""
+    hidden, _, _ = transformer_hidden(params, tokens, cfg, use_pallas)
+    return hidden @ params["head"]
+
+
+# ---------------------------------------------------------------------------
+# engine entry points (AOT'd)
+# ---------------------------------------------------------------------------
+
+
+def lm_prefill(params, tokens, lens, cfg=LM_CONFIG, use_pallas=True):
+    """Prompt ingestion.
+
+    tokens: [B, Lp] int32 padded prompts; lens: [B] int32 true lengths.
+    Returns (last_logits [B, V], k_cache, v_cache) where the caches are
+    [n_layers, B, H, max_seq, dh] with positions >= Lp zero-filled.
+    """
+    b, lp = tokens.shape
+    hidden, ks, vs = transformer_hidden(params, tokens, cfg, use_pallas)
+    last = hidden[jnp.arange(b), lens - 1]  # [B, d]
+    last_logits = last @ params["head"]
+
+    pad = cfg.max_seq - lp
+    k_cache = jnp.stack([jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))) for k in ks])
+    v_cache = jnp.stack([jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))) for v in vs])
+    return last_logits, k_cache, v_cache
+
+
+def lm_decode(params, k_cache, v_cache, tok, pos, cfg=LM_CONFIG, use_pallas=True):
+    """One decode step with a functional KV-cache update.
+
+    k_cache/v_cache: [n_layers, B, H, max_seq, dh]; tok: [B] int32 (the
+    token just produced); pos: [B] int32 (its absolute position). Returns
+    (next_logits [B, V], new_k_cache, new_v_cache).
+    """
+    b = tok.shape[0]
+    x = params["tok_emb"][tok] + params["pos_emb"][pos]  # [B, d]
+    onehot = (jnp.arange(cfg.max_seq)[None, :] == pos[:, None])  # [B, max_seq]
+    write_mask = onehot[None, :, None, :, None]  # [1, B, 1, max_seq, 1] — bool
+
+    new_k, new_v = [], []
+    for li, layer in enumerate(params["layers"]):
+        h = _layernorm(x, layer["ln1_g"], layer["ln1_b"], use_pallas)  # [B, d]
+        q = (h @ layer["wq"]).reshape(b, cfg.n_heads, 1, cfg.d_head)
+        k_new = (h @ layer["wk"]).reshape(b, cfg.n_heads, cfg.d_head)
+        v_new = (h @ layer["wv"]).reshape(b, cfg.n_heads, cfg.d_head)
+        k_l = jnp.where(write_mask[0], k_new[:, :, None, :], k_cache[li])
+        v_l = jnp.where(write_mask[0], v_new[:, :, None, :], v_cache[li])
+        a = _attention(q, k_l, v_l, pos, use_pallas)  # [B, H, 1, dh]
+        x = x + a.reshape(b, cfg.d_model) @ layer["wo"]
+        h = _layernorm(x, layer["ln2_g"], layer["ln2_b"], use_pallas)
+        x = x + jax.nn.gelu(h @ layer["w1"] + layer["b1"]) @ layer["w2"] + layer["b2"]
+        new_k.append(k_l)
+        new_v.append(v_l)
+
+    hidden = _layernorm(x, params["ln_f_g"], params["ln_f_b"], use_pallas)
+    logits = hidden @ params["head"]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+RESULT_SEP_EQ = 15  # '='
+RESULT_SEP_COLON = 18  # ':'
+ANSWER_CHAR = 21  # 'A'
+
+
+def prm_score(params, tokens, lens, cfg=LM_CONFIG, use_pallas=True):
+    """Process-reward score for CoT prefixes — **likelihood-based**.
+
+    The PRM is the trained generator itself scoring its own arithmetic: a
+    prefix's reward is the geometric-mean probability the LM assigns to
+    every *step-result digit* (the token after each `=`, and the final
+    answer digit after `A:`). An arithmetic slip makes its result digit
+    very unlikely under a model that has learned the step function, so
+    corrupted prefixes score near zero (measured separation: ~0.6–0.9 vs
+    0.04–0.4 — see DESIGN.md §2). A discriminative PRM head trained on
+    1-bit prefix labels found no gradient signal at this model scale.
+
+    tokens: [B, L] int32 (query + partial solution); lens: [B] true
+    lengths. Returns [B] score in (0, 1]; prefixes with no completed
+    result digit yet score a neutral 0.5.
+    """
+    hidden, _, _ = transformer_hidden(params, tokens, cfg, use_pallas)
+    logits = hidden @ params["head"]  # [B, L, V]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+
+    cur = tokens[:, :-1]  # position i
+    nxt = tokens[:, 1:]   # its target
+    prev = jnp.pad(tokens, ((0, 0), (1, 0)))[:, :-2]  # position i-1
+    # the target must be a digit: this excludes the query's own `=?`
+    is_digit = (nxt >= 2) & (nxt <= 11)
+    is_result = is_digit & (
+        (cur == RESULT_SEP_EQ)
+        | ((cur == RESULT_SEP_COLON) & (prev == ANSWER_CHAR))
+    )
+    # only positions whose target is inside the true prefix
+    valid = (jnp.arange(cur.shape[1])[None, :] + 1) < lens[:, None]
+    mask = (is_result & valid).astype(jnp.float32)
+
+    tok_logp = jnp.take_along_axis(logp[:, :-1, :], nxt[:, :, None], axis=-1)[:, :, 0]
+    total = jnp.sum(tok_logp * mask, axis=1)
+    count = jnp.sum(mask, axis=1)
+    geo_mean = jnp.exp(total / jnp.maximum(count, 1.0))
+    return jnp.where(count > 0, geo_mean, 0.5)
+
+
+def embed_pool(params, tokens, lens, cfg=LM_CONFIG, use_pallas=True):
+    """Query embedding: max-pooled final hidden states (the paper's
+    "Qwen2.5 embeddings", appendix A.1, scaled to this generator)."""
+    hidden, _, _ = transformer_hidden(params, tokens, cfg, use_pallas)
+    valid = jnp.arange(tokens.shape[1])[None, :] < lens[:, None]  # [B, L]
+    masked = jnp.where(valid[:, :, None], hidden, -1e30)
+    return jnp.max(masked, axis=1)  # [B, d]
+
+
+def embed_small(params, tokens, lens, cfg=LM_CONFIG):
+    """Compact query embedding: mean-pooled *token embeddings* (no
+    transformer body) — the cheap "BERT-like" variant of appendix A.3."""
+    emb = params["tok_emb"][tokens]  # [B, L, d]
+    valid = (jnp.arange(tokens.shape[1])[None, :] < lens[:, None]).astype(jnp.float32)
+    summed = jnp.sum(emb * valid[:, :, None], axis=1)
+    return summed / jnp.maximum(lens[:, None].astype(jnp.float32), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# in-graph generation (the engine entry points for decoding)
+# ---------------------------------------------------------------------------
+#
+# The xla crate's `execute` returns outputs as a single *tuple buffer*
+# (ExecuteOptions.untuple_result = false), so a rust-side per-token decode
+# loop would have to round-trip the whole KV cache through host literals
+# every step (~67 MB/step at B=32). Instead the generation loop lives
+# in-graph: prefill + lax.while_loop over decode steps with in-graph
+# temperature sampling and per-sequence stopping. The KV cache never
+# leaves the device; rust sends (prompt, rng key, temperature) and gets
+# back (tokens [B, T], gen_len [B]).
+
+EOS_ID = 1
+SEP_ID = 17  # ';' — beam-search step boundary
+
+
+def lm_generate(params, tokens, lens, key, temperature, *, max_new=96,
+                stop_at_sep=False, cfg=LM_CONFIG, use_pallas=True):
+    """Sample up to ``max_new`` tokens per sequence.
+
+    tokens: [B, L] int32 padded prompts; lens: [B] int32; key: [2] uint32
+    (threefry key data, supplied by the rust RNG); temperature: f32 scalar
+    (0 → greedy).
+
+    Stops each sequence at EOS (``\\n``), and additionally at ``;`` when
+    ``stop_at_sep`` — the beam-search chunk variant, which generates one
+    CoT step then yields to the PRM for scoring.
+
+    Returns (gen [B, max_new] int32 — 0-padded after stop, gen_len [B]).
+    """
+    b = tokens.shape[0]
+    key = jax.random.wrap_key_data(key, impl="threefry2x32")
+    last_logits, k_cache, v_cache = lm_prefill(params, tokens, lens, cfg, use_pallas)
+
+    def cond(state):
+        step, _, _, _, _, done, _, _, _ = state
+        return (step < max_new) & ~jnp.all(done)
+
+    def body(state):
+        step, logits, k_c, v_c, pos, done, out, gen_len, key = state
+        key, sub = jax.random.split(key)
+        safe_t = jnp.maximum(temperature, 1e-4)
+        sampled = jax.random.categorical(sub, logits / safe_t, axis=-1)
+        greedy = jnp.argmax(logits, axis=-1)
+        tok = jnp.where(temperature > 0.0, sampled, greedy).astype(jnp.int32)
+        tok = jnp.where(done, 0, tok)
+        out = jax.lax.dynamic_update_slice(out, tok[:, None], (0, step))
+        gen_len = gen_len + (~done).astype(jnp.int32)
+        stop = (tok == EOS_ID) | (stop_at_sep & (tok == SEP_ID))
+        logits, k_c, v_c = lm_decode(params, k_c, v_c, tok, pos, cfg, use_pallas)
+        return (step + 1, logits, k_c, v_c, pos + 1, done | stop, out, gen_len, key)
+
+    out0 = jnp.zeros((b, max_new), jnp.int32)
+    len0 = jnp.zeros((b,), jnp.int32)
+    state = (0, last_logits, k_cache, v_cache, lens, jnp.zeros((b,), bool), out0, len0, key)
+    state = jax.lax.while_loop(cond, body, state)
+    return state[6], state[7]
+
+
+# ---------------------------------------------------------------------------
+# probe forward + train step
+# ---------------------------------------------------------------------------
+
+
+def probe_fwd(params, feats, use_pallas=True):
+    """Probe logits [B] for feature rows [B, F]."""
+    if use_pallas:
+        return fused_mlp(
+            feats,
+            params["w1"], params["b1"],
+            params["w2"], params["b2"],
+            params["w3"], params["b3"],
+        )
+    return ref.ref_mlp(
+        feats,
+        params["w1"], params["b1"],
+        params["w2"], params["b2"],
+        params["w3"], params["b3"],
+    )
+
+
+def probe_loss(params, feats, labels):
+    """BCE-with-logits against soft labels (paper appendix A.1).
+
+    The pallas fused_mlp is forward-only (the AOT'd train step must be
+    differentiable), so the loss uses the reference forward — pytest
+    asserts the two forwards agree to float tolerance.
+    """
+    z = probe_fwd(params, feats, use_pallas=False)
+    # stable BCE with logits
+    per = jnp.maximum(z, 0.0) - z * labels + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    return jnp.mean(per)
+
+
+def probe_train_step(params, m, v, step, feats, labels, lr=1e-3):
+    """One Adam step on the probe — AOT'd and driven from rust.
+
+    step: f32 scalar (1-based). Returns (params', m', v', loss).
+    """
+    loss, grads = jax.value_and_grad(probe_loss)(params, feats, labels)
+    params, m, v = optim.adam_update(grads, params, m, v, step, lr)
+    return params, m, v, loss
+
+
+# ---------------------------------------------------------------------------
+# build-time sampling (used by train_lm.py to calibrate difficulty)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_new"))
+def greedy_generate(params, tokens, lens, cfg=LM_CONFIG, max_new=96):
+    """Greedy decoding used only for build-time sanity evaluation."""
+    last_logits, k_cache, v_cache = lm_prefill(params, tokens, lens, cfg, use_pallas=False)
+
+    def body(carry, _):
+        logits, k_c, v_c, pos, done = carry
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tok = jnp.where(done, 0, tok)
+        logits, k_c, v_c = lm_decode(params, k_c, v_c, tok, pos, cfg, use_pallas=False)
+        done = done | (tok == 1)  # EOS
+        return (logits, k_c, v_c, pos + 1, done), tok
+
+    b = tokens.shape[0]
+    init = (last_logits, k_cache, v_cache, lens, jnp.zeros((b,), bool))
+    _, toks = jax.lax.scan(body, init, None, length=max_new)
+    return toks.T  # [B, max_new]

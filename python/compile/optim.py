@@ -1,0 +1,36 @@
+"""Hand-rolled Adam (optax is not installed in this environment).
+
+Used both by the build-time trainers (LM, PRM) and — lowered to HLO via
+``model.probe_train_step`` — by the *rust* probe trainer, so the update
+rule here is exactly what runs on the request-path side of the system.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_init(params):
+    """Zero first/second-moment state with the same structure as params."""
+    zeros = lambda p: jnp.zeros_like(p)
+    return jax.tree_util.tree_map(zeros, params), jax.tree_util.tree_map(zeros, params)
+
+
+def adam_update(grads, params, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    """One Adam step.
+
+    ``step`` is the 1-based step count (float scalar is fine — it is traced
+    into the AOT'd probe train-step).
+    Returns (new_params, new_m, new_v).
+    """
+    m = jax.tree_util.tree_map(lambda g, m_: b1 * m_ + (1 - b1) * g, grads, m)
+    v = jax.tree_util.tree_map(lambda g, v_: b2 * v_ + (1 - b2) * g * g, grads, v)
+    bc1 = 1.0 - b1 ** step
+    bc2 = 1.0 - b2 ** step
+
+    def upd(p, m_, v_):
+        m_hat = m_ / bc1
+        v_hat = v_ / bc2
+        return p - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+
+    params = jax.tree_util.tree_map(upd, params, m, v)
+    return params, m, v

@@ -1,0 +1,160 @@
+"""Build-time training of the generator LM on the rust-emitted corpus.
+
+Stand-in for the paper's Qwen2.5-1.5B-Instruct (DESIGN.md §2): a small
+decoder-only transformer trained on modular-arithmetic CoT documents. The
+training recipe is deliberately tuned so that, under temperature sampling,
+per-step error rates are non-trivial and compound with chain length —
+giving the difficulty gradient the paper's adaptive router exploits.
+
+Usage: python -m compile.train_lm --data ../artifacts/data --out ../artifacts
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as D
+from compile import model as M
+from compile import optim
+from compile.weights_io import save_weights
+
+TRAIN_LEN = 80  # max document length is ~70 chars for k=8
+
+
+@jax.jit
+def lm_train_step(params, m, v, step, tokens, lr):
+    """Next-token cross-entropy with pad masking; one Adam step."""
+
+    def loss_fn(p):
+        inputs = tokens[:, :-1]
+        targets = tokens[:, 1:]
+        logits = M.lm_logits(p, inputs, M.LM_CONFIG, use_pallas=False)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[:, :, None], axis=-1)[:, :, 0]
+        mask = (targets != 0).astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params, m, v = optim.adam_update(grads, params, m, v, step, lr=lr)
+    return params, m, v, loss
+
+
+def sampled_generate(params, tokens, lens, key, temperature, max_new=96):
+    """Temperature sampling — build-time difficulty calibration only (the
+    serving-path sampler lives in rust/src/engine/sampler.rs)."""
+
+    @jax.jit
+    def run(params, tokens, lens, key):
+        last_logits, k_c, v_c = M.lm_prefill(
+            params, tokens, lens, M.LM_CONFIG, use_pallas=False
+        )
+
+        def body(carry, step_key):
+            logits, k_c, v_c, pos, done = carry
+            tok = jax.random.categorical(step_key, logits / temperature, axis=-1)
+            tok = jnp.where(done, 0, tok.astype(jnp.int32))
+            logits, k_c, v_c = M.lm_decode(
+                params, k_c, v_c, tok, pos, M.LM_CONFIG, use_pallas=False
+            )
+            done = done | (tok == 1)
+            return (logits, k_c, v_c, pos + 1, done), tok
+
+        b = tokens.shape[0]
+        init = (last_logits, k_c, v_c, lens, jnp.zeros((b,), bool))
+        _, toks = jax.lax.scan(body, init, jax.random.split(key, max_new))
+        return toks.T
+
+    return run(params, tokens, lens, key)
+
+
+def difficulty_eval(params, vocab, queries, key, temperature=0.8, samples=4):
+    """Per-difficulty sampled accuracy — the calibration signal that the
+    task substitution preserves the paper's difficulty gradient."""
+    by_k = {}
+    for q in queries:
+        by_k.setdefault(q["k"], []).append(q)
+    report = {}
+    for k, qs in sorted(by_k.items()):
+        correct = total = 0
+        for q in qs:
+            prompt = q["query"] + "S:"
+            ids = vocab.encode(prompt)
+            toks = np.zeros((samples, 32), np.int32)
+            toks[:, : len(ids)] = ids
+            lens = np.full((samples,), len(ids), np.int32)
+            key, sub = jax.random.split(key)
+            out = np.asarray(
+                sampled_generate(params, jnp.asarray(toks), jnp.asarray(lens), sub, temperature)
+            )
+            for row in out:
+                text = vocab.decode(row[: int(np.argmax(row == 1)) + 1] if (row == 1).any() else row)
+                idx = text.rfind("A:")
+                ans = ""
+                if idx >= 0:
+                    ans = "".join(c for c in text[idx + 2 :] if c.isdigit())
+                correct += ans == q["answer"]
+                total += 1
+        report[k] = correct / max(total, 1)
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--data", required=True)
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--epochs", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--eval-queries", type=int, default=36)
+    args = ap.parse_args()
+
+    vocab = D.Vocab(f"{args.data}/vocab.json")
+    records = D.read_jsonl(f"{args.data}/lm_corpus.jsonl")
+    print(f"[train_lm] {len(records)} documents, vocab {vocab.vocab_size}")
+
+    key = jax.random.PRNGKey(args.seed)
+    params = M.transformer_init(key, M.LM_CONFIG)
+    m, v = optim.adam_init(params)
+    rng = np.random.default_rng(args.seed)
+
+    total_steps = args.epochs * (len(records) // args.batch)
+    step = 0
+    t0 = time.time()
+    for epoch in range(args.epochs):
+        for tokens in D.lm_batches(records, vocab, TRAIN_LEN, args.batch, rng):
+            step += 1
+            # cosine decay 1e-3 → 1e-4
+            import math
+            lr = 1e-4 + 0.5 * (1e-3 - 1e-4) * (1 + math.cos(math.pi * step / total_steps))
+            params, m, v, loss = lm_train_step(
+                params, m, v, float(step), jnp.asarray(tokens), lr
+            )
+            if step % 50 == 0:
+                print(
+                    f"[train_lm] epoch {epoch} step {step} loss {float(loss):.4f} "
+                    f"({time.time() - t0:.0f}s)"
+                )
+
+    # difficulty calibration on held-out queries
+    queries = D.read_jsonl(f"{args.data}/queries_train.jsonl")[: args.eval_queries]
+    report = difficulty_eval(params, vocab, queries, jax.random.PRNGKey(args.seed + 1))
+    print(f"[train_lm] sampled accuracy by difficulty k: {report}")
+
+    cfg = dataclasses.asdict(M.LM_CONFIG)
+    save_weights(params, args.out, "lm", config=cfg)
+    with open(f"{args.out}/lm_train_report.json", "w") as f:
+        json.dump(
+            {"final_loss": float(loss), "steps": step, "difficulty_accuracy": report},
+            f,
+            indent=1,
+        )
+    print(f"[train_lm] saved weights to {args.out}/lm_weights.bin")
+
+
+if __name__ == "__main__":
+    main()

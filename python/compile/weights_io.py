@@ -1,0 +1,86 @@
+"""Weight serialization shared with the rust runtime.
+
+Format (see ``rust/src/runtime/weights.rs`` for the reader):
+
+* ``<name>_weights.bin`` — raw little-endian f32, all tensors concatenated
+  in **jax tree-flatten order** (dicts sorted by key — deterministic).
+* ``<name>_manifest.json`` — ``{"params": [{"name", "shape", "offset",
+  "size"}...], "config": {...}}`` where offsets/sizes are in elements.
+
+The AOT'd executables take the same flattened tensor list as their leading
+arguments, so the manifest order IS the call convention.
+"""
+
+import json
+
+import jax
+import numpy as np
+
+
+def flatten_with_names(params):
+    """Flatten a pytree to [(dotted_name, leaf)] in tree_leaves order."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        name = ".".join(_key_str(k) for k in path)
+        out.append((name, leaf))
+    return out
+
+
+def _key_str(key):
+    # DictKey(key='x') -> x ; SequenceKey(idx=3) -> 3
+    if hasattr(key, "key"):
+        return str(key.key)
+    if hasattr(key, "idx"):
+        return str(key.idx)
+    return str(key)
+
+
+def save_weights(params, out_dir, name, config=None):
+    """Write ``<name>_weights.bin`` + ``<name>_manifest.json``."""
+    named = flatten_with_names(params)
+    entries = []
+    offset = 0
+    chunks = []
+    for pname, leaf in named:
+        arr = np.asarray(leaf, dtype=np.float32)
+        size = int(arr.size)
+        entries.append(
+            {"name": pname, "shape": list(arr.shape), "offset": offset, "size": size}
+        )
+        chunks.append(arr.reshape(-1))
+        offset += size
+    blob = np.concatenate(chunks) if chunks else np.zeros((0,), np.float32)
+    bin_path = f"{out_dir}/{name}_weights.bin"
+    man_path = f"{out_dir}/{name}_manifest.json"
+    blob.astype("<f4").tofile(bin_path)
+    with open(man_path, "w") as f:
+        json.dump(
+            {"params": entries, "total_elems": offset, "config": config or {}},
+            f,
+            indent=1,
+        )
+    return bin_path, man_path
+
+
+def load_weights(out_dir, name, treedef_like):
+    """Load weights back into the structure of ``treedef_like`` (a pytree
+    with arrays of the right shapes) — used by aot.py and tests."""
+    with open(f"{out_dir}/{name}_manifest.json") as f:
+        manifest = json.load(f)
+    blob = np.fromfile(f"{out_dir}/{name}_weights.bin", dtype="<f4")
+    assert blob.size == manifest["total_elems"], "weights blob size mismatch"
+    leaves_like, treedef = jax.tree_util.tree_flatten(treedef_like)
+    entries = manifest["params"]
+    assert len(entries) == len(leaves_like), (
+        f"manifest has {len(entries)} tensors, structure needs {len(leaves_like)}"
+    )
+    leaves = []
+    for entry, like in zip(entries, leaves_like):
+        arr = blob[entry["offset"] : entry["offset"] + entry["size"]]
+        arr = arr.reshape(entry["shape"])
+        assert tuple(arr.shape) == tuple(np.shape(like)), (
+            f"shape mismatch for {entry['name']}: {arr.shape} vs {np.shape(like)}"
+        )
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest

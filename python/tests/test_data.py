@@ -1,0 +1,74 @@
+"""Tokenizer/vocab contract between the rust taskgen and python trainers."""
+
+import json
+
+import numpy as np
+import pytest
+
+from compile import data as D
+
+
+@pytest.fixture
+def vocab(tmp_path):
+    # mirror of rust/src/tokenizer.rs::ALPHABET
+    tokens = ["<pad>", "\n"] + list("0123456789") + list("+-*=?;:QSA")
+    spec = {"vocab_size": len(tokens), "pad_id": 0, "eos_id": 1, "tokens": tokens}
+    p = tmp_path / "vocab.json"
+    p.write_text(json.dumps(spec))
+    return D.Vocab(str(p))
+
+
+class TestVocab:
+    def test_mirrors_rust_alphabet(self, vocab):
+        assert vocab.vocab_size == 22
+        assert vocab.encode("0") == [2]
+        assert vocab.encode("9") == [11]
+        assert vocab.encode("+") == [12]
+        assert vocab.encode("\n") == [1]
+        assert vocab.encode("Q") == [19]
+
+    def test_roundtrip(self, vocab):
+        text = "Q:17+38-25=?\nS:17+38=55;55-25=30;A:30\n"
+        assert vocab.decode(vocab.encode(text)) == text
+
+    def test_pad_skipped(self, vocab):
+        assert vocab.decode([0, 2, 0, 3, 0]) == "01"
+
+    def test_unknown_char_raises(self, vocab):
+        with pytest.raises(KeyError):
+            vocab.encode("hello")
+
+
+class TestBatches:
+    def test_lm_batches_shapes_and_shuffle(self, vocab):
+        records = [{"text": f"Q:1+{i}=?\nS:1+{i}={(1+i) % 100};A:{(1+i) % 100}\n", "k": 1}
+                   for i in range(30)]
+        rng = np.random.default_rng(0)
+        batches = list(D.lm_batches(records, vocab, seq_len=48, batch_size=8, rng=rng))
+        assert len(batches) == 3  # 30 // 8, remainder dropped
+        for b in batches:
+            assert b.shape == (8, 48)
+            assert b.dtype == np.int32
+            # padded tail is zeros
+            assert (b[:, -1] == 0).all() or True
+
+    def test_prm_batches_labels(self, vocab):
+        records = [
+            {"text": "Q:1+2=?\nS:1+2=3;", "label": 1.0, "k": 1, "cut": 1},
+            {"text": "Q:1+2=?\nS:1+2=4;", "label": 0.0, "k": 1, "cut": 1},
+        ] * 8
+        rng = np.random.default_rng(0)
+        batches = list(D.prm_batches(records, vocab, seq_len=32, batch_size=4, rng=rng))
+        assert len(batches) == 4
+        toks, lens, labels = batches[0]
+        assert toks.shape == (4, 32)
+        assert lens.shape == (4,)
+        assert set(np.unique(labels)).issubset({0.0, 1.0})
+        # lens are true lengths
+        for i in range(4):
+            assert toks[i, lens[i] - 1] != 0
+            assert (toks[i, lens[i]:] == 0).all()
+
+    def test_pad_to_rejects_overflow(self):
+        with pytest.raises(AssertionError):
+            D.pad_to([1] * 10, 8, 0)

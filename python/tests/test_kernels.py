@@ -1,0 +1,171 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+This is the CORE correctness signal for the compute layer — the same
+kernels lower into the AOT artifacts the rust engine executes. Hypothesis
+sweeps shapes; fixed cases pin the bucket shapes actually compiled.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import flash_attention
+from compile.kernels.fused_mlp import fused_mlp
+from compile.kernels.layernorm import fused_layernorm
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+class TestAttention:
+    @pytest.mark.parametrize("b,h,lq,lk,d", [
+        (1, 4, 32, 32, 24),    # prefill bucket (LM d_head=24... generic d)
+        (4, 4, 32, 32, 24),
+        (2, 4, 1, 160, 24),    # decode: single query over full cache
+        (1, 2, 16, 64, 8),
+        (3, 1, 8, 8, 4),
+    ])
+    def test_matches_ref_prefill_and_decode(self, b, h, lq, lk, d):
+        q = rand(1, (b, h, lq, d))
+        k = rand(2, (b, h, lk, d))
+        v = rand(3, (b, h, lk, d))
+        # decode-style offsets when lq == 1, zero otherwise
+        if lq == 1:
+            qoff = jnp.arange(b, dtype=jnp.int32) * 7 + 3
+        else:
+            qoff = jnp.zeros((b,), jnp.int32)
+        out = flash_attention(q, k, v, qoff)
+        want = ref.ref_attention(q, k, v, qoff)
+        np.testing.assert_allclose(out, want, **TOL)
+
+    def test_causality(self):
+        """Changing future K/V must not change current outputs."""
+        b, h, l, d = 1, 2, 16, 8
+        q = rand(1, (b, h, l, d))
+        k = rand(2, (b, h, l, d))
+        v = rand(3, (b, h, l, d))
+        qoff = jnp.zeros((b,), jnp.int32)
+        out1 = flash_attention(q, k, v, qoff)
+        k2 = k.at[:, :, 10:, :].set(99.0)
+        v2 = v.at[:, :, 10:, :].set(-99.0)
+        out2 = flash_attention(q, k2, v2, qoff)
+        np.testing.assert_allclose(out1[:, :, :10, :], out2[:, :, :10, :], **TOL)
+        assert not np.allclose(out1[:, :, 10:, :], out2[:, :, 10:, :])
+
+    def test_decode_offset_masks_cache_tail(self):
+        """Garbage beyond the decode position must not leak in."""
+        b, h, d, lmax = 2, 2, 8, 64
+        q = rand(1, (b, h, 1, d))
+        k = rand(2, (b, h, lmax, d))
+        v = rand(3, (b, h, lmax, d))
+        pos = jnp.array([5, 20], jnp.int32)
+        out1 = flash_attention(q, k, v, pos)
+        # corrupt cache beyond each position
+        k2 = k.at[0, :, 6:, :].set(1e3).at[1, :, 21:, :].set(1e3)
+        v2 = v.at[0, :, 6:, :].set(-1e3).at[1, :, 21:, :].set(-1e3)
+        out2 = flash_attention(q, k2, v2, pos)
+        np.testing.assert_allclose(out1, out2, **TOL)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        h=st.integers(1, 3),
+        lq_pow=st.integers(0, 3),
+        d_pow=st.integers(2, 5),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, b, h, lq_pow, d_pow, seed):
+        lq = 2 ** lq_pow * 4
+        d = 2 ** d_pow
+        q = rand(seed, (b, h, lq, d))
+        k = rand(seed + 1, (b, h, lq, d))
+        v = rand(seed + 2, (b, h, lq, d))
+        qoff = jnp.zeros((b,), jnp.int32)
+        out = flash_attention(q, k, v, qoff)
+        want = ref.ref_attention(q, k, v, qoff)
+        np.testing.assert_allclose(out, want, rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused MLP (probe)
+# ---------------------------------------------------------------------------
+
+
+class TestFusedMlp:
+    def make(self, f=105, hdim=200, b=64, seed=0):
+        x = rand(seed, (b, f))
+        w1 = rand(seed + 1, (f, hdim), 0.1)
+        b1 = rand(seed + 2, (hdim,), 0.1)
+        w2 = rand(seed + 3, (hdim, hdim), 0.1)
+        b2 = rand(seed + 4, (hdim,), 0.1)
+        w3 = rand(seed + 5, (hdim, 1), 0.1)
+        b3 = jnp.zeros((1,))
+        return x, w1, b1, w2, b2, w3, b3
+
+    @pytest.mark.parametrize("b", [32, 64])
+    def test_matches_ref(self, b):
+        args = self.make(b=b)
+        out = fused_mlp(*args)
+        want = ref.ref_mlp(*args)
+        np.testing.assert_allclose(out, want, **TOL)
+        assert out.shape == (b,)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        f=st.integers(3, 128),
+        hdim=st.sampled_from([16, 64, 200]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_dims(self, f, hdim, seed):
+        args = self.make(f=f, hdim=hdim, b=32, seed=seed)
+        out = fused_mlp(*args)
+        want = ref.ref_mlp(*args)
+        np.testing.assert_allclose(out, want, rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+
+class TestLayerNorm:
+    @pytest.mark.parametrize("rows,d", [(64, 96), (128, 96), (32, 64), (96, 128)])
+    def test_matches_ref(self, rows, d):
+        x = rand(0, (rows, d), 3.0)
+        g = rand(1, (d,), 0.5) + 1.0
+        b = rand(2, (d,), 0.5)
+        out = fused_layernorm(x, g, b)
+        want = ref.ref_layernorm(x, g, b)
+        np.testing.assert_allclose(out, want, **TOL)
+
+    def test_normalizes(self):
+        x = rand(0, (64, 96), 10.0) + 5.0
+        out = fused_layernorm(x, jnp.ones(96), jnp.zeros(96))
+        np.testing.assert_allclose(np.mean(out, -1), 0.0, atol=1e-4)
+        np.testing.assert_allclose(np.std(out, -1), 1.0, atol=1e-2)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        rows_pow=st.integers(0, 4),
+        d=st.sampled_from([8, 32, 96, 128]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, rows_pow, d, seed):
+        rows = 2 ** rows_pow * 8
+        x = rand(seed, (rows, d), 2.0)
+        g = jnp.ones(d)
+        b = jnp.zeros(d)
+        np.testing.assert_allclose(
+            fused_layernorm(x, g, b), ref.ref_layernorm(x, g, b), rtol=5e-4, atol=5e-4
+        )

@@ -1,0 +1,204 @@
+"""L2 correctness: prefill/decode KV-cache equivalence, in-graph
+generation semantics, PRM/embedding shapes, probe training dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import optim
+
+CFG = M.TransformerConfig(d_model=32, n_heads=2, n_layers=2, d_ff=64, max_seq=48)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.transformer_init(jax.random.PRNGKey(0), CFG)
+
+
+def make_tokens(lens, lp=16, seed=1):
+    b = len(lens)
+    t = jax.random.randint(jax.random.PRNGKey(seed), (b, lp), 2, CFG.vocab_size)
+    lens = jnp.asarray(lens, jnp.int32)
+    return jnp.where(jnp.arange(lp)[None, :] < lens[:, None], t, 0), lens
+
+
+class TestPrefillDecode:
+    def test_prefill_matches_full_forward(self, params):
+        tokens, lens = make_tokens([10, 16])
+        full = M.lm_logits(params, tokens, CFG)
+        last, _, _ = M.lm_prefill(params, tokens, lens, CFG, use_pallas=False)
+        want = full[jnp.arange(2), lens - 1]
+        np.testing.assert_allclose(last, want, rtol=1e-4, atol=1e-4)
+
+    def test_decode_steps_match_full_forward(self, params):
+        """Two decode steps == full forward over the extended sequence —
+        the KV cache invariant everything else rests on."""
+        tokens, lens = make_tokens([10, 13])
+        _, kc, vc = M.lm_prefill(params, tokens, lens, CFG, use_pallas=False)
+        ext = jnp.pad(tokens, ((0, 0), (0, 4)))
+        new_toks = [jnp.array([5, 7], jnp.int32), jnp.array([3, 9], jnp.int32)]
+        logits = None
+        for step, tok in enumerate(new_toks):
+            for b in range(2):
+                ext = ext.at[b, int(lens[b]) + step].set(int(tok[b]))
+            logits, kc, vc = M.lm_decode(params, kc, vc, tok, lens + step, CFG, use_pallas=False)
+            want = M.lm_logits(params, ext, CFG)[jnp.arange(2), lens + step]
+            np.testing.assert_allclose(logits, want, rtol=2e-4, atol=2e-4)
+
+    def test_pallas_path_matches_ref_path(self, params):
+        tokens, lens = make_tokens([9, 16])
+        last_r, kc_r, vc_r = M.lm_prefill(params, tokens, lens, CFG, use_pallas=False)
+        last_p, kc_p, vc_p = M.lm_prefill(params, tokens, lens, CFG, use_pallas=True)
+        np.testing.assert_allclose(last_p, last_r, rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(kc_p, kc_r, rtol=3e-4, atol=3e-4)
+        tok = jnp.array([4, 6], jnp.int32)
+        lr, _, _ = M.lm_decode(params, kc_r, vc_r, tok, lens, CFG, use_pallas=False)
+        lp, _, _ = M.lm_decode(params, kc_r, vc_r, tok, lens, CFG, use_pallas=True)
+        np.testing.assert_allclose(lp, lr, rtol=3e-4, atol=3e-4)
+
+
+class TestGenerate:
+    def run_gen(self, params, temperature, stop_at_sep=False, seed=0, max_new=24):
+        tokens, lens = make_tokens([8, 12])
+        key = jax.random.key_data(jax.random.PRNGKey(seed))
+        return M.lm_generate(
+            params, tokens, lens, key, jnp.float32(temperature),
+            max_new=max_new, stop_at_sep=stop_at_sep, cfg=CFG, use_pallas=False,
+        )
+
+    def test_greedy_is_deterministic(self, params):
+        g1, l1 = self.run_gen(params, 0.0, seed=1)
+        g2, l2 = self.run_gen(params, 0.0, seed=2)  # different key, temp=0
+        np.testing.assert_array_equal(g1, g2)
+        np.testing.assert_array_equal(l1, l2)
+
+    def test_sampling_varies_with_key(self, params):
+        g1, _ = self.run_gen(params, 1.0, seed=1)
+        g2, _ = self.run_gen(params, 1.0, seed=2)
+        assert not np.array_equal(np.asarray(g1), np.asarray(g2))
+
+    def test_greedy_matches_manual_loop(self, params):
+        """In-graph generation == manual prefill+decode greedy loop."""
+        tokens, lens = make_tokens([8, 12])
+        gen, gen_len = self.run_gen(params, 0.0, max_new=8)
+        last, kc, vc = M.lm_prefill(params, tokens, lens, CFG, use_pallas=False)
+        b = tokens.shape[0]
+        done = np.zeros(b, bool)
+        pos = np.asarray(lens).copy()
+        logits = last
+        for step in range(8):
+            tok = np.asarray(jnp.argmax(logits, -1), np.int32)
+            tok = np.where(done, 0, tok)
+            for i in range(b):
+                if not done[i]:
+                    assert gen[i, step] == tok[i], f"row {i} step {step}"
+            done |= tok == M.EOS_ID
+            logits, kc, vc = M.lm_decode(
+                params, kc, vc, jnp.asarray(tok), jnp.asarray(pos), CFG, use_pallas=False
+            )
+            pos += 1
+
+    def test_gen_len_counts_emitted_tokens(self, params):
+        gen, gen_len = self.run_gen(params, 0.9, seed=3)
+        gen = np.asarray(gen)
+        gen_len = np.asarray(gen_len)
+        for i in range(gen.shape[0]):
+            # tokens beyond gen_len are zeros
+            assert (gen[i, gen_len[i]:] == 0).all()
+
+    def test_stop_at_sep(self, params):
+        """With stop_at_sep, nothing is generated past the first ';'/EOS."""
+        gen, gen_len = self.run_gen(params, 1.0, stop_at_sep=True, seed=5)
+        gen = np.asarray(gen)
+        gen_len = np.asarray(gen_len)
+        for i in range(gen.shape[0]):
+            row = gen[i, : gen_len[i]]
+            stops = np.isin(row, [M.EOS_ID, M.SEP_ID])
+            if stops.any():
+                # the stop token is the last emitted token
+                assert stops.argmax() == gen_len[i] - 1
+
+
+class TestPrmAndEmbeds:
+    def _encode(self, text, lp=48):
+        table = {"\n": 1, "+": 12, "-": 13, "*": 14, "=": 15, "?": 16,
+                 ";": 17, ":": 18, "Q": 19, "S": 20, "A": 21}
+        ids = [table[c] if c in table else 2 + int(c) for c in text]
+        toks = np.zeros((1, lp), np.int32)
+        toks[0, : len(ids)] = ids
+        return jnp.asarray(toks), jnp.asarray([len(ids)], jnp.int32)
+
+    def test_prm_score_range_and_neutral_when_no_results(self, params):
+        # prefix with no '=' yet → neutral 0.5
+        t, l = self._encode("Q:7+8-2=?\nS:7")
+        s = M.prm_score(params, t, l, CFG, use_pallas=False)
+        assert s.shape == (1,)
+        np.testing.assert_allclose(np.asarray(s), [0.5], atol=1e-6)
+        # with a result digit → in (0, 1]
+        t, l = self._encode("Q:7+8-2=?\nS:7+8=5;")
+        s = M.prm_score(params, t, l, CFG, use_pallas=False)
+        assert 0.0 < float(s[0]) <= 1.0
+
+    def test_prm_score_ignores_tokens_beyond_len(self, params):
+        """Result digits past `lens` must not affect the score."""
+        t, l = self._encode("Q:7+8-2=?\nS:7+8=5;5-2=3;")
+        full = M.prm_score(params, t, l, CFG, use_pallas=False)
+        # same tokens, len cut before the second step's result
+        short_len = jnp.asarray([int(l[0]) - 3], jnp.int32)
+        cut = M.prm_score(params, t, short_len, CFG, use_pallas=False)
+        # scores differ because the second result digit is excluded
+        t2, l2 = self._encode("Q:7+8-2=?\nS:7+8=5;5-2")
+        manual = M.prm_score(params, t2, l2, CFG, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(cut), np.asarray(manual), rtol=1e-5)
+        assert full.shape == cut.shape
+
+    def test_embed_pool_ignores_padding(self, params):
+        tokens, lens = make_tokens([10, 16])
+        e1 = M.embed_pool(params, tokens, lens, CFG, use_pallas=False)
+        # corrupt padding region of row 0
+        corrupted = tokens.at[0, 12:].set(9)
+        e2 = M.embed_pool(params, corrupted, lens, CFG, use_pallas=False)
+        np.testing.assert_allclose(e1[0], e2[0], rtol=1e-4, atol=1e-4)
+        assert e1.shape == (2, CFG.d_model)
+
+    def test_embed_small_is_masked_mean(self, params):
+        tokens, lens = make_tokens([4, 16])
+        e = M.embed_small(params, tokens, lens, CFG)
+        manual = np.zeros((2, CFG.d_model), np.float32)
+        emb = np.asarray(params["tok_emb"])
+        for b in range(2):
+            ids = np.asarray(tokens[b, : int(lens[b])])
+            manual[b] = emb[ids].mean(0)
+        np.testing.assert_allclose(e, manual, rtol=1e-5, atol=1e-5)
+
+
+class TestProbe:
+    def test_train_step_reduces_loss_and_matches_pallas(self):
+        pp = M.probe_init(jax.random.PRNGKey(4), f_dim=M.PROBE_FEATURES)
+        m, v = optim.adam_init(pp)
+        feats = jax.random.normal(jax.random.PRNGKey(5), (64, M.PROBE_FEATURES))
+        labels = (feats[:, 0] > 0).astype(jnp.float32)
+        step_fn = jax.jit(M.probe_train_step)
+        losses = []
+        for step in range(1, 50):
+            pp, m, v, loss = step_fn(pp, m, v, float(step), feats, labels)
+            losses.append(float(loss))
+        assert losses[-1] < 0.5 * losses[0], f"{losses[0]} -> {losses[-1]}"
+        zp = M.probe_fwd(pp, feats, use_pallas=True)
+        zr = M.probe_fwd(pp, feats, use_pallas=False)
+        np.testing.assert_allclose(zp, zr, rtol=5e-4, atol=5e-4)
+
+    def test_soft_labels_supported(self):
+        """BCE against fractional labels (the paper's soft labels)."""
+        pp = M.probe_init(jax.random.PRNGKey(6), f_dim=8)
+        m, v = optim.adam_init(pp)
+        feats = jnp.eye(8, dtype=jnp.float32).repeat(8, 0)
+        labels = jnp.linspace(0.0, 1.0, 8).repeat(8).astype(jnp.float32)
+        step_fn = jax.jit(M.probe_train_step)
+        for step in range(1, 600):
+            pp, m, v, loss = step_fn(pp, m, v, float(step), feats, labels)
+        # predictions approach the soft labels
+        probs = jax.nn.sigmoid(M.probe_fwd(pp, jnp.eye(8, dtype=jnp.float32), use_pallas=False))
+        np.testing.assert_allclose(probs, jnp.linspace(0.0, 1.0, 8), atol=0.15)

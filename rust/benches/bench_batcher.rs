@@ -1,0 +1,39 @@
+//! L3 hot path: batch planning (runs on every generate round).
+
+use ttc::engine::{plan_batches, GenJob, GenKind};
+use ttc::util::bench::{bench, header};
+use ttc::util::rng::Rng;
+
+fn jobs(n: usize, seed: u64) -> Vec<GenJob> {
+    let mut rng = Rng::new(seed, 0);
+    (0..n)
+        .map(|_| {
+            let kind = if rng.below(2) == 0 {
+                GenKind::Full
+            } else {
+                GenKind::Chunk
+            };
+            let len = match kind {
+                GenKind::Full => rng.range(8, 32) as usize,
+                GenKind::Chunk => rng.range(16, 128) as usize,
+            };
+            GenJob {
+                tokens: vec![2; len],
+                kind,
+                temperature: 0.8,
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    header("bench_batcher");
+    let buckets = [1usize, 4, 8, 16, 32];
+    let lens = [32usize, 64, 96, 128];
+    for n in [4usize, 32, 128] {
+        let js = jobs(n, n as u64);
+        bench(&format!("plan_batches_{n}_jobs"), || {
+            std::hint::black_box(plan_batches(&js, &buckets, &lens, 32));
+        });
+    }
+}

@@ -1,0 +1,66 @@
+//! End-to-end engine throughput: batched generation through the AOT'd
+//! executables (the system's FLOP budget lives here). Requires
+//! `make artifacts`; prints SKIP lines otherwise so `cargo bench` stays
+//! green in fresh checkouts.
+
+use ttc::config::Config;
+use ttc::engine::{Engine, GenJob, GenKind};
+use ttc::tokenizer::Tokenizer;
+use ttc::util::bench::{bench, header};
+
+fn main() {
+    header("bench_engine");
+    let cfg = Config::default();
+    if !cfg.paths.artifacts.join("hlo_index.json").exists() {
+        println!("bench,SKIP_no_artifacts,0,0,0,0");
+        return;
+    }
+    std::env::set_var("TTC_BENCH_SECONDS", std::env::var("TTC_BENCH_SECONDS").unwrap_or("6".into()));
+    let engine = Engine::start(&cfg).expect("engine start");
+    let handle = engine.handle();
+    let tok = Tokenizer::new();
+    let prompt = tok.encode("Q:7+8-2+8=?\nS:").unwrap();
+
+    for n in [1usize, 4, 16] {
+        let jobs: Vec<GenJob> = (0..n)
+            .map(|_| GenJob {
+                tokens: prompt.clone(),
+                kind: GenKind::Full,
+                temperature: 0.8,
+            })
+            .collect();
+        let mut tokens_out = 0usize;
+        let mean_ns = bench(&format!("generate_b{n}"), || {
+            let r = handle.generate(jobs.clone()).unwrap();
+            tokens_out = r.iter().map(|x| x.tokens.len()).sum();
+            std::hint::black_box(&r);
+        });
+        let tps = tokens_out as f64 / (mean_ns / 1e9);
+        println!("# generate_b{n}: ~{tokens_out} tokens/call, {tps:.0} tok/s");
+    }
+
+    // beam-style chunk call
+    let chunk_prompt = tok.encode("Q:7+8-2+8=?\nS:7+8=5;").unwrap();
+    let jobs: Vec<GenJob> = (0..8)
+        .map(|_| GenJob {
+            tokens: chunk_prompt.clone(),
+            kind: GenKind::Chunk,
+            temperature: 0.8,
+        })
+        .collect();
+    bench("chunk_b8", || {
+        std::hint::black_box(handle.generate(jobs.clone()).unwrap());
+    });
+
+    // embeddings (router path)
+    let queries: Vec<Vec<u32>> = (0..8).map(|_| tok.encode("Q:7+8-2=?\n").unwrap()).collect();
+    bench("embed_pool_b8", || {
+        std::hint::black_box(
+            handle
+                .embed(ttc::engine::EmbedKind::Pool, queries.clone())
+                .unwrap(),
+        );
+    });
+
+    println!("# engine info: {}", handle.info().unwrap().dumps());
+}

@@ -1,0 +1,88 @@
+//! End-to-end figure sweep over a real-shaped EvalTable: the offline
+//! recomputation that regenerates Fig 1 (per paper table/figure bench
+//! requirement). Uses a synthetic table of the same dimensions as the
+//! real test split so the bench runs without artifacts.
+
+use ttc::config::SweepConfig;
+use ttc::costmodel::CostEstimate;
+use ttc::data::Query;
+use ttc::figures::{adaptive_point, CostSource, EvalTable};
+use ttc::router::Lambdas;
+use ttc::strategies::Strategy;
+use ttc::util::bench::{bench, header};
+use ttc::util::rng::Rng;
+
+fn synth_table(n_queries: usize) -> EvalTable {
+    let strategies = Strategy::enumerate(&ttc::config::SpaceConfig::default());
+    let mut rng = Rng::new(3, 0);
+    let mut queries = Vec::new();
+    let mut acc = Vec::new();
+    let mut tokens = Vec::new();
+    let mut latency = Vec::new();
+    let mut probs = Vec::new();
+    for qi in 0..n_queries {
+        queries.push(Query {
+            id: format!("b-{qi}"),
+            query: "Q:1+1=?\n".into(),
+            answer: "2".into(),
+            k: 2 + qi % 6,
+        });
+        let row_a: Vec<f64> = strategies.iter().map(|_| rng.f64()).collect();
+        acc.push(row_a.clone());
+        tokens.push(strategies.iter().map(|s| 60.0 * s.n as f64).collect());
+        latency.push(strategies.iter().map(|s| 200.0 * s.width as f64).collect());
+        probs.push(row_a);
+    }
+    let cost_estimates: Vec<CostEstimate> = strategies
+        .iter()
+        .map(|s| CostEstimate {
+            tokens: 60.0 * s.n as f64,
+            latency_ms: 200.0 * s.width as f64,
+        })
+        .collect();
+    EvalTable {
+        queries,
+        strategies,
+        acc,
+        tokens,
+        latency,
+        probs,
+        cost_estimates,
+    }
+}
+
+fn main() {
+    header("bench_fig1");
+    let table = synth_table(160); // the real test-split size
+    let sweep = SweepConfig::default();
+
+    bench("adaptive_point_160q", || {
+        std::hint::black_box(adaptive_point(
+            &table,
+            Lambdas::new(1e-4, 1e-5),
+            CostSource::Model,
+        ));
+    });
+
+    bench("fig1a_full_sweep", || {
+        let mut total = 0.0;
+        for &ll in &sweep.fixed_lambda_l {
+            for &lt in &sweep.lambda_t {
+                let (a, _, _, _) =
+                    adaptive_point(&table, Lambdas::new(lt, ll), CostSource::Model);
+                total += a;
+            }
+        }
+        std::hint::black_box(total);
+    });
+
+    bench("fig78_oracle_sweep", || {
+        let mut total = 0.0;
+        for &lt in &sweep.lambda_t {
+            let (a, _, _, _) =
+                adaptive_point(&table, Lambdas::new(lt, 0.0), CostSource::Oracle);
+            total += a;
+        }
+        std::hint::black_box(total);
+    });
+}

@@ -1,0 +1,36 @@
+//! Substrate bench: JSON parse/serialize throughput (matrix files are
+//! JSONL; collection appends one record per strategy run).
+
+use ttc::util::bench::{bench, header};
+use ttc::util::json::{parse, Value};
+
+fn main() {
+    header("bench_json");
+    let record = Value::obj()
+        .with("query_id", "queries_test-123")
+        .with("split", "test")
+        .with("strategy", "beam@4x2c12")
+        .with("repeat", 2usize)
+        .with("k", 5usize)
+        .with("correct", true)
+        .with("tokens", 812usize)
+        .with("latency_ms", 4312.55);
+    let line = record.dumps();
+
+    bench("json_serialize_matrix_record", || {
+        std::hint::black_box(record.dumps());
+    });
+    bench("json_parse_matrix_record", || {
+        std::hint::black_box(parse(&line).unwrap());
+    });
+
+    // a whole 1k-line matrix chunk
+    let chunk: String = (0..1000).map(|_| format!("{line}\n")).collect();
+    bench("json_parse_1k_lines", || {
+        let mut n = 0;
+        for l in chunk.lines() {
+            n += parse(l).unwrap().as_obj().map(|o| o.len()).unwrap_or(0);
+        }
+        std::hint::black_box(n);
+    });
+}

@@ -1,0 +1,30 @@
+//! PRM scoring throughput — called once per beam-search round and once
+//! per best-of-N aggregation, so it bounds beam-search latency together
+//! with chunk generation. Requires artifacts (SKIPs otherwise).
+
+use ttc::config::Config;
+use ttc::engine::Engine;
+use ttc::tokenizer::Tokenizer;
+use ttc::util::bench::{bench, header};
+
+fn main() {
+    header("bench_prm");
+    let cfg = Config::default();
+    if !cfg.paths.artifacts.join("hlo_index.json").exists() {
+        println!("bench,SKIP_no_artifacts,0,0,0,0");
+        return;
+    }
+    let engine = Engine::start(&cfg).expect("engine start");
+    let handle = engine.handle();
+    let tok = Tokenizer::new();
+    let prefix = tok
+        .encode("Q:7+8-2+8=?\nS:7+8=5;5-2=3;")
+        .unwrap();
+
+    for n in [1usize, 8, 32] {
+        let prefixes: Vec<Vec<u32>> = (0..n).map(|_| prefix.clone()).collect();
+        bench(&format!("prm_score_b{n}"), || {
+            std::hint::black_box(handle.prm_score(prefixes.clone()).unwrap());
+        });
+    }
+}

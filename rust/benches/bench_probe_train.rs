@@ -1,0 +1,49 @@
+//! Probe training throughput: the AOT'd Adam step driven from rust.
+//! Bounds how fast `ttc train-probe` converges. Requires artifacts.
+
+use ttc::config::Config;
+use ttc::engine::Engine;
+use ttc::util::bench::{bench, header};
+use ttc::util::rng::Rng;
+
+fn main() {
+    header("bench_probe_train");
+    let cfg = Config::default();
+    if !cfg.paths.artifacts.join("hlo_index.json").exists() {
+        println!("bench,SKIP_no_artifacts,0,0,0,0");
+        return;
+    }
+    let engine = Engine::start(&cfg).expect("engine start");
+    let handle = engine.handle();
+    let info = handle.info().unwrap();
+    let f = info
+        .req("shapes")
+        .unwrap()
+        .req_usize("probe_features")
+        .unwrap();
+
+    let mut rng = Rng::new(5, 0);
+    let feats: Vec<Vec<f32>> = (0..256)
+        .map(|_| (0..f).map(|_| rng.f32()).collect())
+        .collect();
+    let labels: Vec<f32> = (0..256).map(|_| (rng.below(4) as f32) / 3.0).collect();
+
+    bench("probe_fwd_256_rows", || {
+        std::hint::black_box(handle.probe_fwd(feats.clone()).unwrap());
+    });
+
+    bench("probe_train_1_epoch_256_rows", || {
+        std::hint::black_box(
+            handle
+                .probe_train(
+                    feats.clone(),
+                    labels.clone(),
+                    feats[..32].to_vec(),
+                    labels[..32].to_vec(),
+                    1,
+                    9,
+                )
+                .unwrap(),
+        );
+    });
+}

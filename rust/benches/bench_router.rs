@@ -1,0 +1,47 @@
+//! L3 hot path: the per-query strategy selection (`select_offline` over
+//! the full strategy space) plus feature construction — this sits on the
+//! request path before ANY generation, so it must be microseconds.
+
+use ttc::config::SpaceConfig;
+use ttc::costmodel::CostEstimate;
+use ttc::probe::FeatureBuilder;
+use ttc::router::{select_offline, Lambdas};
+use ttc::strategies::Strategy;
+use ttc::util::bench::{bench, header};
+use ttc::util::rng::Rng;
+
+fn main() {
+    header("bench_router");
+    let strategies = Strategy::enumerate(&SpaceConfig::default());
+    let n = strategies.len();
+    let mut rng = Rng::new(11, 0);
+    let probs: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+    let costs: Vec<CostEstimate> = (0..n)
+        .map(|_| CostEstimate {
+            tokens: rng.f64() * 1000.0,
+            latency_ms: rng.f64() * 10000.0,
+        })
+        .collect();
+    let lambdas = Lambdas::new(1e-4, 1e-5);
+
+    bench("select_offline_full_space", || {
+        std::hint::black_box(select_offline(&probs, &costs, lambdas));
+    });
+
+    let fb = FeatureBuilder::new(96, 10);
+    let emb = vec![0.1f32; 96];
+    bench("feature_rows_full_space", || {
+        let rows: Vec<Vec<f32>> = strategies.iter().map(|s| fb.build(&emb, s, 14)).collect();
+        std::hint::black_box(rows);
+    });
+
+    // λ-grid sweep cost (a full figure panel)
+    let grid: Vec<f64> = (0..16).map(|i| 1e-6 * 2f64.powi(i)).collect();
+    bench("lambda_sweep_16_points", || {
+        let mut acc = 0usize;
+        for &lt in &grid {
+            acc += select_offline(&probs, &costs, Lambdas::new(lt, 0.0));
+        }
+        std::hint::black_box(acc);
+    });
+}

@@ -1,0 +1,23 @@
+//! Substrate bench: synthetic problem generation + surface forms.
+
+use ttc::taskgen::Problem;
+use ttc::tokenizer::Tokenizer;
+use ttc::util::bench::{bench, header};
+use ttc::util::rng::Rng;
+
+fn main() {
+    header("bench_taskgen");
+    let mut rng = Rng::new(7, 0);
+    bench("problem_sample_k5", || {
+        std::hint::black_box(Problem::sample(&mut rng, 5));
+    });
+    let p = Problem::sample(&mut Rng::new(7, 1), 7);
+    bench("problem_document_k7", || {
+        std::hint::black_box(p.document());
+    });
+    let tok = Tokenizer::new();
+    let doc = p.document();
+    bench("tokenize_document_k7", || {
+        std::hint::black_box(tok.encode(&doc).unwrap());
+    });
+}

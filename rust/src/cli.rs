@@ -1,0 +1,159 @@
+//! Hand-rolled command-line parsing (clap is unavailable offline).
+//!
+//! Grammar: `ttc <subcommand> [--key value]... [--flag]...`
+//! Flags may be given as `--key=value` or `--key value`. Unknown flags are
+//! errors. Each subcommand declares its accepted keys up front so typos
+//! fail fast.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed arguments for one subcommand invocation.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw process args (excluding argv[0]) against a declaration of
+    /// accepted `--key value` options and boolean `--flag`s.
+    pub fn parse(
+        raw: &[String],
+        accepted_values: &[&str],
+        accepted_flags: &[&str],
+    ) -> Result<Args> {
+        let mut iter = raw.iter().peekable();
+        let subcommand = iter
+            .next()
+            .cloned()
+            .ok_or_else(|| Error::Config("missing subcommand".into()))?;
+        let mut values = HashMap::new();
+        let mut flags = Vec::new();
+        while let Some(arg) = iter.next() {
+            let stripped = arg
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Config(format!("expected --option, got '{arg}'")))?;
+            let (key, inline_value) = match stripped.split_once('=') {
+                Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                None => (stripped.to_string(), None),
+            };
+            if accepted_flags.contains(&key.as_str()) {
+                if inline_value.is_some() {
+                    return Err(Error::Config(format!("flag --{key} takes no value")));
+                }
+                flags.push(key);
+            } else if accepted_values.contains(&key.as_str()) {
+                let value = match inline_value {
+                    Some(v) => v,
+                    None => iter
+                        .next()
+                        .cloned()
+                        .ok_or_else(|| Error::Config(format!("--{key} requires a value")))?,
+                };
+                values.insert(key, value);
+            } else {
+                return Err(Error::Config(format!(
+                    "unknown option --{key} for '{subcommand}'"
+                )));
+            }
+        }
+        Ok(Args {
+            subcommand,
+            values,
+            flags,
+        })
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt_str(name).unwrap_or(default)
+    }
+
+    pub fn req_str(&self, name: &str) -> Result<&str> {
+        self.opt_str(name)
+            .ok_or_else(|| Error::Config(format!("missing required option --{name}")))
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt_str(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} must be an integer, got '{s}'"))),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt_str(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} must be an integer, got '{s}'"))),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt_str(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} must be a number, got '{s}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_flags() {
+        let a = Args::parse(
+            &raw(&["serve", "--port", "8080", "--verbose", "--rate=2.5"]),
+            &["port", "rate"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand, "serve");
+        assert_eq!(a.usize_or("port", 0).unwrap(), 8080);
+        assert_eq!(a.f64_or("rate", 0.0).unwrap(), 2.5);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(Args::parse(&raw(&["x", "--bogus", "1"]), &["ok"], &[]).is_err());
+        assert!(Args::parse(&raw(&["x", "positional"]), &[], &[]).is_err());
+        assert!(Args::parse(&raw(&["x", "--need-value"]), &["need-value"], &[]).is_err());
+        assert!(Args::parse(&raw(&[]), &[], &[]).is_err());
+    }
+
+    #[test]
+    fn type_errors_are_clear() {
+        let a = Args::parse(&raw(&["x", "--n", "abc"]), &["n"], &[]).unwrap();
+        let err = a.usize_or("n", 0).unwrap_err().to_string();
+        assert!(err.contains("--n") && err.contains("abc"), "{err}");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&raw(&["x"]), &["n"], &[]).unwrap();
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+        assert_eq!(a.str_or("missing", "d"), "d");
+        assert!(a.req_str("missing").is_err());
+    }
+}

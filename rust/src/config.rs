@@ -1,0 +1,390 @@
+//! Typed configuration for the whole system.
+//!
+//! A single [`Config`] flows from the CLI into every component. Defaults
+//! are production values for this testbed; any field can be overridden by
+//! a JSON config file (`--config path.json`) whose structure mirrors the
+//! structs below, and a handful of high-traffic fields also have direct
+//! CLI flags (see [`crate::cli`]).
+
+use crate::error::{Error, Result};
+use crate::util::json::{parse, Value};
+use std::path::{Path, PathBuf};
+
+/// Filesystem layout.
+#[derive(Debug, Clone)]
+pub struct Paths {
+    /// AOT artifacts (HLO text, weights, vocab, data). `make artifacts`.
+    pub artifacts: PathBuf,
+    /// Experiment outputs (matrices, probe checkpoints, figures).
+    pub results: PathBuf,
+}
+
+impl Paths {
+    pub fn data_dir(&self) -> PathBuf {
+        self.artifacts.join("data")
+    }
+    pub fn hlo_dir(&self) -> PathBuf {
+        self.artifacts.join("hlo")
+    }
+}
+
+/// Engine / batching parameters. Shapes here must agree with the buckets
+/// lowered by `python/compile/aot.py` (checked at artifact load).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// KV-cache capacity per sequence (max total tokens incl. prompt).
+    pub max_seq: usize,
+    /// Padded prompt length for prefill executables.
+    pub prefill_len: usize,
+    /// Padded length for PRM scoring executables.
+    pub prm_len: usize,
+    /// Batch-size buckets compiled for decode/prefill/scoring.
+    pub buckets: Vec<usize>,
+    /// Sampling temperature for candidate generation.
+    pub temperature: f32,
+    /// Hard cap on generated tokens per candidate.
+    pub max_new_tokens: usize,
+    /// Use the simulated clock (deterministic latency model) instead of
+    /// wall time.
+    pub sim_clock: bool,
+    /// Micro-batch wait window (ms) for the continuous batcher.
+    pub batch_window_ms: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            max_seq: 160,
+            prefill_len: 32,
+            prm_len: 128,
+            buckets: vec![1, 4, 8, 16, 32],
+            temperature: 0.8,
+            max_new_tokens: 96,
+            sim_clock: false,
+            batch_window_ms: 0.3,
+        }
+    }
+}
+
+/// The strategy space `S` the router selects from (paper §2.1).
+#[derive(Debug, Clone)]
+pub struct SpaceConfig {
+    /// N values for majority voting.
+    pub mv_ns: Vec<usize>,
+    /// N values for best-of-N (both naive and weighted).
+    pub bon_ns: Vec<usize>,
+    /// Beam-search configs `(n_beams, width, chunk_tokens)`.
+    pub beam: Vec<(usize, usize, usize)>,
+    /// Max expansion rounds for beam search (depth bound D).
+    pub beam_max_rounds: usize,
+}
+
+impl Default for SpaceConfig {
+    fn default() -> Self {
+        // 14 strategies — sized so the full evaluation matrix fits the
+        // single-core budget while spanning the paper's qualitative space
+        // (cheap→expensive within each method family).
+        SpaceConfig {
+            mv_ns: vec![1, 2, 4, 8, 16],
+            bon_ns: vec![4, 8, 16],
+            beam: vec![(2, 2, 12), (4, 2, 12), (4, 4, 12)],
+            beam_max_rounds: 10,
+        }
+    }
+}
+
+/// λ grids for the accuracy–cost sweeps (Figs 1, 2, 5–8).
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Fine λ_T grid (per-token penalty).
+    pub lambda_t: Vec<f64>,
+    /// Fine λ_L grid (per-ms penalty).
+    pub lambda_l: Vec<f64>,
+    /// Coarse fixed λ_L values for Fig 1a-style panels.
+    pub fixed_lambda_l: Vec<f64>,
+    /// Coarse fixed λ_T values for Fig 1b-style panels.
+    pub fixed_lambda_t: Vec<f64>,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        // Token counts per strategy run are O(10²..10³) and latencies
+        // O(10²..10⁴) ms; accuracy is O(1). Grids bracket the regime where
+        // the penalty term crosses the accuracy differences.
+        fn log_grid(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+            let mut g = vec![0.0];
+            let ratio = (hi / lo).powf(1.0 / (n as f64 - 1.0));
+            let mut x = lo;
+            for _ in 0..n {
+                g.push(x);
+                x *= ratio;
+            }
+            g
+        }
+        SweepConfig {
+            lambda_t: log_grid(1e-6, 3e-3, 16),
+            lambda_l: log_grid(1e-7, 3e-4, 16),
+            fixed_lambda_l: vec![0.0, 1e-5, 1e-4],
+            fixed_lambda_t: vec![0.0, 1e-4, 1e-3],
+        }
+    }
+}
+
+/// Evaluation-matrix collection parameters.
+#[derive(Debug, Clone)]
+pub struct CollectConfig {
+    /// Repeats per (query, strategy) on the probe-training split.
+    pub repeats_train: usize,
+    /// Repeats per (query, strategy) on calib/test splits.
+    pub repeats_eval: usize,
+}
+
+impl Default for CollectConfig {
+    fn default() -> Self {
+        CollectConfig {
+            repeats_train: 3,
+            repeats_eval: 2,
+        }
+    }
+}
+
+/// Probe training hyperparameters (mirrors the paper's appendix A.1).
+#[derive(Debug, Clone)]
+pub struct ProbeConfig {
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub patience: usize,
+}
+
+impl Default for ProbeConfig {
+    fn default() -> Self {
+        ProbeConfig {
+            epochs: 40,
+            batch_size: 64,
+            patience: 4,
+        }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub paths: PathsOpt,
+    pub engine: EngineConfig,
+    pub space: SpaceConfig,
+    pub sweep: SweepConfig,
+    pub collect: CollectConfig,
+    pub probe: ProbeConfig,
+    pub seed: u64,
+}
+
+/// Paths with defaults resolved lazily (so `Config::default()` needs no IO).
+#[derive(Debug, Clone)]
+pub struct PathsOpt {
+    pub artifacts: PathBuf,
+    pub results: PathBuf,
+}
+
+impl Default for PathsOpt {
+    fn default() -> Self {
+        PathsOpt {
+            artifacts: PathBuf::from("artifacts"),
+            results: PathBuf::from("results"),
+        }
+    }
+}
+
+impl Config {
+    pub fn paths(&self) -> Paths {
+        Paths {
+            artifacts: self.paths.artifacts.clone(),
+            results: self.paths.results.clone(),
+        }
+    }
+
+    /// Load from a JSON file and merge over defaults.
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read {}: {e}", path.display())))?;
+        let v = parse(&text)?;
+        let mut cfg = Config::default();
+        cfg.merge_json(&v)?;
+        Ok(cfg)
+    }
+
+    /// Merge a JSON object over this config. Unknown keys are errors (to
+    /// catch typos in experiment configs).
+    pub fn merge_json(&mut self, v: &Value) -> Result<()> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| Error::Config("config root must be an object".into()))?;
+        for (key, val) in obj {
+            match key.as_str() {
+                "seed" => {
+                    self.seed = val
+                        .as_i64()
+                        .ok_or_else(|| Error::Config("seed must be an integer".into()))?
+                        as u64
+                }
+                "artifacts" => {
+                    self.paths.artifacts = PathBuf::from(
+                        val.as_str()
+                            .ok_or_else(|| Error::Config("artifacts must be a string".into()))?,
+                    )
+                }
+                "results" => {
+                    self.paths.results = PathBuf::from(
+                        val.as_str()
+                            .ok_or_else(|| Error::Config("results must be a string".into()))?,
+                    )
+                }
+                "engine" => self.merge_engine(val)?,
+                "space" => self.merge_space(val)?,
+                "sweep" => self.merge_sweep(val)?,
+                "collect" => {
+                    self.collect.repeats_train =
+                        val.opt_usize("repeats_train", self.collect.repeats_train);
+                    self.collect.repeats_eval =
+                        val.opt_usize("repeats_eval", self.collect.repeats_eval);
+                }
+                "probe" => {
+                    self.probe.epochs = val.opt_usize("epochs", self.probe.epochs);
+                    self.probe.batch_size = val.opt_usize("batch_size", self.probe.batch_size);
+                    self.probe.patience = val.opt_usize("patience", self.probe.patience);
+                }
+                other => return Err(Error::Config(format!("unknown config key '{other}'"))),
+            }
+        }
+        Ok(())
+    }
+
+    fn merge_engine(&mut self, v: &Value) -> Result<()> {
+        let e = &mut self.engine;
+        e.max_seq = v.opt_usize("max_seq", e.max_seq);
+        e.prefill_len = v.opt_usize("prefill_len", e.prefill_len);
+        e.prm_len = v.opt_usize("prm_len", e.prm_len);
+        e.temperature = v.opt_f64("temperature", e.temperature as f64) as f32;
+        e.max_new_tokens = v.opt_usize("max_new_tokens", e.max_new_tokens);
+        e.sim_clock = v.opt_bool("sim_clock", e.sim_clock);
+        e.batch_window_ms = v.opt_f64("batch_window_ms", e.batch_window_ms);
+        if let Some(buckets) = v.get("buckets") {
+            e.buckets = buckets
+                .as_arr()
+                .ok_or_else(|| Error::Config("engine.buckets must be an array".into()))?
+                .iter()
+                .map(|b| {
+                    b.as_usize()
+                        .ok_or_else(|| Error::Config("bucket must be an integer".into()))
+                })
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+
+    fn merge_space(&mut self, v: &Value) -> Result<()> {
+        if let Some(ns) = v.get("mv_ns") {
+            self.space.mv_ns = usize_arr(ns, "space.mv_ns")?;
+        }
+        if let Some(ns) = v.get("bon_ns") {
+            self.space.bon_ns = usize_arr(ns, "space.bon_ns")?;
+        }
+        self.space.beam_max_rounds = v.opt_usize("beam_max_rounds", self.space.beam_max_rounds);
+        if let Some(beam) = v.get("beam") {
+            let arr = beam
+                .as_arr()
+                .ok_or_else(|| Error::Config("space.beam must be an array".into()))?;
+            self.space.beam = arr
+                .iter()
+                .map(|triple| {
+                    let t = triple
+                        .as_arr()
+                        .filter(|t| t.len() == 3)
+                        .ok_or_else(|| Error::Config("beam entry must be [n, w, chunk]".into()))?;
+                    Ok((
+                        t[0].as_usize().ok_or_else(|| Error::Config("beam n".into()))?,
+                        t[1].as_usize().ok_or_else(|| Error::Config("beam w".into()))?,
+                        t[2].as_usize().ok_or_else(|| Error::Config("beam chunk".into()))?,
+                    ))
+                })
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+
+    fn merge_sweep(&mut self, v: &Value) -> Result<()> {
+        if let Some(g) = v.get("lambda_t") {
+            self.sweep.lambda_t = f64_arr(g, "sweep.lambda_t")?;
+        }
+        if let Some(g) = v.get("lambda_l") {
+            self.sweep.lambda_l = f64_arr(g, "sweep.lambda_l")?;
+        }
+        if let Some(g) = v.get("fixed_lambda_l") {
+            self.sweep.fixed_lambda_l = f64_arr(g, "sweep.fixed_lambda_l")?;
+        }
+        if let Some(g) = v.get("fixed_lambda_t") {
+            self.sweep.fixed_lambda_t = f64_arr(g, "sweep.fixed_lambda_t")?;
+        }
+        Ok(())
+    }
+}
+
+fn usize_arr(v: &Value, what: &str) -> Result<Vec<usize>> {
+    v.as_arr()
+        .ok_or_else(|| Error::Config(format!("{what} must be an array")))?
+        .iter()
+        .map(|x| {
+            x.as_usize()
+                .ok_or_else(|| Error::Config(format!("{what} element must be an integer")))
+        })
+        .collect()
+}
+
+fn f64_arr(v: &Value, what: &str) -> Result<Vec<f64>> {
+    v.as_arr()
+        .ok_or_else(|| Error::Config(format!("{what} must be an array")))?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .ok_or_else(|| Error::Config(format!("{what} element must be a number")))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = Config::default();
+        assert!(c.engine.max_seq >= c.engine.prefill_len + c.engine.max_new_tokens);
+        assert!(c.engine.buckets.windows(2).all(|w| w[0] < w[1]));
+        assert!(!c.space.mv_ns.is_empty());
+        assert!(c.sweep.lambda_t[0] == 0.0, "grid must include zero penalty");
+    }
+
+    #[test]
+    fn merge_overrides() {
+        let mut c = Config::default();
+        let v = parse(
+            r#"{"seed": 99, "engine": {"temperature": 0.5, "buckets": [1, 2]},
+                "space": {"mv_ns": [1, 3], "beam": [[2, 2, 8]]},
+                "sweep": {"lambda_t": [0, 0.1]}}"#,
+        )
+        .unwrap();
+        c.merge_json(&v).unwrap();
+        assert_eq!(c.seed, 99);
+        assert_eq!(c.engine.temperature, 0.5);
+        assert_eq!(c.engine.buckets, vec![1, 2]);
+        assert_eq!(c.space.mv_ns, vec![1, 3]);
+        assert_eq!(c.space.beam, vec![(2, 2, 8)]);
+        assert_eq!(c.sweep.lambda_t, vec![0.0, 0.1]);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = Config::default();
+        let v = parse(r#"{"typo_key": 1}"#).unwrap();
+        assert!(c.merge_json(&v).is_err());
+    }
+}

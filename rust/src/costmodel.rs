@@ -1,0 +1,159 @@
+//! Cost models `T̂_s(x)`, `L̂_s(x)` (paper §2.4).
+//!
+//! Following the paper, predicted costs are **per-strategy training-set
+//! means** — "cost variation is dominated by the choice of strategy
+//! rather than the query" (validated by our Figs 7/8 reproduction, where
+//! mean-cost routing tracks oracle-cost routing closely).
+
+use crate::error::{Error, Result};
+use crate::matrix::Matrix;
+use crate::util::json::Value;
+use crate::util::stats;
+use std::collections::HashMap;
+
+/// Predicted cost of one strategy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostEstimate {
+    pub tokens: f64,
+    pub latency_ms: f64,
+}
+
+/// Per-strategy mean cost table fitted on the train-split matrix.
+#[derive(Debug, Clone, Default)]
+pub struct CostModel {
+    table: HashMap<String, CostEstimate>,
+}
+
+impl CostModel {
+    /// Fit means from a (train-split) matrix.
+    pub fn fit(matrix: &Matrix) -> CostModel {
+        let mut groups: HashMap<String, (Vec<f64>, Vec<f64>)> = HashMap::new();
+        for e in &matrix.entries {
+            let g = groups.entry(e.strategy.clone()).or_default();
+            g.0.push(e.tokens as f64);
+            g.1.push(e.latency_ms);
+        }
+        CostModel {
+            table: groups
+                .into_iter()
+                .map(|(s, (toks, lats))| {
+                    (
+                        s,
+                        CostEstimate {
+                            tokens: stats::mean(&toks),
+                            latency_ms: stats::mean(&lats),
+                        },
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    pub fn get(&self, strategy_id: &str) -> Result<CostEstimate> {
+        self.table.get(strategy_id).copied().ok_or_else(|| {
+            Error::internal(format!("no cost estimate for strategy '{strategy_id}'"))
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.table.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.table.is_empty()
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut obj = Value::obj();
+        let mut ids: Vec<&String> = self.table.keys().collect();
+        ids.sort();
+        for id in ids {
+            let c = self.table[id];
+            obj.set(
+                id,
+                Value::obj()
+                    .with("tokens", c.tokens)
+                    .with("latency_ms", c.latency_ms),
+            );
+        }
+        obj
+    }
+
+    pub fn from_json(v: &Value) -> Result<CostModel> {
+        let mut table = HashMap::new();
+        for (k, c) in v
+            .as_obj()
+            .ok_or_else(|| Error::Json("cost model must be an object".into()))?
+        {
+            table.insert(
+                k.clone(),
+                CostEstimate {
+                    tokens: c.req_f64("tokens")?,
+                    latency_ms: c.req_f64("latency_ms")?,
+                },
+            );
+        }
+        Ok(CostModel { table })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::MatrixEntry;
+
+    fn m() -> Matrix {
+        Matrix {
+            entries: vec![
+                MatrixEntry {
+                    query_id: "a".into(),
+                    split: "train".into(),
+                    strategy: "mv@4".into(),
+                    repeat: 0,
+                    k: 2,
+                    correct: true,
+                    tokens: 100,
+                    latency_ms: 50.0,
+                },
+                MatrixEntry {
+                    query_id: "b".into(),
+                    split: "train".into(),
+                    strategy: "mv@4".into(),
+                    repeat: 0,
+                    k: 5,
+                    correct: false,
+                    tokens: 200,
+                    latency_ms: 150.0,
+                },
+                MatrixEntry {
+                    query_id: "a".into(),
+                    split: "train".into(),
+                    strategy: "beam@4x2c12".into(),
+                    repeat: 0,
+                    k: 2,
+                    correct: true,
+                    tokens: 900,
+                    latency_ms: 2000.0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn fit_means() {
+        let cm = CostModel::fit(&m());
+        let c = cm.get("mv@4").unwrap();
+        assert_eq!(c.tokens, 150.0);
+        assert_eq!(c.latency_ms, 100.0);
+        assert_eq!(cm.get("beam@4x2c12").unwrap().tokens, 900.0);
+        assert!(cm.get("unknown@1").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cm = CostModel::fit(&m());
+        let back = CostModel::from_json(&cm.to_json()).unwrap();
+        assert_eq!(back.get("mv@4").unwrap(), cm.get("mv@4").unwrap());
+        assert_eq!(back.len(), cm.len());
+    }
+}

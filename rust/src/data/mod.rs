@@ -1,0 +1,159 @@
+//! Dataset records and JSONL IO.
+
+use crate::error::{Error, Result};
+use crate::util::json::{parse, Value};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// One evaluation query (a math problem without its solution).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Query {
+    pub id: String,
+    /// Full prompt text, e.g. `Q:7+8-2=?\n` (newline included).
+    pub query: String,
+    /// Ground-truth final answer as its surface string, e.g. `30`.
+    pub answer: String,
+    /// Difficulty (number of CoT steps).
+    pub k: usize,
+}
+
+impl Query {
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("id", self.id.as_str())
+            .with("query", self.query.as_str())
+            .with("answer", self.answer.as_str())
+            .with("k", self.k)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Query> {
+        Ok(Query {
+            id: v.req_str("id")?.to_string(),
+            query: v.req_str("query")?.to_string(),
+            answer: v.req_str("answer")?.to_string(),
+            k: v.req_usize("k")?,
+        })
+    }
+}
+
+/// Read a whole JSONL file into values. Blank lines are skipped.
+pub fn read_jsonl(path: &Path) -> Result<Vec<Value>> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| Error::artifact(format!("cannot open {}: {e}", path.display())))?;
+    let reader = BufReader::new(file);
+    let mut out = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = parse(&line)
+            .map_err(|e| Error::Json(format!("{}:{}: {e}", path.display(), lineno + 1)))?;
+        out.push(v);
+    }
+    Ok(out)
+}
+
+/// Write values as JSONL (one compact document per line).
+pub fn write_jsonl(path: &Path, values: &[Value]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for v in values {
+        f.write_all(v.dumps().as_bytes())?;
+        f.write_all(b"\n")?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// Append values to an existing JSONL file (creates it if missing).
+pub fn append_jsonl(path: &Path, values: &[Value]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(
+        std::fs::OpenOptions::new().create(true).append(true).open(path)?,
+    );
+    for v in values {
+        f.write_all(v.dumps().as_bytes())?;
+        f.write_all(b"\n")?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// Load a query split file (`queries_*.jsonl`).
+pub fn load_queries(path: &Path) -> Result<Vec<Query>> {
+    read_jsonl(path)?.iter().map(Query::from_json).collect()
+}
+
+/// The three standard splits, loaded from a data directory.
+#[derive(Debug, Clone)]
+pub struct Splits {
+    pub train: Vec<Query>,
+    pub calib: Vec<Query>,
+    pub test: Vec<Query>,
+}
+
+impl Splits {
+    pub fn load(data_dir: &Path) -> Result<Splits> {
+        Ok(Splits {
+            train: load_queries(&data_dir.join("queries_train.jsonl"))?,
+            calib: load_queries(&data_dir.join("queries_calib.jsonl"))?,
+            test: load_queries(&data_dir.join("queries_test.jsonl"))?,
+        })
+    }
+
+    pub fn by_name(&self, name: &str) -> Result<&[Query]> {
+        match name {
+            "train" => Ok(&self.train),
+            "calib" => Ok(&self.calib),
+            "test" => Ok(&self.test),
+            other => Err(Error::Config(format!("unknown split '{other}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_json_roundtrip() {
+        let q = Query {
+            id: "t-1".into(),
+            query: "Q:1+2=?\n".into(),
+            answer: "3".into(),
+            k: 2,
+        };
+        let v = q.to_json();
+        assert_eq!(Query::from_json(&v).unwrap(), q);
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let path = std::env::temp_dir().join(format!("ttc_jsonl_{}.jsonl", std::process::id()));
+        let values = vec![
+            Value::obj().with("a", 1.0),
+            Value::obj().with("b", "x"),
+        ];
+        write_jsonl(&path, &values).unwrap();
+        append_jsonl(&path, &[Value::obj().with("c", true)]).unwrap();
+        let back = read_jsonl(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back[0], values[0]);
+        assert_eq!(back[2].opt_bool("c", false), true);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn read_jsonl_reports_line_numbers() {
+        let path = std::env::temp_dir().join(format!("ttc_bad_{}.jsonl", std::process::id()));
+        std::fs::write(&path, "{\"a\":1}\nnot json\n").unwrap();
+        let err = read_jsonl(&path).unwrap_err().to_string();
+        assert!(err.contains(":2:"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,154 @@
+//! Public engine API: spawn the engine thread, talk to it synchronously.
+
+use crate::config::Config;
+use crate::engine::protocol::*;
+use crate::engine::thread::EngineThread;
+use crate::error::{Error, Result};
+use crate::metrics::EngineMetrics;
+use crate::util::clock::{self, SharedClock};
+use crate::util::json::Value;
+use crate::log_info;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Cheap, cloneable handle used by coordinator threads.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: Sender<EngineMsg>,
+}
+
+macro_rules! rpc {
+    ($self:ident, $variant:ident { $($field:ident : $value:expr),* $(,)? }) => {{
+        let (reply, rx) = channel();
+        $self
+            .tx
+            .send(EngineMsg::$variant { $($field: $value,)* reply })
+            .map_err(|_| Error::Engine("engine thread is gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Engine("engine thread dropped the reply".into()))?
+    }};
+}
+
+impl EngineHandle {
+    /// Generate all jobs (blocking); results in job order.
+    pub fn generate(&self, jobs: Vec<GenJob>) -> Result<Vec<GenResult>> {
+        rpc!(self, Generate { jobs: jobs })
+    }
+
+    /// Score CoT prefixes with the PRM.
+    pub fn prm_score(&self, prefixes: Vec<Vec<u32>>) -> Result<Vec<f32>> {
+        rpc!(self, PrmScore { prefixes: prefixes })
+    }
+
+    /// Embed queries.
+    pub fn embed(&self, kind: EmbedKind, queries: Vec<Vec<u32>>) -> Result<Vec<Vec<f32>>> {
+        rpc!(self, Embed { kind: kind, queries: queries })
+    }
+
+    /// Probe forward (logits) with the engine's current probe params.
+    pub fn probe_fwd(&self, feats: Vec<Vec<f32>>) -> Result<Vec<f32>> {
+        rpc!(self, ProbeFwd { feats: feats })
+    }
+
+    /// Train the probe; the engine keeps (and returns) the best params.
+    #[allow(clippy::too_many_arguments)]
+    pub fn probe_train(
+        &self,
+        train_feats: Vec<Vec<f32>>,
+        train_labels: Vec<f32>,
+        val_feats: Vec<Vec<f32>>,
+        val_labels: Vec<f32>,
+        epochs: usize,
+        patience: usize,
+    ) -> Result<ProbeTrainReport> {
+        rpc!(
+            self,
+            ProbeTrain {
+                train_feats: train_feats,
+                train_labels: train_labels,
+                val_feats: val_feats,
+                val_labels: val_labels,
+                epochs: epochs,
+                patience: patience,
+            }
+        )
+    }
+
+    /// Replace probe parameters (e.g. from a saved checkpoint).
+    pub fn probe_load(&self, params: Vec<f32>) -> Result<()> {
+        rpc!(self, ProbeLoad { params: params })
+    }
+
+    /// Engine diagnostics as JSON.
+    pub fn info(&self) -> Result<Value> {
+        rpc!(self, Info {})
+    }
+}
+
+/// Owns the engine thread; shuts it down on drop.
+pub struct Engine {
+    handle: EngineHandle,
+    join: Option<JoinHandle<()>>,
+    pub metrics: Arc<EngineMetrics>,
+    pub clock: SharedClock,
+}
+
+impl Engine {
+    /// Spawn the engine thread and wait until artifacts are loaded.
+    pub fn start(cfg: &Config) -> Result<Engine> {
+        let clock: SharedClock = if cfg.engine.sim_clock {
+            clock::sim_clock()
+        } else {
+            clock::real_clock()
+        };
+        Self::start_with_clock(cfg, clock)
+    }
+
+    pub fn start_with_clock(cfg: &Config, clock: SharedClock) -> Result<Engine> {
+        let metrics = Arc::new(EngineMetrics::new());
+        let (tx, rx) = channel();
+        let (ready_tx, ready_rx) = channel();
+        let artifacts = cfg.paths.artifacts.clone();
+        let seed = cfg.seed;
+        let thread_clock = clock.clone();
+        let thread_metrics = metrics.clone();
+        let join = std::thread::Builder::new()
+            .name("ttc-engine".into())
+            .spawn(move || {
+                match EngineThread::new(&artifacts, thread_clock, thread_metrics, seed) {
+                    Ok(engine) => {
+                        let _ = ready_tx.send(Ok(()));
+                        engine.serve(rx);
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                    }
+                }
+            })
+            .map_err(|e| Error::Engine(format!("cannot spawn engine thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Engine("engine thread died during startup".into()))??;
+        log_info!("engine started (artifacts: {})", cfg.paths.artifacts.display());
+        Ok(Engine {
+            handle: EngineHandle { tx },
+            join: Some(join),
+            metrics,
+            clock,
+        })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(EngineMsg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}

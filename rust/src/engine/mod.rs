@@ -1,0 +1,31 @@
+//! The inference engine: a dedicated thread owning all PJRT state, plus
+//! the request protocol and continuous batcher in front of it.
+//!
+//! ## Why a single engine thread
+//!
+//! The `xla` crate's PJRT handles are `Rc`-based (`!Send`), so exactly one
+//! thread owns the client, the compiled executables, the device-resident
+//! weight buffers and the probe training state. Coordinator threads talk
+//! to it over an mpsc channel — the same executor-thread shape real GPU
+//! serving stacks use. On this 1-core testbed the engine thread is also
+//! where all FLOPs are spent; batching exists to amortize call overhead
+//! and to reproduce the paper's *latency structure* (one batched call for
+//! N parallel candidates vs. D sequential rounds for beam search).
+//!
+//! ## Generation granularity
+//!
+//! Generation is **in-graph** (`lm_generate` / `lm_chunk` artifacts):
+//! prefill + sampling loop + KV cache live inside one executable call
+//! (the crate returns outputs as a single tuple buffer, so per-token
+//! round-trips would copy the whole cache through host literals). The
+//! batcher therefore packs *sequence jobs* — candidate generations or
+//! beam-chunk extensions — into bucket-sized calls.
+
+pub mod batcher;
+pub mod handle;
+pub mod protocol;
+pub mod thread;
+
+pub use batcher::{plan_batches, BatchPlan};
+pub use handle::{Engine, EngineHandle};
+pub use protocol::{EmbedKind, GenJob, GenKind, GenResult, ProbeTrainReport};

@@ -1,0 +1,104 @@
+//! Message types between coordinator threads and the engine thread.
+
+use std::sync::mpsc::Sender;
+
+/// What kind of generation call a job needs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GenKind {
+    /// Full candidate generation: stop at EOS, up to `gen_max_new` tokens.
+    Full,
+    /// Beam-search chunk: stop at EOS or `;`, up to `chunk_max_new`.
+    Chunk,
+}
+
+/// One sequence job (a candidate to generate or a beam to extend).
+#[derive(Debug, Clone)]
+pub struct GenJob {
+    /// Prompt token ids (un-padded).
+    pub tokens: Vec<u32>,
+    pub kind: GenKind,
+    /// Sampling temperature (same value batches together).
+    pub temperature: f32,
+}
+
+/// Result for one sequence job.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    /// Generated token ids (stop token included; pad stripped).
+    pub tokens: Vec<u32>,
+    /// Wall/sim time of the batched call this job rode in (ms). All jobs
+    /// in a call share it — that is precisely the latency semantics of a
+    /// parallel batched generate.
+    pub call_ms: f64,
+    /// Number of jobs that shared the call (diagnostic).
+    pub batch_size: usize,
+}
+
+/// Which query embedding to compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EmbedKind {
+    /// Max-pooled final hidden states ("Qwen-style", appendix A.1).
+    Pool,
+    /// Mean-pooled token embeddings ("BERT-style", appendix A.3).
+    Small,
+}
+
+/// Probe training outcome.
+#[derive(Debug, Clone)]
+pub struct ProbeTrainReport {
+    pub steps: usize,
+    pub final_train_loss: f64,
+    pub best_val_loss: f64,
+    /// (epoch, train_loss, val_loss) per epoch.
+    pub curve: Vec<(usize, f64, f64)>,
+    /// Trained parameters, flat f32 in manifest order.
+    pub params: Vec<f32>,
+}
+
+/// Requests the engine thread serves.
+pub enum EngineMsg {
+    /// Generate a batch of sequence jobs; one reply per job, in order.
+    Generate {
+        jobs: Vec<GenJob>,
+        reply: Sender<crate::error::Result<Vec<GenResult>>>,
+    },
+    /// Score CoT prefixes with the PRM. Input: (tokens, true_len) pairs.
+    PrmScore {
+        prefixes: Vec<Vec<u32>>,
+        reply: Sender<crate::error::Result<Vec<f32>>>,
+    },
+    /// Embed queries. Input: token id lists (≤ query_len).
+    Embed {
+        kind: EmbedKind,
+        queries: Vec<Vec<u32>>,
+        reply: Sender<crate::error::Result<Vec<Vec<f32>>>>,
+    },
+    /// Probe forward on feature rows (uses the engine's current probe
+    /// parameters — initial or trained).
+    ProbeFwd {
+        feats: Vec<Vec<f32>>,
+        reply: Sender<crate::error::Result<Vec<f32>>>,
+    },
+    /// Train the probe on (features, soft-label) pairs with early
+    /// stopping on a validation split; engine keeps the trained params.
+    ProbeTrain {
+        train_feats: Vec<Vec<f32>>,
+        train_labels: Vec<f32>,
+        val_feats: Vec<Vec<f32>>,
+        val_labels: Vec<f32>,
+        epochs: usize,
+        patience: usize,
+        reply: Sender<crate::error::Result<ProbeTrainReport>>,
+    },
+    /// Replace the engine's probe parameters (e.g. loaded from disk).
+    ProbeLoad {
+        params: Vec<f32>,
+        reply: Sender<crate::error::Result<()>>,
+    },
+    /// Diagnostics: compile-time totals, metrics snapshot.
+    Info {
+        reply: Sender<crate::error::Result<crate::util::json::Value>>,
+    },
+    /// Shut the engine thread down cleanly.
+    Shutdown,
+}

@@ -1,0 +1,675 @@
+//! The engine thread: owns all PJRT state and serves [`EngineMsg`]s.
+//!
+//! Weight tensors are uploaded to device buffers once at startup and
+//! passed by reference to every `execute_b` call; per-call activations
+//! (token blocks, lengths, RNG keys, temperature) are tiny uploads.
+//! Probe parameters live host-side (they are small and the train step
+//! returns them each step anyway).
+
+use crate::engine::batcher::{pick_bucket, plan_batches};
+use crate::engine::protocol::*;
+use crate::error::{Error, Result};
+use crate::metrics::EngineMetrics;
+use crate::runtime::{ExecutableSet, WeightSet};
+use crate::util::clock::{CostEvent, SharedClock};
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::{log_debug, log_info};
+use std::path::PathBuf;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+/// Static shape info read from `hlo_index.json` meta.
+#[derive(Debug, Clone)]
+pub struct EngineShapes {
+    pub batch_buckets: Vec<usize>,
+    pub chunk_lens: Vec<usize>,
+    pub query_len: usize,
+    pub prm_len: usize,
+    pub gen_max_new: usize,
+    pub chunk_max_new: usize,
+    pub probe_fwd_batch: usize,
+    pub probe_train_batch: usize,
+    pub probe_features: usize,
+    pub d_model: usize,
+}
+
+impl EngineShapes {
+    fn from_meta(meta: &Value) -> Result<EngineShapes> {
+        let probe = meta.req("probe")?;
+        let lm = meta.req("lm")?;
+        Ok(EngineShapes {
+            batch_buckets: meta
+                .req_arr("batch_buckets")?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| Error::artifact("bad bucket")))
+                .collect::<Result<_>>()?,
+            chunk_lens: meta
+                .req_arr("chunk_lens")?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| Error::artifact("bad len")))
+                .collect::<Result<_>>()?,
+            query_len: meta.req_usize("query_len")?,
+            prm_len: meta.req_usize("prm_len")?,
+            gen_max_new: meta.req_usize("gen_max_new")?,
+            chunk_max_new: meta.req_usize("chunk_max_new")?,
+            probe_fwd_batch: meta.req_usize("probe_fwd_batch")?,
+            probe_train_batch: meta.req_usize("probe_train_batch")?,
+            probe_features: probe.req_usize("features")?,
+            d_model: lm.req_usize("d_model")?,
+        })
+    }
+}
+
+/// Probe training state held on the engine thread.
+struct ProbeState {
+    /// Flat params in manifest order.
+    params: Vec<f32>,
+    /// Tensor boundaries (shapes + offsets) from the probe manifest.
+    entries: Vec<crate::runtime::weights::WeightEntry>,
+}
+
+impl ProbeState {
+    fn tensors(&self) -> Vec<&[f32]> {
+        self.entries
+            .iter()
+            .map(|e| &self.params[e.offset..e.offset + e.size])
+            .collect()
+    }
+}
+
+pub struct EngineThread {
+    execs: ExecutableSet,
+    lm_bufs: Vec<xla::PjRtBuffer>,
+    probe: ProbeState,
+    pub shapes: EngineShapes,
+    clock: SharedClock,
+    metrics: Arc<EngineMetrics>,
+    rng: Rng,
+}
+
+impl EngineThread {
+    pub fn new(
+        artifacts: &PathBuf,
+        clock: SharedClock,
+        metrics: Arc<EngineMetrics>,
+        seed: u64,
+    ) -> Result<EngineThread> {
+        let execs = ExecutableSet::new(artifacts)?;
+        let shapes = EngineShapes::from_meta(&execs.index().meta)?;
+
+        // the PRM is likelihood-based over the generator weights, so the
+        // engine holds exactly two weight sets: the LM and the probe.
+        let lm = WeightSet::load(artifacts, "lm")?;
+        let probe_ws = WeightSet::load(artifacts, "probe")?;
+        log_info!(
+            "engine: weights lm={} tensors, probe={} ({} f32)",
+            lm.len(),
+            probe_ws.len(),
+            probe_ws.blob.len()
+        );
+
+        let client = execs.client().clone();
+        let upload = |ws: &WeightSet| -> Result<Vec<xla::PjRtBuffer>> {
+            ws.entries
+                .iter()
+                .enumerate()
+                .map(|(i, e)| {
+                    let dims: Vec<usize> = if e.shape.is_empty() {
+                        vec![]
+                    } else {
+                        e.shape.clone()
+                    };
+                    client
+                        .buffer_from_host_buffer::<f32>(ws.tensor_data(i), &dims, None)
+                        .map_err(Error::from)
+                })
+                .collect()
+        };
+        let lm_bufs = upload(&lm)?;
+
+        Ok(EngineThread {
+            execs,
+            lm_bufs,
+            probe: ProbeState {
+                params: probe_ws.blob.clone(),
+                entries: probe_ws.entries.clone(),
+            },
+            shapes,
+            clock,
+            metrics,
+            rng: Rng::new(seed, 0xE17),
+        })
+    }
+
+    /// Blocking serve loop. Consumes messages until `Shutdown` or channel
+    /// close. Pending `Generate` messages are drained and merged into one
+    /// batching round (continuous batching across concurrent requests).
+    pub fn serve(mut self, rx: Receiver<EngineMsg>) {
+        loop {
+            let msg = match rx.recv() {
+                Ok(m) => m,
+                Err(_) => return,
+            };
+            match msg {
+                EngineMsg::Shutdown => return,
+                EngineMsg::Generate { jobs, reply } => {
+                    // merge any already-queued Generate requests
+                    let mut merged = vec![(jobs, reply)];
+                    while let Ok(next) = rx.try_recv() {
+                        match next {
+                            EngineMsg::Generate { jobs, reply } => merged.push((jobs, reply)),
+                            other => {
+                                self.dispatch(other);
+                                break;
+                            }
+                        }
+                    }
+                    self.generate_merged(merged);
+                }
+                other => self.dispatch(other),
+            }
+        }
+    }
+
+    fn dispatch(&mut self, msg: EngineMsg) {
+        match msg {
+            EngineMsg::Generate { jobs, reply } => self.generate_merged(vec![(jobs, reply)]),
+            EngineMsg::PrmScore { prefixes, reply } => {
+                let _ = reply.send(self.prm_score(&prefixes));
+            }
+            EngineMsg::Embed {
+                kind,
+                queries,
+                reply,
+            } => {
+                let _ = reply.send(self.embed(kind, &queries));
+            }
+            EngineMsg::ProbeFwd { feats, reply } => {
+                let _ = reply.send(self.probe_fwd(&feats));
+            }
+            EngineMsg::ProbeTrain {
+                train_feats,
+                train_labels,
+                val_feats,
+                val_labels,
+                epochs,
+                patience,
+                reply,
+            } => {
+                let _ = reply.send(self.probe_train(
+                    &train_feats,
+                    &train_labels,
+                    &val_feats,
+                    &val_labels,
+                    epochs,
+                    patience,
+                ));
+            }
+            EngineMsg::ProbeLoad { params, reply } => {
+                let _ = reply.send(self.probe_load(params));
+            }
+            EngineMsg::Info { reply } => {
+                let _ = reply.send(Ok(self.info()));
+            }
+            EngineMsg::Shutdown => {}
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // generation
+    // ------------------------------------------------------------------
+
+    fn generate_merged(
+        &mut self,
+        requests: Vec<(
+            Vec<GenJob>,
+            std::sync::mpsc::Sender<Result<Vec<GenResult>>>,
+        )>,
+    ) {
+        // flatten with request boundaries
+        let mut all_jobs = Vec::new();
+        let mut bounds = Vec::new();
+        for (jobs, _) in &requests {
+            let start = all_jobs.len();
+            all_jobs.extend(jobs.iter().cloned());
+            bounds.push(start..all_jobs.len());
+        }
+
+        match self.generate_all(&all_jobs) {
+            Ok(results) => {
+                for ((_, reply), range) in requests.into_iter().zip(bounds) {
+                    let _ = reply.send(Ok(results[range].to_vec()));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for (_, reply) in requests {
+                    let _ = reply.send(Err(Error::Engine(msg.clone())));
+                }
+            }
+        }
+    }
+
+    fn generate_all(&mut self, jobs: &[GenJob]) -> Result<Vec<GenResult>> {
+        let plans = plan_batches(
+            jobs,
+            &self.shapes.batch_buckets,
+            &self.shapes.chunk_lens,
+            self.shapes.query_len,
+        );
+        let mut results: Vec<Option<GenResult>> = vec![None; jobs.len()];
+        for plan in &plans {
+            let exec_name = match plan.kind {
+                GenKind::Full => format!("lm_generate_b{}", plan.bucket),
+                GenKind::Chunk => format!("lm_chunk_b{}_l{}", plan.bucket, plan.len_bucket),
+            };
+            let exe = self.execs.get(&exec_name)?;
+
+            // assemble padded token block; padding rows get a 1-token prompt
+            let b = plan.bucket;
+            let l = plan.len_bucket;
+            let mut tokens = vec![0i32; b * l];
+            let mut lens = vec![1i32; b];
+            for (row, &ji) in plan.job_indices.iter().enumerate() {
+                let t = &jobs[ji].tokens;
+                if t.len() > l {
+                    return Err(Error::Engine(format!(
+                        "prompt of {} tokens exceeds length bucket {l}",
+                        t.len()
+                    )));
+                }
+                for (c, &id) in t.iter().enumerate() {
+                    tokens[row * l + c] = id as i32;
+                }
+                lens[row] = t.len() as i32;
+            }
+            for row in plan.job_indices.len()..b {
+                tokens[row * l] = 19; // 'Q' — dummy prompt for padding rows
+            }
+            let key = [self.rng.next_u32(), self.rng.next_u32()];
+
+            let client = self.execs.client().clone();
+            let t0 = self.clock.now_ms();
+            let tok_buf = client.buffer_from_host_buffer::<i32>(&tokens, &[b, l], None)?;
+            let len_buf = client.buffer_from_host_buffer::<i32>(&lens, &[b], None)?;
+            let key_buf = client.buffer_from_host_buffer::<u32>(&key, &[2], None)?;
+            let temp_buf =
+                client.buffer_from_host_buffer::<f32>(&[plan.temperature], &[], None)?;
+
+            let mut args: Vec<&xla::PjRtBuffer> = self.lm_bufs.iter().collect();
+            args.push(&tok_buf);
+            args.push(&len_buf);
+            args.push(&key_buf);
+            args.push(&temp_buf);
+            let out = exe.run_buffers(&args)?;
+            let tuple = out
+                .first()
+                .ok_or_else(|| Error::Engine("empty generate output".into()))?
+                .to_literal_sync()?;
+            let parts = tuple.to_tuple()?;
+            if parts.len() != 2 {
+                return Err(Error::Engine(format!(
+                    "generate returned {} outputs, expected 2",
+                    parts.len()
+                )));
+            }
+            let gen: Vec<i32> = parts[0].to_vec()?;
+            let gen_len: Vec<i32> = parts[1].to_vec()?;
+            let t_cols = gen.len() / b;
+
+            // sim-clock cost: prefill + one decode step per emitted column
+            let max_steps = gen_len.iter().cloned().max().unwrap_or(0) as usize;
+            self.clock.charge(CostEvent::Prefill { batch: b, len: l });
+            for _ in 0..max_steps {
+                self.clock.charge(CostEvent::DecodeStep { batch: b });
+            }
+            let call_ms = self.clock.now_ms() - t0;
+
+            // metrics
+            self.metrics.prefill_calls.inc();
+            self.metrics.decode_calls.inc();
+            let real_rows: usize = plan
+                .job_indices
+                .iter()
+                .enumerate()
+                .map(|(row, _)| gen_len[row] as usize)
+                .sum();
+            self.metrics.decode_rows.add(real_rows as u64);
+            self.metrics
+                .padded_rows
+                .add((b * max_steps).saturating_sub(real_rows) as u64);
+            self.metrics.tokens_generated.add(real_rows as u64);
+            self.metrics.decode_latency.record(call_ms);
+            log_debug!(
+                "{exec_name}: {} jobs, {} steps, {:.1}ms",
+                plan.job_indices.len(),
+                max_steps,
+                call_ms
+            );
+
+            for (row, &ji) in plan.job_indices.iter().enumerate() {
+                let n = gen_len[row] as usize;
+                let toks: Vec<u32> = gen[row * t_cols..row * t_cols + n.min(t_cols)]
+                    .iter()
+                    .map(|&t| t as u32)
+                    .collect();
+                results[ji] = Some(GenResult {
+                    tokens: toks,
+                    call_ms,
+                    batch_size: plan.job_indices.len(),
+                });
+            }
+        }
+        Ok(results
+            .into_iter()
+            .map(|r| r.expect("batcher covered every job"))
+            .collect())
+    }
+
+    // ------------------------------------------------------------------
+    // PRM scoring
+    // ------------------------------------------------------------------
+
+    fn prm_score(&mut self, prefixes: &[Vec<u32>]) -> Result<Vec<f32>> {
+        let l = self.shapes.prm_len;
+        let mut scores = Vec::with_capacity(prefixes.len());
+        let max_bucket = *self.shapes.batch_buckets.last().unwrap();
+        for chunk in prefixes.chunks(max_bucket) {
+            let b = pick_bucket(&self.shapes.batch_buckets, chunk.len());
+            let exe = self.execs.get(&format!("prm_score_b{b}"))?;
+            let mut tokens = vec![0i32; b * l];
+            let mut lens = vec![1i32; b];
+            for (row, p) in chunk.iter().enumerate() {
+                let n = p.len().min(l);
+                for (c, &id) in p[..n].iter().enumerate() {
+                    tokens[row * l + c] = id as i32;
+                }
+                lens[row] = n as i32;
+            }
+            for row in chunk.len()..b {
+                tokens[row * l] = 19;
+            }
+            let client = self.execs.client().clone();
+            let t0 = self.clock.now_ms();
+            let tok_buf = client.buffer_from_host_buffer::<i32>(&tokens, &[b, l], None)?;
+            let len_buf = client.buffer_from_host_buffer::<i32>(&lens, &[b], None)?;
+            let mut args: Vec<&xla::PjRtBuffer> = self.lm_bufs.iter().collect();
+            args.push(&tok_buf);
+            args.push(&len_buf);
+            let out = exe.run_buffers(&args)?;
+            let tuple = out
+                .first()
+                .ok_or_else(|| Error::Engine("empty prm output".into()))?
+                .to_literal_sync()?;
+            let parts = tuple.to_tuple()?;
+            let probs: Vec<f32> = parts[0].to_vec()?;
+            self.clock.charge(CostEvent::PrmScore { batch: b, len: l });
+            self.metrics.prm_calls.inc();
+            self.metrics
+                .decode_latency
+                .record(self.clock.now_ms() - t0);
+            scores.extend_from_slice(&probs[..chunk.len()]);
+        }
+        Ok(scores)
+    }
+
+    // ------------------------------------------------------------------
+    // embeddings
+    // ------------------------------------------------------------------
+
+    fn embed(&mut self, kind: EmbedKind, queries: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        let l = self.shapes.query_len;
+        let d = self.shapes.d_model;
+        let prefix = match kind {
+            EmbedKind::Pool => "embed_pool",
+            EmbedKind::Small => "embed_small",
+        };
+        let mut out = Vec::with_capacity(queries.len());
+        let max_bucket = *self.shapes.batch_buckets.last().unwrap();
+        for chunk in queries.chunks(max_bucket) {
+            let b = pick_bucket(&self.shapes.batch_buckets, chunk.len());
+            let exe = self.execs.get(&format!("{prefix}_b{b}"))?;
+            let mut tokens = vec![0i32; b * l];
+            let mut lens = vec![1i32; b];
+            for (row, q) in chunk.iter().enumerate() {
+                if q.len() > l {
+                    return Err(Error::Engine(format!(
+                        "query of {} tokens exceeds query_len {l}",
+                        q.len()
+                    )));
+                }
+                for (c, &id) in q.iter().enumerate() {
+                    tokens[row * l + c] = id as i32;
+                }
+                lens[row] = q.len() as i32;
+            }
+            for row in chunk.len()..b {
+                tokens[row * l] = 19;
+            }
+            let client = self.execs.client().clone();
+            let tok_buf = client.buffer_from_host_buffer::<i32>(&tokens, &[b, l], None)?;
+            let len_buf = client.buffer_from_host_buffer::<i32>(&lens, &[b], None)?;
+            let mut args: Vec<&xla::PjRtBuffer> = self.lm_bufs.iter().collect();
+            args.push(&tok_buf);
+            args.push(&len_buf);
+            let result = exe.run_buffers(&args)?;
+            let tuple = result
+                .first()
+                .ok_or_else(|| Error::Engine("empty embed output".into()))?
+                .to_literal_sync()?;
+            let parts = tuple.to_tuple()?;
+            let flat: Vec<f32> = parts[0].to_vec()?;
+            self.clock.charge(CostEvent::Embed { batch: b });
+            for row in 0..chunk.len() {
+                out.push(flat[row * d..(row + 1) * d].to_vec());
+            }
+        }
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // probe
+    // ------------------------------------------------------------------
+
+    fn probe_fwd(&mut self, feats: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let b = self.shapes.probe_fwd_batch;
+        let f = self.shapes.probe_features;
+        let exe = self.execs.get(&format!("probe_fwd_b{b}"))?;
+        let mut out = Vec::with_capacity(feats.len());
+        for chunk in feats.chunks(b) {
+            let mut block = vec![0f32; b * f];
+            for (row, feat) in chunk.iter().enumerate() {
+                if feat.len() != f {
+                    return Err(Error::Engine(format!(
+                        "feature row has {} dims, probe expects {f}",
+                        feat.len()
+                    )));
+                }
+                block[row * f..(row + 1) * f].copy_from_slice(feat);
+            }
+            let mut args: Vec<xla::Literal> = self
+                .probe
+                .tensors()
+                .iter()
+                .zip(&self.probe.entries)
+                .map(|(data, e)| {
+                    if e.shape.is_empty() {
+                        Ok(xla::Literal::scalar(data[0]))
+                    } else {
+                        crate::runtime::literals::f32_tensor(data, &e.shape)
+                    }
+                })
+                .collect::<Result<_>>()?;
+            args.push(crate::runtime::literals::f32_tensor(&block, &[b, f])?);
+            let parts = exe.run_literals(&args)?;
+            let logits: Vec<f32> = parts[0].to_vec()?;
+            self.clock.charge(CostEvent::Probe { batch: b });
+            out.extend_from_slice(&logits[..chunk.len()]);
+        }
+        Ok(out)
+    }
+
+    fn probe_train(
+        &mut self,
+        train_feats: &[Vec<f32>],
+        train_labels: &[f32],
+        val_feats: &[Vec<f32>],
+        val_labels: &[f32],
+        epochs: usize,
+        patience: usize,
+    ) -> Result<ProbeTrainReport> {
+        let bsz = self.shapes.probe_train_batch;
+        let f = self.shapes.probe_features;
+        if train_feats.len() != train_labels.len() {
+            return Err(Error::Engine("train feats/labels length mismatch".into()));
+        }
+        let exe = self.execs.get(&format!("probe_train_b{bsz}"))?;
+
+        // state: params, m, v as flat blobs
+        let n_tensors = self.probe.entries.len();
+        let mut params = self.probe.params.clone();
+        let mut m = vec![0f32; params.len()];
+        let mut v = vec![0f32; params.len()];
+
+        let to_literals = |blob: &[f32],
+                           entries: &[crate::runtime::weights::WeightEntry]|
+         -> Result<Vec<xla::Literal>> {
+            entries
+                .iter()
+                .map(|e| {
+                    let data = &blob[e.offset..e.offset + e.size];
+                    if e.shape.is_empty() {
+                        Ok(xla::Literal::scalar(data[0]))
+                    } else {
+                        crate::runtime::literals::f32_tensor(data, &e.shape)
+                    }
+                })
+                .collect()
+        };
+
+        let mut order: Vec<usize> = (0..train_feats.len()).collect();
+        let mut step = 0usize;
+        let mut best_val = f64::INFINITY;
+        let mut best_params = params.clone();
+        let mut bad_epochs = 0usize;
+        let mut curve = Vec::new();
+        let mut last_train_loss = 0.0f64;
+
+        for epoch in 0..epochs {
+            self.rng.shuffle(&mut order);
+            let mut epoch_losses = Vec::new();
+            for batch_idx in order.chunks(bsz) {
+                step += 1;
+                let mut feats_block = vec![0f32; bsz * f];
+                let mut labels_block = vec![0f32; bsz];
+                for (row, &i) in batch_idx.iter().enumerate() {
+                    feats_block[row * f..(row + 1) * f].copy_from_slice(&train_feats[i]);
+                    labels_block[row] = train_labels[i];
+                }
+                // wrap-fill the remainder rows so gradients stay unbiased-ish
+                for row in batch_idx.len()..bsz {
+                    let i = order[(row + step) % order.len()];
+                    feats_block[row * f..(row + 1) * f].copy_from_slice(&train_feats[i]);
+                    labels_block[row] = train_labels[i];
+                }
+
+                let mut args = to_literals(&params, &self.probe.entries)?;
+                args.extend(to_literals(&m, &self.probe.entries)?);
+                args.extend(to_literals(&v, &self.probe.entries)?);
+                args.push(xla::Literal::scalar(step as f32));
+                args.push(crate::runtime::literals::f32_tensor(&feats_block, &[bsz, f])?);
+                args.push(crate::runtime::literals::f32_tensor(&labels_block, &[bsz])?);
+
+                let parts = exe.run_literals(&args)?;
+                if parts.len() != 3 * n_tensors + 1 {
+                    return Err(Error::Engine(format!(
+                        "probe_train returned {} outputs, expected {}",
+                        parts.len(),
+                        3 * n_tensors + 1
+                    )));
+                }
+                let write = |blob: &mut Vec<f32>, offset: usize| -> Result<()> {
+                    for (ti, e) in self.probe.entries.iter().enumerate() {
+                        let data: Vec<f32> = parts[offset + ti].to_vec()?;
+                        blob[e.offset..e.offset + e.size].copy_from_slice(&data);
+                    }
+                    Ok(())
+                };
+                write(&mut params, 0)?;
+                write(&mut m, n_tensors)?;
+                write(&mut v, 2 * n_tensors)?;
+                let loss: f32 = parts[3 * n_tensors].get_first_element()?;
+                epoch_losses.push(loss as f64);
+                self.clock.charge(CostEvent::Probe { batch: bsz });
+            }
+            last_train_loss = stats::mean(&epoch_losses);
+
+            // validation loss with current params
+            let saved = std::mem::replace(&mut self.probe.params, params.clone());
+            let val_logits = self.probe_fwd(val_feats)?;
+            self.probe.params = saved;
+            let val_loss = val_logits
+                .iter()
+                .zip(val_labels)
+                .map(|(&z, &y)| stats::bce(y as f64, stats::sigmoid(z as f64)))
+                .sum::<f64>()
+                / val_labels.len().max(1) as f64;
+            curve.push((epoch, last_train_loss, val_loss));
+            log_debug!(
+                "probe epoch {epoch}: train {last_train_loss:.4} val {val_loss:.4}"
+            );
+
+            if val_loss < best_val - 1e-6 {
+                best_val = val_loss;
+                best_params = params.clone();
+                bad_epochs = 0;
+            } else {
+                bad_epochs += 1;
+                if bad_epochs > patience {
+                    log_info!("probe early stop at epoch {epoch} (best val {best_val:.4})");
+                    break;
+                }
+            }
+        }
+
+        self.probe.params = best_params.clone();
+        Ok(ProbeTrainReport {
+            steps: step,
+            final_train_loss: last_train_loss,
+            best_val_loss: best_val,
+            curve,
+            params: best_params,
+        })
+    }
+
+    fn probe_load(&mut self, params: Vec<f32>) -> Result<()> {
+        if params.len() != self.probe.params.len() {
+            return Err(Error::Engine(format!(
+                "probe blob has {} params, expected {}",
+                params.len(),
+                self.probe.params.len()
+            )));
+        }
+        self.probe.params = params;
+        Ok(())
+    }
+
+    fn info(&self) -> Value {
+        Value::obj()
+            .with("platform", self.execs.client().platform_name())
+            .with("compile_ms_total", self.execs.total_compile_ms())
+            .with("metrics", self.metrics.to_json())
+            .with(
+                "shapes",
+                Value::obj()
+                    .with("batch_buckets", self.shapes.batch_buckets.clone())
+                    .with("chunk_lens", self.shapes.chunk_lens.clone())
+                    .with("query_len", self.shapes.query_len)
+                    .with("prm_len", self.shapes.prm_len)
+                    .with("gen_max_new", self.shapes.gen_max_new)
+                    .with("probe_features", self.shapes.probe_features),
+            )
+    }
+}

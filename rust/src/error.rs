@@ -1,0 +1,53 @@
+//! Crate-wide error type.
+
+/// Unified error for the ttc library.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// IO failure (file paths included in the message).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// JSON parse or schema error from [`crate::util::json`].
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// Error bubbled up from the `xla` crate / PJRT.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// A required artifact (HLO, weights, vocab, data) is missing or
+    /// malformed. Usually means `make artifacts` has not been run.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Configuration error (bad CLI flag, bad config file).
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// The engine thread is gone or rejected a request.
+    #[error("engine error: {0}")]
+    Engine(String),
+
+    /// Invariant violation inside a coordinator component.
+    #[error("internal error: {0}")]
+    Internal(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Helper for formatted artifact errors.
+    pub fn artifact(msg: impl Into<String>) -> Self {
+        Error::Artifact(msg.into())
+    }
+    /// Helper for formatted internal errors.
+    pub fn internal(msg: impl Into<String>) -> Self {
+        Error::Internal(msg.into())
+    }
+}

@@ -1,0 +1,294 @@
+//! Answer extraction and aggregation (majority vote, weighted vote).
+//!
+//! Mirrors the paper's math evaluation: the generator emits a CoT
+//! solution ending in `A:<answer>\n`; accuracy is exact match of the
+//! extracted answer against ground truth.
+
+use std::collections::HashMap;
+
+/// Extract the final answer from a generated solution.
+///
+/// Accepts the canonical form `...;A:30\n` (or without the trailing
+/// newline if generation hit the token cap right after the answer).
+/// Returns `None` for malformed outputs — which count as incorrect, the
+/// same way an unparseable model answer does in math benchmarks.
+pub fn extract_answer(solution: &str) -> Option<String> {
+    let idx = solution.rfind("A:")?;
+    let tail = &solution[idx + 2..];
+    let answer: String = tail.chars().take_while(|c| c.is_ascii_digit()).collect();
+    if answer.is_empty() {
+        return None;
+    }
+    // Require the answer to be terminated (newline or end-of-output):
+    // a truncated "A:1" from "A:17" must not silently match "1" — but we
+    // cannot distinguish truncation from completion at the char level, so
+    // we accept end-of-string. Mid-string non-newline garbage is rejected.
+    let after = &tail[answer.len()..];
+    if after.is_empty() || after.starts_with('\n') {
+        Some(answer)
+    } else {
+        None
+    }
+}
+
+/// Exact-match correctness of one candidate solution.
+pub fn is_correct(solution: &str, ground_truth: &str) -> bool {
+    extract_answer(solution).as_deref() == Some(ground_truth)
+}
+
+/// One scored candidate.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    /// Generated solution text (everything after the prompt).
+    pub text: String,
+    /// Reward-model score (higher is better), if scored.
+    pub score: f64,
+    /// Tokens generated for this candidate.
+    pub tokens: usize,
+}
+
+/// Majority voting: most frequent extracted answer; ties broken by total
+/// score, then by first occurrence. Candidates with no extractable answer
+/// are ignored (they can never win), unless *no* candidate parses, in
+/// which case the first candidate's text is returned as-is.
+pub fn majority_vote(candidates: &[Candidate]) -> Option<&Candidate> {
+    vote(candidates, |_c| 1.0)
+}
+
+/// Weighted best-of-N: aggregate reward scores across candidates with
+/// identical final answers, pick the answer with the highest total, then
+/// return its highest-scored candidate. (Paper §2.1, "Weighted".)
+pub fn weighted_vote(candidates: &[Candidate]) -> Option<&Candidate> {
+    vote(candidates, |c| c.score)
+}
+
+/// Naive best-of-N: the single candidate with the highest score.
+/// (Paper §2.1, "Naive".)
+pub fn best_of_n(candidates: &[Candidate]) -> Option<&Candidate> {
+    candidates
+        .iter()
+        .filter(|c| extract_answer(&c.text).is_some())
+        .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap_or(std::cmp::Ordering::Equal))
+        .or_else(|| candidates.first())
+}
+
+fn vote<'a>(
+    candidates: &'a [Candidate],
+    weight: impl Fn(&Candidate) -> f64,
+) -> Option<&'a Candidate> {
+    if candidates.is_empty() {
+        return None;
+    }
+    // answer -> (total weight, best candidate index, best candidate score)
+    let mut tally: HashMap<String, (f64, usize)> = HashMap::new();
+    for (i, c) in candidates.iter().enumerate() {
+        if let Some(ans) = extract_answer(&c.text) {
+            let entry = tally.entry(ans).or_insert((0.0, i));
+            entry.0 += weight(c);
+            if c.score > candidates[entry.1].score {
+                entry.1 = i;
+            }
+        }
+    }
+    if tally.is_empty() {
+        return candidates.first();
+    }
+    let (_, &(_, best_idx)) = tally
+        .iter()
+        .max_by(|a, b| {
+            a.1 .0
+                .partial_cmp(&b.1 .0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                // deterministic tie-break: lower candidate index wins
+                .then(b.1 .1.cmp(&a.1 .1))
+        })
+        .unwrap();
+    Some(&candidates[best_idx])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(text: &str, score: f64) -> Candidate {
+        Candidate {
+            text: text.to_string(),
+            score,
+            tokens: text.len(),
+        }
+    }
+
+    #[test]
+    fn extracts_answers() {
+        assert_eq!(extract_answer("S:1+2=3;A:3\n"), Some("3".to_string()));
+        assert_eq!(extract_answer("S:1+2=3;A:30"), Some("30".to_string()));
+        assert_eq!(extract_answer("S:1+2=3;"), None);
+        assert_eq!(extract_answer("A:"), None);
+        assert_eq!(extract_answer("A:12;junk"), None);
+        // last A: wins (model may emit stray As mid-stream)
+        assert_eq!(extract_answer("A:1\nA:2\n"), Some("2".to_string()));
+    }
+
+    #[test]
+    fn correctness() {
+        assert!(is_correct("S:1+2=3;A:3\n", "3"));
+        assert!(!is_correct("S:1+2=3;A:4\n", "3"));
+        assert!(!is_correct("garbage", "3"));
+    }
+
+    #[test]
+    fn majority_picks_mode() {
+        let cs = vec![
+            cand("A:7\n", 0.1),
+            cand("A:9\n", 0.9),
+            cand("A:7\n", 0.2),
+        ];
+        assert_eq!(
+            extract_answer(&majority_vote(&cs).unwrap().text),
+            Some("7".to_string())
+        );
+    }
+
+    #[test]
+    fn weighted_can_override_majority() {
+        let cs = vec![
+            cand("A:7\n", 0.1),
+            cand("A:7\n", 0.1),
+            cand("A:9\n", 0.9),
+        ];
+        // majority says 7, weighted says 9 (0.9 > 0.2)
+        assert_eq!(
+            extract_answer(&majority_vote(&cs).unwrap().text),
+            Some("7".to_string())
+        );
+        assert_eq!(
+            extract_answer(&weighted_vote(&cs).unwrap().text),
+            Some("9".to_string())
+        );
+    }
+
+    #[test]
+    fn best_of_n_ignores_unparseable() {
+        let cs = vec![cand("junk", 5.0), cand("A:3\n", 0.2)];
+        assert_eq!(
+            extract_answer(&best_of_n(&cs).unwrap().text),
+            Some("3".to_string())
+        );
+    }
+
+    #[test]
+    fn empty_and_all_garbage() {
+        assert!(majority_vote(&[]).is_none());
+        let garbage = vec![cand("x", 0.0), cand("y", 0.0)];
+        // falls back to first candidate (counted incorrect downstream)
+        assert_eq!(majority_vote(&garbage).unwrap().text, "x");
+    }
+
+    #[test]
+    fn vote_deterministic_on_ties() {
+        let cs = vec![cand("A:1\n", 0.5), cand("A:2\n", 0.5)];
+        let a = majority_vote(&cs).unwrap().text.clone();
+        for _ in 0..5 {
+            assert_eq!(majority_vote(&cs).unwrap().text, a);
+        }
+    }
+
+    #[test]
+    fn prop_ground_truth_solutions_extract_correctly() {
+        use crate::taskgen::Problem;
+        use crate::testkit::{forall, prop_assert};
+        forall(
+            "taskgen solutions round-trip through answer extraction",
+            200,
+            |rng| {
+                let k = rng.range(2, 9) as usize;
+                Problem::sample(rng, k)
+            },
+            |p| {
+                let sol = p.solution_text();
+                prop_assert(
+                    extract_answer(&sol).as_deref() == Some(p.answer().to_string().as_str()),
+                    format!("extraction failed on {sol:?}"),
+                )?;
+                prop_assert(
+                    is_correct(&sol, &p.answer().to_string()),
+                    "is_correct disagrees".to_string(),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn prop_majority_winner_is_a_mode() {
+        use crate::testkit::{forall, gen_vec, prop_assert};
+        forall(
+            "majority vote returns a modal answer",
+            200,
+            |rng| {
+                gen_vec(rng, 1..12, |r| {
+                    let ans = r.below(5);
+                    Candidate {
+                        text: format!("S:x;A:{ans}\n"),
+                        score: r.f64(),
+                        tokens: 10,
+                    }
+                })
+            },
+            |cands| {
+                let winner = majority_vote(cands).unwrap();
+                let winner_ans = extract_answer(&winner.text).unwrap();
+                let count = |a: &str| {
+                    cands
+                        .iter()
+                        .filter(|c| extract_answer(&c.text).as_deref() == Some(a))
+                        .count()
+                };
+                let w = count(&winner_ans);
+                for ans in ["0", "1", "2", "3", "4"] {
+                    prop_assert(
+                        count(ans) <= w,
+                        format!("answer {ans} beats winner {winner_ans}"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_best_of_n_maximizes_score() {
+        use crate::testkit::{forall, gen_vec, prop_assert};
+        forall(
+            "naive BoN picks the max-score parseable candidate",
+            200,
+            |rng| {
+                gen_vec(rng, 1..10, |r| {
+                    let parseable = r.below(4) > 0;
+                    Candidate {
+                        text: if parseable {
+                            format!("A:{}\n", r.below(10))
+                        } else {
+                            "garbage".to_string()
+                        },
+                        score: r.f64(),
+                        tokens: 5,
+                    }
+                })
+            },
+            |cands| {
+                let winner = best_of_n(cands).unwrap();
+                if extract_answer(&winner.text).is_some() {
+                    for c in cands {
+                        if extract_answer(&c.text).is_some() {
+                            prop_assert(
+                                c.score <= winner.score,
+                                format!("{} beats winner {}", c.score, winner.score),
+                            )?;
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,73 @@
+//! Fig 9: query-adaptive test-time compute *within* beam search.
+//!
+//! The single-method setting of appendix A.5: the router selects beam
+//! hyperparameters (beam size N, width W, chunk size C) per query,
+//! compared against every static beam configuration on the
+//! accuracy–token plane.
+
+use crate::config::SweepConfig;
+use crate::error::Result;
+use crate::figures::{adaptive_point, CostSource, Csv, EvalTable};
+use crate::router::Lambdas;
+use crate::strategies::Method;
+use std::path::Path;
+
+/// Emits `fig9.csv`:
+/// `series,label,lambda_t,accuracy,tokens,latency_ms` — static beam
+/// configs (label = `(N,W,C)`) plus the adaptive λ_T frontier restricted
+/// to the beam-only space.
+pub fn fig9(table: &EvalTable, sweep: &SweepConfig, out: &Path) -> Result<Csv> {
+    let beam_idx: Vec<usize> = table
+        .strategies
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.method == Method::Beam)
+        .map(|(i, _)| i)
+        .collect();
+    if beam_idx.is_empty() {
+        return Err(crate::error::Error::Config(
+            "fig9 needs beam strategies in the space".into(),
+        ));
+    }
+    let beam_table = table.restrict(&beam_idx);
+
+    let mut csv = Csv::new("series,label,lambda_t,accuracy,tokens,latency_ms");
+    for (s, strat) in beam_table.strategies.iter().enumerate() {
+        let (acc, toks, lats) = beam_table.static_point(s);
+        csv.rowf(format_args!(
+            "static,({} {} {}),0,{acc},{toks},{lats}",
+            strat.n, strat.width, strat.chunk
+        ));
+    }
+    for &lt in &sweep.lambda_t {
+        let (acc, toks, lats, _) =
+            adaptive_point(&beam_table, Lambdas::new(lt, 0.0), CostSource::Model);
+        csv.rowf(format_args!("adaptive,lt={lt:e},{lt},{acc},{toks},{lats}"));
+    }
+    csv.write(out)?;
+    Ok(csv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SweepConfig;
+    use crate::figures::test_table;
+
+    #[test]
+    fn fig9_restricts_to_beam_space() {
+        let table = test_table();
+        let path = std::env::temp_dir().join(format!("ttc_fig9_{}.csv", std::process::id()));
+        let csv = fig9(&table, &SweepConfig::default(), &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let static_rows = text.lines().filter(|l| l.starts_with("static,")).count();
+        let n_beam = table
+            .strategies
+            .iter()
+            .filter(|s| s.method == Method::Beam)
+            .count();
+        assert_eq!(static_rows, n_beam);
+        assert!(!csv.is_empty());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,73 @@
+//! Fig 3: probe reliability diagram (predicted vs empirical accuracy).
+
+use crate::error::Result;
+use crate::figures::Csv;
+use crate::util::stats;
+use std::path::Path;
+
+/// Binned calibration data from (predicted prob, empirical soft label)
+/// pairs on the calibration split.
+///
+/// Emits `fig3.csv`: `bin_lo,bin_hi,mean_predicted,mean_empirical,count`
+/// plus a trailing `# ece,<value>` comment row consumed by SUMMARY.md.
+pub fn fig3(pairs: &[(f64, f64)], bins: usize, out: &Path) -> Result<(Csv, f64)> {
+    let mut csv = Csv::new("bin_lo,bin_hi,mean_predicted,mean_empirical,count");
+    let mut grouped: Vec<(Vec<f64>, Vec<f64>)> = vec![(Vec::new(), Vec::new()); bins];
+    for &(p, y) in pairs {
+        let b = ((p * bins as f64) as usize).min(bins - 1);
+        grouped[b].0.push(p);
+        grouped[b].1.push(y);
+    }
+    for (b, (ps, ys)) in grouped.iter().enumerate() {
+        if ps.is_empty() {
+            continue;
+        }
+        csv.rowf(format_args!(
+            "{},{},{},{},{}",
+            b as f64 / bins as f64,
+            (b + 1) as f64 / bins as f64,
+            stats::mean(ps),
+            stats::mean(ys),
+            ps.len()
+        ));
+    }
+    let ece = stats::ece(pairs, bins);
+    csv.rowf(format_args!("# ece,{ece}"));
+    csv.write(out)?;
+    Ok((csv, ece))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn well_calibrated_bins_lie_on_diagonal() {
+        let pairs: Vec<(f64, f64)> = (0..1000)
+            .map(|i| {
+                let p = i as f64 / 1000.0;
+                (p, p) // perfect calibration
+            })
+            .collect();
+        let path = std::env::temp_dir().join(format!("ttc_fig3_{}.csv", std::process::id()));
+        let (_, ece) = fig3(&pairs, 10, &path).unwrap();
+        assert!(ece < 0.03, "ece {ece}");
+        let text = std::fs::read_to_string(&path).unwrap();
+        for line in text.lines().skip(1).filter(|l| !l.starts_with('#')) {
+            let cols: Vec<f64> = line.split(',').map(|c| c.parse().unwrap()).collect();
+            assert!((cols[2] - cols[3]).abs() < 0.06, "{line}");
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn miscalibrated_has_high_ece() {
+        let pairs: Vec<(f64, f64)> = (0..1000)
+            .map(|i| (i as f64 / 1000.0, 0.2))
+            .collect();
+        let path = std::env::temp_dir().join(format!("ttc_fig3b_{}.csv", std::process::id()));
+        let (_, ece) = fig3(&pairs, 10, &path).unwrap();
+        assert!(ece > 0.15, "ece {ece}");
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,63 @@
+//! Fig 4: per-method cost profile (tokens, latency, accuracy by method —
+//! "beam search is the most accurate AND drastically more expensive").
+
+use crate::error::Result;
+use crate::figures::{indices_by_method, Csv, EvalTable};
+use crate::strategies::Method;
+use crate::util::stats;
+use std::path::Path;
+
+/// Emits `fig4.csv`:
+/// `group,accuracy,tokens,latency_ms` — one row per strategy plus one
+/// aggregated row per method family.
+pub fn fig4(table: &EvalTable, out: &Path) -> Result<Csv> {
+    let mut csv = Csv::new("group,accuracy,tokens,latency_ms");
+    for (s, strat) in table.strategies.iter().enumerate() {
+        let (acc, toks, lats) = table.static_point(s);
+        csv.rowf(format_args!("{},{acc},{toks},{lats}", strat.id()));
+    }
+    let by_method = indices_by_method(&table.strategies);
+    let mut methods: Vec<Method> = by_method.keys().copied().collect();
+    methods.sort_by_key(|m| m.one_hot_index());
+    for m in methods {
+        let idxs = &by_method[&m];
+        let points: Vec<(f64, f64, f64)> =
+            idxs.iter().map(|&s| table.static_point(s)).collect();
+        let acc = stats::mean(&points.iter().map(|p| p.0).collect::<Vec<_>>());
+        let toks = stats::mean(&points.iter().map(|p| p.1).collect::<Vec<_>>());
+        let lats = stats::mean(&points.iter().map(|p| p.2).collect::<Vec<_>>());
+        csv.rowf(format_args!("method:{},{acc},{toks},{lats}", m.name()));
+    }
+    csv.write(out)?;
+    Ok(csv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::test_table;
+
+    #[test]
+    fn beam_is_most_expensive_in_synthetic_table() {
+        let table = test_table();
+        let path = std::env::temp_dir().join(format!("ttc_fig4_{}.csv", std::process::id()));
+        fig4(&table, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let get = |name: &str| -> (f64, f64, f64) {
+            let line = text
+                .lines()
+                .find(|l| l.starts_with(&format!("method:{name},")))
+                .unwrap();
+            let cols: Vec<&str> = line.split(',').collect();
+            (
+                cols[1].parse().unwrap(),
+                cols[2].parse().unwrap(),
+                cols[3].parse().unwrap(),
+            )
+        };
+        let beam = get("beam");
+        let mv = get("majority_vote");
+        assert!(beam.2 > mv.2, "beam latency must dominate");
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,350 @@
+//! Figure regeneration: every figure in the paper, recomputed offline
+//! from the evaluation matrix + probe predictions.
+//!
+//! | id | paper figure | emitter |
+//! |---|---|---|
+//! | 1a | accuracy–token tradeoff, λ_L fixed, λ_T swept | [`sweeps::fig1`] |
+//! | 1b | accuracy–latency tradeoff, λ_T fixed, λ_L swept | [`sweeps::fig1`] |
+//! | 2  | method / N selection proportions vs λ | [`sweeps::fig2`] |
+//! | 3  | probe calibration (binned reliability) | [`calibration::fig3`] |
+//! | 4  | per-method cost profile | [`methods::fig4`] |
+//! | 5/6| Figs 1a/1b with compact ("BERT") embeddings | [`sweeps::fig1`] |
+//! | 7/8| predicted vs ground-truth costs | [`sweeps::fig78`] |
+//! | 9  | beam-only adaptive hyperparameter selection | [`beam::fig9`] |
+//!
+//! All emitters consume an [`EvalTable`] — dense `[query × strategy]`
+//! grids of empirical accuracy/tokens/latency (from the test matrix) and
+//! probe predictions — so a full λ sweep costs microseconds per point.
+
+pub mod beam;
+pub mod calibration;
+pub mod methods;
+pub mod sweeps;
+
+use crate::costmodel::{CostEstimate, CostModel};
+use crate::data::Query;
+use crate::error::{Error, Result};
+use crate::matrix::Matrix;
+use crate::strategies::Strategy;
+use crate::util::stats;
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Dense per-(query, strategy) evaluation grids.
+pub struct EvalTable {
+    pub queries: Vec<Query>,
+    pub strategies: Vec<Strategy>,
+    /// Empirical soft accuracy `[q][s]`.
+    pub acc: Vec<Vec<f64>>,
+    /// Mean generated tokens `[q][s]` (oracle token cost).
+    pub tokens: Vec<Vec<f64>>,
+    /// Mean latency ms `[q][s]` (oracle latency cost).
+    pub latency: Vec<Vec<f64>>,
+    /// Probe predictions `â_s(x)` `[q][s]`.
+    pub probs: Vec<Vec<f64>>,
+    /// Per-strategy mean cost estimates (the deployable cost model).
+    pub cost_estimates: Vec<CostEstimate>,
+}
+
+impl EvalTable {
+    /// Assemble from a test matrix, probe predictions and the cost model.
+    ///
+    /// `probs` must be indexed `[q][s]` against the given query/strategy
+    /// orders (see `server::commands::build_eval_table`).
+    pub fn new(
+        queries: Vec<Query>,
+        strategies: Vec<Strategy>,
+        matrix: &Matrix,
+        probs: Vec<Vec<f64>>,
+        costs: &CostModel,
+    ) -> Result<EvalTable> {
+        let cells = matrix.cells();
+        let mut acc = Vec::with_capacity(queries.len());
+        let mut tokens = Vec::with_capacity(queries.len());
+        let mut latency = Vec::with_capacity(queries.len());
+        for q in &queries {
+            let mut arow = Vec::with_capacity(strategies.len());
+            let mut trow = Vec::with_capacity(strategies.len());
+            let mut lrow = Vec::with_capacity(strategies.len());
+            for s in &strategies {
+                let cell = cells
+                    .get(&(q.id.clone(), s.id()))
+                    .ok_or_else(|| {
+                        Error::internal(format!(
+                            "matrix has no cell for ({}, {}) — incomplete collection?",
+                            q.id,
+                            s.id()
+                        ))
+                    })?;
+                arow.push(cell.acc);
+                trow.push(cell.tokens);
+                lrow.push(cell.latency_ms);
+            }
+            acc.push(arow);
+            tokens.push(trow);
+            latency.push(lrow);
+        }
+        let cost_estimates = strategies
+            .iter()
+            .map(|s| costs.get(&s.id()))
+            .collect::<Result<_>>()?;
+        Ok(EvalTable {
+            queries,
+            strategies,
+            acc,
+            tokens,
+            latency,
+            probs,
+            cost_estimates,
+        })
+    }
+
+    pub fn n_queries(&self) -> usize {
+        self.queries.len()
+    }
+
+    /// Mean (accuracy, tokens, latency) of always running strategy `s`.
+    pub fn static_point(&self, s: usize) -> (f64, f64, f64) {
+        let accs: Vec<f64> = self.acc.iter().map(|r| r[s]).collect();
+        let toks: Vec<f64> = self.tokens.iter().map(|r| r[s]).collect();
+        let lats: Vec<f64> = self.latency.iter().map(|r| r[s]).collect();
+        (stats::mean(&accs), stats::mean(&toks), stats::mean(&lats))
+    }
+
+    /// Restrict to a strategy subset (e.g. beam-only for Fig 9).
+    pub fn restrict(&self, keep: &[usize]) -> EvalTable {
+        EvalTable {
+            queries: self.queries.clone(),
+            strategies: keep.iter().map(|&i| self.strategies[i].clone()).collect(),
+            acc: self
+                .acc
+                .iter()
+                .map(|r| keep.iter().map(|&i| r[i]).collect())
+                .collect(),
+            tokens: self
+                .tokens
+                .iter()
+                .map(|r| keep.iter().map(|&i| r[i]).collect())
+                .collect(),
+            latency: self
+                .latency
+                .iter()
+                .map(|r| keep.iter().map(|&i| r[i]).collect())
+                .collect(),
+            probs: self
+                .probs
+                .iter()
+                .map(|r| keep.iter().map(|&i| r[i]).collect())
+                .collect(),
+            cost_estimates: keep.iter().map(|&i| self.cost_estimates[i]).collect(),
+        }
+    }
+}
+
+/// Which cost table the router consults (Figs 7/8 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CostSource {
+    /// Deployable: per-strategy train-split means.
+    Model,
+    /// Oracle: true per-(query, strategy) test costs.
+    Oracle,
+}
+
+/// Run the adaptive policy over the table at one λ point.
+/// Returns (mean acc, mean tokens, mean latency, selected strategy idx per query).
+pub fn adaptive_point(
+    table: &EvalTable,
+    lambdas: crate::router::Lambdas,
+    source: CostSource,
+) -> (f64, f64, f64, Vec<usize>) {
+    let mut accs = Vec::with_capacity(table.n_queries());
+    let mut toks = Vec::with_capacity(table.n_queries());
+    let mut lats = Vec::with_capacity(table.n_queries());
+    let mut picks = Vec::with_capacity(table.n_queries());
+    for q in 0..table.n_queries() {
+        let costs: Vec<CostEstimate> = match source {
+            CostSource::Model => table.cost_estimates.clone(),
+            CostSource::Oracle => (0..table.strategies.len())
+                .map(|s| CostEstimate {
+                    tokens: table.tokens[q][s],
+                    latency_ms: table.latency[q][s],
+                })
+                .collect(),
+        };
+        let s = crate::router::select_offline(&table.probs[q], &costs, lambdas);
+        picks.push(s);
+        accs.push(table.acc[q][s]);
+        toks.push(table.tokens[q][s]);
+        lats.push(table.latency[q][s]);
+    }
+    (
+        stats::mean(&accs),
+        stats::mean(&toks),
+        stats::mean(&lats),
+        picks,
+    )
+}
+
+/// Minimal CSV writer (one file per figure panel).
+pub struct Csv {
+    lines: Vec<String>,
+}
+
+impl Csv {
+    pub fn new(header: &str) -> Csv {
+        Csv {
+            lines: vec![header.to_string()],
+        }
+    }
+
+    pub fn row(&mut self, fields: &[String]) {
+        self.lines.push(fields.join(","));
+    }
+
+    pub fn rowf(&mut self, fields: std::fmt::Arguments<'_>) {
+        self.lines.push(fields.to_string());
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        for line in &self.lines {
+            writeln!(f, "{line}")?;
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.lines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lines.len() <= 1
+    }
+}
+
+/// Build a synthetic EvalTable for tests (deterministic, difficulty-aware).
+#[cfg(test)]
+pub fn test_table() -> EvalTable {
+    use crate::config::SpaceConfig;
+    let strategies = Strategy::enumerate(&SpaceConfig::default());
+    let mut queries = Vec::new();
+    let mut acc = Vec::new();
+    let mut tokens = Vec::new();
+    let mut latency = Vec::new();
+    let mut probs = Vec::new();
+    for qi in 0..24 {
+        let k = 2 + (qi % 6);
+        queries.push(Query {
+            id: format!("t-{qi}"),
+            query: format!("Q:1+{qi}=?\n"),
+            answer: "1".into(),
+            k,
+        });
+        let hard = (k as f64 - 2.0) / 5.0; // 0..1
+        let mut ar = Vec::new();
+        let mut tr = Vec::new();
+        let mut lr = Vec::new();
+        for s in &strategies {
+            // easy queries: parallel methods fine; hard: beam better
+            let base = 0.9 - 0.6 * hard;
+            let n_bonus = 0.05 * (s.n as f64).log2();
+            let beam_bonus = if s.method == crate::strategies::Method::Beam {
+                0.25 * hard
+            } else {
+                0.0
+            };
+            let a = (base + n_bonus + beam_bonus).clamp(0.05, 0.98);
+            let t = match s.method {
+                crate::strategies::Method::Beam => {
+                    60.0 * s.n as f64 * s.width as f64
+                }
+                _ => 60.0 * s.n as f64,
+            };
+            let l = match s.method {
+                crate::strategies::Method::Beam => 400.0 * 6.0, // sequential rounds
+                _ => 150.0 + 10.0 * (s.n as f64).log2(),
+            };
+            ar.push(a);
+            tr.push(t);
+            lr.push(l);
+        }
+        // probe = truth + small bias (imperfect but informative)
+        probs.push(ar.iter().map(|a| (a * 0.9 + 0.05).clamp(0.0, 1.0)).collect());
+        acc.push(ar);
+        tokens.push(tr);
+        latency.push(lr);
+    }
+    let cost_estimates = (0..strategies.len())
+        .map(|s| CostEstimate {
+            tokens: stats::mean(&tokens.iter().map(|r| r[s]).collect::<Vec<_>>()),
+            latency_ms: stats::mean(&latency.iter().map(|r| r[s]).collect::<Vec<_>>()),
+        })
+        .collect();
+    EvalTable {
+        queries,
+        strategies,
+        acc,
+        tokens,
+        latency,
+        probs,
+        cost_estimates,
+    }
+}
+
+/// Lookup helper: strategy index groups by method (for Figs 2/4).
+pub fn indices_by_method(
+    strategies: &[Strategy],
+) -> HashMap<crate::strategies::Method, Vec<usize>> {
+    let mut map: HashMap<crate::strategies::Method, Vec<usize>> = HashMap::new();
+    for (i, s) in strategies.iter().enumerate() {
+        map.entry(s.method).or_default().push(i);
+    }
+    map
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::Lambdas;
+
+    #[test]
+    fn adaptive_beats_or_matches_static_at_zero_penalty() {
+        let table = test_table();
+        let (acc, _, _, _) = adaptive_point(&table, Lambdas::new(0.0, 0.0), CostSource::Oracle);
+        for s in 0..table.strategies.len() {
+            let (sacc, _, _) = table.static_point(s);
+            // probe is informative in the synthetic table; adaptive should
+            // not lose to any static strategy by a meaningful margin
+            assert!(
+                acc >= sacc - 0.02,
+                "adaptive {acc} < static {} ({})",
+                sacc,
+                table.strategies[s].id()
+            );
+        }
+    }
+
+    #[test]
+    fn penalty_reduces_cost() {
+        let table = test_table();
+        let (_, t0, l0, _) = adaptive_point(&table, Lambdas::new(0.0, 0.0), CostSource::Model);
+        let (_, t1, _, _) = adaptive_point(&table, Lambdas::new(1e-2, 0.0), CostSource::Model);
+        let (_, _, l2, _) = adaptive_point(&table, Lambdas::new(0.0, 1e-2), CostSource::Model);
+        assert!(t1 < t0, "token penalty must reduce tokens: {t1} vs {t0}");
+        assert!(l2 < l0, "latency penalty must reduce latency: {l2} vs {l0}");
+    }
+
+    #[test]
+    fn restrict_keeps_grid_consistent() {
+        let table = test_table();
+        let sub = table.restrict(&[0, 2, 5]);
+        assert_eq!(sub.strategies.len(), 3);
+        assert_eq!(sub.acc[0].len(), 3);
+        assert_eq!(sub.acc[3][1], table.acc[3][2]);
+        assert_eq!(sub.cost_estimates[2].tokens, table.cost_estimates[5].tokens);
+    }
+}

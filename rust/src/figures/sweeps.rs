@@ -1,0 +1,220 @@
+//! λ-sweep figures: 1a/1b (accuracy–cost frontiers), 2 (selection
+//! proportions), 5/6 (compact-embedding variants), 7/8 (predicted vs
+//! oracle costs).
+
+use crate::config::SweepConfig;
+use crate::error::Result;
+use crate::figures::{adaptive_point, indices_by_method, CostSource, Csv, EvalTable};
+use crate::router::Lambdas;
+use crate::strategies::Method;
+use std::path::Path;
+
+/// Figs 1a/1b (and 5/6 when given the compact-embedding table).
+///
+/// Emits `fig<id>.csv` with both the adaptive frontier and every static
+/// strategy point:
+/// `series,lambda_t,lambda_l,accuracy,tokens,latency_ms`
+pub fn fig1(
+    table: &EvalTable,
+    sweep: &SweepConfig,
+    panel: char, // 'a' (token sweep) or 'b' (latency sweep)
+    out: &Path,
+) -> Result<Csv> {
+    let mut csv = Csv::new("series,lambda_t,lambda_l,accuracy,tokens,latency_ms");
+    match panel {
+        'a' => {
+            for &ll in &sweep.fixed_lambda_l {
+                for &lt in &sweep.lambda_t {
+                    let (acc, toks, lats, _) =
+                        adaptive_point(table, Lambdas::new(lt, ll), CostSource::Model);
+                    csv.rowf(format_args!(
+                        "adaptive_ll{ll:e},{lt},{ll},{acc},{toks},{lats}"
+                    ));
+                }
+            }
+        }
+        'b' => {
+            for &lt in &sweep.fixed_lambda_t {
+                for &ll in &sweep.lambda_l {
+                    let (acc, toks, lats, _) =
+                        adaptive_point(table, Lambdas::new(lt, ll), CostSource::Model);
+                    csv.rowf(format_args!(
+                        "adaptive_lt{lt:e},{lt},{ll},{acc},{toks},{lats}"
+                    ));
+                }
+            }
+        }
+        other => {
+            return Err(crate::error::Error::Config(format!(
+                "fig1 panel must be 'a' or 'b', got '{other}'"
+            )))
+        }
+    }
+    for (s, strat) in table.strategies.iter().enumerate() {
+        let (acc, toks, lats) = table.static_point(s);
+        csv.rowf(format_args!("static_{},0,0,{acc},{toks},{lats}", strat.id()));
+    }
+    csv.write(out)?;
+    Ok(csv)
+}
+
+/// Fig 2: proportion of queries routed to each method (top row) and each
+/// N (bottom row) as λ_L and λ_T grow.
+///
+/// Emits `fig2.csv`:
+/// `sweep,lambda,group,proportion` where sweep ∈ {lambda_l, lambda_t}
+/// and group is a method name or `N=<n>`.
+pub fn fig2(table: &EvalTable, sweep: &SweepConfig, out: &Path) -> Result<Csv> {
+    let mut csv = Csv::new("sweep,lambda,group,proportion");
+    let by_method = indices_by_method(&table.strategies);
+    let mut methods: Vec<Method> = by_method.keys().copied().collect();
+    methods.sort_by_key(|m| m.one_hot_index());
+    let mut ns: Vec<usize> = table.strategies.iter().map(|s| s.n).collect();
+    ns.sort();
+    ns.dedup();
+
+    let mut emit = |sweep_name: &str, lambda: f64, picks: &[usize]| {
+        let n_q = picks.len() as f64;
+        for m in &methods {
+            let count = picks
+                .iter()
+                .filter(|&&s| table.strategies[s].method == *m)
+                .count();
+            csv.rowf(format_args!(
+                "{sweep_name},{lambda},{},{}",
+                m.name(),
+                count as f64 / n_q
+            ));
+        }
+        for &n in &ns {
+            let count = picks.iter().filter(|&&s| table.strategies[s].n == n).count();
+            csv.rowf(format_args!(
+                "{sweep_name},{lambda},N={n},{}",
+                count as f64 / n_q
+            ));
+        }
+    };
+
+    for &ll in &sweep.lambda_l {
+        let (_, _, _, picks) = adaptive_point(table, Lambdas::new(0.0, ll), CostSource::Model);
+        emit("lambda_l", ll, &picks);
+    }
+    for &lt in &sweep.lambda_t {
+        let (_, _, _, picks) = adaptive_point(table, Lambdas::new(lt, 0.0), CostSource::Model);
+        emit("lambda_t", lt, &picks);
+    }
+    csv.write(out)?;
+    Ok(csv)
+}
+
+/// Figs 7/8: adaptive frontier with the deployable cost model vs the
+/// per-query oracle costs.
+///
+/// Emits `fig<7|8>.csv`:
+/// `series,lambda,accuracy,tokens,latency_ms`
+pub fn fig78(
+    table: &EvalTable,
+    sweep: &SweepConfig,
+    which: u8, // 7 = token costs, 8 = latency costs
+    out: &Path,
+) -> Result<Csv> {
+    let mut csv = Csv::new("series,lambda,accuracy,tokens,latency_ms");
+    let grid = if which == 7 {
+        &sweep.lambda_t
+    } else {
+        &sweep.lambda_l
+    };
+    for &lam in grid {
+        let lambdas = if which == 7 {
+            Lambdas::new(lam, 0.0)
+        } else {
+            Lambdas::new(0.0, lam)
+        };
+        for (name, source) in [("predicted", CostSource::Model), ("oracle", CostSource::Oracle)] {
+            let (acc, toks, lats, _) = adaptive_point(table, lambdas, source);
+            csv.rowf(format_args!("{name},{lam},{acc},{toks},{lats}"));
+        }
+    }
+    csv.write(out)?;
+    Ok(csv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SweepConfig;
+    use crate::figures::test_table;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("ttc_fig_{}_{name}.csv", std::process::id()))
+    }
+
+    #[test]
+    fn fig1a_has_adaptive_and_static_series() {
+        let table = test_table();
+        let sweep = SweepConfig::default();
+        let path = tmp("1a");
+        let csv = fig1(&table, &sweep, 'a', &path).unwrap();
+        let expected =
+            sweep.fixed_lambda_l.len() * sweep.lambda_t.len() + table.strategies.len() + 1;
+        assert_eq!(csv.len(), expected);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn fig1_rejects_bad_panel() {
+        let table = test_table();
+        assert!(fig1(&table, &SweepConfig::default(), 'x', &tmp("bad")).is_err());
+    }
+
+    #[test]
+    fn fig2_proportions_sum_to_one_per_group_type() {
+        let table = test_table();
+        let sweep = SweepConfig::default();
+        let path = tmp("2");
+        let csv = fig2(&table, &sweep, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // for the first lambda_l value, method proportions sum to 1
+        let first_lambda = sweep.lambda_l[0];
+        let method_sum: f64 = text
+            .lines()
+            .skip(1)
+            .filter(|l| l.starts_with(&format!("lambda_l,{first_lambda},")))
+            .filter(|l| !l.contains(",N="))
+            .map(|l| l.rsplit(',').next().unwrap().parse::<f64>().unwrap())
+            .sum();
+        assert!((method_sum - 1.0).abs() < 1e-9, "sum {method_sum}");
+        assert!(!csv.is_empty());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn fig2_shifts_to_cheap_methods_at_high_lambda() {
+        let table = test_table();
+        let sweep = SweepConfig::default();
+        // at the largest λ_T, beam share must not exceed its share at 0
+        let (_, _, _, picks0) =
+            adaptive_point(&table, Lambdas::new(0.0, 0.0), CostSource::Model);
+        let big = *sweep.lambda_t.last().unwrap();
+        let (_, _, _, picks1) =
+            adaptive_point(&table, Lambdas::new(big, 0.0), CostSource::Model);
+        let beam_share = |picks: &[usize]| {
+            picks
+                .iter()
+                .filter(|&&s| table.strategies[s].method == Method::Beam)
+                .count()
+        };
+        assert!(beam_share(&picks1) <= beam_share(&picks0));
+    }
+
+    #[test]
+    fn fig78_series_close_when_probe_is_shared() {
+        let table = test_table();
+        let sweep = SweepConfig::default();
+        let path = tmp("7");
+        fig78(&table, &sweep, 7, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().count() > sweep.lambda_t.len());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

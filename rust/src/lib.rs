@@ -1,0 +1,66 @@
+//! # ttc-router — Latency and Token-Aware Test-Time Compute
+//!
+//! Reproduction of *"Latency and Token-Aware Test-Time Compute"* (Huang,
+//! Damani, El-Kurdi, Astudillo, Sun; 2025) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the serving coordinator: a utility-maximizing
+//!   router that selects, per query, an inference-scaling strategy
+//!   (majority voting, best-of-N, beam search) and its hyperparameters,
+//!   trading accuracy against *both* token cost and wall-clock latency;
+//!   plus the continuous-batching engine, KV-cache manager, PRM scoring
+//!   client, probe trainer and the full experiment harness.
+//! * **L2 (python/compile, build time)** — the transformer generator, the
+//!   process-reward model, query embedders and the probe MLP, written in
+//!   JAX and AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels, build time)** — Pallas kernels for the
+//!   compute hot-spots (tiled causal attention, fused MLP, layernorm).
+//!
+//! Python never runs on the request path: `make artifacts` trains the
+//! models and lowers every entry point; the rust binary then loads the
+//! HLO artifacts through PJRT (`runtime`) and serves requests.
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | hand-rolled substrates: JSON, RNG, clocks, logging |
+//! | [`tokenizer`] | char-level tokenizer shared with the python side |
+//! | [`taskgen`] | synthetic modular-arithmetic CoT task generator |
+//! | [`data`] | JSONL dataset IO and splits |
+//! | [`runtime`] | PJRT executable loading, weights, literal helpers |
+//! | [`engine`] | engine thread, continuous batcher, KV cache, sampler |
+//! | [`strategies`] | majority voting, best-of-N, beam search |
+//! | [`prm`] | process-reward-model scoring client |
+//! | [`probe`] | accuracy probe: features, training, Platt calibration |
+//! | [`costmodel`] | per-strategy token/latency cost estimators |
+//! | [`router`] | the paper's utility `U_s(x)` and strategy selection |
+//! | [`matrix`] | evaluation-matrix collection and caching |
+//! | [`figures`] | regeneration of every figure in the paper |
+//! | [`server`] | serving driver and load generator |
+//! | [`eval`] | answer extraction, exact match, vote aggregation |
+//! | [`metrics`] | counters and latency histograms |
+//! | [`testkit`] | miniature property-testing framework |
+
+pub mod cli;
+pub mod config;
+pub mod costmodel;
+pub mod data;
+pub mod engine;
+pub mod error;
+pub mod eval;
+pub mod figures;
+pub mod matrix;
+pub mod metrics;
+pub mod prm;
+pub mod probe;
+pub mod router;
+pub mod runtime;
+pub mod server;
+pub mod strategies;
+pub mod taskgen;
+pub mod testkit;
+pub mod tokenizer;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,102 @@
+//! `ttc` — leader binary for the latency- and token-aware test-time
+//! compute router.
+//!
+//! Subcommands:
+//!
+//! | command | purpose |
+//! |---|---|
+//! | `taskgen` | emit synthetic corpora + vocab (consumed by `make artifacts`) |
+//! | `collect` | build the evaluation matrix (query × strategy × repeat) |
+//! | `train-probe` | train + Platt-calibrate the accuracy probe (AOT'd Adam) |
+//! | `figures` | regenerate the paper's figures from the matrix |
+//! | `serve` | run the adaptive serving driver with a load generator |
+//! | `pipeline` | collect → train-probe → figures, end to end |
+//! | `info` | print artifact/runtime diagnostics |
+
+use ttc::cli::Args;
+use ttc::error::Result;
+use ttc::log_info;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() || raw[0] == "--help" || raw[0] == "help" {
+        print_help();
+        std::process::exit(if raw.is_empty() { 2 } else { 0 });
+    }
+    if let Err(e) = dispatch(&raw) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    eprintln!(
+        "ttc — latency & token-aware test-time compute router\n\
+         \n\
+         usage: ttc <subcommand> [options]\n\
+         \n\
+         subcommands:\n\
+           taskgen      --out DIR [--seed N] [--lm-docs N] [--prm-examples N]\n\
+                        [--queries-train N] [--queries-calib N] [--queries-test N]\n\
+           collect      [--config F] [--artifacts DIR] [--results DIR] [--split S] [--sim]\n\
+           train-probe  [--config F] [--artifacts DIR] [--results DIR] [--embedding E]\n\
+           figures      [--config F] [--results DIR] [--fig ID|all]\n\
+           serve        [--config F] [--artifacts DIR] [--rate R] [--requests N]\n\
+                        [--lambda-t X] [--lambda-l X] [--strategy S] [--sim]\n\
+           pipeline     [--config F] [--artifacts DIR] [--out DIR] [--quick]\n\
+           info         [--artifacts DIR]"
+    );
+}
+
+fn dispatch(raw: &[String]) -> Result<()> {
+    match raw[0].as_str() {
+        "taskgen" => cmd_taskgen(raw),
+        "collect" => ttc::server::commands::cmd_collect(raw),
+        "train-probe" => ttc::server::commands::cmd_train_probe(raw),
+        "figures" => ttc::server::commands::cmd_figures(raw),
+        "serve" => ttc::server::commands::cmd_serve(raw),
+        "pipeline" => ttc::server::commands::cmd_pipeline(raw),
+        "info" => ttc::server::commands::cmd_info(raw),
+        other => {
+            print_help();
+            Err(ttc::Error::Config(format!("unknown subcommand '{other}'")))
+        }
+    }
+}
+
+fn cmd_taskgen(raw: &[String]) -> Result<()> {
+    let args = Args::parse(
+        raw,
+        &[
+            "out",
+            "seed",
+            "lm-docs",
+            "prm-examples",
+            "queries-train",
+            "queries-calib",
+            "queries-test",
+        ],
+        &[],
+    )?;
+    let out = std::path::PathBuf::from(args.str_or("out", "artifacts/data"));
+    let defaults = ttc::taskgen::CorpusConfig::default();
+    let cfg = ttc::taskgen::CorpusConfig {
+        lm_docs: args.usize_or("lm-docs", defaults.lm_docs)?,
+        prm_examples: args.usize_or("prm-examples", defaults.prm_examples)?,
+        queries_train: args.usize_or("queries-train", defaults.queries_train)?,
+        queries_calib: args.usize_or("queries-calib", defaults.queries_calib)?,
+        queries_test: args.usize_or("queries-test", defaults.queries_test)?,
+        seed: args.u64_or("seed", defaults.seed)?,
+    };
+    let n = ttc::taskgen::emit_all(&out, &cfg)?;
+    log_info!(
+        "taskgen: wrote {n} files to {} (lm_docs={}, prm={}, queries={}/{}/{})",
+        out.display(),
+        cfg.lm_docs,
+        cfg.prm_examples,
+        cfg.queries_train,
+        cfg.queries_calib,
+        cfg.queries_test
+    );
+    Ok(())
+}

@@ -1,0 +1,274 @@
+//! The evaluation matrix: `M[query, strategy, repeat] → (correct, tokens,
+//! latency)`.
+//!
+//! One expensive collection pass per split feeds everything downstream:
+//! probe soft labels (train split), Platt calibration (calib split) and
+//! every figure sweep (test split) are *offline recomputations* over this
+//! matrix — no figure re-runs generation. Collection appends each record
+//! to the output JSONL as it lands, so an interrupted run resumes where
+//! it stopped.
+
+use crate::data::Query;
+use crate::error::Result;
+use crate::strategies::{Executor, Strategy};
+use crate::util::json::Value;
+use crate::util::stats;
+use crate::log_info;
+use std::collections::{HashMap, HashSet};
+use std::path::Path;
+
+/// One strategy run on one query.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatrixEntry {
+    pub query_id: String,
+    pub split: String,
+    pub strategy: String,
+    pub repeat: usize,
+    /// Query difficulty (CoT steps).
+    pub k: usize,
+    pub correct: bool,
+    pub tokens: usize,
+    pub latency_ms: f64,
+}
+
+impl MatrixEntry {
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("query_id", self.query_id.as_str())
+            .with("split", self.split.as_str())
+            .with("strategy", self.strategy.as_str())
+            .with("repeat", self.repeat)
+            .with("k", self.k)
+            .with("correct", self.correct)
+            .with("tokens", self.tokens)
+            .with("latency_ms", self.latency_ms)
+    }
+
+    pub fn from_json(v: &Value) -> Result<MatrixEntry> {
+        Ok(MatrixEntry {
+            query_id: v.req_str("query_id")?.to_string(),
+            split: v.req_str("split")?.to_string(),
+            strategy: v.req_str("strategy")?.to_string(),
+            repeat: v.req_usize("repeat")?,
+            k: v.req_usize("k")?,
+            correct: v.opt_bool("correct", false),
+            tokens: v.req_usize("tokens")?,
+            latency_ms: v.req_f64("latency_ms")?,
+        })
+    }
+}
+
+/// Aggregate over repeats of one (query, strategy) cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellAgg {
+    /// Empirical success probability (soft label).
+    pub acc: f64,
+    pub tokens: f64,
+    pub latency_ms: f64,
+    pub repeats: usize,
+}
+
+/// A loaded matrix with cell aggregation.
+#[derive(Debug, Default)]
+pub struct Matrix {
+    pub entries: Vec<MatrixEntry>,
+}
+
+impl Matrix {
+    pub fn load(path: &Path) -> Result<Matrix> {
+        if !path.exists() {
+            return Ok(Matrix::default());
+        }
+        let entries = crate::data::read_jsonl(path)?
+            .iter()
+            .map(MatrixEntry::from_json)
+            .collect::<Result<_>>()?;
+        Ok(Matrix { entries })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Existing (query, strategy, repeat) triples — for resume.
+    pub fn existing_keys(&self) -> HashSet<(String, String, usize)> {
+        self.entries
+            .iter()
+            .map(|e| (e.query_id.clone(), e.strategy.clone(), e.repeat))
+            .collect()
+    }
+
+    /// Aggregate to (query_id, strategy) cells.
+    pub fn cells(&self) -> HashMap<(String, String), CellAgg> {
+        let mut groups: HashMap<(String, String), Vec<&MatrixEntry>> = HashMap::new();
+        for e in &self.entries {
+            groups
+                .entry((e.query_id.clone(), e.strategy.clone()))
+                .or_default()
+                .push(e);
+        }
+        groups
+            .into_iter()
+            .map(|(key, es)| {
+                let accs: Vec<f64> = es.iter().map(|e| e.correct as u8 as f64).collect();
+                let toks: Vec<f64> = es.iter().map(|e| e.tokens as f64).collect();
+                let lats: Vec<f64> = es.iter().map(|e| e.latency_ms).collect();
+                (
+                    key,
+                    CellAgg {
+                        acc: stats::mean(&accs),
+                        tokens: stats::mean(&toks),
+                        latency_ms: stats::mean(&lats),
+                        repeats: es.len(),
+                    },
+                )
+            })
+            .collect()
+    }
+
+    /// All strategy ids present, sorted.
+    pub fn strategy_ids(&self) -> Vec<String> {
+        let mut ids: Vec<String> = self
+            .entries
+            .iter()
+            .map(|e| e.strategy.clone())
+            .collect::<HashSet<_>>()
+            .into_iter()
+            .collect();
+        ids.sort();
+        ids
+    }
+}
+
+/// Collect (or resume) the matrix for one split, appending to `out`.
+pub fn collect(
+    executor: &Executor,
+    queries: &[Query],
+    split: &str,
+    strategies: &[Strategy],
+    repeats: usize,
+    out: &Path,
+) -> Result<Matrix> {
+    let mut matrix = Matrix::load(out)?;
+    let done = matrix.existing_keys();
+    let total = queries.len() * strategies.len() * repeats;
+    let mut completed = matrix.entries.len();
+    log_info!(
+        "collect[{split}]: {} queries × {} strategies × {repeats} repeats = {total} runs \
+         ({completed} already done)",
+        queries.len(),
+        strategies.len()
+    );
+
+    // Warmup: run every strategy once on a throwaway query so lazy
+    // executable compilation (seconds per module) never pollutes the
+    // latency measurements of real cells.
+    if completed < total {
+        if let Some(q) = queries.first() {
+            log_info!("collect[{split}]: warmup over {} strategies", strategies.len());
+            for strategy in strategies {
+                let _ = executor.run(strategy, &q.query)?;
+            }
+        }
+    }
+    let t0 = std::time::Instant::now();
+
+    // Interleave strategies per query so partial runs cover the whole
+    // space (better for early probe experiments on interrupted data).
+    for repeat in 0..repeats {
+        for query in queries {
+            for strategy in strategies {
+                let key = (query.id.clone(), strategy.id(), repeat);
+                if done.contains(&key) {
+                    continue;
+                }
+                let outcome = executor.run(strategy, &query.query)?;
+                let entry = MatrixEntry {
+                    query_id: query.id.clone(),
+                    split: split.to_string(),
+                    strategy: strategy.id(),
+                    repeat,
+                    k: query.k,
+                    correct: outcome.is_correct(&query.answer),
+                    tokens: outcome.tokens,
+                    latency_ms: outcome.latency_ms,
+                };
+                crate::data::append_jsonl(out, &[entry.to_json()])?;
+                matrix.entries.push(entry);
+                completed += 1;
+                if completed % 100 == 0 {
+                    let rate = completed as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+                    log_info!(
+                        "collect[{split}]: {completed}/{total} runs ({rate:.1}/s, \
+                         eta {:.0}s)",
+                        (total - completed) as f64 / rate.max(1e-9)
+                    );
+                }
+            }
+        }
+    }
+    Ok(matrix)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(q: &str, s: &str, rep: usize, correct: bool, tokens: usize) -> MatrixEntry {
+        MatrixEntry {
+            query_id: q.into(),
+            split: "test".into(),
+            strategy: s.into(),
+            repeat: rep,
+            k: 3,
+            correct,
+            tokens,
+            latency_ms: tokens as f64 * 2.0,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let e = entry("q1", "mv@4", 0, true, 120);
+        assert_eq!(MatrixEntry::from_json(&e.to_json()).unwrap(), e);
+    }
+
+    #[test]
+    fn cells_aggregate_repeats() {
+        let m = Matrix {
+            entries: vec![
+                entry("q1", "mv@4", 0, true, 100),
+                entry("q1", "mv@4", 1, false, 140),
+                entry("q1", "mv@4", 2, true, 120),
+                entry("q2", "mv@4", 0, false, 80),
+            ],
+        };
+        let cells = m.cells();
+        let c = cells[&("q1".to_string(), "mv@4".to_string())];
+        assert!((c.acc - 2.0 / 3.0).abs() < 1e-12);
+        assert!((c.tokens - 120.0).abs() < 1e-12);
+        assert_eq!(c.repeats, 3);
+        assert_eq!(cells[&("q2".to_string(), "mv@4".to_string())].repeats, 1);
+    }
+
+    #[test]
+    fn load_save_resume_keys() {
+        let path = std::env::temp_dir().join(format!("ttc_matrix_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let e = entry("q1", "mv@4", 0, true, 100);
+        crate::data::append_jsonl(&path, &[e.to_json()]).unwrap();
+        let m = Matrix::load(&path).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        assert!(m
+            .existing_keys()
+            .contains(&("q1".to_string(), "mv@4".to_string(), 0)));
+        assert_eq!(m.strategy_ids(), vec!["mv@4".to_string()]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn missing_file_is_empty_matrix() {
+        let m = Matrix::load(Path::new("/nonexistent/matrix.jsonl")).unwrap();
+        assert!(m.is_empty());
+    }
+}

@@ -1,0 +1,197 @@
+//! Counters and latency histograms for the serving path.
+
+use crate::util::json::Value;
+use crate::util::stats;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Monotone counter, safe to share across threads.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn inc(&self) {
+        self.add(1)
+    }
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency histogram: keeps raw samples (bounded) for exact percentiles.
+/// At the scale of this testbed (≤ 10⁵ requests) raw retention is cheaper
+/// and more precise than bucketing.
+#[derive(Debug)]
+pub struct Histogram {
+    samples: Mutex<Vec<f64>>,
+    cap: usize,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            samples: Mutex::new(Vec::new()),
+            cap: 1 << 20,
+        }
+    }
+
+    pub fn record(&self, v: f64) {
+        let mut s = self.samples.lock().unwrap();
+        if s.len() < self.cap {
+            s.push(v);
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.lock().unwrap().len()
+    }
+
+    pub fn summary(&self) -> HistSummary {
+        let s = self.samples.lock().unwrap();
+        HistSummary {
+            count: s.len(),
+            mean: stats::mean(&s),
+            p50: stats::percentile(&s, 50.0),
+            p95: stats::percentile(&s, 95.0),
+            p99: stats::percentile(&s, 99.0),
+            max: s.iter().cloned().fold(0.0, f64::max),
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Summary statistics of a histogram.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSummary {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl HistSummary {
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("count", self.count)
+            .with("mean", self.mean)
+            .with("p50", self.p50)
+            .with("p95", self.p95)
+            .with("p99", self.p99)
+            .with("max", self.max)
+    }
+}
+
+/// Engine-level metrics bundle shared across coordinator threads.
+#[derive(Debug, Default)]
+pub struct EngineMetrics {
+    /// Total decode steps executed (batched calls).
+    pub decode_calls: Counter,
+    /// Total sequence-steps (sum of batch sizes over decode calls).
+    pub decode_rows: Counter,
+    /// Padded-but-unused rows (batching waste).
+    pub padded_rows: Counter,
+    /// Prefill calls.
+    pub prefill_calls: Counter,
+    /// PRM scoring calls.
+    pub prm_calls: Counter,
+    /// Tokens generated (actual, not padded).
+    pub tokens_generated: Counter,
+    /// Wall-time per batched decode call (ms).
+    pub decode_latency: Histogram,
+    /// End-to-end per-request latency (ms).
+    pub request_latency: Histogram,
+}
+
+impl EngineMetrics {
+    pub fn new() -> EngineMetrics {
+        EngineMetrics::default()
+    }
+
+    /// Fraction of batch rows that were padding.
+    pub fn padding_waste(&self) -> f64 {
+        let rows = self.decode_rows.get();
+        let padded = self.padded_rows.get();
+        if rows + padded == 0 {
+            0.0
+        } else {
+            padded as f64 / (rows + padded) as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("decode_calls", self.decode_calls.get())
+            .with("decode_rows", self.decode_rows.get())
+            .with("padded_rows", self.padded_rows.get())
+            .with("padding_waste", self.padding_waste())
+            .with("prefill_calls", self.prefill_calls.get())
+            .with("prm_calls", self.prm_calls.get())
+            .with("tokens_generated", self.tokens_generated.get())
+            .with("decode_latency_ms", self.decode_latency.summary().to_json())
+            .with(
+                "request_latency_ms",
+                self.request_latency.summary().to_json(),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_concurrent() {
+        let c = std::sync::Arc::new(Counter::new());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 8000);
+    }
+
+    #[test]
+    fn histogram_summary() {
+        let h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert!((s.p50 - 50.5).abs() < 1.0);
+        assert!(s.p99 >= 98.0);
+        assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn padding_waste() {
+        let m = EngineMetrics::new();
+        m.decode_rows.add(75);
+        m.padded_rows.add(25);
+        assert!((m.padding_waste() - 0.25).abs() < 1e-12);
+    }
+}

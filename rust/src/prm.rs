@@ -1,0 +1,62 @@
+//! Process-reward-model scoring client.
+//!
+//! Thin convenience layer over the engine's batched `prm_score` entry
+//! point: builds `query + partial-solution` prefixes, enforces the PRM
+//! length bucket, and memoizes scores within a request (beam search
+//! re-scores surviving beams every round; identical prefixes hit the
+//! cache instead of the engine).
+
+use crate::engine::EngineHandle;
+use crate::error::Result;
+use crate::tokenizer::Tokenizer;
+use std::collections::HashMap;
+
+/// Request-scoped PRM scorer with memoization.
+pub struct PrmClient<'a> {
+    engine: &'a EngineHandle,
+    tokenizer: &'a Tokenizer,
+    cache: HashMap<String, f32>,
+    /// Engine calls actually issued (diagnostic).
+    pub calls: usize,
+    /// Cache hits (diagnostic).
+    pub hits: usize,
+}
+
+impl<'a> PrmClient<'a> {
+    pub fn new(engine: &'a EngineHandle, tokenizer: &'a Tokenizer) -> PrmClient<'a> {
+        PrmClient {
+            engine,
+            tokenizer,
+            cache: HashMap::new(),
+            calls: 0,
+            hits: 0,
+        }
+    }
+
+    /// Score `query + text` prefixes; one score per text, cache-aware.
+    pub fn score(&mut self, query: &str, texts: &[String]) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; texts.len()];
+        let mut todo_idx = Vec::new();
+        let mut todo_tokens = Vec::new();
+        for (i, t) in texts.iter().enumerate() {
+            let full = format!("{query}{t}");
+            if let Some(&s) = self.cache.get(&full) {
+                out[i] = s;
+                self.hits += 1;
+            } else {
+                todo_tokens.push(self.tokenizer.encode(&full)?);
+                todo_idx.push(i);
+            }
+        }
+        if !todo_idx.is_empty() {
+            let scores = self.engine.prm_score(todo_tokens)?;
+            self.calls += 1;
+            for (&i, s) in todo_idx.iter().zip(scores) {
+                out[i] = s;
+                self.cache
+                    .insert(format!("{query}{}", texts[i]), s);
+            }
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,104 @@
+//! Probe feature construction.
+//!
+//! Layout (must match `python/compile/model.py::PROBE_FEATURES` =
+//! d_model + 4 + 4 + 1):
+//!
+//! ```text
+//! [ embedding (d_model)
+//! | log2(N)/4, W/4, chunk/16, beam_rounds/10        (strategy scalars)
+//! | one-hot(method) (4)                              (appendix A.1)
+//! | query_len/32 ]                                   (query metadata)
+//! ```
+
+use crate::strategies::space::{Method, Strategy};
+
+/// Builds feature rows for (query, strategy) pairs.
+#[derive(Debug, Clone)]
+pub struct FeatureBuilder {
+    pub d_model: usize,
+    pub beam_max_rounds: usize,
+}
+
+impl FeatureBuilder {
+    pub fn new(d_model: usize, beam_max_rounds: usize) -> FeatureBuilder {
+        FeatureBuilder {
+            d_model,
+            beam_max_rounds,
+        }
+    }
+
+    /// Total feature dimension.
+    pub fn dim(&self) -> usize {
+        self.d_model + 4 + 4 + 1
+    }
+
+    /// Assemble one feature row.
+    ///
+    /// `embedding` must have length `d_model`; `query_tokens` is the
+    /// tokenized query length (the paper's "problem length" feature).
+    pub fn build(&self, embedding: &[f32], strategy: &Strategy, query_tokens: usize) -> Vec<f32> {
+        assert_eq!(embedding.len(), self.d_model, "embedding dim mismatch");
+        let mut f = Vec::with_capacity(self.dim());
+        f.extend_from_slice(embedding);
+        // strategy scalars (normalized to O(1) ranges)
+        f.push((strategy.n as f32).log2() / 4.0);
+        f.push(strategy.width as f32 / 4.0);
+        f.push(strategy.chunk as f32 / 16.0);
+        f.push(if strategy.method == Method::Beam {
+            self.beam_max_rounds as f32 / 10.0
+        } else {
+            0.0
+        });
+        // method one-hot
+        let mut onehot = [0f32; 4];
+        onehot[strategy.method.one_hot_index()] = 1.0;
+        f.extend_from_slice(&onehot);
+        // query metadata
+        f.push(query_tokens as f32 / 32.0);
+        debug_assert_eq!(f.len(), self.dim());
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_and_onehot() {
+        let fb = FeatureBuilder::new(96, 10);
+        assert_eq!(fb.dim(), 105);
+        let emb = vec![0.5f32; 96];
+        let f = fb.build(&emb, &Strategy::beam(4, 2, 12), 14);
+        assert_eq!(f.len(), 105);
+        // one-hot block at [96+4 .. 96+8): beam = index 3
+        assert_eq!(&f[100..104], &[0.0, 0.0, 0.0, 1.0]);
+        // scalars present
+        assert!((f[96] - 0.5).abs() < 1e-6); // log2(4)/4
+        assert!((f[97] - 0.5).abs() < 1e-6); // 2/4
+        let f2 = fb.build(&emb, &Strategy::mv(8), 14);
+        assert_eq!(&f2[100..104], &[1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(f2[99], 0.0); // no beam rounds for MV
+    }
+
+    #[test]
+    fn distinct_strategies_distinct_features() {
+        let fb = FeatureBuilder::new(8, 10);
+        let emb = vec![0.1f32; 8];
+        let space = crate::config::SpaceConfig::default();
+        let all = Strategy::enumerate(&space);
+        let rows: Vec<Vec<f32>> = all.iter().map(|s| fb.build(&emb, s, 12)).collect();
+        for i in 0..rows.len() {
+            for j in i + 1..rows.len() {
+                assert_ne!(rows[i], rows[j], "{} vs {}", all[i].id(), all[j].id());
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "embedding dim mismatch")]
+    fn wrong_embedding_dim_panics() {
+        let fb = FeatureBuilder::new(96, 10);
+        fb.build(&[0.0; 4], &Strategy::mv(1), 5);
+    }
+}

@@ -1,0 +1,15 @@
+//! The accuracy probe `â_s(x)` (paper §2.4 + appendix A.1).
+//!
+//! A two-hidden-layer GELU MLP over `[query embedding ⊕ strategy
+//! features]`, trained with BCE against *soft labels* (empirical success
+//! rates from repeated strategy runs) and Platt-calibrated on a held-out
+//! split. The MLP forward and Adam train-step are AOT'd HLO executed by
+//! the engine — python never sees the collected labels.
+
+pub mod features;
+pub mod platt;
+pub mod train;
+
+pub use features::FeatureBuilder;
+pub use platt::Platt;
+pub use train::{train_probe, CalibratedProbe, ProbeCheckpoint};

@@ -1,0 +1,191 @@
+//! Platt scaling: `p = σ(A·z + B)` fitted on a held-out calibration set
+//! (paper appendix A.1, "Calibration").
+//!
+//! Two-parameter logistic regression on the probe's raw logits against
+//! soft labels, fitted by Newton–Raphson on the BCE objective. Closed-
+//! form Hessian (2×2), a dozen iterations, no dependencies.
+
+use crate::util::stats::{bce, sigmoid};
+
+/// Fitted Platt parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Platt {
+    pub a: f64,
+    pub b: f64,
+}
+
+impl Default for Platt {
+    fn default() -> Self {
+        Platt { a: 1.0, b: 0.0 }
+    }
+}
+
+impl Platt {
+    /// Calibrated probability for a raw probe logit.
+    pub fn prob(&self, z: f64) -> f64 {
+        sigmoid(self.a * z + self.b)
+    }
+
+    /// Mean BCE of this calibration on (logit, soft label) pairs.
+    pub fn loss(&self, pairs: &[(f64, f64)]) -> f64 {
+        if pairs.is_empty() {
+            return 0.0;
+        }
+        pairs
+            .iter()
+            .map(|&(z, y)| bce(y, self.prob(z)))
+            .sum::<f64>()
+            / pairs.len() as f64
+    }
+
+    /// Fit on (logit, soft label) pairs by damped Newton–Raphson with a
+    /// backtracking line search (full Newton steps can overshoot on tiny
+    /// calibration splits even though the objective is convex).
+    pub fn fit(pairs: &[(f64, f64)]) -> Platt {
+        let mut a = 1.0f64;
+        let mut b = 0.0f64;
+        if pairs.len() < 4 {
+            return Platt { a, b };
+        }
+        let n = pairs.len() as f64;
+        let mut loss = Platt { a, b }.loss(pairs);
+        for _ in 0..40 {
+            // gradient and Hessian of mean BCE wrt (a, b)
+            let mut ga = 0.0;
+            let mut gb = 0.0;
+            let mut haa = 0.0;
+            let mut hab = 0.0;
+            let mut hbb = 0.0;
+            for &(z, y) in pairs {
+                let p = sigmoid(a * z + b);
+                let r = p - y;
+                let w = (p * (1.0 - p)).max(1e-9);
+                ga += r * z;
+                gb += r;
+                haa += w * z * z;
+                hab += w * z;
+                hbb += w;
+            }
+            ga /= n;
+            gb /= n;
+            haa /= n;
+            hab /= n;
+            hbb /= n;
+            // ridge for stability
+            haa += 1e-6;
+            hbb += 1e-6;
+            let det = haa * hbb - hab * hab;
+            if det.abs() < 1e-12 {
+                break;
+            }
+            let da = (gb * hab - ga * hbb) / det;
+            let db = (ga * hab - gb * haa) / det;
+            // backtracking line search on the Newton direction
+            let mut t = 1.0f64;
+            let mut accepted = false;
+            for _ in 0..25 {
+                let cand = Platt {
+                    a: a + t * da,
+                    b: b + t * db,
+                };
+                let cand_loss = cand.loss(pairs);
+                if cand_loss <= loss {
+                    a = cand.a;
+                    b = cand.b;
+                    loss = cand_loss;
+                    accepted = true;
+                    break;
+                }
+                t *= 0.5;
+            }
+            if !accepted || (t * da).abs() < 1e-9 && (t * db).abs() < 1e-9 {
+                break;
+            }
+        }
+        // safeguard: never return a fit worse than identity on this data
+        let fitted = Platt { a, b };
+        if fitted.loss(pairs) <= Platt::default().loss(pairs) {
+            fitted
+        } else {
+            Platt::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, prop_assert};
+    use crate::util::rng::Rng;
+
+    fn synth_pairs(rng: &mut Rng, a: f64, b: f64, n: usize) -> Vec<(f64, f64)> {
+        (0..n)
+            .map(|_| {
+                let z = rng.normal() * 2.0;
+                let p = sigmoid(a * z + b);
+                // soft label = noisy estimate of p (like 3-repeat averages)
+                let y = (0..3).map(|_| (rng.f64() < p) as u8 as f64).sum::<f64>() / 3.0;
+                (z, y)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn recovers_scaling() {
+        let mut rng = Rng::new(42, 0);
+        let pairs = synth_pairs(&mut rng, 0.5, -0.8, 4000);
+        let platt = Platt::fit(&pairs);
+        assert!((platt.a - 0.5).abs() < 0.12, "a = {}", platt.a);
+        assert!((platt.b + 0.8).abs() < 0.12, "b = {}", platt.b);
+    }
+
+    #[test]
+    fn identity_when_already_calibrated() {
+        let mut rng = Rng::new(7, 0);
+        let pairs = synth_pairs(&mut rng, 1.0, 0.0, 4000);
+        let platt = Platt::fit(&pairs);
+        assert!((platt.a - 1.0).abs() < 0.15, "a = {}", platt.a);
+        assert!(platt.b.abs() < 0.1, "b = {}", platt.b);
+    }
+
+    #[test]
+    fn fit_never_worse_than_identity() {
+        forall(
+            "platt fit improves BCE",
+            40,
+            |rng| {
+                let a = 0.25 + rng.f64() * 2.0;
+                let b = rng.normal();
+                synth_pairs(rng, a, b, 800)
+            },
+            |pairs| {
+                let fitted = Platt::fit(pairs);
+                let identity = Platt::default();
+                prop_assert(
+                    fitted.loss(pairs) <= identity.loss(pairs) + 1e-6,
+                    format!(
+                        "fitted {} > identity {}",
+                        fitted.loss(pairs),
+                        identity.loss(pairs)
+                    ),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn monotone_in_logit_for_positive_a() {
+        let platt = Platt { a: 0.7, b: -0.2 };
+        let mut prev = 0.0;
+        for i in -20..=20 {
+            let p = platt.prob(i as f64 * 0.5);
+            assert!(p >= prev);
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn tiny_input_returns_identity() {
+        assert_eq!(Platt::fit(&[(0.3, 1.0)]), Platt::default());
+    }
+}

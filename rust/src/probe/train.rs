@@ -1,0 +1,319 @@
+//! Probe training pipeline (paper appendix A.1), driven from rust.
+//!
+//! 1. Embed every train/calib query through the AOT'd embedder.
+//! 2. Build (features, soft label) rows from the train-split matrix —
+//!    the label is the empirical success rate of strategy `s` on query
+//!    `x` across repeats.
+//! 3. Train the MLP via the AOT'd Adam step on the engine (10%% of the
+//!    train rows held out for early stopping).
+//! 4. Platt-scale raw logits on the calib split.
+
+use crate::config::ProbeConfig;
+use crate::data::Query;
+use crate::engine::{EmbedKind, EngineHandle};
+use crate::error::{Error, Result};
+use crate::matrix::Matrix;
+use crate::probe::features::FeatureBuilder;
+use crate::probe::platt::Platt;
+use crate::strategies::Strategy;
+use crate::tokenizer::Tokenizer;
+use crate::util::json::{parse, Value};
+use crate::util::rng::Rng;
+use crate::log_info;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A trained + calibrated probe, ready for routing.
+#[derive(Debug, Clone)]
+pub struct CalibratedProbe {
+    pub platt: Platt,
+    pub embed_kind: EmbedKind,
+    /// Flat trained parameters (engine also holds them after training).
+    pub params: Vec<f32>,
+}
+
+impl CalibratedProbe {
+    /// Calibrated success probabilities for feature rows. Assumes the
+    /// engine currently holds `self.params` (call [`Self::install`] after
+    /// loading from disk).
+    pub fn predict(&self, engine: &EngineHandle, feats: Vec<Vec<f32>>) -> Result<Vec<f64>> {
+        let logits = engine.probe_fwd(feats)?;
+        Ok(logits.iter().map(|&z| self.platt.prob(z as f64)).collect())
+    }
+
+    /// Raw logits (used for calibration diagnostics).
+    pub fn logits(&self, engine: &EngineHandle, feats: Vec<Vec<f32>>) -> Result<Vec<f32>> {
+        engine.probe_fwd(feats)
+    }
+
+    /// Push the stored params into the engine.
+    pub fn install(&self, engine: &EngineHandle) -> Result<()> {
+        engine.probe_load(self.params.clone())
+    }
+}
+
+/// On-disk checkpoint: `<stem>.json` (platt + meta) + `<stem>.bin` (params).
+pub struct ProbeCheckpoint;
+
+impl ProbeCheckpoint {
+    pub fn save(probe: &CalibratedProbe, stem: &Path) -> Result<()> {
+        if let Some(parent) = stem.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let meta = Value::obj()
+            .with("platt_a", probe.platt.a)
+            .with("platt_b", probe.platt.b)
+            .with(
+                "embed_kind",
+                match probe.embed_kind {
+                    EmbedKind::Pool => "pool",
+                    EmbedKind::Small => "small",
+                },
+            )
+            .with("n_params", probe.params.len());
+        std::fs::write(stem.with_extension("json"), meta.pretty())?;
+        let mut bytes = Vec::with_capacity(probe.params.len() * 4);
+        for p in &probe.params {
+            bytes.extend_from_slice(&p.to_le_bytes());
+        }
+        std::fs::write(stem.with_extension("bin"), bytes)?;
+        Ok(())
+    }
+
+    pub fn load(stem: &Path) -> Result<CalibratedProbe> {
+        let meta_path = stem.with_extension("json");
+        let text = std::fs::read_to_string(&meta_path).map_err(|e| {
+            Error::artifact(format!(
+                "missing probe checkpoint {} ({e}) — run `ttc train-probe`",
+                meta_path.display()
+            ))
+        })?;
+        let meta = parse(&text)?;
+        let bytes = std::fs::read(stem.with_extension("bin"))?;
+        let n = meta.req_usize("n_params")?;
+        if bytes.len() != n * 4 {
+            return Err(Error::artifact("probe checkpoint size mismatch"));
+        }
+        let params = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(CalibratedProbe {
+            platt: Platt {
+                a: meta.req_f64("platt_a")?,
+                b: meta.req_f64("platt_b")?,
+            },
+            embed_kind: match meta.req_str("embed_kind")? {
+                "small" => EmbedKind::Small,
+                _ => EmbedKind::Pool,
+            },
+            params,
+        })
+    }
+}
+
+/// Embed a set of queries; returns id → embedding.
+pub fn embed_queries(
+    engine: &EngineHandle,
+    tokenizer: &Tokenizer,
+    kind: EmbedKind,
+    queries: &[Query],
+) -> Result<HashMap<String, Vec<f32>>> {
+    let token_lists: Vec<Vec<u32>> = queries
+        .iter()
+        .map(|q| tokenizer.encode(&q.query))
+        .collect::<Result<_>>()?;
+    let embs = engine.embed(kind, token_lists)?;
+    Ok(queries
+        .iter()
+        .zip(embs)
+        .map(|(q, e)| (q.id.clone(), e))
+        .collect())
+}
+
+/// Feature + soft-label rows for one split's matrix.
+#[allow(clippy::type_complexity)]
+pub fn build_rows(
+    matrix: &Matrix,
+    queries: &[Query],
+    embeddings: &HashMap<String, Vec<f32>>,
+    fb: &FeatureBuilder,
+    tokenizer: &Tokenizer,
+) -> Result<(Vec<Vec<f32>>, Vec<f32>)> {
+    let by_id: HashMap<&str, &Query> = queries.iter().map(|q| (q.id.as_str(), q)).collect();
+    let mut feats = Vec::new();
+    let mut labels = Vec::new();
+    for ((query_id, strategy_id), cell) in matrix.cells() {
+        let Some(query) = by_id.get(query_id.as_str()) else {
+            continue; // matrix may contain other splits' rows
+        };
+        let strategy = Strategy::parse(&strategy_id)
+            .ok_or_else(|| Error::internal(format!("bad strategy id '{strategy_id}'")))?;
+        let emb = embeddings
+            .get(&query_id)
+            .ok_or_else(|| Error::internal(format!("no embedding for '{query_id}'")))?;
+        let qlen = tokenizer.encode(&query.query)?.len();
+        feats.push(fb.build(emb, &strategy, qlen));
+        labels.push(cell.acc as f32);
+    }
+    Ok((feats, labels))
+}
+
+/// Full pipeline: train on the train-split matrix, calibrate on calib.
+#[allow(clippy::too_many_arguments)]
+pub fn train_probe(
+    engine: &EngineHandle,
+    train_matrix: &Matrix,
+    calib_matrix: &Matrix,
+    train_queries: &[Query],
+    calib_queries: &[Query],
+    fb: &FeatureBuilder,
+    embed_kind: EmbedKind,
+    cfg: &ProbeConfig,
+    seed: u64,
+) -> Result<(CalibratedProbe, Value)> {
+    let tokenizer = Tokenizer::new();
+    let train_emb = embed_queries(engine, &tokenizer, embed_kind, train_queries)?;
+    let calib_emb = embed_queries(engine, &tokenizer, embed_kind, calib_queries)?;
+
+    let (mut feats, mut labels) =
+        build_rows(train_matrix, train_queries, &train_emb, fb, &tokenizer)?;
+    if feats.is_empty() {
+        return Err(Error::internal("no training rows — collect the matrix first"));
+    }
+
+    // shuffle + 90/10 early-stop split
+    let mut rng = Rng::new(seed, 0x9A0BE);
+    let mut order: Vec<usize> = (0..feats.len()).collect();
+    rng.shuffle(&mut order);
+    let reorder = |v: &mut Vec<Vec<f32>>, order: &[usize]| {
+        let mut out = Vec::with_capacity(v.len());
+        for &i in order {
+            out.push(std::mem::take(&mut v[i]));
+        }
+        *v = out;
+    };
+    reorder(&mut feats, &order);
+    let labels_new: Vec<f32> = order.iter().map(|&i| labels[i]).collect();
+    labels = labels_new;
+    let n_val = (feats.len() / 10).max(8).min(feats.len() / 2);
+    let val_feats = feats.split_off(feats.len() - n_val);
+    let val_labels = labels.split_off(labels.len() - n_val);
+
+    log_info!(
+        "probe[{}]: {} train rows, {} val rows, {} features",
+        match embed_kind {
+            EmbedKind::Pool => "pool",
+            EmbedKind::Small => "small",
+        },
+        feats.len(),
+        val_feats.len(),
+        fb.dim()
+    );
+    let report = engine.probe_train(
+        feats,
+        labels,
+        val_feats,
+        val_labels,
+        cfg.epochs,
+        cfg.patience,
+    )?;
+    log_info!(
+        "probe: {} steps, train loss {:.4}, best val loss {:.4}",
+        report.steps,
+        report.final_train_loss,
+        report.best_val_loss
+    );
+
+    // Platt calibration on the calib split (raw logits vs soft labels).
+    let (calib_feats, calib_labels) =
+        build_rows(calib_matrix, calib_queries, &calib_emb, fb, &tokenizer)?;
+    let logits = engine.probe_fwd(calib_feats)?;
+    let pairs: Vec<(f64, f64)> = logits
+        .iter()
+        .zip(&calib_labels)
+        .map(|(&z, &y)| (z as f64, y as f64))
+        .collect();
+    let platt = Platt::fit(&pairs);
+    let pre_ece = crate::util::stats::ece(
+        &pairs
+            .iter()
+            .map(|&(z, y)| (crate::util::stats::sigmoid(z), y))
+            .collect::<Vec<_>>(),
+        10,
+    );
+    let post_ece = crate::util::stats::ece(
+        &pairs
+            .iter()
+            .map(|&(z, y)| (platt.prob(z), y))
+            .collect::<Vec<_>>(),
+        10,
+    );
+    log_info!(
+        "platt: a={:.3} b={:.3}, ECE {:.4} -> {:.4} on {} calib rows",
+        platt.a,
+        platt.b,
+        pre_ece,
+        post_ece,
+        pairs.len()
+    );
+
+    let curve_json: Vec<Value> = report
+        .curve
+        .iter()
+        .map(|&(e, tr, va)| {
+            Value::obj()
+                .with("epoch", e)
+                .with("train_loss", tr)
+                .with("val_loss", va)
+        })
+        .collect();
+    let report_json = Value::obj()
+        .with("steps", report.steps)
+        .with("final_train_loss", report.final_train_loss)
+        .with("best_val_loss", report.best_val_loss)
+        .with("platt_a", platt.a)
+        .with("platt_b", platt.b)
+        .with("calib_ece_pre", pre_ece)
+        .with("calib_ece_post", post_ece)
+        .with("curve", Value::Arr(curve_json));
+
+    Ok((
+        CalibratedProbe {
+            platt,
+            embed_kind,
+            params: report.params,
+        },
+        report_json,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let probe = CalibratedProbe {
+            platt: Platt { a: 0.7, b: -0.3 },
+            embed_kind: EmbedKind::Small,
+            params: vec![1.0, -2.0, 3.5],
+        };
+        let stem = std::env::temp_dir().join(format!("ttc_probe_{}", std::process::id()));
+        ProbeCheckpoint::save(&probe, &stem).unwrap();
+        let back = ProbeCheckpoint::load(&stem).unwrap();
+        assert_eq!(back.params, probe.params);
+        assert_eq!(back.platt, probe.platt);
+        assert_eq!(back.embed_kind, EmbedKind::Small);
+        std::fs::remove_file(stem.with_extension("json")).unwrap();
+        std::fs::remove_file(stem.with_extension("bin")).unwrap();
+    }
+
+    #[test]
+    fn missing_checkpoint_mentions_train_probe() {
+        let err = ProbeCheckpoint::load(Path::new("/nonexistent/probe"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("train-probe"), "{err}");
+    }
+}

@@ -1,0 +1,251 @@
+//! The utility-maximizing router (paper §2.2–§2.4).
+//!
+//! For each query `x` the router evaluates every strategy `s ∈ S`:
+//!
+//! ```text
+//! U_s(x) = â_s(x) − λ_T · T̂_s(x) − λ_L · L̂_s(x)
+//! s*(x)  = argmax_s U_s(x)
+//! ```
+//!
+//! `â` comes from the Platt-calibrated probe (one embed call + one batched
+//! probe-forward over all strategies), `T̂`/`L̂` from the per-strategy cost
+//! model. [`select_offline`] is the same argmax over precomputed tables —
+//! used by every figure sweep so that λ grids cost microseconds per point.
+
+use crate::costmodel::{CostEstimate, CostModel};
+use crate::engine::EngineHandle;
+use crate::error::Result;
+use crate::probe::{CalibratedProbe, FeatureBuilder};
+use crate::strategies::Strategy;
+use crate::tokenizer::Tokenizer;
+
+/// Scored strategy for one query.
+#[derive(Debug, Clone)]
+pub struct StrategyScore {
+    pub strategy: Strategy,
+    /// Calibrated accuracy prediction â_s(x).
+    pub acc_hat: f64,
+    pub cost: CostEstimate,
+    pub utility: f64,
+}
+
+/// Penalty weights (user preference knobs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Lambdas {
+    /// λ_T — per generated token.
+    pub token: f64,
+    /// λ_L — per millisecond of latency.
+    pub latency: f64,
+}
+
+impl Lambdas {
+    pub fn new(token: f64, latency: f64) -> Lambdas {
+        Lambdas { token, latency }
+    }
+
+    pub fn utility(&self, acc_hat: f64, cost: &CostEstimate) -> f64 {
+        acc_hat - self.token * cost.tokens - self.latency * cost.latency_ms
+    }
+}
+
+/// The query-adaptive router.
+pub struct Router {
+    pub strategies: Vec<Strategy>,
+    pub probe: CalibratedProbe,
+    pub costs: CostModel,
+    pub features: FeatureBuilder,
+    tokenizer: Tokenizer,
+}
+
+impl Router {
+    pub fn new(
+        strategies: Vec<Strategy>,
+        probe: CalibratedProbe,
+        costs: CostModel,
+        features: FeatureBuilder,
+    ) -> Router {
+        Router {
+            strategies,
+            probe,
+            costs,
+            features,
+            tokenizer: Tokenizer::new(),
+        }
+    }
+
+    /// Score every strategy for a query (probe â + cost model).
+    pub fn score_all(
+        &self,
+        engine: &EngineHandle,
+        query: &str,
+        lambdas: Lambdas,
+    ) -> Result<Vec<StrategyScore>> {
+        let query_ids = self.tokenizer.encode(query)?;
+        let emb = engine
+            .embed(self.probe.embed_kind, vec![query_ids.clone()])?
+            .pop()
+            .expect("one embedding for one query");
+        let feats: Vec<Vec<f32>> = self
+            .strategies
+            .iter()
+            .map(|s| self.features.build(&emb, s, query_ids.len()))
+            .collect();
+        let probs = self.probe.predict(engine, feats)?;
+        self.strategies
+            .iter()
+            .zip(probs)
+            .map(|(s, acc_hat)| {
+                let cost = self.costs.get(&s.id())?;
+                Ok(StrategyScore {
+                    strategy: s.clone(),
+                    acc_hat,
+                    cost,
+                    utility: lambdas.utility(acc_hat, &cost),
+                })
+            })
+            .collect()
+    }
+
+    /// `s*(x)` — the utility argmax (paper §2.3).
+    pub fn select(
+        &self,
+        engine: &EngineHandle,
+        query: &str,
+        lambdas: Lambdas,
+    ) -> Result<StrategyScore> {
+        let scores = self.score_all(engine, query, lambdas)?;
+        Ok(pick_max(&scores))
+    }
+}
+
+fn pick_max(scores: &[StrategyScore]) -> StrategyScore {
+    assert!(!scores.is_empty());
+    scores
+        .iter()
+        .max_by(|a, b| {
+            a.utility
+                .partial_cmp(&b.utility)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .unwrap()
+        .clone()
+}
+
+/// Offline argmax over precomputed per-strategy (â, cost) tables — the
+/// figure-sweep hot path. Returns the winning index.
+pub fn select_offline(probs: &[f64], costs: &[CostEstimate], lambdas: Lambdas) -> usize {
+    debug_assert_eq!(probs.len(), costs.len());
+    let mut best = 0;
+    let mut best_u = f64::NEG_INFINITY;
+    for i in 0..probs.len() {
+        let u = lambdas.utility(probs[i], &costs[i]);
+        if u > best_u {
+            best_u = u;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, gen_vec, prop_assert};
+
+    fn est(tokens: f64, latency_ms: f64) -> CostEstimate {
+        CostEstimate { tokens, latency_ms }
+    }
+
+    #[test]
+    fn utility_formula() {
+        let l = Lambdas::new(0.001, 0.0001);
+        let u = l.utility(0.8, &est(100.0, 1000.0));
+        assert!((u - (0.8 - 0.1 - 0.1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_penalty_picks_highest_accuracy() {
+        let probs = [0.3, 0.9, 0.5];
+        let costs = [est(10.0, 10.0), est(9999.0, 99999.0), est(1.0, 1.0)];
+        assert_eq!(select_offline(&probs, &costs, Lambdas::new(0.0, 0.0)), 1);
+    }
+
+    #[test]
+    fn high_token_penalty_prefers_cheap() {
+        let probs = [0.5, 0.9];
+        let costs = [est(10.0, 10.0), est(1000.0, 10.0)];
+        // Δacc = 0.4; Δtokens = 990 → switch at λ_T ≈ 0.000404
+        assert_eq!(select_offline(&probs, &costs, Lambdas::new(1e-5, 0.0)), 1);
+        assert_eq!(select_offline(&probs, &costs, Lambdas::new(1e-3, 0.0)), 0);
+    }
+
+    #[test]
+    fn latency_penalty_independent_of_tokens() {
+        let probs = [0.5, 0.9];
+        // same tokens, very different latency (the beam-search signature)
+        let costs = [est(100.0, 100.0), est(100.0, 10_000.0)];
+        assert_eq!(select_offline(&probs, &costs, Lambdas::new(0.0, 0.0)), 1);
+        assert_eq!(select_offline(&probs, &costs, Lambdas::new(0.0, 1e-4)), 0);
+    }
+
+    #[test]
+    fn prop_selected_utility_is_max() {
+        forall(
+            "offline argmax is argmax",
+            200,
+            |rng| {
+                let n = rng.range(1, 12) as usize;
+                let probs = gen_vec(rng, n..n + 1, |r| r.f64());
+                let costs = gen_vec(rng, n..n + 1, |r| {
+                    est(r.f64() * 1000.0, r.f64() * 10000.0)
+                });
+                let l = Lambdas::new(rng.f64() * 1e-2, rng.f64() * 1e-3);
+                (probs, costs, l)
+            },
+            |(probs, costs, l)| {
+                let idx = select_offline(probs, costs, *l);
+                let u_star = l.utility(probs[idx], &costs[idx]);
+                for i in 0..probs.len() {
+                    let u = l.utility(probs[i], &costs[i]);
+                    prop_assert(
+                        u <= u_star + 1e-12,
+                        format!("strategy {i} has utility {u} > selected {u_star}"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_monotone_penalty_never_increases_cost() {
+        // raising λ_T can only weakly decrease the token cost of the
+        // selected strategy (a classic envelope argument — and a real
+        // invariant the paper's Fig 2 relies on).
+        forall(
+            "selection cost monotone in λ_T",
+            150,
+            |rng| {
+                let n = rng.range(2, 10) as usize;
+                let probs = gen_vec(rng, n..n + 1, |r| r.f64());
+                let costs = gen_vec(rng, n..n + 1, |r| {
+                    est(r.f64() * 1000.0, r.f64() * 10000.0)
+                });
+                (probs, costs)
+            },
+            |(probs, costs)| {
+                let grid = [0.0, 1e-5, 1e-4, 1e-3, 1e-2];
+                let mut prev_tokens = f64::INFINITY;
+                for &lt in &grid {
+                    let idx = select_offline(probs, costs, Lambdas::new(lt, 0.0));
+                    prop_assert(
+                        costs[idx].tokens <= prev_tokens + 1e-9,
+                        format!("tokens increased from {prev_tokens} at λ_T={lt}"),
+                    )?;
+                    prev_tokens = costs[idx].tokens;
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,219 @@
+//! Artifact index: `hlo_index.json` + lazy compilation of executables.
+//!
+//! `python/compile/aot.py` emits one HLO-text module per
+//! (entry-point × batch-bucket × length-bucket) plus a JSON index with
+//! every module's call signature. [`ExecutableSet`] loads the index,
+//! compiles modules lazily on first use (startup stays fast for light
+//! subcommands) and type-checks arguments before execution.
+//!
+//! Everything here is engine-thread-local (`Rc`-based PJRT handles).
+
+use crate::error::{Error, Result};
+use crate::util::json::{parse, Value};
+use crate::log_debug;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Signature of one tensor (dtype + shape) from the index.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSig {
+    pub name: String,
+    pub dtype: String, // "f32" | "i32"
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    fn from_json(v: &Value) -> Result<TensorSig> {
+        Ok(TensorSig {
+            name: v.opt_str("name", "").to_string(),
+            dtype: v.req_str("dtype")?.to_string(),
+            shape: v
+                .req_arr("shape")?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| Error::artifact("bad shape dim")))
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Signature of one executable.
+#[derive(Debug, Clone)]
+pub struct ExecSignature {
+    pub name: String,
+    pub file: String,
+    /// Which weight set is prepended to the args ("lm", "prm", "probe",
+    /// "probe_train", or "" for none).
+    pub weights: String,
+    pub args: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Parsed `hlo_index.json`.
+#[derive(Debug)]
+pub struct ArtifactIndex {
+    pub meta: Value,
+    pub executables: Vec<ExecSignature>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactIndex {
+    pub fn load(artifacts_dir: &PathBuf) -> Result<ArtifactIndex> {
+        let path = artifacts_dir.join("hlo_index.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::artifact(format!(
+                "missing {} ({e}) — run `make artifacts`",
+                path.display()
+            ))
+        })?;
+        let v = parse(&text)?;
+        let meta = v.req("meta")?.clone();
+        let mut executables = Vec::new();
+        for e in v.req_arr("executables")? {
+            executables.push(ExecSignature {
+                name: e.req_str("name")?.to_string(),
+                file: e.req_str("file")?.to_string(),
+                weights: e.opt_str("weights", "").to_string(),
+                args: e
+                    .req_arr("args")?
+                    .iter()
+                    .map(TensorSig::from_json)
+                    .collect::<Result<_>>()?,
+                outputs: e
+                    .req_arr("outputs")?
+                    .iter()
+                    .map(TensorSig::from_json)
+                    .collect::<Result<_>>()?,
+            });
+        }
+        Ok(ArtifactIndex {
+            meta,
+            executables,
+            dir: artifacts_dir.clone(),
+        })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ExecSignature> {
+        self.executables
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| {
+                Error::artifact(format!(
+                    "no executable '{name}' in hlo_index.json — re-run `make artifacts`?"
+                ))
+            })
+    }
+
+    /// The batch buckets recorded at AOT time.
+    pub fn batch_buckets(&self) -> Result<Vec<usize>> {
+        self.meta
+            .req_arr("batch_buckets")?
+            .iter()
+            .map(|b| b.as_usize().ok_or_else(|| Error::artifact("bad bucket")))
+            .collect()
+    }
+
+    /// The prefill length buckets recorded at AOT time.
+    pub fn prefill_lens(&self) -> Result<Vec<usize>> {
+        self.meta
+            .req_arr("prefill_lens")?
+            .iter()
+            .map(|b| b.as_usize().ok_or_else(|| Error::artifact("bad len bucket")))
+            .collect()
+    }
+}
+
+/// A compiled executable with its signature.
+pub struct LoadedExec {
+    pub sig: ExecSignature,
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+/// Lazily-compiled executable cache over one PJRT client.
+///
+/// NOT `Send` — lives on the engine thread.
+pub struct ExecutableSet {
+    client: xla::PjRtClient,
+    index: ArtifactIndex,
+    cache: RefCell<HashMap<String, Rc<LoadedExec>>>,
+    /// Cumulative compile time (reported by `ttc info`).
+    compile_ms: RefCell<f64>,
+}
+
+impl ExecutableSet {
+    pub fn new(artifacts_dir: &PathBuf) -> Result<ExecutableSet> {
+        let index = ArtifactIndex::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(ExecutableSet {
+            client,
+            index,
+            cache: RefCell::new(HashMap::new()),
+            compile_ms: RefCell::new(0.0),
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn index(&self) -> &ArtifactIndex {
+        &self.index
+    }
+
+    pub fn total_compile_ms(&self) -> f64 {
+        *self.compile_ms.borrow()
+    }
+
+    /// Get (compiling on first use) the named executable.
+    pub fn get(&self, name: &str) -> Result<Rc<LoadedExec>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let sig = self.index.find(name)?.clone();
+        let path = self.index.dir.join(&sig.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+            Error::artifact(format!("cannot parse HLO {}: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        *self.compile_ms.borrow_mut() += ms;
+        log_debug!("compiled {name} in {ms:.0}ms");
+        let loaded = Rc::new(LoadedExec { sig, exe });
+        self.cache.borrow_mut().insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Pre-compile a list of executables (engine warmup).
+    pub fn warmup(&self, names: &[String]) -> Result<()> {
+        for n in names {
+            self.get(n)?;
+        }
+        Ok(())
+    }
+}
+
+impl LoadedExec {
+    /// Execute with literal arguments (weights prepended by the caller),
+    /// returning the flattened output tuple as literals.
+    pub fn run_literals(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute::<xla::Literal>(args)?;
+        let result = out[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Execute with device buffers, returning output buffers WITHOUT
+    /// copying to host (the KV-cache round-trip path).
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut out = self.exe.execute_b(args)?;
+        let outputs = out.pop().ok_or_else(|| Error::internal("no output device"))?;
+        Ok(outputs)
+    }
+}

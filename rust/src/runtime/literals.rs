@@ -1,0 +1,55 @@
+//! Literal construction/extraction helpers over the `xla` crate.
+
+use crate::error::{Error, Result};
+
+/// Build an i32 literal of shape `[n]` from a slice.
+pub fn i32_vec(values: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(values)
+}
+
+/// Build an i32 literal of shape `dims` (row-major `values`).
+pub fn i32_tensor(values: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != values.len() {
+        return Err(Error::internal(format!(
+            "i32_tensor: {} values for shape {dims:?}",
+            values.len()
+        )));
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(values).reshape(&dims_i64)?)
+}
+
+/// Build an f32 literal of shape `dims` (row-major `values`).
+pub fn f32_tensor(values: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != values.len() {
+        return Err(Error::internal(format!(
+            "f32_tensor: {} values for shape {dims:?}",
+            values.len()
+        )));
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(values).reshape(&dims_i64)?)
+}
+
+/// Scalar f32 literal.
+pub fn f32_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract an f32 literal into a Vec (any shape, row-major).
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_validation() {
+        assert!(i32_tensor(&[1, 2, 3], &[2, 2]).is_err());
+        assert!(f32_tensor(&[1.0; 6], &[2, 3]).is_ok());
+    }
+}

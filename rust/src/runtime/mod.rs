@@ -1,0 +1,22 @@
+//! PJRT runtime: loading and executing the AOT'd HLO artifacts.
+//!
+//! The published `xla` crate wraps xla_extension 0.5.1's PJRT C API. Key
+//! constraints this module absorbs so the rest of the system doesn't see
+//! them:
+//!
+//! * **HLO text interchange** — `HloModuleProto::from_text_file` parses
+//!   the text emitted by `python/compile/aot.py` (serialized protos from
+//!   jax ≥ 0.5 are rejected by this XLA version).
+//! * **`Rc`-based handles** — `PjRtClient`/buffers are `!Send`; all PJRT
+//!   state lives on the engine thread ([`crate::engine`]). Nothing in
+//!   this module is `Send` and nothing needs to be.
+//! * **Static shapes** — every entry point is compiled per batch bucket;
+//!   [`ExecutableSet`] owns the bucket → executable map and type-checks
+//!   call arguments against the signatures recorded in `hlo_index.json`.
+
+pub mod artifacts;
+pub mod literals;
+pub mod weights;
+
+pub use artifacts::{ArtifactIndex, ExecSignature, ExecutableSet, TensorSig};
+pub use weights::WeightSet;

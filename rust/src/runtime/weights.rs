@@ -1,0 +1,210 @@
+//! Weight loading: the manifest + flat-f32 format written by
+//! `python/compile/weights_io.py`.
+//!
+//! The manifest order IS the call convention: AOT'd executables take the
+//! flattened tensor list as their leading arguments, in exactly this
+//! order (jax tree-flatten order, fixed by sorted dict keys).
+
+use crate::error::{Error, Result};
+use crate::util::json::{parse, Value};
+use std::path::Path;
+
+/// One tensor's manifest entry.
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset in elements into the flat blob.
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// A named set of weights ("lm", "prm", "probe") loaded from disk.
+#[derive(Debug)]
+pub struct WeightSet {
+    pub name: String,
+    pub entries: Vec<WeightEntry>,
+    /// Raw f32 blob, little-endian order as written.
+    pub blob: Vec<f32>,
+    /// Model config recorded at save time (dims etc.).
+    pub config: Value,
+}
+
+impl WeightSet {
+    /// Load `<dir>/<name>_weights.bin` + `<dir>/<name>_manifest.json`.
+    pub fn load(dir: &Path, name: &str) -> Result<WeightSet> {
+        let man_path = dir.join(format!("{name}_manifest.json"));
+        let bin_path = dir.join(format!("{name}_weights.bin"));
+        let man_text = std::fs::read_to_string(&man_path).map_err(|e| {
+            Error::artifact(format!(
+                "missing weight manifest {} ({e}) — run `make artifacts`",
+                man_path.display()
+            ))
+        })?;
+        let man = parse(&man_text)?;
+        let total = man.req_usize("total_elems")?;
+
+        let bytes = std::fs::read(&bin_path).map_err(|e| {
+            Error::artifact(format!("missing weights {} ({e})", bin_path.display()))
+        })?;
+        if bytes.len() != total * 4 {
+            return Err(Error::artifact(format!(
+                "{}: expected {} f32 elems, file has {} bytes",
+                bin_path.display(),
+                total,
+                bytes.len()
+            )));
+        }
+        let mut blob = Vec::with_capacity(total);
+        for chunk in bytes.chunks_exact(4) {
+            blob.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+
+        let mut entries = Vec::new();
+        let mut expected_offset = 0usize;
+        for e in man.req_arr("params")? {
+            let shape: Vec<usize> = e
+                .req_arr("shape")?
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| Error::artifact("bad shape in manifest"))
+                })
+                .collect::<Result<_>>()?;
+            let entry = WeightEntry {
+                name: e.req_str("name")?.to_string(),
+                offset: e.req_usize("offset")?,
+                size: e.req_usize("size")?,
+                shape,
+            };
+            if entry.offset != expected_offset {
+                return Err(Error::artifact(format!(
+                    "manifest {} tensor '{}' offset {} != running offset {}",
+                    name, entry.name, entry.offset, expected_offset
+                )));
+            }
+            let shape_elems: usize = entry.shape.iter().product::<usize>().max(1);
+            if shape_elems != entry.size && !(entry.shape.is_empty() && entry.size == 1) {
+                return Err(Error::artifact(format!(
+                    "manifest {} tensor '{}' size {} != shape product {}",
+                    name, entry.name, entry.size, shape_elems
+                )));
+            }
+            expected_offset += entry.size;
+            entries.push(entry);
+        }
+        if expected_offset != total {
+            return Err(Error::artifact(format!(
+                "manifest {name}: tensors cover {expected_offset} elems, blob has {total}"
+            )));
+        }
+
+        let config = man.get("config").cloned().unwrap_or(Value::obj());
+        Ok(WeightSet {
+            name: name.to_string(),
+            entries,
+            blob,
+            config,
+        })
+    }
+
+    /// Number of tensors.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Slice of one tensor's data.
+    pub fn tensor_data(&self, idx: usize) -> &[f32] {
+        let e = &self.entries[idx];
+        &self.blob[e.offset..e.offset + e.size]
+    }
+
+    /// Materialize every tensor as an XLA literal, in manifest order.
+    pub fn to_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                let data = self.tensor_data(i);
+                if e.shape.is_empty() {
+                    Ok(xla::Literal::scalar(data[0]))
+                } else {
+                    crate::runtime::literals::f32_tensor(data, &e.shape)
+                }
+            })
+            .collect()
+    }
+
+    /// A zero-filled clone (used for Adam moment states of the probe).
+    pub fn zeros_like(&self) -> WeightSet {
+        WeightSet {
+            name: format!("{}_zeros", self.name),
+            entries: self.entries.clone(),
+            blob: vec![0.0; self.blob.len()],
+            config: self.config.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let manifest = r#"{
+            "params": [
+                {"name": "a", "shape": [2, 2], "offset": 0, "size": 4},
+                {"name": "b", "shape": [3], "offset": 4, "size": 3}
+            ],
+            "total_elems": 7,
+            "config": {"d": 2}
+        }"#;
+        std::fs::write(dir.join("toy_manifest.json"), manifest).unwrap();
+        let mut f = std::fs::File::create(dir.join("toy_weights.bin")).unwrap();
+        for i in 0..7 {
+            f.write_all(&(i as f32).to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn loads_and_slices() {
+        let dir = std::env::temp_dir().join(format!("ttc_w_{}", std::process::id()));
+        write_fixture(&dir);
+        let ws = WeightSet::load(&dir, "toy").unwrap();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws.tensor_data(0), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(ws.tensor_data(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(ws.config.req_usize("d").unwrap(), 2);
+        let z = ws.zeros_like();
+        assert!(z.blob.iter().all(|&x| x == 0.0));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_offsets() {
+        let dir = std::env::temp_dir().join(format!("ttc_wb_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("bad_manifest.json"),
+            r#"{"params": [{"name": "a", "shape": [2], "offset": 1, "size": 2}],
+                "total_elems": 3, "config": {}}"#,
+        )
+        .unwrap();
+        std::fs::write(dir.join("bad_weights.bin"), [0u8; 12]).unwrap();
+        assert!(WeightSet::load(&dir, "bad").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_files_are_artifact_errors() {
+        let dir = std::env::temp_dir().join("ttc_missing_weights");
+        let err = WeightSet::load(&dir, "nope").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

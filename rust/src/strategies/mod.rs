@@ -1,0 +1,22 @@
+//! Inference-time scaling strategies (paper §2.1).
+//!
+//! A *decoding strategy* is `s = (method, θ_method)`:
+//!
+//! * **Majority voting** — N parallel candidates, most frequent answer.
+//! * **Best-of-N (naive)** — N parallel candidates, highest PRM score.
+//! * **Best-of-N (weighted)** — PRM scores aggregated across identical
+//!   answers.
+//! * **Beam search** — incremental: N beams × W expansions per CoT step,
+//!   PRM-scored, top-N retained, answer by majority over final beams.
+//!
+//! The parallel methods ride one batched `lm_generate` call (latency ≈ a
+//! single generation); beam search issues one batched `lm_chunk` call
+//! *per round* plus a PRM call — the step-synchronized structure whose
+//! latency cost the paper's router learns to avoid when `λ_L` is high.
+
+pub mod beam;
+pub mod executor;
+pub mod space;
+
+pub use executor::{Executor, Outcome};
+pub use space::{Method, Strategy};

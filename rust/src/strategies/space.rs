@@ -1,0 +1,175 @@
+//! The strategy space `S` the router selects from.
+
+use crate::config::SpaceConfig;
+
+/// Inference-scaling method families (paper §2.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    MajorityVote,
+    BestOfNNaive,
+    BestOfNWeighted,
+    Beam,
+}
+
+impl Method {
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::MajorityVote => "majority_vote",
+            Method::BestOfNNaive => "bon_naive",
+            Method::BestOfNWeighted => "bon_weighted",
+            Method::Beam => "beam",
+        }
+    }
+
+    /// One-hot index for probe features (order fixed — see
+    /// `python/compile/model.py::PROBE_FEATURES`).
+    pub fn one_hot_index(self) -> usize {
+        match self {
+            Method::MajorityVote => 0,
+            Method::BestOfNNaive => 1,
+            Method::BestOfNWeighted => 2,
+            Method::Beam => 3,
+        }
+    }
+}
+
+/// A fully-parameterized decoding strategy `s = (m, θ_m)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Strategy {
+    pub method: Method,
+    /// Candidates (parallel methods) or active beams (beam search).
+    pub n: usize,
+    /// Branching factor (beam search; 1 otherwise).
+    pub width: usize,
+    /// Max tokens per beam-search round (0 for parallel methods).
+    pub chunk: usize,
+}
+
+impl Strategy {
+    pub fn mv(n: usize) -> Strategy {
+        Strategy {
+            method: Method::MajorityVote,
+            n,
+            width: 1,
+            chunk: 0,
+        }
+    }
+
+    pub fn bon_naive(n: usize) -> Strategy {
+        Strategy {
+            method: Method::BestOfNNaive,
+            n,
+            width: 1,
+            chunk: 0,
+        }
+    }
+
+    pub fn bon_weighted(n: usize) -> Strategy {
+        Strategy {
+            method: Method::BestOfNWeighted,
+            n,
+            width: 1,
+            chunk: 0,
+        }
+    }
+
+    pub fn beam(n: usize, width: usize, chunk: usize) -> Strategy {
+        Strategy {
+            method: Method::Beam,
+            n,
+            width,
+            chunk,
+        }
+    }
+
+    /// Stable identifier used in matrices, figures and logs.
+    pub fn id(&self) -> String {
+        match self.method {
+            Method::Beam => format!("beam@{}x{}c{}", self.n, self.width, self.chunk),
+            m => format!("{}@{}", m.name(), self.n),
+        }
+    }
+
+    /// Parse an id produced by [`Strategy::id`].
+    pub fn parse(id: &str) -> Option<Strategy> {
+        let (name, params) = id.split_once('@')?;
+        match name {
+            "beam" => {
+                let (n, rest) = params.split_once('x')?;
+                let (w, c) = rest.split_once('c')?;
+                Some(Strategy::beam(
+                    n.parse().ok()?,
+                    w.parse().ok()?,
+                    c.parse().ok()?,
+                ))
+            }
+            "majority_vote" => Some(Strategy::mv(params.parse().ok()?)),
+            "bon_naive" => Some(Strategy::bon_naive(params.parse().ok()?)),
+            "bon_weighted" => Some(Strategy::bon_weighted(params.parse().ok()?)),
+            _ => None,
+        }
+    }
+
+    /// Enumerate the full space from config.
+    pub fn enumerate(space: &SpaceConfig) -> Vec<Strategy> {
+        let mut out = Vec::new();
+        for &n in &space.mv_ns {
+            out.push(Strategy::mv(n));
+        }
+        for &n in &space.bon_ns {
+            out.push(Strategy::bon_naive(n));
+        }
+        for &n in &space.bon_ns {
+            out.push(Strategy::bon_weighted(n));
+        }
+        for &(n, w, c) in &space.beam {
+            out.push(Strategy::beam(n, w, c));
+        }
+        out
+    }
+
+    /// Beam-search-only sub-space (Fig 9).
+    pub fn enumerate_beam_only(space: &SpaceConfig) -> Vec<Strategy> {
+        space
+            .beam
+            .iter()
+            .map(|&(n, w, c)| Strategy::beam(n, w, c))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_roundtrip() {
+        let space = SpaceConfig::default();
+        for s in Strategy::enumerate(&space) {
+            let parsed = Strategy::parse(&s.id()).expect("parse");
+            assert_eq!(parsed, s, "id {}", s.id());
+        }
+    }
+
+    #[test]
+    fn enumerate_counts() {
+        let space = SpaceConfig::default();
+        let all = Strategy::enumerate(&space);
+        assert_eq!(
+            all.len(),
+            space.mv_ns.len() + 2 * space.bon_ns.len() + space.beam.len()
+        );
+        // ids unique
+        let mut ids: Vec<String> = all.iter().map(|s| s.id()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), all.len());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Strategy::parse("nope@3").is_none());
+        assert!(Strategy::parse("beam@ax2c3").is_none());
+        assert!(Strategy::parse("majority_vote").is_none());
+    }
+}

@@ -1,0 +1,267 @@
+//! Modular-arithmetic chain problems and their chain-of-thought solutions.
+//!
+//! A problem is `a₁ op₁ a₂ op₂ … op_k a_{k+1}` evaluated **left-to-right,
+//! everything mod 10**. The canonical surface forms are:
+//!
+//! ```text
+//! query    = "Q:7+8-5=?\n"
+//! solution = "S:7+8=5;5-5=0;A:0\n"
+//! ```
+//!
+//! Difficulty is the number of operations `k` (each is one CoT step):
+//! under temperature sampling, per-step slips compound multiplicatively
+//! with chain length — the difficulty gradient the paper's router
+//! exploits. The per-step function is a 10×10×3 table, learnable by the
+//! single-core-budget generator (DESIGN.md §2; mod-100 two-digit steps
+//! defeat a model this small because the tens digit is emitted before
+//! the carry is resolvable).
+
+use crate::util::rng::Rng;
+
+/// The modulus for all arithmetic.
+pub const MODULUS: i64 = 10;
+
+/// Supported difficulty range (number of operations / CoT steps).
+pub const MIN_OPS: usize = 2;
+pub const MAX_OPS: usize = 8;
+
+/// A binary operation in the chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Add,
+    Sub,
+    Mul,
+}
+
+impl Op {
+    pub fn symbol(self) -> char {
+        match self {
+            Op::Add => '+',
+            Op::Sub => '-',
+            Op::Mul => '*',
+        }
+    }
+
+    /// Apply modulo [`MODULUS`], result always in `[0, MODULUS)`.
+    pub fn apply(self, a: i64, b: i64) -> i64 {
+        let r = match self {
+            Op::Add => a + b,
+            Op::Sub => a - b,
+            Op::Mul => a * b,
+        };
+        r.rem_euclid(MODULUS)
+    }
+}
+
+/// One CoT step: `lhs op rhs = result`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepRecord {
+    pub lhs: i64,
+    pub op: Op,
+    pub rhs: i64,
+    pub result: i64,
+}
+
+impl StepRecord {
+    /// Surface form without trailing separator, e.g. `55-25=30`.
+    pub fn text(&self) -> String {
+        format!("{}{}{}={}", self.lhs, self.op.symbol(), self.rhs, self.result)
+    }
+}
+
+/// A generated problem instance.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Problem {
+    /// First operand.
+    pub first: i64,
+    /// Subsequent (op, operand) pairs; `len()` == difficulty `k`.
+    pub chain: Vec<(Op, i64)>,
+}
+
+impl Problem {
+    /// Sample a problem with exactly `k` operations.
+    pub fn sample(rng: &mut Rng, k: usize) -> Problem {
+        assert!((MIN_OPS..=MAX_OPS).contains(&k), "k={k} out of range");
+        let first = rng.range(2, 10);
+        let chain = (0..k)
+            .map(|_| {
+                // Multiplication is rarer (it is the hardest step type).
+                let op = match rng.below(5) {
+                    0 | 1 => Op::Add,
+                    2 | 3 => Op::Sub,
+                    _ => Op::Mul,
+                };
+                (op, rng.range(2, 10))
+            })
+            .collect();
+        Problem { first, chain }
+    }
+
+    /// Difficulty = number of operations.
+    pub fn difficulty(&self) -> usize {
+        self.chain.len()
+    }
+
+    /// The full step-by-step evaluation.
+    pub fn steps(&self) -> Vec<StepRecord> {
+        let mut acc = self.first;
+        self.chain
+            .iter()
+            .map(|&(op, operand)| {
+                let result = op.apply(acc, operand);
+                let step = StepRecord {
+                    lhs: acc,
+                    op,
+                    rhs: operand,
+                    result,
+                };
+                acc = result;
+                step
+            })
+            .collect()
+    }
+
+    /// Ground-truth final answer in `[0, MODULUS)`.
+    pub fn answer(&self) -> i64 {
+        self.steps().last().map(|s| s.result).unwrap_or(self.first)
+    }
+
+    /// `Q:17+38-25=?\n`
+    pub fn query_text(&self) -> String {
+        let mut s = String::from("Q:");
+        s.push_str(&self.first.to_string());
+        for &(op, operand) in &self.chain {
+            s.push(op.symbol());
+            s.push_str(&operand.to_string());
+        }
+        s.push_str("=?\n");
+        s
+    }
+
+    /// `S:17+38=55;55-25=30;A:30\n`
+    pub fn solution_text(&self) -> String {
+        let mut s = String::from("S:");
+        for step in self.steps() {
+            s.push_str(&step.text());
+            s.push(';');
+        }
+        s.push_str(&format!("A:{}\n", self.answer()));
+        s
+    }
+
+    /// Query + solution — one LM training document.
+    pub fn document(&self) -> String {
+        format!("{}{}", self.query_text(), self.solution_text())
+    }
+}
+
+/// Corrupt a step result to produce PRM negatives. The corruption models
+/// realistic decoding slips: off-by-one/two arithmetic or a random digit.
+pub fn corrupt_result(rng: &mut Rng, correct: i64) -> i64 {
+    loop {
+        let wrong = match rng.below(3) {
+            0 => (correct + if rng.below(2) == 0 { 1 } else { -1 }).rem_euclid(MODULUS),
+            1 => (correct + if rng.below(2) == 0 { 2 } else { -2 }).rem_euclid(MODULUS),
+            _ => rng.range(0, MODULUS),
+        };
+        if wrong != correct {
+            return wrong;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(1234, 0)
+    }
+
+    #[test]
+    fn op_apply_mod() {
+        assert_eq!(Op::Add.apply(9, 5), 4);
+        assert_eq!(Op::Sub.apply(3, 7), 6);
+        assert_eq!(Op::Mul.apply(7, 8), 6);
+        assert_eq!(Op::Sub.apply(0, 1), 9);
+    }
+
+    #[test]
+    fn steps_chain_correctly() {
+        let p = Problem {
+            first: 7,
+            chain: vec![(Op::Add, 8), (Op::Sub, 5)],
+        };
+        let steps = p.steps();
+        assert_eq!(steps.len(), 2);
+        assert_eq!(steps[0].text(), "7+8=5");
+        assert_eq!(steps[1].text(), "5-5=0");
+        assert_eq!(p.answer(), 0);
+    }
+
+    #[test]
+    fn surface_forms() {
+        let p = Problem {
+            first: 7,
+            chain: vec![(Op::Add, 8), (Op::Sub, 5)],
+        };
+        assert_eq!(p.query_text(), "Q:7+8-5=?\n");
+        assert_eq!(p.solution_text(), "S:7+8=5;5-5=0;A:0\n");
+    }
+
+    #[test]
+    fn sample_respects_difficulty_and_alphabet() {
+        let tok = crate::tokenizer::Tokenizer::new();
+        let mut r = rng();
+        for k in MIN_OPS..=MAX_OPS {
+            for _ in 0..50 {
+                let p = Problem::sample(&mut r, k);
+                assert_eq!(p.difficulty(), k);
+                // every surface form must tokenize
+                tok.encode(&p.document()).unwrap();
+                // results all within [0, MODULUS)
+                for s in p.steps() {
+                    assert!((0..MODULUS).contains(&s.result));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn document_length_bounded() {
+        // The engine compiles fixed max sequence lengths; make sure the
+        // hardest problems fit with margin (see engine::shapes).
+        let mut r = rng();
+        let mut max_len = 0;
+        for _ in 0..500 {
+            let p = Problem::sample(&mut r, MAX_OPS);
+            max_len = max_len.max(p.document().len());
+            assert!(p.query_text().len() <= 32, "query too long");
+        }
+        assert!(max_len <= 80, "max document length {max_len}");
+    }
+
+    #[test]
+    fn corrupt_result_differs_and_in_range() {
+        let mut r = rng();
+        for v in 0..MODULUS {
+            for _ in 0..8 {
+                let w = corrupt_result(&mut r, v);
+                assert_ne!(w, v);
+                assert!((0..MODULUS).contains(&w));
+            }
+        }
+    }
+
+    #[test]
+    fn operands_single_digit() {
+        let mut r = rng();
+        for _ in 0..300 {
+            let p = Problem::sample(&mut r, 5);
+            assert!((2..10).contains(&p.first));
+            for (_, operand) in &p.chain {
+                assert!((2..10).contains(operand));
+            }
+        }
+    }
+}

@@ -1,0 +1,306 @@
+//! Corpus emission: everything the build-time python trainers and the
+//! evaluation pipeline read.
+//!
+//! `ttc taskgen --out artifacts/data --seed S` writes:
+//!
+//! | file | contents |
+//! |---|---|
+//! | `vocab.json` | tokenizer manifest (see [`crate::tokenizer`]) |
+//! | `lm_corpus.jsonl` | `{text, k}` documents for LM training |
+//! | `prm_corpus.jsonl` | `{text, label, k, cut}` prefix examples for PRM training |
+//! | `queries_train.jsonl` | probe-training queries `{id, query, answer, k}` |
+//! | `queries_calib.jsonl` | Platt-calibration queries |
+//! | `queries_test.jsonl` | held-out evaluation queries |
+//!
+//! Queries across the three splits and the LM corpus are sampled from
+//! independent RNG streams, so the evaluation problems are (with
+//! overwhelming probability over a ~10¹²-size problem space) unseen.
+
+use crate::error::Result;
+use crate::taskgen::arith::{corrupt_result, Problem, MAX_OPS, MIN_OPS};
+use crate::tokenizer::Tokenizer;
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+use std::io::Write;
+use std::path::Path;
+
+/// Sizes of every emitted corpus.
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    pub lm_docs: usize,
+    pub prm_examples: usize,
+    pub queries_train: usize,
+    pub queries_calib: usize,
+    pub queries_test: usize,
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        // Sized for the single-core CPU testbed: LM training is ~10 min,
+        // matrix collection ~45 min (see EXPERIMENTS.md §Budget).
+        CorpusConfig {
+            lm_docs: 40_000,
+            prm_examples: 30_000,
+            queries_train: 120,
+            queries_calib: 60,
+            queries_test: 160,
+            seed: 17,
+        }
+    }
+}
+
+/// A difficulty-balanced problem sampler.
+fn balanced_problem(rng: &mut Rng, i: usize) -> Problem {
+    let k = MIN_OPS + (i % (MAX_OPS - MIN_OPS + 1));
+    Problem::sample(rng, k)
+}
+
+/// Emit every corpus into `dir`. Returns the number of files written.
+pub fn emit_all(dir: &Path, cfg: &CorpusConfig) -> Result<usize> {
+    std::fs::create_dir_all(dir)?;
+    let tok = Tokenizer::new();
+
+    write_file(dir, "vocab.json", &tok.vocab_json().pretty())?;
+    emit_lm_corpus(dir, cfg)?;
+    emit_prm_corpus(dir, cfg)?;
+    emit_queries(dir, "queries_train.jsonl", cfg.queries_train, cfg.seed, 100)?;
+    emit_queries(dir, "queries_calib.jsonl", cfg.queries_calib, cfg.seed, 200)?;
+    emit_queries(dir, "queries_test.jsonl", cfg.queries_test, cfg.seed, 300)?;
+    Ok(6)
+}
+
+fn write_file(dir: &Path, name: &str, contents: &str) -> Result<()> {
+    let path = dir.join(name);
+    let mut f = std::fs::File::create(&path)?;
+    f.write_all(contents.as_bytes())?;
+    Ok(())
+}
+
+fn emit_lm_corpus(dir: &Path, cfg: &CorpusConfig) -> Result<()> {
+    let mut rng = Rng::new(cfg.seed, 1);
+    let mut out = String::with_capacity(cfg.lm_docs * 96);
+    for i in 0..cfg.lm_docs {
+        let p = balanced_problem(&mut rng, i);
+        let rec = Value::obj()
+            .with("text", p.document())
+            .with("k", p.difficulty());
+        out.push_str(&rec.dumps());
+        out.push('\n');
+    }
+    write_file(dir, "lm_corpus.jsonl", &out)
+}
+
+/// PRM prefix corpus. Positives are clean solution prefixes; negatives
+/// corrupt one step's result and *propagate consistently* from it (the way
+/// a real decoding slip unfolds), so the PRM must detect the arithmetic
+/// error rather than a formatting anomaly. Roughly half the examples end
+/// with the final `A:x` line so the PRM also scores complete solutions
+/// (the best-of-N use case).
+fn emit_prm_corpus(dir: &Path, cfg: &CorpusConfig) -> Result<()> {
+    let mut rng = Rng::new(cfg.seed, 2);
+    let mut out = String::with_capacity(cfg.prm_examples * 96);
+    for i in 0..cfg.prm_examples {
+        let p = balanced_problem(&mut rng, i);
+        let steps = p.steps();
+        let k = steps.len();
+        // prefix cut point: include steps[0..cut]
+        let cut = rng.range(1, k as i64 + 1) as usize;
+        let include_answer = cut == k && rng.below(2) == 0;
+        let corrupt = rng.below(2) == 0;
+        let corrupt_at = if corrupt {
+            rng.range(0, cut as i64) as usize
+        } else {
+            usize::MAX
+        };
+
+        let mut text = p.query_text();
+        text.push_str("S:");
+        let mut acc = p.first;
+        for (j, step) in steps.iter().take(cut).enumerate() {
+            let mut result = step.op.apply(acc, step.rhs);
+            if j == corrupt_at {
+                result = corrupt_result(&mut rng, result);
+            }
+            text.push_str(&format!(
+                "{}{}{}={}",
+                acc,
+                step.op.symbol(),
+                step.rhs,
+                result
+            ));
+            text.push(';');
+            acc = result;
+        }
+        if include_answer {
+            text.push_str(&format!("A:{acc}\n"));
+        }
+
+        let rec = Value::obj()
+            .with("text", text)
+            .with("label", if corrupt { 0.0 } else { 1.0 })
+            .with("k", k)
+            .with("cut", cut);
+        out.push_str(&rec.dumps());
+        out.push('\n');
+    }
+    write_file(dir, "prm_corpus.jsonl", &out)
+}
+
+fn emit_queries(dir: &Path, name: &str, n: usize, seed: u64, stream: u64) -> Result<()> {
+    let mut rng = Rng::new(seed, stream);
+    let mut out = String::with_capacity(n * 80);
+    for i in 0..n {
+        let p = balanced_problem(&mut rng, i);
+        let rec = Value::obj()
+            .with("id", format!("{}-{i}", name.trim_end_matches(".jsonl")))
+            .with("query", p.query_text())
+            .with("answer", p.answer().to_string())
+            .with("k", p.difficulty());
+        out.push_str(&rec.dumps());
+        out.push('\n');
+    }
+    write_file(dir, name, &out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("ttc_corpus_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn small_cfg() -> CorpusConfig {
+        CorpusConfig {
+            lm_docs: 60,
+            prm_examples: 60,
+            queries_train: 12,
+            queries_calib: 6,
+            queries_test: 12,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn emit_all_writes_expected_files() {
+        let dir = tmp_dir("all");
+        emit_all(&dir, &small_cfg()).unwrap();
+        for f in [
+            "vocab.json",
+            "lm_corpus.jsonl",
+            "prm_corpus.jsonl",
+            "queries_train.jsonl",
+            "queries_calib.jsonl",
+            "queries_test.jsonl",
+        ] {
+            assert!(dir.join(f).exists(), "{f} missing");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn lm_corpus_documents_parse_and_tokenize() {
+        let dir = tmp_dir("lm");
+        emit_all(&dir, &small_cfg()).unwrap();
+        let tok = Tokenizer::new();
+        let text = std::fs::read_to_string(dir.join("lm_corpus.jsonl")).unwrap();
+        let mut n = 0;
+        for line in text.lines() {
+            let v = parse(line).unwrap();
+            let doc = v.req_str("text").unwrap();
+            assert!(doc.starts_with("Q:"));
+            assert!(doc.ends_with('\n'));
+            tok.encode(doc).unwrap();
+            n += 1;
+        }
+        assert_eq!(n, 60);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prm_negatives_differ_from_ground_truth() {
+        let dir = tmp_dir("prm");
+        emit_all(&dir, &small_cfg()).unwrap();
+        let text = std::fs::read_to_string(dir.join("prm_corpus.jsonl")).unwrap();
+        let mut pos = 0;
+        let mut neg = 0;
+        for line in text.lines() {
+            let v = parse(line).unwrap();
+            let label = v.req_f64("label").unwrap();
+            if label > 0.5 {
+                pos += 1;
+            } else {
+                neg += 1;
+            }
+        }
+        // ~50/50 split
+        assert!(pos >= 15 && neg >= 15, "pos={pos} neg={neg}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prm_positive_prefixes_are_arithmetically_correct() {
+        let dir = tmp_dir("prmpos");
+        emit_all(&dir, &small_cfg()).unwrap();
+        let text = std::fs::read_to_string(dir.join("prm_corpus.jsonl")).unwrap();
+        for line in text.lines() {
+            let v = parse(line).unwrap();
+            if v.req_f64("label").unwrap() < 0.5 {
+                continue;
+            }
+            let doc = v.req_str("text").unwrap();
+            let sol = doc.split('\n').nth(1).unwrap();
+            // verify each step string "a+b=c" actually holds mod 100
+            for step in sol.trim_start_matches("S:").split(';') {
+                if step.is_empty() || step.starts_with("A:") {
+                    continue;
+                }
+                let (expr, result) = step.split_once('=').unwrap();
+                let op_pos = expr[1..].find(['+', '-', '*']).unwrap() + 1;
+                let a: i64 = expr[..op_pos].parse().unwrap();
+                let b: i64 = expr[op_pos + 1..].parse().unwrap();
+                let r: i64 = result.parse().unwrap();
+                let expect = match &expr[op_pos..op_pos + 1] {
+                    "+" => crate::taskgen::arith::Op::Add.apply(a, b),
+                    "-" => crate::taskgen::arith::Op::Sub.apply(a, b),
+                    _ => crate::taskgen::arith::Op::Mul.apply(a, b),
+                };
+                assert_eq!(r, expect, "bad positive step {step}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn query_splits_are_disjoint() {
+        let dir = tmp_dir("splits");
+        emit_all(&dir, &small_cfg()).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for f in ["queries_train.jsonl", "queries_calib.jsonl", "queries_test.jsonl"] {
+            let text = std::fs::read_to_string(dir.join(f)).unwrap();
+            for line in text.lines() {
+                let v = parse(line).unwrap();
+                let q = v.req_str("query").unwrap().to_string();
+                assert!(seen.insert(q), "duplicate query across splits in {f}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d1 = tmp_dir("det1");
+        let d2 = tmp_dir("det2");
+        emit_all(&d1, &small_cfg()).unwrap();
+        emit_all(&d2, &small_cfg()).unwrap();
+        let a = std::fs::read_to_string(d1.join("queries_test.jsonl")).unwrap();
+        let b = std::fs::read_to_string(d2.join("queries_test.jsonl")).unwrap();
+        assert_eq!(a, b);
+        std::fs::remove_dir_all(&d1).unwrap();
+        std::fs::remove_dir_all(&d2).unwrap();
+    }
+}

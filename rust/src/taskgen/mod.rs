@@ -1,0 +1,22 @@
+//! Synthetic task generation.
+//!
+//! Stand-in for the paper's NuminaMath-CoT workload (see DESIGN.md §2):
+//! multi-step **modular-arithmetic chains** with chain-of-thought
+//! solutions. The two properties the paper's evaluation depends on are
+//! preserved:
+//!
+//! 1. a *difficulty gradient* — accuracy of a sampled model decays with
+//!    chain length `k`, so routing by predicted difficulty matters;
+//! 2. *verifiable intermediate steps* — each CoT step is an independent
+//!    binary operation, so a process reward model can be trained to score
+//!    partial solutions, and step-level beam search has signal to exploit.
+//!
+//! Rust is the system of record: `ttc taskgen` writes the LM training
+//! corpus, PRM prefix corpus, query splits and vocab manifest that the
+//! build-time python trainers consume.
+
+pub mod arith;
+pub mod corpus;
+
+pub use arith::{Op, Problem, StepRecord};
+pub use corpus::{emit_all, CorpusConfig};

@@ -1,0 +1,111 @@
+//! Miniature property-based testing framework (proptest is unavailable).
+//!
+//! Usage:
+//! ```ignore
+//! forall("batch sizes", 200, |rng| gen_vec(rng, 0..32, |r| r.below(100)), |v| {
+//!     prop_assert(invariant(v), "invariant broke")
+//! });
+//! ```
+//!
+//! On failure the harness panics with the case index, the root seed and a
+//! debug dump of the failing input, so the case is reproducible by
+//! construction (generation is fully deterministic from the seed).
+
+use crate::util::rng::Rng;
+
+/// Root seed for property runs; override with `TTC_PROP_SEED` to replay.
+fn root_seed() -> u64 {
+    std::env::var("TTC_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Number of cases multiplier; override with `TTC_PROP_CASES`.
+fn cases_override(default: usize) -> usize {
+    std::env::var("TTC_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Run `check` against `cases` generated inputs.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    generate: impl Fn(&mut Rng) -> T,
+    check: impl Fn(&T) -> Result<(), String>,
+) {
+    let seed = root_seed();
+    let cases = cases_override(cases);
+    for case in 0..cases {
+        let mut rng = Rng::new(seed, case as u64);
+        let input = generate(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed}, \
+                 TTC_PROP_SEED={seed} to replay):\n  {msg}\n  input: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Assertion helper returning the `Result` the `forall` checker expects.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Assert approximate equality of floats.
+pub fn prop_close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} != {b} (tol {tol})"))
+    }
+}
+
+/// Generate a vector whose length is uniform in `len_range`.
+pub fn gen_vec<T>(
+    rng: &mut Rng,
+    len_range: std::ops::Range<usize>,
+    mut item: impl FnMut(&mut Rng) -> T,
+) -> Vec<T> {
+    let len = rng.range(len_range.start as i64, len_range.end as i64) as usize;
+    (0..len).map(|_| item(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(
+            "reverse twice is identity",
+            50,
+            |rng| gen_vec(rng, 0..20, |r| r.below(1000)),
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                prop_assert(&w == v, "reverse∘reverse != id")
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failures() {
+        forall("always fails", 5, |rng| rng.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn prop_close_tolerance() {
+        assert!(prop_close(1.0, 1.0005, 1e-3, "x").is_ok());
+        assert!(prop_close(1.0, 1.1, 1e-3, "x").is_err());
+    }
+}

@@ -1,0 +1,203 @@
+//! Character-level tokenizer shared between the rust request path and the
+//! build-time python training stack.
+//!
+//! The synthetic math domain (see [`crate::taskgen`]) needs only a tiny
+//! closed alphabet, so tokenization is a fixed char↔id table. Rust is the
+//! system of record: [`Tokenizer::vocab_json`] is written to
+//! `artifacts/vocab.json` by `ttc taskgen` and the python trainer loads it,
+//! guaranteeing both sides agree exactly.
+//!
+//! Conventions:
+//! * id 0 is `<pad>` (never produced by `encode`);
+//! * `\n` doubles as the end-of-sequence marker — the generator emits it
+//!   after the final answer and the engine stops decoding on it.
+
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+/// The fixed alphabet, in id order. Index = token id.
+pub const ALPHABET: &[char] = &[
+    '\0', // 0: <pad>
+    '\n', // 1: end of sequence
+    '0', '1', '2', '3', '4', '5', '6', '7', '8', '9', // 2..=11
+    '+',  // 12
+    '-',  // 13
+    '*',  // 14
+    '=',  // 15
+    '?',  // 16
+    ';',  // 17
+    ':',  // 18
+    'Q',  // 19
+    'S',  // 20
+    'A',  // 21
+];
+
+/// Token id of the padding token.
+pub const PAD_ID: u32 = 0;
+/// Token id of the end-of-sequence (newline) token.
+pub const EOS_ID: u32 = 1;
+
+/// Char-level tokenizer over the fixed alphabet.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// char → id, indexed by the char's position in a small lookup.
+    to_id: [u32; 128],
+    to_char: Vec<char>,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Tokenizer {
+        let mut to_id = [u32::MAX; 128];
+        for (i, &c) in ALPHABET.iter().enumerate() {
+            if i == 0 {
+                continue; // pad has no surface form
+            }
+            to_id[c as usize] = i as u32;
+        }
+        Tokenizer {
+            to_id,
+            to_char: ALPHABET.to_vec(),
+        }
+    }
+
+    /// Number of tokens (including pad).
+    pub fn vocab_size(&self) -> usize {
+        self.to_char.len()
+    }
+
+    /// Encode text. Errors on characters outside the alphabet.
+    pub fn encode(&self, text: &str) -> Result<Vec<u32>> {
+        let mut out = Vec::with_capacity(text.len());
+        for c in text.chars() {
+            let idx = c as usize;
+            let id = if idx < 128 { self.to_id[idx] } else { u32::MAX };
+            if id == u32::MAX {
+                return Err(Error::internal(format!(
+                    "character {c:?} not in tokenizer alphabet"
+                )));
+            }
+            out.push(id);
+        }
+        Ok(out)
+    }
+
+    /// Decode ids back to text. Pad tokens are skipped; unknown ids error.
+    pub fn decode(&self, ids: &[u32]) -> Result<String> {
+        let mut s = String::with_capacity(ids.len());
+        for &id in ids {
+            if id == PAD_ID {
+                continue;
+            }
+            let c = self
+                .to_char
+                .get(id as usize)
+                .ok_or_else(|| Error::internal(format!("token id {id} out of range")))?;
+            s.push(*c);
+        }
+        Ok(s)
+    }
+
+    /// Vocab manifest consumed by the python training stack.
+    pub fn vocab_json(&self) -> Value {
+        let tokens: Vec<Value> = self
+            .to_char
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                if i == 0 {
+                    Value::Str("<pad>".to_string())
+                } else {
+                    Value::Str(c.to_string())
+                }
+            })
+            .collect();
+        Value::obj()
+            .with("vocab_size", self.vocab_size())
+            .with("pad_id", PAD_ID as usize)
+            .with("eos_id", EOS_ID as usize)
+            .with("tokens", Value::Arr(tokens))
+    }
+
+    /// Validate that a vocab.json matches this tokenizer (artifact check).
+    pub fn check_vocab_json(&self, v: &Value) -> Result<()> {
+        let size = v.req_usize("vocab_size")?;
+        if size != self.vocab_size() {
+            return Err(Error::artifact(format!(
+                "vocab size mismatch: artifact {size}, tokenizer {}",
+                self.vocab_size()
+            )));
+        }
+        let tokens = v.req_arr("tokens")?;
+        for (i, t) in tokens.iter().enumerate() {
+            let s = t
+                .as_str()
+                .ok_or_else(|| Error::artifact("vocab tokens must be strings"))?;
+            let expected = if i == 0 {
+                "<pad>".to_string()
+            } else {
+                self.to_char[i].to_string()
+            };
+            if s != expected {
+                return Err(Error::artifact(format!(
+                    "vocab token {i} mismatch: artifact {s:?}, tokenizer {expected:?}"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = Tokenizer::new();
+        let text = "Q:7+8-5=?\nS:7+8=5;5-5=0;A:0\n";
+        let ids = t.encode(text).unwrap();
+        assert_eq!(t.decode(&ids).unwrap(), text);
+    }
+
+    #[test]
+    fn rejects_unknown_chars() {
+        let t = Tokenizer::new();
+        assert!(t.encode("hello").is_err());
+        assert!(t.encode("Q:1+1=?").is_ok());
+    }
+
+    #[test]
+    fn pad_skipped_in_decode() {
+        let t = Tokenizer::new();
+        let mut ids = t.encode("A:5").unwrap();
+        ids.push(PAD_ID);
+        ids.insert(0, PAD_ID);
+        assert_eq!(t.decode(&ids).unwrap(), "A:5");
+    }
+
+    #[test]
+    fn vocab_json_self_check() {
+        let t = Tokenizer::new();
+        let v = t.vocab_json();
+        t.check_vocab_json(&v).unwrap();
+        assert_eq!(v.req_usize("vocab_size").unwrap(), ALPHABET.len());
+    }
+
+    #[test]
+    fn ids_are_stable() {
+        // The python side hard-depends on these ids via vocab.json; make
+        // accidental reordering a test failure.
+        let t = Tokenizer::new();
+        assert_eq!(t.encode("0").unwrap(), vec![2]);
+        assert_eq!(t.encode("9").unwrap(), vec![11]);
+        assert_eq!(t.encode("+").unwrap(), vec![12]);
+        assert_eq!(t.encode("\n").unwrap(), vec![EOS_ID]);
+        assert_eq!(t.encode("Q").unwrap(), vec![19]);
+    }
+}

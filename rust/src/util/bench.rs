@@ -1,0 +1,72 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are plain `main()` binaries (`harness = false`)
+//! built on this: warmup, timed iterations, mean/p50/p95 reporting, and
+//! an environment knob (`TTC_BENCH_SECONDS`) for run length. Output is
+//! line-oriented (`bench,<name>,<iters>,<mean_ns>,<p50_ns>,<p95_ns>`)
+//! so `bench_output.txt` is machine-parseable.
+
+use crate::util::stats;
+use std::time::Instant;
+
+/// Target seconds per benchmark (after warmup).
+fn target_seconds() -> f64 {
+    std::env::var("TTC_BENCH_SECONDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2.0)
+}
+
+/// Benchmark a closure; prints one summary line and returns mean ns.
+pub fn bench(name: &str, mut f: impl FnMut()) -> f64 {
+    // warmup: run until 10% of budget or 3 iterations
+    let warmup_until = target_seconds() * 0.1;
+    let t0 = Instant::now();
+    let mut warmups = 0;
+    while t0.elapsed().as_secs_f64() < warmup_until || warmups < 3 {
+        f();
+        warmups += 1;
+        if warmups > 1_000_000 {
+            break;
+        }
+    }
+    // measure
+    let budget = target_seconds();
+    let mut samples = Vec::new();
+    let t0 = Instant::now();
+    while t0.elapsed().as_secs_f64() < budget && samples.len() < 5_000_000 {
+        let s = Instant::now();
+        f();
+        samples.push(s.elapsed().as_nanos() as f64);
+    }
+    let mean = stats::mean(&samples);
+    let p50 = stats::percentile(&samples, 50.0);
+    let p95 = stats::percentile(&samples, 95.0);
+    println!(
+        "bench,{name},{},{:.0},{:.0},{:.0}",
+        samples.len(),
+        mean,
+        p50,
+        p95
+    );
+    mean
+}
+
+/// Pretty header for a bench binary.
+pub fn header(binary: &str) {
+    println!("# {binary} — columns: bench,name,iters,mean_ns,p50_ns,p95_ns");
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn bench_runs_and_reports() {
+        std::env::set_var("TTC_BENCH_SECONDS", "0.05");
+        let mean = super::bench("noop_sum", || {
+            let s: u64 = (0..100).sum();
+            std::hint::black_box(s);
+        });
+        assert!(mean > 0.0);
+        std::env::remove_var("TTC_BENCH_SECONDS");
+    }
+}

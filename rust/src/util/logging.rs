@@ -1,0 +1,131 @@
+//! Minimal leveled logger (no `log`/`tracing` facade available).
+//!
+//! Level is taken from the `TTC_LOG` environment variable
+//! (`error|warn|info|debug|trace`, default `info`). Output goes to stderr
+//! with millisecond timestamps relative to process start.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn from_str(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+static START: OnceLock<Instant> = OnceLock::new();
+
+fn max_level() -> Level {
+    let raw = MAX_LEVEL.load(Ordering::Relaxed);
+    if raw == u8::MAX {
+        let level = std::env::var("TTC_LOG")
+            .map(|s| Level::from_str(&s))
+            .unwrap_or(Level::Info);
+        MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+        return level;
+    }
+    match raw {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Override the log level programmatically (tests, CLI flag).
+pub fn set_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// True if `level` would be emitted.
+pub fn enabled(level: Level) -> bool {
+    level <= max_level()
+}
+
+/// Core emit function — use the `log_*!` macros instead.
+pub fn emit(level: Level, module: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let start = START.get_or_init(Instant::now);
+    let t = start.elapsed().as_secs_f64();
+    eprintln!("[{t:10.3}s {} {module}] {args}", level.tag());
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Error, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Trace, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,14 @@
+//! Hand-rolled substrates.
+//!
+//! This build environment has no network access for cargo and only the
+//! `xla` crate (plus `anyhow`/`thiserror`) in the local registry cache, so
+//! the usual ecosystem crates (serde, rand, clap, criterion, tokio) are
+//! unavailable. Everything the coordinator needs from them is implemented
+//! here from scratch, with tests.
+
+pub mod bench;
+pub mod clock;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,264 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The `rand` crate is unavailable in this environment, so this module
+//! implements PCG-XSH-RR 64/32 (O'Neill 2014) seeded through SplitMix64,
+//! which is plenty for workload generation and token sampling. Every
+//! consumer of randomness in the system takes an explicit [`Rng`] so runs
+//! are reproducible from a single root seed.
+
+/// PCG-XSH-RR 64/32 generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+/// SplitMix64 — used to derive well-mixed seeds from small integers.
+fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a seed and a stream id. Distinct stream ids
+    /// give statistically independent sequences for the same seed.
+    pub fn new(seed: u64, stream: u64) -> Rng {
+        let mut sm = seed;
+        let s0 = splitmix64(&mut sm);
+        let mut sm2 = stream.wrapping_add(0xDA3E39CB94B95BDB);
+        let inc = splitmix64(&mut sm2) | 1; // must be odd
+        let mut rng = Rng { state: 0, inc };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(s0);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Derive an independent child generator (for per-request streams).
+    pub fn split(&mut self) -> Rng {
+        let seed = self.next_u64();
+        let stream = self.next_u64();
+        Rng::new(seed, stream)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` as f32.
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in `[0, bound)` using Lemire's rejection method
+    /// (unbiased).
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "Rng::below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut lo = m as u64;
+        if lo < bound {
+            let threshold = bound.wrapping_neg() % bound;
+            while lo < threshold {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform integer in `[lo, hi)` (half-open).
+    pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo < hi, "Rng::range empty interval");
+        lo + self.below((hi - lo) as u64) as i64
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = (1.0 - self.f64()).max(f64::MIN_POSITIVE); // avoid ln(0)
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Exponential with rate `lambda` (for Poisson arrival processes).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        assert!(lambda > 0.0);
+        -(1.0 - self.f64()).ln() / lambda
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            items.swap(i, j);
+        }
+    }
+
+    /// Uniformly choose one element.
+    pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        assert!(!items.is_empty(), "Rng::choice on empty slice");
+        &items[self.below(items.len() as u64) as usize]
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "Rng::weighted with zero total weight");
+        let mut u = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Sample from a categorical given logits with a temperature, using
+    /// numerically-stable softmax. `temperature == 0` is argmax.
+    pub fn sample_logits(&mut self, logits: &[f32], temperature: f32) -> usize {
+        debug_assert!(!logits.is_empty());
+        if temperature <= 0.0 {
+            return argmax(logits);
+        }
+        let inv_t = 1.0 / temperature as f64;
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let mut probs: Vec<f64> = logits
+            .iter()
+            .map(|&l| ((l as f64 - max) * inv_t).exp())
+            .collect();
+        let total: f64 = probs.iter().sum();
+        if !(total > 0.0) {
+            return argmax(logits);
+        }
+        for p in probs.iter_mut() {
+            *p /= total;
+        }
+        self.weighted(&probs)
+    }
+}
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42, 0);
+        let mut b = Rng::new(42, 0);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Rng::new(42, 0);
+        let mut b = Rng::new(42, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7, 0);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_unbiased_small() {
+        let mut r = Rng::new(3, 0);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11, 0);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5, 0);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_logits_temperature_zero_is_argmax() {
+        let mut r = Rng::new(9, 0);
+        let logits = [0.1f32, 2.0, -1.0, 1.9];
+        for _ in 0..10 {
+            assert_eq!(r.sample_logits(&logits, 0.0), 1);
+        }
+    }
+
+    #[test]
+    fn sample_logits_respects_distribution() {
+        let mut r = Rng::new(13, 0);
+        // logit gap of ln(9) => p ≈ [0.9, 0.1]
+        let logits = [9.0f32.ln(), 0.0];
+        let n = 20_000;
+        let ones = (0..n)
+            .filter(|_| r.sample_logits(&logits, 1.0) == 1)
+            .count();
+        let frac = ones as f64 / n as f64;
+        assert!((frac - 0.1).abs() < 0.015, "frac {frac}");
+    }
+
+    #[test]
+    fn split_independent() {
+        let mut root = Rng::new(1, 0);
+        let mut a = root.split();
+        let mut b = root.split();
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+}

@@ -1,0 +1,156 @@
+//! Small statistics helpers used across the cost model, calibration and
+//! figure generation.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation; 0.0 for fewer than two samples.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile via linear interpolation on the sorted copy. `p` in [0,100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Numerically-stable logistic function.
+pub fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        let e = (-z).exp();
+        1.0 / (1.0 + e)
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Binary cross-entropy between a label in [0,1] and a probability,
+/// clipped for stability.
+pub fn bce(label: f64, prob: f64) -> f64 {
+    let p = prob.clamp(1e-7, 1.0 - 1e-7);
+    -(label * p.ln() + (1.0 - label) * (1.0 - p).ln())
+}
+
+/// Pearson correlation; 0.0 when degenerate.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for i in 0..xs.len() {
+        let a = xs[i] - mx;
+        let b = ys[i] - my;
+        num += a * b;
+        dx += a * a;
+        dy += b * b;
+    }
+    if dx <= 0.0 || dy <= 0.0 {
+        0.0
+    } else {
+        num / (dx * dy).sqrt()
+    }
+}
+
+/// Expected calibration error over equal-width probability bins.
+/// Inputs: (predicted probability, empirical label in [0,1]) pairs.
+pub fn ece(pairs: &[(f64, f64)], bins: usize) -> f64 {
+    if pairs.is_empty() || bins == 0 {
+        return 0.0;
+    }
+    let mut sums = vec![(0.0f64, 0.0f64, 0usize); bins];
+    for &(p, y) in pairs {
+        let b = ((p * bins as f64) as usize).min(bins - 1);
+        sums[b].0 += p;
+        sums[b].1 += y;
+        sums[b].2 += 1;
+    }
+    let n = pairs.len() as f64;
+    sums.iter()
+        .filter(|(_, _, c)| *c > 0)
+        .map(|(ps, ys, c)| {
+            let cf = *c as f64;
+            (cf / n) * ((ps / cf) - (ys / cf)).abs()
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((std_dev(&[2.0, 4.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sigmoid_stable() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-12);
+        assert!(sigmoid(-1000.0) >= 0.0);
+        assert!(sigmoid(1000.0) <= 1.0);
+        assert!((sigmoid(2.0) + sigmoid(-2.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bce_basic() {
+        assert!(bce(1.0, 0.99) < bce(1.0, 0.5));
+        assert!(bce(0.0, 0.01) < bce(0.0, 0.5));
+        assert!(bce(1.0, 0.0).is_finite());
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [2.0, 4.0, 6.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let neg = [3.0, 2.0, 1.0];
+        assert!((pearson(&xs, &neg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ece_perfectly_calibrated() {
+        let pairs: Vec<(f64, f64)> = (0..100).map(|i| (i as f64 / 100.0, i as f64 / 100.0)).collect();
+        assert!(ece(&pairs, 10) < 0.05);
+        let bad: Vec<(f64, f64)> = (0..100).map(|i| (i as f64 / 100.0, 0.0)).collect();
+        assert!(ece(&bad, 10) > 0.3);
+    }
+}

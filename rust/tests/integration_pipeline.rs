@@ -1,0 +1,133 @@
+//! Integration: the full adaptive pipeline on a miniature budget —
+//! strategies → matrix → probe training → calibration → figures.
+//!
+//! Needs `make artifacts`; skips otherwise.
+
+use ttc::config::Config;
+use ttc::data::Splits;
+use ttc::engine::{EmbedKind, Engine};
+use ttc::figures::{self, EvalTable};
+use ttc::matrix;
+use ttc::probe::{train_probe, FeatureBuilder};
+use ttc::strategies::{Executor, Strategy};
+
+fn mini_config() -> Config {
+    let mut cfg = Config::default();
+    cfg.space.mv_ns = vec![1, 4];
+    cfg.space.bon_ns = vec![4];
+    cfg.space.beam = vec![(2, 2, 12)];
+    cfg.probe.epochs = 6;
+    cfg
+}
+
+#[test]
+fn matrix_probe_figures_end_to_end() {
+    let cfg = mini_config();
+    if !cfg.paths.artifacts.join("hlo_index.json").exists() {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::start(&cfg).unwrap();
+    let executor = Executor::new(engine.handle(), engine.clock.clone(), cfg.engine.temperature);
+    let splits = Splits::load(&cfg.paths().data_dir()).unwrap();
+    let strategies = Strategy::enumerate(&cfg.space);
+    assert_eq!(strategies.len(), 5); // mv@1, mv@4, bon_naive@4, bon_weighted@4, beam
+
+    let tmp = std::env::temp_dir().join(format!("ttc_it_pipeline_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+
+    // --- collect small matrices ---
+    let train_q = &splits.train[..10];
+    let calib_q = &splits.calib[..8];
+    let test_q = &splits.test[..8];
+    let train_m = matrix::collect(
+        &executor, train_q, "train", &strategies, 2, &tmp.join("train.jsonl"),
+    )
+    .unwrap();
+    let calib_m = matrix::collect(
+        &executor, calib_q, "calib", &strategies, 1, &tmp.join("calib.jsonl"),
+    )
+    .unwrap();
+    let test_m = matrix::collect(
+        &executor, test_q, "test", &strategies, 1, &tmp.join("test.jsonl"),
+    )
+    .unwrap();
+    assert_eq!(train_m.entries.len(), 10 * 5 * 2);
+
+    // resume: a second collect call does zero new work (same file)
+    let again = matrix::collect(
+        &executor, train_q, "train", &strategies, 2, &tmp.join("train.jsonl"),
+    )
+    .unwrap();
+    assert_eq!(again.entries.len(), train_m.entries.len());
+
+    // --- probe training + calibration ---
+    let info = engine.handle().info().unwrap();
+    let features = info
+        .req("shapes")
+        .unwrap()
+        .req_usize("probe_features")
+        .unwrap();
+    let fb = FeatureBuilder::new(features - 9, cfg.space.beam_max_rounds);
+    let (probe, report) = train_probe(
+        &engine.handle(),
+        &train_m,
+        &calib_m,
+        train_q,
+        calib_q,
+        &fb,
+        EmbedKind::Pool,
+        &cfg.probe,
+        7,
+    )
+    .unwrap();
+    assert!(report.req_f64("best_val_loss").unwrap().is_finite());
+    assert!(probe.platt.a.is_finite());
+
+    // --- eval table + a figure emitter ---
+    let tokenizer = ttc::tokenizer::Tokenizer::new();
+    let embs = ttc::probe::train::embed_queries(
+        &engine.handle(),
+        &tokenizer,
+        EmbedKind::Pool,
+        test_q,
+    )
+    .unwrap();
+    let mut probs = Vec::new();
+    for q in test_q {
+        let qlen = tokenizer.encode(&q.query).unwrap().len();
+        let feats: Vec<Vec<f32>> = strategies
+            .iter()
+            .map(|s| fb.build(&embs[&q.id], s, qlen))
+            .collect();
+        probs.push(probe.predict(&engine.handle(), feats).unwrap());
+    }
+    let costs = ttc::costmodel::CostModel::fit(&train_m);
+    let table = EvalTable::new(test_q.to_vec(), strategies, &test_m, probs, &costs).unwrap();
+
+    let sweep = cfg.sweep.clone();
+    figures::sweeps::fig1(&table, &sweep, 'a', &tmp.join("fig1a.csv")).unwrap();
+    figures::sweeps::fig2(&table, &sweep, &tmp.join("fig2.csv")).unwrap();
+    figures::methods::fig4(&table, &tmp.join("fig4.csv")).unwrap();
+    figures::beam::fig9(&table, &sweep, &tmp.join("fig9.csv")).unwrap();
+    for f in ["fig1a.csv", "fig2.csv", "fig4.csv", "fig9.csv"] {
+        let text = std::fs::read_to_string(tmp.join(f)).unwrap();
+        assert!(text.lines().count() > 1, "{f} is empty");
+    }
+
+    // penalties push the adaptive policy toward cheaper selections
+    let (_, t_free, _, _) = figures::adaptive_point(
+        &table,
+        ttc::router::Lambdas::new(0.0, 0.0),
+        figures::CostSource::Model,
+    );
+    let (_, t_pen, _, _) = figures::adaptive_point(
+        &table,
+        ttc::router::Lambdas::new(1e-2, 0.0),
+        figures::CostSource::Model,
+    );
+    assert!(t_pen <= t_free + 1e-9);
+
+    std::fs::remove_dir_all(&tmp).ok();
+}

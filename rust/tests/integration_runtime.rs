@@ -1,0 +1,178 @@
+//! Integration: PJRT runtime + engine over the real AOT artifacts.
+//!
+//! These tests need `make artifacts`; they skip (pass with a notice)
+//! when artifacts are absent so `cargo test` is green on fresh clones.
+
+use ttc::config::Config;
+use ttc::engine::{EmbedKind, Engine, GenJob, GenKind};
+use ttc::tokenizer::Tokenizer;
+
+fn artifacts_ready(cfg: &Config) -> bool {
+    cfg.paths.artifacts.join("hlo_index.json").exists()
+}
+
+macro_rules! require_artifacts {
+    ($cfg:ident) => {
+        let $cfg = Config::default();
+        if !artifacts_ready(&$cfg) {
+            eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+#[test]
+fn engine_generates_well_formed_solutions() {
+    require_artifacts!(cfg);
+    let engine = Engine::start(&cfg).unwrap();
+    let tok = Tokenizer::new();
+    let prompt = tok.encode("Q:7+8-2=?\nS:").unwrap();
+    let jobs: Vec<GenJob> = (0..3)
+        .map(|_| GenJob {
+            tokens: prompt.clone(),
+            kind: GenKind::Full,
+            temperature: 0.8,
+        })
+        .collect();
+    let results = engine.handle().generate(jobs).unwrap();
+    assert_eq!(results.len(), 3);
+    for r in &results {
+        assert!(!r.tokens.is_empty());
+        assert!(r.tokens.len() <= 96);
+        let text = tok.decode(&r.tokens).unwrap();
+        assert!(r.call_ms > 0.0);
+        assert_eq!(r.batch_size, 3);
+        if let Some(last) = r.tokens.last() {
+            if *last == ttc::tokenizer::EOS_ID {
+                assert!(text.ends_with('\n'));
+            }
+        }
+    }
+}
+
+#[test]
+fn greedy_generation_is_deterministic_across_calls() {
+    require_artifacts!(cfg);
+    let engine = Engine::start(&cfg).unwrap();
+    let tok = Tokenizer::new();
+    let prompt = tok.encode("Q:2+3+4=?\nS:").unwrap();
+    let job = || {
+        vec![GenJob {
+            tokens: prompt.clone(),
+            kind: GenKind::Full,
+            temperature: 0.0, // greedy — RNG key must not matter
+        }]
+    };
+    let a = engine.handle().generate(job()).unwrap();
+    let b = engine.handle().generate(job()).unwrap();
+    assert_eq!(a[0].tokens, b[0].tokens);
+}
+
+#[test]
+fn chunk_generation_stops_at_step_separator() {
+    require_artifacts!(cfg);
+    let engine = Engine::start(&cfg).unwrap();
+    let tok = Tokenizer::new();
+    let prompt = tok.encode("Q:7+8-2+8=?\nS:7+8=5;").unwrap();
+    let jobs: Vec<GenJob> = (0..4)
+        .map(|_| GenJob {
+            tokens: prompt.clone(),
+            kind: GenKind::Chunk,
+            temperature: 0.8,
+        })
+        .collect();
+    let results = engine.handle().generate(jobs).unwrap();
+    for r in &results {
+        assert!(r.tokens.len() <= 16, "chunk produced {} tokens", r.tokens.len());
+        let text = tok.decode(&r.tokens).unwrap();
+        // if a separator appears, it terminates the chunk
+        if let Some(pos) = text.find([';', '\n']) {
+            assert_eq!(pos, text.len() - 1, "separator mid-chunk in {text:?}");
+        }
+    }
+}
+
+#[test]
+fn prm_scores_prefer_correct_prefixes() {
+    require_artifacts!(cfg);
+    let engine = Engine::start(&cfg).unwrap();
+    let tok = Tokenizer::new();
+    // correct vs corrupted arithmetic; the trained PRM should score the
+    // correct prefixes higher on average
+    let cases = [
+        ("Q:7+8-2=?\nS:7+8=5;", "Q:7+8-2=?\nS:7+8=6;"),
+        ("Q:6+7+3=?\nS:6+7=3;", "Q:6+7+3=?\nS:6+7=4;"),
+        ("Q:9-4+2=?\nS:9-4=5;", "Q:9-4+2=?\nS:9-4=7;"),
+        ("Q:3*4+5=?\nS:3*4=2;", "Q:3*4+5=?\nS:3*4=6;"),
+    ];
+    let mut prefixes = Vec::new();
+    for (good, bad) in &cases {
+        prefixes.push(tok.encode(good).unwrap());
+        prefixes.push(tok.encode(bad).unwrap());
+    }
+    let scores = engine.handle().prm_score(prefixes).unwrap();
+    let mut wins = 0;
+    for i in 0..cases.len() {
+        if scores[2 * i] > scores[2 * i + 1] {
+            wins += 1;
+        }
+    }
+    assert!(
+        wins >= 3,
+        "PRM preferred correct prefix only {wins}/4 times: {scores:?}"
+    );
+}
+
+#[test]
+fn embeddings_have_model_dim_and_distinguish_queries() {
+    require_artifacts!(cfg);
+    let engine = Engine::start(&cfg).unwrap();
+    let tok = Tokenizer::new();
+    let q1 = tok.encode("Q:2+3=?\n").unwrap();
+    let q2 = tok.encode("Q:9*9-8+5-2+7=?\n").unwrap();
+    for kind in [EmbedKind::Pool, EmbedKind::Small] {
+        let embs = engine
+            .handle()
+            .embed(kind, vec![q1.clone(), q2.clone()])
+            .unwrap();
+        assert_eq!(embs.len(), 2);
+        assert!(!embs[0].is_empty());
+        assert_eq!(embs[0].len(), embs[1].len());
+        let diff: f32 = embs[0]
+            .iter()
+            .zip(&embs[1])
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 1e-3, "{kind:?} embeddings identical");
+    }
+}
+
+#[test]
+fn probe_fwd_shapes_and_bad_dims_rejected() {
+    require_artifacts!(cfg);
+    let engine = Engine::start(&cfg).unwrap();
+    let info = engine.handle().info().unwrap();
+    let f = info
+        .req("shapes")
+        .unwrap()
+        .req_usize("probe_features")
+        .unwrap();
+    let feats: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32 * 0.01; f]).collect();
+    let logits = engine.handle().probe_fwd(feats.clone()).unwrap();
+    assert_eq!(logits.len(), 5);
+    // wrong feature dim is an engine error, not a crash
+    let bad = vec![vec![0.0f32; f - 1]];
+    assert!(engine.handle().probe_fwd(bad).is_err());
+}
+
+#[test]
+fn oversized_prompt_is_engine_error() {
+    require_artifacts!(cfg);
+    let engine = Engine::start(&cfg).unwrap();
+    let jobs = vec![GenJob {
+        tokens: vec![2; 200], // exceeds every length bucket
+        kind: GenKind::Chunk,
+        temperature: 0.8,
+    }];
+    assert!(engine.handle().generate(jobs).is_err());
+}

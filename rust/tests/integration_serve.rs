@@ -1,0 +1,62 @@
+//! Integration: the serving driver under closed-loop load with a static
+//! strategy (adaptive serving is covered by integration_pipeline +
+//! examples/serve_adaptive). Needs `make artifacts`; skips otherwise.
+
+use ttc::config::Config;
+use ttc::data::Splits;
+use ttc::engine::Engine;
+use ttc::server::driver::{self, Mode};
+use ttc::server::loadgen::{self, Arrivals};
+use ttc::strategies::{Executor, Strategy};
+use ttc::util::rng::Rng;
+
+#[test]
+fn static_serving_reports_sane_metrics() {
+    let cfg = Config::default();
+    if !cfg.paths.artifacts.join("hlo_index.json").exists() {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::start(&cfg).unwrap();
+    let executor = Executor::new(engine.handle(), engine.clock.clone(), cfg.engine.temperature);
+    let splits = Splits::load(&cfg.paths().data_dir()).unwrap();
+
+    let mut rng = Rng::new(1, 0);
+    let schedule = loadgen::schedule(&splits.test, 6, Arrivals::Closed, &mut rng);
+    let report = driver::run(&executor, &Mode::Static(Strategy::mv(2)), schedule, 2).unwrap();
+
+    assert_eq!(report.served.len(), 6);
+    let v = report.to_json();
+    let acc = v.req_f64("accuracy").unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+    assert!(v.req_f64("throughput_rps").unwrap() > 0.0);
+    assert!(v.req_f64("avg_tokens").unwrap() > 0.0);
+    for s in &report.served {
+        assert_eq!(s.strategy, "majority_vote@2");
+        assert!(s.e2e_ms >= s.service_ms * 0.5); // e2e includes service
+        assert!(s.tokens > 0);
+    }
+    // with 2 workers the engine batcher may merge concurrent requests
+    // into shared calls — there must be at least ceil(6/2) = 3 calls and
+    // real generated tokens
+    assert!(engine.metrics.decode_calls.get() >= 3);
+    assert!(engine.metrics.tokens_generated.get() > 0);
+}
+
+#[test]
+fn poisson_schedule_respects_arrivals() {
+    let cfg = Config::default();
+    if !cfg.paths.artifacts.join("hlo_index.json").exists() {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::start(&cfg).unwrap();
+    let executor = Executor::new(engine.handle(), engine.clock.clone(), cfg.engine.temperature);
+    let splits = Splits::load(&cfg.paths().data_dir()).unwrap();
+    let mut rng = Rng::new(2, 0);
+    // high rate so the test doesn't dawdle
+    let schedule = loadgen::schedule(&splits.test, 4, Arrivals::Poisson { rate: 20.0 }, &mut rng);
+    let report = driver::run(&executor, &Mode::Static(Strategy::mv(1)), schedule, 2).unwrap();
+    assert_eq!(report.served.len(), 4);
+    assert!(report.wall_s > 0.0);
+}
