@@ -21,6 +21,7 @@ fn main() -> anyhow::Result<()> {
     cfg.space.mv_ns = vec![1, 4];
     cfg.space.bon_ns = vec![4];
     cfg.space.beam = vec![(2, 2, 12)];
+    cfg.space.extra = vec!["mv_early@4".into()];
     let engine = Engine::start(&cfg)?;
     let executor = Executor::new(engine.handle(), engine.clock.clone(), cfg.engine.temperature);
     let splits = Splits::load(&cfg.paths().data_dir())?;
@@ -46,7 +47,7 @@ fn main() -> anyhow::Result<()> {
 
     let info = engine.handle().info()?;
     let features = info.req("shapes")?.req_usize("probe_features")?;
-    let fb = FeatureBuilder::new(features - 9, cfg.space.beam_max_rounds);
+    let fb = FeatureBuilder::new(features - FeatureBuilder::aux_dim(), cfg.space.beam_max_rounds);
     let (probe, report) = train_probe(
         &engine.handle(),
         &train_m,

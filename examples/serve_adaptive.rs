@@ -3,8 +3,11 @@
 //! Loads the trained generator + PRM + calibrated probe, then serves a
 //! batch of real test queries through the **query-adaptive router** under
 //! Poisson arrivals, reporting accuracy, token cost, latency percentiles
-//! and throughput — and contrasts it against a static strategy at the
-//! same load.
+//! and throughput — contrasted against a static strategy at the same
+//! load, and against the same adaptive mix with a **per-request
+//! deadline** enforced *mid-strategy* (beam rounds visibly truncate:
+//! watch `budget_exhausted_fraction` / `stopped_early_fraction` in the
+//! report).
 //!
 //! ```bash
 //! make artifacts
@@ -21,7 +24,7 @@ use ttc::probe::{FeatureBuilder, ProbeCheckpoint};
 use ttc::router::{Lambdas, Router};
 use ttc::server::driver::{self, Mode};
 use ttc::server::loadgen::{self, Arrivals};
-use ttc::strategies::{Executor, Strategy};
+use ttc::strategies::{Budget, Executor, Strategy};
 use ttc::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -38,44 +41,48 @@ fn main() -> anyhow::Result<()> {
     )?)?)?;
     let info = engine.handle().info()?;
     let features = info.req("shapes")?.req_usize("probe_features")?;
-    let fb = FeatureBuilder::new(features - 9, cfg.space.beam_max_rounds);
+    let fb = FeatureBuilder::new(features - FeatureBuilder::aux_dim(), cfg.space.beam_max_rounds);
     let router = Router::new(Strategy::enumerate(&cfg.space), probe, costs, fb);
 
     // pre-compile every executable the adaptive mix can touch so live
     // requests never pay lazy XLA compilation
     driver::warmup(&executor, &router.strategies, &splits.test[0].query)?;
+    let adaptive = Mode::Adaptive(router, Lambdas::new(1e-4, 1e-5));
 
     let n_requests = std::env::var("TTC_SERVE_REQUESTS")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(24);
     let rate = 0.5; // req/s — keeps the 1-core testbed below saturation
-    let mut rng = Rng::new(cfg.seed, 0xAD);
+    let make_schedule = |budget: Budget| {
+        let mut rng = Rng::new(cfg.seed, 0xAD); // same schedule each block
+        loadgen::schedule_budgeted(
+            &splits.test,
+            n_requests,
+            Arrivals::Poisson { rate },
+            budget,
+            &mut rng,
+        )
+    };
+
     println!("== adaptive routing (λ_T=1e-4, λ_L=1e-5), {n_requests} reqs @ {rate}/s ==");
-    let schedule = loadgen::schedule(
-        &splits.test,
-        n_requests,
-        Arrivals::Poisson { rate },
-        &mut rng,
-    );
-    let report = driver::run(
-        &executor,
-        &Mode::Adaptive(router, Lambdas::new(1e-4, 1e-5)),
-        schedule,
-        4,
-    )?;
+    let report = driver::run(&executor, &adaptive, make_schedule(Budget::unlimited()), 4)?;
     report.log_summary("adaptive");
     println!("{}", report.to_json().pretty());
 
+    println!("== adaptive + per-request deadline (2000 ms, enforced mid-strategy) ==");
+    let budget = Budget::unlimited().with_deadline_ms(2000.0);
+    let report = driver::run(&executor, &adaptive, make_schedule(budget), 4)?;
+    report.log_summary("adaptive+deadline");
+    println!("{}", report.to_json().pretty());
+
     println!("== static baseline (majority_vote@8), same load ==");
-    let mut rng = Rng::new(cfg.seed, 0xAD); // same schedule
-    let schedule = loadgen::schedule(
-        &splits.test,
-        n_requests,
-        Arrivals::Poisson { rate },
-        &mut rng,
-    );
-    let report = driver::run(&executor, &Mode::Static(Strategy::mv(8)), schedule, 4)?;
+    let report = driver::run(
+        &executor,
+        &Mode::Static(Strategy::mv(8)),
+        make_schedule(Budget::unlimited()),
+        4,
+    )?;
     report.log_summary("static mv@8");
     println!("{}", report.to_json().pretty());
     Ok(())

@@ -65,9 +65,11 @@ LM_CONFIG = TransformerConfig(d_model=96, n_heads=4, n_layers=3, d_ff=384)
 PRM_CONFIG = LM_CONFIG
 
 PROBE_HIDDEN = 200
-# probe features: 96-d embedding ⊕ 4 strategy scalars ⊕ 4 method one-hot
+# probe features: 96-d embedding ⊕ 4 strategy scalars ⊕ 6 method one-hot
+# (the rust decoding-method registry: majority_vote, bon_naive,
+# bon_weighted, beam, mv_early, beam_latency — append-only order)
 # ⊕ 1 query length  (see rust/src/probe/features.rs — must match!)
-PROBE_FEATURES = LM_CONFIG.d_model + 4 + 4 + 1
+PROBE_FEATURES = LM_CONFIG.d_model + 4 + 6 + 1
 
 
 # ---------------------------------------------------------------------------

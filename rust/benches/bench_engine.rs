@@ -1,10 +1,13 @@
 //! End-to-end engine throughput: batched generation through the AOT'd
-//! executables (the system's FLOP budget lives here). Requires
-//! `make artifacts`; prints SKIP lines otherwise so `cargo bench` stays
-//! green in fresh checkouts.
+//! executables (the system's FLOP budget lives here), plus per-method
+//! strategy latency for every registered decoding method — the bench
+//! trajectory that tracks how `mv_early` / `beam_latency` compare to the
+//! seed four. Requires `make artifacts`; prints SKIP lines otherwise so
+//! `cargo bench` stays green in fresh checkouts.
 
 use ttc::config::Config;
 use ttc::engine::{Engine, GenJob, GenKind};
+use ttc::strategies::{registry, Budget, Executor, Strategy};
 use ttc::tokenizer::Tokenizer;
 use ttc::util::bench::{bench, header};
 
@@ -58,6 +61,30 @@ fn main() {
         std::hint::black_box(
             handle
                 .embed(ttc::engine::EmbedKind::Pool, queries.clone())
+                .unwrap(),
+        );
+    });
+
+    // per-method strategy latency: one bench per registered decoding
+    // method at its default parameters (the bench trajectory captures
+    // every method, not just the seed four)
+    let executor = Executor::new(handle.clone(), engine.clock.clone(), 0.8);
+    let query = "Q:7+8-2+8=?\n";
+    for m in registry::all() {
+        let s = Strategy::new(m.name(), m.default_params());
+        bench(&format!("strategy_{}", s.id()), || {
+            std::hint::black_box(executor.run(&s, query).unwrap());
+        });
+    }
+
+    // deadline-aware beam under a tight budget: the latency ceiling the
+    // serving path can now enforce mid-strategy
+    let tight = Budget::unlimited().with_deadline_ms(250.0);
+    let s = Strategy::beam_latency(4, 2, 12);
+    bench("strategy_beam_latency_deadline250ms", || {
+        std::hint::black_box(
+            executor
+                .run_budgeted(&s, query, tight.clone())
                 .unwrap(),
         );
     });

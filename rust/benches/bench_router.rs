@@ -1,18 +1,27 @@
 //! L3 hot path: the per-query strategy selection (`select_offline` over
 //! the full strategy space) plus feature construction — this sits on the
-//! request path before ANY generation, so it must be microseconds.
+//! request path before ANY generation, so it must be microseconds. The
+//! space comes from `SpaceConfig::default()`, so every registered method
+//! (incl. `mv_early` / `beam_latency`) is covered, and per-method
+//! feature-row benches track each method's selection-path cost.
 
 use ttc::config::SpaceConfig;
 use ttc::costmodel::CostEstimate;
 use ttc::probe::FeatureBuilder;
 use ttc::router::{select_offline, Lambdas};
-use ttc::strategies::Strategy;
+use ttc::strategies::{registry, Strategy};
 use ttc::util::bench::{bench, header};
 use ttc::util::rng::Rng;
 
 fn main() {
     header("bench_router");
     let strategies = Strategy::enumerate(&SpaceConfig::default());
+    println!(
+        "# space: {} strategies over {} methods: {:?}",
+        strategies.len(),
+        registry::len(),
+        registry::all().iter().map(|m| m.name()).collect::<Vec<_>>()
+    );
     let n = strategies.len();
     let mut rng = Rng::new(11, 0);
     let probs: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
@@ -34,6 +43,14 @@ fn main() {
         let rows: Vec<Vec<f32>> = strategies.iter().map(|s| fb.build(&emb, s, 14)).collect();
         std::hint::black_box(rows);
     });
+
+    // per-method feature-row cost (one row per registered method)
+    for m in registry::all() {
+        let s = Strategy::new(m.name(), m.default_params());
+        bench(&format!("feature_row_{}", m.name()), || {
+            std::hint::black_box(fb.build(&emb, &s, 14));
+        });
+    }
 
     // λ-grid sweep cost (a full figure panel)
     let grid: Vec<f64> = (0..16).map(|i| 1e-6 * 2f64.powi(i)).collect();

@@ -77,18 +77,29 @@ pub struct SpaceConfig {
     pub beam: Vec<(usize, usize, usize)>,
     /// Max expansion rounds for beam search (depth bound D).
     pub beam_max_rounds: usize,
+    /// Additional strategies by id (`"<method>@<params>"`), resolved
+    /// against the decoding-method registry — the extension point for
+    /// methods beyond the four hard-wired families above. Ids are
+    /// validated at config-merge time.
+    pub extra: Vec<String>,
 }
 
 impl Default for SpaceConfig {
     fn default() -> Self {
-        // 14 strategies — sized so the full evaluation matrix fits the
+        // 17 strategies — sized so the full evaluation matrix fits the
         // single-core budget while spanning the paper's qualitative space
-        // (cheap→expensive within each method family).
+        // (cheap→expensive within each method family), plus the two
+        // budget-aware methods via the registry-driven `extra` door.
         SpaceConfig {
             mv_ns: vec![1, 2, 4, 8, 16],
             bon_ns: vec![4, 8, 16],
             beam: vec![(2, 2, 12), (4, 2, 12), (4, 4, 12)],
             beam_max_rounds: 10,
+            extra: vec![
+                "mv_early@8".into(),
+                "mv_early@16".into(),
+                "beam_latency@4x2c12".into(),
+            ],
         }
     }
 }
@@ -289,6 +300,25 @@ impl Config {
             self.space.bon_ns = usize_arr(ns, "space.bon_ns")?;
         }
         self.space.beam_max_rounds = v.opt_usize("beam_max_rounds", self.space.beam_max_rounds);
+        if let Some(extra) = v.get("extra") {
+            let ids = extra
+                .as_arr()
+                .ok_or_else(|| Error::Config("space.extra must be an array".into()))?;
+            self.space.extra = ids
+                .iter()
+                .map(|id| {
+                    let id = id
+                        .as_str()
+                        .ok_or_else(|| Error::Config("space.extra entry must be a string".into()))?;
+                    if crate::strategies::Strategy::parse(id).is_none() {
+                        return Err(Error::Config(format!(
+                            "space.extra entry '{id}' does not name a registered method"
+                        )));
+                    }
+                    Ok(id.to_string())
+                })
+                .collect::<Result<_>>()?;
+        }
         if let Some(beam) = v.get("beam") {
             let arr = beam
                 .as_arr()
@@ -368,7 +398,8 @@ mod tests {
         let mut c = Config::default();
         let v = parse(
             r#"{"seed": 99, "engine": {"temperature": 0.5, "buckets": [1, 2]},
-                "space": {"mv_ns": [1, 3], "beam": [[2, 2, 8]]},
+                "space": {"mv_ns": [1, 3], "beam": [[2, 2, 8]],
+                          "extra": ["mv_early@4", "beam_latency@2x2c8"]},
                 "sweep": {"lambda_t": [0, 0.1]}}"#,
         )
         .unwrap();
@@ -378,6 +409,10 @@ mod tests {
         assert_eq!(c.engine.buckets, vec![1, 2]);
         assert_eq!(c.space.mv_ns, vec![1, 3]);
         assert_eq!(c.space.beam, vec![(2, 2, 8)]);
+        assert_eq!(
+            c.space.extra,
+            vec!["mv_early@4".to_string(), "beam_latency@2x2c8".to_string()]
+        );
         assert_eq!(c.sweep.lambda_t, vec![0.0, 0.1]);
     }
 
@@ -385,6 +420,16 @@ mod tests {
     fn unknown_key_rejected() {
         let mut c = Config::default();
         let v = parse(r#"{"typo_key": 1}"#).unwrap();
+        assert!(c.merge_json(&v).is_err());
+    }
+
+    #[test]
+    fn bad_extra_strategy_id_rejected() {
+        let mut c = Config::default();
+        let v = parse(r#"{"space": {"extra": ["no_such_method@4"]}}"#).unwrap();
+        let err = c.merge_json(&v).unwrap_err().to_string();
+        assert!(err.contains("no_such_method"), "{err}");
+        let v = parse(r#"{"space": {"extra": ["beam_latency@oops"]}}"#).unwrap();
         assert!(c.merge_json(&v).is_err());
     }
 }

@@ -9,7 +9,6 @@ use crate::config::SweepConfig;
 use crate::error::Result;
 use crate::figures::{adaptive_point, CostSource, Csv, EvalTable};
 use crate::router::Lambdas;
-use crate::strategies::Method;
 use std::path::Path;
 
 /// Emits `fig9.csv`:
@@ -21,12 +20,12 @@ pub fn fig9(table: &EvalTable, sweep: &SweepConfig, out: &Path) -> Result<Csv> {
         .strategies
         .iter()
         .enumerate()
-        .filter(|(_, s)| s.method == Method::Beam)
+        .filter(|(_, s)| s.uses_rounds())
         .map(|(i, _)| i)
         .collect();
     if beam_idx.is_empty() {
         return Err(crate::error::Error::Config(
-            "fig9 needs beam strategies in the space".into(),
+            "fig9 needs beam-family strategies in the space".into(),
         ));
     }
     let beam_table = table.restrict(&beam_idx);
@@ -64,7 +63,7 @@ mod tests {
         let n_beam = table
             .strategies
             .iter()
-            .filter(|s| s.method == Method::Beam)
+            .filter(|s| s.uses_rounds())
             .count();
         assert_eq!(static_rows, n_beam);
         assert!(!csv.is_empty());

@@ -3,7 +3,7 @@
 
 use crate::error::Result;
 use crate::figures::{indices_by_method, Csv, EvalTable};
-use crate::strategies::Method;
+use crate::strategies::registry;
 use crate::util::stats;
 use std::path::Path;
 
@@ -17,16 +17,16 @@ pub fn fig4(table: &EvalTable, out: &Path) -> Result<Csv> {
         csv.rowf(format_args!("{},{acc},{toks},{lats}", strat.id()));
     }
     let by_method = indices_by_method(&table.strategies);
-    let mut methods: Vec<Method> = by_method.keys().copied().collect();
-    methods.sort_by_key(|m| m.one_hot_index());
+    let mut methods: Vec<&'static str> = by_method.keys().copied().collect();
+    methods.sort_by_key(|m| registry::feature_index(m).unwrap_or(usize::MAX));
     for m in methods {
-        let idxs = &by_method[&m];
+        let idxs = &by_method[m];
         let points: Vec<(f64, f64, f64)> =
             idxs.iter().map(|&s| table.static_point(s)).collect();
         let acc = stats::mean(&points.iter().map(|p| p.0).collect::<Vec<_>>());
         let toks = stats::mean(&points.iter().map(|p| p.1).collect::<Vec<_>>());
         let lats = stats::mean(&points.iter().map(|p| p.2).collect::<Vec<_>>());
-        csv.rowf(format_args!("method:{},{acc},{toks},{lats}", m.name()));
+        csv.rowf(format_args!("method:{m},{acc},{toks},{lats}"));
     }
     csv.write(out)?;
     Ok(csv)

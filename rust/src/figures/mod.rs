@@ -249,24 +249,20 @@ pub fn test_table() -> EvalTable {
         let mut tr = Vec::new();
         let mut lr = Vec::new();
         for s in &strategies {
-            // easy queries: parallel methods fine; hard: beam better
+            // easy queries: parallel methods fine; hard: beam family better
             let base = 0.9 - 0.6 * hard;
             let n_bonus = 0.05 * (s.n as f64).log2();
-            let beam_bonus = if s.method == crate::strategies::Method::Beam {
-                0.25 * hard
-            } else {
-                0.0
-            };
+            let beam_bonus = if s.uses_rounds() { 0.25 * hard } else { 0.0 };
             let a = (base + n_bonus + beam_bonus).clamp(0.05, 0.98);
-            let t = match s.method {
-                crate::strategies::Method::Beam => {
-                    60.0 * s.n as f64 * s.width as f64
-                }
-                _ => 60.0 * s.n as f64,
+            let t = if s.uses_rounds() {
+                60.0 * s.n as f64 * s.width as f64
+            } else {
+                60.0 * s.n as f64
             };
-            let l = match s.method {
-                crate::strategies::Method::Beam => 400.0 * 6.0, // sequential rounds
-                _ => 150.0 + 10.0 * (s.n as f64).log2(),
+            let l = if s.uses_rounds() {
+                400.0 * 6.0 // sequential rounds
+            } else {
+                150.0 + 10.0 * (s.n as f64).log2()
             };
             ar.push(a);
             tr.push(t);
@@ -295,11 +291,11 @@ pub fn test_table() -> EvalTable {
     }
 }
 
-/// Lookup helper: strategy index groups by method (for Figs 2/4).
-pub fn indices_by_method(
-    strategies: &[Strategy],
-) -> HashMap<crate::strategies::Method, Vec<usize>> {
-    let mut map: HashMap<crate::strategies::Method, Vec<usize>> = HashMap::new();
+/// Lookup helper: strategy index groups by method name (for Figs 2/4).
+/// Keyed by the registry id, so newly registered methods group with no
+/// changes here.
+pub fn indices_by_method(strategies: &[Strategy]) -> HashMap<&'static str, Vec<usize>> {
+    let mut map: HashMap<&'static str, Vec<usize>> = HashMap::new();
     for (i, s) in strategies.iter().enumerate() {
         map.entry(s.method).or_default().push(i);
     }

@@ -6,7 +6,7 @@ use crate::config::SweepConfig;
 use crate::error::Result;
 use crate::figures::{adaptive_point, indices_by_method, CostSource, Csv, EvalTable};
 use crate::router::Lambdas;
-use crate::strategies::Method;
+use crate::strategies::registry;
 use std::path::Path;
 
 /// Figs 1a/1b (and 5/6 when given the compact-embedding table).
@@ -67,8 +67,8 @@ pub fn fig1(
 pub fn fig2(table: &EvalTable, sweep: &SweepConfig, out: &Path) -> Result<Csv> {
     let mut csv = Csv::new("sweep,lambda,group,proportion");
     let by_method = indices_by_method(&table.strategies);
-    let mut methods: Vec<Method> = by_method.keys().copied().collect();
-    methods.sort_by_key(|m| m.one_hot_index());
+    let mut methods: Vec<&'static str> = by_method.keys().copied().collect();
+    methods.sort_by_key(|m| registry::feature_index(m).unwrap_or(usize::MAX));
     let mut ns: Vec<usize> = table.strategies.iter().map(|s| s.n).collect();
     ns.sort();
     ns.dedup();
@@ -81,8 +81,7 @@ pub fn fig2(table: &EvalTable, sweep: &SweepConfig, out: &Path) -> Result<Csv> {
                 .filter(|&&s| table.strategies[s].method == *m)
                 .count();
             csv.rowf(format_args!(
-                "{sweep_name},{lambda},{},{}",
-                m.name(),
+                "{sweep_name},{lambda},{m},{}",
                 count as f64 / n_q
             ));
         }
@@ -201,7 +200,7 @@ mod tests {
         let beam_share = |picks: &[usize]| {
             picks
                 .iter()
-                .filter(|&&s| table.strategies[s].method == Method::Beam)
+                .filter(|&&s| table.strategies[s].uses_rounds())
                 .count()
         };
         assert!(beam_share(&picks1) <= beam_share(&picks0));

@@ -43,6 +43,7 @@ fn print_help() {
            figures      [--config F] [--results DIR] [--fig ID|all]\n\
            serve        [--config F] [--artifacts DIR] [--rate R] [--requests N]\n\
                         [--lambda-t X] [--lambda-l X] [--strategy S] [--sim]\n\
+                        [--deadline-ms X] [--max-tokens N]\n\
            pipeline     [--config F] [--artifacts DIR] [--out DIR] [--quick]\n\
            info         [--artifacts DIR]"
     );

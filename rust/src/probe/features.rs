@@ -1,22 +1,35 @@
 //! Probe feature construction.
 //!
 //! Layout (must match `python/compile/model.py::PROBE_FEATURES` =
-//! d_model + 4 + 4 + 1):
+//! d_model + 4 + n_methods + 1, where n_methods is the decoding-method
+//! registry size at artifact-build time):
 //!
 //! ```text
 //! [ embedding (d_model)
-//! | log2(N)/4, W/4, chunk/16, beam_rounds/10        (strategy scalars)
-//! | one-hot(method) (4)                              (appendix A.1)
-//! | query_len/32 ]                                   (query metadata)
+//! | log2(N)/4, W/4, chunk/16, rounds/10              (strategy scalars)
+//! | one-hot(method) (registry order)                  (appendix A.1)
+//! | query_len/32 ]                                    (query metadata)
 //! ```
+//!
+//! The one-hot block is registry-driven: its width and each method's
+//! index come from [`crate::strategies::registry`], frozen at
+//! [`FeatureBuilder::new`] time. Methods registered *after* a builder is
+//! constructed fall outside its one-hot block (their bit stays zero) —
+//! retrain the probe with a fresh builder to give them a column.
 
-use crate::strategies::space::{Method, Strategy};
+use crate::strategies::registry;
+use crate::strategies::space::Strategy;
 
 /// Builds feature rows for (query, strategy) pairs.
 #[derive(Debug, Clone)]
 pub struct FeatureBuilder {
     pub d_model: usize,
     pub beam_max_rounds: usize,
+    /// `(name, uses_rounds)` per registered method, frozen at
+    /// construction — the position is the one-hot index. Cached here so
+    /// the per-request router hot path (one row per strategy) never
+    /// takes the registry lock.
+    methods: Vec<(&'static str, bool)>,
 }
 
 impl FeatureBuilder {
@@ -24,12 +37,23 @@ impl FeatureBuilder {
         FeatureBuilder {
             d_model,
             beam_max_rounds,
+            methods: registry::all()
+                .iter()
+                .map(|m| (m.name(), m.uses_rounds()))
+                .collect(),
         }
+    }
+
+    /// Non-embedding feature width for the *current* registry: strategy
+    /// scalars + method one-hot + query metadata. Used to recover
+    /// `d_model` from an artifact's total feature count.
+    pub fn aux_dim() -> usize {
+        4 + registry::len() + 1
     }
 
     /// Total feature dimension.
     pub fn dim(&self) -> usize {
-        self.d_model + 4 + 4 + 1
+        self.d_model + 4 + self.methods.len() + 1
     }
 
     /// Assemble one feature row.
@@ -38,20 +62,31 @@ impl FeatureBuilder {
     /// tokenized query length (the paper's "problem length" feature).
     pub fn build(&self, embedding: &[f32], strategy: &Strategy, query_tokens: usize) -> Vec<f32> {
         assert_eq!(embedding.len(), self.d_model, "embedding dim mismatch");
+        // lock-free lookup against the frozen method table; a method
+        // registered after this builder was constructed gets no column
+        // (all-zero one-hot, no rounds feature) until the probe is
+        // retrained with a fresh builder
+        let method_ix = self
+            .methods
+            .iter()
+            .position(|(name, _)| *name == strategy.method);
+        let uses_rounds = matches!(method_ix, Some(ix) if self.methods[ix].1);
         let mut f = Vec::with_capacity(self.dim());
         f.extend_from_slice(embedding);
         // strategy scalars (normalized to O(1) ranges)
         f.push((strategy.n as f32).log2() / 4.0);
         f.push(strategy.width as f32 / 4.0);
         f.push(strategy.chunk as f32 / 16.0);
-        f.push(if strategy.method == Method::Beam {
+        f.push(if uses_rounds {
             self.beam_max_rounds as f32 / 10.0
         } else {
             0.0
         });
-        // method one-hot
-        let mut onehot = [0f32; 4];
-        onehot[strategy.method.one_hot_index()] = 1.0;
+        // method one-hot (registry order)
+        let mut onehot = vec![0f32; self.methods.len()];
+        if let Some(ix) = method_ix {
+            onehot[ix] = 1.0;
+        }
         f.extend_from_slice(&onehot);
         // query metadata
         f.push(query_tokens as f32 / 32.0);
@@ -67,18 +102,26 @@ mod tests {
     #[test]
     fn dims_and_onehot() {
         let fb = FeatureBuilder::new(96, 10);
-        assert_eq!(fb.dim(), 105);
+        // 6 built-in methods: 96 + 4 + 6 + 1
+        assert_eq!(fb.dim(), 107);
+        assert_eq!(FeatureBuilder::aux_dim(), 11);
         let emb = vec![0.5f32; 96];
         let f = fb.build(&emb, &Strategy::beam(4, 2, 12), 14);
-        assert_eq!(f.len(), 105);
-        // one-hot block at [96+4 .. 96+8): beam = index 3
-        assert_eq!(&f[100..104], &[0.0, 0.0, 0.0, 1.0]);
+        assert_eq!(f.len(), 107);
+        // one-hot block at [96+4 .. 96+10): beam = index 3
+        assert_eq!(&f[100..106], &[0.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
         // scalars present
         assert!((f[96] - 0.5).abs() < 1e-6); // log2(4)/4
         assert!((f[97] - 0.5).abs() < 1e-6); // 2/4
         let f2 = fb.build(&emb, &Strategy::mv(8), 14);
-        assert_eq!(&f2[100..104], &[1.0, 0.0, 0.0, 0.0]);
-        assert_eq!(f2[99], 0.0); // no beam rounds for MV
+        assert_eq!(&f2[100..106], &[1.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(f2[99], 0.0); // no rounds feature for MV
+        // the new methods get their own columns with no edits here
+        let f3 = fb.build(&emb, &Strategy::mv_early(8), 14);
+        assert_eq!(&f3[100..106], &[0.0, 0.0, 0.0, 0.0, 1.0, 0.0]);
+        let f4 = fb.build(&emb, &Strategy::beam_latency(4, 2, 12), 14);
+        assert_eq!(&f4[100..106], &[0.0, 0.0, 0.0, 0.0, 0.0, 1.0]);
+        assert!((f4[99] - 1.0).abs() < 1e-6); // rounds feature for beam family
     }
 
     #[test]

@@ -54,6 +54,10 @@ pub struct Router {
     pub probe: CalibratedProbe,
     pub costs: CostModel,
     pub features: FeatureBuilder,
+    /// Pre-rendered strategy ids (parallel to `strategies`): cost-model
+    /// keys on the per-request hot path — rendering an id consults the
+    /// decoding-method registry, which must not happen per request.
+    ids: Vec<String>,
     tokenizer: Tokenizer,
 }
 
@@ -64,11 +68,13 @@ impl Router {
         costs: CostModel,
         features: FeatureBuilder,
     ) -> Router {
+        let ids = strategies.iter().map(|s| s.id()).collect();
         Router {
             strategies,
             probe,
             costs,
             features,
+            ids,
             tokenizer: Tokenizer::new(),
         }
     }
@@ -93,9 +99,10 @@ impl Router {
         let probs = self.probe.predict(engine, feats)?;
         self.strategies
             .iter()
+            .zip(&self.ids)
             .zip(probs)
-            .map(|(s, acc_hat)| {
-                let cost = self.costs.get(&s.id())?;
+            .map(|((s, id), acc_hat)| {
+                let cost = self.costs.get(id)?;
                 Ok(StrategyScore {
                     strategy: s.clone(),
                     acc_hat,

@@ -14,7 +14,7 @@ use crate::probe::{train::build_rows, train::embed_queries, CalibratedProbe, Fea
 use crate::router::{Lambdas, Router};
 use crate::server::driver::{self, Mode};
 use crate::server::loadgen::{self, Arrivals};
-use crate::strategies::{Executor, Strategy};
+use crate::strategies::{Budget, Executor, Strategy};
 use crate::tokenizer::Tokenizer;
 use crate::util::json::Value;
 use crate::util::rng::Rng;
@@ -57,13 +57,20 @@ fn make_executor(cfg: &Config, engine: &Engine) -> Executor {
 
 fn feature_builder(engine: &Engine) -> Result<FeatureBuilder> {
     let info = engine.handle().info()?;
+    // features = d_model + strategy scalars + method one-hot + query len;
+    // the non-embedding width is registry-driven (see FeatureBuilder).
     let d_model = info
         .req("shapes")
         .ok()
         .and_then(|s| s.get("probe_features"))
         .and_then(Value::as_usize)
-        .map(|f| f - 9) // features = d_model + 4 + 4 + 1
-        .ok_or_else(|| Error::internal("engine info missing probe_features"))?;
+        .and_then(|f| f.checked_sub(FeatureBuilder::aux_dim()))
+        .ok_or_else(|| {
+            Error::internal(
+                "engine info missing probe_features (or artifacts predate the \
+                 current decoding-method registry — rerun `make artifacts`)",
+            )
+        })?;
     Ok(FeatureBuilder::new(d_model, 10))
 }
 
@@ -335,6 +342,7 @@ pub fn cmd_serve(raw: &[String]) -> Result<()> {
         COMMON_VALUES,
         &[
             "rate", "requests", "workers", "lambda-t", "lambda-l", "strategy", "embedding",
+            "deadline-ms", "max-tokens",
         ],
     ]
     .concat();
@@ -398,8 +406,23 @@ pub fn cmd_serve(raw: &[String]) -> Result<()> {
             rate: args.f64_or("rate", 1.0)?,
         }
     };
+    // per-request budget, enforced mid-strategy by the decoding method
+    let mut budget = Budget::unlimited();
+    let deadline_ms = args.f64_or("deadline-ms", 0.0)?;
+    if deadline_ms > 0.0 {
+        budget = budget.with_deadline_ms(deadline_ms);
+    }
+    let max_tokens = args.usize_or("max-tokens", 0)?;
+    if max_tokens > 0 {
+        budget = budget.with_max_tokens(max_tokens);
+    }
+    if !budget.is_unlimited() {
+        log_info!(
+            "serve: per-request budget deadline_ms={deadline_ms} max_tokens={max_tokens}"
+        );
+    }
     let mut rng = Rng::new(cfg.seed, 0x5E7E);
-    let schedule = loadgen::schedule(&splits.test, n, arrivals, &mut rng);
+    let schedule = loadgen::schedule_budgeted(&splits.test, n, arrivals, budget, &mut rng);
     let report = driver::run(&executor, &mode, schedule, workers)?;
     report.log_summary("test");
     std::fs::create_dir_all(&cfg.paths.results)?;

@@ -4,10 +4,11 @@
 //! This is the deployment shape of the paper's system: requests arrive,
 //! the router picks `s*(x)` under the operator's (λ_T, λ_L), the strategy
 //! executes against the shared engine (whose batcher merges concurrent
-//! generation), and the driver reports accuracy / tokens / latency
-//! percentiles / throughput.
+//! generation) under the request's [`Budget`] — deadlines are enforced
+//! *mid-strategy*, not just predicted by the router — and the driver
+//! reports accuracy / tokens / latency percentiles / throughput plus
+//! budget-enforcement fractions.
 
-use crate::data::Query;
 use crate::error::Result;
 use crate::metrics::Histogram;
 use crate::router::{Lambdas, Router};
@@ -34,8 +35,15 @@ pub enum Mode {
 pub struct Served {
     pub query_id: String,
     pub strategy: String,
+    /// Strategy chosen by the adaptive router (vs a static baseline).
+    pub routed: bool,
     pub correct: bool,
     pub tokens: usize,
+    /// The request's budget ran out mid-strategy.
+    pub budget_exhausted: bool,
+    /// The strategy finished before its configured work (early-stop vote
+    /// decided, deadline-aware round truncation).
+    pub stopped_early: bool,
     /// Strategy execution time (ms).
     pub service_ms: f64,
     /// Queue wait + execution (ms) — what the user experiences.
@@ -60,7 +68,9 @@ pub fn warmup(executor: &Executor, strategies: &[Strategy], query: &str) -> Resu
 }
 
 /// Run the driver over a schedule. `workers` controls concurrency (the
-/// engine's batcher merges concurrent generate calls).
+/// engine's batcher merges concurrent generate calls). The schedule is
+/// shared read-only (`Arc<Vec<_>>`); workers claim indices through one
+/// atomic cursor, so the hot path takes no lock.
 pub fn run(
     executor: &Executor,
     mode: &Mode,
@@ -69,7 +79,7 @@ pub fn run(
 ) -> Result<ServeReport> {
     let n = requests.len();
     let start = Instant::now();
-    let queue: Arc<Mutex<Vec<Request>>> = Arc::new(Mutex::new(requests));
+    let queue: Arc<Vec<Request>> = Arc::new(requests);
     let next_seq = Arc::new(AtomicUsize::new(0));
     let results: Arc<Mutex<Vec<Served>>> = Arc::new(Mutex::new(Vec::with_capacity(n)));
 
@@ -84,12 +94,9 @@ pub fn run(
             handles.push(scope.spawn(move || -> Result<()> {
                 loop {
                     let idx = next_seq.fetch_add(1, Ordering::SeqCst);
-                    let req = {
-                        let q = queue.lock().unwrap();
-                        match q.get(idx) {
-                            Some(r) => r.clone(),
-                            None => return Ok(()),
-                        }
+                    let req = match queue.get(idx) {
+                        Some(r) => r,
+                        None => return Ok(()),
                     };
                     // open-loop: wait for the arrival time
                     let now_ms = start.elapsed().as_secs_f64() * 1e3;
@@ -99,9 +106,8 @@ pub fn run(
                         ));
                     }
                     let arrived = start.elapsed().as_secs_f64() * 1e3;
-                    let served = serve_one(&executor, mode_ref, &req.query)?;
+                    let mut served = serve_one(&executor, mode_ref, req)?;
                     let done = start.elapsed().as_secs_f64() * 1e3;
-                    let mut served = served;
                     served.e2e_ms = done - req.arrival_ms.min(arrived);
                     results.lock().unwrap().push(served);
                 }
@@ -121,21 +127,23 @@ pub fn run(
     Ok(ServeReport::new(served, wall_s))
 }
 
-fn serve_one(executor: &Executor, mode: &Mode, query: &Query) -> Result<Served> {
+fn serve_one(executor: &Executor, mode: &Mode, req: &Request) -> Result<Served> {
     let (strategy, routed) = match mode {
         Mode::Adaptive(router, lambdas) => {
-            let score = router.select(&executor.engine, &query.query, *lambdas)?;
+            let score = router.select(&executor.engine, &req.query.query, *lambdas)?;
             (score.strategy, true)
         }
         Mode::Static(s) => (s.clone(), false),
     };
-    let outcome = executor.run(&strategy, &query.query)?;
-    let _ = routed;
+    let outcome = executor.run_budgeted(&strategy, &req.query.query, req.budget.clone())?;
     Ok(Served {
-        query_id: query.id.clone(),
+        query_id: req.query.id.clone(),
         strategy: strategy.id(),
-        correct: outcome.is_correct(&query.answer),
+        routed,
+        correct: outcome.is_correct(&req.query.answer),
         tokens: outcome.tokens,
+        budget_exhausted: outcome.budget_exhausted,
+        stopped_early: outcome.stopped_early,
         service_ms: outcome.latency_ms,
         e2e_ms: outcome.latency_ms, // overwritten by the driver
     })
@@ -156,6 +164,9 @@ impl ServeReport {
     pub fn to_json(&self) -> Value {
         let n = self.served.len().max(1);
         let correct = self.served.iter().filter(|s| s.correct).count();
+        let routed = self.served.iter().filter(|s| s.routed).count();
+        let exhausted = self.served.iter().filter(|s| s.budget_exhausted).count();
+        let stopped = self.served.iter().filter(|s| s.stopped_early).count();
         let tokens: Vec<f64> = self.served.iter().map(|s| s.tokens as f64).collect();
         let service = Histogram::new();
         let e2e = Histogram::new();
@@ -179,6 +190,9 @@ impl ServeReport {
             .with("throughput_rps", self.served.len() as f64 / self.wall_s.max(1e-9))
             .with("accuracy", correct as f64 / n as f64)
             .with("avg_tokens", stats::mean(&tokens))
+            .with("adaptive_fraction", routed as f64 / n as f64)
+            .with("budget_exhausted_fraction", exhausted as f64 / n as f64)
+            .with("stopped_early_fraction", stopped as f64 / n as f64)
             .with("service_ms", service.summary().to_json())
             .with("e2e_ms", e2e.summary().to_json())
             .with("selection", strat_json)
@@ -188,7 +202,7 @@ impl ServeReport {
         let v = self.to_json();
         log_info!(
             "serve[{label}]: {} reqs in {:.1}s ({:.2} rps), acc {:.3}, avg tokens {:.0}, \
-             e2e p50 {:.0}ms p95 {:.0}ms",
+             e2e p50 {:.0}ms p95 {:.0}ms, adaptive {:.0}%, budget-hit {:.0}%",
             self.served.len(),
             self.wall_s,
             v.req_f64("throughput_rps").unwrap_or(0.0),
@@ -196,6 +210,8 @@ impl ServeReport {
             v.req_f64("avg_tokens").unwrap_or(0.0),
             v.req("e2e_ms").and_then(|h| h.req_f64("p50")).unwrap_or(0.0),
             v.req("e2e_ms").and_then(|h| h.req_f64("p95")).unwrap_or(0.0),
+            100.0 * v.req_f64("adaptive_fraction").unwrap_or(0.0),
+            100.0 * v.req_f64("budget_exhausted_fraction").unwrap_or(0.0),
         );
     }
 }

@@ -1,7 +1,10 @@
 //! Load generation for the serving driver: open-loop Poisson arrivals
 //! (the standard serving-benchmark model) or closed-loop back-to-back.
+//! Each request carries a per-request [`Budget`] that the decoding
+//! method enforces mid-strategy.
 
 use crate::data::Query;
+use crate::strategies::Budget;
 use crate::util::rng::Rng;
 
 /// Arrival process shape.
@@ -20,11 +23,26 @@ pub struct Request {
     /// Offset from run start, ms (0 for closed-loop).
     pub arrival_ms: f64,
     pub seq: usize,
+    /// Per-request execution budget, enforced inside the strategy.
+    pub budget: Budget,
 }
 
 /// Build a request schedule by sampling `n` queries (with replacement)
-/// and assigning arrival times.
+/// and assigning arrival times; every request gets an unlimited budget.
 pub fn schedule(queries: &[Query], n: usize, arrivals: Arrivals, rng: &mut Rng) -> Vec<Request> {
+    schedule_budgeted(queries, n, arrivals, Budget::unlimited(), rng)
+}
+
+/// Like [`schedule`], but every request carries (a clone of) `budget` —
+/// the serving driver passes it through to the decoding method, which
+/// enforces it mid-strategy.
+pub fn schedule_budgeted(
+    queries: &[Query],
+    n: usize,
+    arrivals: Arrivals,
+    budget: Budget,
+    rng: &mut Rng,
+) -> Vec<Request> {
     assert!(!queries.is_empty(), "no queries to schedule");
     let mut t = 0.0f64;
     (0..n)
@@ -41,6 +59,7 @@ pub fn schedule(queries: &[Query], n: usize, arrivals: Arrivals, rng: &mut Rng) 
                 query,
                 arrival_ms,
                 seq,
+                budget: budget.clone(),
             }
         })
         .collect()
@@ -77,6 +96,17 @@ mod tests {
         let mut rng = Rng::new(3, 0);
         let reqs = schedule(&queries(), 10, Arrivals::Closed, &mut rng);
         assert!(reqs.iter().all(|r| r.arrival_ms == 0.0));
+        assert!(reqs.iter().all(|r| r.budget.is_unlimited()));
         assert_eq!(reqs.len(), 10);
+    }
+
+    #[test]
+    fn budgets_attach_to_every_request() {
+        let mut rng = Rng::new(3, 0);
+        let b = Budget::unlimited().with_deadline_ms(100.0).with_max_tokens(64);
+        let reqs = schedule_budgeted(&queries(), 5, Arrivals::Closed, b, &mut rng);
+        assert!(reqs
+            .iter()
+            .all(|r| r.budget.deadline_ms == Some(100.0) && r.budget.max_tokens == Some(64)));
     }
 }

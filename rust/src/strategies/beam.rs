@@ -1,11 +1,19 @@
-//! Step-synchronized beam search with PRM scoring (paper §2.1).
+//! Step-synchronized beam search with PRM scoring (paper §2.1), in two
+//! flavors sharing one core:
 //!
-//! `θ_Beam = (N, W, C)`: N active beams, W continuations per beam per
-//! round, chunks of up to C tokens per round (a chunk normally ends at
-//! the `;` CoT step boundary — the `lm_chunk` artifacts stop there). After
-//! each expansion round the PRM scores every live prefix and the top-N
-//! survive. After at most D rounds the N complete solutions vote on the
-//! final answer.
+//! * [`Beam`] (`beam`) — the paper's method. `θ = (N, W, C)`: N active
+//!   beams, W continuations per beam per round, chunks of up to C tokens
+//!   per round (a chunk normally ends at the `;` CoT step boundary).
+//!   After each round the PRM scores every live prefix and the top-N
+//!   survive; after at most D rounds the beams vote on the final answer.
+//!   Budgets are observed *reactively*: the round loop stops once the
+//!   deadline has passed or the token cap is hit.
+//! * [`LatencyAwareBeam`] (`beam_latency`) — deadline-aware variant in
+//!   the spirit of latency-aware test-time scaling (Wang et al., arXiv
+//!   2505.19634): before each round it predicts the round's cost from
+//!   the previous round's measured duration (with 1.2× headroom) and
+//!   stops *before* overshooting the deadline, reporting
+//!   `stopped_early`. Without a deadline it behaves exactly like `beam`.
 //!
 //! Cost structure (the paper's motivation): every round is a *sequential*
 //! engine call — generation cannot overlap across rounds — so latency
@@ -15,12 +23,11 @@
 use crate::engine::{GenJob, GenKind};
 use crate::error::Result;
 use crate::eval::{self, Candidate};
-use crate::strategies::executor::{Executor, Outcome};
-use crate::strategies::space::Strategy;
+use crate::strategies::method::{DecodingMethod, Outcome, RunCtx, StrategyParams};
 
 /// One live beam.
 #[derive(Debug, Clone)]
-struct Beam {
+struct BeamNode {
     /// Solution text so far (starts with `S:`).
     text: String,
     /// Latest PRM score of (query + text).
@@ -32,131 +39,202 @@ struct Beam {
     tokens: usize,
 }
 
-pub struct BeamSearch<'a> {
-    exec: &'a Executor,
-    strategy: &'a Strategy,
-}
+/// Safety factor on the predicted next-round cost for the deadline-aware
+/// variant: rounds grow as prefixes lengthen, so predict high.
+const ROUND_COST_HEADROOM: f64 = 1.2;
 
-impl<'a> BeamSearch<'a> {
-    pub fn new(exec: &'a Executor, strategy: &'a Strategy) -> BeamSearch<'a> {
-        BeamSearch { exec, strategy }
-    }
+/// Shared beam core. `deadline_aware` switches between reactive budget
+/// observance and predictive round truncation.
+fn run_beam(ctx: &RunCtx<'_>, params: &StrategyParams, deadline_aware: bool) -> Result<Outcome> {
+    let tok = ctx.tokenizer;
+    let t0 = ctx.now_ms();
+    let n = params.n.max(1);
+    let w = params.width.max(1);
+    let chunk_cap = params.chunk.max(1);
+    // memoizing PRM client: finished beams keep their prefix across
+    // rounds, so re-scoring them hits the cache instead of the engine
+    let mut prm = crate::prm::PrmClient::new(ctx.engine, tok);
 
-    pub fn run(&self, query: &str) -> Result<Outcome> {
-        let clock = &self.exec.clock;
-        let tok = &self.exec.tokenizer;
-        let t0 = clock.now_ms();
-        let n = self.strategy.n.max(1);
-        let w = self.strategy.width.max(1);
-        let chunk_cap = self.strategy.chunk.max(1);
-        // memoizing PRM client: finished beams keep their prefix across
-        // rounds, so re-scoring them hits the cache instead of the engine
-        let mut prm = crate::prm::PrmClient::new(&self.exec.engine, tok);
+    let mut beams = vec![BeamNode {
+        text: "S:".to_string(),
+        score: 0.5,
+        done: false,
+        tokens: 0,
+    }];
+    let mut tokens_total = 0usize;
+    let mut engine_calls = 0usize;
+    let mut budget_exhausted = false;
+    let mut stopped_early = false;
+    let mut last_round_ms = 0.0f64;
 
-        let mut beams = vec![Beam {
-            text: "S:".to_string(),
-            score: 0.5,
-            done: false,
-            tokens: 0,
-        }];
-        let mut tokens_total = 0usize;
-        let mut engine_calls = 0usize;
+    for round in 0..ctx.beam_max_rounds {
+        let elapsed = ctx.now_ms() - t0;
+        if ctx.budget.exhausted(tokens_total, elapsed) {
+            budget_exhausted = true;
+            break;
+        }
+        // Predictive truncation (deadline-aware variant): if the next
+        // round — estimated from the previous round's duration — would
+        // overrun the deadline, stop now instead of blowing through it.
+        if deadline_aware
+            && round > 0
+            && ROUND_COST_HEADROOM * last_round_ms > ctx.budget.ms_left(elapsed)
+        {
+            stopped_early = true;
+            break;
+        }
+        let round_start = ctx.now_ms();
 
-        for round in 0..self.exec.beam_max_rounds {
-            let live: Vec<usize> = (0..beams.len()).filter(|&i| !beams[i].done).collect();
-            if live.is_empty() {
-                break;
+        let live: Vec<usize> = (0..beams.len()).filter(|&i| !beams[i].done).collect();
+        if live.is_empty() {
+            break;
+        }
+        // Expand every live beam W ways (round 0 expands the root to
+        // N·W so the first PRM selection already sees N·W options).
+        let per_beam = if round == 0 { n * w } else { w };
+        let mut jobs = Vec::new();
+        let mut parents = Vec::new();
+        for &bi in &live {
+            let prompt = format!("{}{}", ctx.query, beams[bi].text);
+            let ids = tok.encode(&prompt)?;
+            if ids.len() + 2 >= ctx.max_prefix {
+                beams[bi].done = true; // length cap — force completion
+                continue;
             }
-            // Expand every live beam W ways (round 0 expands the root to
-            // N·W so the first PRM selection already sees N·W options).
-            let per_beam = if round == 0 { n * w } else { w };
-            let mut jobs = Vec::new();
-            let mut parents = Vec::new();
-            for &bi in &live {
-                let prompt = format!("{query}{}", beams[bi].text);
-                let ids = tok.encode(&prompt)?;
-                if ids.len() + 2 >= self.exec.max_prefix {
-                    beams[bi].done = true; // length cap — force completion
-                    continue;
-                }
-                for _ in 0..per_beam {
-                    jobs.push(GenJob {
-                        tokens: ids.clone(),
-                        kind: GenKind::Chunk,
-                        temperature: self.exec.temperature,
-                    });
-                    parents.push(bi);
-                }
-            }
-            if jobs.is_empty() {
-                break;
-            }
-            let results = self.exec.engine.generate(jobs)?;
-            engine_calls += 1;
-
-            // Build expansion candidates.
-            let mut expanded: Vec<Beam> = Vec::with_capacity(results.len());
-            for (r, &pi) in results.iter().zip(&parents) {
-                let mut kept = r.tokens.clone();
-                if kept.len() > chunk_cap {
-                    kept.truncate(chunk_cap); // chunk-size hyperparameter C
-                }
-                tokens_total += kept.len();
-                let piece = tok.decode(&kept)?;
-                let done = piece.contains('\n') || kept.is_empty();
-                expanded.push(Beam {
-                    text: format!("{}{}", beams[pi].text, piece),
-                    score: 0.0,
-                    done,
-                    tokens: beams[pi].tokens + kept.len(),
+            for _ in 0..per_beam {
+                jobs.push(GenJob {
+                    tokens: ids.clone(),
+                    kind: GenKind::Chunk,
+                    temperature: ctx.temperature,
                 });
+                parents.push(bi);
             }
-            // Carry over already-done beams to compete in selection.
-            let finished: Vec<Beam> = beams.iter().filter(|b| b.done).cloned().collect();
-            let mut pool = finished;
-            pool.extend(expanded);
+        }
+        if jobs.is_empty() {
+            break;
+        }
+        let results = ctx.engine.generate(jobs)?;
+        engine_calls += 1;
 
+        // Build expansion candidates (token accounting capped by budget).
+        let mut expanded: Vec<BeamNode> = Vec::with_capacity(results.len());
+        for (r, &pi) in results.iter().zip(&parents) {
+            let mut kept = r.tokens.clone();
+            if kept.len() > chunk_cap {
+                kept.truncate(chunk_cap); // chunk-size hyperparameter C
+            }
+            let (kept, truncated) = ctx.budget.clamp_tokens(tokens_total, &kept);
+            if truncated {
+                budget_exhausted = true;
+            }
+            tokens_total += kept.len();
+            let piece = tok.decode(&kept)?;
+            let done = piece.contains('\n') || kept.is_empty();
+            expanded.push(BeamNode {
+                text: format!("{}{}", beams[pi].text, piece),
+                score: 0.0,
+                done,
+                tokens: beams[pi].tokens + kept.len(),
+            });
+        }
+        // Carry over already-done beams to compete in selection.
+        let finished: Vec<BeamNode> = beams.iter().filter(|b| b.done).cloned().collect();
+        let mut pool = finished;
+        pool.extend(expanded);
+
+        // Budget spent during this round (token cap during accounting,
+        // or the generate call overran the deadline)? Then no further
+        // engine work — skip the PRM call and select on whatever scores
+        // the pool already has (fresh expansions stay at 0.0; the final
+        // majority vote only uses scores as tie-break weights).
+        if budget_exhausted || ctx.budget.exhausted(tokens_total, ctx.now_ms() - t0) {
+            budget_exhausted = true;
+        } else {
             // PRM-score the pool. Done beams keep identical prefixes, so
             // the memoizing client only sends fresh expansions to the
             // engine (measured: ~20% fewer PRM rows per beam run).
             let texts: Vec<String> = pool.iter().map(|b| b.text.clone()).collect();
-            let scores = prm.score(query, &texts)?;
+            let scores = prm.score(ctx.query, &texts)?;
             engine_calls += 1;
             for (b, s) in pool.iter_mut().zip(scores) {
                 b.score = s as f64;
             }
-
-            // Top-N by PRM score.
-            pool.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
-            pool.truncate(n);
-            beams = pool;
         }
 
-        // Force-finish any still-live beams (depth bound D hit).
-        for b in beams.iter_mut() {
-            b.done = true;
-        }
+        // Top-N by PRM score.
+        pool.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
+        pool.truncate(n);
+        beams = pool;
 
-        // Final answer: majority vote over the N beams (paper §2.1),
-        // PRM scores as tie-break weights.
-        let candidates: Vec<Candidate> = beams
-            .iter()
-            .map(|b| Candidate {
-                text: b.text.clone(),
-                score: b.score,
-                tokens: b.tokens,
-            })
-            .collect();
-        let chosen = eval::majority_vote(&candidates)
-            .map(|c| c.text.clone())
-            .unwrap_or_default();
-        let latency_ms = clock.now_ms() - t0;
-        Ok(Outcome {
-            answer: eval::extract_answer(&chosen),
-            chosen,
-            tokens: tokens_total,
-            latency_ms,
-            engine_calls,
+        last_round_ms = ctx.now_ms() - round_start;
+        if budget_exhausted {
+            break;
+        }
+    }
+
+    // Force-finish any still-live beams (depth bound D or budget hit).
+    for b in beams.iter_mut() {
+        b.done = true;
+    }
+
+    // Final answer: majority vote over the N beams (paper §2.1),
+    // PRM scores as tie-break weights.
+    let candidates: Vec<Candidate> = beams
+        .iter()
+        .map(|b| Candidate {
+            text: b.text.clone(),
+            score: b.score,
+            tokens: b.tokens,
         })
+        .collect();
+    let chosen = eval::majority_vote(&candidates)
+        .map(|c| c.text.clone())
+        .unwrap_or_default();
+    let latency_ms = ctx.now_ms() - t0;
+    Ok(Outcome {
+        answer: eval::extract_answer(&chosen),
+        chosen,
+        tokens: tokens_total,
+        latency_ms,
+        engine_calls,
+        budget_exhausted,
+        stopped_early,
+    })
+}
+
+/// The paper's step-synchronized beam search (`beam`).
+pub struct Beam;
+
+impl DecodingMethod for Beam {
+    fn name(&self) -> &'static str {
+        "beam"
+    }
+    fn describe(&self) -> &'static str {
+        "PRM-scored beam search: N beams x W expansions per CoT step"
+    }
+    fn uses_rounds(&self) -> bool {
+        true
+    }
+    fn run(&self, ctx: &RunCtx<'_>, params: &StrategyParams) -> Result<Outcome> {
+        run_beam(ctx, params, false)
+    }
+}
+
+/// Deadline-aware beam search (`beam_latency`): truncates rounds
+/// predictively as the per-request deadline approaches.
+pub struct LatencyAwareBeam;
+
+impl DecodingMethod for LatencyAwareBeam {
+    fn name(&self) -> &'static str {
+        "beam_latency"
+    }
+    fn describe(&self) -> &'static str {
+        "beam search that stops expanding before the deadline would be overrun"
+    }
+    fn uses_rounds(&self) -> bool {
+        true
+    }
+    fn run(&self, ctx: &RunCtx<'_>, params: &StrategyParams) -> Result<Outcome> {
+        run_beam(ctx, params, true)
     }
 }

@@ -1,0 +1,121 @@
+//! Early-stopping self-consistency (`mv_early`).
+//!
+//! Majority voting that issues candidates in *waves* and stops as soon as
+//! the vote is decided: when the leading answer's margin over the
+//! runner-up exceeds the number of candidates not yet issued, no
+//! remaining outcome can flip the result, so the tail of the batch is
+//! never generated. Easy queries converge in one wave; only contested
+//! queries spend the full N — the adaptive-allocation idea of Snell et
+//! al. (arXiv 2408.03314) expressed as a decoding method.
+//!
+//! Cost structure: between one and ⌈N/wave⌉ batched generate calls, so
+//! latency sits between majority voting (1 call) and beam search (one
+//! call per round), while expected token cost drops on easy queries.
+
+use crate::engine::{GenJob, GenKind};
+use crate::error::Result;
+use crate::eval::{self, Candidate};
+use crate::strategies::method::{
+    accumulate_candidates, DecodingMethod, Outcome, RunCtx, StrategyParams,
+};
+use std::collections::HashMap;
+
+pub struct EarlyStopMajority;
+
+impl EarlyStopMajority {
+    /// Wave size: a quarter of N (min 2) — up to four vote checkpoints.
+    fn wave(n: usize) -> usize {
+        (n / 4).max(2).min(n)
+    }
+}
+
+impl DecodingMethod for EarlyStopMajority {
+    fn name(&self) -> &'static str {
+        "mv_early"
+    }
+
+    fn describe(&self) -> &'static str {
+        "majority voting in waves, stops once the vote margin is decided"
+    }
+
+    fn run(&self, ctx: &RunCtx<'_>, params: &StrategyParams) -> Result<Outcome> {
+        let t0 = ctx.now_ms();
+        let n = params.n.max(1);
+        let prompt = format!("{}S:", ctx.query);
+        let prompt_ids = ctx.tokenizer.encode(&prompt)?;
+
+        let mut candidates: Vec<Candidate> = Vec::with_capacity(n);
+        let mut tokens_total = 0usize;
+        let mut engine_calls = 0usize;
+        let mut budget_exhausted = false;
+        let mut stopped_early = false;
+        let mut issued = 0usize;
+
+        while issued < n {
+            if ctx.budget.exhausted(tokens_total, ctx.now_ms() - t0) {
+                budget_exhausted = true;
+                break;
+            }
+            let batch = Self::wave(n).min(n - issued);
+            let jobs: Vec<GenJob> = (0..batch)
+                .map(|_| GenJob {
+                    tokens: prompt_ids.clone(),
+                    kind: GenKind::Full,
+                    temperature: ctx.temperature,
+                })
+                .collect();
+            let results = ctx.engine.generate(jobs)?;
+            engine_calls += 1;
+            issued += batch;
+            if accumulate_candidates(ctx, &results, &mut tokens_total, &mut candidates)? {
+                budget_exhausted = true;
+                break;
+            }
+            // Decided? Even if every unissued candidate voted for the
+            // runner-up, the leader would still win.
+            let mut counts: HashMap<String, usize> = HashMap::new();
+            for c in &candidates {
+                if let Some(a) = eval::extract_answer(&c.text) {
+                    *counts.entry(a).or_default() += 1;
+                }
+            }
+            let mut tallies: Vec<usize> = counts.values().copied().collect();
+            tallies.sort_unstable_by(|a, b| b.cmp(a));
+            let lead = tallies.first().copied().unwrap_or(0);
+            let second = tallies.get(1).copied().unwrap_or(0);
+            let remaining = n - issued;
+            if remaining > 0 && lead > second + remaining {
+                stopped_early = true;
+                break;
+            }
+        }
+
+        let chosen_text = eval::majority_vote(&candidates)
+            .map(|c| c.text.clone())
+            .unwrap_or_default();
+        Ok(Outcome {
+            answer: eval::extract_answer(&chosen_text),
+            chosen: chosen_text,
+            tokens: tokens_total,
+            latency_ms: ctx.now_ms() - t0,
+            engine_calls,
+            budget_exhausted,
+            stopped_early,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wave_sizing() {
+        assert_eq!(EarlyStopMajority::wave(1), 1);
+        assert_eq!(EarlyStopMajority::wave(2), 2);
+        assert_eq!(EarlyStopMajority::wave(4), 2);
+        assert_eq!(EarlyStopMajority::wave(8), 2);
+        assert_eq!(EarlyStopMajority::wave(16), 4);
+        assert_eq!(EarlyStopMajority::wave(32), 8);
+    }
+}

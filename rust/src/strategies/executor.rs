@@ -1,39 +1,24 @@
-//! Strategy execution against the engine.
+//! Strategy execution: a thin dispatcher over the decoding-method
+//! registry.
 //!
-//! One [`Executor`] per coordinator; it owns a tokenizer, talks to the
-//! engine handle and accounts tokens + latency per strategy run — the
-//! `T_s(x)` and `L_s(x)` of the paper's utility (Eq. 1). Latency is the
-//! full wall/sim time from submission to final answer, *including PRM
-//! scoring*, exactly as in appendix A.2.
+//! One [`Executor`] per coordinator; it owns a tokenizer and talks to the
+//! engine handle. Token + latency accounting — the `T_s(x)` and `L_s(x)`
+//! of the paper's utility (Eq. 1) — happens inside each
+//! [`crate::strategies::DecodingMethod`]: latency is the full wall/sim
+//! time from submission to final answer, *including PRM scoring*, exactly
+//! as in appendix A.2. The executor's only jobs are resolving the method
+//! by name and assembling the [`RunCtx`] (engine, clock, tokenizer,
+//! per-request [`Budget`]).
 
-use crate::engine::{EngineHandle, GenJob, GenKind};
-use crate::error::Result;
-use crate::eval::{self, Candidate};
-use crate::strategies::beam::BeamSearch;
-use crate::strategies::space::{Method, Strategy};
+use crate::engine::EngineHandle;
+use crate::error::{Error, Result};
+use crate::strategies::method::{Budget, RunCtx};
+use crate::strategies::registry;
+use crate::strategies::space::Strategy;
 use crate::tokenizer::Tokenizer;
 use crate::util::clock::SharedClock;
 
-/// Result of running one strategy on one query.
-#[derive(Debug, Clone)]
-pub struct Outcome {
-    /// Chosen solution text (includes the leading `S:`).
-    pub chosen: String,
-    /// Extracted final answer, if parseable.
-    pub answer: Option<String>,
-    /// Total tokens generated (all candidates / all beams incl. pruned).
-    pub tokens: usize,
-    /// End-to-end strategy latency in ms (generation + scoring).
-    pub latency_ms: f64,
-    /// Number of engine calls (diagnostic; beam ≫ parallel).
-    pub engine_calls: usize,
-}
-
-impl Outcome {
-    pub fn is_correct(&self, ground_truth: &str) -> bool {
-        self.answer.as_deref() == Some(ground_truth)
-    }
-}
+pub use crate::strategies::method::Outcome;
 
 /// Executes strategies; cheap to clone per worker thread.
 #[derive(Clone)]
@@ -43,7 +28,7 @@ pub struct Executor {
     pub tokenizer: Tokenizer,
     /// Sampling temperature for all candidate generation.
     pub temperature: f32,
-    /// Depth bound D for beam search (max expansion rounds).
+    /// Depth bound D for beam-family methods (max expansion rounds).
     pub beam_max_rounds: usize,
     /// Longest prefix (tokens) a beam may reach before being forced done —
     /// the engine's largest chunk length bucket.
@@ -62,72 +47,38 @@ impl Executor {
         }
     }
 
-    /// Run strategy `s` on `query` (full query text incl. trailing `\n`).
+    /// Run strategy `s` on `query` (full query text incl. trailing `\n`)
+    /// with no per-request budget — the offline/figure collection path.
     pub fn run(&self, strategy: &Strategy, query: &str) -> Result<Outcome> {
-        match strategy.method {
-            Method::Beam => BeamSearch::new(self, strategy).run(query),
-            _ => self.run_parallel(strategy, query),
-        }
+        self.run_budgeted(strategy, query, Budget::unlimited())
     }
 
-    /// Parallel methods: one batched generate + (for BoN) one PRM call.
-    fn run_parallel(&self, strategy: &Strategy, query: &str) -> Result<Outcome> {
-        let t0 = self.clock.now_ms();
-        let prompt = format!("{query}S:");
-        let prompt_ids = self.tokenizer.encode(&prompt)?;
-        let jobs: Vec<GenJob> = (0..strategy.n)
-            .map(|_| GenJob {
-                tokens: prompt_ids.clone(),
-                kind: GenKind::Full,
-                temperature: self.temperature,
-            })
-            .collect();
-        let results = self.engine.generate(jobs)?;
-        let mut engine_calls = 1;
-
-        let mut tokens_total = 0usize;
-        let mut candidates: Vec<Candidate> = Vec::with_capacity(results.len());
-        for r in &results {
-            tokens_total += r.tokens.len();
-            let text = format!("S:{}", self.tokenizer.decode(&r.tokens)?);
-            candidates.push(Candidate {
-                text,
-                score: 0.0,
-                tokens: r.tokens.len(),
-            });
-        }
-
-        // PRM scoring for best-of-N variants (appendix A.2: scoring time
-        // is part of latency).
-        if matches!(
-            strategy.method,
-            Method::BestOfNNaive | Method::BestOfNWeighted
-        ) {
-            let prefixes: Vec<Vec<u32>> = candidates
-                .iter()
-                .map(|c| self.tokenizer.encode(&format!("{query}{}", c.text)))
-                .collect::<Result<_>>()?;
-            let scores = self.engine.prm_score(prefixes)?;
-            engine_calls += 1;
-            for (c, s) in candidates.iter_mut().zip(scores) {
-                c.score = s as f64;
-            }
-        }
-
-        let chosen = match strategy.method {
-            Method::MajorityVote => eval::majority_vote(&candidates),
-            Method::BestOfNNaive => eval::best_of_n(&candidates),
-            Method::BestOfNWeighted => eval::weighted_vote(&candidates),
-            Method::Beam => unreachable!(),
+    /// Run under a per-request [`Budget`] — the serving path. The method
+    /// must observe the budget mid-strategy and report against it via
+    /// [`Outcome::budget_exhausted`] / [`Outcome::stopped_early`].
+    pub fn run_budgeted(
+        &self,
+        strategy: &Strategy,
+        query: &str,
+        budget: Budget,
+    ) -> Result<Outcome> {
+        let method = registry::get(strategy.method).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown decoding method '{}' (registered: {:?})",
+                strategy.method,
+                registry::all().iter().map(|m| m.name()).collect::<Vec<_>>()
+            ))
+        })?;
+        let ctx = RunCtx {
+            engine: &self.engine,
+            clock: &self.clock,
+            tokenizer: &self.tokenizer,
+            query,
+            temperature: self.temperature,
+            beam_max_rounds: self.beam_max_rounds,
+            max_prefix: self.max_prefix,
+            budget,
         };
-        let chosen_text = chosen.map(|c| c.text.clone()).unwrap_or_default();
-        let latency_ms = self.clock.now_ms() - t0;
-        Ok(Outcome {
-            answer: eval::extract_answer(&chosen_text),
-            chosen: chosen_text,
-            tokens: tokens_total,
-            latency_ms,
-            engine_calls,
-        })
+        method.run(&ctx, &strategy.params())
     }
 }

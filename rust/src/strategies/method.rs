@@ -1,0 +1,406 @@
+//! The open decoding-method API.
+//!
+//! A decoding method is anything that turns a query into an [`Outcome`]
+//! by spending engine calls: it implements [`DecodingMethod`] and is
+//! looked up by stable name in [`crate::strategies::registry`]. The
+//! method receives a [`RunCtx`] — engine handle, tokenizer, clock and the
+//! per-request [`Budget`] — plus its hyperparameters as
+//! [`StrategyParams`]. Everything downstream (probe features, cost-model
+//! keys, figures, the CLI) resolves methods by name, so adding a method
+//! is one `impl` + one `registry::register` call.
+//!
+//! Budgets are the paper's agentic serving story made concrete: the
+//! router *predicts* token/latency cost, but the budget lets the serving
+//! path *enforce* it mid-strategy — methods must stop issuing engine
+//! work once the budget is spent, and must report what happened through
+//! [`Outcome::budget_exhausted`] / [`Outcome::stopped_early`].
+
+use crate::engine::{EngineHandle, GenResult};
+use crate::error::Result;
+use crate::eval::Candidate;
+use crate::tokenizer::Tokenizer;
+use crate::util::clock::SharedClock;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Per-request execution budget, enforced *inside* strategies.
+///
+/// All limits are optional; `Budget::unlimited()` (the default) imposes
+/// none. `deadline_ms` is relative to strategy start. The contract for
+/// methods:
+///
+/// * never issue a new engine call once the budget is spent;
+/// * never account more than `max_tokens` generated tokens;
+/// * a single in-flight engine call may overshoot the deadline (the
+///   engine has no mid-batch preemption), but no *further* call may be
+///   issued after it.
+#[derive(Debug, Clone, Default)]
+pub struct Budget {
+    /// Hard cap on generated tokens accounted to this request.
+    pub max_tokens: Option<usize>,
+    /// Latency deadline in milliseconds from strategy start.
+    pub deadline_ms: Option<f64>,
+    /// Cooperative cancellation flag (set by the caller at any time).
+    pub cancel: Option<Arc<AtomicBool>>,
+}
+
+impl Budget {
+    /// No limits — the offline/figure collection default.
+    pub fn unlimited() -> Budget {
+        Budget::default()
+    }
+
+    pub fn with_max_tokens(mut self, max_tokens: usize) -> Budget {
+        self.max_tokens = Some(max_tokens);
+        self
+    }
+
+    pub fn with_deadline_ms(mut self, deadline_ms: f64) -> Budget {
+        self.deadline_ms = Some(deadline_ms);
+        self
+    }
+
+    pub fn with_cancel(mut self, flag: Arc<AtomicBool>) -> Budget {
+        self.cancel = Some(flag);
+        self
+    }
+
+    pub fn is_unlimited(&self) -> bool {
+        self.max_tokens.is_none() && self.deadline_ms.is_none() && self.cancel.is_none()
+    }
+
+    /// The caller flipped the cancellation flag.
+    pub fn cancelled(&self) -> bool {
+        if let Some(f) = &self.cancel {
+            f.load(Ordering::Relaxed)
+        } else {
+            false
+        }
+    }
+
+    /// Tokens still spendable given `used` so far (`usize::MAX` when
+    /// unlimited).
+    pub fn tokens_left(&self, used: usize) -> usize {
+        match self.max_tokens {
+            Some(cap) => cap.saturating_sub(used),
+            None => usize::MAX,
+        }
+    }
+
+    pub fn tokens_exhausted(&self, used: usize) -> bool {
+        match self.max_tokens {
+            Some(cap) => used >= cap,
+            None => false,
+        }
+    }
+
+    /// True once `elapsed_ms` (since strategy start) reaches the deadline.
+    pub fn deadline_passed(&self, elapsed_ms: f64) -> bool {
+        match self.deadline_ms {
+            Some(d) => elapsed_ms >= d,
+            None => false,
+        }
+    }
+
+    /// Milliseconds left before the deadline (`f64::INFINITY` when none).
+    pub fn ms_left(&self, elapsed_ms: f64) -> f64 {
+        match self.deadline_ms {
+            Some(d) => (d - elapsed_ms).max(0.0),
+            None => f64::INFINITY,
+        }
+    }
+
+    /// No further engine work may be issued.
+    pub fn exhausted(&self, used_tokens: usize, elapsed_ms: f64) -> bool {
+        self.cancelled() || self.tokens_exhausted(used_tokens) || self.deadline_passed(elapsed_ms)
+    }
+
+    /// Clamp one candidate's generated tokens to what the token cap
+    /// leaves, given `used` accounted so far. Returns the kept prefix
+    /// and whether the cap bit (shared accounting for every method —
+    /// keep this the single source of the truncation contract).
+    pub fn clamp_tokens(&self, used: usize, tokens: &[u32]) -> (Vec<u32>, bool) {
+        let left = self.tokens_left(used);
+        if tokens.len() > left {
+            (tokens[..left].to_vec(), true)
+        } else {
+            (tokens.to_vec(), false)
+        }
+    }
+}
+
+/// Hyperparameters `θ_m` of one strategy. Parallel methods use `n` only;
+/// round-based (beam-family) methods use all three.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct StrategyParams {
+    /// Candidates (parallel methods) or active beams (beam family).
+    pub n: usize,
+    /// Branching factor per beam per round (beam family; 1 otherwise).
+    pub width: usize,
+    /// Max tokens per beam round (0 for parallel methods).
+    pub chunk: usize,
+}
+
+impl StrategyParams {
+    pub fn parallel(n: usize) -> StrategyParams {
+        StrategyParams { n, width: 1, chunk: 0 }
+    }
+
+    pub fn beam(n: usize, width: usize, chunk: usize) -> StrategyParams {
+        StrategyParams { n, width, chunk }
+    }
+}
+
+/// Everything a decoding method needs to execute one request.
+pub struct RunCtx<'a> {
+    pub engine: &'a EngineHandle,
+    pub clock: &'a SharedClock,
+    pub tokenizer: &'a Tokenizer,
+    /// Full query text (incl. the trailing `\n`).
+    pub query: &'a str,
+    /// Sampling temperature for candidate generation.
+    pub temperature: f32,
+    /// Depth bound D for round-based methods (max expansion rounds).
+    pub beam_max_rounds: usize,
+    /// Longest prefix (tokens) a beam may reach before being forced done.
+    pub max_prefix: usize,
+    /// Per-request budget this method must observe and report against.
+    pub budget: Budget,
+}
+
+impl RunCtx<'_> {
+    pub fn now_ms(&self) -> f64 {
+        self.clock.now_ms()
+    }
+}
+
+/// Shared accumulation for single-prompt parallel candidates: clamp each
+/// generated result to the token budget, decode, and collect it as a
+/// [`Candidate`]. Once the cap is fully spent the remaining results are
+/// dropped. Returns true if the cap bit (the caller reports it as
+/// `budget_exhausted`). Keep this the single copy of the truncation
+/// contract — `majority_vote`, best-of-N and `mv_early` all go through
+/// it.
+pub(crate) fn accumulate_candidates(
+    ctx: &RunCtx<'_>,
+    results: &[GenResult],
+    tokens_total: &mut usize,
+    candidates: &mut Vec<Candidate>,
+) -> Result<bool> {
+    let mut truncated_any = false;
+    for r in results {
+        let (kept, truncated) = ctx.budget.clamp_tokens(*tokens_total, &r.tokens);
+        if truncated {
+            truncated_any = true;
+        }
+        if truncated && kept.is_empty() {
+            break; // cap fully spent — drop the remaining candidates
+        }
+        *tokens_total += kept.len();
+        let text = format!("S:{}", ctx.tokenizer.decode(&kept)?);
+        candidates.push(Candidate {
+            text,
+            score: 0.0,
+            tokens: kept.len(),
+        });
+    }
+    Ok(truncated_any)
+}
+
+/// Result of running one strategy on one query.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    /// Chosen solution text (includes the leading `S:`).
+    pub chosen: String,
+    /// Extracted final answer, if parseable.
+    pub answer: Option<String>,
+    /// Total tokens accounted (all candidates / all beams incl. pruned),
+    /// never exceeding `Budget::max_tokens`.
+    pub tokens: usize,
+    /// End-to-end strategy latency in ms (generation + scoring).
+    pub latency_ms: f64,
+    /// Number of engine calls (diagnostic; beam ≫ parallel).
+    pub engine_calls: usize,
+    /// The per-request budget ran out mid-strategy (token cap hit,
+    /// deadline passed, or cancelled) and the method stopped issuing
+    /// engine work.
+    pub budget_exhausted: bool,
+    /// The method finished before its configured work on purpose:
+    /// early-stop vote decided, or deadline-aware round truncation.
+    pub stopped_early: bool,
+}
+
+impl Outcome {
+    pub fn is_correct(&self, ground_truth: &str) -> bool {
+        self.answer.as_deref() == Some(ground_truth)
+    }
+
+    /// Outcome for a request whose budget was already spent before the
+    /// first engine call: no work, no answer, budget reported.
+    pub fn empty(latency_ms: f64) -> Outcome {
+        Outcome {
+            chosen: String::new(),
+            answer: None,
+            tokens: 0,
+            latency_ms,
+            engine_calls: 0,
+            budget_exhausted: true,
+            stopped_early: false,
+        }
+    }
+}
+
+/// An open-ended decoding method (paper §2.1 generalized).
+///
+/// Implementations are registered in [`crate::strategies::registry`];
+/// see the module docs of [`crate::strategies`] for the "adding a new
+/// decoding method" walkthrough.
+pub trait DecodingMethod: Send + Sync {
+    /// Stable registry id — also the prefix of
+    /// [`crate::strategies::Strategy::id`], a cost-model key, and the
+    /// probe one-hot label. Never change it once matrices exist.
+    fn name(&self) -> &'static str;
+
+    /// One-line description for docs and CLI listings.
+    fn describe(&self) -> &'static str;
+
+    /// Round-based methods (beam family) run sequential PRM-scored
+    /// rounds: they use `NxWcC` ids, contribute the rounds probe feature
+    /// and appear in round-structured figures (Fig 9).
+    fn uses_rounds(&self) -> bool {
+        false
+    }
+
+    /// Reasonable middle-of-the-space parameters (benches, smoke tests).
+    fn default_params(&self) -> StrategyParams {
+        if self.uses_rounds() {
+            StrategyParams::beam(4, 2, 12)
+        } else {
+            StrategyParams::parallel(4)
+        }
+    }
+
+    /// Render `θ_m` for [`crate::strategies::Strategy::id`]
+    /// (`"8"` or `"4x2c12"`).
+    fn format_params(&self, p: &StrategyParams) -> String {
+        if self.uses_rounds() {
+            format!("{}x{}c{}", p.n, p.width, p.chunk)
+        } else {
+            p.n.to_string()
+        }
+    }
+
+    /// Parse `θ_m` back (inverse of [`DecodingMethod::format_params`]).
+    fn parse_params(&self, s: &str) -> Option<StrategyParams> {
+        if self.uses_rounds() {
+            let (n, rest) = s.split_once('x')?;
+            let (w, c) = rest.split_once('c')?;
+            Some(StrategyParams::beam(
+                n.parse().ok()?,
+                w.parse().ok()?,
+                c.parse().ok()?,
+            ))
+        } else {
+            Some(StrategyParams::parallel(s.parse().ok()?))
+        }
+    }
+
+    /// Execute on `ctx.query` under `ctx.budget`.
+    fn run(&self, ctx: &RunCtx<'_>, params: &StrategyParams) -> Result<Outcome>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, prop_assert};
+
+    #[test]
+    fn unlimited_budget_never_binds() {
+        let b = Budget::unlimited();
+        assert!(b.is_unlimited());
+        assert!(!b.exhausted(usize::MAX - 1, 1e12));
+        assert_eq!(b.tokens_left(123), usize::MAX);
+        assert_eq!(b.ms_left(1e9), f64::INFINITY);
+    }
+
+    #[test]
+    fn token_cap_binds() {
+        let b = Budget::unlimited().with_max_tokens(10);
+        assert!(!b.tokens_exhausted(9));
+        assert!(b.tokens_exhausted(10));
+        assert_eq!(b.tokens_left(4), 6);
+        assert_eq!(b.tokens_left(15), 0);
+    }
+
+    #[test]
+    fn deadline_binds_at_zero() {
+        let b = Budget::unlimited().with_deadline_ms(0.0);
+        assert!(b.deadline_passed(0.0));
+        assert!(b.exhausted(0, 0.0));
+        let b = Budget::unlimited().with_deadline_ms(5.0);
+        assert!(!b.deadline_passed(4.9));
+        assert!(b.deadline_passed(5.0));
+        assert_eq!(b.ms_left(2.0), 3.0);
+        assert_eq!(b.ms_left(9.0), 0.0);
+    }
+
+    #[test]
+    fn cancel_flag_flips() {
+        let flag = Arc::new(AtomicBool::new(false));
+        let b = Budget::unlimited().with_cancel(flag.clone());
+        assert!(!b.cancelled());
+        flag.store(true, Ordering::Relaxed);
+        assert!(b.cancelled());
+        assert!(b.exhausted(0, 0.0));
+    }
+
+    #[test]
+    fn prop_budget_accounting_consistent() {
+        forall(
+            "exhausted ⇔ (cancel ∨ token cap ∨ deadline)",
+            300,
+            |rng| {
+                let cap = rng.below(200) as usize;
+                let used = rng.below(300) as usize;
+                let deadline = rng.f64() * 100.0;
+                let elapsed = rng.f64() * 150.0;
+                (cap, used, deadline, elapsed)
+            },
+            |&(cap, used, deadline, elapsed)| {
+                let b = Budget::unlimited()
+                    .with_max_tokens(cap)
+                    .with_deadline_ms(deadline);
+                let expect = used >= cap || elapsed >= deadline;
+                prop_assert(
+                    b.exhausted(used, elapsed) == expect,
+                    format!("cap={cap} used={used} deadline={deadline} elapsed={elapsed}"),
+                )?;
+                prop_assert(
+                    b.tokens_left(used) == cap.saturating_sub(used),
+                    "tokens_left mismatch".to_string(),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn empty_outcome_reports_flags() {
+        let o = Outcome::empty(1.5);
+        assert_eq!(o.tokens, 0);
+        assert_eq!(o.engine_calls, 0);
+        assert!(o.budget_exhausted);
+        assert!(!o.stopped_early);
+        assert!(!o.is_correct("3"));
+    }
+
+    #[test]
+    fn clamp_tokens_shared_accounting() {
+        let b = Budget::unlimited().with_max_tokens(5);
+        let toks = vec![1u32, 2, 3, 4];
+        assert_eq!(b.clamp_tokens(0, &toks), (toks.clone(), false));
+        assert_eq!(b.clamp_tokens(2, &toks), (vec![1, 2, 3], true));
+        assert_eq!(b.clamp_tokens(5, &toks), (vec![], true));
+        let unlimited = Budget::unlimited();
+        assert_eq!(unlimited.clamp_tokens(1_000_000, &toks), (toks.clone(), false));
+    }
+}

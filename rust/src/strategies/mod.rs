@@ -1,22 +1,57 @@
-//! Inference-time scaling strategies (paper §2.1).
+//! Inference-time scaling strategies (paper §2.1, generalized).
 //!
-//! A *decoding strategy* is `s = (method, θ_method)`:
+//! A *decoding strategy* is `s = (m, θ_m)` where `m` names a
+//! [`DecodingMethod`] in the open [`registry`] and `θ_m` is its
+//! [`StrategyParams`]. The built-in methods, in stable feature order:
 //!
-//! * **Majority voting** — N parallel candidates, most frequent answer.
-//! * **Best-of-N (naive)** — N parallel candidates, highest PRM score.
-//! * **Best-of-N (weighted)** — PRM scores aggregated across identical
-//!   answers.
-//! * **Beam search** — incremental: N beams × W expansions per CoT step,
-//!   PRM-scored, top-N retained, answer by majority over final beams.
+//! | id | description | shape |
+//! |---|---|---|
+//! | `majority_vote` | N parallel candidates, most frequent answer | 1 batched call |
+//! | `bon_naive` | N parallel candidates, highest PRM score | 1 call + PRM |
+//! | `bon_weighted` | PRM scores aggregated across identical answers | 1 call + PRM |
+//! | `beam` | N beams × W expansions per CoT step, PRM-pruned | 1 call *per round* |
+//! | `mv_early` | majority voting in waves, stops when the vote is decided | 1..⌈N/wave⌉ calls |
+//! | `beam_latency` | beam search with predictive deadline truncation | ≤ beam's calls |
 //!
 //! The parallel methods ride one batched `lm_generate` call (latency ≈ a
-//! single generation); beam search issues one batched `lm_chunk` call
+//! single generation); the beam family issues one batched `lm_chunk` call
 //! *per round* plus a PRM call — the step-synchronized structure whose
 //! latency cost the paper's router learns to avoid when `λ_L` is high.
+//! `mv_early` and `beam_latency` close the loop the paper leaves open:
+//! budgets are not just *predicted* by the router but *enforced* inside
+//! the strategy via the per-request [`Budget`] in [`RunCtx`].
+//!
+//! # Adding a new decoding method
+//!
+//! No edits to the router, probe features, cost model, figures or config
+//! enumeration are needed — they all resolve methods through the
+//! registry by stable name:
+//!
+//! 1. Implement [`DecodingMethod`] (see `parallel.rs` for the minimal
+//!    shape, `early_stop.rs` for a multi-call method). Honor
+//!    `ctx.budget`: stop issuing engine calls once it is exhausted and
+//!    report via `Outcome::{budget_exhausted, stopped_early}`.
+//! 2. Register it: built-ins append themselves to the table in
+//!    `registry.rs` (append-only — the order is the probe one-hot
+//!    index); external code calls
+//!    `registry::register(Box::new(MyMethod))` once at startup.
+//! 3. Put it in the space: add `"my_method@8"` to `space.extra` in the
+//!    config (or a `Strategy::new("my_method", params)` anywhere). Ids
+//!    round-trip through `Strategy::id`/`Strategy::parse` automatically;
+//!    cost-model keys, matrices and figures pick the method up from its
+//!    id.
+//! 4. Re-run `collect`/`train-probe`: the probe one-hot block widens
+//!    with the registry, so `python/compile/model.py::PROBE_FEATURES`
+//!    must match `registry::len()` when regenerating artifacts.
 
 pub mod beam;
+pub mod early_stop;
 pub mod executor;
+pub mod method;
+pub mod parallel;
+pub mod registry;
 pub mod space;
 
-pub use executor::{Executor, Outcome};
-pub use space::{Method, Strategy};
+pub use executor::Executor;
+pub use method::{Budget, DecodingMethod, Outcome, RunCtx, StrategyParams};
+pub use space::Strategy;

@@ -1,0 +1,149 @@
+//! Single-batch parallel methods: majority voting and best-of-N.
+//!
+//! All three ride one batched `lm_generate` call (latency ≈ a single
+//! generation); the best-of-N variants add one batched PRM call. Budget
+//! semantics: token accounting is truncated at `Budget::max_tokens`
+//! (candidates beyond the cap are dropped), and the PRM call is skipped
+//! when the deadline has already passed — a late request degrades to an
+//! unscored pick instead of spending another engine call.
+
+use crate::engine::{GenJob, GenKind};
+use crate::error::Result;
+use crate::eval::{self, Candidate};
+use crate::strategies::method::{
+    accumulate_candidates, DecodingMethod, Outcome, RunCtx, StrategyParams,
+};
+
+/// How the winning candidate is chosen.
+#[derive(Clone, Copy)]
+enum Chooser {
+    Majority,
+    BestNaive,
+    BestWeighted,
+}
+
+impl Chooser {
+    fn needs_prm(self) -> bool {
+        !matches!(self, Chooser::Majority)
+    }
+
+    fn choose(self, candidates: &[Candidate]) -> Option<&Candidate> {
+        match self {
+            Chooser::Majority => eval::majority_vote(candidates),
+            Chooser::BestNaive => eval::best_of_n(candidates),
+            Chooser::BestWeighted => eval::weighted_vote(candidates),
+        }
+    }
+}
+
+/// Shared runner: one batched generate + optional PRM scoring (appendix
+/// A.2: scoring time is part of latency), with budget observance.
+fn run_single_batch(
+    ctx: &RunCtx<'_>,
+    params: &StrategyParams,
+    chooser: Chooser,
+) -> Result<Outcome> {
+    let t0 = ctx.now_ms();
+    if ctx.budget.exhausted(0, 0.0) {
+        return Ok(Outcome::empty(ctx.now_ms() - t0));
+    }
+    let n = params.n.max(1);
+    let prompt = format!("{}S:", ctx.query);
+    let prompt_ids = ctx.tokenizer.encode(&prompt)?;
+    let jobs: Vec<GenJob> = (0..n)
+        .map(|_| GenJob {
+            tokens: prompt_ids.clone(),
+            kind: GenKind::Full,
+            temperature: ctx.temperature,
+        })
+        .collect();
+    let results = ctx.engine.generate(jobs)?;
+    let mut engine_calls = 1usize;
+
+    let mut tokens_total = 0usize;
+    let mut candidates: Vec<Candidate> = Vec::with_capacity(results.len());
+    let mut budget_exhausted =
+        accumulate_candidates(ctx, &results, &mut tokens_total, &mut candidates)?;
+
+    if chooser.needs_prm() && !candidates.is_empty() {
+        if budget_exhausted
+            || ctx.budget.deadline_passed(ctx.now_ms() - t0)
+            || ctx.budget.cancelled()
+        {
+            // No further engine calls once the budget is spent (token
+            // cap, deadline or cancellation); the chooser falls back to
+            // the first parseable candidate.
+            budget_exhausted = true;
+        } else {
+            let prefixes: Vec<Vec<u32>> = candidates
+                .iter()
+                .map(|c| ctx.tokenizer.encode(&format!("{}{}", ctx.query, c.text)))
+                .collect::<Result<_>>()?;
+            let scores = ctx.engine.prm_score(prefixes)?;
+            engine_calls += 1;
+            for (c, s) in candidates.iter_mut().zip(scores) {
+                c.score = s as f64;
+            }
+        }
+    }
+
+    let chosen_text = chooser
+        .choose(&candidates)
+        .map(|c| c.text.clone())
+        .unwrap_or_default();
+    Ok(Outcome {
+        answer: eval::extract_answer(&chosen_text),
+        chosen: chosen_text,
+        tokens: tokens_total,
+        latency_ms: ctx.now_ms() - t0,
+        engine_calls,
+        budget_exhausted,
+        stopped_early: false,
+    })
+}
+
+/// N parallel candidates, most frequent answer (paper §2.1 "Majority").
+pub struct MajorityVote;
+
+impl DecodingMethod for MajorityVote {
+    fn name(&self) -> &'static str {
+        "majority_vote"
+    }
+    fn describe(&self) -> &'static str {
+        "N parallel candidates, most frequent extracted answer"
+    }
+    fn run(&self, ctx: &RunCtx<'_>, params: &StrategyParams) -> Result<Outcome> {
+        run_single_batch(ctx, params, Chooser::Majority)
+    }
+}
+
+/// N parallel candidates, highest PRM score wins (paper §2.1 "Naive").
+pub struct BestOfNNaive;
+
+impl DecodingMethod for BestOfNNaive {
+    fn name(&self) -> &'static str {
+        "bon_naive"
+    }
+    fn describe(&self) -> &'static str {
+        "N parallel candidates, single highest PRM score wins"
+    }
+    fn run(&self, ctx: &RunCtx<'_>, params: &StrategyParams) -> Result<Outcome> {
+        run_single_batch(ctx, params, Chooser::BestNaive)
+    }
+}
+
+/// N parallel candidates, PRM scores aggregated over identical answers
+/// (paper §2.1 "Weighted").
+pub struct BestOfNWeighted;
+
+impl DecodingMethod for BestOfNWeighted {
+    fn name(&self) -> &'static str {
+        "bon_weighted"
+    }
+    fn describe(&self) -> &'static str {
+        "N parallel candidates, PRM scores summed per identical answer"
+    }
+    fn run(&self, ctx: &RunCtx<'_>, params: &StrategyParams) -> Result<Outcome> {
+        run_single_batch(ctx, params, Chooser::BestWeighted)
+    }
+}

@@ -1,0 +1,110 @@
+//! Global decoding-method registry.
+//!
+//! Maps stable method names to [`DecodingMethod`] implementations. The
+//! built-in methods are installed on first access in a fixed order — the
+//! order *is* the probe one-hot feature index, so it must never be
+//! reshuffled once probes have been trained (append-only). Additional
+//! methods can be registered at runtime with [`register`]; they extend
+//! the feature layout for builders constructed afterwards.
+
+use crate::error::{Error, Result};
+use crate::strategies::beam::{Beam, LatencyAwareBeam};
+use crate::strategies::early_stop::EarlyStopMajority;
+use crate::strategies::method::DecodingMethod;
+use crate::strategies::parallel::{BestOfNNaive, BestOfNWeighted, MajorityVote};
+use std::sync::{OnceLock, RwLock};
+
+fn table() -> &'static RwLock<Vec<&'static dyn DecodingMethod>> {
+    static TABLE: OnceLock<RwLock<Vec<&'static dyn DecodingMethod>>> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        // Append-only: indices 0..3 match the pre-registry Method enum
+        // (and any probe checkpoint trained against it, modulo width).
+        RwLock::new(vec![
+            &MajorityVote as &'static dyn DecodingMethod,
+            &BestOfNNaive,
+            &BestOfNWeighted,
+            &Beam,
+            &EarlyStopMajority,
+            &LatencyAwareBeam,
+        ])
+    })
+}
+
+/// Look up a method by its stable id.
+pub fn get(name: &str) -> Option<&'static dyn DecodingMethod> {
+    table().read().unwrap().iter().copied().find(|m| m.name() == name)
+}
+
+/// All registered methods, in stable feature order.
+pub fn all() -> Vec<&'static dyn DecodingMethod> {
+    table().read().unwrap().clone()
+}
+
+/// Number of registered methods — the width of the probe one-hot block
+/// for feature builders constructed now.
+pub fn len() -> usize {
+    table().read().unwrap().len()
+}
+
+/// Stable one-hot index of a method (its registration order).
+pub fn feature_index(name: &str) -> Option<usize> {
+    table().read().unwrap().iter().position(|m| m.name() == name)
+}
+
+/// Register a new decoding method. The implementation is leaked to get a
+/// `'static` handle (registration is once-per-process by design).
+/// Returns an error — without leaking — if the name is already taken.
+pub fn register(method: Box<dyn DecodingMethod>) -> Result<&'static dyn DecodingMethod> {
+    let mut t = table().write().unwrap();
+    if t.iter().any(|m| m.name() == method.name()) {
+        return Err(Error::Config(format!(
+            "decoding method '{}' is already registered",
+            method.name()
+        )));
+    }
+    let method: &'static dyn DecodingMethod = Box::leak(method);
+    t.push(method);
+    Ok(method)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_present_in_stable_order() {
+        let names: Vec<&str> = all().iter().map(|m| m.name()).collect();
+        // Append-only contract: the first six are frozen.
+        assert_eq!(
+            &names[..6],
+            &[
+                "majority_vote",
+                "bon_naive",
+                "bon_weighted",
+                "beam",
+                "mv_early",
+                "beam_latency"
+            ]
+        );
+        for (i, n) in names.iter().enumerate().take(6) {
+            assert_eq!(feature_index(n), Some(i));
+        }
+    }
+
+    #[test]
+    fn lookup_and_misses() {
+        assert!(get("beam").is_some());
+        assert!(get("majority_vote").is_some());
+        assert!(get("nope").is_none());
+        assert!(feature_index("nope").is_none());
+        assert!(len() >= 6);
+    }
+
+    #[test]
+    fn round_methods_flagged() {
+        assert!(get("beam").unwrap().uses_rounds());
+        assert!(get("beam_latency").unwrap().uses_rounds());
+        assert!(!get("majority_vote").unwrap().uses_rounds());
+        assert!(!get("mv_early").unwrap().uses_rounds());
+    }
+}

@@ -1,116 +1,98 @@
 //! The strategy space `S` the router selects from.
+//!
+//! A [`Strategy`] names a registered [`crate::strategies::DecodingMethod`]
+//! by its stable id and carries the hyperparameters `θ_m`. Ids round-trip
+//! through [`Strategy::id`] / [`Strategy::parse`] for *any* registered
+//! method — matrices, cost-model keys, probe features, figures and the
+//! CLI all resolve methods by name, never by enum arm, so growing the
+//! method set never touches them.
 
 use crate::config::SpaceConfig;
-
-/// Inference-scaling method families (paper §2.1).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Method {
-    MajorityVote,
-    BestOfNNaive,
-    BestOfNWeighted,
-    Beam,
-}
-
-impl Method {
-    pub fn name(self) -> &'static str {
-        match self {
-            Method::MajorityVote => "majority_vote",
-            Method::BestOfNNaive => "bon_naive",
-            Method::BestOfNWeighted => "bon_weighted",
-            Method::Beam => "beam",
-        }
-    }
-
-    /// One-hot index for probe features (order fixed — see
-    /// `python/compile/model.py::PROBE_FEATURES`).
-    pub fn one_hot_index(self) -> usize {
-        match self {
-            Method::MajorityVote => 0,
-            Method::BestOfNNaive => 1,
-            Method::BestOfNWeighted => 2,
-            Method::Beam => 3,
-        }
-    }
-}
+use crate::strategies::method::StrategyParams;
+use crate::strategies::registry;
 
 /// A fully-parameterized decoding strategy `s = (m, θ_m)`.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct Strategy {
-    pub method: Method,
-    /// Candidates (parallel methods) or active beams (beam search).
+    /// Stable id of the registered decoding method.
+    pub method: &'static str,
+    /// Candidates (parallel methods) or active beams (beam family).
     pub n: usize,
-    /// Branching factor (beam search; 1 otherwise).
+    /// Branching factor (beam family; 1 otherwise).
     pub width: usize,
     /// Max tokens per beam-search round (0 for parallel methods).
     pub chunk: usize,
 }
 
 impl Strategy {
-    pub fn mv(n: usize) -> Strategy {
+    pub fn new(method: &'static str, params: StrategyParams) -> Strategy {
         Strategy {
-            method: Method::MajorityVote,
-            n,
-            width: 1,
-            chunk: 0,
+            method,
+            n: params.n,
+            width: params.width,
+            chunk: params.chunk,
         }
+    }
+
+    pub fn mv(n: usize) -> Strategy {
+        Strategy::new("majority_vote", StrategyParams::parallel(n))
     }
 
     pub fn bon_naive(n: usize) -> Strategy {
-        Strategy {
-            method: Method::BestOfNNaive,
-            n,
-            width: 1,
-            chunk: 0,
-        }
+        Strategy::new("bon_naive", StrategyParams::parallel(n))
     }
 
     pub fn bon_weighted(n: usize) -> Strategy {
-        Strategy {
-            method: Method::BestOfNWeighted,
-            n,
-            width: 1,
-            chunk: 0,
-        }
+        Strategy::new("bon_weighted", StrategyParams::parallel(n))
     }
 
     pub fn beam(n: usize, width: usize, chunk: usize) -> Strategy {
-        Strategy {
-            method: Method::Beam,
-            n,
-            width,
-            chunk,
+        Strategy::new("beam", StrategyParams::beam(n, width, chunk))
+    }
+
+    pub fn mv_early(n: usize) -> Strategy {
+        Strategy::new("mv_early", StrategyParams::parallel(n))
+    }
+
+    pub fn beam_latency(n: usize, width: usize, chunk: usize) -> Strategy {
+        Strategy::new("beam_latency", StrategyParams::beam(n, width, chunk))
+    }
+
+    /// The hyperparameters `θ_m` as passed to the decoding method.
+    pub fn params(&self) -> StrategyParams {
+        StrategyParams {
+            n: self.n,
+            width: self.width,
+            chunk: self.chunk,
         }
     }
 
-    /// Stable identifier used in matrices, figures and logs.
+    /// Is the method round-based (beam family)? Drives the rounds probe
+    /// feature and the round-structured figures.
+    pub fn uses_rounds(&self) -> bool {
+        registry::get(self.method).is_some_and(|m| m.uses_rounds())
+    }
+
+    /// Stable identifier used in matrices, figures and logs — the
+    /// method's registry id plus its formatted `θ_m`.
     pub fn id(&self) -> String {
-        match self.method {
-            Method::Beam => format!("beam@{}x{}c{}", self.n, self.width, self.chunk),
-            m => format!("{}@{}", m.name(), self.n),
+        match registry::get(self.method) {
+            Some(m) => format!("{}@{}", self.method, m.format_params(&self.params())),
+            None => format!("{}@{}", self.method, self.n),
         }
     }
 
-    /// Parse an id produced by [`Strategy::id`].
+    /// Parse an id produced by [`Strategy::id`] — resolves the method in
+    /// the registry, so newly registered methods parse with no changes
+    /// here.
     pub fn parse(id: &str) -> Option<Strategy> {
         let (name, params) = id.split_once('@')?;
-        match name {
-            "beam" => {
-                let (n, rest) = params.split_once('x')?;
-                let (w, c) = rest.split_once('c')?;
-                Some(Strategy::beam(
-                    n.parse().ok()?,
-                    w.parse().ok()?,
-                    c.parse().ok()?,
-                ))
-            }
-            "majority_vote" => Some(Strategy::mv(params.parse().ok()?)),
-            "bon_naive" => Some(Strategy::bon_naive(params.parse().ok()?)),
-            "bon_weighted" => Some(Strategy::bon_weighted(params.parse().ok()?)),
-            _ => None,
-        }
+        let method = registry::get(name)?;
+        Some(Strategy::new(method.name(), method.parse_params(params)?))
     }
 
-    /// Enumerate the full space from config.
+    /// Enumerate the full space from config. `extra` ids are validated at
+    /// config-merge time; anything unparseable here is skipped.
     pub fn enumerate(space: &SpaceConfig) -> Vec<Strategy> {
         let mut out = Vec::new();
         for &n in &space.mv_ns {
@@ -124,6 +106,13 @@ impl Strategy {
         }
         for &(n, w, c) in &space.beam {
             out.push(Strategy::beam(n, w, c));
+        }
+        for id in &space.extra {
+            if let Some(s) = Strategy::parse(id) {
+                if !out.contains(&s) {
+                    out.push(s);
+                }
+            }
         }
         out
     }
@@ -152,13 +141,36 @@ mod tests {
     }
 
     #[test]
+    fn every_registered_method_roundtrips() {
+        // Registry round-trip: `Strategy::parse(id) == strategy` for
+        // every registered method at several parameter points.
+        for m in registry::all() {
+            for params in [
+                m.default_params(),
+                StrategyParams { n: 1, ..m.default_params() },
+                StrategyParams { n: 16, ..m.default_params() },
+            ] {
+                let s = Strategy::new(m.name(), params);
+                let parsed = Strategy::parse(&s.id());
+                assert_eq!(parsed, Some(s.clone()), "id {}", s.id());
+            }
+        }
+    }
+
+    #[test]
     fn enumerate_counts() {
         let space = SpaceConfig::default();
         let all = Strategy::enumerate(&space);
         assert_eq!(
             all.len(),
-            space.mv_ns.len() + 2 * space.bon_ns.len() + space.beam.len()
+            space.mv_ns.len()
+                + 2 * space.bon_ns.len()
+                + space.beam.len()
+                + space.extra.len()
         );
+        // default space exercises both new methods
+        assert!(all.iter().any(|s| s.method == "mv_early"));
+        assert!(all.iter().any(|s| s.method == "beam_latency"));
         // ids unique
         let mut ids: Vec<String> = all.iter().map(|s| s.id()).collect();
         ids.sort();
@@ -171,5 +183,16 @@ mod tests {
         assert!(Strategy::parse("nope@3").is_none());
         assert!(Strategy::parse("beam@ax2c3").is_none());
         assert!(Strategy::parse("majority_vote").is_none());
+        assert!(Strategy::parse("mv_early@").is_none());
+        assert!(Strategy::parse("beam_latency@2x2").is_none());
+    }
+
+    #[test]
+    fn beam_family_ids_carry_full_params() {
+        assert_eq!(Strategy::beam(4, 2, 12).id(), "beam@4x2c12");
+        assert_eq!(Strategy::beam_latency(4, 2, 12).id(), "beam_latency@4x2c12");
+        assert_eq!(Strategy::mv_early(8).id(), "mv_early@8");
+        assert!(Strategy::beam_latency(4, 2, 12).uses_rounds());
+        assert!(!Strategy::mv_early(8).uses_rounds());
     }
 }

@@ -1,0 +1,116 @@
+//! Budget-observance property: *every* registered decoding method must
+//! respect a tight per-request [`Budget`] — token accounting never
+//! exceeds the cap, a spent deadline forbids any engine work, and a
+//! pre-set cancel flag stops the method before generation. Needs
+//! `make artifacts`; skips otherwise.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use ttc::config::Config;
+use ttc::data::Splits;
+use ttc::engine::Engine;
+use ttc::strategies::{registry, Budget, Executor, Strategy};
+
+fn setup() -> Option<(Engine, Executor, String)> {
+    let cfg = Config::default();
+    if !cfg.paths.artifacts.join("hlo_index.json").exists() {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    let engine = Engine::start(&cfg).unwrap();
+    let executor = Executor::new(engine.handle(), engine.clock.clone(), cfg.engine.temperature);
+    let splits = Splits::load(&cfg.paths().data_dir()).unwrap();
+    let query = splits.test[0].query.clone();
+    Some((engine, executor, query))
+}
+
+#[test]
+fn token_cap_binds_every_method() {
+    let Some((_engine, executor, query)) = setup() else {
+        return;
+    };
+    for m in registry::all() {
+        let s = Strategy::new(m.name(), m.default_params());
+        for cap in [1usize, 8, 32, 200] {
+            let o = executor
+                .run_budgeted(&s, &query, Budget::unlimited().with_max_tokens(cap))
+                .unwrap();
+            assert!(
+                o.tokens <= cap,
+                "{}: accounted {} tokens over cap {cap}",
+                s.id(),
+                o.tokens
+            );
+            // a 1-token cap cannot fit a real solution: it must be
+            // reported as a budget hit (or the method gave up earlier)
+            if cap == 1 && o.tokens == cap {
+                assert!(o.budget_exhausted, "{}: cap hit unreported", s.id());
+            }
+            // contract: once the cap is spent, no further engine call —
+            // for BoN that means the PRM scoring call must be skipped
+            if cap == 1 && matches!(m.name(), "bon_naive" | "bon_weighted") {
+                assert_eq!(
+                    o.engine_calls, 1,
+                    "{}: PRM call issued after the token cap was spent",
+                    s.id()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn spent_deadline_forbids_engine_work() {
+    let Some((_engine, executor, query)) = setup() else {
+        return;
+    };
+    for m in registry::all() {
+        let s = Strategy::new(m.name(), m.default_params());
+        let o = executor
+            .run_budgeted(&s, &query, Budget::unlimited().with_deadline_ms(0.0))
+            .unwrap();
+        assert_eq!(o.tokens, 0, "{}: spent deadline must forbid generation", s.id());
+        assert_eq!(o.engine_calls, 0, "{}: engine call after spent deadline", s.id());
+        assert!(
+            o.budget_exhausted || o.stopped_early,
+            "{}: spent deadline unreported",
+            s.id()
+        );
+    }
+}
+
+#[test]
+fn preset_cancel_stops_every_method() {
+    let Some((_engine, executor, query)) = setup() else {
+        return;
+    };
+    let flag = Arc::new(AtomicBool::new(true)); // cancelled before start
+    for m in registry::all() {
+        let s = Strategy::new(m.name(), m.default_params());
+        let o = executor
+            .run_budgeted(&s, &query, Budget::unlimited().with_cancel(flag.clone()))
+            .unwrap();
+        assert_eq!(o.tokens, 0, "{}: cancelled run generated tokens", s.id());
+        assert_eq!(o.engine_calls, 0, "{}: engine call after cancel", s.id());
+        assert!(o.budget_exhausted || o.stopped_early, "{}", s.id());
+    }
+}
+
+#[test]
+fn unlimited_budget_changes_nothing() {
+    let Some((_engine, executor, query)) = setup() else {
+        return;
+    };
+    // run() and run_budgeted(unlimited) are the same code path; flags
+    // must stay clean for a generous budget on a parallel method
+    let o = executor
+        .run_budgeted(
+            &Strategy::mv(2),
+            &query,
+            Budget::unlimited().with_max_tokens(1_000_000),
+        )
+        .unwrap();
+    assert!(o.tokens > 0);
+    assert!(!o.budget_exhausted);
+    assert!(!o.stopped_early);
+}

@@ -16,6 +16,8 @@ fn mini_config() -> Config {
     cfg.space.mv_ns = vec![1, 4];
     cfg.space.bon_ns = vec![4];
     cfg.space.beam = vec![(2, 2, 12)];
+    // exercise a registry-registered method through the full pipeline
+    cfg.space.extra = vec!["mv_early@4".into()];
     cfg.probe.epochs = 6;
     cfg
 }
@@ -31,7 +33,8 @@ fn matrix_probe_figures_end_to_end() {
     let executor = Executor::new(engine.handle(), engine.clock.clone(), cfg.engine.temperature);
     let splits = Splits::load(&cfg.paths().data_dir()).unwrap();
     let strategies = Strategy::enumerate(&cfg.space);
-    assert_eq!(strategies.len(), 5); // mv@1, mv@4, bon_naive@4, bon_weighted@4, beam
+    // mv@1, mv@4, bon_naive@4, bon_weighted@4, beam, mv_early@4
+    assert_eq!(strategies.len(), 6);
 
     let tmp = std::env::temp_dir().join(format!("ttc_it_pipeline_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&tmp);
@@ -53,7 +56,7 @@ fn matrix_probe_figures_end_to_end() {
         &executor, test_q, "test", &strategies, 1, &tmp.join("test.jsonl"),
     )
     .unwrap();
-    assert_eq!(train_m.entries.len(), 10 * 5 * 2);
+    assert_eq!(train_m.entries.len(), 10 * 6 * 2);
 
     // resume: a second collect call does zero new work (same file)
     let again = matrix::collect(
@@ -69,7 +72,7 @@ fn matrix_probe_figures_end_to_end() {
         .unwrap()
         .req_usize("probe_features")
         .unwrap();
-    let fb = FeatureBuilder::new(features - 9, cfg.space.beam_max_rounds);
+    let fb = FeatureBuilder::new(features - FeatureBuilder::aux_dim(), cfg.space.beam_max_rounds);
     let (probe, report) = train_probe(
         &engine.handle(),
         &train_m,

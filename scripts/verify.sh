@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Tier-1 verification in one command (mirrors .github/workflows/ci.yml).
+#
+#   scripts/verify.sh          # build + test + clippy
+#   scripts/verify.sh --quick  # build + test only (skip clippy)
+#
+# Integration tests that need AOT artifacts (`make artifacts`) self-skip
+# when artifacts/hlo_index.json is absent, so this runs green on a fresh
+# checkout.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+if [[ "${1:-}" != "--quick" ]]; then
+    echo "==> cargo clippy --all-targets -- -D warnings"
+    cargo clippy --all-targets -- -D warnings
+fi
+
+echo "verify: OK"
