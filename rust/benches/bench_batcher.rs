@@ -17,10 +17,11 @@ fn jobs(n: usize, seed: u64) -> Vec<GenJob> {
                 GenKind::Full => rng.range(8, 32) as usize,
                 GenKind::Chunk => rng.range(16, 128) as usize,
             };
-            GenJob {
-                tokens: vec![2; len],
-                kind,
-                temperature: 0.8,
+            let job = GenJob::new(vec![2; len], kind, 0.8);
+            if rng.below(2) == 0 {
+                job.with_max_new_tokens(rng.range(4, 64) as usize)
+            } else {
+                job
             }
         })
         .collect()

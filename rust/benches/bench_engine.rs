@@ -26,11 +26,7 @@ fn main() {
 
     for n in [1usize, 4, 16] {
         let jobs: Vec<GenJob> = (0..n)
-            .map(|_| GenJob {
-                tokens: prompt.clone(),
-                kind: GenKind::Full,
-                temperature: 0.8,
-            })
+            .map(|_| GenJob::new(prompt.clone(), GenKind::Full, 0.8))
             .collect();
         let mut tokens_out = 0usize;
         let mean_ns = bench(&format!("generate_b{n}"), || {
@@ -45,14 +41,20 @@ fn main() {
     // beam-style chunk call
     let chunk_prompt = tok.encode("Q:7+8-2+8=?\nS:7+8=5;").unwrap();
     let jobs: Vec<GenJob> = (0..8)
-        .map(|_| GenJob {
-            tokens: chunk_prompt.clone(),
-            kind: GenKind::Chunk,
-            temperature: 0.8,
-        })
+        .map(|_| GenJob::new(chunk_prompt.clone(), GenKind::Chunk, 0.8))
         .collect();
     bench("chunk_b8", || {
         std::hint::black_box(handle.generate(jobs.clone()).unwrap());
+    });
+
+    // mid-call preemption overhead: the same batched call with a spent
+    // deadline — measures the engine's preempt/accounting path, which
+    // must stay cheap relative to the call itself
+    let capped: Vec<GenJob> = (0..8)
+        .map(|_| GenJob::new(prompt.clone(), GenKind::Full, 0.8).with_max_new_tokens(4))
+        .collect();
+    bench("generate_b8_cap4_preempt", || {
+        std::hint::black_box(handle.generate(capped.clone()).unwrap());
     });
 
     // embeddings (router path)

@@ -8,7 +8,7 @@
 use ttc::config::SpaceConfig;
 use ttc::costmodel::CostEstimate;
 use ttc::probe::FeatureBuilder;
-use ttc::router::{select_offline, Lambdas};
+use ttc::router::{pick_feasible, select_offline, Lambdas, StrategyScore};
 use ttc::strategies::{registry, Strategy};
 use ttc::util::bench::{bench, header};
 use ttc::util::rng::Rng;
@@ -35,6 +35,24 @@ fn main() {
 
     bench("select_offline_full_space", || {
         std::hint::black_box(select_offline(&probs, &costs, lambdas));
+    });
+
+    // budget-aware selection: deadline feasibility filter + argmax over
+    // the full space (the serving hot path with a per-request deadline)
+    let scores: Vec<StrategyScore> = strategies
+        .iter()
+        .zip(&probs)
+        .zip(&costs)
+        .map(|((s, &acc_hat), &cost)| StrategyScore {
+            strategy: s.clone(),
+            acc_hat,
+            full_latency_ms: cost.latency_ms,
+            cost,
+            utility: lambdas.utility(acc_hat, &cost),
+        })
+        .collect();
+    bench("pick_feasible_deadline500ms", || {
+        std::hint::black_box(pick_feasible(&scores, Some(500.0)));
     });
 
     let fb = FeatureBuilder::new(96, 10);

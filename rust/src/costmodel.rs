@@ -1,15 +1,39 @@
-//! Cost models `T̂_s(x)`, `L̂_s(x)` (paper §2.4).
+//! Cost models `T̂_s(x)`, `L̂_s(x)` (paper §2.4), budget-aware.
 //!
-//! Following the paper, predicted costs are **per-strategy training-set
-//! means** — "cost variation is dominated by the choice of strategy
-//! rather than the query" (validated by our Figs 7/8 reproduction, where
-//! mean-cost routing tracks oracle-cost routing closely).
+//! Following the paper, unbudgeted predicted costs are **per-strategy
+//! training-set means** — "cost variation is dominated by the choice of
+//! strategy rather than the query" (validated by our Figs 7/8
+//! reproduction, where mean-cost routing tracks oracle-cost routing
+//! closely).
+//!
+//! Under a per-request deadline the realized cost is *truncated*: the
+//! engine preempts decoding mid-call and the beam family stops issuing
+//! rounds. The model therefore also fits a per-(strategy,
+//! deadline-bucket) table from the same matrix by predicting what each
+//! recorded run would have cost under that bucket's deadline:
+//!
+//! * round-based strategies (beam family): predict **rounds completed**
+//!   — `⌊d / per_round_ms⌋` rounds at the run's mean per-round cost;
+//! * single-batch parallel strategies: mid-call preemption prorates the
+//!   call linearly — `min(latency, d)` and the matching token fraction.
+//!
+//! [`CostModel::get_budgeted`] resolves a request deadline to the
+//! smallest bucket that covers it (conservative: never predicts more
+//! truncation than the deadline allows), so the router's feasibility
+//! check — predicted latency ≤ deadline — excludes exactly the
+//! strategies whose truncated work still would not fit.
 
 use crate::error::{Error, Result};
 use crate::matrix::Matrix;
+use crate::strategies::Strategy;
 use crate::util::json::Value;
 use crate::util::stats;
 use std::collections::HashMap;
+
+/// Deadline-bucket upper edges (ms) used by [`CostModel::fit`]. An
+/// implicit unbounded bucket (the unbudgeted means) follows the last
+/// edge.
+pub const DEFAULT_DEADLINE_BUCKETS: &[f64] = &[250.0, 500.0, 1000.0, 2000.0, 4000.0, 8000.0];
 
 /// Predicted cost of one strategy.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -18,41 +42,135 @@ pub struct CostEstimate {
     pub latency_ms: f64,
 }
 
-/// Per-strategy mean cost table fitted on the train-split matrix.
+/// Per-strategy cost tables fitted on the train-split matrix: unbudgeted
+/// means plus truncated per-deadline-bucket estimates.
 #[derive(Debug, Clone, Default)]
 pub struct CostModel {
     table: HashMap<String, CostEstimate>,
+    /// Ascending deadline-bucket upper edges (ms).
+    buckets: Vec<f64>,
+    /// Strategy id → per-bucket truncated estimates (parallel to
+    /// `buckets`).
+    bucketed: HashMap<String, Vec<CostEstimate>>,
+}
+
+/// `(tokens, latency_ms, rounds)` of one recorded run.
+type RunCost = (f64, f64, usize);
+
+/// Predict one recorded run's cost under deadline `d`. `rounds` is the
+/// run's completed generation rounds; `uses_rounds` selects the
+/// rounds-completed model over linear proration.
+fn truncate_run(
+    tokens: f64,
+    latency_ms: f64,
+    rounds: usize,
+    uses_rounds: bool,
+    d: f64,
+) -> CostEstimate {
+    if latency_ms <= d {
+        return CostEstimate { tokens, latency_ms };
+    }
+    if uses_rounds && rounds > 0 {
+        let per_round_ms = latency_ms / rounds as f64;
+        let per_round_tokens = tokens / rounds as f64;
+        let rounds_done = ((d / per_round_ms).floor() as usize).min(rounds);
+        CostEstimate {
+            tokens: per_round_tokens * rounds_done as f64,
+            latency_ms: per_round_ms * rounds_done as f64,
+        }
+    } else {
+        let frac = (d / latency_ms.max(1e-9)).clamp(0.0, 1.0);
+        CostEstimate {
+            tokens: tokens * frac,
+            latency_ms: latency_ms.min(d),
+        }
+    }
 }
 
 impl CostModel {
-    /// Fit means from a (train-split) matrix.
+    /// Fit means + default deadline buckets from a (train-split) matrix.
     pub fn fit(matrix: &Matrix) -> CostModel {
-        let mut groups: HashMap<String, (Vec<f64>, Vec<f64>)> = HashMap::new();
+        CostModel::fit_with_buckets(matrix, DEFAULT_DEADLINE_BUCKETS)
+    }
+
+    /// Fit with explicit deadline-bucket edges (ascending, ms).
+    pub fn fit_with_buckets(matrix: &Matrix, buckets: &[f64]) -> CostModel {
+        let mut groups: HashMap<String, Vec<RunCost>> = HashMap::new();
         for e in &matrix.entries {
-            let g = groups.entry(e.strategy.clone()).or_default();
-            g.0.push(e.tokens as f64);
-            g.1.push(e.latency_ms);
+            groups
+                .entry(e.strategy.clone())
+                .or_default()
+                .push((e.tokens as f64, e.latency_ms, e.rounds.max(1)));
+        }
+        let mean_est = |costs: &[CostEstimate]| CostEstimate {
+            tokens: stats::mean(&costs.iter().map(|c| c.tokens).collect::<Vec<_>>()),
+            latency_ms: stats::mean(&costs.iter().map(|c| c.latency_ms).collect::<Vec<_>>()),
+        };
+        let mut table = HashMap::new();
+        let mut bucketed = HashMap::new();
+        for (s, runs) in groups {
+            let uses_rounds = Strategy::parse(&s).is_some_and(|st| st.uses_rounds());
+            let per_bucket: Vec<CostEstimate> = buckets
+                .iter()
+                .map(|&d| {
+                    let cut: Vec<CostEstimate> = runs
+                        .iter()
+                        .map(|&(t, l, r)| truncate_run(t, l, r, uses_rounds, d))
+                        .collect();
+                    mean_est(&cut)
+                })
+                .collect();
+            let full: Vec<CostEstimate> = runs
+                .iter()
+                .map(|&(t, l, _)| CostEstimate {
+                    tokens: t,
+                    latency_ms: l,
+                })
+                .collect();
+            table.insert(s.clone(), mean_est(&full));
+            bucketed.insert(s, per_bucket);
         }
         CostModel {
-            table: groups
-                .into_iter()
-                .map(|(s, (toks, lats))| {
-                    (
-                        s,
-                        CostEstimate {
-                            tokens: stats::mean(&toks),
-                            latency_ms: stats::mean(&lats),
-                        },
-                    )
-                })
-                .collect(),
+            table,
+            buckets: buckets.to_vec(),
+            bucketed,
         }
     }
 
+    /// Unbudgeted per-strategy mean (the paper's `T̂`, `L̂`).
     pub fn get(&self, strategy_id: &str) -> Result<CostEstimate> {
         self.table.get(strategy_id).copied().ok_or_else(|| {
             Error::internal(format!("no cost estimate for strategy '{strategy_id}'"))
         })
+    }
+
+    /// Predicted cost under an optional request deadline: the truncated
+    /// estimate of the smallest bucket covering `deadline_ms`, or the
+    /// unbudgeted mean when there is no deadline / no bucket covers it /
+    /// the model was loaded from a pre-bucket checkpoint.
+    pub fn get_budgeted(
+        &self,
+        strategy_id: &str,
+        deadline_ms: Option<f64>,
+    ) -> Result<CostEstimate> {
+        let unbudgeted = self.get(strategy_id)?;
+        let Some(d) = deadline_ms else {
+            return Ok(unbudgeted);
+        };
+        let Some(ix) = self.buckets.iter().position(|&edge| edge >= d) else {
+            return Ok(unbudgeted);
+        };
+        Ok(self
+            .bucketed
+            .get(strategy_id)
+            .and_then(|v| v.get(ix))
+            .copied()
+            .unwrap_or(unbudgeted))
+    }
+
+    /// Bucket edges this model was fitted with (empty for legacy models).
+    pub fn bucket_edges(&self) -> &[f64] {
+        &self.buckets
     }
 
     pub fn len(&self) -> usize {
@@ -64,24 +182,50 @@ impl CostModel {
     }
 
     pub fn to_json(&self) -> Value {
-        let mut obj = Value::obj();
+        let mut strategies = Value::obj();
         let mut ids: Vec<&String> = self.table.keys().collect();
         ids.sort();
         for id in ids {
             let c = self.table[id];
-            obj.set(
-                id,
-                Value::obj()
-                    .with("tokens", c.tokens)
-                    .with("latency_ms", c.latency_ms),
-            );
+            let mut entry = Value::obj()
+                .with("tokens", c.tokens)
+                .with("latency_ms", c.latency_ms);
+            if let Some(per_bucket) = self.bucketed.get(id.as_str()) {
+                let arr: Vec<Value> = per_bucket
+                    .iter()
+                    .map(|b| {
+                        Value::obj()
+                            .with("tokens", b.tokens)
+                            .with("latency_ms", b.latency_ms)
+                    })
+                    .collect();
+                entry.set("by_bucket", Value::Arr(arr));
+            }
+            strategies.set(id, entry);
         }
-        obj
+        Value::obj()
+            .with("buckets", self.buckets.clone())
+            .with("strategies", strategies)
     }
 
     pub fn from_json(v: &Value) -> Result<CostModel> {
+        // New format: {buckets: [...], strategies: {id: {..., by_bucket}}}.
+        // Legacy format (pre-bucket): {id: {tokens, latency_ms}, ...}.
+        let (buckets, strat_obj) = match (v.get("buckets"), v.get("strategies")) {
+            (Some(b), Some(s)) => {
+                let edges: Vec<f64> = b
+                    .as_arr()
+                    .ok_or_else(|| Error::Json("buckets must be an array".into()))?
+                    .iter()
+                    .map(|e| e.as_f64().ok_or_else(|| Error::Json("bad bucket edge".into())))
+                    .collect::<Result<_>>()?;
+                (edges, s)
+            }
+            _ => (Vec::new(), v),
+        };
         let mut table = HashMap::new();
-        for (k, c) in v
+        let mut bucketed = HashMap::new();
+        for (k, c) in strat_obj
             .as_obj()
             .ok_or_else(|| Error::Json("cost model must be an object".into()))?
         {
@@ -92,8 +236,31 @@ impl CostModel {
                     latency_ms: c.req_f64("latency_ms")?,
                 },
             );
+            if let Some(arr) = c.get("by_bucket").and_then(Value::as_arr) {
+                let per_bucket: Vec<CostEstimate> = arr
+                    .iter()
+                    .map(|b| {
+                        Ok(CostEstimate {
+                            tokens: b.req_f64("tokens")?,
+                            latency_ms: b.req_f64("latency_ms")?,
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                if per_bucket.len() != buckets.len() {
+                    return Err(Error::Json(format!(
+                        "strategy '{k}' has {} bucket estimates for {} buckets",
+                        per_bucket.len(),
+                        buckets.len()
+                    )));
+                }
+                bucketed.insert(k.clone(), per_bucket);
+            }
         }
-        Ok(CostModel { table })
+        Ok(CostModel {
+            table,
+            buckets,
+            bucketed,
+        })
     }
 }
 
@@ -102,39 +269,26 @@ mod tests {
     use super::*;
     use crate::matrix::MatrixEntry;
 
+    fn entry(q: &str, s: &str, tokens: usize, latency_ms: f64, rounds: usize) -> MatrixEntry {
+        MatrixEntry {
+            query_id: q.into(),
+            split: "train".into(),
+            strategy: s.into(),
+            repeat: 0,
+            k: 2,
+            correct: true,
+            tokens,
+            latency_ms,
+            rounds,
+        }
+    }
+
     fn m() -> Matrix {
         Matrix {
             entries: vec![
-                MatrixEntry {
-                    query_id: "a".into(),
-                    split: "train".into(),
-                    strategy: "mv@4".into(),
-                    repeat: 0,
-                    k: 2,
-                    correct: true,
-                    tokens: 100,
-                    latency_ms: 50.0,
-                },
-                MatrixEntry {
-                    query_id: "b".into(),
-                    split: "train".into(),
-                    strategy: "mv@4".into(),
-                    repeat: 0,
-                    k: 5,
-                    correct: false,
-                    tokens: 200,
-                    latency_ms: 150.0,
-                },
-                MatrixEntry {
-                    query_id: "a".into(),
-                    split: "train".into(),
-                    strategy: "beam@4x2c12".into(),
-                    repeat: 0,
-                    k: 2,
-                    correct: true,
-                    tokens: 900,
-                    latency_ms: 2000.0,
-                },
+                entry("a", "majority_vote@4", 100, 50.0, 1),
+                entry("b", "majority_vote@4", 200, 150.0, 1),
+                entry("a", "beam@4x2c12", 900, 2000.0, 10),
             ],
         }
     }
@@ -142,7 +296,7 @@ mod tests {
     #[test]
     fn fit_means() {
         let cm = CostModel::fit(&m());
-        let c = cm.get("mv@4").unwrap();
+        let c = cm.get("majority_vote@4").unwrap();
         assert_eq!(c.tokens, 150.0);
         assert_eq!(c.latency_ms, 100.0);
         assert_eq!(cm.get("beam@4x2c12").unwrap().tokens, 900.0);
@@ -150,10 +304,91 @@ mod tests {
     }
 
     #[test]
-    fn json_roundtrip() {
+    fn json_roundtrip_with_buckets() {
         let cm = CostModel::fit(&m());
         let back = CostModel::from_json(&cm.to_json()).unwrap();
-        assert_eq!(back.get("mv@4").unwrap(), cm.get("mv@4").unwrap());
+        assert_eq!(
+            back.get("majority_vote@4").unwrap(),
+            cm.get("majority_vote@4").unwrap()
+        );
         assert_eq!(back.len(), cm.len());
+        assert_eq!(back.bucket_edges(), cm.bucket_edges());
+        for &d in DEFAULT_DEADLINE_BUCKETS {
+            assert_eq!(
+                back.get_budgeted("beam@4x2c12", Some(d)).unwrap(),
+                cm.get_budgeted("beam@4x2c12", Some(d)).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn legacy_flat_json_still_loads() {
+        let legacy = crate::util::json::parse(
+            r#"{"mv@4": {"tokens": 120.0, "latency_ms": 60.0}}"#,
+        )
+        .unwrap();
+        let cm = CostModel::from_json(&legacy).unwrap();
+        assert_eq!(cm.get("mv@4").unwrap().tokens, 120.0);
+        // no buckets: budgeted lookups fall back to the flat mean
+        let c = cm.get_budgeted("mv@4", Some(10.0)).unwrap();
+        assert_eq!(c.latency_ms, 60.0);
+    }
+
+    #[test]
+    fn rounds_truncation_for_beam_family() {
+        let cm = CostModel::fit(&m());
+        // beam: 2000ms over 10 rounds = 200ms/round, 90 tokens/round.
+        // A 1000ms bucket fits 5 rounds.
+        let c = cm.get_budgeted("beam@4x2c12", Some(1000.0)).unwrap();
+        assert!((c.latency_ms - 1000.0).abs() < 1e-9);
+        assert!((c.tokens - 450.0).abs() < 1e-9);
+        // and the truncated estimate respects the bucket edge
+        for &d in DEFAULT_DEADLINE_BUCKETS {
+            let c = cm.get_budgeted("beam@4x2c12", Some(d)).unwrap();
+            assert!(
+                c.latency_ms <= d + 1e-9,
+                "bucket {d}: {} exceeds edge",
+                c.latency_ms
+            );
+        }
+    }
+
+    #[test]
+    fn proration_for_parallel_methods() {
+        let cm = CostModel::fit(&m());
+        // mv runs: (100 tok, 50ms) fits a 100ms deadline whole;
+        // (200 tok, 150ms) prorates to 2/3 → 133.3 tok, 100ms.
+        let c = cm.get_budgeted("majority_vote@4", Some(100.0)).unwrap();
+        assert!((c.latency_ms - 75.0).abs() < 1e-9); // mean(50, 100)
+        let expected_tokens = (100.0 + 200.0 * (100.0 / 150.0)) / 2.0;
+        assert!((c.tokens - expected_tokens).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deadline_beyond_buckets_is_unbudgeted() {
+        let cm = CostModel::fit(&m());
+        assert_eq!(
+            cm.get_budgeted("beam@4x2c12", Some(1e9)).unwrap(),
+            cm.get("beam@4x2c12").unwrap()
+        );
+        assert_eq!(
+            cm.get_budgeted("beam@4x2c12", None).unwrap(),
+            cm.get("beam@4x2c12").unwrap()
+        );
+    }
+
+    #[test]
+    fn truncate_run_edge_cases() {
+        // run faster than the deadline: unchanged
+        let c = truncate_run(100.0, 50.0, 1, false, 200.0);
+        assert_eq!(c, CostEstimate { tokens: 100.0, latency_ms: 50.0 });
+        // rounds model: deadline shorter than one round → zero work
+        let c = truncate_run(900.0, 2000.0, 10, true, 100.0);
+        assert_eq!(c.latency_ms, 0.0);
+        assert_eq!(c.tokens, 0.0);
+        // proration at half the latency
+        let c = truncate_run(100.0, 200.0, 1, false, 100.0);
+        assert!((c.tokens - 50.0).abs() < 1e-9);
+        assert!((c.latency_ms - 100.0).abs() < 1e-9);
     }
 }

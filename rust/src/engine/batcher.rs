@@ -20,6 +20,11 @@ pub struct BatchPlan {
     pub len_bucket: usize,
     pub kind: GenKind,
     pub temperature: f32,
+    /// Upper bound on decode steps this call needs: the largest per-job
+    /// `max_new_tokens` among its rows, or `None` when any row is
+    /// uncapped (the executable's own limit applies). The engine's
+    /// accounting loop stops charging decode steps past this bound.
+    pub max_steps: Option<usize>,
 }
 
 impl BatchPlan {
@@ -68,12 +73,22 @@ pub fn plan_batches(
     let mut plans = Vec::new();
     for ((kind, len_bucket, temp_bits), indices) in groups {
         for chunk in indices.chunks(max_bucket) {
+            // a single uncapped row forces the whole call to run to the
+            // executable's own limit; otherwise the largest cap bounds it
+            let mut max_steps = Some(0usize);
+            for &i in chunk {
+                max_steps = match (max_steps, jobs[i].max_new_tokens) {
+                    (Some(acc), Some(cap)) => Some(acc.max(cap)),
+                    _ => None,
+                };
+            }
             plans.push(BatchPlan {
                 job_indices: chunk.to_vec(),
                 bucket: pick_bucket(batch_buckets, chunk.len()),
                 len_bucket,
                 kind,
                 temperature: f32::from_bits(temp_bits),
+                max_steps,
             });
         }
     }
@@ -90,11 +105,7 @@ mod tests {
     const LENS: &[usize] = &[32, 64, 96, 128];
 
     fn job(n_tokens: usize, kind: GenKind, temp: f32) -> GenJob {
-        GenJob {
-            tokens: vec![2; n_tokens],
-            kind,
-            temperature: temp,
-        }
+        GenJob::new(vec![2; n_tokens], kind, temp)
     }
 
     #[test]
@@ -144,6 +155,29 @@ mod tests {
         let jobs = vec![job(8, GenKind::Full, 0.8), job(8, GenKind::Full, 0.5)];
         let plans = plan_batches(&jobs, BUCKETS, LENS, 32);
         assert_eq!(plans.len(), 2);
+    }
+
+    #[test]
+    fn max_steps_is_largest_cap() {
+        let jobs = vec![
+            job(8, GenKind::Full, 0.8).with_max_new_tokens(5),
+            job(8, GenKind::Full, 0.8).with_max_new_tokens(17),
+            job(8, GenKind::Full, 0.8).with_max_new_tokens(3),
+        ];
+        let plans = plan_batches(&jobs, BUCKETS, LENS, 32);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].max_steps, Some(17));
+    }
+
+    #[test]
+    fn uncapped_row_unbounds_the_call() {
+        let jobs = vec![
+            job(8, GenKind::Full, 0.8).with_max_new_tokens(5),
+            job(8, GenKind::Full, 0.8), // no cap
+        ];
+        let plans = plan_batches(&jobs, BUCKETS, LENS, 32);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].max_steps, None);
     }
 
     // ---- properties ----

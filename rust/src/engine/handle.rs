@@ -33,7 +33,19 @@ macro_rules! rpc {
 impl EngineHandle {
     /// Generate all jobs (blocking); results in job order.
     pub fn generate(&self, jobs: Vec<GenJob>) -> Result<Vec<GenResult>> {
-        rpc!(self, Generate { jobs: jobs })
+        self.generate_with_deadline(jobs, None)
+    }
+
+    /// Generate under an *absolute* engine-clock deadline: once
+    /// `deadline_ms` passes, the engine halts the in-flight batched call
+    /// for these jobs and returns partial results tagged
+    /// [`GenResult::preempted`]. Per-job caps/cancel ride on [`GenJob`].
+    pub fn generate_with_deadline(
+        &self,
+        jobs: Vec<GenJob>,
+        deadline_ms: Option<f64>,
+    ) -> Result<Vec<GenResult>> {
+        rpc!(self, Generate { jobs: jobs, deadline_ms: deadline_ms })
     }
 
     /// Score CoT prefixes with the PRM.

@@ -19,10 +19,14 @@
 //! (the crate returns outputs as a single tuple buffer, so per-token
 //! round-trips would copy the whole cache through host literals). The
 //! batcher therefore packs *sequence jobs* — candidate generations or
-//! beam-chunk extensions — into bucket-sized calls.
+//! beam-chunk extensions — into bucket-sized calls. *Time*, however, is
+//! charged one decode step at a time, and [`preempt`] halts individual
+//! rows mid-call the moment their deadline/cancel/token budget runs out —
+//! the engine-level enforcement half of the paper's latency story.
 
 pub mod batcher;
 pub mod handle;
+pub mod preempt;
 pub mod protocol;
 pub mod thread;
 

@@ -1,0 +1,290 @@
+//! Mid-call preemption: the engine's decode accounting loop.
+//!
+//! Generation itself is in-graph (one executable call produces every
+//! token), but *time* flows through the [`Clock`] one decode step at a
+//! time. This module walks those steps and halts individual rows the
+//! moment their budget runs out — deadline passed, cancel flag flipped,
+//! or per-job token cap reached — so a single batched call returns
+//! partial results instead of blowing through a deadline. Under the
+//! simulated clock this gives exact per-step preemption; under the real
+//! clock the charges are no-ops and preemption granularity degrades to
+//! per-call (the call has already happened), which the module documents
+//! rather than hides.
+//!
+//! Pure logic over a [`Clock`] — unit-testable without PJRT.
+
+use crate::util::clock::{Clock, CostEvent};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// One row's budget within a batched call.
+#[derive(Debug, Clone)]
+pub struct RowBudget {
+    /// Tokens the executable naturally produced for this row.
+    pub natural_len: usize,
+    /// Per-job cap on new tokens (`usize::MAX` when uncapped).
+    pub cap: usize,
+    /// Absolute engine-clock deadline in ms (`f64::INFINITY` when none).
+    pub deadline_ms: f64,
+    /// Shared cooperative cancel flag.
+    pub cancel: Option<Arc<AtomicBool>>,
+}
+
+impl RowBudget {
+    /// Natural length bounded by the token cap.
+    fn target(&self) -> usize {
+        self.natural_len.min(self.cap)
+    }
+
+    fn halted(&self, now_ms: f64) -> bool {
+        now_ms >= self.deadline_ms
+            || self
+                .cancel
+                .as_ref()
+                .is_some_and(|f| f.load(Ordering::Relaxed))
+    }
+}
+
+/// Where the accounting loop cut one row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RowCut {
+    /// Tokens of this row that count as generated (prefix length).
+    pub emitted: usize,
+    /// The row was halted before its natural end (deadline, cancel, or
+    /// token cap).
+    pub preempted: bool,
+}
+
+/// Walk a batched call's decode steps on the clock, charging one
+/// [`CostEvent::DecodeStep`] per step at `batch` rows, and halting rows
+/// whose budget runs out between steps. `max_steps` is the call-level
+/// ceiling planned by [`crate::engine::batcher::plan_batches`] (the
+/// largest per-row cap, or `None` when any row is uncapped) — no step
+/// is charged past it. Returns per-row cuts plus the number of steps
+/// actually charged.
+///
+/// Invariants (property-tested below):
+/// * `emitted ≤ min(natural_len, cap)` for every row;
+/// * a row is `preempted` iff it emitted fewer tokens than
+///   `natural_len`;
+/// * steps charged = max emitted over rows, and ≤ `max_steps`.
+pub fn run_decode_accounting(
+    clock: &dyn Clock,
+    batch: usize,
+    rows: &[RowBudget],
+    max_steps: Option<usize>,
+) -> (Vec<RowCut>, usize) {
+    let mut cuts: Vec<RowCut> = rows
+        .iter()
+        .map(|_| RowCut {
+            emitted: 0,
+            preempted: false,
+        })
+        .collect();
+    let mut steps = 0usize;
+    loop {
+        if max_steps.is_some_and(|cap| steps >= cap) {
+            break;
+        }
+        // Halt rows whose deadline/cancel bit as of now; then see if any
+        // row still wants another step.
+        let now = clock.now_ms();
+        let mut any_live = false;
+        for (r, c) in rows.iter().zip(cuts.iter_mut()) {
+            if c.preempted || c.emitted >= r.target() {
+                continue;
+            }
+            if r.halted(now) {
+                c.preempted = true;
+            } else {
+                any_live = true;
+            }
+        }
+        if !any_live {
+            break;
+        }
+        clock.charge(CostEvent::DecodeStep { batch });
+        steps += 1;
+        for (r, c) in rows.iter().zip(cuts.iter_mut()) {
+            if !c.preempted && c.emitted < r.target() {
+                c.emitted += 1;
+            }
+        }
+    }
+    // A cap that bit below the natural length is a preemption too.
+    for (r, c) in rows.iter().zip(cuts.iter_mut()) {
+        if c.emitted < r.natural_len {
+            c.preempted = true;
+        }
+    }
+    (cuts, steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, gen_vec, prop_assert};
+    use crate::util::clock::{LatencyModel, SimClock};
+
+    fn row(natural: usize) -> RowBudget {
+        RowBudget {
+            natural_len: natural,
+            cap: usize::MAX,
+            deadline_ms: f64::INFINITY,
+            cancel: None,
+        }
+    }
+
+    fn step_ms(batch: usize) -> f64 {
+        LatencyModel::default().cost_ms(CostEvent::DecodeStep { batch })
+    }
+
+    #[test]
+    fn unbudgeted_rows_run_to_natural_length() {
+        let clock = SimClock::new(LatencyModel::default());
+        let rows = vec![row(5), row(9), row(0)];
+        let (cuts, steps) = run_decode_accounting(&clock, 3, &rows, None);
+        assert_eq!(steps, 9);
+        assert_eq!(cuts[0], RowCut { emitted: 5, preempted: false });
+        assert_eq!(cuts[1], RowCut { emitted: 9, preempted: false });
+        assert_eq!(cuts[2], RowCut { emitted: 0, preempted: false });
+        // the clock advanced exactly `steps` decode steps (the sim clock
+        // truncates each charge to whole nanoseconds)
+        assert!((clock.now_ms() - 9.0 * step_ms(3)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn token_cap_halts_a_row_mid_call() {
+        let clock = SimClock::new(LatencyModel::default());
+        let mut rows = vec![row(10), row(10)];
+        rows[0].cap = 4;
+        let (cuts, steps) = run_decode_accounting(&clock, 2, &rows, None);
+        assert_eq!(cuts[0], RowCut { emitted: 4, preempted: true });
+        assert_eq!(cuts[1], RowCut { emitted: 10, preempted: false });
+        assert_eq!(steps, 10); // the uncapped row keeps the call alive
+    }
+
+    #[test]
+    fn deadline_halts_mid_call_within_one_step() {
+        let clock = SimClock::new(LatencyModel::default());
+        // deadline after ~3.5 decode steps
+        let deadline = 3.5 * step_ms(4);
+        let mut rows = vec![row(50), row(50), row(50), row(50)];
+        for r in rows.iter_mut() {
+            r.deadline_ms = deadline;
+        }
+        let (cuts, steps) = run_decode_accounting(&clock, 4, &rows, None);
+        assert_eq!(steps, 4); // halted right after the step that crossed it
+        for c in &cuts {
+            assert!(c.preempted);
+            assert_eq!(c.emitted, 4);
+        }
+        // overshoot is bounded by one decode step
+        assert!(clock.now_ms() <= deadline + step_ms(4) + 1e-9);
+    }
+
+    #[test]
+    fn spent_deadline_emits_nothing() {
+        let clock = SimClock::new(LatencyModel::default());
+        clock.charge(CostEvent::DecodeStep { batch: 1 }); // clock > 0
+        let mut rows = vec![row(10)];
+        rows[0].deadline_ms = 0.0;
+        let (cuts, steps) = run_decode_accounting(&clock, 1, &rows, None);
+        assert_eq!(steps, 0);
+        assert_eq!(cuts[0], RowCut { emitted: 0, preempted: true });
+    }
+
+    #[test]
+    fn call_level_max_steps_bounds_charging() {
+        let clock = SimClock::new(LatencyModel::default());
+        let rows = vec![row(10), row(10)];
+        let (cuts, steps) = run_decode_accounting(&clock, 2, &rows, Some(3));
+        assert_eq!(steps, 3);
+        for c in &cuts {
+            assert_eq!(c.emitted, 3);
+            assert!(c.preempted); // cut below natural length
+        }
+        assert!((clock.now_ms() - 3.0 * step_ms(2)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn preset_cancel_emits_nothing() {
+        let clock = SimClock::new(LatencyModel::default());
+        let flag = Arc::new(AtomicBool::new(true));
+        let mut rows = vec![row(10), row(10)];
+        rows[0].cancel = Some(flag);
+        let (cuts, steps) = run_decode_accounting(&clock, 2, &rows, None);
+        assert_eq!(cuts[0], RowCut { emitted: 0, preempted: true });
+        assert_eq!(cuts[1], RowCut { emitted: 10, preempted: false });
+        assert_eq!(steps, 10);
+    }
+
+    #[test]
+    fn per_row_deadlines_halt_independently() {
+        let clock = SimClock::new(LatencyModel::default());
+        let mut rows = vec![row(20), row(20)];
+        rows[0].deadline_ms = 2.5 * step_ms(2);
+        let (cuts, _) = run_decode_accounting(&clock, 2, &rows, None);
+        assert!(cuts[0].preempted);
+        assert_eq!(cuts[0].emitted, 3);
+        assert_eq!(cuts[1], RowCut { emitted: 20, preempted: false });
+    }
+
+    #[test]
+    fn prop_accounting_invariants() {
+        forall(
+            "preempt accounting invariants",
+            150,
+            |rng| {
+                let rows = gen_vec(rng, 1..12, |r| {
+                    let natural = r.below(40) as usize;
+                    let cap = if r.below(3) == 0 {
+                        r.below(30) as usize
+                    } else {
+                        usize::MAX
+                    };
+                    let deadline = if r.below(3) == 0 {
+                        r.f64() * 200.0
+                    } else {
+                        f64::INFINITY
+                    };
+                    (natural, cap, deadline)
+                });
+                let batch = rows.len().max(1);
+                (rows, batch)
+            },
+            |(specs, batch)| {
+                let clock = SimClock::new(LatencyModel::default());
+                let rows: Vec<RowBudget> = specs
+                    .iter()
+                    .map(|&(natural, cap, deadline)| RowBudget {
+                        natural_len: natural,
+                        cap,
+                        deadline_ms: deadline,
+                        cancel: None,
+                    })
+                    .collect();
+                let (cuts, steps) = run_decode_accounting(&clock, *batch, &rows, None);
+                let mut max_emitted = 0usize;
+                for (r, c) in rows.iter().zip(&cuts) {
+                    prop_assert(
+                        c.emitted <= r.natural_len.min(r.cap),
+                        format!("row emitted {} over bound", c.emitted),
+                    )?;
+                    prop_assert(
+                        c.preempted == (c.emitted < r.natural_len),
+                        format!(
+                            "preempted flag inconsistent: emitted {} of {}",
+                            c.emitted, r.natural_len
+                        ),
+                    )?;
+                    max_emitted = max_emitted.max(c.emitted);
+                }
+                prop_assert(
+                    steps == max_emitted,
+                    format!("charged {steps} steps but max emitted is {max_emitted}"),
+                )
+            },
+        );
+    }
+}

@@ -1,6 +1,8 @@
 //! Message types between coordinator threads and the engine thread.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 
 /// What kind of generation call a job needs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -12,6 +14,12 @@ pub enum GenKind {
 }
 
 /// One sequence job (a candidate to generate or a beam to extend).
+///
+/// Beyond the prompt, a job carries its share of the per-request budget:
+/// a hard cap on new tokens and a shared cooperative cancel flag. Both
+/// are enforced *inside* the engine's decode accounting loop — see
+/// [`crate::engine::preempt`] — so a single batched call halts
+/// mid-generation instead of merely truncating the bookkeeping afterwards.
 #[derive(Debug, Clone)]
 pub struct GenJob {
     /// Prompt token ids (un-padded).
@@ -19,6 +27,42 @@ pub struct GenJob {
     pub kind: GenKind,
     /// Sampling temperature (same value batches together).
     pub temperature: f32,
+    /// Per-job cap on generated tokens; the engine stops this row's
+    /// decode once reached. `None` = the executable's own limit.
+    pub max_new_tokens: Option<usize>,
+    /// Shared cooperative cancel flag (typically the request's
+    /// `Budget::cancel`); checked between decode steps.
+    pub cancel: Option<Arc<AtomicBool>>,
+}
+
+impl GenJob {
+    /// An unbudgeted job (no cap, no cancel flag).
+    pub fn new(tokens: Vec<u32>, kind: GenKind, temperature: f32) -> GenJob {
+        GenJob {
+            tokens,
+            kind,
+            temperature,
+            max_new_tokens: None,
+            cancel: None,
+        }
+    }
+
+    pub fn with_max_new_tokens(mut self, cap: usize) -> GenJob {
+        self.max_new_tokens = Some(cap);
+        self
+    }
+
+    pub fn with_cancel(mut self, flag: Arc<AtomicBool>) -> GenJob {
+        self.cancel = Some(flag);
+        self
+    }
+
+    /// The job's cancel flag is set.
+    pub fn cancelled(&self) -> bool {
+        self.cancel
+            .as_ref()
+            .is_some_and(|f| f.load(Ordering::Relaxed))
+    }
 }
 
 /// Result for one sequence job.
@@ -32,6 +76,11 @@ pub struct GenResult {
     pub call_ms: f64,
     /// Number of jobs that shared the call (diagnostic).
     pub batch_size: usize,
+    /// The engine halted this row before its natural end — deadline
+    /// passed, cancel flag flipped, or the per-job token cap bit. The
+    /// returned `tokens` are the partial prefix actually "generated"
+    /// before the halt.
+    pub preempted: bool,
 }
 
 /// Which query embedding to compute.
@@ -58,8 +107,11 @@ pub struct ProbeTrainReport {
 /// Requests the engine thread serves.
 pub enum EngineMsg {
     /// Generate a batch of sequence jobs; one reply per job, in order.
+    /// `deadline_ms` is an *absolute* engine-clock timestamp; once it
+    /// passes, remaining decode work for these jobs is preempted.
     Generate {
         jobs: Vec<GenJob>,
+        deadline_ms: Option<f64>,
         reply: Sender<crate::error::Result<Vec<GenResult>>>,
     },
     /// Score CoT prefixes with the PRM. Input: (tokens, true_len) pairs.

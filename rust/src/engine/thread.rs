@@ -7,6 +7,7 @@
 //! returns them each step anyway).
 
 use crate::engine::batcher::{pick_bucket, plan_batches};
+use crate::engine::preempt::{run_decode_accounting, RowBudget};
 use crate::engine::protocol::*;
 use crate::error::{Error, Result};
 use crate::metrics::EngineMetrics;
@@ -154,12 +155,20 @@ impl EngineThread {
             };
             match msg {
                 EngineMsg::Shutdown => return,
-                EngineMsg::Generate { jobs, reply } => {
+                EngineMsg::Generate {
+                    jobs,
+                    deadline_ms,
+                    reply,
+                } => {
                     // merge any already-queued Generate requests
-                    let mut merged = vec![(jobs, reply)];
+                    let mut merged = vec![(jobs, deadline_ms, reply)];
                     while let Ok(next) = rx.try_recv() {
                         match next {
-                            EngineMsg::Generate { jobs, reply } => merged.push((jobs, reply)),
+                            EngineMsg::Generate {
+                                jobs,
+                                deadline_ms,
+                                reply,
+                            } => merged.push((jobs, deadline_ms, reply)),
                             other => {
                                 self.dispatch(other);
                                 break;
@@ -175,7 +184,11 @@ impl EngineThread {
 
     fn dispatch(&mut self, msg: EngineMsg) {
         match msg {
-            EngineMsg::Generate { jobs, reply } => self.generate_merged(vec![(jobs, reply)]),
+            EngineMsg::Generate {
+                jobs,
+                deadline_ms,
+                reply,
+            } => self.generate_merged(vec![(jobs, deadline_ms, reply)]),
             EngineMsg::PrmScore { prefixes, reply } => {
                 let _ = reply.send(self.prm_score(&prefixes));
             }
@@ -225,34 +238,42 @@ impl EngineThread {
         &mut self,
         requests: Vec<(
             Vec<GenJob>,
+            Option<f64>,
             std::sync::mpsc::Sender<Result<Vec<GenResult>>>,
         )>,
     ) {
-        // flatten with request boundaries
+        // flatten with request boundaries; each request's batch-level
+        // deadline becomes a per-job absolute deadline so merged calls
+        // preempt each request independently (continuous-batching
+        // eviction, not whole-call abort)
         let mut all_jobs = Vec::new();
+        let mut deadlines = Vec::new();
         let mut bounds = Vec::new();
-        for (jobs, _) in &requests {
+        for (jobs, deadline_ms, _) in &requests {
             let start = all_jobs.len();
             all_jobs.extend(jobs.iter().cloned());
+            let d = deadline_ms.unwrap_or(f64::INFINITY);
+            deadlines.resize(all_jobs.len(), d);
             bounds.push(start..all_jobs.len());
         }
 
-        match self.generate_all(&all_jobs) {
+        match self.generate_all(&all_jobs, &deadlines) {
             Ok(results) => {
-                for ((_, reply), range) in requests.into_iter().zip(bounds) {
+                for ((_, _, reply), range) in requests.into_iter().zip(bounds) {
                     let _ = reply.send(Ok(results[range].to_vec()));
                 }
             }
             Err(e) => {
                 let msg = e.to_string();
-                for (_, reply) in requests {
+                for (_, _, reply) in requests {
                     let _ = reply.send(Err(Error::Engine(msg.clone())));
                 }
             }
         }
     }
 
-    fn generate_all(&mut self, jobs: &[GenJob]) -> Result<Vec<GenResult>> {
+    fn generate_all(&mut self, jobs: &[GenJob], deadlines: &[f64]) -> Result<Vec<GenResult>> {
+        debug_assert_eq!(jobs.len(), deadlines.len());
         let plans = plan_batches(
             jobs,
             &self.shapes.batch_buckets,
@@ -261,6 +282,28 @@ impl EngineThread {
         );
         let mut results: Vec<Option<GenResult>> = vec![None; jobs.len()];
         for plan in &plans {
+            // A plan whose every row is already dead (deadline passed or
+            // cancelled before the call starts) is not executed at all:
+            // the engine refuses to start work for expired requests.
+            let now = self.clock.now_ms();
+            let all_dead = plan
+                .job_indices
+                .iter()
+                .all(|&ji| now >= deadlines[ji] || jobs[ji].cancelled());
+            if all_dead {
+                for &ji in &plan.job_indices {
+                    results[ji] = Some(GenResult {
+                        tokens: Vec::new(),
+                        call_ms: 0.0,
+                        batch_size: plan.job_indices.len(),
+                        preempted: true,
+                    });
+                }
+                self.metrics
+                    .preempted_rows
+                    .add(plan.job_indices.len() as u64);
+                continue;
+            }
             let exec_name = match plan.kind {
                 GenKind::Full => format!("lm_generate_b{}", plan.bucket),
                 GenKind::Chunk => format!("lm_chunk_b{}_l{}", plan.bucket, plan.len_bucket),
@@ -319,39 +362,67 @@ impl EngineThread {
             let gen_len: Vec<i32> = parts[1].to_vec()?;
             let t_cols = gen.len() / b;
 
-            // sim-clock cost: prefill + one decode step per emitted column
-            let max_steps = gen_len.iter().cloned().max().unwrap_or(0) as usize;
+            // sim-clock cost: prefill, then the preemptible decode
+            // accounting loop — one charged step per emitted column,
+            // halting rows whose deadline/cancel/cap budget runs out
             self.clock.charge(CostEvent::Prefill { batch: b, len: l });
-            for _ in 0..max_steps {
-                self.clock.charge(CostEvent::DecodeStep { batch: b });
-            }
+            let after_call = self.clock.now_ms();
+            let is_sim = self.clock.is_sim();
+            let rows: Vec<RowBudget> = plan
+                .job_indices
+                .iter()
+                .enumerate()
+                .map(|(row, &ji)| {
+                    let natural_len = (gen_len[row] as usize).min(t_cols);
+                    let mut cap = jobs[ji].max_new_tokens.unwrap_or(usize::MAX);
+                    let mut deadline_ms = deadlines[ji];
+                    if !is_sim && after_call >= deadline_ms {
+                        // Real clock: the call already happened by the
+                        // time we account for it, so exact per-step
+                        // preemption is impossible — prorate the row's
+                        // output to the fraction of the call that fit
+                        // before its deadline (partial results, not a
+                        // zeroed request).
+                        let frac = ((deadline_ms - t0) / (after_call - t0).max(1e-9))
+                            .clamp(0.0, 1.0);
+                        cap = cap.min((natural_len as f64 * frac).floor() as usize);
+                        deadline_ms = f64::INFINITY;
+                    }
+                    RowBudget {
+                        natural_len,
+                        cap,
+                        deadline_ms,
+                        cancel: jobs[ji].cancel.clone(),
+                    }
+                })
+                .collect();
+            let (cuts, steps) =
+                run_decode_accounting(self.clock.as_ref(), b, &rows, plan.max_steps);
             let call_ms = self.clock.now_ms() - t0;
 
             // metrics
             self.metrics.prefill_calls.inc();
             self.metrics.decode_calls.inc();
-            let real_rows: usize = plan
-                .job_indices
-                .iter()
-                .enumerate()
-                .map(|(row, _)| gen_len[row] as usize)
-                .sum();
+            let real_rows: usize = cuts.iter().map(|c| c.emitted).sum();
+            let n_preempted = cuts.iter().filter(|c| c.preempted).count();
             self.metrics.decode_rows.add(real_rows as u64);
             self.metrics
                 .padded_rows
-                .add((b * max_steps).saturating_sub(real_rows) as u64);
+                .add((b * steps).saturating_sub(real_rows) as u64);
             self.metrics.tokens_generated.add(real_rows as u64);
+            self.metrics.preempted_rows.add(n_preempted as u64);
             self.metrics.decode_latency.record(call_ms);
             log_debug!(
-                "{exec_name}: {} jobs, {} steps, {:.1}ms",
+                "{exec_name}: {} jobs, {} steps, {} preempted, {:.1}ms",
                 plan.job_indices.len(),
-                max_steps,
+                steps,
+                n_preempted,
                 call_ms
             );
 
             for (row, &ji) in plan.job_indices.iter().enumerate() {
-                let n = gen_len[row] as usize;
-                let toks: Vec<u32> = gen[row * t_cols..row * t_cols + n.min(t_cols)]
+                let n = cuts[row].emitted;
+                let toks: Vec<u32> = gen[row * t_cols..row * t_cols + n]
                     .iter()
                     .map(|&t| t as u32)
                     .collect();
@@ -359,6 +430,7 @@ impl EngineThread {
                     tokens: toks,
                     call_ms,
                     batch_size: plan.job_indices.len(),
+                    preempted: cuts[row].preempted,
                 });
             }
         }

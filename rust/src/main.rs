@@ -47,6 +47,13 @@ fn print_help() {
            pipeline     [--config F] [--artifacts DIR] [--out DIR] [--quick]\n\
            info         [--artifacts DIR]"
     );
+    // registry-driven: newly registered decoding methods show up here
+    // (and in `--strategy` ids) with no CLI edits
+    eprintln!("\ndecoding methods (--strategy <name>@<params>):");
+    for m in ttc::strategies::registry::all() {
+        let example = ttc::strategies::Strategy::new(m.name(), m.default_params()).id();
+        eprintln!("  {:<14} {}  (e.g. {})", m.name(), m.describe(), example);
+    }
 }
 
 fn dispatch(raw: &[String]) -> Result<()> {

@@ -29,6 +29,10 @@ pub struct MatrixEntry {
     pub correct: bool,
     pub tokens: usize,
     pub latency_ms: f64,
+    /// Completed generation rounds (1 for single-batch parallel methods).
+    /// Feeds the budget-bucket cost model's rounds-completed prediction
+    /// for the beam family. Old matrices without the field load as 1.
+    pub rounds: usize,
 }
 
 impl MatrixEntry {
@@ -42,6 +46,7 @@ impl MatrixEntry {
             .with("correct", self.correct)
             .with("tokens", self.tokens)
             .with("latency_ms", self.latency_ms)
+            .with("rounds", self.rounds)
     }
 
     pub fn from_json(v: &Value) -> Result<MatrixEntry> {
@@ -54,6 +59,7 @@ impl MatrixEntry {
             correct: v.opt_bool("correct", false),
             tokens: v.req_usize("tokens")?,
             latency_ms: v.req_f64("latency_ms")?,
+            rounds: v.get("rounds").and_then(Value::as_usize).unwrap_or(1),
         })
     }
 }
@@ -192,6 +198,7 @@ pub fn collect(
                     correct: outcome.is_correct(&query.answer),
                     tokens: outcome.tokens,
                     latency_ms: outcome.latency_ms,
+                    rounds: outcome.rounds.max(1),
                 };
                 crate::data::append_jsonl(out, &[entry.to_json()])?;
                 matrix.entries.push(entry);
@@ -224,6 +231,7 @@ mod tests {
             correct,
             tokens,
             latency_ms: tokens as f64 * 2.0,
+            rounds: 1,
         }
     }
 
@@ -231,6 +239,16 @@ mod tests {
     fn json_roundtrip() {
         let e = entry("q1", "mv@4", 0, true, 120);
         assert_eq!(MatrixEntry::from_json(&e.to_json()).unwrap(), e);
+    }
+
+    #[test]
+    fn legacy_entries_without_rounds_load_as_one() {
+        let v = crate::util::json::parse(
+            r#"{"query_id":"q","split":"test","strategy":"mv@4","repeat":0,
+                "k":2,"correct":true,"tokens":10,"latency_ms":5.0}"#,
+        )
+        .unwrap();
+        assert_eq!(MatrixEntry::from_json(&v).unwrap().rounds, 1);
     }
 
     #[test]

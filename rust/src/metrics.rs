@@ -109,6 +109,8 @@ pub struct EngineMetrics {
     pub prefill_calls: Counter,
     /// PRM scoring calls.
     pub prm_calls: Counter,
+    /// Rows halted mid-call by deadline, cancel flag, or token cap.
+    pub preempted_rows: Counter,
     /// Tokens generated (actual, not padded).
     pub tokens_generated: Counter,
     /// Wall-time per batched decode call (ms).
@@ -141,6 +143,7 @@ impl EngineMetrics {
             .with("padding_waste", self.padding_waste())
             .with("prefill_calls", self.prefill_calls.get())
             .with("prm_calls", self.prm_calls.get())
+            .with("preempted_rows", self.preempted_rows.get())
             .with("tokens_generated", self.tokens_generated.get())
             .with("decode_latency_ms", self.decode_latency.summary().to_json())
             .with(

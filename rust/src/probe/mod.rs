@@ -12,4 +12,4 @@ pub mod train;
 
 pub use features::FeatureBuilder;
 pub use platt::Platt;
-pub use train::{train_probe, CalibratedProbe, ProbeCheckpoint};
+pub use train::{train_probe, CalibratedProbe, ProbeCheckpoint, PROBE_LAYOUT_VERSION};

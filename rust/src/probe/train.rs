@@ -53,7 +53,18 @@ impl CalibratedProbe {
 }
 
 /// On-disk checkpoint: `<stem>.json` (platt + meta) + `<stem>.bin` (params).
+///
+/// The meta carries a **feature-layout stamp** (`layout_version` plus the
+/// registry width the probe was trained against): the one-hot block is
+/// registry-driven, so a checkpoint trained when the registry had N
+/// methods cannot score feature rows built with M ≠ N methods. Loading
+/// such a checkpoint fails with a clear retrain message instead of a dim
+/// shape assert deep in the engine.
 pub struct ProbeCheckpoint;
+
+/// Bump when the feature layout changes shape in a way the
+/// `n_methods` stamp alone cannot describe.
+pub const PROBE_LAYOUT_VERSION: usize = 1;
 
 impl ProbeCheckpoint {
     pub fn save(probe: &CalibratedProbe, stem: &Path) -> Result<()> {
@@ -70,7 +81,9 @@ impl ProbeCheckpoint {
                     EmbedKind::Small => "small",
                 },
             )
-            .with("n_params", probe.params.len());
+            .with("n_params", probe.params.len())
+            .with("layout_version", PROBE_LAYOUT_VERSION)
+            .with("n_methods", crate::strategies::registry::len());
         std::fs::write(stem.with_extension("json"), meta.pretty())?;
         let mut bytes = Vec::with_capacity(probe.params.len() * 4);
         for p in &probe.params {
@@ -89,6 +102,37 @@ impl ProbeCheckpoint {
             ))
         })?;
         let meta = parse(&text)?;
+        // Feature-layout stamp: fail loudly on checkpoints trained
+        // against a different registry width (e.g. the 4-wide pre-registry
+        // era) instead of tripping a shape assert at predict time.
+        match meta.get("layout_version").and_then(Value::as_usize) {
+            None => {
+                return Err(Error::artifact(format!(
+                    "probe checkpoint {} predates the feature-layout stamp \
+                     (pre-registry one-hot layout) — regenerate with \
+                     `ttc train-probe`",
+                    meta_path.display()
+                )));
+            }
+            Some(v) if v != PROBE_LAYOUT_VERSION => {
+                return Err(Error::artifact(format!(
+                    "probe checkpoint {} has layout_version {v}, this build \
+                     expects {PROBE_LAYOUT_VERSION} — regenerate with `ttc train-probe`",
+                    meta_path.display()
+                )));
+            }
+            Some(_) => {}
+        }
+        let trained_methods = meta.req_usize("n_methods")?;
+        let current = crate::strategies::registry::len();
+        if trained_methods != current {
+            return Err(Error::artifact(format!(
+                "probe checkpoint {} was trained with a {trained_methods}-wide \
+                 method one-hot but the registry now has {current} methods — \
+                 rerun `ttc collect` + `ttc train-probe`",
+                meta_path.display()
+            )));
+        }
         let bytes = std::fs::read(stem.with_extension("bin"))?;
         let n = meta.req_usize("n_params")?;
         if bytes.len() != n * 4 {
@@ -315,5 +359,46 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("train-probe"), "{err}");
+    }
+
+    fn write_checkpoint(stem: &Path, meta: &Value, n_params: usize) {
+        std::fs::write(stem.with_extension("json"), meta.pretty()).unwrap();
+        std::fs::write(stem.with_extension("bin"), vec![0u8; n_params * 4]).unwrap();
+    }
+
+    #[test]
+    fn legacy_checkpoint_without_stamp_fails_clearly() {
+        let stem = std::env::temp_dir().join(format!("ttc_probe_legacy_{}", std::process::id()));
+        // a 4-wide-era checkpoint: no layout_version / n_methods fields
+        let meta = Value::obj()
+            .with("platt_a", 1.0)
+            .with("platt_b", 0.0)
+            .with("embed_kind", "pool")
+            .with("n_params", 3usize);
+        write_checkpoint(&stem, &meta, 3);
+        let err = ProbeCheckpoint::load(&stem).unwrap_err().to_string();
+        assert!(err.contains("layout"), "{err}");
+        assert!(err.contains("train-probe"), "{err}");
+        std::fs::remove_file(stem.with_extension("json")).unwrap();
+        std::fs::remove_file(stem.with_extension("bin")).unwrap();
+    }
+
+    #[test]
+    fn registry_width_mismatch_fails_clearly() {
+        let stem = std::env::temp_dir().join(format!("ttc_probe_width_{}", std::process::id()));
+        let wrong = crate::strategies::registry::len() + 2;
+        let meta = Value::obj()
+            .with("platt_a", 1.0)
+            .with("platt_b", 0.0)
+            .with("embed_kind", "pool")
+            .with("n_params", 3usize)
+            .with("layout_version", PROBE_LAYOUT_VERSION)
+            .with("n_methods", wrong);
+        write_checkpoint(&stem, &meta, 3);
+        let err = ProbeCheckpoint::load(&stem).unwrap_err().to_string();
+        assert!(err.contains("one-hot"), "{err}");
+        assert!(err.contains(&format!("{wrong}-wide")), "{err}");
+        std::fs::remove_file(stem.with_extension("json")).unwrap();
+        std::fs::remove_file(stem.with_extension("bin")).unwrap();
     }
 }

@@ -11,21 +11,38 @@
 //! probe-forward over all strategies), `T̂`/`L̂` from the per-strategy cost
 //! model. [`select_offline`] is the same argmax over precomputed tables —
 //! used by every figure sweep so that λ grids cost microseconds per point.
+//!
+//! With a per-request deadline the λ_L sweep becomes a *constraint*
+//! ([`Router::select_budgeted`]): costs come from the budget-bucket
+//! table ([`CostModel::get_budgeted`]), and [`pick_feasible`] excludes
+//! strategies whose predicted (truncated) latency still exceeds the
+//! deadline whenever a feasible alternative exists — falling back to the
+//! lowest-latency strategy when nothing fits.
 
 use crate::costmodel::{CostEstimate, CostModel};
 use crate::engine::EngineHandle;
 use crate::error::Result;
 use crate::probe::{CalibratedProbe, FeatureBuilder};
-use crate::strategies::Strategy;
+use crate::strategies::{Budget, Strategy};
 use crate::tokenizer::Tokenizer;
 
 /// Scored strategy for one query.
 #[derive(Debug, Clone)]
 pub struct StrategyScore {
     pub strategy: Strategy,
-    /// Calibrated accuracy prediction â_s(x).
+    /// Calibrated accuracy prediction â_s(x) — fitted on *untruncated*
+    /// runs, which is why feasibility filters on `full_latency_ms`, not
+    /// on the (possibly truncated) `cost`.
     pub acc_hat: f64,
+    /// Cost under the request's deadline bucket (equals the unbudgeted
+    /// mean when there is no deadline).
     pub cost: CostEstimate,
+    /// Unbudgeted predicted latency — how long the strategy needs to
+    /// complete its *configured* work. The deadline-feasibility filter
+    /// uses this: a strategy that only "fits" because preemption will
+    /// cut its work short would realize far less accuracy than â
+    /// predicts.
+    pub full_latency_ms: f64,
     pub utility: f64,
 }
 
@@ -79,12 +96,14 @@ impl Router {
         }
     }
 
-    /// Score every strategy for a query (probe â + cost model).
+    /// Score every strategy for a query (probe â + cost model). With a
+    /// deadline, costs come from the budget-bucket table.
     pub fn score_all(
         &self,
         engine: &EngineHandle,
         query: &str,
         lambdas: Lambdas,
+        deadline_ms: Option<f64>,
     ) -> Result<Vec<StrategyScore>> {
         let query_ids = self.tokenizer.encode(query)?;
         let emb = engine
@@ -102,26 +121,42 @@ impl Router {
             .zip(&self.ids)
             .zip(probs)
             .map(|((s, id), acc_hat)| {
-                let cost = self.costs.get(id)?;
+                let cost = self.costs.get_budgeted(id, deadline_ms)?;
+                let full_latency_ms = self.costs.get(id)?.latency_ms;
                 Ok(StrategyScore {
                     strategy: s.clone(),
                     acc_hat,
                     cost,
+                    full_latency_ms,
                     utility: lambdas.utility(acc_hat, &cost),
                 })
             })
             .collect()
     }
 
-    /// `s*(x)` — the utility argmax (paper §2.3).
+    /// `s*(x)` — the utility argmax (paper §2.3), no budget constraint.
     pub fn select(
         &self,
         engine: &EngineHandle,
         query: &str,
         lambdas: Lambdas,
     ) -> Result<StrategyScore> {
-        let scores = self.score_all(engine, query, lambdas)?;
+        let scores = self.score_all(engine, query, lambdas, None)?;
         Ok(pick_max(&scores))
+    }
+
+    /// Budget-aware `s*(x)`: utilities use the budget-bucket cost table
+    /// and strategies whose predicted latency exceeds the request
+    /// deadline are excluded whenever a feasible alternative exists.
+    pub fn select_budgeted(
+        &self,
+        engine: &EngineHandle,
+        query: &str,
+        lambdas: Lambdas,
+        budget: &Budget,
+    ) -> Result<StrategyScore> {
+        let scores = self.score_all(engine, query, lambdas, budget.deadline_ms)?;
+        Ok(pick_feasible(&scores, budget.deadline_ms))
     }
 }
 
@@ -136,6 +171,39 @@ fn pick_max(scores: &[StrategyScore]) -> StrategyScore {
         })
         .unwrap()
         .clone()
+}
+
+/// Deadline-constrained argmax: the best-utility strategy among those
+/// predicted to *complete their configured work* within the deadline
+/// (`full_latency_ms ≤ d` — the probe's â is fitted on untruncated
+/// runs, so a strategy that merely gets preempted into "fitting" would
+/// realize far less accuracy than its utility claims). When nothing
+/// fits, fall back to the lowest full predicted latency (best-effort
+/// degradation — the engine preempts it mid-call anyway); without a
+/// deadline this is exactly [`pick_max`]. Pure — benched and
+/// property-tested offline.
+pub fn pick_feasible(scores: &[StrategyScore], deadline_ms: Option<f64>) -> StrategyScore {
+    assert!(!scores.is_empty());
+    let Some(d) = deadline_ms else {
+        return pick_max(scores);
+    };
+    let feasible: Vec<StrategyScore> = scores
+        .iter()
+        .filter(|s| s.full_latency_ms <= d)
+        .cloned()
+        .collect();
+    if feasible.is_empty() {
+        return scores
+            .iter()
+            .min_by(|a, b| {
+                a.full_latency_ms
+                    .partial_cmp(&b.full_latency_ms)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .unwrap()
+            .clone();
+    }
+    pick_max(&feasible)
 }
 
 /// Offline argmax over precomputed per-strategy (â, cost) tables — the
@@ -218,6 +286,98 @@ mod tests {
                         u <= u_star + 1e-12,
                         format!("strategy {i} has utility {u} > selected {u_star}"),
                     )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    fn score(n: usize, acc_hat: f64, cost: CostEstimate) -> StrategyScore {
+        StrategyScore {
+            strategy: Strategy::mv(n),
+            acc_hat,
+            // unbudgeted latency = the cost estimate's latency (no
+            // truncation in these synthetic tables)
+            full_latency_ms: cost.latency_ms,
+            cost,
+            utility: acc_hat, // λ = 0 shape: utility is accuracy
+        }
+    }
+
+    #[test]
+    fn feasible_alternative_excludes_slow_strategy() {
+        // the slow strategy has the best utility but cannot meet the
+        // deadline; a feasible alternative exists → it must win
+        let scores = vec![
+            score(2, 0.5, est(100.0, 80.0)),
+            score(16, 0.9, est(2000.0, 5000.0)),
+        ];
+        let picked = pick_feasible(&scores, Some(100.0));
+        assert_eq!(picked.strategy, Strategy::mv(2));
+        // without a deadline the slow one wins on utility
+        assert_eq!(pick_feasible(&scores, None).strategy, Strategy::mv(16));
+    }
+
+    #[test]
+    fn truncated_into_fitting_is_still_infeasible() {
+        // a heavily-truncated expensive strategy whose *bucketed* cost
+        // fits the deadline must not beat a strategy that completes its
+        // configured work in time — â is fitted on untruncated runs
+        let cheap_complete = score(2, 0.6, est(100.0, 80.0));
+        let mut truncated_beam = score(16, 0.9, est(0.0, 0.0)); // 0 rounds fit
+        truncated_beam.full_latency_ms = 3000.0;
+        let scores = vec![cheap_complete, truncated_beam];
+        let picked = pick_feasible(&scores, Some(200.0));
+        assert_eq!(picked.strategy, Strategy::mv(2));
+    }
+
+    #[test]
+    fn nothing_feasible_falls_back_to_fastest() {
+        let scores = vec![
+            score(4, 0.7, est(500.0, 900.0)),
+            score(8, 0.9, est(900.0, 1800.0)),
+        ];
+        let picked = pick_feasible(&scores, Some(10.0));
+        assert_eq!(picked.strategy, Strategy::mv(4));
+    }
+
+    #[test]
+    fn prop_never_picks_infeasible_when_feasible_exists() {
+        forall(
+            "feasible-alternative constraint",
+            200,
+            |rng| {
+                let n = rng.range(1, 10) as usize;
+                let scores: Vec<(f64, f64, f64)> = gen_vec(rng, n..n + 1, |r| {
+                    (r.f64(), r.f64() * 1000.0, r.f64() * 10000.0)
+                });
+                let d = rng.f64() * 10000.0;
+                (scores, d)
+            },
+            |(raw, d)| {
+                let scores: Vec<StrategyScore> = raw
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &(a, t, l))| score(i + 1, a, est(t, l)))
+                    .collect();
+                let picked = pick_feasible(&scores, Some(*d));
+                let any_feasible = scores.iter().any(|s| s.full_latency_ms <= *d);
+                if any_feasible {
+                    prop_assert(
+                        picked.full_latency_ms <= *d,
+                        format!(
+                            "picked latency {} exceeds deadline {d} with a feasible \
+                             alternative present",
+                            picked.full_latency_ms
+                        ),
+                    )?;
+                    // and it is the utility argmax among feasible ones
+                    for s in scores.iter().filter(|s| s.full_latency_ms <= *d) {
+                        prop_assert(
+                            s.utility <= picked.utility + 1e-12,
+                            "not the feasible argmax".to_string(),
+                        )?;
+                    }
                 }
                 Ok(())
             },

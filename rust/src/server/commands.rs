@@ -374,6 +374,18 @@ pub fn cmd_serve(raw: &[String]) -> Result<()> {
                     |e| Error::artifact(format!("missing cost_model.json ({e}) — run train-probe")),
                 )?,
             )?)?;
+            if costs.bucket_edges().is_empty() {
+                log_info!(
+                    "serve: legacy cost_model.json without budget buckets — deadline \
+                     routing falls back to unbudgeted means (rerun train-probe)"
+                );
+            } else {
+                log_info!(
+                    "serve: budget-bucket cost model ({} strategies x {} deadline buckets)",
+                    costs.len(),
+                    costs.bucket_edges().len()
+                );
+            }
             let fb = feature_builder(&engine)?;
             let router = Router::new(Strategy::enumerate(&cfg.space), probe, costs, fb);
             let lambdas = Lambdas::new(

@@ -2,12 +2,14 @@
 //! router + strategy executor, with end-to-end latency accounting.
 //!
 //! This is the deployment shape of the paper's system: requests arrive,
-//! the router picks `s*(x)` under the operator's (λ_T, λ_L), the strategy
-//! executes against the shared engine (whose batcher merges concurrent
-//! generation) under the request's [`Budget`] — deadlines are enforced
-//! *mid-strategy*, not just predicted by the router — and the driver
-//! reports accuracy / tokens / latency percentiles / throughput plus
-//! budget-enforcement fractions.
+//! the router picks `s*(x)` under the operator's (λ_T, λ_L) *and* the
+//! request's budget (deadline-infeasible strategies are excluded via the
+//! budget-bucket cost model), the strategy executes against the shared
+//! engine (whose batcher merges concurrent generation) under the
+//! request's [`Budget`] — deadlines are enforced all the way down to
+//! *mid-call* engine preemption — and the driver reports accuracy /
+//! tokens / latency percentiles / throughput plus budget-enforcement
+//! fractions, preemption counts and realized-vs-predicted latency.
 
 use crate::error::Result;
 use crate::metrics::Histogram;
@@ -41,9 +43,16 @@ pub struct Served {
     pub tokens: usize,
     /// The request's budget ran out mid-strategy.
     pub budget_exhausted: bool,
+    /// The engine preempted a generation call mid-decode for this
+    /// request (deadline, cancel, or token cap).
+    pub preempted: bool,
     /// The strategy finished before its configured work (early-stop vote
     /// decided, deadline-aware round truncation).
     pub stopped_early: bool,
+    /// Router-predicted strategy latency for this request (budget-bucket
+    /// cost model), when adaptively routed — compared against the
+    /// realized `service_ms` in the report.
+    pub predicted_ms: Option<f64>,
     /// Strategy execution time (ms).
     pub service_ms: f64,
     /// Queue wait + execution (ms) — what the user experiences.
@@ -128,12 +137,16 @@ pub fn run(
 }
 
 fn serve_one(executor: &Executor, mode: &Mode, req: &Request) -> Result<Served> {
-    let (strategy, routed) = match mode {
+    let (strategy, routed, predicted_ms) = match mode {
         Mode::Adaptive(router, lambdas) => {
-            let score = router.select(&executor.engine, &req.query.query, *lambdas)?;
-            (score.strategy, true)
+            // budget-aware selection: the budget-bucket cost table prices
+            // each strategy under this request's deadline, and strategies
+            // that cannot meet it are excluded when an alternative can
+            let score =
+                router.select_budgeted(&executor.engine, &req.query.query, *lambdas, &req.budget)?;
+            (score.strategy, true, Some(score.cost.latency_ms))
         }
-        Mode::Static(s) => (s.clone(), false),
+        Mode::Static(s) => (s.clone(), false, None),
     };
     let outcome = executor.run_budgeted(&strategy, &req.query.query, req.budget.clone())?;
     Ok(Served {
@@ -143,7 +156,9 @@ fn serve_one(executor: &Executor, mode: &Mode, req: &Request) -> Result<Served> 
         correct: outcome.is_correct(&req.query.answer),
         tokens: outcome.tokens,
         budget_exhausted: outcome.budget_exhausted,
+        preempted: outcome.preempted,
         stopped_early: outcome.stopped_early,
+        predicted_ms,
         service_ms: outcome.latency_ms,
         e2e_ms: outcome.latency_ms, // overwritten by the driver
     })
@@ -166,8 +181,28 @@ impl ServeReport {
         let correct = self.served.iter().filter(|s| s.correct).count();
         let routed = self.served.iter().filter(|s| s.routed).count();
         let exhausted = self.served.iter().filter(|s| s.budget_exhausted).count();
+        let preempted = self.served.iter().filter(|s| s.preempted).count();
         let stopped = self.served.iter().filter(|s| s.stopped_early).count();
         let tokens: Vec<f64> = self.served.iter().map(|s| s.tokens as f64).collect();
+        // realized-vs-predicted latency over adaptively routed requests
+        let pred_pairs: Vec<(f64, f64)> = self
+            .served
+            .iter()
+            .filter_map(|s| s.predicted_ms.map(|p| (p, s.service_ms)))
+            .collect();
+        let pred_json = if pred_pairs.is_empty() {
+            Value::obj().with("n", 0usize)
+        } else {
+            let abs_err: Vec<f64> = pred_pairs.iter().map(|&(p, r)| (r - p).abs()).collect();
+            let ratio: Vec<f64> = pred_pairs
+                .iter()
+                .map(|&(p, r)| r / p.max(1e-9))
+                .collect();
+            Value::obj()
+                .with("n", pred_pairs.len())
+                .with("mean_abs_err_ms", stats::mean(&abs_err))
+                .with("mean_realized_over_predicted", stats::mean(&ratio))
+        };
         let service = Histogram::new();
         let e2e = Histogram::new();
         for s in &self.served {
@@ -192,7 +227,10 @@ impl ServeReport {
             .with("avg_tokens", stats::mean(&tokens))
             .with("adaptive_fraction", routed as f64 / n as f64)
             .with("budget_exhausted_fraction", exhausted as f64 / n as f64)
+            .with("preempted_count", preempted)
+            .with("preempted_fraction", preempted as f64 / n as f64)
             .with("stopped_early_fraction", stopped as f64 / n as f64)
+            .with("latency_prediction", pred_json)
             .with("service_ms", service.summary().to_json())
             .with("e2e_ms", e2e.summary().to_json())
             .with("selection", strat_json)
@@ -202,7 +240,7 @@ impl ServeReport {
         let v = self.to_json();
         log_info!(
             "serve[{label}]: {} reqs in {:.1}s ({:.2} rps), acc {:.3}, avg tokens {:.0}, \
-             e2e p50 {:.0}ms p95 {:.0}ms, adaptive {:.0}%, budget-hit {:.0}%",
+             e2e p50 {:.0}ms p95 {:.0}ms, adaptive {:.0}%, budget-hit {:.0}%, preempted {:.0}%",
             self.served.len(),
             self.wall_s,
             v.req_f64("throughput_rps").unwrap_or(0.0),
@@ -212,6 +250,7 @@ impl ServeReport {
             v.req("e2e_ms").and_then(|h| h.req_f64("p95")).unwrap_or(0.0),
             100.0 * v.req_f64("adaptive_fraction").unwrap_or(0.0),
             100.0 * v.req_f64("budget_exhausted_fraction").unwrap_or(0.0),
+            100.0 * v.req_f64("preempted_fraction").unwrap_or(0.0),
         );
     }
 }

@@ -20,7 +20,7 @@
 //! grows with solution depth even though each call is batched. Token cost
 //! counts every generated token, including pruned beams.
 
-use crate::engine::{GenJob, GenKind};
+use crate::engine::GenKind;
 use crate::error::Result;
 use crate::eval::{self, Candidate};
 use crate::strategies::method::{DecodingMethod, Outcome, RunCtx, StrategyParams};
@@ -63,7 +63,9 @@ fn run_beam(ctx: &RunCtx<'_>, params: &StrategyParams, deadline_aware: bool) -> 
     }];
     let mut tokens_total = 0usize;
     let mut engine_calls = 0usize;
+    let mut rounds_done = 0usize;
     let mut budget_exhausted = false;
+    let mut preempted = false;
     let mut stopped_early = false;
     let mut last_round_ms = 0.0f64;
 
@@ -102,19 +104,31 @@ fn run_beam(ctx: &RunCtx<'_>, params: &StrategyParams, deadline_aware: bool) -> 
                 continue;
             }
             for _ in 0..per_beam {
-                jobs.push(GenJob {
-                    tokens: ids.clone(),
-                    kind: GenKind::Chunk,
-                    temperature: ctx.temperature,
-                });
+                // budget rides into the engine: token cap left + cancel
+                // flag per job, absolute deadline on the call — a round
+                // that would overrun is halted mid-decode, not after.
+                // The chunk hyperparameter C also bounds the engine cap:
+                // decoding past C is discarded by accounting anyway.
+                let job = ctx.gen_job(ids.clone(), GenKind::Chunk, tokens_total);
+                let cap = job.max_new_tokens.map_or(chunk_cap, |c| c.min(chunk_cap));
+                jobs.push(job.with_max_new_tokens(cap));
                 parents.push(bi);
             }
         }
         if jobs.is_empty() {
             break;
         }
-        let results = ctx.engine.generate(jobs)?;
+        let results = ctx.generate_budgeted(jobs, t0)?;
         engine_calls += 1;
+        rounds_done += 1;
+
+        // Was the round halted by the *budget* (deadline passed mid-call
+        // or cancellation)? An engine row preempted only by the C-chunk
+        // cap is a hyperparameter bound, not a budget event — the token
+        // cap makes itself felt through `clamp_tokens` / `exhausted`
+        // accounting below instead.
+        let round_budget_hit =
+            ctx.budget.cancelled() || ctx.budget.deadline_passed(ctx.now_ms() - t0);
 
         // Build expansion candidates (token accounting capped by budget).
         let mut expanded: Vec<BeamNode> = Vec::with_capacity(results.len());
@@ -125,6 +139,12 @@ fn run_beam(ctx: &RunCtx<'_>, params: &StrategyParams, deadline_aware: bool) -> 
             }
             let (kept, truncated) = ctx.budget.clamp_tokens(tokens_total, &kept);
             if truncated {
+                budget_exhausted = true;
+            }
+            if r.preempted && (truncated || round_budget_hit) {
+                // the engine evicted this row mid-round for budget
+                // reasons — the budget is spent
+                preempted = true;
                 budget_exhausted = true;
             }
             tokens_total += kept.len();
@@ -197,7 +217,9 @@ fn run_beam(ctx: &RunCtx<'_>, params: &StrategyParams, deadline_aware: bool) -> 
         tokens: tokens_total,
         latency_ms,
         engine_calls,
+        rounds: rounds_done,
         budget_exhausted,
+        preempted,
         stopped_early,
     })
 }

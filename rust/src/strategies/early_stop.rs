@@ -48,6 +48,7 @@ impl DecodingMethod for EarlyStopMajority {
         let mut tokens_total = 0usize;
         let mut engine_calls = 0usize;
         let mut budget_exhausted = false;
+        let mut preempted = false;
         let mut stopped_early = false;
         let mut issued = 0usize;
 
@@ -58,16 +59,16 @@ impl DecodingMethod for EarlyStopMajority {
             }
             let batch = Self::wave(n).min(n - issued);
             let jobs: Vec<GenJob> = (0..batch)
-                .map(|_| GenJob {
-                    tokens: prompt_ids.clone(),
-                    kind: GenKind::Full,
-                    temperature: ctx.temperature,
-                })
+                .map(|_| ctx.gen_job(prompt_ids.clone(), GenKind::Full, tokens_total))
                 .collect();
-            let results = ctx.engine.generate(jobs)?;
+            let results = ctx.generate_budgeted(jobs, t0)?;
             engine_calls += 1;
             issued += batch;
-            if accumulate_candidates(ctx, &results, &mut tokens_total, &mut candidates)? {
+            let acc = accumulate_candidates(ctx, &results, &mut tokens_total, &mut candidates)?;
+            if acc.preempted {
+                preempted = true;
+            }
+            if acc.budget_hit() {
                 budget_exhausted = true;
                 break;
             }
@@ -99,7 +100,9 @@ impl DecodingMethod for EarlyStopMajority {
             tokens: tokens_total,
             latency_ms: ctx.now_ms() - t0,
             engine_calls,
+            rounds: engine_calls,
             budget_exhausted,
+            preempted,
             stopped_early,
         })
     }

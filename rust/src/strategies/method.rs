@@ -15,7 +15,7 @@
 //! work once the budget is spent, and must report what happened through
 //! [`Outcome::budget_exhausted`] / [`Outcome::stopped_early`].
 
-use crate::engine::{EngineHandle, GenResult};
+use crate::engine::{EngineHandle, GenJob, GenKind, GenResult};
 use crate::error::Result;
 use crate::eval::Candidate;
 use crate::tokenizer::Tokenizer;
@@ -31,9 +31,10 @@ use std::sync::Arc;
 ///
 /// * never issue a new engine call once the budget is spent;
 /// * never account more than `max_tokens` generated tokens;
-/// * a single in-flight engine call may overshoot the deadline (the
-///   engine has no mid-batch preemption), but no *further* call may be
-///   issued after it.
+/// * pass the budget down to the engine ([`RunCtx::gen_job`] /
+///   [`RunCtx::generate_budgeted`]) so an in-flight batched call is
+///   preempted mid-decode when the deadline passes, instead of merely
+///   refusing the *next* call (see `docs/budgets.md`).
 #[derive(Debug, Clone, Default)]
 pub struct Budget {
     /// Hard cap on generated tokens accounted to this request.
@@ -110,6 +111,12 @@ impl Budget {
         }
     }
 
+    /// Absolute clock deadline for a strategy that started at `start_ms`
+    /// — what the engine's mid-call preemption works against.
+    pub fn deadline_at(&self, start_ms: f64) -> Option<f64> {
+        self.deadline_ms.map(|d| start_ms + d)
+    }
+
     /// No further engine work may be issued.
     pub fn exhausted(&self, used_tokens: usize, elapsed_ms: f64) -> bool {
         self.cancelled() || self.tokens_exhausted(used_tokens) || self.deadline_passed(elapsed_ms)
@@ -172,29 +179,77 @@ impl RunCtx<'_> {
     pub fn now_ms(&self) -> f64 {
         self.clock.now_ms()
     }
+
+    /// Build one generation job carrying this request's budget: the
+    /// token cap left after `used` accounted tokens and the shared
+    /// cancel flag, both enforced *inside* the engine's decode loop.
+    pub fn gen_job(&self, tokens: Vec<u32>, kind: GenKind, used: usize) -> GenJob {
+        let mut job = GenJob::new(tokens, kind, self.temperature);
+        let left = self.budget.tokens_left(used);
+        if left != usize::MAX {
+            job = job.with_max_new_tokens(left);
+        }
+        if let Some(flag) = &self.budget.cancel {
+            job = job.with_cancel(flag.clone());
+        }
+        job
+    }
+
+    /// Submit jobs under the budget's deadline (absolute, anchored at
+    /// the strategy start `t0`): the engine halts decoding mid-call when
+    /// it passes and returns partial results tagged `preempted`.
+    pub fn generate_budgeted(&self, jobs: Vec<GenJob>, t0: f64) -> Result<Vec<GenResult>> {
+        self.engine
+            .generate_with_deadline(jobs, self.budget.deadline_at(t0))
+    }
+}
+
+/// What a batch of generated candidates did to the request's budget.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct Accumulated {
+    /// The shared token cap bit during accounting (caller reports it as
+    /// `budget_exhausted`).
+    pub truncated: bool,
+    /// The engine halted at least one row mid-call (deadline, cancel or
+    /// per-job cap) — `Outcome::preempted`, and a budget hit too.
+    pub preempted: bool,
+}
+
+impl Accumulated {
+    pub fn budget_hit(&self) -> bool {
+        self.truncated || self.preempted
+    }
 }
 
 /// Shared accumulation for single-prompt parallel candidates: clamp each
 /// generated result to the token budget, decode, and collect it as a
 /// [`Candidate`]. Once the cap is fully spent the remaining results are
-/// dropped. Returns true if the cap bit (the caller reports it as
-/// `budget_exhausted`). Keep this the single copy of the truncation
-/// contract — `majority_vote`, best-of-N and `mv_early` all go through
-/// it.
+/// dropped. Engine-level preemption (partial rows tagged
+/// [`GenResult::preempted`]) is surfaced on the returned [`Accumulated`].
+/// Keep this the single copy of the truncation contract —
+/// `majority_vote`, best-of-N and `mv_early` all go through it.
 pub(crate) fn accumulate_candidates(
     ctx: &RunCtx<'_>,
     results: &[GenResult],
     tokens_total: &mut usize,
     candidates: &mut Vec<Candidate>,
-) -> Result<bool> {
-    let mut truncated_any = false;
+) -> Result<Accumulated> {
+    let mut acc = Accumulated::default();
     for r in results {
+        if r.preempted {
+            acc.preempted = true;
+        }
         let (kept, truncated) = ctx.budget.clamp_tokens(*tokens_total, &r.tokens);
         if truncated {
-            truncated_any = true;
+            acc.truncated = true;
         }
-        if truncated && kept.is_empty() {
-            break; // cap fully spent — drop the remaining candidates
+        if kept.is_empty() && (truncated || r.preempted) {
+            // cap fully spent or the engine evicted this row before it
+            // produced anything — nothing to vote with
+            if truncated {
+                break;
+            }
+            continue;
         }
         *tokens_total += kept.len();
         let text = format!("S:{}", ctx.tokenizer.decode(&kept)?);
@@ -204,7 +259,7 @@ pub(crate) fn accumulate_candidates(
             tokens: kept.len(),
         });
     }
-    Ok(truncated_any)
+    Ok(acc)
 }
 
 /// Result of running one strategy on one query.
@@ -221,10 +276,17 @@ pub struct Outcome {
     pub latency_ms: f64,
     /// Number of engine calls (diagnostic; beam ≫ parallel).
     pub engine_calls: usize,
+    /// Completed generation rounds: 1 for single-batch parallel methods,
+    /// waves issued for `mv_early`, expansion rounds for the beam family.
+    /// The budget-bucket cost model predicts this under truncation.
+    pub rounds: usize,
     /// The per-request budget ran out mid-strategy (token cap hit,
     /// deadline passed, or cancelled) and the method stopped issuing
     /// engine work.
     pub budget_exhausted: bool,
+    /// The engine halted a generation call mid-decode for this request
+    /// (deadline, cancel, or token cap) and returned partial rows.
+    pub preempted: bool,
     /// The method finished before its configured work on purpose:
     /// early-stop vote decided, or deadline-aware round truncation.
     pub stopped_early: bool,
@@ -244,7 +306,9 @@ impl Outcome {
             tokens: 0,
             latency_ms,
             engine_calls: 0,
+            rounds: 0,
             budget_exhausted: true,
+            preempted: false,
             stopped_early: false,
         }
     }
@@ -388,9 +452,18 @@ mod tests {
         let o = Outcome::empty(1.5);
         assert_eq!(o.tokens, 0);
         assert_eq!(o.engine_calls, 0);
+        assert_eq!(o.rounds, 0);
         assert!(o.budget_exhausted);
+        assert!(!o.preempted);
         assert!(!o.stopped_early);
         assert!(!o.is_correct("3"));
+    }
+
+    #[test]
+    fn deadline_at_anchors_absolute() {
+        let b = Budget::unlimited().with_deadline_ms(100.0);
+        assert_eq!(b.deadline_at(250.0), Some(350.0));
+        assert_eq!(Budget::unlimited().deadline_at(250.0), None);
     }
 
     #[test]

@@ -2,10 +2,13 @@
 //!
 //! All three ride one batched `lm_generate` call (latency ≈ a single
 //! generation); the best-of-N variants add one batched PRM call. Budget
-//! semantics: token accounting is truncated at `Budget::max_tokens`
-//! (candidates beyond the cap are dropped), and the PRM call is skipped
-//! when the deadline has already passed — a late request degrades to an
-//! unscored pick instead of spending another engine call.
+//! semantics: the budget rides down into the engine (per-job token caps,
+//! shared cancel flag, absolute call deadline) so the batched call is
+//! preempted mid-decode; token accounting is additionally truncated at
+//! `Budget::max_tokens` (candidates beyond the cap are dropped), and the
+//! PRM call is skipped when the deadline has already passed — a late
+//! request degrades to an unscored pick instead of spending another
+//! engine call.
 
 use crate::engine::{GenJob, GenKind};
 use crate::error::Result;
@@ -13,6 +16,8 @@ use crate::eval::{self, Candidate};
 use crate::strategies::method::{
     accumulate_candidates, DecodingMethod, Outcome, RunCtx, StrategyParams,
 };
+
+const PARALLEL_ROUNDS: usize = 1;
 
 /// How the winning candidate is chosen.
 #[derive(Clone, Copy)]
@@ -50,20 +55,18 @@ fn run_single_batch(
     let n = params.n.max(1);
     let prompt = format!("{}S:", ctx.query);
     let prompt_ids = ctx.tokenizer.encode(&prompt)?;
+    // budgeted jobs: per-job token cap + shared cancel flag, plus the
+    // absolute deadline on the call — the engine preempts mid-decode
     let jobs: Vec<GenJob> = (0..n)
-        .map(|_| GenJob {
-            tokens: prompt_ids.clone(),
-            kind: GenKind::Full,
-            temperature: ctx.temperature,
-        })
+        .map(|_| ctx.gen_job(prompt_ids.clone(), GenKind::Full, 0))
         .collect();
-    let results = ctx.engine.generate(jobs)?;
+    let results = ctx.generate_budgeted(jobs, t0)?;
     let mut engine_calls = 1usize;
 
     let mut tokens_total = 0usize;
     let mut candidates: Vec<Candidate> = Vec::with_capacity(results.len());
-    let mut budget_exhausted =
-        accumulate_candidates(ctx, &results, &mut tokens_total, &mut candidates)?;
+    let acc = accumulate_candidates(ctx, &results, &mut tokens_total, &mut candidates)?;
+    let mut budget_exhausted = acc.budget_hit();
 
     if chooser.needs_prm() && !candidates.is_empty() {
         if budget_exhausted
@@ -97,7 +100,9 @@ fn run_single_batch(
         tokens: tokens_total,
         latency_ms: ctx.now_ms() - t0,
         engine_calls,
+        rounds: PARALLEL_ROUNDS,
         budget_exhausted,
+        preempted: acc.preempted,
         stopped_early: false,
     })
 }

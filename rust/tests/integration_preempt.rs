@@ -1,0 +1,166 @@
+//! Engine-level mid-call preemption under the simulated clock: a
+//! deadline that expires *inside* one batched generate call must halt
+//! decoding within one decode step, return partial results tagged
+//! `preempted`, and surface through the strategy layer and the serving
+//! driver. Needs `make artifacts`; skips otherwise.
+
+use ttc::config::Config;
+use ttc::data::Splits;
+use ttc::engine::{Engine, GenJob, GenKind};
+use ttc::server::driver::{self, Mode};
+use ttc::server::loadgen::{self, Arrivals};
+use ttc::strategies::{Budget, Executor, Strategy};
+use ttc::tokenizer::Tokenizer;
+use ttc::util::clock::{CostEvent, LatencyModel};
+use ttc::util::rng::Rng;
+
+fn sim_setup() -> Option<(Engine, Executor, String)> {
+    let mut cfg = Config::default();
+    if !cfg.paths.artifacts.join("hlo_index.json").exists() {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    cfg.engine.sim_clock = true; // deterministic per-step preemption
+    let engine = Engine::start(&cfg).unwrap();
+    let executor = Executor::new(engine.handle(), engine.clock.clone(), cfg.engine.temperature);
+    let splits = Splits::load(&cfg.paths().data_dir()).unwrap();
+    let query = splits.test[0].query.clone();
+    Some((engine, executor, query))
+}
+
+/// One decode step at the largest batch bucket plus call overhead — the
+/// epsilon by which a preempted call may overshoot its deadline.
+fn decode_step_epsilon(engine: &Engine) -> f64 {
+    let info = engine.handle().info().unwrap();
+    let largest = info
+        .req("shapes")
+        .unwrap()
+        .req_arr("batch_buckets")
+        .unwrap()
+        .iter()
+        .filter_map(|v| v.as_usize())
+        .max()
+        .unwrap_or(32);
+    let model = LatencyModel::default();
+    model.cost_ms(CostEvent::DecodeStep { batch: largest }) + model.call_overhead_ms
+}
+
+#[test]
+fn deadline_preempts_mid_batched_call() {
+    let Some((engine, _executor, query)) = sim_setup() else {
+        return;
+    };
+    let tok = Tokenizer::new();
+    let prompt = tok.encode(&format!("{query}S:")).unwrap();
+    let handle = engine.handle();
+    // greedy so the unbudgeted and budgeted calls decode identically
+    let jobs = || -> Vec<GenJob> {
+        (0..4)
+            .map(|_| GenJob::new(prompt.clone(), GenKind::Full, 0.0))
+            .collect()
+    };
+
+    // Reference: one unpreempted batched call.
+    let t0 = engine.clock.now_ms();
+    let full = handle.generate(jobs()).unwrap();
+    let full_ms = engine.clock.now_ms() - t0;
+    assert!(full.iter().all(|r| !r.preempted));
+    let natural_max = full.iter().map(|r| r.tokens.len()).max().unwrap();
+    assert!(natural_max > 2, "need a multi-step call to preempt");
+    assert!(full_ms > 0.0);
+
+    // A deadline halfway through that same call.
+    let t1 = engine.clock.now_ms();
+    let deadline = t1 + 0.5 * full_ms;
+    let cut = handle.generate_with_deadline(jobs(), Some(deadline)).unwrap();
+    let t2 = engine.clock.now_ms();
+    assert!(
+        cut.iter().any(|r| r.preempted),
+        "a mid-call deadline must preempt"
+    );
+    // the engine halted within one decode step of the deadline
+    let eps = decode_step_epsilon(&engine);
+    assert!(
+        t2 <= deadline + eps,
+        "call ran to {t2} against deadline {deadline} (+eps {eps})"
+    );
+    // partial results are prefixes of the unpreempted (greedy) outputs
+    for (c, f) in cut.iter().zip(&full) {
+        assert!(c.tokens.len() <= f.tokens.len());
+        assert_eq!(c.tokens[..], f.tokens[..c.tokens.len()]);
+    }
+    assert!(engine.metrics.preempted_rows.get() > 0);
+}
+
+#[test]
+fn strategy_deadline_yields_preempted_partial_outcome() {
+    let Some((engine, executor, query)) = sim_setup() else {
+        return;
+    };
+    let s = Strategy::mv(4);
+    let full = executor.run(&s, &query).unwrap();
+    assert!(!full.preempted && !full.budget_exhausted);
+    assert!(full.latency_ms > 0.0);
+
+    // Deadline shorter than the single unpreempted batched call.
+    let deadline = 0.5 * full.latency_ms;
+    let o = executor
+        .run_budgeted(&s, &query, Budget::unlimited().with_deadline_ms(deadline))
+        .unwrap();
+    assert!(o.preempted, "engine-level preemption must be reported");
+    assert!(o.budget_exhausted);
+    assert!(o.tokens > 0, "partial results, not a zeroed request");
+    let eps = decode_step_epsilon(&engine);
+    assert!(
+        o.latency_ms <= deadline + eps,
+        "strategy latency {} exceeds deadline {deadline} + eps {eps}",
+        o.latency_ms
+    );
+}
+
+#[test]
+fn driver_reports_preemption_counts_and_deadline_latency() {
+    let Some((engine, executor, _query)) = sim_setup() else {
+        return;
+    };
+    let splits = Splits::load(&Config::default().paths().data_dir()).unwrap();
+
+    // Measure one natural run to place the deadline mid-call; schedule
+    // the same query so every request's call shape matches.
+    let s = Strategy::mv(4);
+    let full = executor.run(&s, &splits.test[0].query).unwrap();
+    let deadline = 0.5 * full.latency_ms;
+    assert!(deadline > 0.0);
+
+    let mut rng = Rng::new(7, 0);
+    let schedule = loadgen::schedule_budgeted(
+        &splits.test[..1],
+        4,
+        Arrivals::Closed,
+        Budget::unlimited().with_deadline_ms(deadline),
+        &mut rng,
+    );
+    let report = driver::run(&executor, &Mode::Static(s), schedule, 1).unwrap();
+    assert_eq!(report.served.len(), 4);
+
+    let eps = decode_step_epsilon(&engine);
+    let mut preempted = 0;
+    for srv in &report.served {
+        // the service latency the system accounts (sim clock) respects
+        // the deadline up to one decode step
+        assert!(
+            srv.service_ms <= deadline + eps,
+            "{}: service {}ms vs deadline {deadline}ms",
+            srv.query_id,
+            srv.service_ms
+        );
+        if srv.preempted {
+            preempted += 1;
+            assert!(srv.budget_exhausted);
+        }
+    }
+    assert!(preempted > 0, "a mid-call deadline must preempt some requests");
+    let v = report.to_json();
+    assert_eq!(v.req_f64("preempted_count").unwrap() as usize, preempted);
+    assert!(v.req_f64("preempted_fraction").unwrap() > 0.0);
+}

@@ -28,11 +28,7 @@ fn engine_generates_well_formed_solutions() {
     let tok = Tokenizer::new();
     let prompt = tok.encode("Q:7+8-2=?\nS:").unwrap();
     let jobs: Vec<GenJob> = (0..3)
-        .map(|_| GenJob {
-            tokens: prompt.clone(),
-            kind: GenKind::Full,
-            temperature: 0.8,
-        })
+        .map(|_| GenJob::new(prompt.clone(), GenKind::Full, 0.8))
         .collect();
     let results = engine.handle().generate(jobs).unwrap();
     assert_eq!(results.len(), 3);
@@ -56,13 +52,8 @@ fn greedy_generation_is_deterministic_across_calls() {
     let engine = Engine::start(&cfg).unwrap();
     let tok = Tokenizer::new();
     let prompt = tok.encode("Q:2+3+4=?\nS:").unwrap();
-    let job = || {
-        vec![GenJob {
-            tokens: prompt.clone(),
-            kind: GenKind::Full,
-            temperature: 0.0, // greedy — RNG key must not matter
-        }]
-    };
+    // greedy — RNG key must not matter
+    let job = || vec![GenJob::new(prompt.clone(), GenKind::Full, 0.0)];
     let a = engine.handle().generate(job()).unwrap();
     let b = engine.handle().generate(job()).unwrap();
     assert_eq!(a[0].tokens, b[0].tokens);
@@ -75,11 +66,7 @@ fn chunk_generation_stops_at_step_separator() {
     let tok = Tokenizer::new();
     let prompt = tok.encode("Q:7+8-2+8=?\nS:7+8=5;").unwrap();
     let jobs: Vec<GenJob> = (0..4)
-        .map(|_| GenJob {
-            tokens: prompt.clone(),
-            kind: GenKind::Chunk,
-            temperature: 0.8,
-        })
+        .map(|_| GenJob::new(prompt.clone(), GenKind::Chunk, 0.8))
         .collect();
     let results = engine.handle().generate(jobs).unwrap();
     for r in &results {
@@ -169,10 +156,7 @@ fn probe_fwd_shapes_and_bad_dims_rejected() {
 fn oversized_prompt_is_engine_error() {
     require_artifacts!(cfg);
     let engine = Engine::start(&cfg).unwrap();
-    let jobs = vec![GenJob {
-        tokens: vec![2; 200], // exceeds every length bucket
-        kind: GenKind::Chunk,
-        temperature: 0.8,
-    }];
+    // a 200-token prompt exceeds every length bucket
+    let jobs = vec![GenJob::new(vec![2; 200], GenKind::Chunk, 0.8)];
     assert!(engine.handle().generate(jobs).is_err());
 }

@@ -1,0 +1,94 @@
+#!/usr/bin/env bash
+# Run the router + engine benches, emit BENCH_<sha>.json at the repo
+# root, and gate on router-select p50 regression against the committed
+# baseline (rust/benches/baseline.json).
+#
+#   scripts/bench_gate.sh                   # bench + emit + gate
+#   scripts/bench_gate.sh --write-baseline  # bench + refresh the baseline
+#
+# The bench harness prints machine-parseable lines
+# (`bench,<name>,<iters>,<mean_ns>,<p50_ns>,<p95_ns>`); engine benches
+# self-skip without AOT artifacts, so the router benches always gate.
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$ROOT/rust"
+
+SHA="${GITHUB_SHA:-$(git -C "$ROOT" rev-parse HEAD 2>/dev/null || echo local)}"
+SHA="${SHA:0:12}"
+OUT="$ROOT/BENCH_${SHA}.json"
+RAW="$(mktemp)"
+trap 'rm -f "$RAW"' EXIT
+
+echo "==> cargo bench (router + engine)"
+cargo bench --bench bench_router --bench bench_engine | tee "$RAW"
+
+python3 - "$RAW" "$OUT" "$SHA" <<'PY'
+import json, sys
+
+raw, out, sha = sys.argv[1], sys.argv[2], sys.argv[3]
+benches = {}
+for line in open(raw):
+    parts = line.strip().split(",")
+    if len(parts) == 6 and parts[0] == "bench":
+        _, name, iters, mean, p50, p95 = parts
+        try:
+            benches[name] = {
+                "iters": int(iters),
+                "mean_ns": float(mean),
+                "p50_ns": float(p50),
+                "p95_ns": float(p95),
+            }
+        except ValueError:
+            pass
+json.dump({"commit": sha, "benches": benches}, open(out, "w"), indent=2)
+print(f"wrote {out} ({len(benches)} benches)")
+PY
+
+BASELINE="$ROOT/rust/benches/baseline.json"
+
+if [[ "${1:-}" == "--write-baseline" ]]; then
+    python3 - "$OUT" "$BASELINE" <<'PY'
+import json, sys
+
+cur = json.load(open(sys.argv[1]))["benches"]
+base = json.load(open(sys.argv[2]))
+for name, entry in base.get("benches", {}).items():
+    if name in cur:
+        entry["p50_ns"] = cur[name]["p50_ns"]
+json.dump(base, open(sys.argv[2], "w"), indent=2)
+print(f"baseline refreshed from {sys.argv[1]}")
+PY
+    exit 0
+fi
+
+echo "==> router-select regression gate"
+python3 - "$OUT" "$BASELINE" <<'PY'
+import json, sys
+
+cur = json.load(open(sys.argv[1]))["benches"]
+try:
+    base = json.load(open(sys.argv[2]))
+except FileNotFoundError:
+    print("WARN: no committed baseline; gate skipped")
+    sys.exit(0)
+
+gate = base.get("gate", {})
+name = gate.get("bench", "select_offline_full_space")
+max_reg = float(gate.get("max_regression", 0.25))
+ref = base.get("benches", {}).get(name, {}).get("p50_ns")
+if ref is None:
+    print(f"WARN: baseline has no p50_ns for '{name}'; gate skipped")
+    sys.exit(0)
+got = cur.get(name, {}).get("p50_ns")
+if got is None:
+    print(f"FAIL: bench '{name}' missing from this run")
+    sys.exit(1)
+limit = ref * (1.0 + max_reg)
+ok = got <= limit
+print(
+    f"{'OK' if ok else 'FAIL'}: {name} p50 {got:.0f}ns "
+    f"vs baseline {ref:.0f}ns (limit {limit:.0f}ns, +{max_reg:.0%})"
+)
+sys.exit(0 if ok else 1)
+PY

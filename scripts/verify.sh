@@ -1,8 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 verification in one command (mirrors .github/workflows/ci.yml).
 #
-#   scripts/verify.sh          # build + test + clippy
-#   scripts/verify.sh --quick  # build + test only (skip clippy)
+#   scripts/verify.sh          # build + test + fmt + clippy + docs
+#   scripts/verify.sh --quick  # build + test only (skip fmt/clippy/docs)
 #
 # Integration tests that need AOT artifacts (`make artifacts`) self-skip
 # when artifacts/hlo_index.json is absent, so this runs green on a fresh
@@ -18,8 +18,14 @@ echo "==> cargo test -q"
 cargo test -q
 
 if [[ "${1:-}" != "--quick" ]]; then
+    echo "==> cargo fmt --check"
+    cargo fmt --check
+
     echo "==> cargo clippy --all-targets -- -D warnings"
     cargo clippy --all-targets -- -D warnings
+
+    echo "==> cargo doc --no-deps (rustdoc warnings are errors)"
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 fi
 
 echo "verify: OK"
