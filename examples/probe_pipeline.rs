@@ -21,6 +21,7 @@ fn main() -> anyhow::Result<()> {
     cfg.space.mv_ns = vec![1, 4];
     cfg.space.bon_ns = vec![4];
     cfg.space.beam = vec![(2, 2, 12)];
+    cfg.space.mv_early = vec![];
     cfg.space.extra = vec!["mv_early@4".into()];
     let engine = Engine::start(&cfg)?;
     let executor = Executor::new(engine.handle(), engine.clock.clone(), cfg.engine.temperature);

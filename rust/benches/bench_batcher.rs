@@ -1,6 +1,6 @@
 //! L3 hot path: batch planning (runs on every generate round).
 
-use ttc::engine::{plan_batches, GenJob, GenKind};
+use ttc::engine::{pack_bins, plan_batches, plan_batches_edf, GenJob, GenKind};
 use ttc::util::bench::{bench, header};
 use ttc::util::rng::Rng;
 
@@ -37,4 +37,29 @@ fn main() {
             std::hint::black_box(plan_batches(&js, &buckets, &lens, 32));
         });
     }
+
+    // deadline-aware planning (per-job sort + EDF plan ordering)
+    for n in [32usize, 128] {
+        let js = jobs(n, n as u64);
+        let mut rng = Rng::new(7, n as u64);
+        let deadlines: Vec<f64> = (0..n)
+            .map(|_| {
+                if rng.below(2) == 0 {
+                    f64::INFINITY
+                } else {
+                    rng.f64() * 500.0
+                }
+            })
+            .collect();
+        bench(&format!("plan_batches_edf_{n}_jobs"), || {
+            std::hint::black_box(plan_batches_edf(&js, &deadlines, &buckets, &lens, 32));
+        });
+    }
+
+    // bin-packing alone (the DP the planner runs per group)
+    bench("pack_bins_0_to_128", || {
+        for n in 0..128usize {
+            std::hint::black_box(pack_bins(n, &buckets));
+        }
+    });
 }

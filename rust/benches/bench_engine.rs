@@ -91,5 +91,46 @@ fn main() {
         );
     });
 
-    println!("# engine info: {}", handle.info().unwrap().dumps());
+    // concurrent mixed workload: 4 workers each alternating generate →
+    // PRM score, the beam-family cadence under multi-worker serving.
+    // The scheduler coalesces same-op messages from different workers
+    // into shared bucket-shaped calls, so the padded-row fractions
+    // reported below drop vs serving each worker's small batch alone.
+    let prm_prefix = tok.encode("Q:7+8-2+8=?\nS:7+8=5;5-2=3;").unwrap();
+    bench("mixed_concurrent_4w", || {
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let handle = handle.clone();
+                let prompt = prompt.clone();
+                let prm_prefix = prm_prefix.clone();
+                scope.spawn(move || {
+                    let jobs: Vec<GenJob> = (0..4)
+                        .map(|_| GenJob::new(prompt.clone(), GenKind::Full, 0.8))
+                        .collect();
+                    handle.generate(jobs).unwrap();
+                    let prefixes: Vec<Vec<u32>> = (0..8).map(|_| prm_prefix.clone()).collect();
+                    handle.prm_score(prefixes).unwrap();
+                });
+            }
+        });
+    });
+
+    // machine-parseable padding/coalescing stats for the bench gate
+    // (`stat,<name>,<value>` — picked up into BENCH_<sha>.json)
+    let info = handle.info().unwrap();
+    let metrics = info.req("metrics").expect("engine metrics");
+    for key in [
+        "padding_waste",
+        "prm_padding_waste",
+        "embed_padding_waste",
+        "sched_rounds",
+        "coalesced_msgs",
+        "coalesced_prm",
+        "coalesced_generates",
+    ] {
+        if let Ok(v) = metrics.req_f64(key) {
+            println!("stat,{key},{v}");
+        }
+    }
+    println!("# engine info: {}", info.dumps());
 }

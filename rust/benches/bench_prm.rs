@@ -27,4 +27,31 @@ fn main() {
             std::hint::black_box(handle.prm_score(prefixes.clone()).unwrap());
         });
     }
+
+    // four concurrent scorers of 8 prefixes each: the engine scheduler
+    // coalesces them into shared bucket-shaped calls (one b32 instead of
+    // four padded b8s when their messages land in the same round)
+    bench("prm_score_4x8_concurrent", || {
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let handle = handle.clone();
+                let prefix = prefix.clone();
+                scope.spawn(move || {
+                    let prefixes: Vec<Vec<u32>> = (0..8).map(|_| prefix.clone()).collect();
+                    std::hint::black_box(handle.prm_score(prefixes).unwrap());
+                });
+            }
+        });
+    });
+
+    // namespaced so these PRM-only numbers never collide with
+    // bench_engine's mixed-workload stats in BENCH_<sha>.json (the
+    // gate's ceilings target the mixed workload)
+    let info = handle.info().unwrap();
+    let metrics = info.req("metrics").expect("engine metrics");
+    for key in ["prm_padding_waste", "coalesced_prm"] {
+        if let Ok(v) = metrics.req_f64(key) {
+            println!("stat,bench_prm_{key},{v}");
+        }
+    }
 }

@@ -75,6 +75,10 @@ pub struct SpaceConfig {
     pub bon_ns: Vec<usize>,
     /// Beam-search configs `(n_beams, width, chunk_tokens)`.
     pub beam: Vec<(usize, usize, usize)>,
+    /// Early-stop majority configs `(n, wave)`: wave size per vote
+    /// checkpoint, searchable like beam's W; `wave <= 1` = the method's
+    /// auto default `max(2, n/4)`.
+    pub mv_early: Vec<(usize, usize)>,
     /// Max expansion rounds for beam search (depth bound D).
     pub beam_max_rounds: usize,
     /// Additional strategies by id (`"<method>@<params>"`), resolved
@@ -86,20 +90,19 @@ pub struct SpaceConfig {
 
 impl Default for SpaceConfig {
     fn default() -> Self {
-        // 17 strategies — sized so the full evaluation matrix fits the
+        // 18 strategies — sized so the full evaluation matrix fits the
         // single-core budget while spanning the paper's qualitative space
-        // (cheap→expensive within each method family), plus the two
-        // budget-aware methods via the registry-driven `extra` door.
+        // (cheap→expensive within each method family). mv_early's wave
+        // size is part of the searched space (auto plus one explicit
+        // wave point); beam_latency rides the registry-driven `extra`
+        // door.
         SpaceConfig {
             mv_ns: vec![1, 2, 4, 8, 16],
             bon_ns: vec![4, 8, 16],
             beam: vec![(2, 2, 12), (4, 2, 12), (4, 4, 12)],
+            mv_early: vec![(8, 1), (16, 1), (16, 4)],
             beam_max_rounds: 10,
-            extra: vec![
-                "mv_early@8".into(),
-                "mv_early@16".into(),
-                "beam_latency@4x2c12".into(),
-            ],
+            extra: vec!["beam_latency@4x2c12".into()],
         }
     }
 }
@@ -338,6 +341,28 @@ impl Config {
                 })
                 .collect::<Result<_>>()?;
         }
+        if let Some(me) = v.get("mv_early") {
+            let arr = me
+                .as_arr()
+                .ok_or_else(|| Error::Config("space.mv_early must be an array".into()))?;
+            self.space.mv_early = arr
+                .iter()
+                .map(|pair| {
+                    let t = pair
+                        .as_arr()
+                        .filter(|t| t.len() == 2)
+                        .ok_or_else(|| {
+                            Error::Config("mv_early entry must be [n, wave]".into())
+                        })?;
+                    Ok((
+                        t[0].as_usize()
+                            .ok_or_else(|| Error::Config("mv_early n".into()))?,
+                        t[1].as_usize()
+                            .ok_or_else(|| Error::Config("mv_early wave".into()))?,
+                    ))
+                })
+                .collect::<Result<_>>()?;
+        }
         Ok(())
     }
 
@@ -399,7 +424,8 @@ mod tests {
         let v = parse(
             r#"{"seed": 99, "engine": {"temperature": 0.5, "buckets": [1, 2]},
                 "space": {"mv_ns": [1, 3], "beam": [[2, 2, 8]],
-                          "extra": ["mv_early@4", "beam_latency@2x2c8"]},
+                          "mv_early": [[8, 2], [16, 1]],
+                          "extra": ["mv_early@4w2", "beam_latency@2x2c8"]},
                 "sweep": {"lambda_t": [0, 0.1]}}"#,
         )
         .unwrap();
@@ -409,9 +435,10 @@ mod tests {
         assert_eq!(c.engine.buckets, vec![1, 2]);
         assert_eq!(c.space.mv_ns, vec![1, 3]);
         assert_eq!(c.space.beam, vec![(2, 2, 8)]);
+        assert_eq!(c.space.mv_early, vec![(8, 2), (16, 1)]);
         assert_eq!(
             c.space.extra,
-            vec!["mv_early@4".to_string(), "beam_latency@2x2c8".to_string()]
+            vec!["mv_early@4w2".to_string(), "beam_latency@2x2c8".to_string()]
         );
         assert_eq!(c.sweep.lambda_t, vec![0.0, 0.1]);
     }

@@ -1,11 +1,14 @@
 //! Batch planning: packing sequence jobs into bucket-shaped executable
-//! calls.
+//! calls, deadline-aware.
 //!
 //! Pure logic (no PJRT) so it is unit- and property-testable. The planner
 //! groups jobs by compatibility key — generation kind, padded-length
-//! bucket and temperature — then splits each group into batches no larger
-//! than the biggest bucket, choosing for each batch the smallest bucket
-//! that fits (padding waste is tracked by [`crate::metrics`]).
+//! bucket and temperature — then splits each group into bucket-sized
+//! *bins* chosen by a padding-minimizing packing ([`pack_bins`]) instead
+//! of greedy max-bucket chunking, and finally orders the planned calls
+//! earliest-deadline-first ([`order_plans_edf`]) so a near-deadline
+//! request is never stuck behind bulk batch work. Padding waste is
+//! tracked by [`crate::metrics`].
 
 use crate::engine::protocol::{GenJob, GenKind};
 
@@ -45,16 +48,112 @@ pub fn pick_bucket(buckets: &[usize], n: usize) -> usize {
     *buckets.last().unwrap()
 }
 
-/// Plan executable calls for a set of jobs.
+/// Cost of launching one extra executable call, expressed in padded-row
+/// equivalents. The packing below minimizes `padding + COST·calls`: with
+/// pure padding minimization every group would shatter into bucket-1
+/// calls (zero padding, maximal per-call overhead); with pure
+/// call-minimization every group would ride the single smallest covering
+/// bucket (the old greedy behavior — up to `max_bucket/2 − 1` padded
+/// rows). Four rows per call sits where one extra call must save at
+/// least half a small bucket of padding to pay for itself.
+const CALL_COST_ROWS: usize = 4;
+
+/// Partition `n` jobs into bucket-sized bins minimizing
+/// `total_padding + CALL_COST_ROWS · bins` (ties prefer fewer bins).
+/// Returns the chosen bucket capacities, largest first — fill them in
+/// order and only the final bin is ever underfull.
 ///
-/// `batch_buckets` and `len_buckets` must be sorted ascending.
-/// `query_len` is the (single) padded length for full generation.
+/// Greedy max-bucket chunking pads `n = 20` up to a 32-bucket (12 padded
+/// rows); this packing returns `[16, 4]` (zero padding, one extra call).
+pub fn pack_bins(n: usize, buckets: &[usize]) -> Vec<usize> {
+    debug_assert!(!buckets.is_empty());
+    if n == 0 {
+        return Vec::new();
+    }
+    // dp[k] = (cost, bins, bucket of the last bin) to cover exactly k jobs
+    let mut dp: Vec<(usize, usize, usize)> = vec![(usize::MAX, usize::MAX, 0); n + 1];
+    dp[0] = (0, 0, 0);
+    for k in 1..=n {
+        for &b in buckets {
+            let prev = k.saturating_sub(b);
+            let (prev_cost, prev_bins, _) = dp[prev];
+            if prev_cost == usize::MAX {
+                continue;
+            }
+            let used = k - prev; // rows of this bin actually occupied
+            let cost = prev_cost + (b - used) + CALL_COST_ROWS;
+            let bins = prev_bins + 1;
+            if (cost, bins) < (dp[k].0, dp[k].1) {
+                dp[k] = (cost, bins, b);
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(dp[n].1);
+    let mut k = n;
+    while k > 0 {
+        let b = dp[k].2;
+        out.push(b);
+        k = k.saturating_sub(b);
+    }
+    out.sort_unstable_by(|a, b| b.cmp(a));
+    out
+}
+
+/// Earliest deadline among a plan's rows (`f64::INFINITY` when none).
+pub fn plan_deadline(plan: &BatchPlan, deadlines: &[f64]) -> f64 {
+    plan.job_indices
+        .iter()
+        .map(|&i| deadlines[i])
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// Order planned calls earliest-deadline-first: stable sort by each
+/// plan's earliest row deadline, so the call a near-deadline request
+/// rides in is dispatched before bulk undeadlined work. Ties (including
+/// all-unbudgeted plans) keep their planning order.
+pub fn order_plans_edf(plans: &mut [BatchPlan], deadlines: &[f64]) {
+    plans.sort_by(|a, b| {
+        plan_deadline(a, deadlines)
+            .partial_cmp(&plan_deadline(b, deadlines))
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+}
+
+/// Plan executable calls for a set of jobs with no deadlines (offline /
+/// bench path). Equivalent to [`plan_batches_edf`] with every deadline
+/// infinite: bin-packed, original submission order preserved.
 pub fn plan_batches(
     jobs: &[GenJob],
     batch_buckets: &[usize],
     len_buckets: &[usize],
     query_len: usize,
 ) -> Vec<BatchPlan> {
+    plan_batches_edf(
+        jobs,
+        &vec![f64::INFINITY; jobs.len()],
+        batch_buckets,
+        len_buckets,
+        query_len,
+    )
+}
+
+/// Plan executable calls for a set of jobs under per-job absolute
+/// deadlines (`f64::INFINITY` = none; must be `jobs.len()` long).
+///
+/// `batch_buckets` and `len_buckets` must be sorted ascending.
+/// `query_len` is the (single) padded length for full generation.
+/// Within each compatibility group, rows are ordered
+/// earliest-deadline-first before bin-packing (near-deadline jobs share
+/// the first, earliest-dispatched bins), and the returned plans are
+/// ordered earliest-deadline-first overall.
+pub fn plan_batches_edf(
+    jobs: &[GenJob],
+    deadlines: &[f64],
+    batch_buckets: &[usize],
+    len_buckets: &[usize],
+    query_len: usize,
+) -> Vec<BatchPlan> {
+    debug_assert_eq!(jobs.len(), deadlines.len());
     // group key: (kind, len bucket, temperature bits)
     let mut groups: Vec<((GenKind, usize, u32), Vec<usize>)> = Vec::new();
     for (i, job) in jobs.iter().enumerate() {
@@ -69,10 +168,21 @@ pub fn plan_batches(
         }
     }
 
-    let max_bucket = *batch_buckets.last().unwrap();
     let mut plans = Vec::new();
-    for ((kind, len_bucket, temp_bits), indices) in groups {
-        for chunk in indices.chunks(max_bucket) {
+    for ((kind, len_bucket, temp_bits), mut indices) in groups {
+        // earliest-deadline rows first; ties keep submission order
+        indices.sort_by(|&a, &b| {
+            deadlines[a]
+                .partial_cmp(&deadlines[b])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let bins = pack_bins(indices.len(), batch_buckets);
+        let mut start = 0usize;
+        for bucket in bins {
+            let take = bucket.min(indices.len() - start);
+            let chunk = &indices[start..start + take];
+            start += take;
             // a single uncapped row forces the whole call to run to the
             // executable's own limit; otherwise the largest cap bounds it
             let mut max_steps = Some(0usize);
@@ -84,14 +194,16 @@ pub fn plan_batches(
             }
             plans.push(BatchPlan {
                 job_indices: chunk.to_vec(),
-                bucket: pick_bucket(batch_buckets, chunk.len()),
+                bucket,
                 len_bucket,
                 kind,
                 temperature: f32::from_bits(temp_bits),
                 max_steps,
             });
         }
+        debug_assert_eq!(start, indices.len());
     }
+    order_plans_edf(&mut plans, deadlines);
     plans
 }
 
@@ -115,6 +227,26 @@ mod tests {
         assert_eq!(pick_bucket(BUCKETS, 16), 16);
         assert_eq!(pick_bucket(BUCKETS, 17), 32);
         assert_eq!(pick_bucket(BUCKETS, 99), 32); // clamped; caller splits
+    }
+
+    #[test]
+    fn pack_bins_basics() {
+        assert_eq!(pack_bins(0, BUCKETS), Vec::<usize>::new());
+        assert_eq!(pack_bins(1, BUCKETS), vec![1]);
+        assert_eq!(pack_bins(2, BUCKETS), vec![4]); // 2 padded < 1 extra call
+        assert_eq!(pack_bins(16, BUCKETS), vec![16]);
+        // greedy would pad 20 up to one 32-bucket (12 padded rows)
+        assert_eq!(pack_bins(20, BUCKETS), vec![16, 4]);
+        assert_eq!(pack_bins(33, BUCKETS), vec![32, 1]);
+        assert_eq!(pack_bins(70, BUCKETS), vec![32, 32, 8]);
+    }
+
+    #[test]
+    fn pack_bins_single_call_when_padding_cheap() {
+        // 5 jobs: bucket 8 pads 3 rows — cheaper than the extra 4+1 call
+        assert_eq!(pack_bins(5, BUCKETS), vec![8]);
+        // tie on cost (16 alone vs 8+4): fewer calls wins
+        assert_eq!(pack_bins(12, BUCKETS), vec![16]);
     }
 
     #[test]
@@ -151,6 +283,18 @@ mod tests {
     }
 
     #[test]
+    fn bin_packing_avoids_max_bucket_padding() {
+        // 20 identical jobs: greedy max-bucket chunking would issue one
+        // 32-bucket call (12 padded rows); bin-packing issues 16 + 4.
+        let jobs: Vec<GenJob> = (0..20).map(|_| job(8, GenKind::Full, 0.8)).collect();
+        let plans = plan_batches(&jobs, BUCKETS, LENS, 32);
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0].bucket, 16);
+        assert_eq!(plans[1].bucket, 4);
+        assert_eq!(plans.iter().map(BatchPlan::padding).sum::<usize>(), 0);
+    }
+
+    #[test]
     fn different_temperatures_do_not_mix() {
         let jobs = vec![job(8, GenKind::Full, 0.8), job(8, GenKind::Full, 0.5)];
         let plans = plan_batches(&jobs, BUCKETS, LENS, 32);
@@ -180,6 +324,20 @@ mod tests {
         assert_eq!(plans[0].max_steps, None);
     }
 
+    #[test]
+    fn edf_orders_plans_and_rows() {
+        // jobs 0..3 undeadlined, job 4 (different temperature group)
+        // near its deadline: its plan must be dispatched first
+        let mut jobs: Vec<GenJob> = (0..4).map(|_| job(8, GenKind::Full, 0.8)).collect();
+        jobs.push(job(8, GenKind::Full, 0.5));
+        let mut deadlines = vec![f64::INFINITY; 4];
+        deadlines.push(10.0);
+        let plans = plan_batches_edf(&jobs, &deadlines, BUCKETS, LENS, 32);
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0].job_indices, vec![4]);
+        assert_eq!(plan_deadline(&plans[0], &deadlines), 10.0);
+    }
+
     // ---- properties ----
 
     fn random_jobs(rng: &mut Rng) -> Vec<GenJob> {
@@ -196,6 +354,18 @@ mod tests {
             let temp = if r.below(4) == 0 { 0.5 } else { 0.8 };
             job(n, kind, temp)
         })
+    }
+
+    fn random_deadlines(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|_| {
+                if rng.below(2) == 0 {
+                    f64::INFINITY
+                } else {
+                    rng.f64() * 500.0
+                }
+            })
+            .collect()
     }
 
     #[test]
@@ -217,30 +387,41 @@ mod tests {
 
     #[test]
     fn prop_capacity_and_fit() {
-        forall("batches fit buckets", 150, random_jobs, |jobs| {
-            let plans = plan_batches(jobs, BUCKETS, LENS, 32);
-            for p in &plans {
-                prop_assert(
-                    p.job_indices.len() <= p.bucket,
-                    format!("overfull batch {p:?}"),
-                )?;
-                prop_assert(
-                    BUCKETS.contains(&p.bucket),
-                    format!("non-bucket size {p:?}"),
-                )?;
-                for &i in &p.job_indices {
-                    let need = match jobs[i].kind {
-                        GenKind::Full => 32,
-                        GenKind::Chunk => jobs[i].tokens.len(),
-                    };
+        // bin-packed plans never exceed bucket capacity, for deadlined
+        // and undeadlined planning alike
+        forall(
+            "batches fit buckets",
+            150,
+            |rng| {
+                let jobs = random_jobs(rng);
+                let deadlines = random_deadlines(rng, jobs.len());
+                (jobs, deadlines)
+            },
+            |(jobs, deadlines)| {
+                let plans = plan_batches_edf(jobs, deadlines, BUCKETS, LENS, 32);
+                for p in &plans {
                     prop_assert(
-                        need <= p.len_bucket,
-                        format!("prompt {need} exceeds len bucket {}", p.len_bucket),
+                        p.job_indices.len() <= p.bucket,
+                        format!("overfull batch {p:?}"),
                     )?;
+                    prop_assert(
+                        BUCKETS.contains(&p.bucket),
+                        format!("non-bucket size {p:?}"),
+                    )?;
+                    for &i in &p.job_indices {
+                        let need = match jobs[i].kind {
+                            GenKind::Full => 32,
+                            GenKind::Chunk => jobs[i].tokens.len(),
+                        };
+                        prop_assert(
+                            need <= p.len_bucket,
+                            format!("prompt {need} exceeds len bucket {}", p.len_bucket),
+                        )?;
+                    }
                 }
-            }
-            Ok(())
-        });
+                Ok(())
+            },
+        );
     }
 
     #[test]
@@ -262,15 +443,13 @@ mod tests {
 
     #[test]
     fn prop_padding_bounded() {
-        // padding waste per batch is < half the bucket except for the
-        // smallest bucket (bucket 1 has zero padding by construction)
+        // bin-packing fills every bin but the last of each group, so
+        // per-plan padding is never worse than the smallest covering
+        // bucket's (pad <= n+1 on this ladder; bucket 1 pads zero)
         forall("padding reasonable", 100, random_jobs, |jobs| {
             let plans = plan_batches(jobs, BUCKETS, LENS, 32);
             for p in &plans {
                 let n = p.job_indices.len();
-                // smallest bucket ≥ n means previous bucket < n, so
-                // padding = bucket - n < bucket / 2 for power-of-2-ish
-                // ladders except bucket 4 with n=2 (pad 2). Allow pad <= n+1.
                 prop_assert(
                     p.padding() <= n + 1,
                     format!("excess padding: {} jobs in bucket {}", n, p.bucket),
@@ -278,5 +457,63 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn packing_never_pads_more_than_greedy() {
+        // total padding under pack_bins <= the old greedy max-bucket
+        // chunking, for every group size up to several buckets' worth
+        let max_bucket = *BUCKETS.last().unwrap();
+        for n in 0..200usize {
+            let packed: usize = pack_bins(n, BUCKETS).iter().sum::<usize>() - n;
+            let mut greedy = 0usize;
+            let mut left = n;
+            while left > 0 {
+                let take = left.min(max_bucket);
+                greedy += pick_bucket(BUCKETS, take) - take;
+                left -= take;
+            }
+            assert!(
+                packed <= greedy,
+                "n={n}: packed padding {packed} > greedy {greedy}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_edf_no_starvation() {
+        // after EDF ordering no plan precedes a strictly earlier-deadline
+        // plan, and the globally earliest deadline rides the first plan —
+        // a near-deadline request is never starved behind bulk work
+        forall(
+            "EDF never starves a deadline",
+            150,
+            |rng| {
+                let jobs = random_jobs(rng);
+                let deadlines = random_deadlines(rng, jobs.len());
+                (jobs, deadlines)
+            },
+            |(jobs, deadlines)| {
+                let plans = plan_batches_edf(jobs, deadlines, BUCKETS, LENS, 32);
+                let keys: Vec<f64> = plans.iter().map(|p| plan_deadline(p, deadlines)).collect();
+                for w in keys.windows(2) {
+                    prop_assert(
+                        w[0] <= w[1],
+                        format!("plans out of EDF order: {keys:?}"),
+                    )?;
+                }
+                if let Some(global_min) = deadlines.iter().cloned().fold(None::<f64>, |m, d| {
+                    Some(m.map_or(d, |m| m.min(d)))
+                }) {
+                    if !plans.is_empty() {
+                        prop_assert(
+                            keys[0] == global_min,
+                            format!("first plan deadline {} != global min {global_min}", keys[0]),
+                        )?;
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -13,6 +13,18 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 /// Cheap, cloneable handle used by coordinator threads.
+///
+/// Calls are synchronous per handle, but the engine serves the channel
+/// in coalescing rounds ([`crate::engine::scheduler`]): concurrent
+/// `generate` / `prm_score` / `embed` calls from different clones merge
+/// into shared bucket-shaped device calls, with generate plans
+/// dispatched earliest-deadline-first. Request/result plumbing is
+/// coalescing-invariant (each request gets exactly its own rows back),
+/// and for deterministic ops — PRM scoring, embeds, greedy
+/// (temperature-0) generation — the results equal serial execution;
+/// sampled generation additionally depends on the per-call RNG key, so
+/// its draws vary with batch composition just as they do between any
+/// two serial calls.
 #[derive(Clone)]
 pub struct EngineHandle {
     tx: Sender<EngineMsg>,

@@ -23,13 +23,23 @@
 //! charged one decode step at a time, and [`preempt`] halts individual
 //! rows mid-call the moment their deadline/cancel/token budget runs out —
 //! the engine-level enforcement half of the paper's latency story.
+//!
+//! ## Scheduling rounds
+//!
+//! The serve loop works in rounds ([`scheduler`]): every message queued
+//! on the channel is drained into per-op queues, so concurrent
+//! `Generate`, `PrmScore` and `Embed` requests each merge into shared
+//! bucket-shaped calls (bin-packed to minimize padding), and planned
+//! generate calls dispatch earliest-deadline-first. See
+//! `docs/engine.md` for the full contract.
 
 pub mod batcher;
 pub mod handle;
 pub mod preempt;
 pub mod protocol;
+pub mod scheduler;
 pub mod thread;
 
-pub use batcher::{plan_batches, BatchPlan};
+pub use batcher::{pack_bins, plan_batches, plan_batches_edf, BatchPlan};
 pub use handle::{Engine, EngineHandle};
 pub use protocol::{EmbedKind, GenJob, GenKind, GenResult, ProbeTrainReport};

@@ -105,6 +105,11 @@ pub struct ProbeTrainReport {
 }
 
 /// Requests the engine thread serves.
+///
+/// Messages queued concurrently are drained into scheduling rounds by
+/// [`crate::engine::scheduler`]: `Generate`, `PrmScore` and `Embed`
+/// requests coalesce into shared bucket-shaped device calls; probe and
+/// info messages execute in arrival order.
 pub enum EngineMsg {
     /// Generate a batch of sequence jobs; one reply per job, in order.
     /// `deadline_ms` is an *absolute* engine-clock timestamp; once it
@@ -153,4 +158,20 @@ pub enum EngineMsg {
     },
     /// Shut the engine thread down cleanly.
     Shutdown,
+}
+
+impl EngineMsg {
+    /// Short op name for logs and scheduler diagnostics.
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            EngineMsg::Generate { .. } => "generate",
+            EngineMsg::PrmScore { .. } => "prm_score",
+            EngineMsg::Embed { .. } => "embed",
+            EngineMsg::ProbeFwd { .. } => "probe_fwd",
+            EngineMsg::ProbeTrain { .. } => "probe_train",
+            EngineMsg::ProbeLoad { .. } => "probe_load",
+            EngineMsg::Info { .. } => "info",
+            EngineMsg::Shutdown => "shutdown",
+        }
+    }
 }

@@ -1,0 +1,348 @@
+//! Coalescing scheduler: per-op queues over the engine channel.
+//!
+//! The engine thread serves one *round* at a time: when a message
+//! arrives, every message already queued behind it is drained and sorted
+//! into per-op queues ([`drain_round`]) so that `Generate`, `PrmScore`
+//! and `Embed` requests from concurrent workers each merge into shared
+//! bucket-shaped device calls — beam-family strategies alternate
+//! generate → score, so under multi-worker load coalescing roughly
+//! halves padded PRM rows versus serving each message's small batch in
+//! its own padded call.
+//!
+//! This module is the *pure* half of the scheduler: classification,
+//! request flattening and result scatter ([`flatten`] / [`scatter`]) are
+//! all testable without PJRT, and the equivalence property — coalesced
+//! execution returns exactly what serial per-message execution would —
+//! is property-tested below against a mock executor. The device half
+//! (actually running the coalesced calls) lives in
+//! [`crate::engine::thread`]; call *ordering* within a round
+//! (earliest-deadline-first) lives in [`crate::engine::batcher`].
+//!
+//! ## Ordering contract
+//!
+//! Workers block on their reply channel, so a single worker never has
+//! two messages in flight — per-worker program order is preserved no
+//! matter how a round reorders ops. Across workers the pre-scheduler
+//! engine gave no ordering guarantee either (channel arrival order was
+//! already a race); the round merely fixes the arbitrary interleaving
+//! to: control-plane ops (probe, info) in arrival order, then coalesced
+//! PRM scoring, then coalesced embeds, then generation plans in EDF
+//! order. Scoring and embeds run first because they are short and
+//! unblock workers to contribute generate jobs to the *next* round.
+
+use crate::engine::protocol::{EmbedKind, EngineMsg, GenJob, GenResult};
+use crate::error::Result;
+use std::ops::Range;
+use std::sync::mpsc::Sender;
+
+/// One queued generation request: jobs, the request's absolute batch
+/// deadline, and the reply channel its results go back on.
+pub struct GenerateReq {
+    pub jobs: Vec<GenJob>,
+    pub deadline_ms: Option<f64>,
+    pub reply: Sender<Result<Vec<GenResult>>>,
+}
+
+/// One queued PRM scoring request.
+pub struct PrmReq {
+    pub prefixes: Vec<Vec<u32>>,
+    pub reply: Sender<Result<Vec<f32>>>,
+}
+
+/// One queued embedding request.
+pub struct EmbedReq {
+    pub kind: EmbedKind,
+    pub queries: Vec<Vec<u32>>,
+    pub reply: Sender<Result<Vec<Vec<f32>>>>,
+}
+
+/// One scheduling round: every message available on the channel at
+/// drain time, sorted into per-op queues.
+pub struct Round {
+    pub generates: Vec<GenerateReq>,
+    pub prm: Vec<PrmReq>,
+    pub embeds: Vec<EmbedReq>,
+    /// Control-plane messages (probe fwd/train/load, info), arrival order.
+    pub others: Vec<EngineMsg>,
+    /// A `Shutdown` was drained; the round still executes, then the
+    /// serve loop exits.
+    pub shutdown: bool,
+}
+
+impl Round {
+    fn new() -> Round {
+        Round {
+            generates: Vec::new(),
+            prm: Vec::new(),
+            embeds: Vec::new(),
+            others: Vec::new(),
+            shutdown: false,
+        }
+    }
+
+    /// Messages carried by this round (excluding `Shutdown`).
+    pub fn len(&self) -> usize {
+        self.generates.len() + self.prm.len() + self.embeds.len() + self.others.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Classify one message into its queue; returns `false` on
+    /// `Shutdown` (drain stops so no post-shutdown work is accepted).
+    fn push(&mut self, msg: EngineMsg) -> bool {
+        match msg {
+            EngineMsg::Generate {
+                jobs,
+                deadline_ms,
+                reply,
+            } => self.generates.push(GenerateReq {
+                jobs,
+                deadline_ms,
+                reply,
+            }),
+            EngineMsg::PrmScore { prefixes, reply } => {
+                self.prm.push(PrmReq { prefixes, reply })
+            }
+            EngineMsg::Embed {
+                kind,
+                queries,
+                reply,
+            } => self.embeds.push(EmbedReq {
+                kind,
+                queries,
+                reply,
+            }),
+            EngineMsg::Shutdown => {
+                self.shutdown = true;
+                return false;
+            }
+            other => self.others.push(other),
+        }
+        true
+    }
+}
+
+/// Build one round: classify `first`, then keep pulling from `next`
+/// (non-blocking, e.g. `|| rx.try_recv().ok()`) until the channel is
+/// momentarily empty or a `Shutdown` arrives.
+pub fn drain_round(first: EngineMsg, mut next: impl FnMut() -> Option<EngineMsg>) -> Round {
+    let mut round = Round::new();
+    if !round.push(first) {
+        return round;
+    }
+    while let Some(msg) = next() {
+        if !round.push(msg) {
+            break;
+        }
+    }
+    round
+}
+
+/// Flatten per-request item lists into one coalesced list, returning
+/// each request's slice of it for [`scatter`].
+pub fn flatten<T>(parts: Vec<Vec<T>>) -> (Vec<T>, Vec<Range<usize>>) {
+    let mut flat = Vec::with_capacity(parts.iter().map(Vec::len).sum());
+    let mut bounds = Vec::with_capacity(parts.len());
+    for p in parts {
+        let start = flat.len();
+        flat.extend(p);
+        bounds.push(start..flat.len());
+    }
+    (flat, bounds)
+}
+
+/// Split coalesced per-item results back per request (inverse of
+/// [`flatten`]: results must be index-aligned with the flattened input).
+pub fn scatter<T: Clone>(results: &[T], bounds: &[Range<usize>]) -> Vec<Vec<T>> {
+    bounds.iter().map(|r| results[r.clone()].to_vec()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::batcher::{plan_batches, plan_batches_edf};
+    use crate::engine::protocol::GenKind;
+    use crate::testkit::{forall, gen_vec, prop_assert};
+    use crate::util::rng::Rng;
+    use std::sync::mpsc::channel;
+
+    const BUCKETS: &[usize] = &[1, 4, 8, 16, 32];
+    const LENS: &[usize] = &[32, 64, 96, 128];
+
+    fn gen_msg(n_jobs: usize) -> EngineMsg {
+        let (reply, _rx) = channel();
+        EngineMsg::Generate {
+            jobs: (0..n_jobs)
+                .map(|i| GenJob::new(vec![i as u32 + 1], GenKind::Full, 0.8))
+                .collect(),
+            deadline_ms: None,
+            reply,
+        }
+    }
+
+    fn prm_msg(n: usize) -> EngineMsg {
+        let (reply, _rx) = channel();
+        EngineMsg::PrmScore {
+            prefixes: (0..n).map(|i| vec![i as u32]).collect(),
+            reply,
+        }
+    }
+
+    #[test]
+    fn drain_sorts_messages_into_queues() {
+        let (info_reply, _rx) = channel();
+        let mut queued = vec![
+            prm_msg(3),
+            gen_msg(2),
+            EngineMsg::Info { reply: info_reply },
+            prm_msg(1),
+        ]
+        .into_iter();
+        let round = drain_round(gen_msg(4), || queued.next());
+        assert_eq!(round.generates.len(), 2);
+        assert_eq!(round.prm.len(), 2);
+        assert_eq!(round.others.len(), 1);
+        assert_eq!(round.len(), 5);
+        assert!(!round.shutdown);
+        assert_eq!(round.generates[0].jobs.len(), 4); // first stays first
+        assert_eq!(round.prm[0].prefixes.len(), 3);
+    }
+
+    #[test]
+    fn shutdown_stops_the_drain_but_keeps_drained_work() {
+        let mut queued = vec![prm_msg(2), EngineMsg::Shutdown, gen_msg(9)].into_iter();
+        let round = drain_round(gen_msg(1), || queued.next());
+        assert!(round.shutdown);
+        assert_eq!(round.generates.len(), 1); // the post-shutdown msg is NOT drained
+        assert_eq!(round.prm.len(), 1);
+    }
+
+    #[test]
+    fn shutdown_first_is_an_empty_round() {
+        let mut queued = vec![gen_msg(1)].into_iter();
+        let round = drain_round(EngineMsg::Shutdown, || queued.next());
+        assert!(round.shutdown);
+        assert!(round.is_empty());
+    }
+
+    #[test]
+    fn flatten_scatter_roundtrip() {
+        let parts = vec![vec![1, 2], vec![], vec![3, 4, 5]];
+        let (flat, bounds) = flatten(parts.clone());
+        assert_eq!(flat, vec![1, 2, 3, 4, 5]);
+        assert_eq!(scatter(&flat, &bounds), parts);
+    }
+
+    // ---- properties ----
+
+    #[test]
+    fn prop_coalesced_elementwise_op_equals_serial() {
+        // Cross-op coalescing contract for PRM scoring / embedding: an
+        // elementwise op applied to the flattened batch and scattered
+        // back equals applying it serially per request.
+        let op = |prefix: &Vec<u32>| -> u64 { prefix.iter().map(|&t| t as u64 + 7).sum() };
+        forall(
+            "coalesced == serial (elementwise op)",
+            150,
+            |rng| {
+                gen_vec(rng, 0..8, |r| {
+                    gen_vec(r, 0..12, |r2| gen_vec(r2, 1..10, |r3| r3.below(40) as u32))
+                })
+            },
+            |batches| {
+                let serial: Vec<Vec<u64>> = batches
+                    .iter()
+                    .map(|b| b.iter().map(op).collect())
+                    .collect();
+                let (flat, bounds) = flatten(batches.clone());
+                let coalesced_results: Vec<u64> = flat.iter().map(op).collect();
+                let coalesced = scatter(&coalesced_results, &bounds);
+                prop_assert(
+                    coalesced == serial,
+                    format!("coalesced {coalesced:?} != serial {serial:?}"),
+                )
+            },
+        );
+    }
+
+    /// Deterministic mock device: each row's "generation" is a pure
+    /// function of its prompt tokens, independent of batch shape — the
+    /// shape-invariance the greedy (temperature-0) engine also has.
+    fn mock_execute(jobs: &[GenJob], plans: &[crate::engine::batcher::BatchPlan]) -> Vec<Vec<u32>> {
+        let mut results: Vec<Option<Vec<u32>>> = vec![None; jobs.len()];
+        for plan in plans {
+            for &ji in &plan.job_indices {
+                let out: Vec<u32> = jobs[ji].tokens.iter().map(|&t| t.wrapping_mul(3) + 1).collect();
+                results[ji] = Some(out);
+            }
+        }
+        results.into_iter().map(|r| r.expect("plan covered every job")).collect()
+    }
+
+    #[test]
+    fn prop_coalesced_generate_equals_serial() {
+        // The full merge pipeline — flatten requests, bin-pack + EDF
+        // order plans, execute, scatter by request bounds — returns to
+        // every request exactly what planning and executing its own
+        // messages serially would have.
+        forall(
+            "coalesced == serial (generate merge)",
+            120,
+            |rng| {
+                gen_vec(rng, 1..6, |r| {
+                    let n = r.range(1, 9) as usize;
+                    let deadline = if r.below(2) == 0 {
+                        f64::INFINITY
+                    } else {
+                        r.f64() * 300.0
+                    };
+                    let jobs: Vec<GenJob> = (0..n)
+                        .map(|_| {
+                            let len = r.range(1, 24) as usize;
+                            let kind = if r.below(2) == 0 {
+                                GenKind::Full
+                            } else {
+                                GenKind::Chunk
+                            };
+                            GenJob::new(
+                                (0..len).map(|_| r.below(40) as u32).collect(),
+                                kind,
+                                if r.below(2) == 0 { 0.8 } else { 0.5 },
+                            )
+                        })
+                        .collect();
+                    (jobs, deadline)
+                })
+            },
+            |reqs| {
+                // serial: each request planned and executed on its own
+                let serial: Vec<Vec<Vec<u32>>> = reqs
+                    .iter()
+                    .map(|(jobs, _)| {
+                        let plans = plan_batches(jobs, BUCKETS, LENS, 32);
+                        mock_execute(jobs, &plans)
+                    })
+                    .collect();
+                // coalesced: one flattened job list with per-job deadlines
+                let mut all_jobs = Vec::new();
+                let mut deadlines = Vec::new();
+                let mut bounds = Vec::new();
+                for (jobs, d) in reqs {
+                    let start = all_jobs.len();
+                    all_jobs.extend(jobs.iter().cloned());
+                    deadlines.resize(all_jobs.len(), *d);
+                    bounds.push(start..all_jobs.len());
+                }
+                let plans = plan_batches_edf(&all_jobs, &deadlines, BUCKETS, LENS, 32);
+                let merged = mock_execute(&all_jobs, &plans);
+                let coalesced = scatter(&merged, &bounds);
+                prop_assert(
+                    coalesced == serial,
+                    format!("coalesced {coalesced:?} != serial {serial:?}"),
+                )
+            },
+        );
+    }
+}

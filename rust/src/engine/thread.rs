@@ -2,13 +2,22 @@
 //!
 //! Weight tensors are uploaded to device buffers once at startup and
 //! passed by reference to every `execute_b` call; per-call activations
-//! (token blocks, lengths, RNG keys, temperature) are tiny uploads.
-//! Probe parameters live host-side (they are small and the train step
-//! returns them each step anyway).
+//! (token blocks, lengths, RNG keys, temperature) are tiny uploads
+//! staged through reusable host arenas (`Staging`) so the hot path
+//! performs no per-call host allocation. Probe parameters live host-side
+//! (they are small and the train step returns them each step anyway),
+//! with their device literals cached until `ProbeLoad`/`ProbeTrain`
+//! replaces the parameters.
+//!
+//! The serve loop works in scheduling rounds
+//! ([`crate::engine::scheduler`]): all queued `Generate`, `PrmScore` and
+//! `Embed` messages coalesce into shared bucket-shaped calls, and
+//! planned generate calls dispatch earliest-deadline-first.
 
-use crate::engine::batcher::{pick_bucket, plan_batches};
+use crate::engine::batcher::{pack_bins, plan_batches_edf};
 use crate::engine::preempt::{run_decode_accounting, RowBudget};
 use crate::engine::protocol::*;
+use crate::engine::scheduler::{self, drain_round, EmbedReq, GenerateReq, PrmReq, Round};
 use crate::error::{Error, Result};
 use crate::metrics::EngineMetrics;
 use crate::runtime::{ExecutableSet, WeightSet};
@@ -69,14 +78,93 @@ struct ProbeState {
     params: Vec<f32>,
     /// Tensor boundaries (shapes + offsets) from the probe manifest.
     entries: Vec<crate::runtime::weights::WeightEntry>,
+    /// Cached device literals of `params` in manifest order — rebuilt
+    /// lazily after [`ProbeState::set_params`] invalidates them, so the
+    /// `probe_fwd` hot path stops re-uploading every parameter tensor
+    /// on every chunk.
+    literals: Option<Vec<xla::Literal>>,
 }
 
 impl ProbeState {
-    fn tensors(&self) -> Vec<&[f32]> {
-        self.entries
-            .iter()
-            .map(|e| &self.params[e.offset..e.offset + e.size])
-            .collect()
+    /// Replace the parameters, invalidating the cached device literals.
+    /// Every write to `params` must go through here.
+    fn set_params(&mut self, params: Vec<f32>) {
+        self.params = params;
+        self.literals = None;
+    }
+
+    /// The cached param literals, building them on first use. Returned
+    /// mutably so the caller can push the per-call activation literal
+    /// and pop it again — append-only borrowing, never a rebuild.
+    fn literals(&mut self) -> Result<&mut Vec<xla::Literal>> {
+        if self.literals.is_none() {
+            let lits = self
+                .entries
+                .iter()
+                .map(|e| {
+                    let data = &self.params[e.offset..e.offset + e.size];
+                    if e.shape.is_empty() {
+                        Ok(xla::Literal::scalar(data[0]))
+                    } else {
+                        crate::runtime::literals::f32_tensor(data, &e.shape)
+                    }
+                })
+                .collect::<Result<Vec<_>>>()?;
+            self.literals = Some(lits);
+        }
+        Ok(self.literals.as_mut().expect("just built"))
+    }
+}
+
+/// Reusable host staging arenas for padded device-call inputs. Capacity
+/// grows to the largest bucket seen and is then reused — `clear` +
+/// `resize` never shrink a `Vec`, so the steady-state hot path performs
+/// zero host allocations for token/len/feature blocks.
+#[derive(Default)]
+struct Staging {
+    tokens: Vec<i32>,
+    lens: Vec<i32>,
+    feats: Vec<f32>,
+}
+
+impl Staging {
+    /// Reset the token block to `b × l` zeros and lens to `b` ones (the
+    /// padding-row defaults every call site wants).
+    fn reset(&mut self, b: usize, l: usize) {
+        self.tokens.clear();
+        self.tokens.resize(b * l, 0);
+        self.lens.clear();
+        self.lens.resize(b, 1);
+    }
+
+    /// Reset the feature block to `n` zeros.
+    fn reset_feats(&mut self, n: usize) {
+        self.feats.clear();
+        self.feats.resize(n, 0.0);
+    }
+}
+
+/// Scatter one coalesced op's per-item results back per request (the
+/// single copy of the round reply contract), or broadcast the one
+/// failure to every coalesced requester.
+fn send_scattered<T: Clone>(
+    outcome: Result<Vec<T>>,
+    replies: Vec<std::sync::mpsc::Sender<Result<Vec<T>>>>,
+    bounds: &[std::ops::Range<usize>],
+) {
+    match outcome {
+        Ok(results) => {
+            let parts = scheduler::scatter(&results, bounds);
+            for (reply, part) in replies.into_iter().zip(parts) {
+                let _ = reply.send(Ok(part));
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for reply in replies {
+                let _ = reply.send(Err(Error::Engine(msg.clone())));
+            }
+        }
     }
 }
 
@@ -84,6 +172,7 @@ pub struct EngineThread {
     execs: ExecutableSet,
     lm_bufs: Vec<xla::PjRtBuffer>,
     probe: ProbeState,
+    staging: Staging,
     pub shapes: EngineShapes,
     clock: SharedClock,
     metrics: Arc<EngineMetrics>,
@@ -136,7 +225,9 @@ impl EngineThread {
             probe: ProbeState {
                 params: probe_ws.blob.clone(),
                 entries: probe_ws.entries.clone(),
+                literals: None,
             },
+            staging: Staging::default(),
             shapes,
             clock,
             metrics,
@@ -145,60 +236,83 @@ impl EngineThread {
     }
 
     /// Blocking serve loop. Consumes messages until `Shutdown` or channel
-    /// close. Pending `Generate` messages are drained and merged into one
-    /// batching round (continuous batching across concurrent requests).
+    /// close, one scheduling round at a time: every queued message is
+    /// drained into per-op queues and each op executes as one coalesced
+    /// pass ([`crate::engine::scheduler`] has the ordering contract).
     pub fn serve(mut self, rx: Receiver<EngineMsg>) {
         loop {
-            let msg = match rx.recv() {
+            let first = match rx.recv() {
                 Ok(m) => m,
                 Err(_) => return,
             };
-            match msg {
-                EngineMsg::Shutdown => return,
-                EngineMsg::Generate {
-                    jobs,
-                    deadline_ms,
-                    reply,
-                } => {
-                    // merge any already-queued Generate requests
-                    let mut merged = vec![(jobs, deadline_ms, reply)];
-                    while let Ok(next) = rx.try_recv() {
-                        match next {
-                            EngineMsg::Generate {
-                                jobs,
-                                deadline_ms,
-                                reply,
-                            } => merged.push((jobs, deadline_ms, reply)),
-                            other => {
-                                self.dispatch(other);
-                                break;
-                            }
-                        }
-                    }
-                    self.generate_merged(merged);
-                }
-                other => self.dispatch(other),
+            let round = drain_round(first, || rx.try_recv().ok());
+            let shutdown = round.shutdown;
+            self.run_round(round);
+            if shutdown {
+                return;
             }
         }
     }
 
+    /// Execute one scheduling round: control-plane ops in arrival order,
+    /// then coalesced PRM scoring, coalesced embeds, and finally the
+    /// merged generate round (EDF-ordered plans). Scoring and embeds run
+    /// before generation because they are short and unblock workers to
+    /// contribute generate jobs to the next round.
+    fn run_round(&mut self, round: Round) {
+        let n_msgs = round.len();
+        if n_msgs > 1 {
+            self.metrics.coalesced_msgs.add((n_msgs - 1) as u64);
+        }
+        if n_msgs > 0 {
+            self.metrics.sched_rounds.inc();
+        }
+        let Round {
+            generates,
+            prm,
+            embeds,
+            others,
+            ..
+        } = round;
+        for msg in others {
+            self.dispatch(msg);
+        }
+        if !prm.is_empty() {
+            self.prm_round(prm);
+        }
+        if !embeds.is_empty() {
+            self.embed_round(embeds);
+        }
+        if !generates.is_empty() {
+            self.generate_merged(generates);
+        }
+    }
+
+    /// Serve one control-plane message (the non-coalesced ops).
     fn dispatch(&mut self, msg: EngineMsg) {
+        log_debug!("engine: control-plane {}", msg.op_name());
         match msg {
             EngineMsg::Generate {
                 jobs,
                 deadline_ms,
                 reply,
-            } => self.generate_merged(vec![(jobs, deadline_ms, reply)]),
+            } => self.generate_merged(vec![GenerateReq {
+                jobs,
+                deadline_ms,
+                reply,
+            }]),
             EngineMsg::PrmScore { prefixes, reply } => {
-                let _ = reply.send(self.prm_score(&prefixes));
+                self.prm_round(vec![PrmReq { prefixes, reply }])
             }
             EngineMsg::Embed {
                 kind,
                 queries,
                 reply,
-            } => {
-                let _ = reply.send(self.embed(kind, &queries));
-            }
+            } => self.embed_round(vec![EmbedReq {
+                kind,
+                queries,
+                reply,
+            }]),
             EngineMsg::ProbeFwd { feats, reply } => {
                 let _ = reply.send(self.probe_fwd(&feats));
             }
@@ -234,14 +348,12 @@ impl EngineThread {
     // generation
     // ------------------------------------------------------------------
 
-    fn generate_merged(
-        &mut self,
-        requests: Vec<(
-            Vec<GenJob>,
-            Option<f64>,
-            std::sync::mpsc::Sender<Result<Vec<GenResult>>>,
-        )>,
-    ) {
+    fn generate_merged(&mut self, requests: Vec<GenerateReq>) {
+        if requests.len() > 1 {
+            self.metrics
+                .coalesced_generates
+                .add((requests.len() - 1) as u64);
+        }
         // flatten with request boundaries; each request's batch-level
         // deadline becomes a per-job absolute deadline so merged calls
         // preempt each request independently (continuous-batching
@@ -249,33 +361,26 @@ impl EngineThread {
         let mut all_jobs = Vec::new();
         let mut deadlines = Vec::new();
         let mut bounds = Vec::new();
-        for (jobs, deadline_ms, _) in &requests {
+        let mut replies = Vec::new();
+        for req in requests {
             let start = all_jobs.len();
-            all_jobs.extend(jobs.iter().cloned());
-            let d = deadline_ms.unwrap_or(f64::INFINITY);
+            all_jobs.extend(req.jobs);
+            let d = req.deadline_ms.unwrap_or(f64::INFINITY);
             deadlines.resize(all_jobs.len(), d);
             bounds.push(start..all_jobs.len());
+            replies.push(req.reply);
         }
 
-        match self.generate_all(&all_jobs, &deadlines) {
-            Ok(results) => {
-                for ((_, _, reply), range) in requests.into_iter().zip(bounds) {
-                    let _ = reply.send(Ok(results[range].to_vec()));
-                }
-            }
-            Err(e) => {
-                let msg = e.to_string();
-                for (_, _, reply) in requests {
-                    let _ = reply.send(Err(Error::Engine(msg.clone())));
-                }
-            }
-        }
+        let outcome = self.generate_all(&all_jobs, &deadlines);
+        send_scattered(outcome, replies, &bounds);
     }
 
     fn generate_all(&mut self, jobs: &[GenJob], deadlines: &[f64]) -> Result<Vec<GenResult>> {
         debug_assert_eq!(jobs.len(), deadlines.len());
-        let plans = plan_batches(
+        // bin-packed plans, dispatched earliest-deadline-first
+        let plans = plan_batches_edf(
             jobs,
+            deadlines,
             &self.shapes.batch_buckets,
             &self.shapes.chunk_lens,
             self.shapes.query_len,
@@ -310,11 +415,11 @@ impl EngineThread {
             };
             let exe = self.execs.get(&exec_name)?;
 
-            // assemble padded token block; padding rows get a 1-token prompt
+            // assemble the padded token block in the reusable staging
+            // arena; padding rows get a 1-token prompt
             let b = plan.bucket;
             let l = plan.len_bucket;
-            let mut tokens = vec![0i32; b * l];
-            let mut lens = vec![1i32; b];
+            self.staging.reset(b, l);
             for (row, &ji) in plan.job_indices.iter().enumerate() {
                 let t = &jobs[ji].tokens;
                 if t.len() > l {
@@ -324,19 +429,20 @@ impl EngineThread {
                     )));
                 }
                 for (c, &id) in t.iter().enumerate() {
-                    tokens[row * l + c] = id as i32;
+                    self.staging.tokens[row * l + c] = id as i32;
                 }
-                lens[row] = t.len() as i32;
+                self.staging.lens[row] = t.len() as i32;
             }
             for row in plan.job_indices.len()..b {
-                tokens[row * l] = 19; // 'Q' — dummy prompt for padding rows
+                self.staging.tokens[row * l] = 19; // 'Q' — dummy prompt for padding rows
             }
             let key = [self.rng.next_u32(), self.rng.next_u32()];
 
             let client = self.execs.client().clone();
             let t0 = self.clock.now_ms();
-            let tok_buf = client.buffer_from_host_buffer::<i32>(&tokens, &[b, l], None)?;
-            let len_buf = client.buffer_from_host_buffer::<i32>(&lens, &[b], None)?;
+            let tok_buf =
+                client.buffer_from_host_buffer::<i32>(&self.staging.tokens, &[b, l], None)?;
+            let len_buf = client.buffer_from_host_buffer::<i32>(&self.staging.lens, &[b], None)?;
             let key_buf = client.buffer_from_host_buffer::<u32>(&key, &[2], None)?;
             let temp_buf =
                 client.buffer_from_host_buffer::<f32>(&[plan.temperature], &[], None)?;
@@ -444,29 +550,50 @@ impl EngineThread {
     // PRM scoring
     // ------------------------------------------------------------------
 
+    /// Serve a round's PRM scoring requests as one coalesced pass: all
+    /// prefixes ride shared bin-packed device calls, scores scatter back
+    /// per request. A device error fails every coalesced request.
+    fn prm_round(&mut self, reqs: Vec<PrmReq>) {
+        if reqs.len() > 1 {
+            self.metrics.coalesced_prm.add((reqs.len() - 1) as u64);
+        }
+        let mut batches = Vec::with_capacity(reqs.len());
+        let mut replies = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            batches.push(r.prefixes);
+            replies.push(r.reply);
+        }
+        let (flat, bounds) = scheduler::flatten(batches);
+        let outcome = self.prm_score(&flat);
+        send_scattered(outcome, replies, &bounds);
+    }
+
     fn prm_score(&mut self, prefixes: &[Vec<u32>]) -> Result<Vec<f32>> {
         let l = self.shapes.prm_len;
         let mut scores = Vec::with_capacity(prefixes.len());
-        let max_bucket = *self.shapes.batch_buckets.last().unwrap();
-        for chunk in prefixes.chunks(max_bucket) {
-            let b = pick_bucket(&self.shapes.batch_buckets, chunk.len());
+        let bins = pack_bins(prefixes.len(), &self.shapes.batch_buckets);
+        let mut start = 0usize;
+        for b in bins {
+            let take = b.min(prefixes.len() - start);
+            let chunk = &prefixes[start..start + take];
+            start += take;
             let exe = self.execs.get(&format!("prm_score_b{b}"))?;
-            let mut tokens = vec![0i32; b * l];
-            let mut lens = vec![1i32; b];
+            self.staging.reset(b, l);
             for (row, p) in chunk.iter().enumerate() {
                 let n = p.len().min(l);
                 for (c, &id) in p[..n].iter().enumerate() {
-                    tokens[row * l + c] = id as i32;
+                    self.staging.tokens[row * l + c] = id as i32;
                 }
-                lens[row] = n as i32;
+                self.staging.lens[row] = n as i32;
             }
             for row in chunk.len()..b {
-                tokens[row * l] = 19;
+                self.staging.tokens[row * l] = 19;
             }
             let client = self.execs.client().clone();
             let t0 = self.clock.now_ms();
-            let tok_buf = client.buffer_from_host_buffer::<i32>(&tokens, &[b, l], None)?;
-            let len_buf = client.buffer_from_host_buffer::<i32>(&lens, &[b], None)?;
+            let tok_buf =
+                client.buffer_from_host_buffer::<i32>(&self.staging.tokens, &[b, l], None)?;
+            let len_buf = client.buffer_from_host_buffer::<i32>(&self.staging.lens, &[b], None)?;
             let mut args: Vec<&xla::PjRtBuffer> = self.lm_bufs.iter().collect();
             args.push(&tok_buf);
             args.push(&len_buf);
@@ -479,6 +606,8 @@ impl EngineThread {
             let probs: Vec<f32> = parts[0].to_vec()?;
             self.clock.charge(CostEvent::PrmScore { batch: b, len: l });
             self.metrics.prm_calls.inc();
+            self.metrics.prm_rows.add(chunk.len() as u64);
+            self.metrics.prm_padded_rows.add((b - chunk.len()) as u64);
             self.metrics
                 .decode_latency
                 .record(self.clock.now_ms() - t0);
@@ -491,6 +620,30 @@ impl EngineThread {
     // embeddings
     // ------------------------------------------------------------------
 
+    /// Serve a round's embedding requests coalesced per [`EmbedKind`]:
+    /// same-kind queries ride shared bin-packed calls.
+    fn embed_round(&mut self, reqs: Vec<EmbedReq>) {
+        if reqs.len() > 1 {
+            self.metrics.coalesced_embeds.add((reqs.len() - 1) as u64);
+        }
+        let (pool, small): (Vec<EmbedReq>, Vec<EmbedReq>) =
+            reqs.into_iter().partition(|r| r.kind == EmbedKind::Pool);
+        for (kind, group) in [(EmbedKind::Pool, pool), (EmbedKind::Small, small)] {
+            if group.is_empty() {
+                continue;
+            }
+            let mut batches = Vec::with_capacity(group.len());
+            let mut replies = Vec::with_capacity(group.len());
+            for r in group {
+                batches.push(r.queries);
+                replies.push(r.reply);
+            }
+            let (flat, bounds) = scheduler::flatten(batches);
+            let outcome = self.embed(kind, &flat);
+            send_scattered(outcome, replies, &bounds);
+        }
+    }
+
     fn embed(&mut self, kind: EmbedKind, queries: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
         let l = self.shapes.query_len;
         let d = self.shapes.d_model;
@@ -499,12 +652,14 @@ impl EngineThread {
             EmbedKind::Small => "embed_small",
         };
         let mut out = Vec::with_capacity(queries.len());
-        let max_bucket = *self.shapes.batch_buckets.last().unwrap();
-        for chunk in queries.chunks(max_bucket) {
-            let b = pick_bucket(&self.shapes.batch_buckets, chunk.len());
+        let bins = pack_bins(queries.len(), &self.shapes.batch_buckets);
+        let mut start = 0usize;
+        for b in bins {
+            let take = b.min(queries.len() - start);
+            let chunk = &queries[start..start + take];
+            start += take;
             let exe = self.execs.get(&format!("{prefix}_b{b}"))?;
-            let mut tokens = vec![0i32; b * l];
-            let mut lens = vec![1i32; b];
+            self.staging.reset(b, l);
             for (row, q) in chunk.iter().enumerate() {
                 if q.len() > l {
                     return Err(Error::Engine(format!(
@@ -513,16 +668,17 @@ impl EngineThread {
                     )));
                 }
                 for (c, &id) in q.iter().enumerate() {
-                    tokens[row * l + c] = id as i32;
+                    self.staging.tokens[row * l + c] = id as i32;
                 }
-                lens[row] = q.len() as i32;
+                self.staging.lens[row] = q.len() as i32;
             }
             for row in chunk.len()..b {
-                tokens[row * l] = 19;
+                self.staging.tokens[row * l] = 19;
             }
             let client = self.execs.client().clone();
-            let tok_buf = client.buffer_from_host_buffer::<i32>(&tokens, &[b, l], None)?;
-            let len_buf = client.buffer_from_host_buffer::<i32>(&lens, &[b], None)?;
+            let tok_buf =
+                client.buffer_from_host_buffer::<i32>(&self.staging.tokens, &[b, l], None)?;
+            let len_buf = client.buffer_from_host_buffer::<i32>(&self.staging.lens, &[b], None)?;
             let mut args: Vec<&xla::PjRtBuffer> = self.lm_bufs.iter().collect();
             args.push(&tok_buf);
             args.push(&len_buf);
@@ -534,6 +690,9 @@ impl EngineThread {
             let parts = tuple.to_tuple()?;
             let flat: Vec<f32> = parts[0].to_vec()?;
             self.clock.charge(CostEvent::Embed { batch: b });
+            self.metrics.embed_calls.inc();
+            self.metrics.embed_rows.add(chunk.len() as u64);
+            self.metrics.embed_padded_rows.add((b - chunk.len()) as u64);
             for row in 0..chunk.len() {
                 out.push(flat[row * d..(row + 1) * d].to_vec());
             }
@@ -551,7 +710,7 @@ impl EngineThread {
         let exe = self.execs.get(&format!("probe_fwd_b{b}"))?;
         let mut out = Vec::with_capacity(feats.len());
         for chunk in feats.chunks(b) {
-            let mut block = vec![0f32; b * f];
+            self.staging.reset_feats(b * f);
             for (row, feat) in chunk.iter().enumerate() {
                 if feat.len() != f {
                     return Err(Error::Engine(format!(
@@ -559,23 +718,16 @@ impl EngineThread {
                         feat.len()
                     )));
                 }
-                block[row * f..(row + 1) * f].copy_from_slice(feat);
+                self.staging.feats[row * f..(row + 1) * f].copy_from_slice(feat);
             }
-            let mut args: Vec<xla::Literal> = self
-                .probe
-                .tensors()
-                .iter()
-                .zip(&self.probe.entries)
-                .map(|(data, e)| {
-                    if e.shape.is_empty() {
-                        Ok(xla::Literal::scalar(data[0]))
-                    } else {
-                        crate::runtime::literals::f32_tensor(data, &e.shape)
-                    }
-                })
-                .collect::<Result<_>>()?;
-            args.push(crate::runtime::literals::f32_tensor(&block, &[b, f])?);
-            let parts = exe.run_literals(&args)?;
+            let block = crate::runtime::literals::f32_tensor(&self.staging.feats, &[b, f])?;
+            // cached param literals + this chunk's activation block;
+            // popped right back so the cache only ever holds params
+            let args = self.probe.literals()?;
+            args.push(block);
+            let ran = exe.run_literals(args);
+            args.pop();
+            let parts = ran?;
             let logits: Vec<f32> = parts[0].to_vec()?;
             self.clock.charge(CostEvent::Probe { batch: b });
             out.extend_from_slice(&logits[..chunk.len()]);
@@ -678,10 +830,13 @@ impl EngineThread {
             }
             last_train_loss = stats::mean(&epoch_losses);
 
-            // validation loss with current params
-            let saved = std::mem::replace(&mut self.probe.params, params.clone());
-            let val_logits = self.probe_fwd(val_feats)?;
-            self.probe.params = saved;
+            // validation loss with current params (set_params keeps the
+            // literal cache honest across the swap in and back)
+            let saved = std::mem::take(&mut self.probe.params);
+            self.probe.set_params(params.clone());
+            let val_fwd = self.probe_fwd(val_feats);
+            self.probe.set_params(saved);
+            let val_logits = val_fwd?;
             let val_loss = val_logits
                 .iter()
                 .zip(val_labels)
@@ -706,7 +861,7 @@ impl EngineThread {
             }
         }
 
-        self.probe.params = best_params.clone();
+        self.probe.set_params(best_params.clone());
         Ok(ProbeTrainReport {
             steps: step,
             final_train_loss: last_train_loss,
@@ -724,7 +879,7 @@ impl EngineThread {
                 self.probe.params.len()
             )));
         }
-        self.probe.params = params;
+        self.probe.set_params(params);
         Ok(())
     }
 

@@ -109,6 +109,30 @@ pub struct EngineMetrics {
     pub prefill_calls: Counter,
     /// PRM scoring calls.
     pub prm_calls: Counter,
+    /// Real (non-padding) rows scored by the PRM.
+    pub prm_rows: Counter,
+    /// Padded-but-unused rows in PRM scoring calls.
+    pub prm_padded_rows: Counter,
+    /// Embedding calls.
+    pub embed_calls: Counter,
+    /// Real (non-padding) rows embedded.
+    pub embed_rows: Counter,
+    /// Padded-but-unused rows in embedding calls.
+    pub embed_padded_rows: Counter,
+    /// Scheduling rounds served by the engine loop.
+    pub sched_rounds: Counter,
+    /// Messages that were drained behind a round's first message (any
+    /// op) — the raw coalescing opportunity the scheduler captured.
+    pub coalesced_msgs: Counter,
+    /// Generate requests merged into a shared batching round, beyond
+    /// each round's first.
+    pub coalesced_generates: Counter,
+    /// PRM scoring requests merged into shared device calls, beyond
+    /// each round's first.
+    pub coalesced_prm: Counter,
+    /// Embed requests merged into shared device calls, beyond each
+    /// round's first.
+    pub coalesced_embeds: Counter,
     /// Rows halted mid-call by deadline, cancel flag, or token cap.
     pub preempted_rows: Counter,
     /// Tokens generated (actual, not padded).
@@ -126,8 +150,20 @@ impl EngineMetrics {
 
     /// Fraction of batch rows that were padding.
     pub fn padding_waste(&self) -> f64 {
-        let rows = self.decode_rows.get();
-        let padded = self.padded_rows.get();
+        Self::waste(self.decode_rows.get(), self.padded_rows.get())
+    }
+
+    /// Fraction of PRM scoring rows that were padding.
+    pub fn prm_padding_waste(&self) -> f64 {
+        Self::waste(self.prm_rows.get(), self.prm_padded_rows.get())
+    }
+
+    /// Fraction of embedding rows that were padding.
+    pub fn embed_padding_waste(&self) -> f64 {
+        Self::waste(self.embed_rows.get(), self.embed_padded_rows.get())
+    }
+
+    fn waste(rows: u64, padded: u64) -> f64 {
         if rows + padded == 0 {
             0.0
         } else {
@@ -143,6 +179,18 @@ impl EngineMetrics {
             .with("padding_waste", self.padding_waste())
             .with("prefill_calls", self.prefill_calls.get())
             .with("prm_calls", self.prm_calls.get())
+            .with("prm_rows", self.prm_rows.get())
+            .with("prm_padded_rows", self.prm_padded_rows.get())
+            .with("prm_padding_waste", self.prm_padding_waste())
+            .with("embed_calls", self.embed_calls.get())
+            .with("embed_rows", self.embed_rows.get())
+            .with("embed_padded_rows", self.embed_padded_rows.get())
+            .with("embed_padding_waste", self.embed_padding_waste())
+            .with("sched_rounds", self.sched_rounds.get())
+            .with("coalesced_msgs", self.coalesced_msgs.get())
+            .with("coalesced_generates", self.coalesced_generates.get())
+            .with("coalesced_prm", self.coalesced_prm.get())
+            .with("coalesced_embeds", self.coalesced_embeds.get())
             .with("preempted_rows", self.preempted_rows.get())
             .with("tokens_generated", self.tokens_generated.get())
             .with("decode_latency_ms", self.decode_latency.summary().to_json())
@@ -196,5 +244,12 @@ mod tests {
         m.decode_rows.add(75);
         m.padded_rows.add(25);
         assert!((m.padding_waste() - 0.25).abs() < 1e-12);
+        assert_eq!(m.prm_padding_waste(), 0.0); // no rows yet
+        m.prm_rows.add(6);
+        m.prm_padded_rows.add(2);
+        assert!((m.prm_padding_waste() - 0.25).abs() < 1e-12);
+        m.embed_rows.add(9);
+        m.embed_padded_rows.add(3);
+        assert!((m.embed_padding_waste() - 0.25).abs() < 1e-12);
     }
 }

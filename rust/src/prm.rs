@@ -4,7 +4,10 @@
 //! point: builds `query + partial-solution` prefixes, enforces the PRM
 //! length bucket, and memoizes scores within a request (beam search
 //! re-scores surviving beams every round; identical prefixes hit the
-//! cache instead of the engine).
+//! cache instead of the engine). Engine-side, concurrent workers'
+//! scoring requests coalesce into shared bucket-shaped calls
+//! ([`crate::engine::scheduler`]), so cache misses here still amortize
+//! across the fleet.
 
 use crate::engine::EngineHandle;
 use crate::error::Result;

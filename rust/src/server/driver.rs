@@ -21,7 +21,7 @@ use crate::util::stats;
 use crate::log_info;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Routing mode for the driver.
@@ -77,9 +77,10 @@ pub fn warmup(executor: &Executor, strategies: &[Strategy], query: &str) -> Resu
 }
 
 /// Run the driver over a schedule. `workers` controls concurrency (the
-/// engine's batcher merges concurrent generate calls). The schedule is
-/// shared read-only (`Arc<Vec<_>>`); workers claim indices through one
-/// atomic cursor, so the hot path takes no lock.
+/// engine's scheduler coalesces concurrent generate *and* PRM/embed
+/// calls). The schedule is shared read-only (`Arc<Vec<_>>`); workers
+/// claim indices through one atomic cursor and accumulate their own
+/// result vectors — the serve hot path touches no shared lock.
 pub fn run(
     executor: &Executor,
     mode: &Mode,
@@ -90,22 +91,22 @@ pub fn run(
     let start = Instant::now();
     let queue: Arc<Vec<Request>> = Arc::new(requests);
     let next_seq = Arc::new(AtomicUsize::new(0));
-    let results: Arc<Mutex<Vec<Served>>> = Arc::new(Mutex::new(Vec::with_capacity(n)));
+    let mut served: Vec<Served> = Vec::with_capacity(n);
 
     std::thread::scope(|scope| -> Result<()> {
         let mut handles = Vec::new();
         for _ in 0..workers.max(1) {
             let queue = queue.clone();
             let next_seq = next_seq.clone();
-            let results = results.clone();
             let executor = executor.clone();
             let mode_ref = &*mode;
-            handles.push(scope.spawn(move || -> Result<()> {
+            handles.push(scope.spawn(move || -> Result<Vec<Served>> {
+                let mut mine = Vec::new();
                 loop {
                     let idx = next_seq.fetch_add(1, Ordering::SeqCst);
                     let req = match queue.get(idx) {
                         Some(r) => r,
-                        None => return Ok(()),
+                        None => return Ok(mine),
                     };
                     // open-loop: wait for the arrival time
                     let now_ms = start.elapsed().as_secs_f64() * 1e3;
@@ -115,24 +116,20 @@ pub fn run(
                         ));
                     }
                     let arrived = start.elapsed().as_secs_f64() * 1e3;
-                    let mut served = serve_one(&executor, mode_ref, req)?;
+                    let mut one = serve_one(&executor, mode_ref, req)?;
                     let done = start.elapsed().as_secs_f64() * 1e3;
-                    served.e2e_ms = done - req.arrival_ms.min(arrived);
-                    results.lock().unwrap().push(served);
+                    one.e2e_ms = done - req.arrival_ms.min(arrived);
+                    mine.push(one);
                 }
             }));
         }
         for h in handles {
-            h.join().expect("worker panicked")?;
+            served.extend(h.join().expect("worker panicked")?);
         }
         Ok(())
     })?;
 
     let wall_s = start.elapsed().as_secs_f64();
-    let served = Arc::try_unwrap(results)
-        .expect("all workers joined")
-        .into_inner()
-        .unwrap();
     Ok(ServeReport::new(served, wall_s))
 }
 

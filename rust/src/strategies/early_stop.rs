@@ -11,6 +11,13 @@
 //! Cost structure: between one and ⌈N/wave⌉ batched generate calls, so
 //! latency sits between majority voting (1 call) and beam search (one
 //! call per round), while expected token cost drops on easy queries.
+//!
+//! The wave size is a searchable hyperparameter: it rides in
+//! [`StrategyParams::width`] (`mv_early@16w4` = N=16, waves of 4), so
+//! the router explores it exactly like beam's W and it feeds the probe's
+//! existing `W/4` feature. `width <= 1` (the plain `mv_early@16` id)
+//! selects the auto default, `max(2, N/4)` — up to four vote
+//! checkpoints.
 
 use crate::engine::{GenJob, GenKind};
 use crate::error::Result;
@@ -23,9 +30,21 @@ use std::collections::HashMap;
 pub struct EarlyStopMajority;
 
 impl EarlyStopMajority {
-    /// Wave size: a quarter of N (min 2) — up to four vote checkpoints.
-    fn wave(n: usize) -> usize {
+    /// Auto wave size: a quarter of N (min 2) — up to four vote
+    /// checkpoints.
+    fn auto_wave(n: usize) -> usize {
         (n / 4).max(2).min(n)
+    }
+
+    /// Effective wave size for `params`: explicit `width` when ≥ 2,
+    /// otherwise the auto default; always clamped to N.
+    fn wave(params: &StrategyParams) -> usize {
+        let n = params.n.max(1);
+        if params.width > 1 {
+            params.width.min(n)
+        } else {
+            Self::auto_wave(n)
+        }
     }
 }
 
@@ -35,12 +54,30 @@ impl DecodingMethod for EarlyStopMajority {
     }
 
     fn describe(&self) -> &'static str {
-        "majority voting in waves, stops once the vote margin is decided"
+        "majority voting in waves (searchable wave size), stops once the vote margin is decided"
+    }
+
+    /// `16` (auto wave) or `16w4` (explicit wave size 4).
+    fn format_params(&self, p: &StrategyParams) -> String {
+        if p.width > 1 {
+            format!("{}w{}", p.n, p.width)
+        } else {
+            p.n.to_string()
+        }
+    }
+
+    fn parse_params(&self, s: &str) -> Option<StrategyParams> {
+        if let Some((n, w)) = s.split_once('w') {
+            Some(StrategyParams::waves(n.parse().ok()?, w.parse().ok()?))
+        } else {
+            Some(StrategyParams::parallel(s.parse().ok()?))
+        }
     }
 
     fn run(&self, ctx: &RunCtx<'_>, params: &StrategyParams) -> Result<Outcome> {
         let t0 = ctx.now_ms();
         let n = params.n.max(1);
+        let wave = Self::wave(params);
         let prompt = format!("{}S:", ctx.query);
         let prompt_ids = ctx.tokenizer.encode(&prompt)?;
 
@@ -57,7 +94,7 @@ impl DecodingMethod for EarlyStopMajority {
                 budget_exhausted = true;
                 break;
             }
-            let batch = Self::wave(n).min(n - issued);
+            let batch = wave.min(n - issued);
             let jobs: Vec<GenJob> = (0..batch)
                 .map(|_| ctx.gen_job(prompt_ids.clone(), GenKind::Full, tokens_total))
                 .collect();
@@ -113,12 +150,34 @@ mod tests {
     use super::*;
 
     #[test]
-    fn wave_sizing() {
-        assert_eq!(EarlyStopMajority::wave(1), 1);
-        assert_eq!(EarlyStopMajority::wave(2), 2);
-        assert_eq!(EarlyStopMajority::wave(4), 2);
-        assert_eq!(EarlyStopMajority::wave(8), 2);
-        assert_eq!(EarlyStopMajority::wave(16), 4);
-        assert_eq!(EarlyStopMajority::wave(32), 8);
+    fn auto_wave_sizing() {
+        for (n, expect) in [(1, 1), (2, 2), (4, 2), (8, 2), (16, 4), (32, 8)] {
+            assert_eq!(EarlyStopMajority::wave(&StrategyParams::parallel(n)), expect);
+        }
+    }
+
+    #[test]
+    fn explicit_wave_overrides_auto() {
+        assert_eq!(EarlyStopMajority::wave(&StrategyParams::waves(16, 8)), 8);
+        assert_eq!(EarlyStopMajority::wave(&StrategyParams::waves(16, 2)), 2);
+        // clamped to N; <=1 falls back to auto
+        assert_eq!(EarlyStopMajority::wave(&StrategyParams::waves(4, 9)), 4);
+        assert_eq!(EarlyStopMajority::wave(&StrategyParams::waves(16, 1)), 4);
+        assert_eq!(EarlyStopMajority::wave(&StrategyParams::waves(16, 0)), 4);
+    }
+
+    #[test]
+    fn wave_ids_roundtrip() {
+        let m = EarlyStopMajority;
+        let auto = StrategyParams::parallel(16);
+        assert_eq!(m.format_params(&auto), "16");
+        assert_eq!(m.parse_params("16"), Some(auto));
+        let waved = StrategyParams::waves(16, 4);
+        assert_eq!(m.format_params(&waved), "16w4");
+        assert_eq!(m.parse_params("16w4"), Some(waved));
+        // wave 1 normalizes to the auto id
+        assert_eq!(m.format_params(&StrategyParams::waves(8, 1)), "8");
+        assert_eq!(m.parse_params("8w"), None);
+        assert_eq!(m.parse_params("w4"), None);
     }
 }

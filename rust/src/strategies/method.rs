@@ -137,12 +137,15 @@ impl Budget {
 }
 
 /// Hyperparameters `θ_m` of one strategy. Parallel methods use `n` only;
-/// round-based (beam-family) methods use all three.
+/// round-based (beam-family) methods use all three; wave-based methods
+/// (`mv_early`) reuse `width` as their wave size.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub struct StrategyParams {
     /// Candidates (parallel methods) or active beams (beam family).
     pub n: usize,
-    /// Branching factor per beam per round (beam family; 1 otherwise).
+    /// Branching factor per beam per round (beam family), wave size for
+    /// `mv_early` (≥ 2 explicit; ≤ 1 means the method's auto default),
+    /// 1 otherwise.
     pub width: usize,
     /// Max tokens per beam round (0 for parallel methods).
     pub chunk: usize,
@@ -155,6 +158,18 @@ impl StrategyParams {
 
     pub fn beam(n: usize, width: usize, chunk: usize) -> StrategyParams {
         StrategyParams { n, width, chunk }
+    }
+
+    /// Wave-based parallel method (`mv_early`): `wave` rides in `width`
+    /// — it is a searchable hyperparameter exactly like beam's W, flows
+    /// into the probe's existing `W/4` feature, and `wave <= 1` selects
+    /// the method's auto sizing (`max(2, N/4)`).
+    pub fn waves(n: usize, wave: usize) -> StrategyParams {
+        StrategyParams {
+            n,
+            width: wave.max(1),
+            chunk: 0,
+        }
     }
 }
 
@@ -201,6 +216,16 @@ impl RunCtx<'_> {
     pub fn generate_budgeted(&self, jobs: Vec<GenJob>, t0: f64) -> Result<Vec<GenResult>> {
         self.engine
             .generate_with_deadline(jobs, self.budget.deadline_at(t0))
+    }
+
+    /// Score CoT prefixes through the engine's coalesced PRM path:
+    /// concurrent scoring requests from other workers merge with this
+    /// one into shared bucket-shaped device calls (see
+    /// [`crate::engine::scheduler`]). All method PRM scoring should go
+    /// through here (or [`crate::prm::PrmClient`], which wraps the same
+    /// entry point with memoization).
+    pub fn prm_score(&self, prefixes: Vec<Vec<u32>>) -> Result<Vec<f32>> {
+        self.engine.prm_score(prefixes)
     }
 }
 

@@ -10,7 +10,7 @@
 //! | `bon_naive` | N parallel candidates, highest PRM score | 1 call + PRM |
 //! | `bon_weighted` | PRM scores aggregated across identical answers | 1 call + PRM |
 //! | `beam` | N beams × W expansions per CoT step, PRM-pruned | 1 call *per round* |
-//! | `mv_early` | majority voting in waves, stops when the vote is decided | 1..⌈N/wave⌉ calls |
+//! | `mv_early` | majority voting in waves (searchable wave size), stops when the vote is decided | 1..⌈N/wave⌉ calls |
 //! | `beam_latency` | beam search with predictive deadline truncation | ≤ beam's calls |
 //!
 //! The parallel methods ride one batched `lm_generate` call (latency ≈ a

@@ -82,7 +82,9 @@ fn run_single_batch(
                 .iter()
                 .map(|c| ctx.tokenizer.encode(&format!("{}{}", ctx.query, c.text)))
                 .collect::<Result<_>>()?;
-            let scores = ctx.engine.prm_score(prefixes)?;
+            // the engine's scheduler coalesces this with concurrent
+            // workers' scoring into shared bucket-shaped calls
+            let scores = ctx.prm_score(prefixes)?;
             engine_calls += 1;
             for (c, s) in candidates.iter_mut().zip(scores) {
                 c.score = s as f64;

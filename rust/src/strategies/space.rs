@@ -54,6 +54,12 @@ impl Strategy {
         Strategy::new("mv_early", StrategyParams::parallel(n))
     }
 
+    /// `mv_early` with an explicit wave size (`wave <= 1` = auto); the
+    /// wave rides in `width` like beam's W.
+    pub fn mv_early_wave(n: usize, wave: usize) -> Strategy {
+        Strategy::new("mv_early", StrategyParams::waves(n, wave))
+    }
+
     pub fn beam_latency(n: usize, width: usize, chunk: usize) -> Strategy {
         Strategy::new("beam_latency", StrategyParams::beam(n, width, chunk))
     }
@@ -106,6 +112,9 @@ impl Strategy {
         }
         for &(n, w, c) in &space.beam {
             out.push(Strategy::beam(n, w, c));
+        }
+        for &(n, wave) in &space.mv_early {
+            out.push(Strategy::mv_early_wave(n, wave));
         }
         for id in &space.extra {
             if let Some(s) = Strategy::parse(id) {
@@ -166,10 +175,13 @@ mod tests {
             space.mv_ns.len()
                 + 2 * space.bon_ns.len()
                 + space.beam.len()
+                + space.mv_early.len()
                 + space.extra.len()
         );
-        // default space exercises both new methods
+        // default space exercises both new methods, including an
+        // explicit-wave mv_early point the router can pick
         assert!(all.iter().any(|s| s.method == "mv_early"));
+        assert!(all.iter().any(|s| s.id() == "mv_early@16w4"));
         assert!(all.iter().any(|s| s.method == "beam_latency"));
         // ids unique
         let mut ids: Vec<String> = all.iter().map(|s| s.id()).collect();
@@ -194,5 +206,19 @@ mod tests {
         assert_eq!(Strategy::mv_early(8).id(), "mv_early@8");
         assert!(Strategy::beam_latency(4, 2, 12).uses_rounds());
         assert!(!Strategy::mv_early(8).uses_rounds());
+    }
+
+    #[test]
+    fn mv_early_wave_ids_roundtrip() {
+        let s = Strategy::mv_early_wave(16, 4);
+        assert_eq!(s.id(), "mv_early@16w4");
+        assert_eq!(Strategy::parse("mv_early@16w4"), Some(s));
+        // auto wave (<= 1) keeps the legacy id shape
+        assert_eq!(Strategy::mv_early_wave(16, 1).id(), "mv_early@16");
+        assert_eq!(
+            Strategy::parse("mv_early@16"),
+            Some(Strategy::mv_early(16))
+        );
+        assert!(Strategy::parse("mv_early@16wx").is_none());
     }
 }

@@ -1,0 +1,143 @@
+//! Coalescing scheduler end-to-end: concurrent workers issuing
+//! generate + PRM + embed traffic through one engine must get results
+//! identical to serial per-message execution, while the scheduler
+//! merges their messages into shared rounds.
+//!
+//! Determinism setup: greedy decoding (temperature 0) makes generation
+//! a pure function of the prompt, and every worker submits exactly one
+//! max-bucket's worth of rows — so bin-packing slices merged rounds
+//! back into calls whose token blocks are bit-identical to the serial
+//! calls (same executable, same inputs), and exact equality is sound
+//! even across merge patterns. Needs `make artifacts`; skips otherwise.
+
+use ttc::config::Config;
+use ttc::engine::{EmbedKind, Engine, GenJob, GenKind};
+use ttc::tokenizer::Tokenizer;
+
+fn setup() -> Option<(Engine, usize)> {
+    let mut cfg = Config::default();
+    if !cfg.paths.artifacts.join("hlo_index.json").exists() {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    cfg.engine.sim_clock = true; // deterministic timing
+    let engine = Engine::start(&cfg).unwrap();
+    let info = engine.handle().info().unwrap();
+    let max_bucket = info
+        .req("shapes")
+        .unwrap()
+        .req_arr("batch_buckets")
+        .unwrap()
+        .iter()
+        .filter_map(|v| v.as_usize())
+        .max()
+        .unwrap();
+    Some((engine, max_bucket))
+}
+
+/// The per-worker request mix — the generate→score cadence of the beam
+/// family plus the router's embed traffic, each one full max-bucket.
+fn worker_inputs(
+    tok: &Tokenizer,
+    w: usize,
+    batch: usize,
+) -> (Vec<GenJob>, Vec<Vec<u32>>, Vec<Vec<u32>>) {
+    let query = format!("Q:7+{w}-2+8=?\n");
+    let prompt = tok.encode(&format!("{query}S:")).unwrap();
+    let jobs: Vec<GenJob> = (0..batch)
+        .map(|_| GenJob::new(prompt.clone(), GenKind::Full, 0.0))
+        .collect();
+    let prefix = tok.encode(&format!("{query}S:7+{w}=5;5-2=3;")).unwrap();
+    let prefixes: Vec<Vec<u32>> = (0..batch).map(|_| prefix.clone()).collect();
+    let queries: Vec<Vec<u32>> = (0..batch).map(|_| tok.encode(&query).unwrap()).collect();
+    (jobs, prefixes, queries)
+}
+
+#[test]
+fn concurrent_coalesced_results_equal_serial() {
+    let Some((engine, batch)) = setup() else {
+        return;
+    };
+    let handle = engine.handle();
+    let tok = Tokenizer::new();
+    const WORKERS: usize = 4;
+
+    // Serial reference: each worker's messages executed one by one on
+    // an otherwise idle engine.
+    let mut serial = Vec::new();
+    for w in 0..WORKERS {
+        let (jobs, prefixes, queries) = worker_inputs(&tok, w, batch);
+        let gen: Vec<Vec<u32>> = handle
+            .generate(jobs)
+            .unwrap()
+            .into_iter()
+            .map(|r| r.tokens)
+            .collect();
+        let scores = handle.prm_score(prefixes).unwrap();
+        let embs = handle.embed(EmbedKind::Pool, queries).unwrap();
+        serial.push((gen, scores, embs));
+    }
+
+    // Concurrent: the same traffic from four threads; the scheduler
+    // coalesces whatever lands in the same round.
+    let concurrent: Vec<(Vec<Vec<u32>>, Vec<f32>, Vec<Vec<f32>>)> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..WORKERS)
+                .map(|w| {
+                    let engine_handle = handle.clone();
+                    let tok = &tok;
+                    scope.spawn(move || {
+                        let (jobs, prefixes, queries) = worker_inputs(tok, w, batch);
+                        let gen: Vec<Vec<u32>> = engine_handle
+                            .generate(jobs)
+                            .unwrap()
+                            .into_iter()
+                            .map(|r| r.tokens)
+                            .collect();
+                        let scores = engine_handle.prm_score(prefixes).unwrap();
+                        let embs = engine_handle.embed(EmbedKind::Pool, queries).unwrap();
+                        (gen, scores, embs)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+    for (w, ((sg, ss, se), (cg, cs, ce))) in serial.iter().zip(&concurrent).enumerate() {
+        assert_eq!(sg, cg, "worker {w}: generated tokens diverged");
+        assert_eq!(ss, cs, "worker {w}: PRM scores diverged");
+        assert_eq!(se, ce, "worker {w}: embeddings diverged");
+    }
+
+    // The scheduler served rounds, the PRM path scored every real row,
+    // and full-bucket batches mean zero PRM padding no matter how the
+    // rounds merged. (Whether messages actually coalesced is timing-
+    // dependent, so merge counters are reported, not asserted.)
+    let info = handle.info().unwrap();
+    let metrics = info.req("metrics").unwrap();
+    assert!(metrics.req_f64("sched_rounds").unwrap() > 0.0);
+    assert!(metrics.req_f64("prm_rows").unwrap() >= (2 * WORKERS * batch) as f64);
+    assert_eq!(metrics.req_f64("prm_padded_rows").unwrap(), 0.0);
+    assert_eq!(metrics.req_f64("embed_padded_rows").unwrap(), 0.0);
+    eprintln!(
+        "coalesced_msgs={} coalesced_prm={} coalesced_generates={}",
+        metrics.req_f64("coalesced_msgs").unwrap_or(0.0),
+        metrics.req_f64("coalesced_prm").unwrap_or(0.0),
+        metrics.req_f64("coalesced_generates").unwrap_or(0.0),
+    );
+}
+
+#[test]
+fn coalesced_error_reaches_every_requester() {
+    let Some((engine, _)) = setup() else {
+        return;
+    };
+    let handle = engine.handle();
+    // An over-long query must fail embed cleanly, and the engine must
+    // keep serving afterwards.
+    let bad = vec![vec![2u32; 4096]];
+    assert!(handle.embed(EmbedKind::Pool, bad).is_err());
+    let tok = Tokenizer::new();
+    let ok = vec![tok.encode("Q:1+1=?\n").unwrap()];
+    assert!(handle.embed(EmbedKind::Pool, ok).is_ok());
+}

@@ -16,6 +16,7 @@ fn mini_config() -> Config {
     cfg.space.mv_ns = vec![1, 4];
     cfg.space.bon_ns = vec![4];
     cfg.space.beam = vec![(2, 2, 12)];
+    cfg.space.mv_early = vec![];
     // exercise a registry-registered method through the full pipeline
     cfg.space.extra = vec!["mv_early@4".into()];
     cfg.probe.epochs = 6;

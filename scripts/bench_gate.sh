@@ -1,14 +1,19 @@
 #!/usr/bin/env bash
 # Run the router + engine benches, emit BENCH_<sha>.json at the repo
-# root, and gate on router-select p50 regression against the committed
-# baseline (rust/benches/baseline.json).
+# root, and gate on p50 regressions against the committed baseline
+# (rust/benches/baseline.json).
 #
 #   scripts/bench_gate.sh                   # bench + emit + gate
 #   scripts/bench_gate.sh --write-baseline  # bench + refresh the baseline
 #
 # The bench harness prints machine-parseable lines
-# (`bench,<name>,<iters>,<mean_ns>,<p50_ns>,<p95_ns>`); engine benches
-# self-skip without AOT artifacts, so the router benches always gate.
+# (`bench,<name>,<iters>,<mean_ns>,<p50_ns>,<p95_ns>`) plus padding /
+# coalescing statistics (`stat,<name>,<value>`, e.g. the padded-row
+# fraction under the concurrent mixed workload); both are captured into
+# BENCH_<sha>.json. Gates are listed in the baseline's `gates` array
+# (legacy single `gate` object still honored); engine benches self-skip
+# without AOT artifacts, so engine gates are `required: false` and only
+# the router benches always gate.
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
@@ -20,14 +25,15 @@ OUT="$ROOT/BENCH_${SHA}.json"
 RAW="$(mktemp)"
 trap 'rm -f "$RAW"' EXIT
 
-echo "==> cargo bench (router + engine)"
-cargo bench --bench bench_router --bench bench_engine | tee "$RAW"
+echo "==> cargo bench (router + engine + prm)"
+cargo bench --bench bench_router --bench bench_engine --bench bench_prm | tee "$RAW"
 
 python3 - "$RAW" "$OUT" "$SHA" <<'PY'
 import json, sys
 
 raw, out, sha = sys.argv[1], sys.argv[2], sys.argv[3]
 benches = {}
+stats = {}
 for line in open(raw):
     parts = line.strip().split(",")
     if len(parts) == 6 and parts[0] == "bench":
@@ -41,8 +47,15 @@ for line in open(raw):
             }
         except ValueError:
             pass
-json.dump({"commit": sha, "benches": benches}, open(out, "w"), indent=2)
-print(f"wrote {out} ({len(benches)} benches)")
+    elif len(parts) == 3 and parts[0] == "stat":
+        try:
+            stats[parts[1]] = float(parts[2])
+        except ValueError:
+            pass
+json.dump({"commit": sha, "benches": benches, "stats": stats}, open(out, "w"), indent=2)
+print(f"wrote {out} ({len(benches)} benches, {len(stats)} stats)")
+for name, value in sorted(stats.items()):
+    print(f"    stat {name} = {value:.4g}")
 PY
 
 BASELINE="$ROOT/rust/benches/baseline.json"
@@ -62,33 +75,61 @@ PY
     exit 0
 fi
 
-echo "==> router-select regression gate"
+echo "==> p50 regression gates"
 python3 - "$OUT" "$BASELINE" <<'PY'
 import json, sys
 
-cur = json.load(open(sys.argv[1]))["benches"]
+run = json.load(open(sys.argv[1]))
+cur = run["benches"]
 try:
     base = json.load(open(sys.argv[2]))
 except FileNotFoundError:
-    print("WARN: no committed baseline; gate skipped")
+    print("WARN: no committed baseline; gates skipped")
     sys.exit(0)
 
-gate = base.get("gate", {})
-name = gate.get("bench", "select_offline_full_space")
-max_reg = float(gate.get("max_regression", 0.25))
-ref = base.get("benches", {}).get(name, {}).get("p50_ns")
-if ref is None:
-    print(f"WARN: baseline has no p50_ns for '{name}'; gate skipped")
-    sys.exit(0)
-got = cur.get(name, {}).get("p50_ns")
-if got is None:
-    print(f"FAIL: bench '{name}' missing from this run")
-    sys.exit(1)
-limit = ref * (1.0 + max_reg)
-ok = got <= limit
-print(
-    f"{'OK' if ok else 'FAIL'}: {name} p50 {got:.0f}ns "
-    f"vs baseline {ref:.0f}ns (limit {limit:.0f}ns, +{max_reg:.0%})"
-)
-sys.exit(0 if ok else 1)
+gates = list(base.get("gates", []))
+if not gates and "gate" in base:
+    gates = [base["gate"]]
+
+failed = False
+for gate in gates:
+    name = gate.get("bench", "select_offline_full_space")
+    max_reg = float(gate.get("max_regression", 0.25))
+    required = bool(gate.get("required", True))
+    ref = base.get("benches", {}).get(name, {}).get("p50_ns")
+    if ref is None:
+        print(f"WARN: baseline has no p50_ns for '{name}'; gate skipped")
+        continue
+    got = cur.get(name, {}).get("p50_ns")
+    if got is None:
+        if required:
+            print(f"FAIL: required bench '{name}' missing from this run")
+            failed = True
+        else:
+            print(f"SKIP: bench '{name}' not in this run (no artifacts?)")
+        continue
+    limit = ref * (1.0 + max_reg)
+    ok = got <= limit
+    if not ok:
+        failed = True
+    print(
+        f"{'OK' if ok else 'FAIL'}: {name} p50 {got:.0f}ns "
+        f"vs baseline {ref:.0f}ns (limit {limit:.0f}ns, +{max_reg:.0%})"
+    )
+
+# padded-row fraction report + soft ceiling: with the coalescing
+# scheduler the concurrent mixed workload must not regress padding
+# waste past the baseline's recorded ceiling.
+stats = run.get("stats", {})
+for name, ceil in base.get("stat_ceilings", {}).items():
+    got = stats.get(name)
+    if got is None:
+        print(f"SKIP: stat '{name}' not in this run (no artifacts?)")
+        continue
+    ok = got <= float(ceil)
+    if not ok:
+        failed = True
+    print(f"{'OK' if ok else 'FAIL'}: stat {name} = {got:.4g} (ceiling {ceil})")
+
+sys.exit(1 if failed else 0)
 PY
