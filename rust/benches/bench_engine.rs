@@ -7,6 +7,7 @@
 
 use ttc::config::Config;
 use ttc::engine::{Engine, GenJob, GenKind};
+use ttc::strategies::stepper::{Stepper, Ticket};
 use ttc::strategies::{registry, Budget, Executor, Strategy};
 use ttc::tokenizer::Tokenizer;
 use ttc::util::bench::{bench, header};
@@ -114,6 +115,44 @@ fn main() {
             }
         });
     });
+
+    // stepped beam concurrency: 4 beam requests multiplexed onto the
+    // engine by the continuation executor — one pump thread, no
+    // thread-per-request. The machines' round-k expansions are
+    // submitted together, so the scheduler coalesces them into shared
+    // bucket-shaped calls; the stat below gates that the stepped
+    // workload actually coalesces (floor asserted by bench_gate.sh).
+    let coalesced_before = {
+        let info = handle.info().unwrap();
+        info.req("metrics")
+            .and_then(|m| m.req_f64("coalesced_generates"))
+            .unwrap_or(0.0)
+    };
+    bench("beam_4x_concurrent_stepped", || {
+        let mut stepper = Stepper::new(executor.clone());
+        for i in 0..4u64 {
+            stepper
+                .admit(Ticket {
+                    query: format!("Q:7+{i}-2+8=?\n"),
+                    strategy: Strategy::beam(4, 2, 12),
+                    budget: Budget::unlimited(),
+                    tag: i,
+                })
+                .unwrap();
+        }
+        stepper.run_to_completion().unwrap();
+        std::hint::black_box(stepper.drain_completed());
+    });
+    let coalesced_after = {
+        let info = handle.info().unwrap();
+        info.req("metrics")
+            .and_then(|m| m.req_f64("coalesced_generates"))
+            .unwrap_or(0.0)
+    };
+    println!(
+        "stat,stepper_coalesced_generates,{}",
+        coalesced_after - coalesced_before
+    );
 
     // machine-parseable padding/coalescing stats for the bench gate
     // (`stat,<name>,<value>` — picked up into BENCH_<sha>.json)

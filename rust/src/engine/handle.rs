@@ -8,9 +8,55 @@ use crate::metrics::EngineMetrics;
 use crate::util::clock::{self, SharedClock};
 use crate::util::json::Value;
 use crate::log_info;
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// An in-flight engine reply: the submit half already put the request on
+/// the engine channel (so it participates in the scheduler's next
+/// coalescing round); the owner collects the result whenever it is
+/// ready. This is the asynchronous seam the continuation executor
+/// ([`crate::strategies::stepper`]) is built on — submit many requests'
+/// work first, block on replies after, and the engine merges whatever
+/// queued together.
+#[derive(Debug)]
+pub struct PendingReply<T> {
+    rx: Receiver<Result<T>>,
+}
+
+impl<T> PendingReply<T> {
+    fn gone() -> Error {
+        Error::Engine("engine thread dropped the reply".into())
+    }
+
+    /// Block until the reply arrives.
+    pub fn wait(&self) -> Result<T> {
+        self.rx.recv().map_err(|_| Self::gone())?
+    }
+
+    /// Block up to `wait` (`None` = indefinitely). Returns `None` on
+    /// timeout, leaving the reply collectable later.
+    pub fn wait_timeout(&self, wait: Option<Duration>) -> Option<Result<T>> {
+        match wait {
+            None => Some(self.wait()),
+            Some(d) => match self.rx.recv_timeout(d) {
+                Ok(r) => Some(r),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => Some(Err(Self::gone())),
+            },
+        }
+    }
+
+    /// Non-blocking poll: `None` while the engine is still working.
+    pub fn try_wait(&self) -> Option<Result<T>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => Some(Err(Self::gone())),
+        }
+    }
+}
 
 /// Cheap, cloneable handle used by coordinator threads.
 ///
@@ -63,6 +109,46 @@ impl EngineHandle {
     /// Score CoT prefixes with the PRM.
     pub fn prm_score(&self, prefixes: Vec<Vec<u32>>) -> Result<Vec<f32>> {
         rpc!(self, PrmScore { prefixes: prefixes })
+    }
+
+    /// Queue a generate call without blocking on the reply. All requests
+    /// submitted before anyone blocks land on the channel together, so
+    /// the engine's scheduler drains them into one coalescing round.
+    pub fn submit_generate(
+        &self,
+        jobs: Vec<GenJob>,
+        deadline_ms: Option<f64>,
+    ) -> Result<PendingReply<Vec<GenResult>>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(EngineMsg::Generate {
+                jobs,
+                deadline_ms,
+                reply,
+            })
+            .map_err(|_| Error::Engine("engine thread is gone".into()))?;
+        Ok(PendingReply { rx })
+    }
+
+    /// Queue a PRM scoring call without blocking on the reply.
+    pub fn submit_prm_score(
+        &self,
+        prefixes: Vec<Vec<u32>>,
+    ) -> Result<PendingReply<Vec<f32>>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(EngineMsg::PrmScore { prefixes, reply })
+            .map_err(|_| Error::Engine("engine thread is gone".into()))?;
+        Ok(PendingReply { rx })
+    }
+
+    /// A handle with no engine behind it: every call fails with an
+    /// engine-gone error. Step machines never touch the engine directly
+    /// (they express work as yields), so tests can drive them with
+    /// synthetic inputs against this handle.
+    pub fn disconnected() -> EngineHandle {
+        let (tx, _rx) = channel();
+        EngineHandle { tx }
     }
 
     /// Embed queries.

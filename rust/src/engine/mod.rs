@@ -41,5 +41,5 @@ pub mod scheduler;
 pub mod thread;
 
 pub use batcher::{pack_bins, plan_batches, plan_batches_edf, BatchPlan};
-pub use handle::{Engine, EngineHandle};
+pub use handle::{Engine, EngineHandle, PendingReply};
 pub use protocol::{EmbedKind, GenJob, GenKind, GenResult, ProbeTrainReport};

@@ -31,7 +31,6 @@
 //! | [`runtime`] | PJRT executable loading, weights, literal helpers |
 //! | [`engine`] | engine thread, continuous batcher, KV cache, sampler |
 //! | [`strategies`] | majority voting, best-of-N, beam search |
-//! | [`prm`] | process-reward-model scoring client |
 //! | [`probe`] | accuracy probe: features, training, Platt calibration |
 //! | [`costmodel`] | per-strategy token/latency cost estimators |
 //! | [`router`] | the paper's utility `U_s(x)` and strategy selection |
@@ -52,7 +51,6 @@ pub mod eval;
 pub mod figures;
 pub mod matrix;
 pub mod metrics;
-pub mod prm;
 pub mod probe;
 pub mod router;
 pub mod runtime;

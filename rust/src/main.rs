@@ -44,6 +44,7 @@ fn print_help() {
            serve        [--config F] [--artifacts DIR] [--rate R] [--requests N]\n\
                         [--lambda-t X] [--lambda-l X] [--strategy S] [--sim]\n\
                         [--deadline-ms X] [--max-tokens N]\n\
+                        [--budget-mix W:SPEC,... e.g. 30:d500,30:d5000,40:unlimited]\n\
            pipeline     [--config F] [--artifacts DIR] [--out DIR] [--quick]\n\
            info         [--artifacts DIR]"
     );

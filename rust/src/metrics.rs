@@ -201,6 +201,55 @@ impl EngineMetrics {
     }
 }
 
+/// Counters for the continuation executor
+/// ([`crate::strategies::stepper::Stepper`]): how many step machines it
+/// multiplexed, how much engine work it submitted, and what the
+/// mid-flight budget reallocation hook granted.
+#[derive(Debug, Default)]
+pub struct StepperMetrics {
+    /// Step machines admitted (requests entering the stepper).
+    pub machines_admitted: Counter,
+    /// Step machines that yielded `Done`.
+    pub machines_completed: Counter,
+    /// Individual `StrategyState::step` calls.
+    pub steps: Counter,
+    /// Engine submissions (generate + PRM) issued on behalf of machines.
+    pub engine_submits: Counter,
+    /// Finished requests whose leftover budget produced at least one
+    /// grant to a still-running machine.
+    pub realloc_events: Counter,
+    /// Individual grants applied to running machines.
+    pub realloc_grants: Counter,
+    /// Deadline budget granted, microseconds (stored integral so the
+    /// counter stays atomic; read via [`StepperMetrics::realloc_ms_granted`]).
+    pub realloc_us_granted: Counter,
+    /// Token budget granted to running machines.
+    pub realloc_tokens_granted: Counter,
+}
+
+impl StepperMetrics {
+    pub fn new() -> StepperMetrics {
+        StepperMetrics::default()
+    }
+
+    /// Total deadline extension granted, in milliseconds.
+    pub fn realloc_ms_granted(&self) -> f64 {
+        self.realloc_us_granted.get() as f64 / 1e3
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("machines_admitted", self.machines_admitted.get())
+            .with("machines_completed", self.machines_completed.get())
+            .with("steps", self.steps.get())
+            .with("engine_submits", self.engine_submits.get())
+            .with("realloc_events", self.realloc_events.get())
+            .with("realloc_grants", self.realloc_grants.get())
+            .with("realloc_ms_granted", self.realloc_ms_granted())
+            .with("realloc_tokens_granted", self.realloc_tokens_granted.get())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -236,6 +285,16 @@ mod tests {
         assert!((s.p50 - 50.5).abs() < 1.0);
         assert!(s.p99 >= 98.0);
         assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn stepper_metrics_ms_conversion() {
+        let m = StepperMetrics::new();
+        m.realloc_us_granted.add(2500);
+        assert!((m.realloc_ms_granted() - 2.5).abs() < 1e-12);
+        let v = m.to_json();
+        assert!((v.req_f64("realloc_ms_granted").unwrap() - 2.5).abs() < 1e-12);
+        assert_eq!(v.req_f64("realloc_grants").unwrap(), 0.0);
     }
 
     #[test]

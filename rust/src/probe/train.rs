@@ -384,6 +384,55 @@ mod tests {
     }
 
     #[test]
+    fn four_wide_era_checkpoint_demands_retrain_not_shape_panic() {
+        // The concrete legacy shape from the pre-registry era: a
+        // checkpoint stamped with the 4-method one-hot layout. It must
+        // fail at *load* with the retrain message — not reach predict
+        // time and trip a feature-dimension shape assert in the engine.
+        let stem = std::env::temp_dir().join(format!("ttc_probe_4wide_{}", std::process::id()));
+        let meta = Value::obj()
+            .with("platt_a", 1.0)
+            .with("platt_b", 0.0)
+            .with("embed_kind", "pool")
+            .with("n_params", 3usize)
+            .with("layout_version", PROBE_LAYOUT_VERSION)
+            .with("n_methods", 4usize);
+        write_checkpoint(&stem, &meta, 3);
+        let err = ProbeCheckpoint::load(&stem).unwrap_err();
+        assert!(
+            matches!(err, crate::error::Error::Artifact(_)),
+            "expected an artifact error, got {err:?}"
+        );
+        let msg = err.to_string();
+        assert!(msg.contains("4-wide"), "{msg}");
+        assert!(
+            msg.contains(&format!("{} methods", crate::strategies::registry::len())),
+            "{msg}"
+        );
+        assert!(msg.contains("train-probe"), "{msg}");
+        std::fs::remove_file(stem.with_extension("json")).unwrap();
+        std::fs::remove_file(stem.with_extension("bin")).unwrap();
+    }
+
+    #[test]
+    fn future_layout_version_demands_retrain() {
+        let stem = std::env::temp_dir().join(format!("ttc_probe_vnext_{}", std::process::id()));
+        let meta = Value::obj()
+            .with("platt_a", 1.0)
+            .with("platt_b", 0.0)
+            .with("embed_kind", "pool")
+            .with("n_params", 3usize)
+            .with("layout_version", PROBE_LAYOUT_VERSION + 1)
+            .with("n_methods", crate::strategies::registry::len());
+        write_checkpoint(&stem, &meta, 3);
+        let err = ProbeCheckpoint::load(&stem).unwrap_err().to_string();
+        assert!(err.contains("layout_version"), "{err}");
+        assert!(err.contains("train-probe"), "{err}");
+        std::fs::remove_file(stem.with_extension("json")).unwrap();
+        std::fs::remove_file(stem.with_extension("bin")).unwrap();
+    }
+
+    #[test]
     fn registry_width_mismatch_fails_clearly() {
         let stem = std::env::temp_dir().join(format!("ttc_probe_width_{}", std::process::id()));
         let wrong = crate::strategies::registry::len() + 2;

@@ -206,6 +206,103 @@ pub fn pick_feasible(scores: &[StrategyScore], deadline_ms: Option<f64>) -> Stra
     pick_max(&feasible)
 }
 
+/// A leftover-budget grant to one still-running request (the online
+/// half of the paper's per-query allocation): the serving layer applies
+/// it *between* strategy steps by extending the machine's existing
+/// limits. A grant never adds a limit a request didn't have — extending
+/// an unlimited budget is meaningless, and imposing a new deadline
+/// would restrict, not grant.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Grant {
+    /// Extra milliseconds added to the request's relative deadline.
+    pub extra_ms: f64,
+    /// Extra tokens added to the request's token cap.
+    pub extra_tokens: usize,
+}
+
+impl Grant {
+    pub fn is_empty(&self) -> bool {
+        self.extra_ms <= 0.0 && self.extra_tokens == 0
+    }
+}
+
+/// The budget a finished request left on the table.
+#[derive(Debug, Clone)]
+pub struct FinishedRequest<'a> {
+    /// Strategy id of the finished request.
+    pub strategy_id: &'a str,
+    /// Deadline headroom at completion (deadline minus finish time; 0
+    /// for unlimited or overrun requests).
+    pub leftover_ms: f64,
+    /// Unspent tokens under the request's cap (0 when uncapped).
+    pub leftover_tokens: usize,
+}
+
+/// Read-only view of one still-running step machine, for reallocation
+/// decisions.
+#[derive(Debug)]
+pub struct RunningView<'a> {
+    pub strategy_id: &'a str,
+    pub budget: &'a Budget,
+    /// Time this request has been running, ms.
+    pub elapsed_ms: f64,
+}
+
+/// Between-steps budget reallocation: when a request finishes with
+/// leftover budget, decide what each still-running request is granted.
+/// Called by the continuation executor
+/// ([`crate::strategies::stepper::Stepper`]) every time a machine
+/// completes; the returned vector is parallel to `running` (shorter is
+/// allowed — missing tails get nothing). Implementations must be cheap:
+/// this runs on the serving hot path.
+pub trait Reallocator: Send {
+    fn reallocate(
+        &mut self,
+        finished: &FinishedRequest<'_>,
+        running: &[RunningView<'_>],
+    ) -> Vec<Grant>;
+}
+
+/// Even-share pool: a finished request's leftover deadline headroom is
+/// split evenly across the running requests that carry a deadline, and
+/// its unspent token cap across those that carry a token cap — the
+/// simplest defensible policy, and deliberately conservative: requests
+/// with unlimited budgets take (and need) nothing.
+#[derive(Debug, Default)]
+pub struct EvenShareReallocator;
+
+impl Reallocator for EvenShareReallocator {
+    fn reallocate(
+        &mut self,
+        finished: &FinishedRequest<'_>,
+        running: &[RunningView<'_>],
+    ) -> Vec<Grant> {
+        let ms_takers = running
+            .iter()
+            .filter(|r| r.budget.deadline_ms.is_some())
+            .count();
+        let tok_takers = running
+            .iter()
+            .filter(|r| r.budget.max_tokens.is_some())
+            .count();
+        running
+            .iter()
+            .map(|r| Grant {
+                extra_ms: if r.budget.deadline_ms.is_some() && ms_takers > 0 {
+                    finished.leftover_ms / ms_takers as f64
+                } else {
+                    0.0
+                },
+                extra_tokens: if r.budget.max_tokens.is_some() && tok_takers > 0 {
+                    finished.leftover_tokens / tok_takers
+                } else {
+                    0
+                },
+            })
+            .collect()
+    }
+}
+
 /// Offline argmax over precomputed per-strategy (â, cost) tables — the
 /// figure-sweep hot path. Returns the winning index.
 pub fn select_offline(probs: &[f64], costs: &[CostEstimate], lambdas: Lambdas) -> usize {
@@ -378,6 +475,109 @@ mod tests {
                             "not the feasible argmax".to_string(),
                         )?;
                     }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn even_share_splits_among_limited_budgets_only() {
+        let with_deadline = Budget::unlimited().with_deadline_ms(500.0);
+        let with_cap = Budget::unlimited().with_max_tokens(100);
+        let unlimited = Budget::unlimited();
+        let running = [
+            RunningView { strategy_id: "beam@4x2c12", budget: &with_deadline, elapsed_ms: 10.0 },
+            RunningView { strategy_id: "beam@4x2c12", budget: &with_deadline, elapsed_ms: 20.0 },
+            RunningView { strategy_id: "mv_early@16", budget: &with_cap, elapsed_ms: 5.0 },
+            RunningView { strategy_id: "majority_vote@4", budget: &unlimited, elapsed_ms: 1.0 },
+        ];
+        let finished = FinishedRequest {
+            strategy_id: "majority_vote@2",
+            leftover_ms: 100.0,
+            leftover_tokens: 60,
+        };
+        let grants = EvenShareReallocator.reallocate(&finished, &running);
+        assert_eq!(grants.len(), 4);
+        // deadline headroom split between the two deadline-carrying
+        // requests, tokens to the one capped request, nothing to the
+        // unlimited one
+        assert_eq!(grants[0], Grant { extra_ms: 50.0, extra_tokens: 0 });
+        assert_eq!(grants[1], Grant { extra_ms: 50.0, extra_tokens: 0 });
+        assert_eq!(grants[2], Grant { extra_ms: 0.0, extra_tokens: 60 });
+        assert!(grants[3].is_empty());
+    }
+
+    #[test]
+    fn even_share_no_takers_grants_nothing() {
+        let unlimited = Budget::unlimited();
+        let running = [RunningView {
+            strategy_id: "mv@2",
+            budget: &unlimited,
+            elapsed_ms: 0.0,
+        }];
+        let finished = FinishedRequest {
+            strategy_id: "beam@4x2c12",
+            leftover_ms: 1000.0,
+            leftover_tokens: 1000,
+        };
+        let grants = EvenShareReallocator.reallocate(&finished, &running);
+        assert!(grants.iter().all(Grant::is_empty));
+        // and an empty running set is fine
+        assert!(EvenShareReallocator.reallocate(&finished, &[]).is_empty());
+    }
+
+    #[test]
+    fn prop_even_share_conserves_budget() {
+        // grants never exceed what the finished request left over
+        forall(
+            "reallocation conserves the pool",
+            200,
+            |rng| {
+                let n = rng.range(0, 8) as usize;
+                let kinds: Vec<u64> = gen_vec(rng, n..n + 1, |r| r.below(3));
+                let leftover_ms = rng.f64() * 1000.0;
+                let leftover_tokens = rng.below(500) as usize;
+                (kinds, leftover_ms, leftover_tokens)
+            },
+            |(kinds, leftover_ms, leftover_tokens)| {
+                let budgets: Vec<Budget> = kinds
+                    .iter()
+                    .map(|k| match k {
+                        0 => Budget::unlimited(),
+                        1 => Budget::unlimited().with_deadline_ms(100.0),
+                        _ => Budget::unlimited()
+                            .with_deadline_ms(100.0)
+                            .with_max_tokens(64),
+                    })
+                    .collect();
+                let running: Vec<RunningView<'_>> = budgets
+                    .iter()
+                    .map(|b| RunningView {
+                        strategy_id: "s",
+                        budget: b,
+                        elapsed_ms: 0.0,
+                    })
+                    .collect();
+                let finished = FinishedRequest {
+                    strategy_id: "f",
+                    leftover_ms: *leftover_ms,
+                    leftover_tokens: *leftover_tokens,
+                };
+                let grants = EvenShareReallocator.reallocate(&finished, &running);
+                let ms: f64 = grants.iter().map(|g| g.extra_ms).sum();
+                let toks: usize = grants.iter().map(|g| g.extra_tokens).sum();
+                prop_assert(
+                    ms <= leftover_ms + 1e-9 && toks <= *leftover_tokens,
+                    format!("granted ms {ms} / tokens {toks} exceed the pool"),
+                )?;
+                // and grants only go to requests that carry the limit
+                for (g, b) in grants.iter().zip(&budgets) {
+                    prop_assert(
+                        (g.extra_ms == 0.0 || b.deadline_ms.is_some())
+                            && (g.extra_tokens == 0 || b.max_tokens.is_some()),
+                        "grant to a request without that limit".to_string(),
+                    )?;
                 }
                 Ok(())
             },

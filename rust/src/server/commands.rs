@@ -342,7 +342,7 @@ pub fn cmd_serve(raw: &[String]) -> Result<()> {
         COMMON_VALUES,
         &[
             "rate", "requests", "workers", "lambda-t", "lambda-l", "strategy", "embedding",
-            "deadline-ms", "max-tokens",
+            "deadline-ms", "max-tokens", "budget-mix",
         ],
     ]
     .concat();
@@ -418,23 +418,37 @@ pub fn cmd_serve(raw: &[String]) -> Result<()> {
             rate: args.f64_or("rate", 1.0)?,
         }
     };
-    // per-request budget, enforced mid-strategy by the decoding method
-    let mut budget = Budget::unlimited();
-    let deadline_ms = args.f64_or("deadline-ms", 0.0)?;
-    if deadline_ms > 0.0 {
-        budget = budget.with_deadline_ms(deadline_ms);
-    }
-    let max_tokens = args.usize_or("max-tokens", 0)?;
-    if max_tokens > 0 {
-        budget = budget.with_max_tokens(max_tokens);
-    }
-    if !budget.is_unlimited() {
-        log_info!(
-            "serve: per-request budget deadline_ms={deadline_ms} max_tokens={max_tokens}"
-        );
-    }
+    // per-request budgets, enforced mid-strategy by the decoding method:
+    // one cloned budget (--deadline-ms/--max-tokens) or a weighted
+    // heterogeneous mix (--budget-mix "30:d500,30:d5000,40:unlimited")
     let mut rng = Rng::new(cfg.seed, 0x5E7E);
-    let schedule = loadgen::schedule_budgeted(&splits.test, n, arrivals, budget, &mut rng);
+    let schedule = if let Some(mix_spec) = args.opt_str("budget-mix") {
+        if args.opt_str("deadline-ms").is_some() || args.opt_str("max-tokens").is_some() {
+            return Err(Error::Config(
+                "--budget-mix replaces --deadline-ms/--max-tokens; pass one or the other"
+                    .into(),
+            ));
+        }
+        let mix = loadgen::parse_budget_mix(mix_spec)?;
+        log_info!("serve: budget mix with {} arms ({mix_spec})", mix.len());
+        loadgen::schedule_mixed(&splits.test, n, arrivals, &mix, &mut rng)
+    } else {
+        let mut budget = Budget::unlimited();
+        let deadline_ms = args.f64_or("deadline-ms", 0.0)?;
+        if deadline_ms > 0.0 {
+            budget = budget.with_deadline_ms(deadline_ms);
+        }
+        let max_tokens = args.usize_or("max-tokens", 0)?;
+        if max_tokens > 0 {
+            budget = budget.with_max_tokens(max_tokens);
+        }
+        if !budget.is_unlimited() {
+            log_info!(
+                "serve: per-request budget deadline_ms={deadline_ms} max_tokens={max_tokens}"
+            );
+        }
+        loadgen::schedule_budgeted(&splits.test, n, arrivals, budget, &mut rng)
+    };
     let report = driver::run(&executor, &mode, schedule, workers)?;
     report.log_summary("test");
     std::fs::create_dir_all(&cfg.paths.results)?;

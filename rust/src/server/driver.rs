@@ -1,27 +1,38 @@
-//! The serving driver: workers pulling scheduled requests through the
-//! router + strategy executor, with end-to-end latency accounting.
+//! The serving driver: a continuation event loop pulling scheduled
+//! requests through the router and the strategy stepper, with
+//! end-to-end latency accounting.
 //!
 //! This is the deployment shape of the paper's system: requests arrive,
 //! the router picks `s*(x)` under the operator's (λ_T, λ_L) *and* the
 //! request's budget (deadline-infeasible strategies are excluded via the
-//! budget-bucket cost model), the strategy executes against the shared
-//! engine (whose batcher merges concurrent generation) under the
-//! request's [`Budget`] — deadlines are enforced all the way down to
-//! *mid-call* engine preemption — and the driver reports accuracy /
-//! tokens / latency percentiles / throughput plus budget-enforcement
-//! fractions, preemption counts and realized-vs-predicted latency.
+//! budget-bucket cost model), and the request is admitted into the
+//! continuation executor ([`Stepper`]) as a resumable step machine —
+//! not a thread. One pump thread multiplexes every in-flight strategy:
+//! concurrent requests' generation/scoring rounds are submitted to the
+//! engine together (so the scheduler coalesces them into shared
+//! bucket-shaped calls), budgets are enforced all the way down to
+//! *mid-call* engine preemption, and when a request finishes with
+//! leftover budget the [`EvenShareReallocator`] grants it to
+//! still-running requests between steps — the paper's per-query
+//! allocation, made online. `concurrency` (the old `workers` knob)
+//! bounds how many machines are in flight at once; admission stays
+//! strictly in schedule order.
+//!
+//! The driver reports accuracy / tokens / latency percentiles /
+//! throughput plus budget-enforcement fractions, preemption counts,
+//! realized-vs-predicted latency, and the stepper's reallocation
+//! counters.
 
 use crate::error::Result;
 use crate::metrics::Histogram;
-use crate::router::{Lambdas, Router};
+use crate::router::{EvenShareReallocator, Lambdas, Router};
 use crate::server::loadgen::Request;
+use crate::strategies::stepper::{Progress, Stepper, Ticket};
 use crate::strategies::{Executor, Strategy};
 use crate::util::json::Value;
 use crate::util::stats;
 use crate::log_info;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Routing mode for the driver.
@@ -76,65 +87,14 @@ pub fn warmup(executor: &Executor, strategies: &[Strategy], query: &str) -> Resu
     Ok(())
 }
 
-/// Run the driver over a schedule. `workers` controls concurrency (the
-/// engine's scheduler coalesces concurrent generate *and* PRM/embed
-/// calls). The schedule is shared read-only (`Arc<Vec<_>>`); workers
-/// claim indices through one atomic cursor and accumulate their own
-/// result vectors — the serve hot path touches no shared lock.
-pub fn run(
+/// Route one request: pick its strategy (and predicted latency when
+/// adaptive) under the request's budget.
+fn route(
     executor: &Executor,
     mode: &Mode,
-    requests: Vec<Request>,
-    workers: usize,
-) -> Result<ServeReport> {
-    let n = requests.len();
-    let start = Instant::now();
-    let queue: Arc<Vec<Request>> = Arc::new(requests);
-    let next_seq = Arc::new(AtomicUsize::new(0));
-    let mut served: Vec<Served> = Vec::with_capacity(n);
-
-    std::thread::scope(|scope| -> Result<()> {
-        let mut handles = Vec::new();
-        for _ in 0..workers.max(1) {
-            let queue = queue.clone();
-            let next_seq = next_seq.clone();
-            let executor = executor.clone();
-            let mode_ref = &*mode;
-            handles.push(scope.spawn(move || -> Result<Vec<Served>> {
-                let mut mine = Vec::new();
-                loop {
-                    let idx = next_seq.fetch_add(1, Ordering::SeqCst);
-                    let req = match queue.get(idx) {
-                        Some(r) => r,
-                        None => return Ok(mine),
-                    };
-                    // open-loop: wait for the arrival time
-                    let now_ms = start.elapsed().as_secs_f64() * 1e3;
-                    if req.arrival_ms > now_ms {
-                        std::thread::sleep(Duration::from_micros(
-                            ((req.arrival_ms - now_ms) * 1e3) as u64,
-                        ));
-                    }
-                    let arrived = start.elapsed().as_secs_f64() * 1e3;
-                    let mut one = serve_one(&executor, mode_ref, req)?;
-                    let done = start.elapsed().as_secs_f64() * 1e3;
-                    one.e2e_ms = done - req.arrival_ms.min(arrived);
-                    mine.push(one);
-                }
-            }));
-        }
-        for h in handles {
-            served.extend(h.join().expect("worker panicked")?);
-        }
-        Ok(())
-    })?;
-
-    let wall_s = start.elapsed().as_secs_f64();
-    Ok(ServeReport::new(served, wall_s))
-}
-
-fn serve_one(executor: &Executor, mode: &Mode, req: &Request) -> Result<Served> {
-    let (strategy, routed, predicted_ms) = match mode {
+    req: &Request,
+) -> Result<(Strategy, bool, Option<f64>)> {
+    Ok(match mode {
         Mode::Adaptive(router, lambdas) => {
             // budget-aware selection: the budget-bucket cost table prices
             // each strategy under this request's deadline, and strategies
@@ -144,21 +104,108 @@ fn serve_one(executor: &Executor, mode: &Mode, req: &Request) -> Result<Served> 
             (score.strategy, true, Some(score.cost.latency_ms))
         }
         Mode::Static(s) => (s.clone(), false, None),
-    };
-    let outcome = executor.run_budgeted(&strategy, &req.query.query, req.budget.clone())?;
-    Ok(Served {
-        query_id: req.query.id.clone(),
-        strategy: strategy.id(),
-        routed,
-        correct: outcome.is_correct(&req.query.answer),
-        tokens: outcome.tokens,
-        budget_exhausted: outcome.budget_exhausted,
-        preempted: outcome.preempted,
-        stopped_early: outcome.stopped_early,
-        predicted_ms,
-        service_ms: outcome.latency_ms,
-        e2e_ms: outcome.latency_ms, // overwritten by the driver
     })
+}
+
+/// Run the driver over a schedule. `concurrency` bounds the number of
+/// in-flight step machines (the budget the old thread-per-worker pool
+/// expressed as thread count); requests are admitted strictly in
+/// schedule order, when due *and* when a slot is free — so queue wait
+/// still shows up in `e2e_ms`. The whole run is pumped by this one
+/// thread: routing happens at admission, strategy rounds interleave
+/// through the stepper, and finished requests' leftover budgets are
+/// reallocated to running ones between steps.
+pub fn run(
+    executor: &Executor,
+    mode: &Mode,
+    requests: Vec<Request>,
+    concurrency: usize,
+) -> Result<ServeReport> {
+    let n = requests.len();
+    let cap = concurrency.max(1);
+    let start = Instant::now();
+    let mut stepper =
+        Stepper::new(executor.clone()).with_reallocator(Box::new(EvenShareReallocator));
+    // (routed, predicted_ms) captured at admission, indexed by seq tag
+    let mut admitted_meta: Vec<(bool, Option<f64>)> = vec![(false, None); n];
+    let mut served: Vec<Served> = Vec::with_capacity(n);
+    let mut next = 0usize;
+
+    // Record completions as soon as an advance produced them, so
+    // `e2e_ms` is stamped at actual completion — not after the next
+    // admission's (blocking, possibly engine-bound) routing calls.
+    let drain = |stepper: &mut Stepper,
+                 served: &mut Vec<Served>,
+                 meta: &[(bool, Option<f64>)]| {
+        for c in stepper.drain_completed() {
+            let idx = c.tag as usize;
+            let req = &requests[idx];
+            let (routed, predicted_ms) = meta[idx];
+            let done_ms = start.elapsed().as_secs_f64() * 1e3;
+            served.push(Served {
+                query_id: req.query.id.clone(),
+                strategy: c.strategy_id,
+                routed,
+                correct: c.outcome.is_correct(&req.query.answer),
+                tokens: c.outcome.tokens,
+                budget_exhausted: c.outcome.budget_exhausted,
+                preempted: c.outcome.preempted,
+                stopped_early: c.outcome.stopped_early,
+                predicted_ms,
+                service_ms: c.outcome.latency_ms,
+                e2e_ms: done_ms - req.arrival_ms.min(done_ms),
+            });
+        }
+    };
+
+    while served.len() < n {
+        let now_ms = start.elapsed().as_secs_f64() * 1e3;
+        // Admit due requests into free slots, in schedule order. Each
+        // admission's routing is a blocking engine round-trip on this
+        // pump thread, so between admissions give in-flight machines a
+        // non-blocking advance: arrived replies are harvested and the
+        // next rounds (including the just-admitted machine's first
+        // step) are submitted, overlapping with the next routing call.
+        while next < n && stepper.in_flight() < cap && requests[next].arrival_ms <= now_ms {
+            let req = &requests[next];
+            let (strategy, routed, predicted_ms) = route(executor, mode, req)?;
+            admitted_meta[next] = (routed, predicted_ms);
+            stepper.admit(Ticket {
+                query: req.query.query.clone(),
+                strategy,
+                budget: req.budget.clone(),
+                tag: next as u64,
+            })?;
+            next += 1;
+            stepper.advance(Some(Duration::ZERO))?;
+            drain(&mut stepper, &mut served, &admitted_meta);
+        }
+        if served.len() >= n {
+            break;
+        }
+        if stepper.in_flight() == 0 {
+            // Idle with work left: sleep until the next arrival is due.
+            let wait_ms = (requests[next].arrival_ms - now_ms).max(0.0);
+            if wait_ms > 0.0 {
+                std::thread::sleep(Duration::from_micros((wait_ms * 1e3) as u64));
+            }
+            continue;
+        }
+        // Pump; if an admission could become due while we wait, cap the
+        // wait so arrivals are admitted on time.
+        let wait = if next < n && stepper.in_flight() < cap {
+            Some(Duration::from_micros(
+                ((requests[next].arrival_ms - now_ms).max(0.0) * 1e3) as u64 + 1,
+            ))
+        } else {
+            None
+        };
+        let _progress: Progress = stepper.advance(wait)?;
+        drain(&mut stepper, &mut served, &admitted_meta);
+    }
+
+    let wall_s = start.elapsed().as_secs_f64();
+    Ok(ServeReport::new(served, wall_s, stepper.metrics.to_json()))
 }
 
 /// Aggregated serving report.
@@ -166,11 +213,18 @@ fn serve_one(executor: &Executor, mode: &Mode, req: &Request) -> Result<Served> 
 pub struct ServeReport {
     pub served: Vec<Served>,
     pub wall_s: f64,
+    /// Continuation-executor counters (steps, submissions, reallocation
+    /// grants) captured at the end of the run.
+    pub stepper: Value,
 }
 
 impl ServeReport {
-    fn new(served: Vec<Served>, wall_s: f64) -> ServeReport {
-        ServeReport { served, wall_s }
+    fn new(served: Vec<Served>, wall_s: f64, stepper: Value) -> ServeReport {
+        ServeReport {
+            served,
+            wall_s,
+            stepper,
+        }
     }
 
     pub fn to_json(&self) -> Value {
@@ -228,6 +282,7 @@ impl ServeReport {
             .with("preempted_fraction", preempted as f64 / n as f64)
             .with("stopped_early_fraction", stopped as f64 / n as f64)
             .with("latency_prediction", pred_json)
+            .with("stepper", self.stepper.clone())
             .with("service_ms", service.summary().to_json())
             .with("e2e_ms", e2e.summary().to_json())
             .with("selection", strat_json)
@@ -237,7 +292,8 @@ impl ServeReport {
         let v = self.to_json();
         log_info!(
             "serve[{label}]: {} reqs in {:.1}s ({:.2} rps), acc {:.3}, avg tokens {:.0}, \
-             e2e p50 {:.0}ms p95 {:.0}ms, adaptive {:.0}%, budget-hit {:.0}%, preempted {:.0}%",
+             e2e p50 {:.0}ms p95 {:.0}ms, adaptive {:.0}%, budget-hit {:.0}%, preempted {:.0}%, \
+             realloc grants {:.0}",
             self.served.len(),
             self.wall_s,
             v.req_f64("throughput_rps").unwrap_or(0.0),
@@ -248,6 +304,9 @@ impl ServeReport {
             100.0 * v.req_f64("adaptive_fraction").unwrap_or(0.0),
             100.0 * v.req_f64("budget_exhausted_fraction").unwrap_or(0.0),
             100.0 * v.req_f64("preempted_fraction").unwrap_or(0.0),
+            v.req("stepper")
+                .and_then(|s| s.req_f64("realloc_grants"))
+                .unwrap_or(0.0),
         );
     }
 }

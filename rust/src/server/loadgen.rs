@@ -1,9 +1,14 @@
 //! Load generation for the serving driver: open-loop Poisson arrivals
 //! (the standard serving-benchmark model) or closed-loop back-to-back.
 //! Each request carries a per-request [`Budget`] that the decoding
-//! method enforces mid-strategy.
+//! method enforces mid-strategy — either one budget cloned for all
+//! requests ([`schedule_budgeted`]) or sampled per request from a
+//! weighted **budget mix** ([`schedule_mixed`]), so serving runs and
+//! benches exercise heterogeneous budgets (tight-deadline traffic
+//! interleaved with unlimited) the way real fleets see them.
 
 use crate::data::Query;
+use crate::error::{Error, Result};
 use crate::strategies::Budget;
 use crate::util::rng::Rng;
 
@@ -65,6 +70,101 @@ pub fn schedule_budgeted(
         .collect()
 }
 
+/// Like [`schedule_budgeted`], but each request's budget is drawn from
+/// a weighted mix of `(weight, Budget)` arms — e.g. 30% tight deadline /
+/// 30% loose / 40% unlimited. Weights need not sum to 1; they are
+/// normalized by [`Rng::weighted`]. Draws are deterministic in the rng
+/// seed, like everything else in the schedule.
+pub fn schedule_mixed(
+    queries: &[Query],
+    n: usize,
+    arrivals: Arrivals,
+    mix: &[(f64, Budget)],
+    rng: &mut Rng,
+) -> Vec<Request> {
+    assert!(!mix.is_empty(), "empty budget mix");
+    let weights: Vec<f64> = mix.iter().map(|(w, _)| *w).collect();
+    let mut reqs = schedule_budgeted(queries, n, arrivals, Budget::unlimited(), rng);
+    for r in &mut reqs {
+        r.budget = mix[rng.weighted(&weights)].1.clone();
+    }
+    reqs
+}
+
+/// Parse a `--budget-mix` CLI spec into weighted arms:
+/// comma-separated `weight:spec` entries where `spec` is `unlimited`
+/// or `d<deadline_ms>`, `t<max_tokens>`, or both (`d500t256`).
+///
+/// Example: `30:d500,30:d5000,40:unlimited`.
+pub fn parse_budget_mix(s: &str) -> Result<Vec<(f64, Budget)>> {
+    let bad = |entry: &str, why: &str| {
+        Error::Config(format!(
+            "bad --budget-mix entry '{entry}' ({why}); expected \
+             'weight:spec' with spec = unlimited | d<ms> | t<tokens> | d<ms>t<tokens>, \
+             e.g. 30:d500,30:d5000,40:unlimited"
+        ))
+    };
+    let mut mix = Vec::new();
+    for entry in s.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (weight, spec) = entry
+            .split_once(':')
+            .ok_or_else(|| bad(entry, "missing ':'"))?;
+        let weight: f64 = weight
+            .trim()
+            .parse()
+            .map_err(|_| bad(entry, "weight is not a number"))?;
+        if weight.is_nan() || weight <= 0.0 {
+            return Err(bad(entry, "weight must be positive"));
+        }
+        let spec = spec.trim();
+        let budget = if spec == "unlimited" {
+            Budget::unlimited()
+        } else {
+            let mut budget = Budget::unlimited();
+            // d<ms> first (optional), then t<tokens> (optional) — at
+            // least one must be present
+            let mut rest = spec;
+            if let Some(tail) = rest.strip_prefix('d') {
+                let (num, after) = match tail.find(|c: char| !c.is_ascii_digit() && c != '.') {
+                    Some(i) => tail.split_at(i),
+                    None => (tail, ""),
+                };
+                let ms: f64 = num.parse().map_err(|_| bad(entry, "bad deadline"))?;
+                if ms <= 0.0 {
+                    // `--deadline-ms 0` means "no deadline" on the
+                    // single-budget path; a mix arm that wants that
+                    // must say `unlimited`, not smuggle in an
+                    // instantly-spent budget
+                    return Err(bad(entry, "deadline must be > 0 (use 'unlimited')"));
+                }
+                budget = budget.with_deadline_ms(ms);
+                rest = after;
+            }
+            if let Some(tail) = rest.strip_prefix('t') {
+                let toks: usize = tail.parse().map_err(|_| bad(entry, "bad token cap"))?;
+                if toks == 0 {
+                    return Err(bad(entry, "token cap must be > 0 (use 'unlimited')"));
+                }
+                budget = budget.with_max_tokens(toks);
+                rest = "";
+            }
+            if budget.is_unlimited() || !rest.is_empty() {
+                return Err(bad(entry, "unrecognized spec"));
+            }
+            budget
+        };
+        mix.push((weight, budget));
+    }
+    if mix.is_empty() {
+        return Err(Error::Config("empty --budget-mix".into()));
+    }
+    Ok(mix)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -98,6 +198,93 @@ mod tests {
         assert!(reqs.iter().all(|r| r.arrival_ms == 0.0));
         assert!(reqs.iter().all(|r| r.budget.is_unlimited()));
         assert_eq!(reqs.len(), 10);
+    }
+
+    #[test]
+    fn mixed_budgets_sample_every_arm() {
+        let mut rng = Rng::new(11, 0);
+        let mix = vec![
+            (0.3, Budget::unlimited().with_deadline_ms(100.0)),
+            (0.3, Budget::unlimited().with_deadline_ms(5000.0)),
+            (0.4, Budget::unlimited()),
+        ];
+        let reqs = schedule_mixed(&queries(), 300, Arrivals::Closed, &mix, &mut rng);
+        assert_eq!(reqs.len(), 300);
+        let tight = reqs
+            .iter()
+            .filter(|r| r.budget.deadline_ms == Some(100.0))
+            .count();
+        let loose = reqs
+            .iter()
+            .filter(|r| r.budget.deadline_ms == Some(5000.0))
+            .count();
+        let unlimited = reqs.iter().filter(|r| r.budget.is_unlimited()).count();
+        assert_eq!(tight + loose + unlimited, 300);
+        // every arm is hit, roughly by weight (±15 points of slack at
+        // n=300 keeps this deterministic-seed test honest, not flaky)
+        for (count, expect) in [(tight, 90.0), (loose, 90.0), (unlimited, 120.0)] {
+            assert!(
+                (count as f64 - expect).abs() < 45.0,
+                "arm count {count} far from expectation {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_budgets_deterministic_in_seed() {
+        let mix = vec![
+            (1.0, Budget::unlimited().with_deadline_ms(50.0)),
+            (1.0, Budget::unlimited().with_max_tokens(64)),
+        ];
+        let seq = |seed| {
+            let mut rng = Rng::new(seed, 0);
+            schedule_mixed(&queries(), 40, Arrivals::Closed, &mix, &mut rng)
+                .iter()
+                .map(|r| r.budget.deadline_ms.is_some())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(seq(3), seq(3));
+        assert_ne!(seq(3), seq(4), "different seeds should differ somewhere");
+    }
+
+    #[test]
+    fn budget_mix_spec_parses() {
+        let mix = parse_budget_mix("30:d500,30:d5000t256,40:unlimited").unwrap();
+        assert_eq!(mix.len(), 3);
+        assert_eq!(mix[0].0, 30.0);
+        assert_eq!(mix[0].1.deadline_ms, Some(500.0));
+        assert_eq!(mix[0].1.max_tokens, None);
+        assert_eq!(mix[1].1.deadline_ms, Some(5000.0));
+        assert_eq!(mix[1].1.max_tokens, Some(256));
+        assert!(mix[2].1.is_unlimited());
+        // token-only arm and fractional weights/deadlines
+        let mix = parse_budget_mix("0.5:t128, 1.5:d2.5").unwrap();
+        assert_eq!(mix[0].1.max_tokens, Some(128));
+        assert_eq!(mix[1].1.deadline_ms, Some(2.5));
+    }
+
+    #[test]
+    fn budget_mix_spec_rejects_malformed() {
+        for bad in [
+            "",
+            "30",
+            "30:",
+            ":d500",
+            "x:d500",
+            "30:q500",
+            "30:d",
+            "30:t",
+            "30:d500x",
+            "-1:d500",
+            "0:unlimited",
+            // zero limits are instantly-exhausted budgets, not
+            // "unlimited" as on the --deadline-ms/--max-tokens path
+            "30:d0",
+            "30:t0",
+            "30:d0t8",
+        ] {
+            assert!(parse_budget_mix(bad).is_err(), "'{bad}' should not parse");
+        }
     }
 
     #[test]

@@ -19,11 +19,25 @@
 //! engine call — generation cannot overlap across rounds — so latency
 //! grows with solution depth even though each call is batched. Token cost
 //! counts every generated token, including pruned beams.
+//!
+//! Execution is a per-expansion-round step machine: each round is one
+//! [`StepYield::Generate`] followed (budget permitting) by one
+//! [`StepYield::PrmScore`] for the fresh expansions. Because the machine
+//! suspends between rounds, the serving layer can run N concurrent beam
+//! requests on one thread and the engine scheduler coalesces their
+//! round-k expansions into shared bucket-shaped calls — the
+//! step-synchronized structure no longer costs a thread per request.
+//! PRM memoization (finished beams keep their prefix across rounds) is
+//! machine-local: cached prefixes are skipped from the yield, so only
+//! fresh expansions reach the engine.
 
 use crate::engine::GenKind;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::eval::{self, Candidate};
-use crate::strategies::method::{DecodingMethod, Outcome, RunCtx, StrategyParams};
+use crate::strategies::method::{
+    DecodingMethod, Outcome, RunCtx, StepInput, StepYield, StrategyParams, StrategyState,
+};
+use std::collections::HashMap;
 
 /// One live beam.
 #[derive(Debug, Clone)]
@@ -43,64 +57,97 @@ struct BeamNode {
 /// variant: rounds grow as prefixes lengthen, so predict high.
 const ROUND_COST_HEADROOM: f64 = 1.2;
 
-/// Shared beam core. `deadline_aware` switches between reactive budget
-/// observance and predictive round truncation.
-fn run_beam(ctx: &RunCtx<'_>, params: &StrategyParams, deadline_aware: bool) -> Result<Outcome> {
-    let tok = ctx.tokenizer;
-    let t0 = ctx.now_ms();
-    let n = params.n.max(1);
-    let w = params.width.max(1);
-    let chunk_cap = params.chunk.max(1);
-    // memoizing PRM client: finished beams keep their prefix across
-    // rounds, so re-scoring them hits the cache instead of the engine
-    let mut prm = crate::prm::PrmClient::new(ctx.engine, tok);
+/// Where the round loop is between steps.
+enum Phase {
+    /// Ready to open the next expansion round (loop head).
+    RoundHead,
+    /// Waiting on the round's batched expansion call.
+    Expanding,
+    /// Waiting on PRM scores for the fresh (non-memoized) pool prefixes.
+    Scoring,
+    /// Finished.
+    Done,
+}
 
-    let mut beams = vec![BeamNode {
-        text: "S:".to_string(),
-        score: 0.5,
-        done: false,
-        tokens: 0,
-    }];
-    let mut tokens_total = 0usize;
-    let mut engine_calls = 0usize;
-    let mut rounds_done = 0usize;
-    let mut budget_exhausted = false;
-    let mut preempted = false;
-    let mut stopped_early = false;
-    let mut last_round_ms = 0.0f64;
+/// Per-round step machine shared by both beam flavors.
+struct BeamState {
+    deadline_aware: bool,
+    n: usize,
+    w: usize,
+    chunk_cap: usize,
+    t0: f64,
+    phase: Phase,
+    round: usize,
+    round_start: f64,
+    beams: Vec<BeamNode>,
+    /// Parent beam index of each in-flight expansion job.
+    parents: Vec<usize>,
+    /// Selection pool being assembled for the current round (finished
+    /// beams + fresh expansions), held across the scoring yield.
+    pool: Vec<BeamNode>,
+    /// Pool indices whose prefixes were yielded for scoring (cache
+    /// misses), in yield order.
+    score_idx: Vec<usize>,
+    /// Memoized PRM scores keyed by the full `query + text` prefix —
+    /// finished beams keep identical prefixes across rounds, so only
+    /// fresh expansions reach the engine (measured on the blocking
+    /// path: ~20% fewer PRM rows per beam run).
+    cache: HashMap<String, f32>,
+    tokens_total: usize,
+    engine_calls: usize,
+    rounds_done: usize,
+    budget_exhausted: bool,
+    preempted: bool,
+    stopped_early: bool,
+    last_round_ms: f64,
+    /// Absolute deadline the in-flight expansion call was issued with.
+    /// Budget-hit accounting for that call must use *this* value, not
+    /// the current budget: a reallocation grant may extend the budget
+    /// while the call is in flight, but the engine preempts at the
+    /// deadline the call was submitted with.
+    issued_deadline: Option<f64>,
+}
 
-    for round in 0..ctx.beam_max_rounds {
-        let elapsed = ctx.now_ms() - t0;
-        if ctx.budget.exhausted(tokens_total, elapsed) {
-            budget_exhausted = true;
-            break;
+impl BeamState {
+    /// Loop head: open round `self.round` or finish (depth bound D,
+    /// budget spent, predictive deadline truncation, nothing live).
+    fn round_head(&mut self, ctx: &RunCtx<'_>) -> Result<StepYield> {
+        if self.round >= ctx.beam_max_rounds {
+            return self.finish(ctx);
+        }
+        let elapsed = ctx.now_ms() - self.t0;
+        if ctx.budget.exhausted(self.tokens_total, elapsed) {
+            self.budget_exhausted = true;
+            return self.finish(ctx);
         }
         // Predictive truncation (deadline-aware variant): if the next
         // round — estimated from the previous round's duration — would
         // overrun the deadline, stop now instead of blowing through it.
-        if deadline_aware
-            && round > 0
-            && ROUND_COST_HEADROOM * last_round_ms > ctx.budget.ms_left(elapsed)
+        // The deadline is re-read from the budget each round, so a
+        // mid-flight reallocation grant extends how many rounds fit.
+        if self.deadline_aware
+            && self.round > 0
+            && ROUND_COST_HEADROOM * self.last_round_ms > ctx.budget.ms_left(elapsed)
         {
-            stopped_early = true;
-            break;
+            self.stopped_early = true;
+            return self.finish(ctx);
         }
-        let round_start = ctx.now_ms();
+        self.round_start = ctx.now_ms();
 
-        let live: Vec<usize> = (0..beams.len()).filter(|&i| !beams[i].done).collect();
+        let live: Vec<usize> = (0..self.beams.len()).filter(|&i| !self.beams[i].done).collect();
         if live.is_empty() {
-            break;
+            return self.finish(ctx);
         }
         // Expand every live beam W ways (round 0 expands the root to
         // N·W so the first PRM selection already sees N·W options).
-        let per_beam = if round == 0 { n * w } else { w };
+        let per_beam = if self.round == 0 { self.n * self.w } else { self.w };
         let mut jobs = Vec::new();
-        let mut parents = Vec::new();
+        self.parents.clear();
         for &bi in &live {
-            let prompt = format!("{}{}", ctx.query, beams[bi].text);
-            let ids = tok.encode(&prompt)?;
+            let prompt = format!("{}{}", ctx.query, self.beams[bi].text);
+            let ids = ctx.tokenizer.encode(&prompt)?;
             if ids.len() + 2 >= ctx.max_prefix {
-                beams[bi].done = true; // length cap — force completion
+                self.beams[bi].done = true; // length cap — force completion
                 continue;
             }
             for _ in 0..per_beam {
@@ -109,119 +156,226 @@ fn run_beam(ctx: &RunCtx<'_>, params: &StrategyParams, deadline_aware: bool) -> 
                 // that would overrun is halted mid-decode, not after.
                 // The chunk hyperparameter C also bounds the engine cap:
                 // decoding past C is discarded by accounting anyway.
-                let job = ctx.gen_job(ids.clone(), GenKind::Chunk, tokens_total);
-                let cap = job.max_new_tokens.map_or(chunk_cap, |c| c.min(chunk_cap));
+                let job = ctx.gen_job(ids.clone(), GenKind::Chunk, self.tokens_total);
+                let cap = job.max_new_tokens.map_or(self.chunk_cap, |c| c.min(self.chunk_cap));
                 jobs.push(job.with_max_new_tokens(cap));
-                parents.push(bi);
+                self.parents.push(bi);
             }
         }
         if jobs.is_empty() {
-            break;
+            return self.finish(ctx);
         }
-        let results = ctx.generate_budgeted(jobs, t0)?;
-        engine_calls += 1;
-        rounds_done += 1;
+        self.phase = Phase::Expanding;
+        self.issued_deadline = ctx.budget.deadline_at(self.t0);
+        Ok(StepYield::Generate {
+            jobs,
+            deadline_ms: self.issued_deadline,
+        })
+    }
+
+    /// The round's expansion results arrived: account tokens against the
+    /// budget, assemble the selection pool, and either yield the fresh
+    /// prefixes for PRM scoring or (budget spent) select unscored.
+    fn after_generate(
+        &mut self,
+        ctx: &RunCtx<'_>,
+        results: Vec<crate::engine::GenResult>,
+    ) -> Result<StepYield> {
+        self.engine_calls += 1;
+        self.rounds_done += 1;
 
         // Was the round halted by the *budget* (deadline passed mid-call
         // or cancellation)? An engine row preempted only by the C-chunk
         // cap is a hyperparameter bound, not a budget event — the token
         // cap makes itself felt through `clamp_tokens` / `exhausted`
-        // accounting below instead.
-        let round_budget_hit =
-            ctx.budget.cancelled() || ctx.budget.deadline_passed(ctx.now_ms() - t0);
+        // accounting below instead. The check runs against the deadline
+        // the call was *issued* with: the engine enforced that value,
+        // and a reallocation grant landing mid-call must not make its
+        // preemption look spontaneous (without grants this equals
+        // `ctx.budget.deadline_passed(now - t0)` exactly).
+        let round_budget_hit = ctx.budget.cancelled()
+            || self.issued_deadline.is_some_and(|d| ctx.now_ms() >= d);
 
         // Build expansion candidates (token accounting capped by budget).
         let mut expanded: Vec<BeamNode> = Vec::with_capacity(results.len());
-        for (r, &pi) in results.iter().zip(&parents) {
+        for (r, &pi) in results.iter().zip(&self.parents) {
             let mut kept = r.tokens.clone();
-            if kept.len() > chunk_cap {
-                kept.truncate(chunk_cap); // chunk-size hyperparameter C
+            if kept.len() > self.chunk_cap {
+                kept.truncate(self.chunk_cap); // chunk-size hyperparameter C
             }
-            let (kept, truncated) = ctx.budget.clamp_tokens(tokens_total, &kept);
+            let (kept, truncated) = ctx.budget.clamp_tokens(self.tokens_total, &kept);
             if truncated {
-                budget_exhausted = true;
+                self.budget_exhausted = true;
             }
             if r.preempted && (truncated || round_budget_hit) {
                 // the engine evicted this row mid-round for budget
                 // reasons — the budget is spent
-                preempted = true;
-                budget_exhausted = true;
+                self.preempted = true;
+                self.budget_exhausted = true;
             }
-            tokens_total += kept.len();
-            let piece = tok.decode(&kept)?;
+            self.tokens_total += kept.len();
+            let piece = ctx.tokenizer.decode(&kept)?;
             let done = piece.contains('\n') || kept.is_empty();
             expanded.push(BeamNode {
-                text: format!("{}{}", beams[pi].text, piece),
+                text: format!("{}{}", self.beams[pi].text, piece),
                 score: 0.0,
                 done,
-                tokens: beams[pi].tokens + kept.len(),
+                tokens: self.beams[pi].tokens + kept.len(),
             });
         }
         // Carry over already-done beams to compete in selection.
-        let finished: Vec<BeamNode> = beams.iter().filter(|b| b.done).cloned().collect();
-        let mut pool = finished;
-        pool.extend(expanded);
+        let finished: Vec<BeamNode> = self.beams.iter().filter(|b| b.done).cloned().collect();
+        self.pool = finished;
+        self.pool.extend(expanded);
 
         // Budget spent during this round (token cap during accounting,
         // or the generate call overran the deadline)? Then no further
-        // engine work — skip the PRM call and select on whatever scores
+        // engine work — skip the PRM yield and select on whatever scores
         // the pool already has (fresh expansions stay at 0.0; the final
         // majority vote only uses scores as tie-break weights).
-        if budget_exhausted || ctx.budget.exhausted(tokens_total, ctx.now_ms() - t0) {
-            budget_exhausted = true;
-        } else {
-            // PRM-score the pool. Done beams keep identical prefixes, so
-            // the memoizing client only sends fresh expansions to the
-            // engine (measured: ~20% fewer PRM rows per beam run).
-            let texts: Vec<String> = pool.iter().map(|b| b.text.clone()).collect();
-            let scores = prm.score(ctx.query, &texts)?;
-            engine_calls += 1;
-            for (b, s) in pool.iter_mut().zip(scores) {
+        if self.budget_exhausted
+            || ctx.budget.exhausted(self.tokens_total, ctx.now_ms() - self.t0)
+        {
+            self.budget_exhausted = true;
+            return self.select_and_continue(ctx);
+        }
+
+        // PRM-score the pool, memoization first: only prefixes not seen
+        // in an earlier round reach the engine. `engine_calls` counts
+        // the scoring pass either way, even when fully served from
+        // cache (parity with the pre-refactor accounting).
+        self.engine_calls += 1;
+        self.score_idx.clear();
+        let mut prefixes: Vec<Vec<u32>> = Vec::new();
+        for (i, b) in self.pool.iter_mut().enumerate() {
+            let full = format!("{}{}", ctx.query, b.text);
+            if let Some(&s) = self.cache.get(&full) {
                 b.score = s as f64;
+            } else {
+                prefixes.push(ctx.tokenizer.encode(&full)?);
+                self.score_idx.push(i);
             }
         }
+        if prefixes.is_empty() {
+            // every pool prefix was memoized — no engine round trip
+            return self.select_and_continue(ctx);
+        }
+        self.phase = Phase::Scoring;
+        Ok(StepYield::PrmScore(prefixes))
+    }
 
-        // Top-N by PRM score.
+    /// Fresh scores arrived: memoize and fill them in, then select.
+    fn after_score(&mut self, ctx: &RunCtx<'_>, scores: Vec<f32>) -> Result<StepYield> {
+        if scores.len() != self.score_idx.len() {
+            return Err(Error::internal("beam PRM score count mismatch"));
+        }
+        let idx = std::mem::take(&mut self.score_idx);
+        for (&i, s) in idx.iter().zip(scores) {
+            self.pool[i].score = s as f64;
+            let full = format!("{}{}", ctx.query, self.pool[i].text);
+            self.cache.insert(full, s);
+        }
+        self.select_and_continue(ctx)
+    }
+
+    /// Top-N selection over the assembled pool, then the next round (or
+    /// finish when the budget was hit during this round).
+    fn select_and_continue(&mut self, ctx: &RunCtx<'_>) -> Result<StepYield> {
+        let mut pool = std::mem::take(&mut self.pool);
         pool.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
-        pool.truncate(n);
-        beams = pool;
+        pool.truncate(self.n);
+        self.beams = pool;
 
-        last_round_ms = ctx.now_ms() - round_start;
-        if budget_exhausted {
-            break;
+        self.last_round_ms = ctx.now_ms() - self.round_start;
+        if self.budget_exhausted {
+            return self.finish(ctx);
+        }
+        self.round += 1;
+        self.round_head(ctx)
+    }
+
+    /// Force-finish any still-live beams (depth bound D or budget hit)
+    /// and vote.
+    fn finish(&mut self, ctx: &RunCtx<'_>) -> Result<StepYield> {
+        self.phase = Phase::Done;
+        for b in self.beams.iter_mut() {
+            b.done = true;
+        }
+        // Final answer: majority vote over the N beams (paper §2.1),
+        // PRM scores as tie-break weights.
+        let candidates: Vec<Candidate> = self
+            .beams
+            .iter()
+            .map(|b| Candidate {
+                text: b.text.clone(),
+                score: b.score,
+                tokens: b.tokens,
+            })
+            .collect();
+        let chosen = eval::majority_vote(&candidates)
+            .map(|c| c.text.clone())
+            .unwrap_or_default();
+        Ok(StepYield::Done(Outcome {
+            answer: eval::extract_answer(&chosen),
+            chosen,
+            tokens: self.tokens_total,
+            latency_ms: ctx.now_ms() - self.t0,
+            engine_calls: self.engine_calls,
+            rounds: self.rounds_done,
+            budget_exhausted: self.budget_exhausted,
+            preempted: self.preempted,
+            stopped_early: self.stopped_early,
+        }))
+    }
+}
+
+impl StrategyState for BeamState {
+    fn step(&mut self, ctx: &RunCtx<'_>, input: StepInput) -> Result<StepYield> {
+        let phase = std::mem::replace(&mut self.phase, Phase::Done);
+        match (phase, input) {
+            (Phase::RoundHead, StepInput::Start) => self.round_head(ctx),
+            (Phase::Expanding, StepInput::Generated(results)) => self.after_generate(ctx, results),
+            (Phase::Scoring, StepInput::Scored(scores)) => self.after_score(ctx, scores),
+            _ => Err(Error::internal("beam stepped with mismatched input")),
         }
     }
+}
 
-    // Force-finish any still-live beams (depth bound D or budget hit).
-    for b in beams.iter_mut() {
-        b.done = true;
-    }
-
-    // Final answer: majority vote over the N beams (paper §2.1),
-    // PRM scores as tie-break weights.
-    let candidates: Vec<Candidate> = beams
-        .iter()
-        .map(|b| Candidate {
-            text: b.text.clone(),
-            score: b.score,
-            tokens: b.tokens,
-        })
-        .collect();
-    let chosen = eval::majority_vote(&candidates)
-        .map(|c| c.text.clone())
-        .unwrap_or_default();
-    let latency_ms = ctx.now_ms() - t0;
-    Ok(Outcome {
-        answer: eval::extract_answer(&chosen),
-        chosen,
-        tokens: tokens_total,
-        latency_ms,
-        engine_calls,
-        rounds: rounds_done,
-        budget_exhausted,
-        preempted,
-        stopped_early,
-    })
+/// Shared `start` for both flavors. `deadline_aware` switches between
+/// reactive budget observance and predictive round truncation.
+fn start_beam(
+    ctx: &RunCtx<'_>,
+    params: &StrategyParams,
+    deadline_aware: bool,
+) -> Result<Box<dyn StrategyState>> {
+    Ok(Box::new(BeamState {
+        deadline_aware,
+        n: params.n.max(1),
+        w: params.width.max(1),
+        chunk_cap: params.chunk.max(1),
+        t0: ctx.now_ms(),
+        phase: Phase::RoundHead,
+        round: 0,
+        round_start: 0.0,
+        beams: vec![BeamNode {
+            text: "S:".to_string(),
+            score: 0.5,
+            done: false,
+            tokens: 0,
+        }],
+        parents: Vec::new(),
+        pool: Vec::new(),
+        score_idx: Vec::new(),
+        cache: HashMap::new(),
+        tokens_total: 0,
+        engine_calls: 0,
+        rounds_done: 0,
+        budget_exhausted: false,
+        preempted: false,
+        stopped_early: false,
+        last_round_ms: 0.0,
+        issued_deadline: None,
+    }))
 }
 
 /// The paper's step-synchronized beam search (`beam`).
@@ -237,8 +391,12 @@ impl DecodingMethod for Beam {
     fn uses_rounds(&self) -> bool {
         true
     }
-    fn run(&self, ctx: &RunCtx<'_>, params: &StrategyParams) -> Result<Outcome> {
-        run_beam(ctx, params, false)
+    fn start<'s>(
+        &'s self,
+        ctx: &RunCtx<'_>,
+        params: &StrategyParams,
+    ) -> Result<Box<dyn StrategyState + 's>> {
+        start_beam(ctx, params, false)
     }
 }
 
@@ -256,7 +414,11 @@ impl DecodingMethod for LatencyAwareBeam {
     fn uses_rounds(&self) -> bool {
         true
     }
-    fn run(&self, ctx: &RunCtx<'_>, params: &StrategyParams) -> Result<Outcome> {
-        run_beam(ctx, params, true)
+    fn start<'s>(
+        &'s self,
+        ctx: &RunCtx<'_>,
+        params: &StrategyParams,
+    ) -> Result<Box<dyn StrategyState + 's>> {
+        start_beam(ctx, params, true)
     }
 }

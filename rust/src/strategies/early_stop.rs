@@ -18,12 +18,19 @@
 //! existing `W/4` feature. `width <= 1` (the plain `mv_early@16` id)
 //! selects the auto default, `max(2, N/4)` — up to four vote
 //! checkpoints.
+//!
+//! Execution is a per-wave step machine: each wave is one
+//! [`StepYield::Generate`], and the budget is re-read from the step
+//! context before every wave — so a mid-flight reallocation grant
+//! (extra deadline or token budget from a request that finished early)
+//! widens what the remaining waves can spend.
 
-use crate::engine::{GenJob, GenKind};
-use crate::error::Result;
+use crate::engine::GenKind;
+use crate::error::{Error, Result};
 use crate::eval::{self, Candidate};
 use crate::strategies::method::{
-    accumulate_candidates, DecodingMethod, Outcome, RunCtx, StrategyParams,
+    accumulate_candidates, DecodingMethod, Outcome, RunCtx, StepInput, StepYield, StrategyParams,
+    StrategyState,
 };
 use std::collections::HashMap;
 
@@ -44,6 +51,123 @@ impl EarlyStopMajority {
             params.width.min(n)
         } else {
             Self::auto_wave(n)
+        }
+    }
+}
+
+/// Where the wave loop is between steps.
+enum Phase {
+    /// Ready to issue the next wave (loop head).
+    NextWave,
+    /// Waiting on the current wave's generate call.
+    Generating,
+    /// Finished.
+    Done,
+}
+
+/// Per-wave step machine for `mv_early`.
+struct MvEarlyState {
+    n: usize,
+    wave: usize,
+    prompt_ids: Vec<u32>,
+    t0: f64,
+    phase: Phase,
+    candidates: Vec<Candidate>,
+    tokens_total: usize,
+    engine_calls: usize,
+    issued: usize,
+    /// Jobs in the wave currently in flight (counted into `issued` when
+    /// the results arrive, matching the blocking loop's accounting).
+    pending_batch: usize,
+    budget_exhausted: bool,
+    preempted: bool,
+    stopped_early: bool,
+}
+
+impl MvEarlyState {
+    /// Loop head: issue the next wave, or finish if N is reached / the
+    /// budget is spent.
+    fn next_wave(&mut self, ctx: &RunCtx<'_>) -> Result<StepYield> {
+        if self.issued < self.n {
+            if ctx.budget.exhausted(self.tokens_total, ctx.now_ms() - self.t0) {
+                self.budget_exhausted = true;
+                return self.finish(ctx);
+            }
+            let batch = self.wave.min(self.n - self.issued);
+            let jobs = (0..batch)
+                .map(|_| ctx.gen_job(self.prompt_ids.clone(), GenKind::Full, self.tokens_total))
+                .collect();
+            self.pending_batch = batch;
+            self.phase = Phase::Generating;
+            return Ok(StepYield::Generate {
+                jobs,
+                deadline_ms: ctx.budget.deadline_at(self.t0),
+            });
+        }
+        self.finish(ctx)
+    }
+
+    fn finish(&mut self, ctx: &RunCtx<'_>) -> Result<StepYield> {
+        self.phase = Phase::Done;
+        let chosen_text = eval::majority_vote(&self.candidates)
+            .map(|c| c.text.clone())
+            .unwrap_or_default();
+        Ok(StepYield::Done(Outcome {
+            answer: eval::extract_answer(&chosen_text),
+            chosen: chosen_text,
+            tokens: self.tokens_total,
+            latency_ms: ctx.now_ms() - self.t0,
+            engine_calls: self.engine_calls,
+            rounds: self.engine_calls,
+            budget_exhausted: self.budget_exhausted,
+            preempted: self.preempted,
+            stopped_early: self.stopped_early,
+        }))
+    }
+}
+
+impl StrategyState for MvEarlyState {
+    fn step(&mut self, ctx: &RunCtx<'_>, input: StepInput) -> Result<StepYield> {
+        let phase = std::mem::replace(&mut self.phase, Phase::Done);
+        match (phase, input) {
+            (Phase::NextWave, StepInput::Start) => self.next_wave(ctx),
+            (Phase::Generating, StepInput::Generated(results)) => {
+                self.engine_calls += 1;
+                self.issued += self.pending_batch;
+                self.pending_batch = 0;
+                let acc = accumulate_candidates(
+                    ctx,
+                    &results,
+                    &mut self.tokens_total,
+                    &mut self.candidates,
+                )?;
+                if acc.preempted {
+                    self.preempted = true;
+                }
+                if acc.budget_hit() {
+                    self.budget_exhausted = true;
+                    return self.finish(ctx);
+                }
+                // Decided? Even if every unissued candidate voted for
+                // the runner-up, the leader would still win.
+                let mut counts: HashMap<String, usize> = HashMap::new();
+                for c in &self.candidates {
+                    if let Some(a) = eval::extract_answer(&c.text) {
+                        *counts.entry(a).or_default() += 1;
+                    }
+                }
+                let mut tallies: Vec<usize> = counts.values().copied().collect();
+                tallies.sort_unstable_by(|a, b| b.cmp(a));
+                let lead = tallies.first().copied().unwrap_or(0);
+                let second = tallies.get(1).copied().unwrap_or(0);
+                let remaining = self.n - self.issued;
+                if remaining > 0 && lead > second + remaining {
+                    self.stopped_early = true;
+                    return self.finish(ctx);
+                }
+                self.next_wave(ctx)
+            }
+            _ => Err(Error::internal("mv_early stepped with mismatched input")),
         }
     }
 }
@@ -74,74 +198,28 @@ impl DecodingMethod for EarlyStopMajority {
         }
     }
 
-    fn run(&self, ctx: &RunCtx<'_>, params: &StrategyParams) -> Result<Outcome> {
-        let t0 = ctx.now_ms();
+    fn start<'s>(
+        &'s self,
+        ctx: &RunCtx<'_>,
+        params: &StrategyParams,
+    ) -> Result<Box<dyn StrategyState + 's>> {
         let n = params.n.max(1);
-        let wave = Self::wave(params);
         let prompt = format!("{}S:", ctx.query);
-        let prompt_ids = ctx.tokenizer.encode(&prompt)?;
-
-        let mut candidates: Vec<Candidate> = Vec::with_capacity(n);
-        let mut tokens_total = 0usize;
-        let mut engine_calls = 0usize;
-        let mut budget_exhausted = false;
-        let mut preempted = false;
-        let mut stopped_early = false;
-        let mut issued = 0usize;
-
-        while issued < n {
-            if ctx.budget.exhausted(tokens_total, ctx.now_ms() - t0) {
-                budget_exhausted = true;
-                break;
-            }
-            let batch = wave.min(n - issued);
-            let jobs: Vec<GenJob> = (0..batch)
-                .map(|_| ctx.gen_job(prompt_ids.clone(), GenKind::Full, tokens_total))
-                .collect();
-            let results = ctx.generate_budgeted(jobs, t0)?;
-            engine_calls += 1;
-            issued += batch;
-            let acc = accumulate_candidates(ctx, &results, &mut tokens_total, &mut candidates)?;
-            if acc.preempted {
-                preempted = true;
-            }
-            if acc.budget_hit() {
-                budget_exhausted = true;
-                break;
-            }
-            // Decided? Even if every unissued candidate voted for the
-            // runner-up, the leader would still win.
-            let mut counts: HashMap<String, usize> = HashMap::new();
-            for c in &candidates {
-                if let Some(a) = eval::extract_answer(&c.text) {
-                    *counts.entry(a).or_default() += 1;
-                }
-            }
-            let mut tallies: Vec<usize> = counts.values().copied().collect();
-            tallies.sort_unstable_by(|a, b| b.cmp(a));
-            let lead = tallies.first().copied().unwrap_or(0);
-            let second = tallies.get(1).copied().unwrap_or(0);
-            let remaining = n - issued;
-            if remaining > 0 && lead > second + remaining {
-                stopped_early = true;
-                break;
-            }
-        }
-
-        let chosen_text = eval::majority_vote(&candidates)
-            .map(|c| c.text.clone())
-            .unwrap_or_default();
-        Ok(Outcome {
-            answer: eval::extract_answer(&chosen_text),
-            chosen: chosen_text,
-            tokens: tokens_total,
-            latency_ms: ctx.now_ms() - t0,
-            engine_calls,
-            rounds: engine_calls,
-            budget_exhausted,
-            preempted,
-            stopped_early,
-        })
+        Ok(Box::new(MvEarlyState {
+            n,
+            wave: Self::wave(params),
+            prompt_ids: ctx.tokenizer.encode(&prompt)?,
+            t0: ctx.now_ms(),
+            phase: Phase::NextWave,
+            candidates: Vec::with_capacity(n),
+            tokens_total: 0,
+            engine_calls: 0,
+            issued: 0,
+            pending_batch: 0,
+            budget_exhausted: false,
+            preempted: false,
+            stopped_early: false,
+        }))
     }
 }
 

@@ -12,13 +12,27 @@
 
 use crate::engine::EngineHandle;
 use crate::error::{Error, Result};
-use crate::strategies::method::{Budget, RunCtx};
+use crate::strategies::method::{Budget, DecodingMethod, RunCtx};
 use crate::strategies::registry;
 use crate::strategies::space::Strategy;
 use crate::tokenizer::Tokenizer;
 use crate::util::clock::SharedClock;
 
 pub use crate::strategies::method::Outcome;
+
+/// Resolve a method name against the registry, with a deterministic
+/// error: the registered-name list is sorted before formatting, so the
+/// message does not leak registration order (which varies with which
+/// tests ran [`registry::register`] first).
+pub(crate) fn resolve(name: &str) -> Result<&'static dyn DecodingMethod> {
+    registry::get(name).ok_or_else(|| {
+        let mut names: Vec<&str> = registry::all().iter().map(|m| m.name()).collect();
+        names.sort_unstable();
+        Error::Config(format!(
+            "unknown decoding method '{name}' (registered: {names:?})"
+        ))
+    })
+}
 
 /// Executes strategies; cheap to clone per worker thread.
 #[derive(Clone)]
@@ -62,14 +76,16 @@ impl Executor {
         query: &str,
         budget: Budget,
     ) -> Result<Outcome> {
-        let method = registry::get(strategy.method).ok_or_else(|| {
-            Error::Config(format!(
-                "unknown decoding method '{}' (registered: {:?})",
-                strategy.method,
-                registry::all().iter().map(|m| m.name()).collect::<Vec<_>>()
-            ))
-        })?;
-        let ctx = RunCtx {
+        let method = resolve(strategy.method)?;
+        let ctx = self.ctx(query, budget);
+        method.run(&ctx, &strategy.params())
+    }
+
+    /// Assemble the per-request execution context — the same one the
+    /// blocking path and the continuation executor
+    /// ([`crate::strategies::stepper::Stepper`]) hand to step machines.
+    pub(crate) fn ctx<'a>(&'a self, query: &'a str, budget: Budget) -> RunCtx<'a> {
+        RunCtx {
             engine: &self.engine,
             clock: &self.clock,
             tokenizer: &self.tokenizer,
@@ -78,7 +94,26 @@ impl Executor {
             beam_max_rounds: self.beam_max_rounds,
             max_prefix: self.max_prefix,
             budget,
-        };
-        method.run(&ctx, &strategy.params())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_method_error_lists_names_sorted() {
+        let err = resolve("definitely_not_registered").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("unknown decoding method 'definitely_not_registered'"));
+        // the built-in names must appear in sorted order, independent of
+        // registration order
+        let mut sorted: Vec<&str> = registry::all().iter().map(|m| m.name()).collect();
+        sorted.sort_unstable();
+        assert!(
+            msg.contains(&format!("{sorted:?}")),
+            "error message should list sorted names: {msg}"
+        );
     }
 }

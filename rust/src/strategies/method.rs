@@ -14,9 +14,18 @@
 //! path *enforce* it mid-strategy — methods must stop issuing engine
 //! work once the budget is spent, and must report what happened through
 //! [`Outcome::budget_exhausted`] / [`Outcome::stopped_early`].
+//!
+//! Methods execute as **resumable step machines** ([`StrategyState`]):
+//! [`DecodingMethod::start`] returns a machine whose [`StrategyState::step`]
+//! yields engine work ([`StepYield`]) instead of blocking on it, so the
+//! serving layer can suspend a request between rounds, coalesce many
+//! requests' rounds into shared engine calls
+//! ([`crate::strategies::stepper`]), and reallocate budget mid-flight.
+//! [`DecodingMethod::run`] is the blanket drive-to-completion adapter
+//! over the same machine (see `docs/strategies.md` for the contract).
 
 use crate::engine::{EngineHandle, GenJob, GenKind, GenResult};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::eval::Candidate;
 use crate::tokenizer::Tokenizer;
 use crate::util::clock::SharedClock;
@@ -221,9 +230,12 @@ impl RunCtx<'_> {
     /// Score CoT prefixes through the engine's coalesced PRM path:
     /// concurrent scoring requests from other workers merge with this
     /// one into shared bucket-shaped device calls (see
-    /// [`crate::engine::scheduler`]). All method PRM scoring should go
-    /// through here (or [`crate::prm::PrmClient`], which wraps the same
-    /// entry point with memoization).
+    /// [`crate::engine::scheduler`]). Step machines should express
+    /// scoring as [`StepYield::PrmScore`] instead, so the serving
+    /// layer batches it with other requests; this blocking entry point
+    /// serves the drive-to-completion adapter and blocking custom
+    /// methods. Memoize within a request where prefixes repeat across
+    /// rounds (see the beam machine's cache).
     pub fn prm_score(&self, prefixes: Vec<Vec<u32>>) -> Result<Vec<f32>> {
         self.engine.prm_score(prefixes)
     }
@@ -339,11 +351,126 @@ impl Outcome {
     }
 }
 
+/// The engine results a step machine receives at the start of a step —
+/// whatever its previous [`StepYield`] asked for.
+#[derive(Debug)]
+pub enum StepInput {
+    /// First step of a freshly started machine: no engine work has been
+    /// requested yet.
+    Start,
+    /// Results for the jobs of a previous [`StepYield::Generate`], in
+    /// job order.
+    Generated(Vec<GenResult>),
+    /// Scores for the prefixes of a previous [`StepYield::PrmScore`],
+    /// in prefix order.
+    Scored(Vec<f32>),
+}
+
+/// What a step machine needs next from the serving layer.
+#[derive(Debug)]
+pub enum StepYield {
+    /// Submit these generation jobs (per-job budget caps/cancel already
+    /// attached) under an *absolute* engine-clock deadline, and resume
+    /// the machine with [`StepInput::Generated`].
+    Generate {
+        jobs: Vec<GenJob>,
+        /// Absolute deadline for the call (the machine anchors its
+        /// budget's relative deadline at its own start time), or `None`.
+        deadline_ms: Option<f64>,
+    },
+    /// Score these CoT prefixes with the PRM and resume with
+    /// [`StepInput::Scored`].
+    PrmScore(Vec<Vec<u32>>),
+    /// The strategy finished; the machine must not be stepped again.
+    Done(Outcome),
+}
+
+/// A resumable, in-flight execution of one decoding method on one query
+/// (the continuation half of [`DecodingMethod::start`]).
+///
+/// A step machine owns all strategy-local state (candidates, beams,
+/// token accounting, PRM memoization) but issues **no** engine calls
+/// itself: every engine interaction is expressed as a [`StepYield`] and
+/// the caller delivers the results through the next [`StepInput`]. That
+/// inversion is what lets [`crate::strategies::stepper::Stepper`]
+/// multiplex many in-flight machines onto one engine — concurrent
+/// machines' yields land on the engine channel together, so the
+/// coalescing scheduler merges them into shared bucket-shaped calls.
+///
+/// Contract:
+///
+/// * `step` is called with exactly the input the previous yield asked
+///   for ([`StepInput::Start`] on the first call); anything else is an
+///   internal error.
+/// * The `ctx` passed to each step carries the *current* budget — the
+///   serving layer may have extended it between steps (mid-flight
+///   reallocation, see [`crate::router::Reallocator`]); machines must
+///   re-read it every step rather than caching limits.
+/// * After [`StepYield::Done`] the machine must not be stepped again.
+pub trait StrategyState: Send {
+    /// Advance the strategy by one step.
+    fn step(&mut self, ctx: &RunCtx<'_>, input: StepInput) -> Result<StepYield>;
+}
+
+/// Drive a step machine to completion against the blocking engine API —
+/// the run-to-completion adapter behind [`DecodingMethod::run`]. The
+/// offline paths (matrix collection, figures, warmup) go through this,
+/// so a method converted to a step machine needs no blocking
+/// implementation of its own.
+pub fn drive(ctx: &RunCtx<'_>, state: &mut (dyn StrategyState + '_)) -> Result<Outcome> {
+    let mut input = StepInput::Start;
+    loop {
+        match state.step(ctx, input)? {
+            StepYield::Generate { jobs, deadline_ms } => {
+                input = StepInput::Generated(ctx.engine.generate_with_deadline(jobs, deadline_ms)?);
+            }
+            StepYield::PrmScore(prefixes) => {
+                input = StepInput::Scored(ctx.prm_score(prefixes)?);
+            }
+            StepYield::Done(outcome) => return Ok(outcome),
+        }
+    }
+}
+
+/// Fallback step machine for methods that only implement the blocking
+/// [`DecodingMethod::run`]: a single step that executes the whole
+/// strategy (engine calls included) and yields `Done`. Such methods
+/// still work under the stepper — they just can't be suspended between
+/// rounds, so they don't coalesce across requests or receive mid-flight
+/// budget grants.
+struct BlockingAdapter<'m, M: DecodingMethod + ?Sized> {
+    method: &'m M,
+    params: StrategyParams,
+    done: bool,
+}
+
+impl<M: DecodingMethod + ?Sized> StrategyState for BlockingAdapter<'_, M> {
+    fn step(&mut self, ctx: &RunCtx<'_>, _input: StepInput) -> Result<StepYield> {
+        if self.done {
+            return Err(Error::internal("stepped a finished strategy"));
+        }
+        self.done = true;
+        Ok(StepYield::Done(self.method.run(ctx, &self.params)?))
+    }
+}
+
 /// An open-ended decoding method (paper §2.1 generalized).
 ///
 /// Implementations are registered in [`crate::strategies::registry`];
 /// see the module docs of [`crate::strategies`] for the "adding a new
 /// decoding method" walkthrough.
+///
+/// Execution comes in two equivalent shapes, and an implementation must
+/// provide **at least one** of them (each default delegates to the
+/// other, so implementing neither would recurse forever):
+///
+/// * [`DecodingMethod::start`] — the resumable shape: return a
+///   [`StrategyState`] step machine. Preferred; the serving layer can
+///   suspend/resume it between rounds and coalesce its engine work with
+///   other in-flight requests. `run` then comes for free.
+/// * [`DecodingMethod::run`] — the blocking shape: execute to
+///   completion against `ctx`. `start` then wraps it in a one-step
+///   fallback machine.
 pub trait DecodingMethod: Send + Sync {
     /// Stable registry id — also the prefix of
     /// [`crate::strategies::Strategy::id`], a cost-model key, and the
@@ -394,8 +521,29 @@ pub trait DecodingMethod: Send + Sync {
         }
     }
 
-    /// Execute on `ctx.query` under `ctx.budget`.
-    fn run(&self, ctx: &RunCtx<'_>, params: &StrategyParams) -> Result<Outcome>;
+    /// Begin a resumable execution on `ctx.query` under `ctx.budget`:
+    /// returns the strategy's step machine, anchored (time zero for the
+    /// relative deadline) at `ctx.now_ms()`. The default wraps
+    /// [`DecodingMethod::run`] in a single blocking step.
+    fn start<'s>(
+        &'s self,
+        _ctx: &RunCtx<'_>,
+        params: &StrategyParams,
+    ) -> Result<Box<dyn StrategyState + 's>> {
+        Ok(Box::new(BlockingAdapter {
+            method: self,
+            params: *params,
+            done: false,
+        }))
+    }
+
+    /// Execute on `ctx.query` under `ctx.budget`, blocking until the
+    /// outcome. The default drives [`DecodingMethod::start`]'s step
+    /// machine to completion — byte-identical results at temperature 0.
+    fn run(&self, ctx: &RunCtx<'_>, params: &StrategyParams) -> Result<Outcome> {
+        let mut state = self.start(ctx, params)?;
+        drive(ctx, state.as_mut())
+    }
 }
 
 #[cfg(test)]

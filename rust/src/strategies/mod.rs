@@ -21,6 +21,21 @@
 //! budgets are not just *predicted* by the router but *enforced* inside
 //! the strategy via the per-request [`Budget`] in [`RunCtx`].
 //!
+//! # Execution shapes: step machines and the continuation executor
+//!
+//! Every method executes as a resumable **step machine**
+//! ([`method::StrategyState`]): `DecodingMethod::start` returns a
+//! machine whose `step()` *yields* engine work (`Generate`, `PrmScore`)
+//! instead of blocking on it, and `run()` is the blanket
+//! drive-to-completion adapter over the same machine — the offline
+//! matrix/figure paths use `run()` and see identical results. The
+//! serving path instead multiplexes many machines onto one thread with
+//! the continuation executor ([`stepper::Stepper`]): concurrent
+//! requests' rounds are submitted together so the engine scheduler
+//! coalesces them, and a between-steps reallocation hook
+//! ([`crate::router::Reallocator`]) re-grants finished requests'
+//! leftover budget mid-flight. Contract details in `docs/strategies.md`.
+//!
 //! # Adding a new decoding method
 //!
 //! No edits to the router, probe features, cost model, figures or config
@@ -28,9 +43,13 @@
 //! registry by stable name:
 //!
 //! 1. Implement [`DecodingMethod`] (see `parallel.rs` for the minimal
-//!    shape, `early_stop.rs` for a multi-call method). Honor
-//!    `ctx.budget`: stop issuing engine calls once it is exhausted and
-//!    report via `Outcome::{budget_exhausted, stopped_early}`.
+//!    shape, `early_stop.rs` for a multi-wave machine, `beam.rs` for a
+//!    multi-phase one). Prefer implementing `start()` (the step-machine
+//!    shape — suspendable, coalescible, reallocation-aware); a blocking
+//!    `run()` also works and is wrapped in a one-step fallback machine.
+//!    Honor `ctx.budget` *re-reading it every step*: stop issuing
+//!    engine calls once it is exhausted and report via
+//!    `Outcome::{budget_exhausted, stopped_early}`.
 //! 2. Register it: built-ins append themselves to the table in
 //!    `registry.rs` (append-only — the order is the probe one-hot
 //!    index); external code calls
@@ -51,7 +70,11 @@ pub mod method;
 pub mod parallel;
 pub mod registry;
 pub mod space;
+pub mod stepper;
 
 pub use executor::Executor;
-pub use method::{Budget, DecodingMethod, Outcome, RunCtx, StrategyParams};
+pub use method::{
+    Budget, DecodingMethod, Outcome, RunCtx, StepInput, StepYield, StrategyParams, StrategyState,
+};
 pub use space::Strategy;
+pub use stepper::{Completion, Progress, Stepper, Ticket};

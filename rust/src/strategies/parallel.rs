@@ -9,12 +9,18 @@
 //! PRM call is skipped when the deadline has already passed — a late
 //! request degrades to an unscored pick instead of spending another
 //! engine call.
+//!
+//! Execution is a three-phase step machine (generate → optionally score
+//! → done), so the serving layer can interleave many requests' phases
+//! and coalesce their engine calls; `run()` drives the same machine to
+//! completion for the offline paths.
 
-use crate::engine::{GenJob, GenKind};
-use crate::error::Result;
+use crate::engine::GenKind;
+use crate::error::{Error, Result};
 use crate::eval::{self, Candidate};
 use crate::strategies::method::{
-    accumulate_candidates, DecodingMethod, Outcome, RunCtx, StrategyParams,
+    accumulate_candidates, DecodingMethod, Outcome, RunCtx, StepInput, StepYield, StrategyParams,
+    StrategyState,
 };
 
 const PARALLEL_ROUNDS: usize = 1;
@@ -41,72 +47,149 @@ impl Chooser {
     }
 }
 
-/// Shared runner: one batched generate + optional PRM scoring (appendix
-/// A.2: scoring time is part of latency), with budget observance.
-fn run_single_batch(
+/// Where the machine is in its generate → score → done progression.
+enum Phase {
+    /// Nothing issued yet.
+    Fresh,
+    /// Waiting on the single batched generate call.
+    Generating,
+    /// Waiting on the PRM scores for the generated candidates.
+    Scoring,
+    /// Finished — stepping again is an error.
+    Done,
+}
+
+/// Step machine shared by all single-batch parallel methods: one batched
+/// generate + optional PRM scoring (appendix A.2: scoring time is part
+/// of latency), with budget observance between and inside phases.
+struct SingleBatchState {
+    chooser: Chooser,
+    n: usize,
+    /// Strategy start on the engine clock — anchors the relative
+    /// deadline and the reported latency.
+    t0: f64,
+    phase: Phase,
+    tokens_total: usize,
+    candidates: Vec<Candidate>,
+    engine_calls: usize,
+    budget_exhausted: bool,
+    preempted: bool,
+}
+
+impl SingleBatchState {
+    fn finish(&mut self, ctx: &RunCtx<'_>) -> Result<StepYield> {
+        self.phase = Phase::Done;
+        let chosen_text = self
+            .chooser
+            .choose(&self.candidates)
+            .map(|c| c.text.clone())
+            .unwrap_or_default();
+        Ok(StepYield::Done(Outcome {
+            answer: eval::extract_answer(&chosen_text),
+            chosen: chosen_text,
+            tokens: self.tokens_total,
+            latency_ms: ctx.now_ms() - self.t0,
+            engine_calls: self.engine_calls,
+            rounds: PARALLEL_ROUNDS,
+            budget_exhausted: self.budget_exhausted,
+            preempted: self.preempted,
+            stopped_early: false,
+        }))
+    }
+}
+
+impl StrategyState for SingleBatchState {
+    fn step(&mut self, ctx: &RunCtx<'_>, input: StepInput) -> Result<StepYield> {
+        // Take the phase out; every arm that continues writes the next
+        // phase back, so a mismatched input leaves the machine poisoned
+        // as Done.
+        let phase = std::mem::replace(&mut self.phase, Phase::Done);
+        match (phase, input) {
+            (Phase::Fresh, StepInput::Start) => {
+                if ctx.budget.exhausted(0, ctx.now_ms() - self.t0) {
+                    self.phase = Phase::Done;
+                    return Ok(StepYield::Done(Outcome::empty(ctx.now_ms() - self.t0)));
+                }
+                let prompt = format!("{}S:", ctx.query);
+                let prompt_ids = ctx.tokenizer.encode(&prompt)?;
+                // budgeted jobs: per-job token cap + shared cancel flag,
+                // plus the absolute deadline on the call — the engine
+                // preempts mid-decode
+                let jobs = (0..self.n)
+                    .map(|_| ctx.gen_job(prompt_ids.clone(), GenKind::Full, 0))
+                    .collect();
+                self.phase = Phase::Generating;
+                Ok(StepYield::Generate {
+                    jobs,
+                    deadline_ms: ctx.budget.deadline_at(self.t0),
+                })
+            }
+            (Phase::Generating, StepInput::Generated(results)) => {
+                self.engine_calls = 1;
+                let acc = accumulate_candidates(
+                    ctx,
+                    &results,
+                    &mut self.tokens_total,
+                    &mut self.candidates,
+                )?;
+                self.budget_exhausted = acc.budget_hit();
+                self.preempted = acc.preempted;
+                if self.chooser.needs_prm() && !self.candidates.is_empty() {
+                    if self.budget_exhausted
+                        || ctx.budget.deadline_passed(ctx.now_ms() - self.t0)
+                        || ctx.budget.cancelled()
+                    {
+                        // No further engine calls once the budget is
+                        // spent (token cap, deadline or cancellation);
+                        // the chooser falls back to the first parseable
+                        // candidate.
+                        self.budget_exhausted = true;
+                    } else {
+                        let prefixes: Vec<Vec<u32>> = self
+                            .candidates
+                            .iter()
+                            .map(|c| ctx.tokenizer.encode(&format!("{}{}", ctx.query, c.text)))
+                            .collect::<Result<_>>()?;
+                        // the engine's scheduler coalesces this with
+                        // concurrent requests' scoring into shared
+                        // bucket-shaped calls
+                        self.phase = Phase::Scoring;
+                        return Ok(StepYield::PrmScore(prefixes));
+                    }
+                }
+                self.finish(ctx)
+            }
+            (Phase::Scoring, StepInput::Scored(scores)) => {
+                self.engine_calls += 1;
+                for (c, s) in self.candidates.iter_mut().zip(scores) {
+                    c.score = s as f64;
+                }
+                self.finish(ctx)
+            }
+            _ => Err(Error::internal(
+                "single-batch strategy stepped with mismatched input",
+            )),
+        }
+    }
+}
+
+/// Shared `start` for the three choosers.
+fn start_single_batch(
     ctx: &RunCtx<'_>,
     params: &StrategyParams,
     chooser: Chooser,
-) -> Result<Outcome> {
-    let t0 = ctx.now_ms();
-    if ctx.budget.exhausted(0, 0.0) {
-        return Ok(Outcome::empty(ctx.now_ms() - t0));
-    }
-    let n = params.n.max(1);
-    let prompt = format!("{}S:", ctx.query);
-    let prompt_ids = ctx.tokenizer.encode(&prompt)?;
-    // budgeted jobs: per-job token cap + shared cancel flag, plus the
-    // absolute deadline on the call — the engine preempts mid-decode
-    let jobs: Vec<GenJob> = (0..n)
-        .map(|_| ctx.gen_job(prompt_ids.clone(), GenKind::Full, 0))
-        .collect();
-    let results = ctx.generate_budgeted(jobs, t0)?;
-    let mut engine_calls = 1usize;
-
-    let mut tokens_total = 0usize;
-    let mut candidates: Vec<Candidate> = Vec::with_capacity(results.len());
-    let acc = accumulate_candidates(ctx, &results, &mut tokens_total, &mut candidates)?;
-    let mut budget_exhausted = acc.budget_hit();
-
-    if chooser.needs_prm() && !candidates.is_empty() {
-        if budget_exhausted
-            || ctx.budget.deadline_passed(ctx.now_ms() - t0)
-            || ctx.budget.cancelled()
-        {
-            // No further engine calls once the budget is spent (token
-            // cap, deadline or cancellation); the chooser falls back to
-            // the first parseable candidate.
-            budget_exhausted = true;
-        } else {
-            let prefixes: Vec<Vec<u32>> = candidates
-                .iter()
-                .map(|c| ctx.tokenizer.encode(&format!("{}{}", ctx.query, c.text)))
-                .collect::<Result<_>>()?;
-            // the engine's scheduler coalesces this with concurrent
-            // workers' scoring into shared bucket-shaped calls
-            let scores = ctx.prm_score(prefixes)?;
-            engine_calls += 1;
-            for (c, s) in candidates.iter_mut().zip(scores) {
-                c.score = s as f64;
-            }
-        }
-    }
-
-    let chosen_text = chooser
-        .choose(&candidates)
-        .map(|c| c.text.clone())
-        .unwrap_or_default();
-    Ok(Outcome {
-        answer: eval::extract_answer(&chosen_text),
-        chosen: chosen_text,
-        tokens: tokens_total,
-        latency_ms: ctx.now_ms() - t0,
-        engine_calls,
-        rounds: PARALLEL_ROUNDS,
-        budget_exhausted,
-        preempted: acc.preempted,
-        stopped_early: false,
-    })
+) -> Result<Box<dyn StrategyState>> {
+    Ok(Box::new(SingleBatchState {
+        chooser,
+        n: params.n.max(1),
+        t0: ctx.now_ms(),
+        phase: Phase::Fresh,
+        tokens_total: 0,
+        candidates: Vec::new(),
+        engine_calls: 0,
+        budget_exhausted: false,
+        preempted: false,
+    }))
 }
 
 /// N parallel candidates, most frequent answer (paper §2.1 "Majority").
@@ -119,8 +202,12 @@ impl DecodingMethod for MajorityVote {
     fn describe(&self) -> &'static str {
         "N parallel candidates, most frequent extracted answer"
     }
-    fn run(&self, ctx: &RunCtx<'_>, params: &StrategyParams) -> Result<Outcome> {
-        run_single_batch(ctx, params, Chooser::Majority)
+    fn start<'s>(
+        &'s self,
+        ctx: &RunCtx<'_>,
+        params: &StrategyParams,
+    ) -> Result<Box<dyn StrategyState + 's>> {
+        start_single_batch(ctx, params, Chooser::Majority)
     }
 }
 
@@ -134,8 +221,12 @@ impl DecodingMethod for BestOfNNaive {
     fn describe(&self) -> &'static str {
         "N parallel candidates, single highest PRM score wins"
     }
-    fn run(&self, ctx: &RunCtx<'_>, params: &StrategyParams) -> Result<Outcome> {
-        run_single_batch(ctx, params, Chooser::BestNaive)
+    fn start<'s>(
+        &'s self,
+        ctx: &RunCtx<'_>,
+        params: &StrategyParams,
+    ) -> Result<Box<dyn StrategyState + 's>> {
+        start_single_batch(ctx, params, Chooser::BestNaive)
     }
 }
 
@@ -150,7 +241,11 @@ impl DecodingMethod for BestOfNWeighted {
     fn describe(&self) -> &'static str {
         "N parallel candidates, PRM scores summed per identical answer"
     }
-    fn run(&self, ctx: &RunCtx<'_>, params: &StrategyParams) -> Result<Outcome> {
-        run_single_batch(ctx, params, Chooser::BestWeighted)
+    fn start<'s>(
+        &'s self,
+        ctx: &RunCtx<'_>,
+        params: &StrategyParams,
+    ) -> Result<Box<dyn StrategyState + 's>> {
+        start_single_batch(ctx, params, Chooser::BestWeighted)
     }
 }

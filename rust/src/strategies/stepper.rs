@@ -1,0 +1,561 @@
+//! The continuation executor: many in-flight step machines, one thread.
+//!
+//! The blocking serving shape (PR 1–3) pinned every request to a driver
+//! worker thread that sat inside `DecodingMethod::run` until the
+//! strategy finished — so the engine's coalescing scheduler could only
+//! merge work that happened to be concurrently in flight across
+//! threads, and concurrency was capped by thread count. The [`Stepper`]
+//! replaces that with continuations: each request is a
+//! [`StrategyState`] machine, and one event loop
+//!
+//! 1. **advances** every machine whose input is ready, *submitting* the
+//!    engine work it yields without blocking
+//!    ([`crate::engine::EngineHandle::submit_generate`] /
+//!    `submit_prm_score`) — all
+//!    runnable machines' submissions land on the engine channel before
+//!    anyone waits, so the scheduler drains them into one coalescing
+//!    round (N concurrent beam requests' round-k expansions become
+//!    shared bucket-shaped calls);
+//! 2. **blocks** for the oldest outstanding reply only when nothing is
+//!    runnable, then harvests every other reply that has also arrived;
+//! 3. on completion, runs the between-steps [`Reallocator`] hook: the
+//!    finished request's leftover budget (deadline headroom, unspent
+//!    token cap) is granted to still-running machines by extending
+//!    their budgets — machines re-read `ctx.budget` every step, so a
+//!    grant takes effect at the next loop head (an extended beam
+//!    deadline fits more rounds, a raised token cap widens what the
+//!    remaining `mv_early` waves may keep).
+//!
+//! Errors are request-fatal and stepper-fatal: the serving layers above
+//! treat any strategy error as a failed run (same contract as the
+//! blocking driver), so [`Stepper::advance`] propagates the first one.
+
+use crate::engine::PendingReply;
+use crate::error::Result;
+use crate::metrics::StepperMetrics;
+use crate::router::{FinishedRequest, Reallocator, RunningView};
+use crate::strategies::executor::{resolve, Executor};
+use crate::strategies::method::{Budget, Outcome, StepInput, StepYield, StrategyState};
+use crate::strategies::space::Strategy;
+use std::time::Duration;
+
+/// One request handed to the stepper.
+pub struct Ticket {
+    /// Full query text (incl. the trailing `\n`).
+    pub query: String,
+    pub strategy: Strategy,
+    pub budget: Budget,
+    /// Caller correlation id, returned on the [`Completion`].
+    pub tag: u64,
+}
+
+/// A finished request.
+#[derive(Debug)]
+pub struct Completion {
+    pub tag: u64,
+    /// Pre-rendered strategy id (rendering consults the registry; done
+    /// once at admission, not per completion consumer).
+    pub strategy_id: String,
+    pub outcome: Outcome,
+}
+
+/// What [`Stepper::advance`] accomplished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Progress {
+    /// No machines in flight — admit work or stop.
+    Idle,
+    /// At least one machine stepped or became runnable.
+    Stepped,
+    /// Waited `wait` without any reply arriving (lets the caller admit
+    /// newly arrived requests on time).
+    TimedOut,
+}
+
+/// What a machine is waiting on between steps.
+enum Waiting {
+    /// Input ready — runnable on the next advance.
+    Ready(StepInput),
+    /// A generate call is in flight.
+    Generate(PendingReply<Vec<crate::engine::GenResult>>),
+    /// A PRM scoring call is in flight.
+    Score(PendingReply<Vec<f32>>),
+}
+
+/// One in-flight request: its machine plus everything needed to rebuild
+/// the step context (the query is owned here; the budget is owned here
+/// *so the reallocation hook can extend it between steps*).
+struct Active {
+    tag: u64,
+    query: String,
+    strategy_id: String,
+    budget: Budget,
+    /// Admission time on the engine clock — elapsed/leftover accounting
+    /// for reallocation.
+    t0: f64,
+    state: Box<dyn StrategyState>,
+    waiting: Waiting,
+}
+
+/// Multiplexes many in-flight [`StrategyState`] machines onto one
+/// engine. Single-threaded by design: strategy-side compute between
+/// yields (voting, tokenizing, selection) is microseconds against
+/// engine calls, so one pump thread drives arbitrarily many requests.
+pub struct Stepper {
+    executor: Executor,
+    reallocator: Option<Box<dyn Reallocator>>,
+    pub metrics: StepperMetrics,
+    active: Vec<Active>,
+    done: Vec<Completion>,
+}
+
+impl Stepper {
+    pub fn new(executor: Executor) -> Stepper {
+        Stepper {
+            executor,
+            reallocator: None,
+            metrics: StepperMetrics::new(),
+            active: Vec::new(),
+            done: Vec::new(),
+        }
+    }
+
+    /// Install a between-steps budget reallocation policy (e.g.
+    /// [`crate::router::EvenShareReallocator`]).
+    pub fn with_reallocator(mut self, reallocator: Box<dyn Reallocator>) -> Stepper {
+        self.reallocator = Some(reallocator);
+        self
+    }
+
+    /// Requests currently in flight.
+    pub fn in_flight(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Take every completion recorded since the last drain.
+    pub fn drain_completed(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.done)
+    }
+
+    /// Admit one request: start its step machine (anchored at the
+    /// current engine-clock time) and mark it runnable. The machine
+    /// issues no engine work until the next [`Stepper::advance`].
+    pub fn admit(&mut self, ticket: Ticket) -> Result<()> {
+        let method = resolve(ticket.strategy.method)?;
+        let strategy_id = ticket.strategy.id();
+        let params = ticket.strategy.params();
+        let t0 = self.executor.clock.now_ms();
+        let state = {
+            let ctx = self.executor.ctx(&ticket.query, ticket.budget.clone());
+            method.start(&ctx, &params)?
+        };
+        self.metrics.machines_admitted.inc();
+        self.active.push(Active {
+            tag: ticket.tag,
+            query: ticket.query,
+            strategy_id,
+            budget: ticket.budget,
+            t0,
+            state,
+            waiting: Waiting::Ready(StepInput::Start),
+        });
+        Ok(())
+    }
+
+    /// One scheduling round: step every runnable machine (submitting
+    /// yielded engine work without blocking), and if none was runnable,
+    /// block up to `wait` for the oldest outstanding engine reply.
+    pub fn advance(&mut self, wait: Option<Duration>) -> Result<Progress> {
+        if self.active.is_empty() {
+            return Ok(Progress::Idle);
+        }
+        let mut stepped = false;
+        let mut i = 0;
+        while i < self.active.len() {
+            if !matches!(self.active[i].waiting, Waiting::Ready(_)) {
+                i += 1;
+                continue;
+            }
+            let input = match std::mem::replace(
+                &mut self.active[i].waiting,
+                Waiting::Ready(StepInput::Start),
+            ) {
+                Waiting::Ready(input) => input,
+                _ => unreachable!("checked Ready above"),
+            };
+            stepped = true;
+            self.metrics.steps.inc();
+            let yielded = {
+                let m = &mut self.active[i];
+                let ctx = self.executor.ctx(&m.query, m.budget.clone());
+                m.state.step(&ctx, input)?
+            };
+            match yielded {
+                StepYield::Generate { jobs, deadline_ms } => {
+                    let reply = self.executor.engine.submit_generate(jobs, deadline_ms)?;
+                    self.metrics.engine_submits.inc();
+                    self.active[i].waiting = Waiting::Generate(reply);
+                    i += 1;
+                }
+                StepYield::PrmScore(prefixes) => {
+                    let reply = self.executor.engine.submit_prm_score(prefixes)?;
+                    self.metrics.engine_submits.inc();
+                    self.active[i].waiting = Waiting::Score(reply);
+                    i += 1;
+                }
+                StepYield::Done(outcome) => {
+                    // swap_remove: the machine that took this slot gets
+                    // revisited because `i` does not advance
+                    let m = self.active.swap_remove(i);
+                    self.metrics.machines_completed.inc();
+                    self.reallocate_on_finish(&m, &outcome);
+                    self.done.push(Completion {
+                        tag: m.tag,
+                        strategy_id: m.strategy_id,
+                        outcome,
+                    });
+                }
+            }
+        }
+        if stepped {
+            return Ok(Progress::Stepped);
+        }
+        if self.active.is_empty() {
+            return Ok(Progress::Idle);
+        }
+
+        // Nothing runnable: poll every in-flight reply first, so one
+        // slow call in slot 0 never head-of-line-blocks machines whose
+        // replies already arrived…
+        if self.harvest_replies()? {
+            return Ok(Progress::Stepped);
+        }
+        // …and only then block for slot 0's reply.
+        let ready = match &self.active[0].waiting {
+            Waiting::Generate(reply) => reply
+                .wait_timeout(wait)
+                .map(|r| r.map(StepInput::Generated)),
+            Waiting::Score(reply) => reply.wait_timeout(wait).map(|r| r.map(StepInput::Scored)),
+            Waiting::Ready(_) => unreachable!("no machine was runnable"),
+        };
+        match ready {
+            None => {
+                // Replies may have landed on other machines while we
+                // waited — a timeout must still make their progress.
+                if self.harvest_replies()? {
+                    return Ok(Progress::Stepped);
+                }
+                return Ok(Progress::TimedOut);
+            }
+            Some(input) => self.active[0].waiting = Waiting::Ready(input?),
+        }
+        // Harvest every other reply that has also arrived, so the next
+        // sweep advances as many machines as possible together (their
+        // follow-up submissions coalesce).
+        self.harvest_replies()?;
+        Ok(Progress::Stepped)
+    }
+
+    /// Non-blocking pass over every in-flight machine, turning arrived
+    /// replies into runnable inputs. Returns whether any machine became
+    /// runnable.
+    fn harvest_replies(&mut self) -> Result<bool> {
+        let mut any = false;
+        for m in self.active.iter_mut() {
+            let harvested = match &m.waiting {
+                Waiting::Generate(reply) => {
+                    reply.try_wait().map(|r| r.map(StepInput::Generated))
+                }
+                Waiting::Score(reply) => reply.try_wait().map(|r| r.map(StepInput::Scored)),
+                Waiting::Ready(_) => None,
+            };
+            if let Some(input) = harvested {
+                m.waiting = Waiting::Ready(input?);
+                any = true;
+            }
+        }
+        Ok(any)
+    }
+
+    /// Pump until every admitted machine has completed.
+    pub fn run_to_completion(&mut self) -> Result<()> {
+        while self.advance(None)? != Progress::Idle {}
+        Ok(())
+    }
+
+    /// The between-steps reallocation hook: compute what the finished
+    /// request left on the table and let the policy grant it to the
+    /// still-running machines. Grants only ever *extend* limits a
+    /// machine already has (the [`crate::router::Grant`] contract).
+    fn reallocate_on_finish(&mut self, finished: &Active, outcome: &Outcome) {
+        let Some(reallocator) = self.reallocator.as_mut() else {
+            return;
+        };
+        if self.active.is_empty() {
+            return;
+        }
+        let now = self.executor.clock.now_ms();
+        let leftover_ms = match finished.budget.deadline_ms {
+            Some(d) => (finished.t0 + d - now).max(0.0),
+            None => 0.0,
+        };
+        let leftover_tokens = finished
+            .budget
+            .max_tokens
+            .map_or(0, |cap| cap.saturating_sub(outcome.tokens));
+        if leftover_ms <= 0.0 && leftover_tokens == 0 {
+            return;
+        }
+        let running: Vec<RunningView<'_>> = self
+            .active
+            .iter()
+            .map(|m| RunningView {
+                strategy_id: &m.strategy_id,
+                budget: &m.budget,
+                elapsed_ms: now - m.t0,
+            })
+            .collect();
+        let grants = reallocator.reallocate(
+            &FinishedRequest {
+                strategy_id: &finished.strategy_id,
+                leftover_ms,
+                leftover_tokens,
+            },
+            &running,
+        );
+        drop(running);
+        let mut any = false;
+        for (m, g) in self.active.iter_mut().zip(grants) {
+            let mut granted = false;
+            if g.extra_ms > 0.0 {
+                if let Some(d) = m.budget.deadline_ms {
+                    m.budget.deadline_ms = Some(d + g.extra_ms);
+                    self.metrics.realloc_us_granted.add((g.extra_ms * 1e3) as u64);
+                    granted = true;
+                }
+            }
+            if g.extra_tokens > 0 {
+                if let Some(cap) = m.budget.max_tokens {
+                    m.budget.max_tokens = Some(cap + g.extra_tokens);
+                    self.metrics
+                        .realloc_tokens_granted
+                        .add(g.extra_tokens as u64);
+                    granted = true;
+                }
+            }
+            if granted {
+                self.metrics.realloc_grants.inc();
+                any = true;
+            }
+        }
+        if any {
+            self.metrics.realloc_events.inc();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Machine-level tests that need no engine: step machines never
+    //! touch `ctx.engine` directly (work is expressed as yields), so a
+    //! disconnected handle plus synthetic `GenResult`s drive every
+    //! phase transition deterministically.
+
+    use super::*;
+    use crate::engine::{EngineHandle, GenResult};
+    use crate::strategies::method::StrategyParams;
+    use crate::tokenizer::Tokenizer;
+    use crate::util::clock;
+
+    fn harness() -> Executor {
+        Executor::new(EngineHandle::disconnected(), clock::sim_clock(), 0.0)
+    }
+
+    fn gen_result(tok: &Tokenizer, text: &str) -> GenResult {
+        GenResult {
+            tokens: tok.encode(text).unwrap(),
+            call_ms: 1.0,
+            batch_size: 1,
+            preempted: false,
+        }
+    }
+
+    /// Drive one machine by hand, answering Generate yields with
+    /// `answers` in order; panics if the machine wants more scoring
+    /// rounds than `scores` provides.
+    fn drive_with(
+        executor: &Executor,
+        strategy: &Strategy,
+        budget: Budget,
+        answers: &mut dyn Iterator<Item = Vec<GenResult>>,
+        scores: &mut dyn Iterator<Item = Vec<f32>>,
+    ) -> Outcome {
+        let query = "Q:1+2=?\n";
+        let ctx = executor.ctx(query, budget);
+        let method = resolve(strategy.method).unwrap();
+        let mut state = method.start(&ctx, &strategy.params()).unwrap();
+        let mut input = StepInput::Start;
+        loop {
+            match state.step(&ctx, input).unwrap() {
+                StepYield::Generate { jobs, .. } => {
+                    let batch = answers.next().expect("machine wanted another wave");
+                    assert_eq!(jobs.len(), batch.len(), "job/result count mismatch");
+                    input = StepInput::Generated(batch);
+                }
+                StepYield::PrmScore(prefixes) => {
+                    let s = scores.next().expect("machine wanted scores");
+                    assert_eq!(prefixes.len(), s.len());
+                    input = StepInput::Scored(s);
+                }
+                StepYield::Done(outcome) => return outcome,
+            }
+        }
+    }
+
+    #[test]
+    fn majority_vote_machine_generates_then_finishes() {
+        let ex = harness();
+        let tok = Tokenizer::new();
+        let mut answers =
+            std::iter::once(vec![gen_result(&tok, "1+2=3;A:3\n"), gen_result(&tok, "1+2=3;A:3\n")]);
+        let mut scores = std::iter::empty::<Vec<f32>>();
+        let o = drive_with(
+            &ex,
+            &Strategy::mv(2),
+            Budget::unlimited(),
+            &mut answers,
+            &mut scores,
+        );
+        assert_eq!(o.answer.as_deref(), Some("3"));
+        assert_eq!(o.engine_calls, 1);
+        assert_eq!(o.rounds, 1);
+        assert!(!o.budget_exhausted && !o.preempted && !o.stopped_early);
+        assert!(o.tokens > 0);
+    }
+
+    #[test]
+    fn bon_machine_yields_prm_and_uses_scores() {
+        let ex = harness();
+        let tok = Tokenizer::new();
+        let mut answers =
+            std::iter::once(vec![gen_result(&tok, "1+2=4;A:4\n"), gen_result(&tok, "1+2=3;A:3\n")]);
+        // second candidate scores higher → wins
+        let mut scores = std::iter::once(vec![0.1f32, 0.9]);
+        let o = drive_with(
+            &ex,
+            &Strategy::bon_naive(2),
+            Budget::unlimited(),
+            &mut answers,
+            &mut scores,
+        );
+        assert_eq!(o.answer.as_deref(), Some("3"));
+        assert_eq!(o.engine_calls, 2);
+    }
+
+    #[test]
+    fn mv_early_machine_stops_when_wave_margin_decides() {
+        let ex = harness();
+        let tok = Tokenizer::new();
+        // N=8, wave=2 → the first wave's 2-0 margin cannot be beaten
+        // only when lead > second + remaining; with 6 remaining it can,
+        // so feed three unanimous waves: after wave 3 lead=6 > 0 + 2.
+        let wave = || vec![gen_result(&tok, "1+2=3;A:3\n"), gen_result(&tok, "1+2=3;A:3\n")];
+        let mut answers = vec![wave(), wave(), wave()].into_iter();
+        let mut scores = std::iter::empty::<Vec<f32>>();
+        let o = drive_with(
+            &ex,
+            &Strategy::mv_early_wave(8, 2),
+            Budget::unlimited(),
+            &mut answers,
+            &mut scores,
+        );
+        assert!(o.stopped_early, "unanimous waves must stop early");
+        assert_eq!(o.engine_calls, 3);
+        assert_eq!(o.rounds, 3);
+        assert_eq!(o.answer.as_deref(), Some("3"));
+        assert!(answers.next().is_none(), "no fourth wave issued");
+    }
+
+    #[test]
+    fn mv_early_machine_token_cap_reports_budget() {
+        let ex = harness();
+        let tok = Tokenizer::new();
+        let mut answers = std::iter::once(vec![
+            gen_result(&tok, "1+2=3;A:3\n"),
+            gen_result(&tok, "1+2=3;A:3\n"),
+        ]);
+        let mut scores = std::iter::empty::<Vec<f32>>();
+        let o = drive_with(
+            &ex,
+            &Strategy::mv_early_wave(8, 2),
+            Budget::unlimited().with_max_tokens(3),
+            &mut answers,
+            &mut scores,
+        );
+        assert!(o.budget_exhausted);
+        assert!(o.tokens <= 3, "token accounting capped: {}", o.tokens);
+    }
+
+    #[test]
+    fn beam_machine_rounds_and_prm_memoization() {
+        let ex = harness();
+        let tok = Tokenizer::new();
+        // Round 0: N·W = 2 expansion jobs for the root; both end with
+        // '\n' so every beam is done after one round → round 1 issues
+        // no jobs and the machine finishes.
+        let mut answers = std::iter::once(vec![
+            gen_result(&tok, "1+2=3;A:3\n"),
+            gen_result(&tok, "1+2=3;A:3\n"),
+        ]);
+        let mut scores = std::iter::once(vec![0.7f32, 0.6]);
+        let o = drive_with(
+            &ex,
+            &Strategy::beam(2, 1, 12),
+            Budget::unlimited(),
+            &mut answers,
+            &mut scores,
+        );
+        assert_eq!(o.answer.as_deref(), Some("3"));
+        assert_eq!(o.rounds, 1);
+        // one generate + one scoring pass
+        assert_eq!(o.engine_calls, 2);
+        assert!(!o.budget_exhausted);
+    }
+
+    #[test]
+    fn finished_machine_errors_on_extra_step() {
+        let ex = harness();
+        let ctx = ex.ctx("Q:1+2=?\n", Budget::unlimited());
+        let method = resolve("majority_vote").unwrap();
+        let mut state = method.start(&ctx, &StrategyParams::parallel(1)).unwrap();
+        let tok = Tokenizer::new();
+        let y = state.step(&ctx, StepInput::Start).unwrap();
+        let y = match y {
+            StepYield::Generate { .. } => state
+                .step(
+                    &ctx,
+                    StepInput::Generated(vec![gen_result(&tok, "1+2=3;A:3\n")]),
+                )
+                .unwrap(),
+            other => panic!("expected Generate, got {other:?}"),
+        };
+        assert!(matches!(y, StepYield::Done(_)));
+        assert!(state.step(&ctx, StepInput::Start).is_err());
+    }
+
+    #[test]
+    fn spent_budget_yields_empty_outcome_without_engine_work() {
+        let ex = harness();
+        let mut answers = std::iter::empty::<Vec<GenResult>>();
+        let mut scores = std::iter::empty::<Vec<f32>>();
+        let o = drive_with(
+            &ex,
+            &Strategy::mv(4),
+            Budget::unlimited().with_max_tokens(0),
+            &mut answers,
+            &mut scores,
+        );
+        assert!(o.budget_exhausted);
+        assert_eq!(o.tokens, 0);
+        assert_eq!(o.engine_calls, 0);
+    }
+}

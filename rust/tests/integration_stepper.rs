@@ -1,0 +1,175 @@
+//! The continuation executor end-to-end: driving any registered method
+//! through `StrategyState::step()` to completion must yield the same
+//! `Outcome` as the legacy blocking `run()` path (temperature 0, sim
+//! clock ⇒ deterministic), and multiplexing concurrent beam requests
+//! through one stepper must coalesce their expansion rounds on the
+//! engine and reallocate leftover budget when a request finishes early
+//! under a shared deadline pool. Needs `make artifacts`; skips
+//! otherwise.
+
+use ttc::config::Config;
+use ttc::engine::Engine;
+use ttc::router::EvenShareReallocator;
+use ttc::strategies::stepper::{Stepper, Ticket};
+use ttc::strategies::{registry, Budget, Executor, Strategy, StrategyParams};
+use ttc::util::rng::Rng;
+
+fn setup() -> Option<(Engine, Executor)> {
+    let mut cfg = Config::default();
+    if !cfg.paths.artifacts.join("hlo_index.json").exists() {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    cfg.engine.sim_clock = true; // deterministic timing
+    let engine = Engine::start(&cfg).unwrap();
+    // temperature 0: generation is a pure function of the prompt, so
+    // the blocking and stepped paths decode identically
+    let executor = Executor::new(engine.handle(), engine.clock.clone(), 0.0);
+    Some((engine, executor))
+}
+
+fn assert_outcomes_equal(
+    blocking: &ttc::strategies::Outcome,
+    stepped: &ttc::strategies::Outcome,
+    label: &str,
+) {
+    assert_eq!(blocking.answer, stepped.answer, "{label}: answer diverged");
+    assert_eq!(blocking.chosen, stepped.chosen, "{label}: chosen diverged");
+    assert_eq!(blocking.tokens, stepped.tokens, "{label}: tokens diverged");
+    assert_eq!(
+        blocking.engine_calls, stepped.engine_calls,
+        "{label}: engine calls diverged"
+    );
+    assert_eq!(blocking.rounds, stepped.rounds, "{label}: rounds diverged");
+    assert_eq!(
+        blocking.budget_exhausted, stepped.budget_exhausted,
+        "{label}: budget_exhausted diverged"
+    );
+    assert_eq!(
+        blocking.preempted, stepped.preempted,
+        "{label}: preempted diverged"
+    );
+    assert_eq!(
+        blocking.stopped_early, stepped.stopped_early,
+        "{label}: stopped_early diverged"
+    );
+}
+
+/// Property (per method, random params × budgets): stepping a single
+/// machine through the stepper equals the blocking `run()` path.
+#[test]
+fn stepped_equals_blocking_for_every_method() {
+    let Some((_engine, executor)) = setup() else {
+        return;
+    };
+    let mut rng = Rng::new(0xC0FFEE, 7);
+    for method in registry::all() {
+        for case in 0..3 {
+            let params = if method.uses_rounds() {
+                StrategyParams::beam(
+                    rng.range(1, 4) as usize,
+                    rng.range(1, 3) as usize,
+                    rng.range(6, 16) as usize,
+                )
+            } else {
+                StrategyParams::parallel(rng.range(1, 6) as usize)
+            };
+            let budget = match case {
+                0 => Budget::unlimited(),
+                1 => Budget::unlimited().with_max_tokens(rng.range(4, 64) as usize),
+                // generous deadline: exercises the deadline plumbing
+                // without depending on preemption timing
+                _ => Budget::unlimited().with_deadline_ms(60_000.0),
+            };
+            let strategy = Strategy::new(method.name(), params);
+            let query = format!("Q:7+{}-2+8=?\n", rng.range(0, 9));
+            let blocking = executor
+                .run_budgeted(&strategy, &query, budget.clone())
+                .unwrap();
+
+            let mut stepper = Stepper::new(executor.clone());
+            stepper
+                .admit(Ticket {
+                    query: query.clone(),
+                    strategy: strategy.clone(),
+                    budget,
+                    tag: 0,
+                })
+                .unwrap();
+            stepper.run_to_completion().unwrap();
+            let mut done = stepper.drain_completed();
+            assert_eq!(done.len(), 1);
+            let completion = done.pop().unwrap();
+            assert_eq!(completion.strategy_id, strategy.id());
+            assert_outcomes_equal(
+                &blocking,
+                &completion.outcome,
+                &format!("{} case {case}", strategy.id()),
+            );
+        }
+    }
+}
+
+/// Four concurrent beam requests through one stepper: their round-k
+/// expansions coalesce on the engine (`coalesced_generates > 0`), and
+/// when one finishes early under a shared deadline pool, its leftover
+/// deadline is granted to the still-running machines.
+#[test]
+fn concurrent_beams_coalesce_and_reallocate() {
+    let Some((engine, executor)) = setup() else {
+        return;
+    };
+    // Measure one beam run to size a deadline every request meets with
+    // headroom — leftover budget is the reallocation pool.
+    let strategy = Strategy::beam(2, 2, 12);
+    let natural = executor.run(&strategy, "Q:7+0-2+8=?\n").unwrap();
+    assert!(natural.latency_ms > 0.0);
+    let deadline_ms = 50.0 * natural.latency_ms;
+
+    let before = engine.metrics.coalesced_generates.get();
+    let mut stepper =
+        Stepper::new(executor.clone()).with_reallocator(Box::new(EvenShareReallocator));
+    for i in 0..4u64 {
+        stepper
+            .admit(Ticket {
+                query: format!("Q:7+{i}-2+8=?\n"),
+                strategy: strategy.clone(),
+                budget: Budget::unlimited().with_deadline_ms(deadline_ms),
+                tag: i,
+            })
+            .unwrap();
+    }
+    stepper.run_to_completion().unwrap();
+    let done = stepper.drain_completed();
+    assert_eq!(done.len(), 4);
+    for c in &done {
+        assert!(
+            !c.outcome.budget_exhausted,
+            "deadline was sized with headroom; request {} hit it",
+            c.tag
+        );
+    }
+
+    // Expansion rounds from different machines merged into shared
+    // engine rounds at least once across the run.
+    let coalesced = engine.metrics.coalesced_generates.get() - before;
+    eprintln!(
+        "stepper: coalesced_generates={coalesced} steps={} submits={}",
+        stepper.metrics.steps.get(),
+        stepper.metrics.engine_submits.get()
+    );
+    assert!(
+        coalesced > 0,
+        "4 concurrent beam requests should coalesce at least one generate"
+    );
+
+    // Requests finished at different times under the shared deadline
+    // pool, so early finishers' leftover deadline was granted to the
+    // machines still running.
+    assert!(
+        stepper.metrics.realloc_grants.get() > 0,
+        "an early finisher with deadline headroom must produce a grant"
+    );
+    assert!(stepper.metrics.realloc_ms_granted() > 0.0);
+    assert!(stepper.metrics.realloc_events.get() >= 1);
+}

@@ -131,5 +131,19 @@ for name, ceil in base.get("stat_ceilings", {}).items():
         failed = True
     print(f"{'OK' if ok else 'FAIL'}: stat {name} = {got:.4g} (ceiling {ceil})")
 
+# stat floors: behaviors that must keep HAPPENING, not just stay cheap —
+# e.g. the stepped concurrent beam workload must actually coalesce
+# expansion rounds (stepper_coalesced_generates > 0). Floors skip like
+# ceilings when the stat is absent (engine benches without artifacts).
+for name, floor in base.get("stat_floors", {}).items():
+    got = stats.get(name)
+    if got is None:
+        print(f"SKIP: stat '{name}' not in this run (no artifacts?)")
+        continue
+    ok = got >= float(floor)
+    if not ok:
+        failed = True
+    print(f"{'OK' if ok else 'FAIL'}: stat {name} = {got:.4g} (floor {floor})")
+
 sys.exit(1 if failed else 0)
 PY
