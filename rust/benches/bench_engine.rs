@@ -5,8 +5,8 @@
 //! seed four. Requires `make artifacts`; prints SKIP lines otherwise so
 //! `cargo bench` stays green in fresh checkouts.
 
-use ttc::config::Config;
-use ttc::engine::{Engine, GenJob, GenKind};
+use ttc::config::{BackendKind, Config};
+use ttc::engine::{Engine, EnginePool, GenJob, GenKind};
 use ttc::strategies::stepper::{Stepper, Ticket};
 use ttc::strategies::{registry, Budget, Executor, Strategy};
 use ttc::tokenizer::Tokenizer;
@@ -14,13 +14,49 @@ use ttc::util::bench::{bench, header};
 
 fn main() {
     header("bench_engine");
-    let cfg = Config::default();
-    if !cfg.paths.artifacts.join("hlo_index.json").exists() {
-        println!("bench,SKIP_no_artifacts,0,0,0,0");
-        return;
-    }
     std::env::set_var("TTC_BENCH_SECONDS", std::env::var("TTC_BENCH_SECONDS").unwrap_or("6".into()));
-    let engine = Engine::start(&cfg).expect("engine start");
+    let cfg = Config::default();
+    if cfg.paths.artifacts.join("hlo_index.json").exists() {
+        device_benches(&cfg);
+    } else {
+        println!("bench,SKIP_no_artifacts,0,0,0,0");
+    }
+    // the pool bench rides the artifact-free sim backend, so it runs
+    // (and its balance stat gates) on every checkout
+    pool_bench();
+}
+
+/// Sharded-pool workload: 4 concurrent beam requests multiplexed by the
+/// stepper across a 2-engine sim pool. Emits the placement-balance stat
+/// (`max/min` per-engine rows served) the bench gate holds a ceiling on.
+fn pool_bench() {
+    let mut cfg = Config::default();
+    cfg.engine.backend = BackendKind::Sim;
+    cfg.engine.sim_clock = true;
+    cfg.engine.engines = 2;
+    let pool = EnginePool::start(&cfg).expect("sim pool start");
+    let executor = Executor::new(pool.handle(), pool.clock.clone(), 0.0);
+    bench("pool_2x_beam_concurrent", || {
+        let mut stepper = Stepper::new(executor.clone());
+        for i in 0..4u64 {
+            stepper
+                .admit(Ticket {
+                    query: format!("Q:7+{i}-2+8=?\n"),
+                    strategy: Strategy::beam(4, 2, 12),
+                    budget: Budget::unlimited(),
+                    tag: i,
+                })
+                .unwrap();
+        }
+        stepper.run_to_completion().unwrap();
+        std::hint::black_box(stepper.drain_completed());
+    });
+    println!("stat,pool_balance_ratio,{}", pool.balance_ratio());
+    println!("# pool report: {}", pool.report().dumps());
+}
+
+fn device_benches(cfg: &Config) {
+    let engine = Engine::start(cfg).expect("engine start");
     let handle = engine.handle();
     let tok = Tokenizer::new();
     let prompt = tok.encode("Q:7+8-2+8=?\nS:").unwrap();

@@ -28,6 +28,39 @@ impl Paths {
     }
 }
 
+/// Which execution backend the engine threads drive (see
+/// `docs/backends.md`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The PJRT device path: AOT'd executables + weights (`make
+    /// artifacts`).
+    Device,
+    /// The deterministic artifact-free emulator
+    /// ([`crate::engine::backend::SimBackend`]); latencies come from the
+    /// sim clock's cost model.
+    Sim,
+}
+
+impl BackendKind {
+    /// Parse a CLI/config spelling (`device` | `sim`).
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "device" => Ok(BackendKind::Device),
+            "sim" => Ok(BackendKind::Sim),
+            other => Err(Error::Config(format!(
+                "unknown backend '{other}' (expected 'device' or 'sim')"
+            ))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Device => "device",
+            BackendKind::Sim => "sim",
+        }
+    }
+}
+
 /// Engine / batching parameters. Shapes here must agree with the buckets
 /// lowered by `python/compile/aot.py` (checked at artifact load).
 #[derive(Debug, Clone)]
@@ -49,6 +82,11 @@ pub struct EngineConfig {
     pub sim_clock: bool,
     /// Micro-batch wait window (ms) for the continuous batcher.
     pub batch_window_ms: f64,
+    /// Execution backend the engine threads drive.
+    pub backend: BackendKind,
+    /// Engines in the pool (`ttc serve --engines N`); 1 = the classic
+    /// single-engine path, placement bypassed.
+    pub engines: usize,
 }
 
 impl Default for EngineConfig {
@@ -62,6 +100,8 @@ impl Default for EngineConfig {
             max_new_tokens: 96,
             sim_clock: false,
             batch_window_ms: 0.3,
+            backend: BackendKind::Device,
+            engines: 1,
         }
     }
 }
@@ -281,6 +321,13 @@ impl Config {
         e.max_new_tokens = v.opt_usize("max_new_tokens", e.max_new_tokens);
         e.sim_clock = v.opt_bool("sim_clock", e.sim_clock);
         e.batch_window_ms = v.opt_f64("batch_window_ms", e.batch_window_ms);
+        e.engines = v.opt_usize("engines", e.engines);
+        if let Some(b) = v.get("backend") {
+            e.backend = BackendKind::parse(
+                b.as_str()
+                    .ok_or_else(|| Error::Config("engine.backend must be a string".into()))?,
+            )?;
+        }
         if let Some(buckets) = v.get("buckets") {
             e.buckets = buckets
                 .as_arr()
@@ -441,6 +488,21 @@ mod tests {
             vec!["mv_early@4w2".to_string(), "beam_latency@2x2c8".to_string()]
         );
         assert_eq!(c.sweep.lambda_t, vec![0.0, 0.1]);
+    }
+
+    #[test]
+    fn backend_and_engines_merge() {
+        let mut c = Config::default();
+        assert_eq!(c.engine.backend, BackendKind::Device);
+        assert_eq!(c.engine.engines, 1);
+        let v = parse(r#"{"engine": {"backend": "sim", "engines": 4}}"#).unwrap();
+        c.merge_json(&v).unwrap();
+        assert_eq!(c.engine.backend, BackendKind::Sim);
+        assert_eq!(c.engine.engines, 4);
+        let bad = parse(r#"{"engine": {"backend": "gpu"}}"#).unwrap();
+        assert!(c.merge_json(&bad).is_err());
+        assert!(BackendKind::parse("device").is_ok());
+        assert_eq!(BackendKind::Sim.as_str(), "sim");
     }
 
     #[test]

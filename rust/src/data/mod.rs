@@ -106,6 +106,34 @@ impl Splits {
         })
     }
 
+    /// Difficulty-balanced in-memory splits, for paths that can run
+    /// without artifacts (the sim execution backend): same problem
+    /// distribution as `ttc taskgen`, independent RNG streams per split,
+    /// no filesystem involved.
+    pub fn synthesize(seed: u64) -> Splits {
+        let make = |stream: u64, n: usize, tag: &str| -> Vec<Query> {
+            let mut rng = crate::util::rng::Rng::new(seed, stream);
+            (0..n)
+                .map(|i| {
+                    let k = crate::taskgen::arith::MIN_OPS
+                        + (i % (crate::taskgen::arith::MAX_OPS - crate::taskgen::arith::MIN_OPS + 1));
+                    let p = crate::taskgen::Problem::sample(&mut rng, k);
+                    Query {
+                        id: format!("sim_{tag}_{i}"),
+                        query: p.query_text(),
+                        answer: p.answer().to_string(),
+                        k,
+                    }
+                })
+                .collect()
+        };
+        Splits {
+            train: make(0x517_1, 120, "train"),
+            calib: make(0x517_2, 60, "calib"),
+            test: make(0x517_3, 160, "test"),
+        }
+    }
+
     pub fn by_name(&self, name: &str) -> Result<&[Query]> {
         match name {
             "train" => Ok(&self.train),
@@ -146,6 +174,23 @@ mod tests {
         assert_eq!(back[0], values[0]);
         assert_eq!(back[2].opt_bool("c", false), true);
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn synthesized_splits_are_deterministic_and_balanced() {
+        let a = Splits::synthesize(7);
+        let b = Splits::synthesize(7);
+        assert_eq!(a.test, b.test);
+        assert_eq!(a.test.len(), 160);
+        assert!(!a.train.is_empty() && !a.calib.is_empty());
+        // answers are ground truth for their queries and ids are unique
+        let mut ids = std::collections::HashSet::new();
+        for q in a.test.iter().chain(&a.train).chain(&a.calib) {
+            assert!(ids.insert(q.id.clone()), "duplicate id {}", q.id);
+            assert!(q.query.starts_with("Q:") && q.query.ends_with("=?\n"));
+            assert!(q.answer.chars().all(|c| c.is_ascii_digit()));
+        }
+        assert_ne!(Splits::synthesize(8).test, a.test);
     }
 
     #[test]

@@ -1,38 +1,71 @@
-//! Public engine API: spawn the engine thread, talk to it synchronously.
+//! Public engine API: spawn engine threads, talk to them synchronously.
+//!
+//! [`EngineHandle`] is the one client surface for both deployment
+//! shapes: a *single* engine (one backend-driven thread, the historical
+//! contract, bit-for-bit unchanged) or a *sharded pool*
+//! ([`crate::engine::pool::EnginePool`]), where every submission routes
+//! through a deadline-aware placement policy. Callers — strategies, the
+//! stepper, the router — cannot tell the difference.
 
-use crate::config::Config;
+use crate::config::{BackendKind, Config};
+use crate::engine::backend::{Backend, BackendFactory, EngineShapes, SimBackend};
+use crate::engine::pool::{PoolGuard, PoolRouter};
 use crate::engine::protocol::*;
-use crate::engine::thread::EngineThread;
+use crate::engine::thread::{DeviceBackend, EngineThread};
 use crate::error::{Error, Result};
+use crate::log_info;
 use crate::metrics::EngineMetrics;
 use crate::util::clock::{self, SharedClock};
 use crate::util::json::Value;
-use crate::log_info;
+use std::cell::Cell;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 /// An in-flight engine reply: the submit half already put the request on
-/// the engine channel (so it participates in the scheduler's next
+/// an engine channel (so it participates in that engine's next
 /// coalescing round); the owner collects the result whenever it is
 /// ready. This is the asynchronous seam the continuation executor
 /// ([`crate::strategies::stepper`]) is built on — submit many requests'
 /// work first, block on replies after, and the engine merges whatever
-/// queued together.
-#[derive(Debug)]
+/// queued together. For pool-routed submissions the reply also carries
+/// the placement accounting guard: the engine's outstanding-row count is
+/// released when the reply is received (or the reply is dropped).
 pub struct PendingReply<T> {
     rx: Receiver<Result<T>>,
+    guard: Cell<Option<PoolGuard>>,
+}
+
+impl<T> std::fmt::Debug for PendingReply<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PendingReply").finish_non_exhaustive()
+    }
 }
 
 impl<T> PendingReply<T> {
+    fn new(rx: Receiver<Result<T>>, guard: Option<PoolGuard>) -> PendingReply<T> {
+        PendingReply {
+            rx,
+            guard: Cell::new(guard),
+        }
+    }
+
     fn gone() -> Error {
         Error::Engine("engine thread dropped the reply".into())
     }
 
+    /// Release the placement accounting (pool submissions only); called
+    /// the moment a result is in hand.
+    fn settle(&self) {
+        self.guard.take();
+    }
+
     /// Block until the reply arrives.
     pub fn wait(&self) -> Result<T> {
-        self.rx.recv().map_err(|_| Self::gone())?
+        let got = self.rx.recv().map_err(|_| Self::gone());
+        self.settle();
+        got?
     }
 
     /// Block up to `wait` (`None` = indefinitely). Returns `None` on
@@ -41,9 +74,15 @@ impl<T> PendingReply<T> {
         match wait {
             None => Some(self.wait()),
             Some(d) => match self.rx.recv_timeout(d) {
-                Ok(r) => Some(r),
+                Ok(r) => {
+                    self.settle();
+                    Some(r)
+                }
                 Err(RecvTimeoutError::Timeout) => None,
-                Err(RecvTimeoutError::Disconnected) => Some(Err(Self::gone())),
+                Err(RecvTimeoutError::Disconnected) => {
+                    self.settle();
+                    Some(Err(Self::gone()))
+                }
             },
         }
     }
@@ -51,16 +90,33 @@ impl<T> PendingReply<T> {
     /// Non-blocking poll: `None` while the engine is still working.
     pub fn try_wait(&self) -> Option<Result<T>> {
         match self.rx.try_recv() {
-            Ok(r) => Some(r),
+            Ok(r) => {
+                self.settle();
+                Some(r)
+            }
             Err(TryRecvError::Empty) => None,
-            Err(TryRecvError::Disconnected) => Some(Err(Self::gone())),
+            Err(TryRecvError::Disconnected) => {
+                self.settle();
+                Some(Err(Self::gone()))
+            }
         }
     }
 }
 
+/// Where a handle's messages go.
+#[derive(Clone)]
+enum Inner {
+    /// Directly onto one engine thread's channel (the historical
+    /// single-engine path — no placement, no accounting).
+    Single(Sender<EngineMsg>),
+    /// Through the pool's placement policy
+    /// ([`crate::engine::pool::place`]).
+    Pool(Arc<PoolRouter>),
+}
+
 /// Cheap, cloneable handle used by coordinator threads.
 ///
-/// Calls are synchronous per handle, but the engine serves the channel
+/// Calls are synchronous per handle, but each engine serves its channel
 /// in coalescing rounds ([`crate::engine::scheduler`]): concurrent
 /// `generate` / `prm_score` / `embed` calls from different clones merge
 /// into shared bucket-shaped device calls, with generate plans
@@ -71,24 +127,59 @@ impl<T> PendingReply<T> {
 /// sampled generation additionally depends on the per-call RNG key, so
 /// its draws vary with batch composition just as they do between any
 /// two serial calls.
+///
+/// Pool-backed handles additionally route every submission to one of N
+/// engines (least outstanding rows, deadline-aware tiebreak — see
+/// `docs/backends.md`); because temp-0 generation is a pure function of
+/// the prompt on every backend, placement never changes results.
 #[derive(Clone)]
 pub struct EngineHandle {
-    tx: Sender<EngineMsg>,
-}
-
-macro_rules! rpc {
-    ($self:ident, $variant:ident { $($field:ident : $value:expr),* $(,)? }) => {{
-        let (reply, rx) = channel();
-        $self
-            .tx
-            .send(EngineMsg::$variant { $($field: $value,)* reply })
-            .map_err(|_| Error::Engine("engine thread is gone".into()))?;
-        rx.recv()
-            .map_err(|_| Error::Engine("engine thread dropped the reply".into()))?
-    }};
+    inner: Inner,
 }
 
 impl EngineHandle {
+    pub(crate) fn single(tx: Sender<EngineMsg>) -> EngineHandle {
+        EngineHandle {
+            inner: Inner::Single(tx),
+        }
+    }
+
+    pub(crate) fn pooled(router: Arc<PoolRouter>) -> EngineHandle {
+        EngineHandle {
+            inner: Inner::Pool(router),
+        }
+    }
+
+    /// The pool's placement/utilization report, when this handle fronts
+    /// an [`crate::engine::pool::EnginePool`] (`None` for single-engine
+    /// handles — the serve report omits the pool section exactly as
+    /// before).
+    pub fn pool_report(&self) -> Option<Value> {
+        match &self.inner {
+            Inner::Single(_) => None,
+            Inner::Pool(router) => Some(router.report()),
+        }
+    }
+
+    /// Route one message: direct send for single engines, placed send
+    /// (with row/deadline accounting) for pools.
+    fn route(
+        &self,
+        msg: EngineMsg,
+        rows: usize,
+        deadline_ms: f64,
+        op: &'static str,
+    ) -> Result<Option<PoolGuard>> {
+        match &self.inner {
+            Inner::Single(tx) => {
+                tx.send(msg)
+                    .map_err(|_| Error::Engine("engine thread is gone".into()))?;
+                Ok(None)
+            }
+            Inner::Pool(router) => Ok(Some(router.submit(msg, rows, deadline_ms, op)?)),
+        }
+    }
+
     /// Generate all jobs (blocking); results in job order.
     pub fn generate(&self, jobs: Vec<GenJob>) -> Result<Vec<GenResult>> {
         self.generate_with_deadline(jobs, None)
@@ -103,31 +194,35 @@ impl EngineHandle {
         jobs: Vec<GenJob>,
         deadline_ms: Option<f64>,
     ) -> Result<Vec<GenResult>> {
-        rpc!(self, Generate { jobs: jobs, deadline_ms: deadline_ms })
-    }
-
-    /// Score CoT prefixes with the PRM.
-    pub fn prm_score(&self, prefixes: Vec<Vec<u32>>) -> Result<Vec<f32>> {
-        rpc!(self, PrmScore { prefixes: prefixes })
+        self.submit_generate(jobs, deadline_ms)?.wait()
     }
 
     /// Queue a generate call without blocking on the reply. All requests
-    /// submitted before anyone blocks land on the channel together, so
-    /// the engine's scheduler drains them into one coalescing round.
+    /// submitted before anyone blocks land on their engine's channel
+    /// together, so its scheduler drains them into one coalescing round.
     pub fn submit_generate(
         &self,
         jobs: Vec<GenJob>,
         deadline_ms: Option<f64>,
     ) -> Result<PendingReply<Vec<GenResult>>> {
+        let rows = jobs.len();
         let (reply, rx) = channel();
-        self.tx
-            .send(EngineMsg::Generate {
+        let guard = self.route(
+            EngineMsg::Generate {
                 jobs,
                 deadline_ms,
                 reply,
-            })
-            .map_err(|_| Error::Engine("engine thread is gone".into()))?;
-        Ok(PendingReply { rx })
+            },
+            rows,
+            deadline_ms.unwrap_or(f64::INFINITY),
+            "generate",
+        )?;
+        Ok(PendingReply::new(rx, guard))
+    }
+
+    /// Score CoT prefixes with the PRM.
+    pub fn prm_score(&self, prefixes: Vec<Vec<u32>>) -> Result<Vec<f32>> {
+        self.submit_prm_score(prefixes)?.wait()
     }
 
     /// Queue a PRM scoring call without blocking on the reply.
@@ -135,33 +230,51 @@ impl EngineHandle {
         &self,
         prefixes: Vec<Vec<u32>>,
     ) -> Result<PendingReply<Vec<f32>>> {
+        let rows = prefixes.len();
         let (reply, rx) = channel();
-        self.tx
-            .send(EngineMsg::PrmScore { prefixes, reply })
-            .map_err(|_| Error::Engine("engine thread is gone".into()))?;
-        Ok(PendingReply { rx })
-    }
-
-    /// A handle with no engine behind it: every call fails with an
-    /// engine-gone error. Step machines never touch the engine directly
-    /// (they express work as yields), so tests can drive them with
-    /// synthetic inputs against this handle.
-    pub fn disconnected() -> EngineHandle {
-        let (tx, _rx) = channel();
-        EngineHandle { tx }
+        let guard = self.route(
+            EngineMsg::PrmScore { prefixes, reply },
+            rows,
+            f64::INFINITY,
+            "prm_score",
+        )?;
+        Ok(PendingReply::new(rx, guard))
     }
 
     /// Embed queries.
     pub fn embed(&self, kind: EmbedKind, queries: Vec<Vec<u32>>) -> Result<Vec<Vec<f32>>> {
-        rpc!(self, Embed { kind: kind, queries: queries })
+        let rows = queries.len();
+        let (reply, rx) = channel();
+        let guard = self.route(
+            EngineMsg::Embed {
+                kind,
+                queries,
+                reply,
+            },
+            rows,
+            f64::INFINITY,
+            "embed",
+        )?;
+        PendingReply::new(rx, guard).wait()
     }
 
     /// Probe forward (logits) with the engine's current probe params.
     pub fn probe_fwd(&self, feats: Vec<Vec<f32>>) -> Result<Vec<f32>> {
-        rpc!(self, ProbeFwd { feats: feats })
+        let rows = feats.len();
+        let (reply, rx) = channel();
+        let guard = self.route(
+            EngineMsg::ProbeFwd { feats, reply },
+            rows,
+            f64::INFINITY,
+            "probe_fwd",
+        )?;
+        PendingReply::new(rx, guard).wait()
     }
 
     /// Train the probe; the engine keeps (and returns) the best params.
+    /// On a pool, training runs on engine #0 and the winning parameters
+    /// are then installed on every other engine, so replicas stay
+    /// interchangeable.
     #[allow(clippy::too_many_arguments)]
     pub fn probe_train(
         &self,
@@ -172,40 +285,78 @@ impl EngineHandle {
         epochs: usize,
         patience: usize,
     ) -> Result<ProbeTrainReport> {
-        rpc!(
-            self,
-            ProbeTrain {
-                train_feats: train_feats,
-                train_labels: train_labels,
-                val_feats: val_feats,
-                val_labels: val_labels,
-                epochs: epochs,
-                patience: patience,
+        let (reply, rx) = channel();
+        let msg = EngineMsg::ProbeTrain {
+            train_feats,
+            train_labels,
+            val_feats,
+            val_labels,
+            epochs,
+            patience,
+            reply,
+        };
+        match &self.inner {
+            Inner::Single(tx) => {
+                tx.send(msg)
+                    .map_err(|_| Error::Engine("engine thread is gone".into()))?;
+                PendingReply::new(rx, None).wait()
             }
-        )
+            Inner::Pool(router) => {
+                router.send_to(0, msg, "probe_train")?;
+                let report = PendingReply::new(rx, None).wait()?;
+                router.broadcast_probe_load(report.params.clone(), 1)?;
+                Ok(report)
+            }
+        }
     }
 
-    /// Replace probe parameters (e.g. from a saved checkpoint).
+    /// Replace probe parameters (e.g. from a saved checkpoint). On a
+    /// pool the parameters are installed on *every* engine.
     pub fn probe_load(&self, params: Vec<f32>) -> Result<()> {
-        rpc!(self, ProbeLoad { params: params })
+        match &self.inner {
+            Inner::Single(tx) => {
+                let (reply, rx) = channel();
+                tx.send(EngineMsg::ProbeLoad { params, reply })
+                    .map_err(|_| Error::Engine("engine thread is gone".into()))?;
+                PendingReply::new(rx, None).wait()
+            }
+            Inner::Pool(router) => router.broadcast_probe_load(params, 0),
+        }
     }
 
-    /// Engine diagnostics as JSON.
+    /// Engine diagnostics as JSON. For a pool: engine #0's diagnostics
+    /// plus a `pool` section with placement and per-engine utilization.
     pub fn info(&self) -> Result<Value> {
-        rpc!(self, Info {})
+        let (reply, rx) = channel();
+        let msg = EngineMsg::Info { reply };
+        match &self.inner {
+            Inner::Single(tx) => {
+                tx.send(msg)
+                    .map_err(|_| Error::Engine("engine thread is gone".into()))?;
+                PendingReply::new(rx, None).wait()
+            }
+            Inner::Pool(router) => {
+                router.send_to(0, msg, "info")?;
+                let mut v = PendingReply::new(rx, None).wait()?;
+                v.set("pool", router.report());
+                Ok(v)
+            }
+        }
     }
 }
 
-/// Owns the engine thread; shuts it down on drop.
+/// Owns one engine thread; shuts it down on drop.
 pub struct Engine {
     handle: EngineHandle,
+    shutdown: Sender<EngineMsg>,
     join: Option<JoinHandle<()>>,
     pub metrics: Arc<EngineMetrics>,
     pub clock: SharedClock,
 }
 
 impl Engine {
-    /// Spawn the engine thread and wait until artifacts are loaded.
+    /// Spawn one engine thread (backend per `cfg.engine.backend`) and
+    /// wait until the backend is ready.
     pub fn start(cfg: &Config) -> Result<Engine> {
         let clock: SharedClock = if cfg.engine.sim_clock {
             clock::sim_clock()
@@ -216,47 +367,89 @@ impl Engine {
     }
 
     pub fn start_with_clock(cfg: &Config, clock: SharedClock) -> Result<Engine> {
+        Self::start_member(cfg, clock, 0)
+    }
+
+    /// Spawn pool member `index`: same artifacts/config, its own RNG
+    /// stream (member 0 reproduces the historical single-engine stream
+    /// exactly) and its own thread, sharing `clock` with its siblings so
+    /// deadlines mean the same thing on every engine.
+    pub(crate) fn start_member(cfg: &Config, clock: SharedClock, index: usize) -> Result<Engine> {
         let metrics = Arc::new(EngineMetrics::new());
         let (tx, rx) = channel();
         let (ready_tx, ready_rx) = channel();
-        let artifacts = cfg.paths.artifacts.clone();
-        let seed = cfg.seed;
+        let factory = Self::backend_factory(cfg, clock.clone(), index);
         let thread_clock = clock.clone();
         let thread_metrics = metrics.clone();
         let join = std::thread::Builder::new()
-            .name("ttc-engine".into())
-            .spawn(move || {
-                match EngineThread::new(&artifacts, thread_clock, thread_metrics, seed) {
-                    Ok(engine) => {
-                        let _ = ready_tx.send(Ok(()));
-                        engine.serve(rx);
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                    }
+            .name(format!("ttc-engine-{index}"))
+            .spawn(move || match factory() {
+                Ok(backend) => {
+                    let _ = ready_tx.send(Ok(()));
+                    EngineThread::new(backend, thread_clock, thread_metrics).serve(rx);
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
                 }
             })
             .map_err(|e| Error::Engine(format!("cannot spawn engine thread: {e}")))?;
         ready_rx
             .recv()
             .map_err(|_| Error::Engine("engine thread died during startup".into()))??;
-        log_info!("engine started (artifacts: {})", cfg.paths.artifacts.display());
+        match cfg.engine.backend {
+            BackendKind::Device => log_info!(
+                "engine #{index} started (device backend, artifacts: {})",
+                cfg.paths.artifacts.display()
+            ),
+            BackendKind::Sim => log_info!("engine #{index} started (sim backend, no artifacts)"),
+        }
         Ok(Engine {
-            handle: EngineHandle { tx },
+            handle: EngineHandle::single(tx.clone()),
+            shutdown: tx,
             join: Some(join),
             metrics,
             clock,
         })
     }
 
+    /// The backend constructor that runs on the engine thread: PJRT
+    /// state is `!Send`, so only this `Send` closure crosses the spawn.
+    fn backend_factory(cfg: &Config, clock: SharedClock, index: usize) -> BackendFactory {
+        let kind = cfg.engine.backend;
+        let artifacts = cfg.paths.artifacts.clone();
+        let seed = cfg.seed;
+        let sim_shapes = EngineShapes::sim_default(&cfg.engine);
+        Box::new(move || -> Result<Box<dyn Backend>> {
+            match kind {
+                BackendKind::Device => Ok(Box::new(DeviceBackend::new(
+                    &artifacts,
+                    clock,
+                    seed,
+                    index as u64,
+                )?)),
+                BackendKind::Sim => Ok(Box::new(SimBackend::new(
+                    sim_shapes,
+                    clock,
+                    seed,
+                    index as u64,
+                ))),
+            }
+        })
+    }
+
     pub fn handle(&self) -> EngineHandle {
         self.handle.clone()
+    }
+
+    /// This engine's raw submission channel — pool plumbing only.
+    pub(crate) fn sender(&self) -> Sender<EngineMsg> {
+        self.shutdown.clone()
     }
 }
 
 impl Drop for Engine {
     fn drop(&mut self) {
-        let _ = self.handle.tx.send(EngineMsg::Shutdown);
+        let _ = self.shutdown.send(EngineMsg::Shutdown);
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }

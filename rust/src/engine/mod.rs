@@ -1,16 +1,40 @@
-//! The inference engine: a dedicated thread owning all PJRT state, plus
-//! the request protocol and continuous batcher in front of it.
+//! The inference engine: backend-driven engine threads (optionally a
+//! sharded pool of them), plus the request protocol, coalescing
+//! scheduler and continuous batcher in front of them.
 //!
-//! ## Why a single engine thread
+//! ## Execution backends
 //!
-//! The `xla` crate's PJRT handles are `Rc`-based (`!Send`), so exactly one
-//! thread owns the client, the compiled executables, the device-resident
-//! weight buffers and the probe training state. Coordinator threads talk
-//! to it over an mpsc channel — the same executor-thread shape real GPU
-//! serving stacks use. On this 1-core testbed the engine thread is also
-//! where all FLOPs are spent; batching exists to amortize call overhead
-//! and to reproduce the paper's *latency structure* (one batched call for
-//! N parallel candidates vs. D sequential rounds for beam search).
+//! What executes a bucket-shaped call is pluggable ([`backend`]): the
+//! [`thread::DeviceBackend`] drives the AOT'd executables through PJRT,
+//! while the [`backend::SimBackend`] emulates the trained models
+//! deterministically with **no artifacts**, so every serve/stepper/bench
+//! path can run engine-full on a fresh checkout. Scheduling, budget
+//! preemption, metrics, and the generate/PRM/embed clock charges live in
+//! the engine thread, identical for every backend; only the probe ops
+//! charge their own [`crate::util::clock::CostEvent::Probe`] costs
+//! inside the backend (their chunking is backend-internal — a new
+//! backend must do the same or probe calls come out free on the sim
+//! clock).
+//!
+//! ## Why one thread per engine
+//!
+//! The `xla` crate's PJRT handles are `Rc`-based (`!Send`), so exactly
+//! one thread owns a device backend's client, compiled executables,
+//! device-resident weight buffers and probe training state. Coordinator
+//! threads talk to it over an mpsc channel — the same executor-thread
+//! shape real GPU serving stacks use. On this 1-core testbed the engine
+//! thread is also where all FLOPs are spent; batching exists to amortize
+//! call overhead and to reproduce the paper's *latency structure* (one
+//! batched call for N parallel candidates vs. D sequential rounds for
+//! beam search).
+//!
+//! ## Scaling out: the engine pool
+//!
+//! [`pool::EnginePool`] owns N engines behind the same [`EngineHandle`]
+//! client surface: submissions route through a deadline-aware placement
+//! policy (least outstanding rows, EDF tiebreak — [`pool::place`]), each
+//! engine keeps its own coalescing scheduler and metrics, and a pool of
+//! one *is* the single-engine path, bit for bit.
 //!
 //! ## Generation granularity
 //!
@@ -26,20 +50,24 @@
 //!
 //! ## Scheduling rounds
 //!
-//! The serve loop works in rounds ([`scheduler`]): every message queued
-//! on the channel is drained into per-op queues, so concurrent
-//! `Generate`, `PrmScore` and `Embed` requests each merge into shared
-//! bucket-shaped calls (bin-packed to minimize padding), and planned
-//! generate calls dispatch earliest-deadline-first. See
-//! `docs/engine.md` for the full contract.
+//! Each engine's serve loop works in rounds ([`scheduler`]): every
+//! message queued on its channel is drained into per-op queues, so
+//! concurrent `Generate`, `PrmScore` and `Embed` requests each merge
+//! into shared bucket-shaped calls (bin-packed to minimize padding), and
+//! planned generate calls dispatch earliest-deadline-first. See
+//! `docs/engine.md` and `docs/backends.md` for the full contracts.
 
+pub mod backend;
 pub mod batcher;
 pub mod handle;
+pub mod pool;
 pub mod preempt;
 pub mod protocol;
 pub mod scheduler;
 pub mod thread;
 
+pub use backend::{Backend, EngineShapes, SimBackend};
 pub use batcher::{pack_bins, plan_batches, plan_batches_edf, BatchPlan};
 pub use handle::{Engine, EngineHandle, PendingReply};
+pub use pool::{EngineLoad, EnginePool};
 pub use protocol::{EmbedKind, GenJob, GenKind, GenResult, ProbeTrainReport};

@@ -1,0 +1,515 @@
+//! `EnginePool`: N backend-driven engines behind one [`EngineHandle`].
+//!
+//! The one axis a deployment actually scales is replicas, so the pool
+//! makes engines *plural* without changing the client contract: every
+//! submission (`submit_generate` / `submit_prm_score` / blocking
+//! `generate` / `prm_score` / `embed` / `probe_fwd`) routes through a
+//! placement policy, and each engine keeps its own coalescing scheduler,
+//! budget preemption and metrics exactly as in the single-engine case.
+//!
+//! ## Placement policy
+//!
+//! [`place`] is a pure function over per-engine load snapshots:
+//!
+//! 1. **least outstanding rows** — rows (generate jobs, PRM prefixes,
+//!    embed queries, probe feature rows) submitted and not yet replied;
+//! 2. tie → **fewest outstanding calls**;
+//! 3. tie → **deadline-aware (EDF) tiebreak**: prefer the engine whose
+//!    most-urgent outstanding deadline is *latest* — new work (urgent or
+//!    not) avoids stacking behind an engine already racing a tight
+//!    deadline, which is what lets tight-deadline traffic meet its
+//!    budget while unlimited traffic fills the remaining capacity;
+//! 4. tie → lowest engine index (deterministic).
+//!
+//! Accounting is released when the requester *receives* the reply (or
+//! drops it) — see [`PoolGuard`] — so "outstanding" means submitted and
+//! not yet harvested, the quantity a scheduler can actually observe.
+//!
+//! ## Error semantics
+//!
+//! Within one engine, a failed coalesced call still broadcasts the error
+//! to every coalesced requester (single-engine contract, unchanged).
+//! Submitting to an engine whose thread is gone returns a deterministic,
+//! descriptive [`Error::Engine`] naming the engine and the operation —
+//! not a bare channel-closed unwrap — and rolls the placement
+//! reservation back.
+//!
+//! ## Determinism
+//!
+//! Temperature-0 generation, PRM scoring and embedding are pure
+//! functions of their inputs on every backend, so results are identical
+//! for pool sizes 1, 2, 4, … — property- and integration-tested in
+//! `tests/integration_pool.rs`. Under the *sim clock*, pool engines
+//! share one virtual timeline (charges add), so sim time measures total
+//! compute rather than wall parallelism; real-clock runs overlap for
+//! real.
+
+use crate::config::Config;
+use crate::engine::handle::{Engine, EngineHandle};
+use crate::engine::protocol::EngineMsg;
+use crate::error::{Error, Result};
+use crate::metrics::{EngineMetrics, PoolMetrics};
+use crate::util::clock::{self, SharedClock};
+use crate::util::json::Value;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+/// One engine's load snapshot, as the placement policy sees it.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EngineLoad {
+    /// Rows submitted and not yet harvested.
+    pub rows: usize,
+    /// Calls submitted and not yet harvested.
+    pub calls: usize,
+    /// Absolute deadlines of the outstanding calls
+    /// (`f64::INFINITY` for calls without one).
+    pub deadlines: Vec<f64>,
+}
+
+impl EngineLoad {
+    /// The most urgent outstanding deadline (`INFINITY` when none).
+    pub fn min_deadline(&self) -> f64 {
+        self.deadlines.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Pure placement: pick the engine for the next submission. See the
+/// module docs for the full policy; `loads` must be non-empty.
+pub fn place(loads: &[EngineLoad]) -> usize {
+    let mut best = 0usize;
+    for i in 1..loads.len() {
+        let (a, b) = (&loads[i], &loads[best]);
+        let better = match a.rows.cmp(&b.rows) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Greater => false,
+            std::cmp::Ordering::Equal => match a.calls.cmp(&b.calls) {
+                std::cmp::Ordering::Less => true,
+                std::cmp::Ordering::Greater => false,
+                // EDF-aware: latest most-urgent deadline wins the tie
+                // (strict >, so a full tie keeps the lowest index)
+                std::cmp::Ordering::Equal => a.min_deadline() > b.min_deadline(),
+            },
+        };
+        if better {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Whether [`place`] chose differently than plain least-rows/calls
+/// argmin would — i.e. the deadline tiebreak decided (metric feed).
+fn deadline_tiebreak_decided(loads: &[EngineLoad], chosen: usize) -> bool {
+    let plain = loads
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, l)| (l.rows, l.calls))
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    chosen != plain
+}
+
+/// One engine's routing endpoint inside the router.
+struct Slot {
+    /// Mutex so the shared router stays `Sync` regardless of the
+    /// `Sender` `Sync`-ness of the toolchain; submissions are rare
+    /// relative to device work, so contention is irrelevant.
+    tx: Mutex<Sender<EngineMsg>>,
+    metrics: Arc<EngineMetrics>,
+}
+
+/// Shared routing state behind pool-backed [`EngineHandle`]s.
+pub struct PoolRouter {
+    slots: Vec<Slot>,
+    loads: Mutex<Vec<EngineLoad>>,
+    pub metrics: PoolMetrics,
+}
+
+impl PoolRouter {
+    pub fn engines(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Place and send one accounted submission. Returns the guard that
+    /// releases the reservation when the reply is harvested/dropped.
+    pub(crate) fn submit(
+        self: &Arc<Self>,
+        msg: EngineMsg,
+        rows: usize,
+        deadline_ms: f64,
+        op: &'static str,
+    ) -> Result<PoolGuard> {
+        let idx = {
+            let mut loads = self.loads.lock().unwrap();
+            let idx = place(&loads);
+            if deadline_tiebreak_decided(&loads, idx) {
+                self.metrics.deadline_tiebreaks.inc();
+            }
+            loads[idx].rows += rows;
+            loads[idx].calls += 1;
+            loads[idx].deadlines.push(deadline_ms);
+            idx
+        };
+        self.metrics.placements.inc();
+        self.metrics.engine(idx).submits.inc();
+        self.metrics.engine(idx).rows_submitted.add(rows as u64);
+        let sent = { self.slots[idx].tx.lock().unwrap().send(msg) };
+        if sent.is_err() {
+            self.release(idx, rows, deadline_ms);
+            return Err(Self::engine_down(idx, self.slots.len(), op));
+        }
+        Ok(PoolGuard {
+            router: self.clone(),
+            engine: idx,
+            rows,
+            deadline_ms,
+        })
+    }
+
+    /// Send a control-plane message to a specific engine (no load
+    /// accounting — probe train/load, info).
+    pub(crate) fn send_to(&self, idx: usize, msg: EngineMsg, op: &'static str) -> Result<()> {
+        self.slots[idx]
+            .tx
+            .lock()
+            .unwrap()
+            .send(msg)
+            .map_err(|_| Self::engine_down(idx, self.slots.len(), op))
+    }
+
+    /// Install probe params on every engine from `from` up — replicas
+    /// must answer probe queries identically no matter where a request
+    /// lands. The first failure wins (and names its engine).
+    pub(crate) fn broadcast_probe_load(&self, params: Vec<f32>, from: usize) -> Result<()> {
+        let mut replies = Vec::new();
+        for idx in from..self.slots.len() {
+            let (reply, rx) = channel();
+            self.send_to(
+                idx,
+                EngineMsg::ProbeLoad {
+                    params: params.clone(),
+                    reply,
+                },
+                "probe_load",
+            )?;
+            replies.push((idx, rx));
+        }
+        for (idx, rx) in replies {
+            rx.recv().map_err(|_| {
+                Self::engine_down(idx, self.slots.len(), "probe_load")
+            })??;
+        }
+        Ok(())
+    }
+
+    fn engine_down(idx: usize, n: usize, op: &'static str) -> Error {
+        Error::Engine(format!(
+            "pool engine #{idx} (of {n}) is shut down — {op} submission rejected"
+        ))
+    }
+
+    /// Release one submission's reservation (reply harvested or
+    /// dropped).
+    fn release(&self, idx: usize, rows: usize, deadline_ms: f64) {
+        let mut loads = self.loads.lock().unwrap();
+        let l = &mut loads[idx];
+        l.rows = l.rows.saturating_sub(rows);
+        l.calls = l.calls.saturating_sub(1);
+        if let Some(pos) = l
+            .deadlines
+            .iter()
+            .position(|d| d.to_bits() == deadline_ms.to_bits())
+        {
+            l.deadlines.swap_remove(pos);
+        }
+        self.metrics.engine(idx).rows_completed.add(rows as u64);
+    }
+
+    /// Placement + per-engine utilization as JSON (embedded in `info()`
+    /// and the serve report).
+    pub fn report(&self) -> Value {
+        let engines: Vec<&Arc<EngineMetrics>> = self.slots.iter().map(|s| &s.metrics).collect();
+        build_report(&engines, Some(&self.metrics))
+    }
+}
+
+/// One report builder for every pool size, so a consumer written
+/// against the N-engine shape never sees different keys from a pool
+/// that happens to be size 1 (placement counters simply read 0 there).
+fn build_report(engines: &[&Arc<EngineMetrics>], pool: Option<&PoolMetrics>) -> Value {
+    let mut per_engine = Vec::with_capacity(engines.len());
+    let mut served: Vec<u64> = Vec::with_capacity(engines.len());
+    for (i, m) in engines.iter().enumerate() {
+        served.push(m.rows_served());
+        let routing = pool.map(|p| p.engine(i));
+        per_engine.push(
+            Value::obj()
+                .with("engine", i)
+                .with("submits", routing.map_or(0, |r| r.submits.get()))
+                .with("rows_submitted", routing.map_or(0, |r| r.rows_submitted.get()))
+                .with("rows_completed", routing.map_or(0, |r| r.rows_completed.get()))
+                .with("rows_served", m.rows_served())
+                .with("decode_rows", m.decode_rows.get())
+                .with("prm_rows", m.prm_rows.get())
+                .with("embed_rows", m.embed_rows.get())
+                .with("preempted_rows", m.preempted_rows.get())
+                .with("tokens_generated", m.tokens_generated.get()),
+        );
+    }
+    let total: u64 = served.iter().sum();
+    Value::obj()
+        .with("engines", engines.len())
+        .with("placements", pool.map_or(0, |p| p.placements.get()))
+        .with(
+            "deadline_tiebreaks",
+            pool.map_or(0, |p| p.deadline_tiebreaks.get()),
+        )
+        .with("balance_ratio", balance_ratio(&served))
+        .with("rows_served_total", total)
+        .with("per_engine", Value::Arr(per_engine))
+}
+
+fn balance_ratio(served: &[u64]) -> f64 {
+    let max = served.iter().copied().max().unwrap_or(0);
+    let min = served.iter().copied().min().unwrap_or(0);
+    max.max(1) as f64 / min.max(1) as f64
+}
+
+/// Releases one pool submission's placement accounting on drop; the
+/// reply plumbing settles it as soon as the result is received.
+pub struct PoolGuard {
+    router: Arc<PoolRouter>,
+    engine: usize,
+    rows: usize,
+    deadline_ms: f64,
+}
+
+impl Drop for PoolGuard {
+    fn drop(&mut self) {
+        self.router.release(self.engine, self.rows, self.deadline_ms);
+    }
+}
+
+/// Owns N engines plus the router that places work across them.
+pub struct EnginePool {
+    engines: Vec<Engine>,
+    router: Option<Arc<PoolRouter>>,
+    pub clock: SharedClock,
+}
+
+impl EnginePool {
+    /// Spawn `cfg.engine.engines` engines (min 1) sharing one clock.
+    /// With one engine the pool hands out a plain single-engine handle —
+    /// the placement layer is bypassed entirely, so the pool-size-1 path
+    /// is bit-for-bit the historical single-engine path.
+    pub fn start(cfg: &Config) -> Result<EnginePool> {
+        let clock: SharedClock = if cfg.engine.sim_clock {
+            clock::sim_clock()
+        } else {
+            clock::real_clock()
+        };
+        Self::start_with_clock(cfg, clock)
+    }
+
+    pub fn start_with_clock(cfg: &Config, clock: SharedClock) -> Result<EnginePool> {
+        let n = cfg.engine.engines.max(1);
+        let mut engines = Vec::with_capacity(n);
+        for i in 0..n {
+            engines.push(Engine::start_member(cfg, clock.clone(), i)?);
+        }
+        let router = if n > 1 {
+            Some(Arc::new(PoolRouter {
+                slots: engines
+                    .iter()
+                    .map(|e| Slot {
+                        tx: Mutex::new(e.sender()),
+                        metrics: e.metrics.clone(),
+                    })
+                    .collect(),
+                loads: Mutex::new(vec![EngineLoad::default(); n]),
+                metrics: PoolMetrics::new(n),
+            }))
+        } else {
+            None
+        };
+        Ok(EnginePool {
+            engines,
+            router,
+            clock,
+        })
+    }
+
+    pub fn engines(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// The client handle: single-engine for a pool of 1, placement-
+    /// routed otherwise.
+    pub fn handle(&self) -> EngineHandle {
+        match &self.router {
+            None => self.engines[0].handle(),
+            Some(router) => EngineHandle::pooled(router.clone()),
+        }
+    }
+
+    /// Per-engine metrics (engine `i`).
+    pub fn engine_metrics(&self, i: usize) -> &Arc<EngineMetrics> {
+        &self.engines[i].metrics
+    }
+
+    /// max/min rows served across the pool's engines.
+    pub fn balance_ratio(&self) -> f64 {
+        let served: Vec<u64> = self.engines.iter().map(|e| e.metrics.rows_served()).collect();
+        balance_ratio(&served)
+    }
+
+    /// The pool report (placement counters + per-engine utilization);
+    /// available even for a pool of 1 (same shape, placement counters
+    /// read 0 because the single-engine handle bypasses the router).
+    pub fn report(&self) -> Value {
+        match &self.router {
+            Some(router) => router.report(),
+            None => {
+                let engines: Vec<&Arc<EngineMetrics>> =
+                    self.engines.iter().map(|e| &e.metrics).collect();
+                build_report(&engines, None)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, gen_vec, prop_assert};
+
+    fn load(rows: usize, calls: usize, deadlines: &[f64]) -> EngineLoad {
+        EngineLoad {
+            rows,
+            calls,
+            deadlines: deadlines.to_vec(),
+        }
+    }
+
+    #[test]
+    fn place_prefers_least_rows_then_calls_then_index() {
+        let loads = vec![load(4, 1, &[]), load(2, 3, &[]), load(2, 1, &[])];
+        assert_eq!(place(&loads), 2);
+        let tie = vec![load(2, 1, &[]), load(2, 1, &[])];
+        assert_eq!(place(&tie), 0, "full tie keeps the lowest index");
+    }
+
+    #[test]
+    fn place_edf_tiebreak_avoids_urgent_backlogs() {
+        // engines tied on rows/calls; #0 is racing a 100ms deadline,
+        // #1's outstanding work is unconstrained → new work goes to #1
+        let loads = vec![
+            load(4, 1, &[100.0]),
+            load(4, 1, &[f64::INFINITY]),
+        ];
+        assert_eq!(place(&loads), 1);
+        // and between two constrained engines, the later deadline wins
+        let loads = vec![load(4, 1, &[100.0]), load(4, 1, &[900.0])];
+        assert_eq!(place(&loads), 1);
+    }
+
+    #[test]
+    fn min_deadline_of_empty_is_infinite() {
+        assert_eq!(load(0, 0, &[]).min_deadline(), f64::INFINITY);
+        assert_eq!(load(0, 0, &[7.0, 3.0]).min_deadline(), 3.0);
+    }
+
+    /// Random arrival/completion interleavings against a model: every
+    /// job lands on exactly one engine, placement always picks a
+    /// least-loaded engine (by rows) at decision time, and the
+    /// accounting returns to zero once everything completes.
+    #[test]
+    fn prop_placement_least_loaded_and_conserving() {
+        forall(
+            "pool placement invariants",
+            150,
+            |rng| {
+                let engines = rng.range(1, 5) as usize;
+                let events = gen_vec(rng, 1..40, |r| {
+                    // (arrival? , rows, deadline-bucket)
+                    (
+                        r.below(3) < 2, // 2/3 arrivals, 1/3 completions
+                        r.range(1, 9) as usize,
+                        r.below(4),
+                    )
+                });
+                (engines, events)
+            },
+            |(engines, events)| {
+                let mut loads = vec![EngineLoad::default(); *engines];
+                // outstanding jobs: (engine, rows, deadline)
+                let mut outstanding: Vec<(usize, usize, f64)> = Vec::new();
+                let mut placed = 0usize;
+                for &(arrive, rows, dbucket) in events {
+                    if arrive {
+                        let deadline = match dbucket {
+                            0 => 100.0,
+                            1 => 1000.0,
+                            2 => 10_000.0,
+                            _ => f64::INFINITY,
+                        };
+                        let idx = place(&loads);
+                        prop_assert(idx < *engines, "placement out of range".to_string())?;
+                        let min_rows = loads.iter().map(|l| l.rows).min().unwrap();
+                        prop_assert(
+                            loads[idx].rows == min_rows,
+                            format!(
+                                "picked engine {idx} with {} rows, min is {min_rows}",
+                                loads[idx].rows
+                            ),
+                        )?;
+                        loads[idx].rows += rows;
+                        loads[idx].calls += 1;
+                        loads[idx].deadlines.push(deadline);
+                        outstanding.push((idx, rows, deadline));
+                        placed += 1;
+                    } else if !outstanding.is_empty() {
+                        // complete the oldest outstanding job
+                        let (idx, rows, deadline) = outstanding.remove(0);
+                        let l = &mut loads[idx];
+                        l.rows -= rows;
+                        l.calls -= 1;
+                        let pos = l
+                            .deadlines
+                            .iter()
+                            .position(|d| d.to_bits() == deadline.to_bits())
+                            .expect("deadline tracked");
+                        l.deadlines.swap_remove(pos);
+                    }
+                }
+                // drain the rest; accounting must conserve exactly
+                for (idx, rows, deadline) in outstanding.drain(..) {
+                    let l = &mut loads[idx];
+                    l.rows -= rows;
+                    l.calls -= 1;
+                    let pos = l
+                        .deadlines
+                        .iter()
+                        .position(|d| d.to_bits() == deadline.to_bits())
+                        .expect("deadline tracked");
+                    l.deadlines.swap_remove(pos);
+                }
+                for (i, l) in loads.iter().enumerate() {
+                    prop_assert(
+                        l.rows == 0 && l.calls == 0 && l.deadlines.is_empty(),
+                        format!("engine {i} accounting leaked: {l:?}"),
+                    )?;
+                }
+                prop_assert(placed <= events.len(), "jobs placed once each".to_string())
+            },
+        );
+    }
+
+    #[test]
+    fn balance_ratio_clamps_zero_servers() {
+        assert_eq!(balance_ratio(&[10, 10]), 1.0);
+        assert_eq!(balance_ratio(&[20, 10]), 2.0);
+        assert_eq!(balance_ratio(&[10, 0]), 10.0);
+        assert_eq!(balance_ratio(&[]), 1.0);
+    }
+}

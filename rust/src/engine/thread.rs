@@ -1,20 +1,26 @@
-//! The engine thread: owns all PJRT state and serves [`EngineMsg`]s.
+//! The engine thread: serves [`EngineMsg`]s against a pluggable
+//! [`Backend`], plus the PJRT [`DeviceBackend`] implementation.
 //!
-//! Weight tensors are uploaded to device buffers once at startup and
-//! passed by reference to every `execute_b` call; per-call activations
-//! (token blocks, lengths, RNG keys, temperature) are tiny uploads
-//! staged through reusable host arenas (`Staging`) so the hot path
-//! performs no per-call host allocation. Probe parameters live host-side
-//! (they are small and the train step returns them each step anyway),
-//! with their device literals cached until `ProbeLoad`/`ProbeTrain`
-//! replaces the parameters.
+//! The thread owns everything backend-*independent*: the coalescing
+//! serve loop ([`crate::engine::scheduler`]), bin-packed EDF planning,
+//! shape validation, the decode-accounting/preemption loop, clock cost
+//! charges and metrics. What actually executes a bucket-shaped call is
+//! behind the [`Backend`] trait (`engine/backend.rs`): the
+//! [`DeviceBackend`] below drives the AOT'd executables through PJRT
+//! (weights uploaded once, per-call activations staged through reusable
+//! host arenas so the hot path performs no per-call host allocation),
+//! while [`crate::engine::backend::SimBackend`] emulates the trained
+//! models deterministically with no artifacts at all. Because charges
+//! and accounting live here, every backend gets identical budget,
+//! preemption and latency semantics for free.
 //!
 //! The serve loop works in scheduling rounds
 //! ([`crate::engine::scheduler`]): all queued `Generate`, `PrmScore` and
 //! `Embed` messages coalesce into shared bucket-shaped calls, and
 //! planned generate calls dispatch earliest-deadline-first.
 
-use crate::engine::batcher::{pack_bins, plan_batches_edf};
+use crate::engine::backend::{Backend, EngineShapes};
+use crate::engine::batcher::{pack_bins, plan_batches_edf, BatchPlan};
 use crate::engine::preempt::{run_decode_accounting, RowBudget};
 use crate::engine::protocol::*;
 use crate::engine::scheduler::{self, drain_round, EmbedReq, GenerateReq, PrmReq, Round};
@@ -29,120 +35,6 @@ use crate::{log_debug, log_info};
 use std::path::PathBuf;
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
-
-/// Static shape info read from `hlo_index.json` meta.
-#[derive(Debug, Clone)]
-pub struct EngineShapes {
-    pub batch_buckets: Vec<usize>,
-    pub chunk_lens: Vec<usize>,
-    pub query_len: usize,
-    pub prm_len: usize,
-    pub gen_max_new: usize,
-    pub chunk_max_new: usize,
-    pub probe_fwd_batch: usize,
-    pub probe_train_batch: usize,
-    pub probe_features: usize,
-    pub d_model: usize,
-}
-
-impl EngineShapes {
-    fn from_meta(meta: &Value) -> Result<EngineShapes> {
-        let probe = meta.req("probe")?;
-        let lm = meta.req("lm")?;
-        Ok(EngineShapes {
-            batch_buckets: meta
-                .req_arr("batch_buckets")?
-                .iter()
-                .map(|v| v.as_usize().ok_or_else(|| Error::artifact("bad bucket")))
-                .collect::<Result<_>>()?,
-            chunk_lens: meta
-                .req_arr("chunk_lens")?
-                .iter()
-                .map(|v| v.as_usize().ok_or_else(|| Error::artifact("bad len")))
-                .collect::<Result<_>>()?,
-            query_len: meta.req_usize("query_len")?,
-            prm_len: meta.req_usize("prm_len")?,
-            gen_max_new: meta.req_usize("gen_max_new")?,
-            chunk_max_new: meta.req_usize("chunk_max_new")?,
-            probe_fwd_batch: meta.req_usize("probe_fwd_batch")?,
-            probe_train_batch: meta.req_usize("probe_train_batch")?,
-            probe_features: probe.req_usize("features")?,
-            d_model: lm.req_usize("d_model")?,
-        })
-    }
-}
-
-/// Probe training state held on the engine thread.
-struct ProbeState {
-    /// Flat params in manifest order.
-    params: Vec<f32>,
-    /// Tensor boundaries (shapes + offsets) from the probe manifest.
-    entries: Vec<crate::runtime::weights::WeightEntry>,
-    /// Cached device literals of `params` in manifest order — rebuilt
-    /// lazily after [`ProbeState::set_params`] invalidates them, so the
-    /// `probe_fwd` hot path stops re-uploading every parameter tensor
-    /// on every chunk.
-    literals: Option<Vec<xla::Literal>>,
-}
-
-impl ProbeState {
-    /// Replace the parameters, invalidating the cached device literals.
-    /// Every write to `params` must go through here.
-    fn set_params(&mut self, params: Vec<f32>) {
-        self.params = params;
-        self.literals = None;
-    }
-
-    /// The cached param literals, building them on first use. Returned
-    /// mutably so the caller can push the per-call activation literal
-    /// and pop it again — append-only borrowing, never a rebuild.
-    fn literals(&mut self) -> Result<&mut Vec<xla::Literal>> {
-        if self.literals.is_none() {
-            let lits = self
-                .entries
-                .iter()
-                .map(|e| {
-                    let data = &self.params[e.offset..e.offset + e.size];
-                    if e.shape.is_empty() {
-                        Ok(xla::Literal::scalar(data[0]))
-                    } else {
-                        crate::runtime::literals::f32_tensor(data, &e.shape)
-                    }
-                })
-                .collect::<Result<Vec<_>>>()?;
-            self.literals = Some(lits);
-        }
-        Ok(self.literals.as_mut().expect("just built"))
-    }
-}
-
-/// Reusable host staging arenas for padded device-call inputs. Capacity
-/// grows to the largest bucket seen and is then reused — `clear` +
-/// `resize` never shrink a `Vec`, so the steady-state hot path performs
-/// zero host allocations for token/len/feature blocks.
-#[derive(Default)]
-struct Staging {
-    tokens: Vec<i32>,
-    lens: Vec<i32>,
-    feats: Vec<f32>,
-}
-
-impl Staging {
-    /// Reset the token block to `b × l` zeros and lens to `b` ones (the
-    /// padding-row defaults every call site wants).
-    fn reset(&mut self, b: usize, l: usize) {
-        self.tokens.clear();
-        self.tokens.resize(b * l, 0);
-        self.lens.clear();
-        self.lens.resize(b, 1);
-    }
-
-    /// Reset the feature block to `n` zeros.
-    fn reset_feats(&mut self, n: usize) {
-        self.feats.clear();
-        self.feats.resize(n, 0.0);
-    }
-}
 
 /// Scatter one coalesced op's per-item results back per request (the
 /// single copy of the round reply contract), or broadcast the one
@@ -168,71 +60,28 @@ fn send_scattered<T: Clone>(
     }
 }
 
+/// The backend-independent engine loop: scheduling, planning, budget
+/// accounting, metrics. One per engine thread.
 pub struct EngineThread {
-    execs: ExecutableSet,
-    lm_bufs: Vec<xla::PjRtBuffer>,
-    probe: ProbeState,
-    staging: Staging,
+    backend: Box<dyn Backend>,
     pub shapes: EngineShapes,
     clock: SharedClock,
     metrics: Arc<EngineMetrics>,
-    rng: Rng,
 }
 
 impl EngineThread {
     pub fn new(
-        artifacts: &PathBuf,
+        backend: Box<dyn Backend>,
         clock: SharedClock,
         metrics: Arc<EngineMetrics>,
-        seed: u64,
-    ) -> Result<EngineThread> {
-        let execs = ExecutableSet::new(artifacts)?;
-        let shapes = EngineShapes::from_meta(&execs.index().meta)?;
-
-        // the PRM is likelihood-based over the generator weights, so the
-        // engine holds exactly two weight sets: the LM and the probe.
-        let lm = WeightSet::load(artifacts, "lm")?;
-        let probe_ws = WeightSet::load(artifacts, "probe")?;
-        log_info!(
-            "engine: weights lm={} tensors, probe={} ({} f32)",
-            lm.len(),
-            probe_ws.len(),
-            probe_ws.blob.len()
-        );
-
-        let client = execs.client().clone();
-        let upload = |ws: &WeightSet| -> Result<Vec<xla::PjRtBuffer>> {
-            ws.entries
-                .iter()
-                .enumerate()
-                .map(|(i, e)| {
-                    let dims: Vec<usize> = if e.shape.is_empty() {
-                        vec![]
-                    } else {
-                        e.shape.clone()
-                    };
-                    client
-                        .buffer_from_host_buffer::<f32>(ws.tensor_data(i), &dims, None)
-                        .map_err(Error::from)
-                })
-                .collect()
-        };
-        let lm_bufs = upload(&lm)?;
-
-        Ok(EngineThread {
-            execs,
-            lm_bufs,
-            probe: ProbeState {
-                params: probe_ws.blob.clone(),
-                entries: probe_ws.entries.clone(),
-                literals: None,
-            },
-            staging: Staging::default(),
+    ) -> EngineThread {
+        let shapes = backend.shapes().clone();
+        EngineThread {
+            backend,
             shapes,
             clock,
             metrics,
-            rng: Rng::new(seed, 0xE17),
-        })
+        }
     }
 
     /// Blocking serve loop. Consumes messages until `Shutdown` or channel
@@ -314,7 +163,7 @@ impl EngineThread {
                 reply,
             }]),
             EngineMsg::ProbeFwd { feats, reply } => {
-                let _ = reply.send(self.probe_fwd(&feats));
+                let _ = reply.send(self.backend.probe_fwd(&feats));
             }
             EngineMsg::ProbeTrain {
                 train_feats,
@@ -325,7 +174,7 @@ impl EngineThread {
                 patience,
                 reply,
             } => {
-                let _ = reply.send(self.probe_train(
+                let _ = reply.send(self.backend.probe_train(
                     &train_feats,
                     &train_labels,
                     &val_feats,
@@ -335,7 +184,7 @@ impl EngineThread {
                 ));
             }
             EngineMsg::ProbeLoad { params, reply } => {
-                let _ = reply.send(self.probe_load(params));
+                let _ = reply.send(self.backend.probe_load(params));
             }
             EngineMsg::Info { reply } => {
                 let _ = reply.send(Ok(self.info()));
@@ -409,18 +258,13 @@ impl EngineThread {
                     .add(plan.job_indices.len() as u64);
                 continue;
             }
-            let exec_name = match plan.kind {
-                GenKind::Full => format!("lm_generate_b{}", plan.bucket),
-                GenKind::Chunk => format!("lm_chunk_b{}_l{}", plan.bucket, plan.len_bucket),
-            };
-            let exe = self.execs.get(&exec_name)?;
 
-            // assemble the padded token block in the reusable staging
-            // arena; padding rows get a 1-token prompt
+            // shape validation is backend-independent: every backend
+            // rejects prompts that overflow the planned length bucket
             let b = plan.bucket;
             let l = plan.len_bucket;
-            self.staging.reset(b, l);
-            for (row, &ji) in plan.job_indices.iter().enumerate() {
+            let mut prompts: Vec<&[u32]> = Vec::with_capacity(plan.job_indices.len());
+            for &ji in &plan.job_indices {
                 let t = &jobs[ji].tokens;
                 if t.len() > l {
                     return Err(Error::Engine(format!(
@@ -428,45 +272,18 @@ impl EngineThread {
                         t.len()
                     )));
                 }
-                for (c, &id) in t.iter().enumerate() {
-                    self.staging.tokens[row * l + c] = id as i32;
-                }
-                self.staging.lens[row] = t.len() as i32;
+                prompts.push(t);
             }
-            for row in plan.job_indices.len()..b {
-                self.staging.tokens[row * l] = 19; // 'Q' — dummy prompt for padding rows
-            }
-            let key = [self.rng.next_u32(), self.rng.next_u32()];
 
-            let client = self.execs.client().clone();
             let t0 = self.clock.now_ms();
-            let tok_buf =
-                client.buffer_from_host_buffer::<i32>(&self.staging.tokens, &[b, l], None)?;
-            let len_buf = client.buffer_from_host_buffer::<i32>(&self.staging.lens, &[b], None)?;
-            let key_buf = client.buffer_from_host_buffer::<u32>(&key, &[2], None)?;
-            let temp_buf =
-                client.buffer_from_host_buffer::<f32>(&[plan.temperature], &[], None)?;
-
-            let mut args: Vec<&xla::PjRtBuffer> = self.lm_bufs.iter().collect();
-            args.push(&tok_buf);
-            args.push(&len_buf);
-            args.push(&key_buf);
-            args.push(&temp_buf);
-            let out = exe.run_buffers(&args)?;
-            let tuple = out
-                .first()
-                .ok_or_else(|| Error::Engine("empty generate output".into()))?
-                .to_literal_sync()?;
-            let parts = tuple.to_tuple()?;
-            if parts.len() != 2 {
+            let rows = self.backend.generate(plan, &prompts)?;
+            if rows.len() < plan.job_indices.len() {
                 return Err(Error::Engine(format!(
-                    "generate returned {} outputs, expected 2",
-                    parts.len()
+                    "backend generated {} of {} rows",
+                    rows.len(),
+                    plan.job_indices.len()
                 )));
             }
-            let gen: Vec<i32> = parts[0].to_vec()?;
-            let gen_len: Vec<i32> = parts[1].to_vec()?;
-            let t_cols = gen.len() / b;
 
             // sim-clock cost: prefill, then the preemptible decode
             // accounting loop — one charged step per emitted column,
@@ -474,12 +291,12 @@ impl EngineThread {
             self.clock.charge(CostEvent::Prefill { batch: b, len: l });
             let after_call = self.clock.now_ms();
             let is_sim = self.clock.is_sim();
-            let rows: Vec<RowBudget> = plan
+            let budgets: Vec<RowBudget> = plan
                 .job_indices
                 .iter()
                 .enumerate()
                 .map(|(row, &ji)| {
-                    let natural_len = (gen_len[row] as usize).min(t_cols);
+                    let natural_len = rows[row].len();
                     let mut cap = jobs[ji].max_new_tokens.unwrap_or(usize::MAX);
                     let mut deadline_ms = deadlines[ji];
                     if !is_sim && after_call >= deadline_ms {
@@ -503,7 +320,7 @@ impl EngineThread {
                 })
                 .collect();
             let (cuts, steps) =
-                run_decode_accounting(self.clock.as_ref(), b, &rows, plan.max_steps);
+                run_decode_accounting(self.clock.as_ref(), b, &budgets, plan.max_steps);
             let call_ms = self.clock.now_ms() - t0;
 
             // metrics
@@ -519,7 +336,9 @@ impl EngineThread {
             self.metrics.preempted_rows.add(n_preempted as u64);
             self.metrics.decode_latency.record(call_ms);
             log_debug!(
-                "{exec_name}: {} jobs, {} steps, {} preempted, {:.1}ms",
+                "{} {:?} b{b}: {} jobs, {} steps, {} preempted, {:.1}ms",
+                self.backend.name(),
+                plan.kind,
                 plan.job_indices.len(),
                 steps,
                 n_preempted,
@@ -528,12 +347,8 @@ impl EngineThread {
 
             for (row, &ji) in plan.job_indices.iter().enumerate() {
                 let n = cuts[row].emitted;
-                let toks: Vec<u32> = gen[row * t_cols..row * t_cols + n]
-                    .iter()
-                    .map(|&t| t as u32)
-                    .collect();
                 results[ji] = Some(GenResult {
-                    tokens: toks,
+                    tokens: rows[row][..n].to_vec(),
                     call_ms,
                     batch_size: plan.job_indices.len(),
                     preempted: cuts[row].preempted,
@@ -551,8 +366,8 @@ impl EngineThread {
     // ------------------------------------------------------------------
 
     /// Serve a round's PRM scoring requests as one coalesced pass: all
-    /// prefixes ride shared bin-packed device calls, scores scatter back
-    /// per request. A device error fails every coalesced request.
+    /// prefixes ride shared bin-packed calls, scores scatter back per
+    /// request. A backend error fails every coalesced request.
     fn prm_round(&mut self, reqs: Vec<PrmReq>) {
         if reqs.len() > 1 {
             self.metrics.coalesced_prm.add((reqs.len() - 1) as u64);
@@ -577,33 +392,15 @@ impl EngineThread {
             let take = b.min(prefixes.len() - start);
             let chunk = &prefixes[start..start + take];
             start += take;
-            let exe = self.execs.get(&format!("prm_score_b{b}"))?;
-            self.staging.reset(b, l);
-            for (row, p) in chunk.iter().enumerate() {
-                let n = p.len().min(l);
-                for (c, &id) in p[..n].iter().enumerate() {
-                    self.staging.tokens[row * l + c] = id as i32;
-                }
-                self.staging.lens[row] = n as i32;
-            }
-            for row in chunk.len()..b {
-                self.staging.tokens[row * l] = 19;
-            }
-            let client = self.execs.client().clone();
             let t0 = self.clock.now_ms();
-            let tok_buf =
-                client.buffer_from_host_buffer::<i32>(&self.staging.tokens, &[b, l], None)?;
-            let len_buf = client.buffer_from_host_buffer::<i32>(&self.staging.lens, &[b], None)?;
-            let mut args: Vec<&xla::PjRtBuffer> = self.lm_bufs.iter().collect();
-            args.push(&tok_buf);
-            args.push(&len_buf);
-            let out = exe.run_buffers(&args)?;
-            let tuple = out
-                .first()
-                .ok_or_else(|| Error::Engine("empty prm output".into()))?
-                .to_literal_sync()?;
-            let parts = tuple.to_tuple()?;
-            let probs: Vec<f32> = parts[0].to_vec()?;
+            let probs = self.backend.prm_score(b, chunk)?;
+            if probs.len() < chunk.len() {
+                return Err(Error::Engine(format!(
+                    "backend scored {} of {} prefixes",
+                    probs.len(),
+                    chunk.len()
+                )));
+            }
             self.clock.charge(CostEvent::PrmScore { batch: b, len: l });
             self.metrics.prm_calls.inc();
             self.metrics.prm_rows.add(chunk.len() as u64);
@@ -646,11 +443,6 @@ impl EngineThread {
 
     fn embed(&mut self, kind: EmbedKind, queries: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
         let l = self.shapes.query_len;
-        let d = self.shapes.d_model;
-        let prefix = match kind {
-            EmbedKind::Pool => "embed_pool",
-            EmbedKind::Small => "embed_small",
-        };
         let mut out = Vec::with_capacity(queries.len());
         let bins = pack_bins(queries.len(), &self.shapes.batch_buckets);
         let mut start = 0usize;
@@ -658,51 +450,339 @@ impl EngineThread {
             let take = b.min(queries.len() - start);
             let chunk = &queries[start..start + take];
             start += take;
-            let exe = self.execs.get(&format!("{prefix}_b{b}"))?;
-            self.staging.reset(b, l);
-            for (row, q) in chunk.iter().enumerate() {
+            for q in chunk {
                 if q.len() > l {
                     return Err(Error::Engine(format!(
                         "query of {} tokens exceeds query_len {l}",
                         q.len()
                     )));
                 }
-                for (c, &id) in q.iter().enumerate() {
-                    self.staging.tokens[row * l + c] = id as i32;
-                }
-                self.staging.lens[row] = q.len() as i32;
             }
-            for row in chunk.len()..b {
-                self.staging.tokens[row * l] = 19;
+            let vecs = self.backend.embed(kind, b, chunk)?;
+            if vecs.len() < chunk.len() {
+                return Err(Error::Engine(format!(
+                    "backend embedded {} of {} queries",
+                    vecs.len(),
+                    chunk.len()
+                )));
             }
-            let client = self.execs.client().clone();
-            let tok_buf =
-                client.buffer_from_host_buffer::<i32>(&self.staging.tokens, &[b, l], None)?;
-            let len_buf = client.buffer_from_host_buffer::<i32>(&self.staging.lens, &[b], None)?;
-            let mut args: Vec<&xla::PjRtBuffer> = self.lm_bufs.iter().collect();
-            args.push(&tok_buf);
-            args.push(&len_buf);
-            let result = exe.run_buffers(&args)?;
-            let tuple = result
-                .first()
-                .ok_or_else(|| Error::Engine("empty embed output".into()))?
-                .to_literal_sync()?;
-            let parts = tuple.to_tuple()?;
-            let flat: Vec<f32> = parts[0].to_vec()?;
             self.clock.charge(CostEvent::Embed { batch: b });
             self.metrics.embed_calls.inc();
             self.metrics.embed_rows.add(chunk.len() as u64);
             self.metrics.embed_padded_rows.add((b - chunk.len()) as u64);
-            for row in 0..chunk.len() {
-                out.push(flat[row * d..(row + 1) * d].to_vec());
-            }
+            out.extend(vecs.into_iter().take(chunk.len()));
         }
         Ok(out)
     }
 
-    // ------------------------------------------------------------------
-    // probe
-    // ------------------------------------------------------------------
+    fn info(&self) -> Value {
+        let mut v = self.backend.describe();
+        v.set("metrics", self.metrics.to_json());
+        v.set(
+            "shapes",
+            Value::obj()
+                .with("batch_buckets", self.shapes.batch_buckets.clone())
+                .with("chunk_lens", self.shapes.chunk_lens.clone())
+                .with("query_len", self.shapes.query_len)
+                .with("prm_len", self.shapes.prm_len)
+                .with("gen_max_new", self.shapes.gen_max_new)
+                .with("probe_features", self.shapes.probe_features),
+        );
+        v
+    }
+}
+
+// ---------------------------------------------------------------------
+// DeviceBackend: the PJRT execution path
+// ---------------------------------------------------------------------
+
+/// Probe training state held on the engine thread.
+struct ProbeState {
+    /// Flat params in manifest order.
+    params: Vec<f32>,
+    /// Tensor boundaries (shapes + offsets) from the probe manifest.
+    entries: Vec<crate::runtime::weights::WeightEntry>,
+    /// Cached device literals of `params` in manifest order — rebuilt
+    /// lazily after [`ProbeState::set_params`] invalidates them, so the
+    /// `probe_fwd` hot path stops re-uploading every parameter tensor
+    /// on every chunk.
+    literals: Option<Vec<xla::Literal>>,
+}
+
+impl ProbeState {
+    /// Replace the parameters, invalidating the cached device literals.
+    /// Every write to `params` must go through here.
+    fn set_params(&mut self, params: Vec<f32>) {
+        self.params = params;
+        self.literals = None;
+    }
+
+    /// The cached param literals, building them on first use. Returned
+    /// mutably so the caller can push the per-call activation literal
+    /// and pop it again — append-only borrowing, never a rebuild.
+    fn literals(&mut self) -> Result<&mut Vec<xla::Literal>> {
+        if self.literals.is_none() {
+            let lits = self
+                .entries
+                .iter()
+                .map(|e| {
+                    let data = &self.params[e.offset..e.offset + e.size];
+                    if e.shape.is_empty() {
+                        Ok(xla::Literal::scalar(data[0]))
+                    } else {
+                        crate::runtime::literals::f32_tensor(data, &e.shape)
+                    }
+                })
+                .collect::<Result<Vec<_>>>()?;
+            self.literals = Some(lits);
+        }
+        Ok(self.literals.as_mut().expect("just built"))
+    }
+}
+
+/// Reusable host staging arenas for padded device-call inputs. Capacity
+/// grows to the largest bucket seen and is then reused — `clear` +
+/// `resize` never shrink a `Vec`, so the steady-state hot path performs
+/// zero host allocations for token/len/feature blocks.
+#[derive(Default)]
+struct Staging {
+    tokens: Vec<i32>,
+    lens: Vec<i32>,
+    feats: Vec<f32>,
+}
+
+impl Staging {
+    /// Reset the token block to `b × l` zeros and lens to `b` ones (the
+    /// padding-row defaults every call site wants).
+    fn reset(&mut self, b: usize, l: usize) {
+        self.tokens.clear();
+        self.tokens.resize(b * l, 0);
+        self.lens.clear();
+        self.lens.resize(b, 1);
+    }
+
+    /// Reset the feature block to `n` zeros.
+    fn reset_feats(&mut self, n: usize) {
+        self.feats.clear();
+        self.feats.resize(n, 0.0);
+    }
+}
+
+/// The PJRT device execution path: AOT'd executables, device-resident
+/// weights, host staging arenas. `!Send` by construction (the `xla`
+/// crate's handles are `Rc`-based), which is why backends are built *on*
+/// the engine thread via [`crate::engine::backend::BackendFactory`].
+pub struct DeviceBackend {
+    execs: ExecutableSet,
+    lm_bufs: Vec<xla::PjRtBuffer>,
+    probe: ProbeState,
+    staging: Staging,
+    shapes: EngineShapes,
+    clock: SharedClock,
+    rng: Rng,
+}
+
+impl DeviceBackend {
+    /// Load artifacts and upload weights. `stream` differentiates the
+    /// RNG stream per pool member (member 0 matches the historical
+    /// single-engine stream exactly).
+    pub fn new(
+        artifacts: &PathBuf,
+        clock: SharedClock,
+        seed: u64,
+        stream: u64,
+    ) -> Result<DeviceBackend> {
+        let execs = ExecutableSet::new(artifacts)?;
+        let shapes = EngineShapes::from_meta(&execs.index().meta)?;
+
+        // the PRM is likelihood-based over the generator weights, so the
+        // engine holds exactly two weight sets: the LM and the probe.
+        let lm = WeightSet::load(artifacts, "lm")?;
+        let probe_ws = WeightSet::load(artifacts, "probe")?;
+        log_info!(
+            "engine: weights lm={} tensors, probe={} ({} f32)",
+            lm.len(),
+            probe_ws.len(),
+            probe_ws.blob.len()
+        );
+
+        let client = execs.client().clone();
+        let upload = |ws: &WeightSet| -> Result<Vec<xla::PjRtBuffer>> {
+            ws.entries
+                .iter()
+                .enumerate()
+                .map(|(i, e)| {
+                    let dims: Vec<usize> = if e.shape.is_empty() {
+                        vec![]
+                    } else {
+                        e.shape.clone()
+                    };
+                    client
+                        .buffer_from_host_buffer::<f32>(ws.tensor_data(i), &dims, None)
+                        .map_err(Error::from)
+                })
+                .collect()
+        };
+        let lm_bufs = upload(&lm)?;
+
+        Ok(DeviceBackend {
+            execs,
+            lm_bufs,
+            probe: ProbeState {
+                params: probe_ws.blob.clone(),
+                entries: probe_ws.entries.clone(),
+                literals: None,
+            },
+            staging: Staging::default(),
+            shapes,
+            clock,
+            rng: Rng::new(seed, 0xE17 + stream),
+        })
+    }
+}
+
+impl Backend for DeviceBackend {
+    fn name(&self) -> &'static str {
+        "device"
+    }
+
+    fn shapes(&self) -> &EngineShapes {
+        &self.shapes
+    }
+
+    fn describe(&self) -> Value {
+        Value::obj()
+            .with("backend", "device")
+            .with("platform", self.execs.client().platform_name())
+            .with("compile_ms_total", self.execs.total_compile_ms())
+    }
+
+    fn generate(&mut self, plan: &BatchPlan, prompts: &[&[u32]]) -> Result<Vec<Vec<u32>>> {
+        let exec_name = match plan.kind {
+            GenKind::Full => format!("lm_generate_b{}", plan.bucket),
+            GenKind::Chunk => format!("lm_chunk_b{}_l{}", plan.bucket, plan.len_bucket),
+        };
+        let exe = self.execs.get(&exec_name)?;
+
+        // assemble the padded token block in the reusable staging
+        // arena; padding rows get a 1-token prompt
+        let b = plan.bucket;
+        let l = plan.len_bucket;
+        self.staging.reset(b, l);
+        for (row, t) in prompts.iter().enumerate() {
+            for (c, &id) in t.iter().enumerate() {
+                self.staging.tokens[row * l + c] = id as i32;
+            }
+            self.staging.lens[row] = t.len() as i32;
+        }
+        for row in prompts.len()..b {
+            self.staging.tokens[row * l] = 19; // 'Q' — dummy prompt for padding rows
+        }
+        let key = [self.rng.next_u32(), self.rng.next_u32()];
+
+        let client = self.execs.client().clone();
+        let tok_buf = client.buffer_from_host_buffer::<i32>(&self.staging.tokens, &[b, l], None)?;
+        let len_buf = client.buffer_from_host_buffer::<i32>(&self.staging.lens, &[b], None)?;
+        let key_buf = client.buffer_from_host_buffer::<u32>(&key, &[2], None)?;
+        let temp_buf = client.buffer_from_host_buffer::<f32>(&[plan.temperature], &[], None)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.lm_bufs.iter().collect();
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        args.push(&key_buf);
+        args.push(&temp_buf);
+        let out = exe.run_buffers(&args)?;
+        let tuple = out
+            .first()
+            .ok_or_else(|| Error::Engine("empty generate output".into()))?
+            .to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != 2 {
+            return Err(Error::Engine(format!(
+                "generate returned {} outputs, expected 2",
+                parts.len()
+            )));
+        }
+        let gen: Vec<i32> = parts[0].to_vec()?;
+        let gen_len: Vec<i32> = parts[1].to_vec()?;
+        let t_cols = gen.len() / b;
+
+        Ok((0..prompts.len())
+            .map(|row| {
+                let natural_len = (gen_len[row] as usize).min(t_cols);
+                gen[row * t_cols..row * t_cols + natural_len]
+                    .iter()
+                    .map(|&t| t as u32)
+                    .collect()
+            })
+            .collect())
+    }
+
+    fn prm_score(&mut self, b: usize, prefixes: &[Vec<u32>]) -> Result<Vec<f32>> {
+        let l = self.shapes.prm_len;
+        let exe = self.execs.get(&format!("prm_score_b{b}"))?;
+        self.staging.reset(b, l);
+        for (row, p) in prefixes.iter().enumerate() {
+            let n = p.len().min(l);
+            for (c, &id) in p[..n].iter().enumerate() {
+                self.staging.tokens[row * l + c] = id as i32;
+            }
+            self.staging.lens[row] = n as i32;
+        }
+        for row in prefixes.len()..b {
+            self.staging.tokens[row * l] = 19;
+        }
+        let client = self.execs.client().clone();
+        let tok_buf = client.buffer_from_host_buffer::<i32>(&self.staging.tokens, &[b, l], None)?;
+        let len_buf = client.buffer_from_host_buffer::<i32>(&self.staging.lens, &[b], None)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.lm_bufs.iter().collect();
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        let out = exe.run_buffers(&args)?;
+        let tuple = out
+            .first()
+            .ok_or_else(|| Error::Engine("empty prm output".into()))?
+            .to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        let probs: Vec<f32> = parts[0].to_vec()?;
+        Ok(probs[..prefixes.len()].to_vec())
+    }
+
+    fn embed(&mut self, kind: EmbedKind, b: usize, queries: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        let l = self.shapes.query_len;
+        let d = self.shapes.d_model;
+        let prefix = match kind {
+            EmbedKind::Pool => "embed_pool",
+            EmbedKind::Small => "embed_small",
+        };
+        let exe = self.execs.get(&format!("{prefix}_b{b}"))?;
+        self.staging.reset(b, l);
+        for (row, q) in queries.iter().enumerate() {
+            for (c, &id) in q.iter().enumerate() {
+                self.staging.tokens[row * l + c] = id as i32;
+            }
+            self.staging.lens[row] = q.len() as i32;
+        }
+        for row in queries.len()..b {
+            self.staging.tokens[row * l] = 19;
+        }
+        let client = self.execs.client().clone();
+        let tok_buf = client.buffer_from_host_buffer::<i32>(&self.staging.tokens, &[b, l], None)?;
+        let len_buf = client.buffer_from_host_buffer::<i32>(&self.staging.lens, &[b], None)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.lm_bufs.iter().collect();
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        let result = exe.run_buffers(&args)?;
+        let tuple = result
+            .first()
+            .ok_or_else(|| Error::Engine("empty embed output".into()))?
+            .to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        let flat: Vec<f32> = parts[0].to_vec()?;
+        Ok((0..queries.len())
+            .map(|row| flat[row * d..(row + 1) * d].to_vec())
+            .collect())
+    }
 
     fn probe_fwd(&mut self, feats: &[Vec<f32>]) -> Result<Vec<f32>> {
         let b = self.shapes.probe_fwd_batch;
@@ -881,22 +961,5 @@ impl EngineThread {
         }
         self.probe.set_params(params);
         Ok(())
-    }
-
-    fn info(&self) -> Value {
-        Value::obj()
-            .with("platform", self.execs.client().platform_name())
-            .with("compile_ms_total", self.execs.total_compile_ms())
-            .with("metrics", self.metrics.to_json())
-            .with(
-                "shapes",
-                Value::obj()
-                    .with("batch_buckets", self.shapes.batch_buckets.clone())
-                    .with("chunk_lens", self.shapes.chunk_lens.clone())
-                    .with("query_len", self.shapes.query_len)
-                    .with("prm_len", self.shapes.prm_len)
-                    .with("gen_max_new", self.shapes.gen_max_new)
-                    .with("probe_features", self.shapes.probe_features),
-            )
     }
 }

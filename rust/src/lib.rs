@@ -29,7 +29,7 @@
 //! | [`taskgen`] | synthetic modular-arithmetic CoT task generator |
 //! | [`data`] | JSONL dataset IO and splits |
 //! | [`runtime`] | PJRT executable loading, weights, literal helpers |
-//! | [`engine`] | engine thread, continuous batcher, KV cache, sampler |
+//! | [`engine`] | backend-driven engine threads (device/sim), sharded pool, continuous batcher, scheduler |
 //! | [`strategies`] | majority voting, best-of-N, beam search |
 //! | [`probe`] | accuracy probe: features, training, Platt calibration |
 //! | [`costmodel`] | per-strategy token/latency cost estimators |

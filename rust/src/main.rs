@@ -9,7 +9,7 @@
 //! | `collect` | build the evaluation matrix (query × strategy × repeat) |
 //! | `train-probe` | train + Platt-calibrate the accuracy probe (AOT'd Adam) |
 //! | `figures` | regenerate the paper's figures from the matrix |
-//! | `serve` | run the adaptive serving driver with a load generator |
+//! | `serve` | run the adaptive serving driver with a load generator (sharded engine pool via `--engines N`, `--backend device\|sim`) |
 //! | `pipeline` | collect → train-probe → figures, end to end |
 //! | `info` | print artifact/runtime diagnostics |
 
@@ -43,6 +43,7 @@ fn print_help() {
            figures      [--config F] [--results DIR] [--fig ID|all]\n\
            serve        [--config F] [--artifacts DIR] [--rate R] [--requests N]\n\
                         [--lambda-t X] [--lambda-l X] [--strategy S] [--sim]\n\
+                        [--engines N] [--backend device|sim]\n\
                         [--deadline-ms X] [--max-tokens N]\n\
                         [--budget-mix W:SPEC,... e.g. 30:d500,30:d5000,40:unlimited]\n\
            pipeline     [--config F] [--artifacts DIR] [--out DIR] [--quick]\n\

@@ -148,6 +148,14 @@ impl EngineMetrics {
         EngineMetrics::default()
     }
 
+    /// Real (non-padding) rows this engine executed across every op —
+    /// the "rows served" quantity pool balance stats are computed over.
+    /// Keep this the single definition so the pool report and the bench
+    /// stat can never disagree.
+    pub fn rows_served(&self) -> u64 {
+        self.decode_rows.get() + self.prm_rows.get() + self.embed_rows.get()
+    }
+
     /// Fraction of batch rows that were padding.
     pub fn padding_waste(&self) -> f64 {
         Self::waste(self.decode_rows.get(), self.padded_rows.get())
@@ -197,6 +205,69 @@ impl EngineMetrics {
             .with(
                 "request_latency_ms",
                 self.request_latency.summary().to_json(),
+            )
+    }
+}
+
+/// Per-engine routing counters inside a [`PoolMetrics`].
+#[derive(Debug, Default)]
+pub struct PoolEngineMetrics {
+    /// Submissions placed on this engine.
+    pub submits: Counter,
+    /// Rows (jobs/prefixes/queries/feature rows) placed on this engine.
+    pub rows_submitted: Counter,
+    /// Rows whose replies were harvested (or dropped) by the requester.
+    pub rows_completed: Counter,
+}
+
+impl PoolEngineMetrics {
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("submits", self.submits.get())
+            .with("rows_submitted", self.rows_submitted.get())
+            .with("rows_completed", self.rows_completed.get())
+    }
+}
+
+/// Placement metrics for the sharded engine pool
+/// ([`crate::engine::pool::EnginePool`]): how many submissions were
+/// placed, how often the deadline-aware tiebreak decided, and per-engine
+/// submission/row counters. Per-engine *execution* metrics stay on each
+/// engine's own [`EngineMetrics`].
+#[derive(Debug)]
+pub struct PoolMetrics {
+    /// Accounted submissions routed through the placement policy.
+    pub placements: Counter,
+    /// Placements where the EDF tiebreak picked a different engine than
+    /// plain least-loaded would have.
+    pub deadline_tiebreaks: Counter,
+    per_engine: Vec<PoolEngineMetrics>,
+}
+
+impl PoolMetrics {
+    pub fn new(engines: usize) -> PoolMetrics {
+        PoolMetrics {
+            placements: Counter::new(),
+            deadline_tiebreaks: Counter::new(),
+            per_engine: (0..engines).map(|_| PoolEngineMetrics::default()).collect(),
+        }
+    }
+
+    pub fn engines(&self) -> usize {
+        self.per_engine.len()
+    }
+
+    pub fn engine(&self, i: usize) -> &PoolEngineMetrics {
+        &self.per_engine[i]
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("placements", self.placements.get())
+            .with("deadline_tiebreaks", self.deadline_tiebreaks.get())
+            .with(
+                "per_engine",
+                Value::Arr(self.per_engine.iter().map(|m| m.to_json()).collect()),
             )
     }
 }
@@ -295,6 +366,22 @@ mod tests {
         let v = m.to_json();
         assert!((v.req_f64("realloc_ms_granted").unwrap() - 2.5).abs() < 1e-12);
         assert_eq!(v.req_f64("realloc_grants").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn pool_metrics_per_engine_counters() {
+        let m = PoolMetrics::new(2);
+        assert_eq!(m.engines(), 2);
+        m.placements.inc();
+        m.engine(1).submits.inc();
+        m.engine(1).rows_submitted.add(8);
+        m.engine(1).rows_completed.add(8);
+        let v = m.to_json();
+        assert_eq!(v.req_f64("placements").unwrap(), 1.0);
+        let per = v.req_arr("per_engine").unwrap();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[1].req_f64("rows_submitted").unwrap(), 8.0);
+        assert_eq!(per[0].req_f64("submits").unwrap(), 0.0);
     }
 
     #[test]

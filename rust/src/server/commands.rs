@@ -2,10 +2,10 @@
 //! strategies, probe pipeline and figures.
 
 use crate::cli::Args;
-use crate::config::Config;
+use crate::config::{BackendKind, Config};
 use crate::costmodel::CostModel;
 use crate::data::Splits;
-use crate::engine::{EmbedKind, Engine};
+use crate::engine::{EmbedKind, Engine, EngineHandle, EnginePool};
 use crate::error::{Error, Result};
 use crate::figures::{self, EvalTable};
 use crate::matrix::{self, Matrix};
@@ -49,14 +49,18 @@ fn probe_stem(cfg: &Config, kind: EmbedKind) -> PathBuf {
     cfg.paths.results.join(name)
 }
 
-fn make_executor(cfg: &Config, engine: &Engine) -> Executor {
-    let mut ex = Executor::new(engine.handle(), engine.clock.clone(), cfg.engine.temperature);
+fn make_executor(
+    cfg: &Config,
+    handle: EngineHandle,
+    clock: crate::util::clock::SharedClock,
+) -> Executor {
+    let mut ex = Executor::new(handle, clock, cfg.engine.temperature);
     ex.beam_max_rounds = cfg.space.beam_max_rounds;
     ex
 }
 
-fn feature_builder(engine: &Engine) -> Result<FeatureBuilder> {
-    let info = engine.handle().info()?;
+fn feature_builder(handle: &EngineHandle) -> Result<FeatureBuilder> {
+    let info = handle.info()?;
     // features = d_model + strategy scalars + method one-hot + query len;
     // the non-embedding width is registry-driven (see FeatureBuilder).
     let d_model = info
@@ -86,7 +90,7 @@ pub fn cmd_collect(raw: &[String]) -> Result<()> {
         cfg.engine.sim_clock = true;
     }
     let engine = Engine::start(&cfg)?;
-    let executor = make_executor(&cfg, &engine);
+    let executor = make_executor(&cfg, engine.handle(), engine.clock.clone());
     let splits = Splits::load(&cfg.paths().data_dir())?;
     let strategies = Strategy::enumerate(&cfg.space);
 
@@ -135,7 +139,7 @@ pub fn cmd_train_probe(raw: &[String]) -> Result<()> {
     let splits = Splits::load(&cfg.paths().data_dir())?;
     let train_matrix = require_matrix(&cfg, "train")?;
     let calib_matrix = require_matrix(&cfg, "calib")?;
-    let fb = feature_builder(&engine)?;
+    let fb = feature_builder(&engine.handle())?;
 
     let kinds: Vec<EmbedKind> = match args.str_or("embedding", "both") {
         "pool" => vec![EmbedKind::Pool],
@@ -157,11 +161,17 @@ pub fn cmd_train_probe(raw: &[String]) -> Result<()> {
         )?;
         let stem = probe_stem(&cfg, kind);
         ProbeCheckpoint::save(&probe, &stem)?;
+        // user-supplied --results can produce a stem with no final path
+        // component (e.g. `--results ..`); that's a bad artifact path,
+        // not a panic
+        let file_name = stem.file_name().ok_or_else(|| {
+            Error::Artifact(format!(
+                "probe checkpoint stem '{}' has no file name — check --results",
+                stem.display()
+            ))
+        })?;
         std::fs::write(
-            stem.with_file_name(format!(
-                "{}_report.json",
-                stem.file_name().unwrap().to_string_lossy()
-            )),
+            stem.with_file_name(format!("{}_report.json", file_name.to_string_lossy())),
             report.pretty(),
         )?;
         log_info!("saved probe checkpoint {}", stem.display());
@@ -203,7 +213,7 @@ pub fn build_eval_table(
     costs: &CostModel,
 ) -> Result<EvalTable> {
     probe.install(&engine.handle())?;
-    let fb = feature_builder(engine)?;
+    let fb = feature_builder(&engine.handle())?;
     let tokenizer = Tokenizer::new();
     let strategies = Strategy::enumerate(&cfg.space);
     let embs = embed_queries(&engine.handle(), &tokenizer, probe.embed_kind, &splits.test)?;
@@ -253,7 +263,7 @@ pub fn cmd_figures(raw: &[String]) -> Result<()> {
     if want("3") {
         // calibration pairs on the calib split with the pool probe
         probe_pool.install(&engine.handle())?;
-        let fb = feature_builder(&engine)?;
+        let fb = feature_builder(&engine.handle())?;
         let tokenizer = Tokenizer::new();
         let calib_emb = embed_queries(
             &engine.handle(),
@@ -337,12 +347,51 @@ fn write_summary(cfg: &Config, table: &EvalTable, dir: &Path) -> Result<()> {
 // serve
 // ---------------------------------------------------------------------
 
+/// Assemble the adaptive routing mode: probe checkpoint + cost model +
+/// feature builder. Fails when the trained assets are missing.
+fn adaptive_mode(cfg: &Config, args: &Args, handle: &EngineHandle) -> Result<Mode> {
+    let kind = match args.str_or("embedding", "pool") {
+        "small" => EmbedKind::Small,
+        _ => EmbedKind::Pool,
+    };
+    let probe = ProbeCheckpoint::load(&probe_stem(cfg, kind))?;
+    probe.install(handle)?;
+    let costs = CostModel::from_json(&crate::util::json::parse(
+        &std::fs::read_to_string(cfg.paths.results.join("cost_model.json"))
+            .map_err(|e| Error::artifact(format!("missing cost_model.json ({e}) — run train-probe")))?,
+    )?)?;
+    if costs.bucket_edges().is_empty() {
+        log_info!(
+            "serve: legacy cost_model.json without budget buckets — deadline \
+             routing falls back to unbudgeted means (rerun train-probe)"
+        );
+    } else {
+        log_info!(
+            "serve: budget-bucket cost model ({} strategies x {} deadline buckets)",
+            costs.len(),
+            costs.bucket_edges().len()
+        );
+    }
+    let fb = feature_builder(handle)?;
+    let router = Router::new(Strategy::enumerate(&cfg.space), probe, costs, fb);
+    let lambdas = Lambdas::new(
+        args.f64_or("lambda-t", 1e-4)?,
+        args.f64_or("lambda-l", 1e-5)?,
+    );
+    log_info!(
+        "serve: adaptive routing with λ_T={} λ_L={}",
+        lambdas.token,
+        lambdas.latency
+    );
+    Ok(Mode::Adaptive(router, lambdas))
+}
+
 pub fn cmd_serve(raw: &[String]) -> Result<()> {
     let values: Vec<&str> = [
         COMMON_VALUES,
         &[
             "rate", "requests", "workers", "lambda-t", "lambda-l", "strategy", "embedding",
-            "deadline-ms", "max-tokens", "budget-mix",
+            "deadline-ms", "max-tokens", "budget-mix", "engines", "backend",
         ],
     ]
     .concat();
@@ -351,9 +400,34 @@ pub fn cmd_serve(raw: &[String]) -> Result<()> {
     if args.flag("sim") {
         cfg.engine.sim_clock = true;
     }
-    let engine = Engine::start(&cfg)?;
-    let executor = make_executor(&cfg, &engine);
-    let splits = Splits::load(&cfg.paths().data_dir())?;
+    if let Some(b) = args.opt_str("backend") {
+        cfg.engine.backend = BackendKind::parse(b)?;
+    }
+    cfg.engine.engines = args.usize_or("engines", cfg.engine.engines)?;
+    if cfg.engine.backend == BackendKind::Sim && !cfg.engine.sim_clock {
+        // the sim backend computes device calls in microseconds; its
+        // latency semantics come from the sim clock's cost model
+        log_info!("serve: sim backend — enabling the sim clock for modeled latencies");
+        cfg.engine.sim_clock = true;
+    }
+    let pool = EnginePool::start(&cfg)?;
+    let handle = pool.handle();
+    log_info!(
+        "serve: {} engine(s), {} backend",
+        pool.engines(),
+        cfg.engine.backend.as_str()
+    );
+    let executor = make_executor(&cfg, handle.clone(), pool.clock.clone());
+    // the sim backend needs no artifacts; synthesize query splits when
+    // the data directory is absent so a fresh checkout can serve
+    let splits = match Splits::load(&cfg.paths().data_dir()) {
+        Ok(s) => s,
+        Err(e) if cfg.engine.backend == BackendKind::Sim => {
+            log_info!("serve: no data splits ({e}); synthesizing sim queries");
+            Splits::synthesize(cfg.seed)
+        }
+        Err(e) => return Err(e),
+    };
 
     let mode = match args.opt_str("strategy") {
         Some(id) => {
@@ -362,43 +436,20 @@ pub fn cmd_serve(raw: &[String]) -> Result<()> {
             log_info!("serve: static strategy {}", s.id());
             Mode::Static(s)
         }
-        None => {
-            let kind = match args.str_or("embedding", "pool") {
-                "small" => EmbedKind::Small,
-                _ => EmbedKind::Pool,
-            };
-            let probe = ProbeCheckpoint::load(&probe_stem(&cfg, kind))?;
-            probe.install(&engine.handle())?;
-            let costs = CostModel::from_json(&crate::util::json::parse(
-                &std::fs::read_to_string(cfg.paths.results.join("cost_model.json")).map_err(
-                    |e| Error::artifact(format!("missing cost_model.json ({e}) — run train-probe")),
-                )?,
-            )?)?;
-            if costs.bucket_edges().is_empty() {
+        None => match adaptive_mode(&cfg, &args, &handle) {
+            Ok(mode) => mode,
+            Err(e) if cfg.engine.backend == BackendKind::Sim => {
+                // the sim backend exists to run engine-full without any
+                // trained artifacts; don't let missing probe/cost files
+                // kill the run — serve a static baseline instead
                 log_info!(
-                    "serve: legacy cost_model.json without budget buckets — deadline \
-                     routing falls back to unbudgeted means (rerun train-probe)"
+                    "serve: adaptive routing unavailable ({e}); sim backend falls back \
+                     to static majority_vote@4 (pass --strategy to choose)"
                 );
-            } else {
-                log_info!(
-                    "serve: budget-bucket cost model ({} strategies x {} deadline buckets)",
-                    costs.len(),
-                    costs.bucket_edges().len()
-                );
+                Mode::Static(Strategy::mv(4))
             }
-            let fb = feature_builder(&engine)?;
-            let router = Router::new(Strategy::enumerate(&cfg.space), probe, costs, fb);
-            let lambdas = Lambdas::new(
-                args.f64_or("lambda-t", 1e-4)?,
-                args.f64_or("lambda-l", 1e-5)?,
-            );
-            log_info!(
-                "serve: adaptive routing with λ_T={} λ_L={}",
-                lambdas.token,
-                lambdas.latency
-            );
-            Mode::Adaptive(router, lambdas)
-        }
+            Err(e) => return Err(e),
+        },
     };
 
     if !args.flag("no-warmup") {

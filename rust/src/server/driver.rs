@@ -205,7 +205,10 @@ pub fn run(
     }
 
     let wall_s = start.elapsed().as_secs_f64();
-    Ok(ServeReport::new(served, wall_s, stepper.metrics.to_json()))
+    // per-engine utilization + placement counters, when the executor
+    // fronts a sharded pool (None on the classic single-engine path)
+    let pool = executor.engine.pool_report();
+    Ok(ServeReport::new(served, wall_s, stepper.metrics.to_json(), pool))
 }
 
 /// Aggregated serving report.
@@ -216,14 +219,19 @@ pub struct ServeReport {
     /// Continuation-executor counters (steps, submissions, reallocation
     /// grants) captured at the end of the run.
     pub stepper: Value,
+    /// Pool placement + per-engine utilization
+    /// ([`crate::engine::pool::PoolRouter::report`]) when serving from a
+    /// sharded [`crate::engine::pool::EnginePool`] of 2+ engines.
+    pub pool: Option<Value>,
 }
 
 impl ServeReport {
-    fn new(served: Vec<Served>, wall_s: f64, stepper: Value) -> ServeReport {
+    fn new(served: Vec<Served>, wall_s: f64, stepper: Value, pool: Option<Value>) -> ServeReport {
         ServeReport {
             served,
             wall_s,
             stepper,
+            pool,
         }
     }
 
@@ -270,7 +278,7 @@ impl ServeReport {
         for k in keys {
             strat_json.set(k, by_strategy[*k]);
         }
-        Value::obj()
+        let mut v = Value::obj()
             .with("requests", self.served.len())
             .with("wall_s", self.wall_s)
             .with("throughput_rps", self.served.len() as f64 / self.wall_s.max(1e-9))
@@ -285,7 +293,11 @@ impl ServeReport {
             .with("stepper", self.stepper.clone())
             .with("service_ms", service.summary().to_json())
             .with("e2e_ms", e2e.summary().to_json())
-            .with("selection", strat_json)
+            .with("selection", strat_json);
+        if let Some(pool) = &self.pool {
+            v.set("pool", pool.clone());
+        }
+        v
     }
 
     pub fn log_summary(&self, label: &str) {
@@ -308,5 +320,15 @@ impl ServeReport {
                 .and_then(|s| s.req_f64("realloc_grants"))
                 .unwrap_or(0.0),
         );
+        if let Some(pool) = &self.pool {
+            log_info!(
+                "serve[{label}]: pool {} engines, balance ratio {:.2}, placements {:.0} \
+                 ({:.0} deadline tiebreaks)",
+                pool.req_f64("engines").unwrap_or(0.0),
+                pool.req_f64("balance_ratio").unwrap_or(1.0),
+                pool.req_f64("placements").unwrap_or(0.0),
+                pool.req_f64("deadline_tiebreaks").unwrap_or(0.0),
+            );
+        }
     }
 }

@@ -355,19 +355,26 @@ impl Stepper {
 
 #[cfg(test)]
 mod tests {
-    //! Machine-level tests that need no engine: step machines never
-    //! touch `ctx.engine` directly (work is expressed as yields), so a
-    //! disconnected handle plus synthetic `GenResult`s drive every
-    //! phase transition deterministically.
+    //! Machine-level tests against the sim execution backend: step
+    //! machines never touch `ctx.engine` directly (work is expressed as
+    //! yields), so most tests drive them with synthetic `GenResult`s —
+    //! and because the backend is the artifact-free
+    //! [`crate::engine::SimBackend`], the same harness also runs
+    //! machines engine-full through `run_to_completion`.
 
     use super::*;
-    use crate::engine::{EngineHandle, GenResult};
+    use crate::config::{BackendKind, Config};
+    use crate::engine::{Engine, GenResult};
     use crate::strategies::method::StrategyParams;
     use crate::tokenizer::Tokenizer;
-    use crate::util::clock;
 
-    fn harness() -> Executor {
-        Executor::new(EngineHandle::disconnected(), clock::sim_clock(), 0.0)
+    fn harness() -> (Engine, Executor) {
+        let mut cfg = Config::default();
+        cfg.engine.backend = BackendKind::Sim;
+        cfg.engine.sim_clock = true;
+        let engine = Engine::start(&cfg).unwrap();
+        let executor = Executor::new(engine.handle(), engine.clock.clone(), 0.0);
+        (engine, executor)
     }
 
     fn gen_result(tok: &Tokenizer, text: &str) -> GenResult {
@@ -413,7 +420,7 @@ mod tests {
 
     #[test]
     fn majority_vote_machine_generates_then_finishes() {
-        let ex = harness();
+        let (_engine, ex) = harness();
         let tok = Tokenizer::new();
         let mut answers =
             std::iter::once(vec![gen_result(&tok, "1+2=3;A:3\n"), gen_result(&tok, "1+2=3;A:3\n")]);
@@ -434,7 +441,7 @@ mod tests {
 
     #[test]
     fn bon_machine_yields_prm_and_uses_scores() {
-        let ex = harness();
+        let (_engine, ex) = harness();
         let tok = Tokenizer::new();
         let mut answers =
             std::iter::once(vec![gen_result(&tok, "1+2=4;A:4\n"), gen_result(&tok, "1+2=3;A:3\n")]);
@@ -453,7 +460,7 @@ mod tests {
 
     #[test]
     fn mv_early_machine_stops_when_wave_margin_decides() {
-        let ex = harness();
+        let (_engine, ex) = harness();
         let tok = Tokenizer::new();
         // N=8, wave=2 → the first wave's 2-0 margin cannot be beaten
         // only when lead > second + remaining; with 6 remaining it can,
@@ -477,7 +484,7 @@ mod tests {
 
     #[test]
     fn mv_early_machine_token_cap_reports_budget() {
-        let ex = harness();
+        let (_engine, ex) = harness();
         let tok = Tokenizer::new();
         let mut answers = std::iter::once(vec![
             gen_result(&tok, "1+2=3;A:3\n"),
@@ -497,7 +504,7 @@ mod tests {
 
     #[test]
     fn beam_machine_rounds_and_prm_memoization() {
-        let ex = harness();
+        let (_engine, ex) = harness();
         let tok = Tokenizer::new();
         // Round 0: N·W = 2 expansion jobs for the root; both end with
         // '\n' so every beam is done after one round → round 1 issues
@@ -523,7 +530,7 @@ mod tests {
 
     #[test]
     fn finished_machine_errors_on_extra_step() {
-        let ex = harness();
+        let (_engine, ex) = harness();
         let ctx = ex.ctx("Q:1+2=?\n", Budget::unlimited());
         let method = resolve("majority_vote").unwrap();
         let mut state = method.start(&ctx, &StrategyParams::parallel(1)).unwrap();
@@ -543,8 +550,39 @@ mod tests {
     }
 
     #[test]
+    fn machines_run_engine_full_on_the_sim_backend() {
+        // The backend-level mock that replaced the old disconnected
+        // handle: machines run to completion through a real engine
+        // thread (scheduler, batcher, preemption) with no artifacts.
+        let (engine, ex) = harness();
+        let mut stepper = Stepper::new(ex.clone());
+        for (i, strategy) in [Strategy::mv(4), Strategy::beam(2, 2, 12)]
+            .into_iter()
+            .enumerate()
+        {
+            stepper
+                .admit(Ticket {
+                    query: "Q:7+8-5=?\n".into(),
+                    strategy,
+                    budget: Budget::unlimited(),
+                    tag: i as u64,
+                })
+                .unwrap();
+        }
+        stepper.run_to_completion().unwrap();
+        let done = stepper.drain_completed();
+        assert_eq!(done.len(), 2);
+        for c in &done {
+            // temp 0 on the sim backend follows the ground-truth chain
+            assert_eq!(c.outcome.answer.as_deref(), Some("0"), "{}", c.strategy_id);
+            assert!(c.outcome.tokens > 0);
+        }
+        assert!(engine.metrics.decode_calls.get() > 0);
+    }
+
+    #[test]
     fn spent_budget_yields_empty_outcome_without_engine_work() {
-        let ex = harness();
+        let (_engine, ex) = harness();
         let mut answers = std::iter::empty::<Vec<GenResult>>();
         let mut scores = std::iter::empty::<Vec<f32>>();
         let o = drive_with(

@@ -1,0 +1,187 @@
+//! The sharded engine pool end-to-end, on the artifact-free sim
+//! backend (so this suite runs engine-full on a fresh checkout):
+//!
+//! * stepped == blocking equivalence at temperature 0 holds for pool
+//!   sizes 1, 2 and 4, for every registered decoding method;
+//! * a pool of N engines returns per-request results identical to one
+//!   engine (placement never changes outcomes);
+//! * concurrent load actually lands on every engine (per-engine
+//!   utilization), and the pool report exposes it;
+//! * submitting through a handle whose pool has shut down yields a
+//!   deterministic, descriptive error.
+
+use ttc::config::{BackendKind, Config};
+use ttc::engine::EnginePool;
+use ttc::strategies::stepper::{Stepper, Ticket};
+use ttc::strategies::{registry, Budget, Executor, Outcome, Strategy, StrategyParams};
+use ttc::util::rng::Rng;
+
+fn pool(engines: usize) -> (EnginePool, Executor) {
+    let mut cfg = Config::default();
+    cfg.engine.backend = BackendKind::Sim;
+    cfg.engine.sim_clock = true; // deterministic modeled latencies
+    cfg.engine.engines = engines;
+    let pool = EnginePool::start(&cfg).unwrap();
+    // temperature 0: generation is a pure function of the prompt, so
+    // results cannot depend on which engine a call lands on
+    let executor = Executor::new(pool.handle(), pool.clock.clone(), 0.0);
+    (pool, executor)
+}
+
+/// Everything except latency must match (latencies differ across pool
+/// sizes because concurrent machines interleave their clock charges).
+fn assert_same_result(a: &Outcome, b: &Outcome, label: &str) {
+    assert_eq!(a.answer, b.answer, "{label}: answer diverged");
+    assert_eq!(a.chosen, b.chosen, "{label}: chosen diverged");
+    assert_eq!(a.tokens, b.tokens, "{label}: tokens diverged");
+    assert_eq!(a.engine_calls, b.engine_calls, "{label}: engine calls diverged");
+    assert_eq!(a.rounds, b.rounds, "{label}: rounds diverged");
+    assert_eq!(
+        a.budget_exhausted, b.budget_exhausted,
+        "{label}: budget_exhausted diverged"
+    );
+    assert_eq!(a.stopped_early, b.stopped_early, "{label}: stopped_early diverged");
+    // token-cap preemption is time-independent, so it must agree too
+    assert_eq!(a.preempted, b.preempted, "{label}: preempted diverged");
+}
+
+#[test]
+fn stepped_equals_blocking_for_pool_sizes_1_2_4() {
+    let mut rng = Rng::new(0xBEEF, 0);
+    // per-method cases: (strategy, budget, query) — no deadlines, so
+    // outcomes are time-independent and comparable across pool sizes
+    let mut cases: Vec<(Strategy, Budget, String)> = Vec::new();
+    for method in registry::all() {
+        let params = if method.uses_rounds() {
+            StrategyParams::beam(
+                rng.range(1, 4) as usize,
+                rng.range(1, 3) as usize,
+                rng.range(6, 16) as usize,
+            )
+        } else {
+            StrategyParams::parallel(rng.range(1, 6) as usize)
+        };
+        let budget = if rng.below(2) == 0 {
+            Budget::unlimited()
+        } else {
+            Budget::unlimited().with_max_tokens(rng.range(8, 64) as usize)
+        };
+        let query = format!("Q:7+{}-2+8=?\n", rng.range(0, 9));
+        cases.push((Strategy::new(method.name(), params), budget, query));
+    }
+
+    // reference: one engine, blocking path, one request at a time
+    let (_p1, serial) = pool(1);
+    let reference: Vec<Outcome> = cases
+        .iter()
+        .map(|(s, b, q)| serial.run_budgeted(s, q, b.clone()).unwrap())
+        .collect();
+
+    for engines in [1usize, 2, 4] {
+        let (_pn, executor) = pool(engines);
+        let mut stepper = Stepper::new(executor.clone());
+        // all cases in flight concurrently: their rounds coalesce and
+        // spread across the pool, results must not care
+        for (i, (s, b, q)) in cases.iter().enumerate() {
+            stepper
+                .admit(Ticket {
+                    query: q.clone(),
+                    strategy: s.clone(),
+                    budget: b.clone(),
+                    tag: i as u64,
+                })
+                .unwrap();
+        }
+        stepper.run_to_completion().unwrap();
+        let mut done = stepper.drain_completed();
+        assert_eq!(done.len(), cases.len());
+        done.sort_by_key(|c| c.tag);
+        for (c, r) in done.iter().zip(&reference) {
+            assert_same_result(
+                &c.outcome,
+                r,
+                &format!("{} on {engines} engine(s)", c.strategy_id),
+            );
+        }
+    }
+}
+
+#[test]
+fn concurrent_load_lands_on_every_engine() {
+    let (pool, executor) = pool(2);
+    let mut stepper = Stepper::new(executor.clone());
+    for i in 0..8u64 {
+        stepper
+            .admit(Ticket {
+                query: format!("Q:7+{i}-2+8=?\n"),
+                strategy: Strategy::beam(4, 2, 12),
+                budget: Budget::unlimited(),
+                tag: i,
+            })
+            .unwrap();
+    }
+    stepper.run_to_completion().unwrap();
+    assert_eq!(stepper.drain_completed().len(), 8);
+
+    for i in 0..2 {
+        assert!(
+            pool.engine_metrics(i).rows_served() > 0,
+            "engine {i} served no rows"
+        );
+    }
+    let report = pool.report();
+    assert_eq!(report.req_f64("engines").unwrap(), 2.0);
+    assert!(report.req_f64("placements").unwrap() > 0.0);
+    let ratio = report.req_f64("balance_ratio").unwrap();
+    assert!(ratio >= 1.0 && ratio.is_finite(), "balance ratio {ratio}");
+    assert_eq!(report.req_arr("per_engine").unwrap().len(), 2);
+}
+
+#[test]
+fn pool_report_flows_into_the_serve_driver() {
+    use ttc::server::driver::{self, Mode};
+    use ttc::server::loadgen::{self, Arrivals};
+
+    let (_pool, executor) = pool(2);
+    let splits = ttc::data::Splits::synthesize(3);
+    let mut rng = Rng::new(3, 1);
+    let mix = loadgen::parse_budget_mix("30:d500,30:d5000,40:unlimited").unwrap();
+    let schedule =
+        loadgen::schedule_mixed(&splits.test, 12, Arrivals::Closed, &mix, &mut rng);
+    let report = driver::run(&executor, &Mode::Static(Strategy::mv(4)), schedule, 4).unwrap();
+    assert_eq!(report.served.len(), 12);
+    let v = report.to_json();
+    let pool_json = v.req("pool").expect("pool section in serve report");
+    assert_eq!(pool_json.req_f64("engines").unwrap(), 2.0);
+    let per_engine = pool_json.req_arr("per_engine").unwrap();
+    assert!(per_engine
+        .iter()
+        .all(|e| e.req_f64("rows_served").unwrap() > 0.0));
+}
+
+#[test]
+fn single_engine_pool_keeps_the_classic_handle() {
+    let (pool, executor) = pool(1);
+    // pool of 1 bypasses placement entirely: no pool section anywhere,
+    // exactly the historical single-engine serve shape
+    assert!(executor.engine.pool_report().is_none());
+    assert_eq!(pool.engines(), 1);
+    let o = executor.run(&Strategy::mv(2), "Q:7+8-5=?\n").unwrap();
+    assert_eq!(o.answer.as_deref(), Some("0"));
+}
+
+#[test]
+fn submission_to_a_shut_down_pool_is_a_descriptive_error() {
+    let (pool, executor) = pool(2);
+    let handle = executor.engine.clone();
+    drop(pool); // joins every engine thread
+    let err = handle
+        .prm_score(vec![vec![1u32, 2, 3]])
+        .unwrap_err()
+        .to_string();
+    assert!(
+        err.contains("pool engine #") && err.contains("shut down"),
+        "error should name the engine and the shutdown: {err}"
+    );
+    assert!(err.contains("prm_score"), "error should name the op: {err}");
+}

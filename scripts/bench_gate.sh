@@ -8,12 +8,14 @@
 #
 # The bench harness prints machine-parseable lines
 # (`bench,<name>,<iters>,<mean_ns>,<p50_ns>,<p95_ns>`) plus padding /
-# coalescing statistics (`stat,<name>,<value>`, e.g. the padded-row
-# fraction under the concurrent mixed workload); both are captured into
-# BENCH_<sha>.json. Gates are listed in the baseline's `gates` array
-# (legacy single `gate` object still honored); engine benches self-skip
-# without AOT artifacts, so engine gates are `required: false` and only
-# the router benches always gate.
+# coalescing / pool-balance statistics (`stat,<name>,<value>`, e.g. the
+# padded-row fraction under the concurrent mixed workload, or
+# pool_balance_ratio = max/min per-engine rows served across the sim
+# engine pool); both are captured into BENCH_<sha>.json. Gates are
+# listed in the baseline's `gates` array (legacy single `gate` object
+# still honored); device-backend engine benches self-skip without AOT
+# artifacts, so their gates are `required: false`, while the router
+# benches and the sim-backend pool bench always run.
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
