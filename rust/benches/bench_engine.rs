@@ -24,6 +24,9 @@ fn main() {
     // the pool bench rides the artifact-free sim backend, so it runs
     // (and its balance stat gates) on every checkout
     pool_bench();
+    // the remote bench rides the loopback transport (full wire
+    // protocol, no sockets), so it also runs everywhere
+    remote_bench();
 }
 
 /// Sharded-pool workload: 4 concurrent beam requests multiplexed by the
@@ -53,6 +56,82 @@ fn pool_bench() {
     });
     println!("stat,pool_balance_ratio,{}", pool.balance_ratio());
     println!("# pool report: {}", pool.report().dumps());
+}
+
+/// Remote-tier workload: 4 concurrent beam requests through a client
+/// pool of 2 `RemoteBackend`s, each dialing its own loopback
+/// `engine-serve` fleet (full framed protocol, in-process transport).
+/// After the timed runs, one shard is killed mid-deployment and an
+/// extra wave is driven through, so the reroute stat the bench gate
+/// floors (`remote_reroutes >= 1`) always reflects a real failover.
+fn remote_bench() {
+    use ttc::net::{LoopbackEngineServer, NetMetrics, RemoteBackend, RemoteConfig};
+    use ttc::util::clock;
+
+    let mut cfg = Config::default();
+    cfg.engine.backend = BackendKind::Sim;
+    cfg.engine.sim_clock = true;
+    cfg.engine.engines = 1;
+    // loopback-only exception (docs/remote.md): client and servers live
+    // in one process, so all of them may share one sim clock
+    let clock = clock::sim_clock();
+    let (conn_a, _server_a) =
+        LoopbackEngineServer::spawn_with_clock(&cfg, clock.clone()).expect("server a");
+    let (conn_b, mut server_b) =
+        LoopbackEngineServer::spawn_with_clock(&cfg, clock.clone()).expect("server b");
+    let connectors = [conn_a, conn_b];
+    let metrics = NetMetrics::new();
+    let remote_cfg = RemoteConfig {
+        retries: 1,
+        backoff_ms: 1.0,
+        ..RemoteConfig::default()
+    };
+    let mut client_cfg = Config::default();
+    client_cfg.engine.engines = 2;
+    let pool = EnginePool::start_with_factories(&client_cfg, clock.clone(), "remote backend", |i| {
+        RemoteBackend::factory(
+            connectors[i % 2].clone(),
+            remote_cfg.clone(),
+            clock.clone(),
+            metrics.clone(),
+        )
+    })
+    .expect("remote pool start");
+    let executor = Executor::new(pool.handle(), pool.clock.clone(), 0.0);
+
+    let wave = |executor: &Executor| {
+        let mut stepper = Stepper::new(executor.clone());
+        for i in 0..4u64 {
+            stepper
+                .admit(Ticket {
+                    query: format!("Q:7+{i}-2+8=?\n"),
+                    strategy: Strategy::beam(4, 2, 12),
+                    budget: Budget::unlimited(),
+                    tag: i,
+                })
+                .unwrap();
+        }
+        stepper.run_to_completion().unwrap();
+        std::hint::black_box(stepper.drain_completed());
+    };
+    bench("remote_loopback_2x_beam", || wave(&executor));
+
+    // kill one shard and drive a wave through the survivor: the pool
+    // must fail the dead slot over, not error
+    server_b.kill();
+    wave(&executor);
+
+    println!(
+        "stat,remote_frames,{}",
+        metrics.frames_sent.get() + metrics.frames_received.get()
+    );
+    let report = pool.report();
+    println!(
+        "stat,remote_reroutes,{}",
+        report.req_f64("rerouted_submits").unwrap_or(0.0)
+    );
+    println!("# remote pool report: {}", report.dumps());
+    println!("# remote net metrics: {}", metrics.to_json().dumps());
 }
 
 fn device_benches(cfg: &Config) {

@@ -39,16 +39,21 @@ pub enum BackendKind {
     /// ([`crate::engine::backend::SimBackend`]); latencies come from the
     /// sim clock's cost model.
     Sim,
+    /// A [`crate::net::RemoteBackend`] per engine slot, each dialing one
+    /// of `engine.remote_addrs` (round-robin) — the client side of `ttc
+    /// engine-serve` (see `docs/remote.md`).
+    Remote,
 }
 
 impl BackendKind {
-    /// Parse a CLI/config spelling (`device` | `sim`).
+    /// Parse a CLI/config spelling (`device` | `sim` | `remote`).
     pub fn parse(s: &str) -> Result<BackendKind> {
         match s {
             "device" => Ok(BackendKind::Device),
             "sim" => Ok(BackendKind::Sim),
+            "remote" => Ok(BackendKind::Remote),
             other => Err(Error::Config(format!(
-                "unknown backend '{other}' (expected 'device' or 'sim')"
+                "unknown backend '{other}' (expected 'device', 'sim' or 'remote')"
             ))),
         }
     }
@@ -57,6 +62,7 @@ impl BackendKind {
         match self {
             BackendKind::Device => "device",
             BackendKind::Sim => "sim",
+            BackendKind::Remote => "remote",
         }
     }
 }
@@ -87,6 +93,14 @@ pub struct EngineConfig {
     /// Engines in the pool (`ttc serve --engines N`); 1 = the classic
     /// single-engine path, placement bypassed.
     pub engines: usize,
+    /// `ttc engine-serve` addresses for [`BackendKind::Remote`]; engine
+    /// slot `i` dials `remote_addrs[i % len]`.
+    pub remote_addrs: Vec<String>,
+    /// Per-call read timeout for remote backends (wall-clock ms).
+    pub remote_timeout_ms: f64,
+    /// Same-shard retries per remote call before the pool's failover
+    /// takes over.
+    pub remote_retries: usize,
 }
 
 impl Default for EngineConfig {
@@ -102,6 +116,9 @@ impl Default for EngineConfig {
             batch_window_ms: 0.3,
             backend: BackendKind::Device,
             engines: 1,
+            remote_addrs: Vec::new(),
+            remote_timeout_ms: 30_000.0,
+            remote_retries: 2,
         }
     }
 }
@@ -322,6 +339,20 @@ impl Config {
         e.sim_clock = v.opt_bool("sim_clock", e.sim_clock);
         e.batch_window_ms = v.opt_f64("batch_window_ms", e.batch_window_ms);
         e.engines = v.opt_usize("engines", e.engines);
+        e.remote_timeout_ms = v.opt_f64("remote_timeout_ms", e.remote_timeout_ms);
+        e.remote_retries = v.opt_usize("remote_retries", e.remote_retries);
+        if let Some(addrs) = v.get("remote_addrs") {
+            e.remote_addrs = addrs
+                .as_arr()
+                .ok_or_else(|| Error::Config("engine.remote_addrs must be an array".into()))?
+                .iter()
+                .map(|a| {
+                    a.as_str().map(str::to_string).ok_or_else(|| {
+                        Error::Config("engine.remote_addrs entry must be a string".into())
+                    })
+                })
+                .collect::<Result<_>>()?;
+        }
         if let Some(b) = v.get("backend") {
             e.backend = BackendKind::parse(
                 b.as_str()
@@ -503,6 +534,26 @@ mod tests {
         assert!(c.merge_json(&bad).is_err());
         assert!(BackendKind::parse("device").is_ok());
         assert_eq!(BackendKind::Sim.as_str(), "sim");
+    }
+
+    #[test]
+    fn remote_backend_merge() {
+        let mut c = Config::default();
+        assert!(c.engine.remote_addrs.is_empty());
+        let v = parse(
+            r#"{"engine": {"backend": "remote",
+                           "remote_addrs": ["h1:7070", "h2:7070"],
+                           "remote_timeout_ms": 500, "remote_retries": 1}}"#,
+        )
+        .unwrap();
+        c.merge_json(&v).unwrap();
+        assert_eq!(c.engine.backend, BackendKind::Remote);
+        assert_eq!(c.engine.remote_addrs, vec!["h1:7070", "h2:7070"]);
+        assert_eq!(c.engine.remote_timeout_ms, 500.0);
+        assert_eq!(c.engine.remote_retries, 1);
+        assert_eq!(BackendKind::parse("remote").unwrap().as_str(), "remote");
+        let bad = parse(r#"{"engine": {"remote_addrs": [7]}}"#).unwrap();
+        assert!(c.merge_json(&bad).is_err());
     }
 
     #[test]

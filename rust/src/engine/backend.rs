@@ -122,6 +122,14 @@ pub trait Backend {
     /// `shapes` on top).
     fn describe(&self) -> Value;
 
+    /// Advisory: the earliest absolute engine-clock deadline among the
+    /// rows of the *next* `generate` call (infinite = none). Local
+    /// backends ignore it — the engine thread's accounting loop already
+    /// enforces deadlines. [`crate::net::RemoteBackend`] forwards it
+    /// (as a relative span) so the server's fleet can preempt too,
+    /// instead of generating tokens the client will discard.
+    fn deadline_hint(&mut self, _deadline_ms: f64) {}
+
     /// Execute one bucket-shaped generation call. `prompts[i]` is the
     /// prompt of `plan.job_indices[i]` (already validated against
     /// `plan.len_bucket` by the engine thread). Returns each real row's

@@ -5,11 +5,15 @@
 //! contract, bit-for-bit unchanged) or a *sharded pool*
 //! ([`crate::engine::pool::EnginePool`]), where every submission routes
 //! through a deadline-aware placement policy. Callers — strategies, the
-//! stepper, the router — cannot tell the difference.
+//! stepper, the router — cannot tell the difference, including under
+//! partial failure: pool-routed submissions carry a resubmittable copy
+//! of the request, so an engine that dies (or whose remote shard stops
+//! answering) mid-flight gets its work re-placed on a live engine
+//! instead of failing the caller.
 
 use crate::config::{BackendKind, Config};
 use crate::engine::backend::{Backend, BackendFactory, EngineShapes, SimBackend};
-use crate::engine::pool::{PoolGuard, PoolRouter};
+use crate::engine::pool::{MsgFactory, PoolGuard, PoolRouter};
 use crate::engine::protocol::*;
 use crate::engine::thread::{DeviceBackend, EngineThread};
 use crate::error::{Error, Result};
@@ -17,11 +21,24 @@ use crate::log_info;
 use crate::metrics::EngineMetrics;
 use crate::util::clock::{self, SharedClock};
 use crate::util::json::Value;
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// Everything needed to re-place a pool submission on another engine:
+/// the message factory (rebuilds the request against a fresh reply
+/// channel), its accounting footprint, and a resubmission budget so a
+/// systemic fault cannot ping-pong forever.
+struct RetryState<T> {
+    router: Arc<PoolRouter>,
+    make_msg: MsgFactory<T>,
+    rows: usize,
+    deadline_ms: f64,
+    op: &'static str,
+    attempts_left: Cell<usize>,
+}
 
 /// An in-flight engine reply: the submit half already put the request on
 /// an engine channel (so it participates in that engine's next
@@ -30,11 +47,15 @@ use std::time::Duration;
 /// ([`crate::strategies::stepper`]) is built on — submit many requests'
 /// work first, block on replies after, and the engine merges whatever
 /// queued together. For pool-routed submissions the reply also carries
-/// the placement accounting guard: the engine's outstanding-row count is
-/// released when the reply is received (or the reply is dropped).
+/// the placement accounting guard (released when the result is
+/// harvested or the reply dropped) and the failover state: a reply that
+/// dies with a *transient* net fault, or whose engine thread drops the
+/// channel, marks that engine dead and transparently resubmits on a
+/// live one.
 pub struct PendingReply<T> {
-    rx: Receiver<Result<T>>,
+    rx: RefCell<Receiver<Result<T>>>,
     guard: Cell<Option<PoolGuard>>,
+    retry: Option<RetryState<T>>,
 }
 
 impl<T> std::fmt::Debug for PendingReply<T> {
@@ -46,8 +67,21 @@ impl<T> std::fmt::Debug for PendingReply<T> {
 impl<T> PendingReply<T> {
     fn new(rx: Receiver<Result<T>>, guard: Option<PoolGuard>) -> PendingReply<T> {
         PendingReply {
-            rx,
+            rx: RefCell::new(rx),
             guard: Cell::new(guard),
+            retry: None,
+        }
+    }
+
+    fn with_retry(
+        rx: Receiver<Result<T>>,
+        guard: PoolGuard,
+        retry: RetryState<T>,
+    ) -> PendingReply<T> {
+        PendingReply {
+            rx: RefCell::new(rx),
+            guard: Cell::new(Some(guard)),
+            retry: Some(retry),
         }
     }
 
@@ -61,45 +95,98 @@ impl<T> PendingReply<T> {
         self.guard.take();
     }
 
+    /// Attempt to rescue this reply after `cause` (a transient fault or
+    /// a dropped reply channel): mark the engine dead and resubmit on a
+    /// live one. Returns `None` when the resubmission is in flight
+    /// (keep waiting), or `Some(err)` when the fault is terminal.
+    fn failover(&self, cause: Error) -> Option<Error> {
+        let Some(retry) = &self.retry else {
+            self.settle();
+            return Some(cause);
+        };
+        if let Some(guard) = self.guard.take() {
+            retry
+                .router
+                .mark_dead(guard.engine(), retry.op, &cause.to_string());
+        }
+        if retry.attempts_left.get() == 0 {
+            return Some(cause);
+        }
+        retry.attempts_left.set(retry.attempts_left.get() - 1);
+        match retry
+            .router
+            .submit_with(&retry.make_msg, retry.rows, retry.deadline_ms, retry.op)
+        {
+            Ok((rx, guard)) => {
+                retry.router.metrics.rerouted_submits.inc();
+                *self.rx.borrow_mut() = rx;
+                self.guard.set(Some(guard));
+                None
+            }
+            Err(e) => Some(e),
+        }
+    }
+
+    /// Dispatch one received value: `Ok(result)` settles, a transient
+    /// net error or dropped channel triggers failover, anything else is
+    /// the engine's final answer.
+    fn on_reply(&self, got: std::result::Result<Result<T>, Error>) -> Option<Result<T>> {
+        match got {
+            Ok(Ok(v)) => {
+                self.settle();
+                Some(Ok(v))
+            }
+            Ok(Err(e)) if e.is_transient_net() => self.failover(e).map(Err),
+            Ok(Err(e)) => {
+                self.settle();
+                Some(Err(e))
+            }
+            Err(cause) => self.failover(cause).map(Err),
+        }
+    }
+
     /// Block until the reply arrives.
     pub fn wait(&self) -> Result<T> {
-        let got = self.rx.recv().map_err(|_| Self::gone());
-        self.settle();
-        got?
+        loop {
+            let got = { self.rx.borrow().recv() }.map_err(|_| Self::gone());
+            if let Some(done) = self.on_reply(got) {
+                return done;
+            }
+        }
     }
 
     /// Block up to `wait` (`None` = indefinitely). Returns `None` on
     /// timeout, leaving the reply collectable later.
     pub fn wait_timeout(&self, wait: Option<Duration>) -> Option<Result<T>> {
-        match wait {
-            None => Some(self.wait()),
-            Some(d) => match self.rx.recv_timeout(d) {
-                Ok(r) => {
-                    self.settle();
-                    Some(r)
-                }
-                Err(RecvTimeoutError::Timeout) => None,
-                Err(RecvTimeoutError::Disconnected) => {
-                    self.settle();
-                    Some(Err(Self::gone()))
-                }
-            },
+        let Some(d) = wait else {
+            return Some(self.wait());
+        };
+        let deadline = Instant::now() + d;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            let got = match { self.rx.borrow().recv_timeout(remaining) } {
+                Ok(r) => Ok(r),
+                Err(RecvTimeoutError::Timeout) => return None,
+                Err(RecvTimeoutError::Disconnected) => Err(Self::gone()),
+            };
+            if let Some(done) = self.on_reply(got) {
+                return Some(done);
+            }
         }
     }
 
-    /// Non-blocking poll: `None` while the engine is still working.
+    /// Non-blocking poll: `None` while the engine is still working (or
+    /// a failover resubmission is in flight).
     pub fn try_wait(&self) -> Option<Result<T>> {
-        match self.rx.try_recv() {
-            Ok(r) => {
-                self.settle();
-                Some(r)
-            }
-            Err(TryRecvError::Empty) => None,
-            Err(TryRecvError::Disconnected) => {
-                self.settle();
-                Some(Err(Self::gone()))
-            }
-        }
+        let got = match { self.rx.borrow().try_recv() } {
+            Ok(r) => Ok(r),
+            Err(TryRecvError::Empty) => return None,
+            Err(TryRecvError::Disconnected) => Err(Self::gone()),
+        };
+        // `None` from on_reply means a failover resubmission is in
+        // flight — the fresh engine hasn't answered yet, so report
+        // "still working".
+        self.on_reply(got)
     }
 }
 
@@ -110,7 +197,7 @@ enum Inner {
     /// single-engine path — no placement, no accounting).
     Single(Sender<EngineMsg>),
     /// Through the pool's placement policy
-    /// ([`crate::engine::pool::place`]).
+    /// ([`crate::engine::pool::place_live`]).
     Pool(Arc<PoolRouter>),
 }
 
@@ -129,9 +216,10 @@ enum Inner {
 /// two serial calls.
 ///
 /// Pool-backed handles additionally route every submission to one of N
-/// engines (least outstanding rows, deadline-aware tiebreak — see
-/// `docs/backends.md`); because temp-0 generation is a pure function of
-/// the prompt on every backend, placement never changes results.
+/// engines (least outstanding rows, deadline-aware tiebreak, dead
+/// engines excluded — see `docs/backends.md`); because temp-0
+/// generation is a pure function of the prompt on every backend,
+/// placement and failover never change results.
 #[derive(Clone)]
 pub struct EngineHandle {
     inner: Inner,
@@ -161,22 +249,39 @@ impl EngineHandle {
         }
     }
 
-    /// Route one message: direct send for single engines, placed send
-    /// (with row/deadline accounting) for pools.
-    fn route(
+    /// Submit one data-plane request. Single engines get the message
+    /// directly (no placement, no accounting, no failover — the
+    /// historical contract). Pools get a rebuildable message factory so
+    /// the submission can hop engines: at submit time when a channel is
+    /// closed, and in flight via [`PendingReply`] when the reply dies.
+    fn submit<T: 'static>(
         &self,
-        msg: EngineMsg,
+        make_msg: MsgFactory<T>,
         rows: usize,
         deadline_ms: f64,
         op: &'static str,
-    ) -> Result<Option<PoolGuard>> {
+    ) -> Result<PendingReply<T>> {
         match &self.inner {
             Inner::Single(tx) => {
-                tx.send(msg)
+                let (reply, rx) = channel();
+                tx.send(make_msg(reply))
                     .map_err(|_| Error::Engine("engine thread is gone".into()))?;
-                Ok(None)
+                Ok(PendingReply::new(rx, None))
             }
-            Inner::Pool(router) => Ok(Some(router.submit(msg, rows, deadline_ms, op)?)),
+            Inner::Pool(router) => {
+                let (rx, guard) = router.submit_with(&make_msg, rows, deadline_ms, op)?;
+                let retry = RetryState {
+                    router: router.clone(),
+                    make_msg,
+                    rows,
+                    deadline_ms,
+                    op,
+                    // At most one hop per engine: a fault that survives
+                    // N re-placements is systemic, not a dead shard.
+                    attempts_left: Cell::new(router.engines()),
+                };
+                Ok(PendingReply::with_retry(rx, guard, retry))
+            }
         }
     }
 
@@ -206,18 +311,16 @@ impl EngineHandle {
         deadline_ms: Option<f64>,
     ) -> Result<PendingReply<Vec<GenResult>>> {
         let rows = jobs.len();
-        let (reply, rx) = channel();
-        let guard = self.route(
-            EngineMsg::Generate {
-                jobs,
+        self.submit(
+            Box::new(move |reply| EngineMsg::Generate {
+                jobs: jobs.clone(),
                 deadline_ms,
                 reply,
-            },
+            }),
             rows,
             deadline_ms.unwrap_or(f64::INFINITY),
             "generate",
-        )?;
-        Ok(PendingReply::new(rx, guard))
+        )
     }
 
     /// Score CoT prefixes with the PRM.
@@ -226,55 +329,54 @@ impl EngineHandle {
     }
 
     /// Queue a PRM scoring call without blocking on the reply.
-    pub fn submit_prm_score(
-        &self,
-        prefixes: Vec<Vec<u32>>,
-    ) -> Result<PendingReply<Vec<f32>>> {
+    pub fn submit_prm_score(&self, prefixes: Vec<Vec<u32>>) -> Result<PendingReply<Vec<f32>>> {
         let rows = prefixes.len();
-        let (reply, rx) = channel();
-        let guard = self.route(
-            EngineMsg::PrmScore { prefixes, reply },
+        self.submit(
+            Box::new(move |reply| EngineMsg::PrmScore {
+                prefixes: prefixes.clone(),
+                reply,
+            }),
             rows,
             f64::INFINITY,
             "prm_score",
-        )?;
-        Ok(PendingReply::new(rx, guard))
+        )
     }
 
     /// Embed queries.
     pub fn embed(&self, kind: EmbedKind, queries: Vec<Vec<u32>>) -> Result<Vec<Vec<f32>>> {
         let rows = queries.len();
-        let (reply, rx) = channel();
-        let guard = self.route(
-            EngineMsg::Embed {
+        self.submit(
+            Box::new(move |reply| EngineMsg::Embed {
                 kind,
-                queries,
+                queries: queries.clone(),
                 reply,
-            },
+            }),
             rows,
             f64::INFINITY,
             "embed",
-        )?;
-        PendingReply::new(rx, guard).wait()
+        )?
+        .wait()
     }
 
     /// Probe forward (logits) with the engine's current probe params.
     pub fn probe_fwd(&self, feats: Vec<Vec<f32>>) -> Result<Vec<f32>> {
         let rows = feats.len();
-        let (reply, rx) = channel();
-        let guard = self.route(
-            EngineMsg::ProbeFwd { feats, reply },
+        self.submit(
+            Box::new(move |reply| EngineMsg::ProbeFwd {
+                feats: feats.clone(),
+                reply,
+            }),
             rows,
             f64::INFINITY,
             "probe_fwd",
-        )?;
-        PendingReply::new(rx, guard).wait()
+        )?
+        .wait()
     }
 
     /// Train the probe; the engine keeps (and returns) the best params.
-    /// On a pool, training runs on engine #0 and the winning parameters
-    /// are then installed on every other engine, so replicas stay
-    /// interchangeable.
+    /// On a pool, training runs on the lowest-index live engine and the
+    /// winning parameters are then installed on every other live engine,
+    /// so replicas stay interchangeable.
     #[allow(clippy::too_many_arguments)]
     pub fn probe_train(
         &self,
@@ -285,33 +387,55 @@ impl EngineHandle {
         epochs: usize,
         patience: usize,
     ) -> Result<ProbeTrainReport> {
-        let (reply, rx) = channel();
-        let msg = EngineMsg::ProbeTrain {
-            train_feats,
-            train_labels,
-            val_feats,
-            val_labels,
+        let make = |reply| EngineMsg::ProbeTrain {
+            train_feats: train_feats.clone(),
+            train_labels: train_labels.clone(),
+            val_feats: val_feats.clone(),
+            val_labels: val_labels.clone(),
             epochs,
             patience,
             reply,
         };
         match &self.inner {
             Inner::Single(tx) => {
-                tx.send(msg)
+                let (reply, rx) = channel();
+                tx.send(make(reply))
                     .map_err(|_| Error::Engine("engine thread is gone".into()))?;
                 PendingReply::new(rx, None).wait()
             }
             Inner::Pool(router) => {
-                router.send_to(0, msg, "probe_train")?;
-                let report = PendingReply::new(rx, None).wait()?;
-                router.broadcast_probe_load(report.params.clone(), 1)?;
-                Ok(report)
+                // Trainer election + dead-engine retry: a trainer that
+                // dies before answering just means the next live engine
+                // trains instead (training is deterministic per params).
+                loop {
+                    let trainer = router.first_live("probe_train")?;
+                    let (reply, rx) = channel();
+                    if router.send_to(trainer, make(reply), "probe_train").is_err() {
+                        continue; // marked dead; elect the next one
+                    }
+                    match PendingReply::new(rx, None).wait() {
+                        Ok(report) => {
+                            router.broadcast_probe_load(report.params.clone(), Some(trainer))?;
+                            return Ok(report);
+                        }
+                        Err(e) if e.is_transient_net() => {
+                            router.mark_dead(trainer, "probe_train", &e.to_string());
+                        }
+                        Err(e)
+                            if e.to_string()
+                                .contains("engine thread dropped the reply") =>
+                        {
+                            router.mark_dead(trainer, "probe_train", &e.to_string());
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
             }
         }
     }
 
     /// Replace probe parameters (e.g. from a saved checkpoint). On a
-    /// pool the parameters are installed on *every* engine.
+    /// pool the parameters are installed on *every* live engine.
     pub fn probe_load(&self, params: Vec<f32>) -> Result<()> {
         match &self.inner {
             Inner::Single(tx) => {
@@ -320,27 +444,41 @@ impl EngineHandle {
                     .map_err(|_| Error::Engine("engine thread is gone".into()))?;
                 PendingReply::new(rx, None).wait()
             }
-            Inner::Pool(router) => router.broadcast_probe_load(params, 0),
+            Inner::Pool(router) => router.broadcast_probe_load(params, None),
         }
     }
 
-    /// Engine diagnostics as JSON. For a pool: engine #0's diagnostics
-    /// plus a `pool` section with placement and per-engine utilization.
+    /// Engine diagnostics as JSON. For a pool: the lowest-index live
+    /// engine's diagnostics plus a `pool` section with placement,
+    /// health and per-engine utilization.
     pub fn info(&self) -> Result<Value> {
-        let (reply, rx) = channel();
-        let msg = EngineMsg::Info { reply };
         match &self.inner {
             Inner::Single(tx) => {
-                tx.send(msg)
+                let (reply, rx) = channel();
+                tx.send(EngineMsg::Info { reply })
                     .map_err(|_| Error::Engine("engine thread is gone".into()))?;
                 PendingReply::new(rx, None).wait()
             }
-            Inner::Pool(router) => {
-                router.send_to(0, msg, "info")?;
-                let mut v = PendingReply::new(rx, None).wait()?;
-                v.set("pool", router.report());
-                Ok(v)
-            }
+            Inner::Pool(router) => loop {
+                let idx = router.first_live("info")?;
+                let (reply, rx) = channel();
+                if router.send_to(idx, EngineMsg::Info { reply }, "info").is_err() {
+                    continue;
+                }
+                match PendingReply::new(rx, None).wait() {
+                    Ok(mut v) => {
+                        v.set("pool", router.report());
+                        return Ok(v);
+                    }
+                    Err(e)
+                        if e.is_transient_net()
+                            || e.to_string().contains("engine thread dropped the reply") =>
+                    {
+                        router.mark_dead(idx, "info", &e.to_string());
+                    }
+                    Err(e) => return Err(e),
+                }
+            },
         }
     }
 }
@@ -375,10 +513,28 @@ impl Engine {
     /// exactly) and its own thread, sharing `clock` with its siblings so
     /// deadlines mean the same thing on every engine.
     pub(crate) fn start_member(cfg: &Config, clock: SharedClock, index: usize) -> Result<Engine> {
+        let factory = Self::backend_factory(cfg, clock.clone(), index);
+        let label = match cfg.engine.backend {
+            BackendKind::Device => "device backend",
+            BackendKind::Sim => "sim backend",
+            BackendKind::Remote => "remote backend",
+        };
+        Self::start_member_with_factory(clock, index, factory, label)
+    }
+
+    /// Spawn pool member `index` around a caller-supplied backend
+    /// factory (the closure runs *on* the engine thread — PJRT state
+    /// and live connections are `!Send`, so only this `Send` closure
+    /// crosses the spawn).
+    pub(crate) fn start_member_with_factory(
+        clock: SharedClock,
+        index: usize,
+        factory: BackendFactory,
+        label: &str,
+    ) -> Result<Engine> {
         let metrics = Arc::new(EngineMetrics::new());
         let (tx, rx) = channel();
         let (ready_tx, ready_rx) = channel();
-        let factory = Self::backend_factory(cfg, clock.clone(), index);
         let thread_clock = clock.clone();
         let thread_metrics = metrics.clone();
         let join = std::thread::Builder::new()
@@ -396,13 +552,7 @@ impl Engine {
         ready_rx
             .recv()
             .map_err(|_| Error::Engine("engine thread died during startup".into()))??;
-        match cfg.engine.backend {
-            BackendKind::Device => log_info!(
-                "engine #{index} started (device backend, artifacts: {})",
-                cfg.paths.artifacts.display()
-            ),
-            BackendKind::Sim => log_info!("engine #{index} started (sim backend, no artifacts)"),
-        }
+        log_info!("engine #{index} started ({label})");
         Ok(Engine {
             handle: EngineHandle::single(tx.clone()),
             shutdown: tx,
@@ -419,6 +569,12 @@ impl Engine {
         let artifacts = cfg.paths.artifacts.clone();
         let seed = cfg.seed;
         let sim_shapes = EngineShapes::sim_default(&cfg.engine);
+        let remote_addrs = cfg.engine.remote_addrs.clone();
+        let remote_cfg = crate::net::RemoteConfig {
+            call_timeout_ms: cfg.engine.remote_timeout_ms,
+            retries: cfg.engine.remote_retries,
+            ..crate::net::RemoteConfig::default()
+        };
         Box::new(move || -> Result<Box<dyn Backend>> {
             match kind {
                 BackendKind::Device => Ok(Box::new(DeviceBackend::new(
@@ -433,6 +589,28 @@ impl Engine {
                     seed,
                     index as u64,
                 ))),
+                BackendKind::Remote => {
+                    if remote_addrs.is_empty() {
+                        return Err(Error::Config(
+                            "backend 'remote' needs at least one address \
+                             (engine.remote_addrs / --remote host:port[,host:port...])"
+                                .into(),
+                        ));
+                    }
+                    let addr = remote_addrs[index % remote_addrs.len()].clone();
+                    let connector = crate::net::TcpConnector::new(
+                        addr,
+                        Duration::from_secs_f64(
+                            (remote_cfg.connect_timeout_ms / 1e3).max(1e-3),
+                        ),
+                    );
+                    Ok(Box::new(crate::net::RemoteBackend::connect(
+                        Box::new(connector),
+                        remote_cfg,
+                        clock,
+                        crate::net::NetMetrics::new(),
+                    )?))
+                }
             }
         })
     }
@@ -445,13 +623,19 @@ impl Engine {
     pub(crate) fn sender(&self) -> Sender<EngineMsg> {
         self.shutdown.clone()
     }
-}
 
-impl Drop for Engine {
-    fn drop(&mut self) {
+    /// Shut the engine thread down immediately (fault injection /
+    /// explicit teardown); drop does the same thing implicitly.
+    pub(crate) fn shutdown_now(&mut self) {
         let _ = self.shutdown.send(EngineMsg::Shutdown);
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shutdown_now();
     }
 }

@@ -66,8 +66,8 @@ pub mod protocol;
 pub mod scheduler;
 pub mod thread;
 
-pub use backend::{Backend, EngineShapes, SimBackend};
+pub use backend::{Backend, BackendFactory, EngineShapes, SimBackend};
 pub use batcher::{pack_bins, plan_batches, plan_batches_edf, BatchPlan};
 pub use handle::{Engine, EngineHandle, PendingReply};
-pub use pool::{EngineLoad, EnginePool};
+pub use pool::{EngineLoad, EnginePool, PoolReporter};
 pub use protocol::{EmbedKind, GenJob, GenKind, GenResult, ProbeTrainReport};

@@ -9,30 +9,41 @@
 //!
 //! ## Placement policy
 //!
-//! [`place`] is a pure function over per-engine load snapshots:
+//! [`place_live`] is a pure function over per-engine load snapshots and
+//! a liveness mask:
 //!
-//! 1. **least outstanding rows** — rows (generate jobs, PRM prefixes,
+//! 1. **dead engines are excluded** — an engine whose thread is gone,
+//!    or whose remote shard stopped answering, takes no new work;
+//! 2. **least outstanding rows** — rows (generate jobs, PRM prefixes,
 //!    embed queries, probe feature rows) submitted and not yet replied;
-//! 2. tie → **fewest outstanding calls**;
-//! 3. tie → **deadline-aware (EDF) tiebreak**: prefer the engine whose
+//! 3. tie → **fewest outstanding calls**;
+//! 4. tie → **deadline-aware (EDF) tiebreak**: prefer the engine whose
 //!    most-urgent outstanding deadline is *latest* — new work (urgent or
 //!    not) avoids stacking behind an engine already racing a tight
 //!    deadline, which is what lets tight-deadline traffic meet its
 //!    budget while unlimited traffic fills the remaining capacity;
-//! 4. tie → lowest engine index (deterministic).
+//! 5. tie → lowest engine index (deterministic).
 //!
 //! Accounting is released when the requester *receives* the reply (or
 //! drops it) — see [`PoolGuard`] — so "outstanding" means submitted and
 //! not yet harvested, the quantity a scheduler can actually observe.
 //!
-//! ## Error semantics
+//! ## Health, failover and error semantics
 //!
 //! Within one engine, a failed coalesced call still broadcasts the error
-//! to every coalesced requester (single-engine contract, unchanged).
-//! Submitting to an engine whose thread is gone returns a deterministic,
-//! descriptive [`Error::Engine`] naming the engine and the operation —
-//! not a bare channel-closed unwrap — and rolls the placement
-//! reservation back.
+//! to every coalesced requester (single-engine contract, unchanged; the
+//! broadcast preserves transience via [`Error::replicate`]).
+//!
+//! An engine is **marked dead** the first time a submission to it fails
+//! (its channel closed) or an in-flight reply comes back as a transient
+//! net fault / dropped reply channel. Dead engines are excluded from
+//! placement, and the failed submission is *re-placed* on a live engine
+//! — counted in `PoolMetrics::rerouted_submits` — rather than failing
+//! the request. Only when every engine is down does a submission fail,
+//! with a deterministic "all N pool engines are down" [`Error::Engine`].
+//! In-flight replies get the same treatment through
+//! [`crate::engine::handle::PendingReply`], which holds a resubmittable
+//! copy of the request payload for pool-routed submissions.
 //!
 //! ## Determinism
 //!
@@ -45,13 +56,15 @@
 //! real.
 
 use crate::config::Config;
+use crate::engine::backend::BackendFactory;
 use crate::engine::handle::{Engine, EngineHandle};
 use crate::engine::protocol::EngineMsg;
 use crate::error::{Error, Result};
 use crate::metrics::{EngineMetrics, PoolMetrics};
 use crate::util::clock::{self, SharedClock};
 use crate::util::json::Value;
-use std::sync::mpsc::{channel, Sender};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
 /// One engine's load snapshot, as the placement policy sees it.
@@ -73,41 +86,66 @@ impl EngineLoad {
     }
 }
 
-/// Pure placement: pick the engine for the next submission. See the
-/// module docs for the full policy; `loads` must be non-empty.
+/// Pure placement over all-live engines (compatibility wrapper around
+/// [`place_live`]); `loads` must be non-empty.
 pub fn place(loads: &[EngineLoad]) -> usize {
-    let mut best = 0usize;
-    for i in 1..loads.len() {
-        let (a, b) = (&loads[i], &loads[best]);
-        let better = match a.rows.cmp(&b.rows) {
+    place_live(loads, &[]).expect("place() requires a non-empty load set")
+}
+
+/// Pure placement: pick the engine for the next submission among live
+/// engines (see the module docs for the full policy). `dead[i]` marks
+/// engine `i` excluded; a short (or empty) `dead` slice means the
+/// remaining engines are live. `None` = every engine is dead.
+pub fn place_live(loads: &[EngineLoad], dead: &[bool]) -> Option<usize> {
+    let is_dead = |i: usize| dead.get(i).copied().unwrap_or(false);
+    let mut best: Option<usize> = None;
+    for i in 0..loads.len() {
+        if is_dead(i) {
+            continue;
+        }
+        let Some(b) = best else {
+            best = Some(i);
+            continue;
+        };
+        let (a, b_load) = (&loads[i], &loads[b]);
+        let better = match a.rows.cmp(&b_load.rows) {
             std::cmp::Ordering::Less => true,
             std::cmp::Ordering::Greater => false,
-            std::cmp::Ordering::Equal => match a.calls.cmp(&b.calls) {
+            std::cmp::Ordering::Equal => match a.calls.cmp(&b_load.calls) {
                 std::cmp::Ordering::Less => true,
                 std::cmp::Ordering::Greater => false,
                 // EDF-aware: latest most-urgent deadline wins the tie
                 // (strict >, so a full tie keeps the lowest index)
-                std::cmp::Ordering::Equal => a.min_deadline() > b.min_deadline(),
+                std::cmp::Ordering::Equal => a.min_deadline() > b_load.min_deadline(),
             },
         };
         if better {
-            best = i;
+            best = Some(i);
         }
     }
     best
 }
 
-/// Whether [`place`] chose differently than plain least-rows/calls
-/// argmin would — i.e. the deadline tiebreak decided (metric feed).
-fn deadline_tiebreak_decided(loads: &[EngineLoad], chosen: usize) -> bool {
+/// Whether placement chose differently than plain least-rows/calls
+/// argmin over *live* engines would — i.e. the deadline tiebreak
+/// decided (metric feed).
+fn deadline_tiebreak_decided(loads: &[EngineLoad], dead: &[bool], chosen: usize) -> bool {
+    let is_dead = |i: usize| dead.get(i).copied().unwrap_or(false);
     let plain = loads
         .iter()
         .enumerate()
+        .filter(|(i, _)| !is_dead(*i))
         .min_by_key(|(_, l)| (l.rows, l.calls))
         .map(|(i, _)| i)
-        .unwrap_or(0);
+        .unwrap_or(chosen);
     chosen != plain
 }
+
+/// Builds the (reply-channel-bearing) message for one submission
+/// attempt. Pool-routed submissions carry one of these instead of a
+/// ready-made [`EngineMsg`] so a failed attempt can be rebuilt against
+/// a fresh reply channel and re-placed on a live engine.
+pub(crate) type MsgFactory<T> = Box<dyn Fn(Sender<Result<T>>) -> EngineMsg + Send>;
 
 /// One engine's routing endpoint inside the router.
 struct Slot {
@@ -122,6 +160,8 @@ struct Slot {
 pub struct PoolRouter {
     slots: Vec<Slot>,
     loads: Mutex<Vec<EngineLoad>>,
+    /// Health mask: `dead[i]` set once engine `i` stops accepting work.
+    dead: Vec<AtomicBool>,
     pub metrics: PoolMetrics,
 }
 
@@ -130,74 +170,156 @@ impl PoolRouter {
         self.slots.len()
     }
 
-    /// Place and send one accounted submission. Returns the guard that
-    /// releases the reservation when the reply is harvested/dropped.
-    pub(crate) fn submit(
+    fn dead_snapshot(&self) -> Vec<bool> {
+        self.dead.iter().map(|d| d.load(Ordering::SeqCst)).collect()
+    }
+
+    /// Number of engines still accepting work.
+    pub fn live_engines(&self) -> usize {
+        self.dead
+            .iter()
+            .filter(|d| !d.load(Ordering::SeqCst))
+            .count()
+    }
+
+    /// Declare engine `idx` dead (idempotent; first caller logs and
+    /// counts it). Dead engines take no further placements.
+    pub(crate) fn mark_dead(&self, idx: usize, op: &str, why: &str) {
+        if !self.dead[idx].swap(true, Ordering::SeqCst) {
+            self.metrics.engines_marked_dead.inc();
+            crate::log_warn!(
+                "pool engine #{idx} (of {}) marked dead during {op}: {why}; \
+                 {} engine(s) remain",
+                self.slots.len(),
+                self.live_engines()
+            );
+        }
+    }
+
+    /// The lowest-index live engine (control-plane ops anchor there).
+    pub(crate) fn first_live(&self, op: &'static str) -> Result<usize> {
+        (0..self.slots.len())
+            .find(|&i| !self.dead[i].load(Ordering::SeqCst))
+            .ok_or_else(|| Self::all_down(self.slots.len(), op))
+    }
+
+    /// Place and send one accounted submission, re-placing onto live
+    /// engines as dead ones are discovered. Returns the reply channel
+    /// and the guard that releases the reservation when the reply is
+    /// harvested/dropped. Fails only when every engine is down.
+    pub(crate) fn submit_with<T>(
         self: &Arc<Self>,
-        msg: EngineMsg,
+        make_msg: &MsgFactory<T>,
         rows: usize,
         deadline_ms: f64,
         op: &'static str,
-    ) -> Result<PoolGuard> {
-        let idx = {
-            let mut loads = self.loads.lock().unwrap();
-            let idx = place(&loads);
-            if deadline_tiebreak_decided(&loads, idx) {
-                self.metrics.deadline_tiebreaks.inc();
+    ) -> Result<(Receiver<Result<T>>, PoolGuard)> {
+        let mut attempts = 0usize;
+        loop {
+            let idx = {
+                let mut loads = self.loads.lock().unwrap();
+                let dead = self.dead_snapshot();
+                let Some(idx) = place_live(&loads, &dead) else {
+                    return Err(Self::all_down(self.slots.len(), op));
+                };
+                if deadline_tiebreak_decided(&loads, &dead, idx) {
+                    self.metrics.deadline_tiebreaks.inc();
+                }
+                loads[idx].rows += rows;
+                loads[idx].calls += 1;
+                loads[idx].deadlines.push(deadline_ms);
+                idx
+            };
+            self.metrics.placements.inc();
+            self.metrics.engine(idx).submits.inc();
+            self.metrics.engine(idx).rows_submitted.add(rows as u64);
+            let (reply, rx) = channel();
+            let sent = { self.slots[idx].tx.lock().unwrap().send(make_msg(reply)) };
+            match sent {
+                Ok(()) => {
+                    if attempts > 0 {
+                        // Rescued: the submission survived ≥1 dead
+                        // engine by landing on a live one.
+                        self.metrics.rerouted_submits.inc();
+                    }
+                    return Ok((
+                        rx,
+                        PoolGuard {
+                            router: self.clone(),
+                            engine: idx,
+                            rows,
+                            deadline_ms,
+                        },
+                    ));
+                }
+                Err(_) => {
+                    self.release(idx, rows, deadline_ms);
+                    self.metrics.engine(idx).rejected_submits.inc();
+                    self.mark_dead(idx, op, "submission channel closed");
+                    attempts += 1;
+                }
             }
-            loads[idx].rows += rows;
-            loads[idx].calls += 1;
-            loads[idx].deadlines.push(deadline_ms);
-            idx
-        };
-        self.metrics.placements.inc();
-        self.metrics.engine(idx).submits.inc();
-        self.metrics.engine(idx).rows_submitted.add(rows as u64);
-        let sent = { self.slots[idx].tx.lock().unwrap().send(msg) };
-        if sent.is_err() {
-            self.release(idx, rows, deadline_ms);
-            return Err(Self::engine_down(idx, self.slots.len(), op));
         }
-        Ok(PoolGuard {
-            router: self.clone(),
-            engine: idx,
-            rows,
-            deadline_ms,
-        })
     }
 
     /// Send a control-plane message to a specific engine (no load
-    /// accounting — probe train/load, info).
+    /// accounting — probe train/load, info). A failed send marks the
+    /// engine dead; the caller decides whether to retry elsewhere.
     pub(crate) fn send_to(&self, idx: usize, msg: EngineMsg, op: &'static str) -> Result<()> {
-        self.slots[idx]
-            .tx
-            .lock()
-            .unwrap()
-            .send(msg)
-            .map_err(|_| Self::engine_down(idx, self.slots.len(), op))
+        let sent = { self.slots[idx].tx.lock().unwrap().send(msg) };
+        sent.map_err(|_| {
+            self.mark_dead(idx, op, "submission channel closed");
+            Self::engine_down(idx, self.slots.len(), op)
+        })
     }
 
-    /// Install probe params on every engine from `from` up — replicas
-    /// must answer probe queries identically no matter where a request
-    /// lands. The first failure wins (and names its engine).
-    pub(crate) fn broadcast_probe_load(&self, params: Vec<f32>, from: usize) -> Result<()> {
+    /// Install probe params on every live engine except `except`
+    /// (the engine that just trained them holds them already) —
+    /// replicas must answer probe queries identically no matter where a
+    /// request lands. Engines that fail mid-broadcast are marked dead
+    /// and skipped; the call fails only if a live engine *reports* an
+    /// error, or if nobody is left to receive the params.
+    pub(crate) fn broadcast_probe_load(
+        &self,
+        params: Vec<f32>,
+        except: Option<usize>,
+    ) -> Result<()> {
         let mut replies = Vec::new();
-        for idx in from..self.slots.len() {
+        for idx in 0..self.slots.len() {
+            if Some(idx) == except || self.dead[idx].load(Ordering::SeqCst) {
+                continue;
+            }
             let (reply, rx) = channel();
-            self.send_to(
-                idx,
-                EngineMsg::ProbeLoad {
-                    params: params.clone(),
-                    reply,
-                },
-                "probe_load",
-            )?;
+            if self
+                .send_to(
+                    idx,
+                    EngineMsg::ProbeLoad {
+                        params: params.clone(),
+                        reply,
+                    },
+                    "probe_load",
+                )
+                .is_err()
+            {
+                continue; // marked dead by send_to
+            }
             replies.push((idx, rx));
         }
+        let mut loaded = replies.len();
         for (idx, rx) in replies {
-            rx.recv().map_err(|_| {
-                Self::engine_down(idx, self.slots.len(), "probe_load")
-            })??;
+            match rx.recv() {
+                Ok(r) => r?, // engine-side error: propagate
+                Err(_) => {
+                    self.mark_dead(idx, "probe_load", "reply channel dropped");
+                    loaded -= 1;
+                }
+            }
+        }
+        // `except` already holds the params (it trained them), so a
+        // broadcast from a trainer succeeds even if it is the last
+        // engine standing.
+        if loaded == 0 && except.is_none() {
+            return Err(Self::all_down(self.slots.len(), "probe_load"));
         }
         Ok(())
     }
@@ -205,6 +327,12 @@ impl PoolRouter {
     fn engine_down(idx: usize, n: usize, op: &'static str) -> Error {
         Error::Engine(format!(
             "pool engine #{idx} (of {n}) is shut down — {op} submission rejected"
+        ))
+    }
+
+    fn all_down(n: usize, op: &'static str) -> Error {
+        Error::Engine(format!(
+            "all {n} pool engines are down — {op} submission rejected"
         ))
     }
 
@@ -229,14 +357,19 @@ impl PoolRouter {
     /// and the serve report).
     pub fn report(&self) -> Value {
         let engines: Vec<&Arc<EngineMetrics>> = self.slots.iter().map(|s| &s.metrics).collect();
-        build_report(&engines, Some(&self.metrics))
+        build_report(&engines, Some(&self.metrics), Some(&self.dead_snapshot()))
     }
 }
 
 /// One report builder for every pool size, so a consumer written
 /// against the N-engine shape never sees different keys from a pool
 /// that happens to be size 1 (placement counters simply read 0 there).
-fn build_report(engines: &[&Arc<EngineMetrics>], pool: Option<&PoolMetrics>) -> Value {
+fn build_report(
+    engines: &[&Arc<EngineMetrics>],
+    pool: Option<&PoolMetrics>,
+    dead: Option<&[bool]>,
+) -> Value {
+    let is_dead = |i: usize| dead.and_then(|d| d.get(i)).copied().unwrap_or(false);
     let mut per_engine = Vec::with_capacity(engines.len());
     let mut served: Vec<u64> = Vec::with_capacity(engines.len());
     for (i, m) in engines.iter().enumerate() {
@@ -245,9 +378,11 @@ fn build_report(engines: &[&Arc<EngineMetrics>], pool: Option<&PoolMetrics>) -> 
         per_engine.push(
             Value::obj()
                 .with("engine", i)
+                .with("dead", is_dead(i))
                 .with("submits", routing.map_or(0, |r| r.submits.get()))
                 .with("rows_submitted", routing.map_or(0, |r| r.rows_submitted.get()))
                 .with("rows_completed", routing.map_or(0, |r| r.rows_completed.get()))
+                .with("rejected_submits", routing.map_or(0, |r| r.rejected_submits.get()))
                 .with("rows_served", m.rows_served())
                 .with("decode_rows", m.decode_rows.get())
                 .with("prm_rows", m.prm_rows.get())
@@ -257,12 +392,19 @@ fn build_report(engines: &[&Arc<EngineMetrics>], pool: Option<&PoolMetrics>) -> 
         );
     }
     let total: u64 = served.iter().sum();
+    let live = engines.len() - (0..engines.len()).filter(|&i| is_dead(i)).count();
     Value::obj()
         .with("engines", engines.len())
+        .with("live_engines", live)
         .with("placements", pool.map_or(0, |p| p.placements.get()))
         .with(
             "deadline_tiebreaks",
             pool.map_or(0, |p| p.deadline_tiebreaks.get()),
+        )
+        .with("rerouted_submits", pool.map_or(0, |p| p.rerouted_submits.get()))
+        .with(
+            "engines_marked_dead",
+            pool.map_or(0, |p| p.engines_marked_dead.get()),
         )
         .with("balance_ratio", balance_ratio(&served))
         .with("rows_served_total", total)
@@ -284,9 +426,39 @@ pub struct PoolGuard {
     deadline_ms: f64,
 }
 
+impl PoolGuard {
+    /// The engine this submission was placed on (failover needs to know
+    /// whom to blame).
+    pub(crate) fn engine(&self) -> usize {
+        self.engine
+    }
+}
+
 impl Drop for PoolGuard {
     fn drop(&mut self) {
         self.router.release(self.engine, self.rows, self.deadline_ms);
+    }
+}
+
+/// A cloneable, read-only metrics view over a pool — what an engine
+/// server hands its connection threads so the `metrics` op can answer
+/// without owning (or keeping alive) the pool itself.
+#[derive(Clone)]
+pub struct PoolReporter {
+    engines: Vec<Arc<EngineMetrics>>,
+    router: Option<Arc<PoolRouter>>,
+}
+
+impl PoolReporter {
+    /// Same shape as [`EnginePool::report`].
+    pub fn report(&self) -> Value {
+        match &self.router {
+            Some(router) => router.report(),
+            None => {
+                let engines: Vec<&Arc<EngineMetrics>> = self.engines.iter().collect();
+                build_report(&engines, None, None)
+            }
+        }
     }
 }
 
@@ -317,6 +489,36 @@ impl EnginePool {
         for i in 0..n {
             engines.push(Engine::start_member(cfg, clock.clone(), i)?);
         }
+        Ok(Self::assemble(engines, clock))
+    }
+
+    /// Spawn a pool whose engines run caller-supplied backends —
+    /// `make(i)` builds the factory for pool slot `i`. This is how a
+    /// remote pool is stood up over explicit
+    /// [`crate::net::RemoteBackend`] connectors in tests and benches;
+    /// the CLI path goes through the `BackendKind::Remote` config
+    /// instead.
+    pub fn start_with_factories(
+        cfg: &Config,
+        clock: SharedClock,
+        label: &str,
+        mut make: impl FnMut(usize) -> BackendFactory,
+    ) -> Result<EnginePool> {
+        let n = cfg.engine.engines.max(1);
+        let mut engines = Vec::with_capacity(n);
+        for i in 0..n {
+            engines.push(Engine::start_member_with_factory(
+                clock.clone(),
+                i,
+                make(i),
+                label,
+            )?);
+        }
+        Ok(Self::assemble(engines, clock))
+    }
+
+    fn assemble(engines: Vec<Engine>, clock: SharedClock) -> EnginePool {
+        let n = engines.len();
         let router = if n > 1 {
             Some(Arc::new(PoolRouter {
                 slots: engines
@@ -327,16 +529,17 @@ impl EnginePool {
                     })
                     .collect(),
                 loads: Mutex::new(vec![EngineLoad::default(); n]),
+                dead: (0..n).map(|_| AtomicBool::new(false)).collect(),
                 metrics: PoolMetrics::new(n),
             }))
         } else {
             None
         };
-        Ok(EnginePool {
+        EnginePool {
             engines,
             router,
             clock,
-        })
+        }
     }
 
     pub fn engines(&self) -> usize {
@@ -357,10 +560,25 @@ impl EnginePool {
         &self.engines[i].metrics
     }
 
+    /// Shut engine `i` down *now*, leaving the rest of the pool
+    /// serving — fault injection for failover tests and benches. The
+    /// router discovers the death on the next submission and reroutes.
+    pub fn kill_engine(&mut self, i: usize) {
+        self.engines[i].shutdown_now();
+    }
+
     /// max/min rows served across the pool's engines.
     pub fn balance_ratio(&self) -> f64 {
         let served: Vec<u64> = self.engines.iter().map(|e| e.metrics.rows_served()).collect();
         balance_ratio(&served)
+    }
+
+    /// A cloneable metrics view (for engine servers' `metrics` op).
+    pub fn reporter(&self) -> PoolReporter {
+        PoolReporter {
+            engines: self.engines.iter().map(|e| e.metrics.clone()).collect(),
+            router: self.router.clone(),
+        }
     }
 
     /// The pool report (placement counters + per-engine utilization);
@@ -372,7 +590,7 @@ impl EnginePool {
             None => {
                 let engines: Vec<&Arc<EngineMetrics>> =
                     self.engines.iter().map(|e| &e.metrics).collect();
-                build_report(&engines, None)
+                build_report(&engines, None, None)
             }
         }
     }
@@ -411,6 +629,18 @@ mod tests {
         // and between two constrained engines, the later deadline wins
         let loads = vec![load(4, 1, &[100.0]), load(4, 1, &[900.0])];
         assert_eq!(place(&loads), 1);
+    }
+
+    #[test]
+    fn place_live_excludes_dead_engines() {
+        let loads = vec![load(0, 0, &[]), load(9, 9, &[]), load(5, 5, &[])];
+        // the least-loaded engine is dead → next-best live engine wins
+        assert_eq!(place_live(&loads, &[true, false, false]), Some(2));
+        assert_eq!(place_live(&loads, &[true, false, true]), Some(1));
+        assert_eq!(place_live(&loads, &[true, true, true]), None);
+        // a short mask means the tail is live
+        assert_eq!(place_live(&loads, &[true]), Some(2));
+        assert_eq!(place_live(&[], &[]), None);
     }
 
     #[test]
@@ -502,6 +732,96 @@ mod tests {
                 }
                 prop_assert(placed <= events.len(), "jobs placed once each".to_string())
             },
+        );
+    }
+
+    /// Placement with a random liveness mask never lands on a dead
+    /// engine, and agrees with [`place`] when everyone is live.
+    #[test]
+    fn prop_place_live_respects_the_mask() {
+        forall(
+            "place_live respects liveness",
+            200,
+            |rng| {
+                let n = rng.range(1, 6) as usize;
+                let loads: Vec<EngineLoad> = (0..n)
+                    .map(|_| EngineLoad {
+                        rows: rng.below(10) as usize,
+                        calls: rng.below(5) as usize,
+                        deadlines: Vec::new(),
+                    })
+                    .collect();
+                let dead: Vec<bool> = (0..n).map(|_| rng.below(3) == 0).collect();
+                (loads, dead)
+            },
+            |(loads, dead)| {
+                match place_live(loads, dead) {
+                    Some(idx) => {
+                        prop_assert(idx < loads.len(), "index in range".to_string())?;
+                        prop_assert(!dead[idx], format!("picked dead engine {idx}"))?;
+                        let min_live = loads
+                            .iter()
+                            .enumerate()
+                            .filter(|(i, _)| !dead[*i])
+                            .map(|(_, l)| l.rows)
+                            .min()
+                            .unwrap();
+                        prop_assert(
+                            loads[idx].rows == min_live,
+                            "picked a non-least-loaded live engine".to_string(),
+                        )?;
+                    }
+                    None => {
+                        prop_assert(
+                            dead.iter().all(|&d| d),
+                            "returned None with live engines remaining".to_string(),
+                        )?;
+                    }
+                }
+                if dead.iter().all(|&d| !d) && !loads.is_empty() {
+                    prop_assert(
+                        place_live(loads, dead) == Some(place(loads)),
+                        "all-live placement must match place()".to_string(),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn submissions_reroute_around_a_killed_engine() {
+        use crate::config::BackendKind;
+        let mut cfg = Config::default();
+        cfg.engine.backend = BackendKind::Sim;
+        cfg.engine.sim_clock = true;
+        cfg.engine.engines = 2;
+        let mut pool = EnginePool::start(&cfg).unwrap();
+        let handle = pool.handle();
+        let before = handle.prm_score(vec![vec![1u32, 2, 3]]).unwrap();
+
+        pool.kill_engine(0);
+        for _ in 0..4 {
+            // least-loaded placement keeps trying the idle dead engine
+            // first; every request must still succeed on the live one
+            let after = handle.prm_score(vec![vec![1u32, 2, 3]]).unwrap();
+            assert_eq!(before, after, "reroute must not change results");
+        }
+        let report = pool.report();
+        assert!(report.req_f64("rerouted_submits").unwrap() >= 1.0);
+        assert_eq!(report.req_f64("engines_marked_dead").unwrap(), 1.0);
+        assert_eq!(report.req_f64("live_engines").unwrap(), 1.0);
+        let per = report.req_arr("per_engine").unwrap();
+        assert_eq!(per[0].req("dead").unwrap().as_bool(), Some(true));
+
+        pool.kill_engine(1);
+        let err = handle
+            .prm_score(vec![vec![1u32, 2, 3]])
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("all 2 pool engines are down") && err.contains("prm_score"),
+            "all-down error should be descriptive: {err}"
         );
     }
 

@@ -13,6 +13,27 @@ pub enum GenKind {
     Chunk,
 }
 
+impl GenKind {
+    /// Stable wire/diagnostic name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            GenKind::Full => "full",
+            GenKind::Chunk => "chunk",
+        }
+    }
+
+    /// Inverse of [`GenKind::as_str`], for the wire decoder.
+    pub fn parse(s: &str) -> crate::error::Result<GenKind> {
+        match s {
+            "full" => Ok(GenKind::Full),
+            "chunk" => Ok(GenKind::Chunk),
+            other => Err(crate::error::Error::net(format!(
+                "unknown generation kind '{other}' (expected 'full' or 'chunk')"
+            ))),
+        }
+    }
+}
+
 /// One sequence job (a candidate to generate or a beam to extend).
 ///
 /// Beyond the prompt, a job carries its share of the per-request budget:
@@ -90,6 +111,27 @@ pub enum EmbedKind {
     Pool,
     /// Mean-pooled token embeddings ("BERT-style", appendix A.3).
     Small,
+}
+
+impl EmbedKind {
+    /// Stable wire/diagnostic name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EmbedKind::Pool => "pool",
+            EmbedKind::Small => "small",
+        }
+    }
+
+    /// Inverse of [`EmbedKind::as_str`], for the wire decoder.
+    pub fn parse(s: &str) -> crate::error::Result<EmbedKind> {
+        match s {
+            "pool" => Ok(EmbedKind::Pool),
+            "small" => Ok(EmbedKind::Small),
+            other => Err(crate::error::Error::net(format!(
+                "unknown embed kind '{other}' (expected 'pool' or 'small')"
+            ))),
+        }
+    }
 }
 
 /// Probe training outcome.

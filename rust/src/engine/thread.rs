@@ -52,9 +52,11 @@ fn send_scattered<T: Clone>(
             }
         }
         Err(e) => {
-            let msg = e.to_string();
+            // replicate() preserves the error variant — in particular a
+            // transient Error::Net from a remote shard stays transient,
+            // so every coalesced requester's pool failover can engage
             for reply in replies {
-                let _ = reply.send(Err(Error::Engine(msg.clone())));
+                let _ = reply.send(Err(e.replicate()));
             }
         }
     }
@@ -275,6 +277,17 @@ impl EngineThread {
                 prompts.push(t);
             }
 
+            // the most urgent deadline among this plan's rows, as a hint
+            // for backends that can act on it (RemoteBackend ships it to
+            // the server so *its* preemption loop sees the budget too;
+            // local backends ignore it — preemption happens below)
+            let plan_deadline = plan
+                .job_indices
+                .iter()
+                .map(|&ji| deadlines[ji])
+                .fold(f64::INFINITY, f64::min);
+            self.backend.deadline_hint(plan_deadline);
+
             let t0 = self.clock.now_ms();
             let rows = self.backend.generate(plan, &prompts)?;
             if rows.len() < plan.job_indices.len() {
@@ -478,6 +491,9 @@ impl EngineThread {
     fn info(&self) -> Value {
         let mut v = self.backend.describe();
         v.set("metrics", self.metrics.to_json());
+        // the full shape contract — the engine server's handshake ack
+        // forwards this object verbatim, so every field the client-side
+        // EngineShapes needs must be here
         v.set(
             "shapes",
             Value::obj()
@@ -486,7 +502,11 @@ impl EngineThread {
                 .with("query_len", self.shapes.query_len)
                 .with("prm_len", self.shapes.prm_len)
                 .with("gen_max_new", self.shapes.gen_max_new)
-                .with("probe_features", self.shapes.probe_features),
+                .with("chunk_max_new", self.shapes.chunk_max_new)
+                .with("probe_fwd_batch", self.shapes.probe_fwd_batch)
+                .with("probe_train_batch", self.shapes.probe_train_batch)
+                .with("probe_features", self.shapes.probe_features)
+                .with("d_model", self.shapes.d_model),
         );
         v
     }

@@ -28,6 +28,20 @@ pub enum Error {
     #[error("engine error: {0}")]
     Engine(String),
 
+    /// A remote-engine wire fault: connection, framing, protocol version
+    /// or handshake mismatch, or an error the server reported over the
+    /// wire. Kept distinct from [`Error::Artifact`]/[`Error::Internal`]
+    /// so remote faults never masquerade as local ones. `transient`
+    /// marks faults worth retrying (connect refused, timeouts, dropped
+    /// connections) as opposed to protocol disagreements.
+    #[error("net error: {message}")]
+    Net {
+        /// Human-readable description of the fault.
+        message: String,
+        /// True when a retry (possibly on another shard) may succeed.
+        transient: bool,
+    },
+
     /// Invariant violation inside a coordinator component.
     #[error("internal error: {0}")]
     Internal(String),
@@ -49,5 +63,88 @@ impl Error {
     /// Helper for formatted internal errors.
     pub fn internal(msg: impl Into<String>) -> Self {
         Error::Internal(msg.into())
+    }
+    /// A permanent (non-retryable) network/protocol error.
+    pub fn net(msg: impl Into<String>) -> Self {
+        Error::Net {
+            message: msg.into(),
+            transient: false,
+        }
+    }
+    /// A transient network error: retrying, possibly against another
+    /// shard, may succeed.
+    pub fn net_transient(msg: impl Into<String>) -> Self {
+        Error::Net {
+            message: msg.into(),
+            transient: true,
+        }
+    }
+    /// True for transient [`Error::Net`] faults — the signal the pool's
+    /// failover path keys on.
+    pub fn is_transient_net(&self) -> bool {
+        matches!(self, Error::Net { transient: true, .. })
+    }
+    /// Short machine-readable kind tag, used by the wire error envelope.
+    pub fn kind_str(&self) -> &'static str {
+        match self {
+            Error::Io(_) => "io",
+            Error::Json(_) => "json",
+            Error::Xla(_) => "xla",
+            Error::Artifact(_) => "artifact",
+            Error::Config(_) => "config",
+            Error::Engine(_) => "engine",
+            Error::Net { .. } => "net",
+            Error::Internal(_) => "internal",
+        }
+    }
+    /// Best-effort clone for fan-out to multiple reply channels
+    /// (`Error` is not `Clone` because [`std::io::Error`] is not).
+    /// Preserves the variant — in particular `Net { transient }`, which
+    /// failover logic inspects — except `Io`, which degrades to
+    /// `Engine` with the formatted message.
+    pub fn replicate(&self) -> Error {
+        match self {
+            Error::Io(e) => Error::Engine(format!("io error: {e}")),
+            Error::Json(m) => Error::Json(m.clone()),
+            Error::Xla(m) => Error::Xla(m.clone()),
+            Error::Artifact(m) => Error::Artifact(m.clone()),
+            Error::Config(m) => Error::Config(m.clone()),
+            Error::Engine(m) => Error::Engine(m.clone()),
+            Error::Net { message, transient } => Error::Net {
+                message: message.clone(),
+                transient: *transient,
+            },
+            Error::Internal(m) => Error::Internal(m.clone()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn net_errors_carry_transience() {
+        assert!(Error::net_transient("conn reset").is_transient_net());
+        assert!(!Error::net("bad version").is_transient_net());
+        assert!(!Error::internal("x").is_transient_net());
+        assert_eq!(Error::net("v1 vs v2").to_string(), "net error: v1 vs v2");
+    }
+
+    #[test]
+    fn replicate_preserves_variant_and_transience() {
+        let e = Error::net_transient("peer gone");
+        let r = e.replicate();
+        assert!(r.is_transient_net());
+        assert_eq!(r.to_string(), e.to_string());
+        assert_eq!(r.kind_str(), "net");
+
+        let io = Error::Io(std::io::Error::new(
+            std::io::ErrorKind::BrokenPipe,
+            "pipe closed",
+        ));
+        let r = io.replicate();
+        assert_eq!(r.kind_str(), "engine");
+        assert!(r.to_string().contains("pipe closed"));
     }
 }

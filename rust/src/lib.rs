@@ -37,6 +37,7 @@
 //! | [`matrix`] | evaluation-matrix collection and caching |
 //! | [`figures`] | regeneration of every figure in the paper |
 //! | [`server`] | serving driver and load generator |
+//! | [`net`] | remote engine tier: wire protocol, engine servers, remote backend |
 //! | [`eval`] | answer extraction, exact match, vote aggregation |
 //! | [`metrics`] | counters and latency histograms |
 //! | [`testkit`] | miniature property-testing framework |
@@ -51,6 +52,7 @@ pub mod eval;
 pub mod figures;
 pub mod matrix;
 pub mod metrics;
+pub mod net;
 pub mod probe;
 pub mod router;
 pub mod runtime;

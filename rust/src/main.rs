@@ -9,7 +9,8 @@
 //! | `collect` | build the evaluation matrix (query × strategy × repeat) |
 //! | `train-probe` | train + Platt-calibrate the accuracy probe (AOT'd Adam) |
 //! | `figures` | regenerate the paper's figures from the matrix |
-//! | `serve` | run the adaptive serving driver with a load generator (sharded engine pool via `--engines N`, `--backend device\|sim`) |
+//! | `serve` | run the adaptive serving driver with a load generator (sharded engine pool via `--engines N`, `--backend device\|sim\|remote`, `--remote host:port,...`) |
+//! | `engine-serve` | expose a local engine fleet over TCP for remote `serve` clients (`docs/remote.md`) |
 //! | `pipeline` | collect → train-probe → figures, end to end |
 //! | `info` | print artifact/runtime diagnostics |
 
@@ -43,9 +44,12 @@ fn print_help() {
            figures      [--config F] [--results DIR] [--fig ID|all]\n\
            serve        [--config F] [--artifacts DIR] [--rate R] [--requests N]\n\
                         [--lambda-t X] [--lambda-l X] [--strategy S] [--sim]\n\
-                        [--engines N] [--backend device|sim]\n\
+                        [--engines N] [--backend device|sim|remote]\n\
+                        [--remote host:port[,host:port...]]\n\
                         [--deadline-ms X] [--max-tokens N]\n\
                         [--budget-mix W:SPEC,... e.g. 30:d500,30:d5000,40:unlimited]\n\
+           engine-serve [--config F] [--addr HOST:PORT] [--backend device|sim]\n\
+                        [--engines N] [--sim]\n\
            pipeline     [--config F] [--artifacts DIR] [--out DIR] [--quick]\n\
            info         [--artifacts DIR]"
     );
@@ -65,6 +69,7 @@ fn dispatch(raw: &[String]) -> Result<()> {
         "train-probe" => ttc::server::commands::cmd_train_probe(raw),
         "figures" => ttc::server::commands::cmd_figures(raw),
         "serve" => ttc::server::commands::cmd_serve(raw),
+        "engine-serve" => ttc::server::commands::cmd_engine_serve(raw),
         "pipeline" => ttc::server::commands::cmd_pipeline(raw),
         "info" => ttc::server::commands::cmd_info(raw),
         other => {

@@ -218,6 +218,9 @@ pub struct PoolEngineMetrics {
     pub rows_submitted: Counter,
     /// Rows whose replies were harvested (or dropped) by the requester.
     pub rows_completed: Counter,
+    /// Submissions this engine refused (its thread was gone); each one
+    /// was re-placed on a live engine or failed the request.
+    pub rejected_submits: Counter,
 }
 
 impl PoolEngineMetrics {
@@ -226,6 +229,7 @@ impl PoolEngineMetrics {
             .with("submits", self.submits.get())
             .with("rows_submitted", self.rows_submitted.get())
             .with("rows_completed", self.rows_completed.get())
+            .with("rejected_submits", self.rejected_submits.get())
     }
 }
 
@@ -241,6 +245,11 @@ pub struct PoolMetrics {
     /// Placements where the EDF tiebreak picked a different engine than
     /// plain least-loaded would have.
     pub deadline_tiebreaks: Counter,
+    /// Submissions (or in-flight replies) rescued from a dead engine by
+    /// re-placing them on a live one.
+    pub rerouted_submits: Counter,
+    /// Engines declared dead by the health tracker (each counted once).
+    pub engines_marked_dead: Counter,
     per_engine: Vec<PoolEngineMetrics>,
 }
 
@@ -249,6 +258,8 @@ impl PoolMetrics {
         PoolMetrics {
             placements: Counter::new(),
             deadline_tiebreaks: Counter::new(),
+            rerouted_submits: Counter::new(),
+            engines_marked_dead: Counter::new(),
             per_engine: (0..engines).map(|_| PoolEngineMetrics::default()).collect(),
         }
     }
@@ -265,6 +276,8 @@ impl PoolMetrics {
         Value::obj()
             .with("placements", self.placements.get())
             .with("deadline_tiebreaks", self.deadline_tiebreaks.get())
+            .with("rerouted_submits", self.rerouted_submits.get())
+            .with("engines_marked_dead", self.engines_marked_dead.get())
             .with(
                 "per_engine",
                 Value::Arr(self.per_engine.iter().map(|m| m.to_json()).collect()),
@@ -376,12 +389,18 @@ mod tests {
         m.engine(1).submits.inc();
         m.engine(1).rows_submitted.add(8);
         m.engine(1).rows_completed.add(8);
+        m.engine(0).rejected_submits.inc();
+        m.rerouted_submits.inc();
+        m.engines_marked_dead.inc();
         let v = m.to_json();
         assert_eq!(v.req_f64("placements").unwrap(), 1.0);
+        assert_eq!(v.req_f64("rerouted_submits").unwrap(), 1.0);
+        assert_eq!(v.req_f64("engines_marked_dead").unwrap(), 1.0);
         let per = v.req_arr("per_engine").unwrap();
         assert_eq!(per.len(), 2);
         assert_eq!(per[1].req_f64("rows_submitted").unwrap(), 8.0);
         assert_eq!(per[0].req_f64("submits").unwrap(), 0.0);
+        assert_eq!(per[0].req_f64("rejected_submits").unwrap(), 1.0);
     }
 
     #[test]

@@ -1,0 +1,439 @@
+//! [`RemoteBackend`]: the existing [`Backend`] trait over a framed
+//! connection to a `ttc engine-serve` fleet.
+//!
+//! One `RemoteBackend` owns one connection to one remote shard; the
+//! [`crate::engine::EnginePool`] runs N of them (one per engine slot)
+//! to shard across servers. Faults are handled in two tiers:
+//!
+//! * **in here** — transient faults (refused dials, dropped
+//!   connections, timeouts) get bounded retry-with-backoff against the
+//!   same endpoint, reconnecting each time;
+//! * **above** — when retries are exhausted the call fails with a
+//!   *transient* [`crate::error::Error::Net`], which the pool's
+//!   failover path treats as "shard dead": the engine slot is excluded
+//!   from placement and in-flight work is re-placed on live shards.
+//!
+//! Wire calls are stateless (all request state travels in the frame),
+//! so retrying — on this shard or another — is always safe.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::engine::batcher::BatchPlan;
+use crate::engine::protocol::{EmbedKind, ProbeTrainReport};
+use crate::engine::{Backend, BackendFactory, EngineShapes};
+use crate::error::{Error, Result};
+use crate::util::clock::SharedClock;
+use crate::util::json::Value;
+
+use super::serializer::{JsonCodec, Serializer};
+use super::transport::{recv_msg, send_msg, Conn, Connector, NetMetrics};
+use super::wire;
+
+/// Client-side fault-handling knobs.
+#[derive(Debug, Clone)]
+pub struct RemoteConfig {
+    /// Blocking-read timeout per call (wall-clock ms). Also bounds how
+    /// long a kill-race can strand a caller whose connect won the race
+    /// against a dying server.
+    pub call_timeout_ms: f64,
+    /// Dial timeout (wall-clock ms).
+    pub connect_timeout_ms: f64,
+    /// Transient-fault retries per call (beyond the first attempt).
+    pub retries: usize,
+    /// Initial backoff between retries (doubles per retry).
+    pub backoff_ms: f64,
+}
+
+impl Default for RemoteConfig {
+    fn default() -> Self {
+        RemoteConfig {
+            call_timeout_ms: 30_000.0,
+            connect_timeout_ms: 5_000.0,
+            retries: 2,
+            backoff_ms: 10.0,
+        }
+    }
+}
+
+/// A [`Backend`] whose bucket-shaped calls execute on a remote fleet.
+pub struct RemoteBackend {
+    connector: Box<dyn Connector>,
+    codec: JsonCodec,
+    cfg: RemoteConfig,
+    clock: SharedClock,
+    conn: Option<Box<dyn Conn>>,
+    shapes: EngineShapes,
+    remote_backend: String,
+    remote_engines: usize,
+    metrics: Arc<NetMetrics>,
+    /// Absolute engine-clock deadline for the next generate (see
+    /// [`Backend::deadline_hint`]); reset after each call.
+    next_deadline_ms: f64,
+}
+
+impl RemoteBackend {
+    /// Dial and handshake eagerly, so a bad address, version skew or
+    /// probe-layout mismatch fails engine startup with a clear error
+    /// instead of poisoning the first request.
+    pub fn connect(
+        connector: Box<dyn Connector>,
+        cfg: RemoteConfig,
+        clock: SharedClock,
+        metrics: Arc<NetMetrics>,
+    ) -> Result<RemoteBackend> {
+        let codec = JsonCodec;
+        let (conn, backend, engines, shapes) = Self::dial(&*connector, &codec, &cfg, &metrics)?;
+        Ok(RemoteBackend {
+            connector,
+            codec,
+            cfg,
+            clock,
+            conn: Some(conn),
+            shapes,
+            remote_backend: backend,
+            remote_engines: engines,
+            metrics,
+            next_deadline_ms: f64::INFINITY,
+        })
+    }
+
+    /// A [`BackendFactory`] for [`crate::engine::EnginePool`] slots.
+    pub fn factory(
+        connector: impl Connector + 'static,
+        cfg: RemoteConfig,
+        clock: SharedClock,
+        metrics: Arc<NetMetrics>,
+    ) -> BackendFactory {
+        Box::new(move || {
+            RemoteBackend::connect(Box::new(connector), cfg, clock, metrics)
+                .map(|b| Box::new(b) as Box<dyn Backend>)
+        })
+    }
+
+    /// One dial + handshake. Returns the live connection and the
+    /// server's identity/shapes.
+    fn dial(
+        connector: &dyn Connector,
+        codec: &dyn Serializer,
+        cfg: &RemoteConfig,
+        metrics: &NetMetrics,
+    ) -> Result<(Box<dyn Conn>, String, usize, EngineShapes)> {
+        let mut conn = connector.connect()?;
+        conn.set_read_timeout(Some(Duration::from_secs_f64(
+            (cfg.call_timeout_ms / 1e3).max(1e-3),
+        )))
+        .map_err(|e| Error::net(format!("cannot set read timeout: {e}")))?;
+        metrics.reconnects.inc();
+        let hello = wire::hello(super::frame::PROTOCOL_VERSION, wire::ProbeLayout::current());
+        send_msg(conn.as_mut(), codec, &hello, Some(metrics))?;
+        let ack = recv_msg(conn.as_mut(), codec, Some(metrics))?;
+        let (backend, engines, shapes) = wire::check_ack(&ack)?;
+        Ok((conn, backend, engines, shapes))
+    }
+
+    /// Execute one request with bounded retry on transient faults.
+    fn call(&mut self, req: &Value) -> Result<Value> {
+        let mut backoff_ms = self.cfg.backoff_ms;
+        let mut last: Option<Error> = None;
+        for attempt in 0..=self.cfg.retries {
+            if attempt > 0 {
+                self.metrics.retries.inc();
+                if backoff_ms > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(backoff_ms / 1e3));
+                }
+                backoff_ms *= 2.0;
+            }
+            match self.try_once(req) {
+                Ok(v) => return Ok(v),
+                Err(e) if e.is_transient_net() => {
+                    // The connection is suspect: drop it so the next
+                    // attempt redials.
+                    self.conn = None;
+                    last = Some(e);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        let last = last.map(|e| e.to_string()).unwrap_or_default();
+        // Still transient: the *shard* is down, but the pool can rescue
+        // the request on another one.
+        Err(Error::net_transient(format!(
+            "{} unreachable after {} attempt(s): {last}",
+            self.connector.addr(),
+            self.cfg.retries + 1
+        )))
+    }
+
+    fn try_once(&mut self, req: &Value) -> Result<Value> {
+        if self.conn.is_none() {
+            let (conn, backend, engines, shapes) =
+                Self::dial(&*self.connector, &self.codec, &self.cfg, &self.metrics)?;
+            self.remote_backend = backend;
+            self.remote_engines = engines;
+            self.shapes = shapes;
+            self.conn = Some(conn);
+        }
+        let conn = self.conn.as_mut().expect("connection just established");
+        send_msg(conn.as_mut(), &self.codec, req, Some(&self.metrics))?;
+        let resp = recv_msg(conn.as_mut(), &self.codec, Some(&self.metrics))?;
+        wire::unwrap_response(resp)
+    }
+
+    /// Decode an array-of-token-rows response field, checking arity.
+    fn expect_rows(v: &Value, key: &str, want: usize) -> Result<Vec<Vec<u32>>> {
+        let rows = v
+            .req_arr(key)?
+            .iter()
+            .map(|r| wire::tokens_from_value(r, key))
+            .collect::<Result<Vec<_>>>()?;
+        if rows.len() != want {
+            return Err(Error::net(format!(
+                "server returned {} {key}, expected {want}",
+                rows.len()
+            )));
+        }
+        Ok(rows)
+    }
+}
+
+impl Backend for RemoteBackend {
+    fn name(&self) -> &'static str {
+        "remote"
+    }
+
+    fn shapes(&self) -> &EngineShapes {
+        &self.shapes
+    }
+
+    fn describe(&self) -> Value {
+        Value::obj()
+            .with("backend", "remote")
+            .with("addr", self.connector.addr())
+            .with("remote_backend", self.remote_backend.as_str())
+            .with("remote_engines", self.remote_engines)
+            .with("net", self.metrics.to_json())
+    }
+
+    fn deadline_hint(&mut self, deadline_ms: f64) {
+        self.next_deadline_ms = deadline_ms;
+    }
+
+    fn generate(&mut self, plan: &BatchPlan, prompts: &[&[u32]]) -> Result<Vec<Vec<u32>>> {
+        let mut req = Value::obj()
+            .with("op", "generate")
+            .with("kind", plan.kind.as_str())
+            .with("temperature", plan.temperature as f64)
+            .with("bucket", plan.bucket)
+            .with(
+                "prompts",
+                Value::Arr(prompts.iter().map(|p| wire::tokens_to_value(p)).collect()),
+            );
+        if let Some(cap) = plan.max_steps {
+            req = req.with("max_steps", cap);
+        }
+        // Deadlines cross the wire *relative*: the server re-anchors to
+        // its own clock (processes cannot share one — docs/remote.md).
+        let deadline = std::mem::replace(&mut self.next_deadline_ms, f64::INFINITY);
+        if deadline.is_finite() {
+            let rel = (deadline - self.clock.now_ms()).max(0.0);
+            req = req.with("deadline_rel_ms", rel);
+        }
+        let resp = self.call(&req)?;
+        Self::expect_rows(&resp, "rows", prompts.len())
+    }
+
+    fn prm_score(&mut self, bucket: usize, prefixes: &[Vec<u32>]) -> Result<Vec<f32>> {
+        let req = Value::obj()
+            .with("op", "prm_score")
+            .with("bucket", bucket)
+            .with(
+                "prefixes",
+                Value::Arr(prefixes.iter().map(|p| wire::tokens_to_value(p)).collect()),
+            );
+        let resp = self.call(&req)?;
+        let scores = wire::f32s_from_value(resp.req("scores")?, "scores")?;
+        if scores.len() != prefixes.len() {
+            return Err(Error::net(format!(
+                "server returned {} scores, expected {}",
+                scores.len(),
+                prefixes.len()
+            )));
+        }
+        Ok(scores)
+    }
+
+    fn embed(&mut self, kind: EmbedKind, bucket: usize, queries: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        let req = Value::obj()
+            .with("op", "embed")
+            .with("kind", kind.as_str())
+            .with("bucket", bucket)
+            .with(
+                "queries",
+                Value::Arr(queries.iter().map(|q| wire::tokens_to_value(q)).collect()),
+            );
+        let resp = self.call(&req)?;
+        let vectors = resp
+            .req_arr("vectors")?
+            .iter()
+            .map(|v| wire::f32s_from_value(v, "vectors"))
+            .collect::<Result<Vec<_>>>()?;
+        if vectors.len() != queries.len() {
+            return Err(Error::net(format!(
+                "server returned {} vectors, expected {}",
+                vectors.len(),
+                queries.len()
+            )));
+        }
+        Ok(vectors)
+    }
+
+    fn probe_fwd(&mut self, feats: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let req = Value::obj().with("op", "probe_fwd").with(
+            "feats",
+            Value::Arr(feats.iter().map(|f| wire::f32s_to_value(f)).collect()),
+        );
+        let resp = self.call(&req)?;
+        wire::f32s_from_value(resp.req("logits")?, "logits")
+    }
+
+    fn probe_train(
+        &mut self,
+        train_feats: Vec<Vec<f32>>,
+        train_labels: Vec<f32>,
+        val_feats: Vec<Vec<f32>>,
+        val_labels: Vec<f32>,
+        epochs: usize,
+        patience: usize,
+    ) -> Result<ProbeTrainReport> {
+        let rows = |rows: &[Vec<f32>]| {
+            Value::Arr(rows.iter().map(|f| wire::f32s_to_value(f)).collect())
+        };
+        let req = Value::obj()
+            .with("op", "probe_train")
+            .with("train_feats", rows(&train_feats))
+            .with("train_labels", wire::f32s_to_value(&train_labels))
+            .with("val_feats", rows(&val_feats))
+            .with("val_labels", wire::f32s_to_value(&val_labels))
+            .with("epochs", epochs)
+            .with("patience", patience);
+        let resp = self.call(&req)?;
+        let curve = resp
+            .req_arr("curve")?
+            .iter()
+            .map(|p| -> Result<(usize, f64, f64)> {
+                let p = p
+                    .as_arr()
+                    .filter(|a| a.len() == 3)
+                    .ok_or_else(|| Error::net("curve: expected [epoch, train, val] triples"))?;
+                Ok((
+                    p[0].as_usize()
+                        .ok_or_else(|| Error::net("curve: bad epoch"))?,
+                    p[1].as_f64().ok_or_else(|| Error::net("curve: bad loss"))?,
+                    p[2].as_f64().ok_or_else(|| Error::net("curve: bad loss"))?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ProbeTrainReport {
+            steps: resp.req_usize("steps")?,
+            final_train_loss: resp.req_f64("final_train_loss")?,
+            best_val_loss: resp.req_f64("best_val_loss")?,
+            curve,
+            params: wire::f32s_from_value(resp.req("params")?, "params")?,
+        })
+    }
+
+    fn probe_load(&mut self, params: Vec<f32>) -> Result<()> {
+        let req = Value::obj()
+            .with("op", "probe_load")
+            .with("params", wire::f32s_to_value(&params));
+        self.call(&req)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BackendKind, Config};
+    use crate::engine::protocol::GenKind;
+    use crate::net::server::LoopbackEngineServer;
+
+    fn sim_cfg(engines: usize) -> Config {
+        let mut cfg = Config::default();
+        cfg.engine.backend = BackendKind::Sim;
+        cfg.engine.sim_clock = true;
+        cfg.engine.engines = engines;
+        cfg
+    }
+
+    fn quick_remote() -> RemoteConfig {
+        RemoteConfig {
+            call_timeout_ms: 5_000.0,
+            connect_timeout_ms: 1_000.0,
+            retries: 1,
+            backoff_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn remote_generate_matches_local_sim_at_temp_zero() {
+        use crate::engine::batcher::plan_batches;
+        use crate::engine::protocol::GenJob;
+        use crate::engine::{Backend, SimBackend};
+        use crate::util::clock;
+
+        let cfg = sim_cfg(1);
+        let mut local = SimBackend::new(
+            EngineShapes::sim_default(&cfg.engine),
+            clock::sim_clock(),
+            cfg.seed,
+            0,
+        );
+
+        let (connector, _server) = LoopbackEngineServer::spawn(&cfg).unwrap();
+        let mut remote = RemoteBackend::connect(
+            Box::new(connector),
+            quick_remote(),
+            clock::sim_clock(),
+            NetMetrics::new(),
+        )
+        .unwrap();
+
+        let tok = crate::tokenizer::Tokenizer::new();
+        let prompt = tok.encode("Q:7+5-2+8=?\n").unwrap();
+        let jobs = vec![GenJob::new(prompt.clone(), GenKind::Full, 0.0)];
+        let shapes = local.shapes().clone();
+        let plans = plan_batches(
+            &jobs,
+            &shapes.batch_buckets,
+            &shapes.chunk_lens,
+            shapes.query_len,
+        );
+        assert_eq!(plans.len(), 1);
+        let prompts: Vec<&[u32]> = vec![&prompt];
+        let a = local.generate(&plans[0], &prompts).unwrap();
+        let b = remote.generate(&plans[0], &prompts).unwrap();
+        assert_eq!(a, b, "remote sim must replay the local sim exactly");
+    }
+
+    #[test]
+    fn exhausted_retries_surface_as_transient_net() {
+        let cfg = sim_cfg(1);
+        let (connector, mut server) = LoopbackEngineServer::spawn(&cfg).unwrap();
+        let mut remote = RemoteBackend::connect(
+            Box::new(connector),
+            RemoteConfig {
+                call_timeout_ms: 200.0,
+                ..quick_remote()
+            },
+            crate::util::clock::sim_clock(),
+            NetMetrics::new(),
+        )
+        .unwrap();
+        server.kill();
+        let err = remote.prm_score(8, &[vec![1, 2, 3]]).unwrap_err();
+        assert!(err.is_transient_net(), "dead shard must be transient: {err}");
+        assert!(remote.metrics.retries.get() >= 1);
+    }
+}

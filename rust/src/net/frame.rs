@@ -1,0 +1,235 @@
+//! Length-prefixed, versioned wire frames.
+//!
+//! Every message on a remote-engine connection is one frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"TTCW"
+//! 4       2     protocol version, big-endian u16
+//! 6       1     codec id (1 = JSON)
+//! 7       1     reserved, must be 0
+//! 8       4     payload length, big-endian u32
+//! 12      n     payload bytes (codec-encoded message)
+//! ```
+//!
+//! The version check happens at this layer: a reader that sees a frame
+//! stamped with a different [`PROTOCOL_VERSION`] fails with a
+//! non-transient [`Error::Net`] naming both versions, before any
+//! payload is decoded. Payload length is validated against
+//! [`MAX_FRAME_BYTES`] *before* allocation so a malformed or hostile
+//! frame cannot OOM the server. See `docs/remote.md` for a worked
+//! byte-level example.
+
+use std::io::{Read, Write};
+
+use crate::error::{Error, Result};
+
+/// Wire protocol version stamped into every frame header.
+pub const PROTOCOL_VERSION: u16 = 1;
+
+/// Frame magic: the first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"TTCW";
+
+/// Codec id for the JSON serializer.
+pub const CODEC_JSON: u8 = 1;
+
+/// Size of the fixed frame header in bytes.
+pub const HEADER_BYTES: usize = 12;
+
+/// Upper bound on a frame payload (64 MiB). Checked before allocating.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Write one frame with the current [`PROTOCOL_VERSION`].
+pub fn write_frame(w: &mut dyn Write, codec_id: u8, payload: &[u8]) -> Result<()> {
+    write_frame_versioned(w, PROTOCOL_VERSION, codec_id, payload)
+}
+
+/// Write one frame with an explicit version stamp. Exposed so tests
+/// (and docs) can fabricate version-mismatch frames.
+pub fn write_frame_versioned(
+    w: &mut dyn Write,
+    version: u16,
+    codec_id: u8,
+    payload: &[u8],
+) -> Result<()> {
+    if payload.len() > MAX_FRAME_BYTES {
+        return Err(Error::net(format!(
+            "refusing to send a {} byte frame (max {MAX_FRAME_BYTES})",
+            payload.len()
+        )));
+    }
+    let mut header = [0u8; HEADER_BYTES];
+    header[0..4].copy_from_slice(&MAGIC);
+    header[4..6].copy_from_slice(&version.to_be_bytes());
+    header[6] = codec_id;
+    header[7] = 0;
+    header[8..12].copy_from_slice(&(payload.len() as u32).to_be_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame, validating magic, version, codec and length. Returns
+/// the raw payload bytes.
+///
+/// A clean EOF before any header byte is a *transient* fault (the peer
+/// closed the connection — e.g. its engine fleet shut down mid-call),
+/// so callers can retry on another shard. Anything structurally wrong
+/// with the header is a permanent protocol error.
+pub fn read_frame(r: &mut dyn Read, expect_codec: u8) -> Result<Vec<u8>> {
+    let mut header = [0u8; HEADER_BYTES];
+    read_exact_or_eof(r, &mut header)?;
+    if header[0..4] != MAGIC {
+        return Err(Error::net(format!(
+            "bad frame magic {:02x?} (expected {:02x?} — not a ttc wire peer?)",
+            &header[0..4],
+            MAGIC
+        )));
+    }
+    let version = u16::from_be_bytes([header[4], header[5]]);
+    if version != PROTOCOL_VERSION {
+        return Err(Error::net(format!(
+            "protocol version mismatch: peer speaks v{version}, this build speaks v{PROTOCOL_VERSION}"
+        )));
+    }
+    let codec = header[6];
+    if codec != expect_codec {
+        return Err(Error::net(format!(
+            "codec mismatch: frame uses codec {codec}, connection negotiated {expect_codec}"
+        )));
+    }
+    if header[7] != 0 {
+        return Err(Error::net(format!(
+            "reserved frame byte is {} (must be 0)",
+            header[7]
+        )));
+    }
+    let len = u32::from_be_bytes([header[8], header[9], header[10], header[11]]) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(Error::net(format!(
+            "frame announces {len} payload bytes (max {MAX_FRAME_BYTES}) — refusing to allocate"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).map_err(|e| {
+        Error::net_transient(format!("connection dropped mid-frame ({len} byte payload): {e}"))
+    })?;
+    Ok(payload)
+}
+
+/// Read the full header, mapping EOF-before-first-byte to a transient
+/// "peer closed" error and partial reads to a mid-frame drop.
+fn read_exact_or_eof(r: &mut dyn Read, buf: &mut [u8]) -> Result<()> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(if filled == 0 {
+                    Error::net_transient("peer closed the connection")
+                } else {
+                    Error::net_transient(format!(
+                        "connection dropped mid-header ({filled} of {} bytes)",
+                        buf.len()
+                    ))
+                });
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::WouldBlock =>
+            {
+                return Err(Error::net_transient(format!("read timed out: {e}")));
+            }
+            Err(e) => return Err(Error::net_transient(format!("read failed: {e}"))),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_frame_bytes() {
+        // This exact layout is documented in docs/remote.md — keep the
+        // two in sync.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, CODEC_JSON, b"{}").unwrap();
+        assert_eq!(
+            buf,
+            vec![
+                b'T', b'T', b'C', b'W', // magic
+                0x00, 0x01, // protocol version 1, big-endian
+                0x01, // codec: JSON
+                0x00, // reserved
+                0x00, 0x00, 0x00, 0x02, // payload length 2
+                b'{', b'}', // payload
+            ]
+        );
+    }
+
+    #[test]
+    fn roundtrip() {
+        let payload = br#"{"op":"generate","rows":3}"#;
+        let mut buf = Vec::new();
+        write_frame(&mut buf, CODEC_JSON, payload).unwrap();
+        let got = read_frame(&mut &buf[..], CODEC_JSON).unwrap();
+        assert_eq!(got, payload);
+    }
+
+    #[test]
+    fn version_mismatch_names_both_versions() {
+        let mut buf = Vec::new();
+        write_frame_versioned(&mut buf, 7, CODEC_JSON, b"{}").unwrap();
+        let err = read_frame(&mut &buf[..], CODEC_JSON).unwrap_err();
+        assert!(!err.is_transient_net());
+        let msg = err.to_string();
+        assert!(msg.contains("v7") && msg.contains("v1"), "{msg}");
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, CODEC_JSON, b"{}").unwrap();
+        buf[0] = b'X';
+        let err = read_frame(&mut &buf[..], CODEC_JSON).unwrap_err();
+        assert!(!err.is_transient_net());
+        assert!(err.to_string().contains("magic"));
+    }
+
+    #[test]
+    fn oversized_length_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, CODEC_JSON, b"{}").unwrap();
+        buf[8..12].copy_from_slice(&(u32::MAX).to_be_bytes());
+        let err = read_frame(&mut &buf[..], CODEC_JSON).unwrap_err();
+        assert!(!err.is_transient_net());
+        assert!(err.to_string().contains("refusing to allocate"));
+    }
+
+    #[test]
+    fn eof_is_transient() {
+        let err = read_frame(&mut &[][..], CODEC_JSON).unwrap_err();
+        assert!(err.is_transient_net(), "clean EOF must be transient: {err}");
+    }
+
+    #[test]
+    fn truncated_payload_is_transient() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, CODEC_JSON, b"{\"k\":1}").unwrap();
+        buf.truncate(buf.len() - 3);
+        let err = read_frame(&mut &buf[..], CODEC_JSON).unwrap_err();
+        assert!(err.is_transient_net(), "{err}");
+    }
+
+    #[test]
+    fn codec_mismatch_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 2, b"{}").unwrap();
+        let err = read_frame(&mut &buf[..], CODEC_JSON).unwrap_err();
+        assert!(err.to_string().contains("codec"));
+    }
+}

@@ -1,0 +1,35 @@
+//! The remote engine tier: versioned wire protocol, engine servers and
+//! the client-side [`RemoteBackend`].
+//!
+//! Layering (each piece swappable independently):
+//!
+//! | layer | module | contents |
+//! |---|---|---|
+//! | framing | [`frame`] | `TTCW` magic, version stamp, length prefix |
+//! | codec | [`serializer`] | [`serializer::Serializer`] trait, JSON first |
+//! | transport | [`transport`], [`loopback`] | [`transport::Conn`]/[`transport::Connector`]: TCP and in-process pipes |
+//! | schema | [`wire`] | handshake, shapes, request/response envelopes |
+//! | server | [`server`] | accept loops fronting an [`crate::engine::EnginePool`] |
+//! | client | [`client`] | [`RemoteBackend`] with retry/backoff |
+//!
+//! The loopback transport runs the full protocol (same bytes as TCP)
+//! inside one process, which is how CI exercises every handshake,
+//! failover and kill path deterministically with the sim backend. See
+//! `docs/remote.md` for the frame format, version negotiation and the
+//! clock model.
+
+pub mod client;
+pub mod frame;
+pub mod loopback;
+pub mod serializer;
+pub mod server;
+pub mod transport;
+pub mod wire;
+
+pub use client::{RemoteBackend, RemoteConfig};
+pub use frame::{PROTOCOL_VERSION, MAX_FRAME_BYTES};
+pub use loopback::LoopbackConnector;
+pub use serializer::{JsonCodec, Serializer};
+pub use server::{LoopbackEngineServer, TcpEngineServer};
+pub use transport::{Conn, Connector, NetMetrics, TcpConnector};
+pub use wire::ProbeLayout;

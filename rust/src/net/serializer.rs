@@ -1,0 +1,78 @@
+//! Payload codecs: the wire format is decoupled from the transport.
+//!
+//! A [`Serializer`] turns a [`Value`] message into payload bytes and
+//! back. JSON ships first (the crate already carries a hand-rolled
+//! parser in [`crate::util::json`]); a binary codec can slot in later
+//! by claiming a new codec id in [`super::frame`] without touching the
+//! transport or the request schema.
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+/// Message codec: encode/decode one [`Value`] per frame payload.
+pub trait Serializer: Send {
+    /// Human-readable codec name.
+    fn name(&self) -> &'static str;
+    /// Codec id stamped into the frame header.
+    fn codec_id(&self) -> u8;
+    /// Encode a message into payload bytes.
+    fn encode(&self, v: &Value) -> Result<Vec<u8>>;
+    /// Decode payload bytes into a message. Must enforce resource
+    /// limits (depth, size) — the payload may come from a hostile peer.
+    fn decode(&self, bytes: &[u8]) -> Result<Value>;
+}
+
+/// JSON codec over [`crate::util::json`]. The parser enforces a
+/// nesting-depth cap and a payload byte cap, so a malformed frame
+/// cannot exhaust server memory.
+#[derive(Debug, Clone, Default)]
+pub struct JsonCodec;
+
+impl Serializer for JsonCodec {
+    fn name(&self) -> &'static str {
+        "json"
+    }
+
+    fn codec_id(&self) -> u8 {
+        super::frame::CODEC_JSON
+    }
+
+    fn encode(&self, v: &Value) -> Result<Vec<u8>> {
+        Ok(v.dumps().into_bytes())
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Result<Value> {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|e| Error::net(format!("frame payload is not UTF-8: {e}")))?;
+        json::parse_bounded(text, super::frame::MAX_FRAME_BYTES)
+            .map_err(|e| Error::net(format!("frame payload is not valid JSON: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let codec = JsonCodec;
+        let v = Value::obj()
+            .with("op", "generate")
+            .with("rows", 3usize)
+            .with("temps", vec![0.0f64, 0.8]);
+        let bytes = codec.encode(&v).unwrap();
+        let back = codec.decode(&bytes).unwrap();
+        assert_eq!(back.req_str("op").unwrap(), "generate");
+        assert_eq!(back.req_usize("rows").unwrap(), 3);
+    }
+
+    #[test]
+    fn decode_rejects_garbage_as_net_error() {
+        let codec = JsonCodec;
+        let err = codec.decode(b"{not json").unwrap_err();
+        assert_eq!(err.kind_str(), "net");
+        assert!(!err.is_transient_net());
+        let err = codec.decode(&[0xff, 0xfe]).unwrap_err();
+        assert!(err.to_string().contains("UTF-8"));
+    }
+}

@@ -1,0 +1,473 @@
+//! The remote-engine server: an [`EnginePool`] fleet behind an accept
+//! loop, answering framed requests.
+//!
+//! Blocking I/O, thread-per-connection — matching the codebase's
+//! no-async style. Two front doors share one connection handler:
+//!
+//! * [`TcpEngineServer`] — real sockets, used by `ttc engine-serve`;
+//! * [`LoopbackEngineServer`] — the in-process [`super::loopback`]
+//!   transport, used by tests and benches (no network in CI).
+//!
+//! A connection speaks the handshake first (hello → ack with shapes and
+//! layout stamps), then a request loop. Engine-fleet shutdown mid-call
+//! is deliberately *not* reported through the error envelope: the
+//! handler closes the connection instead, so the client observes a
+//! transient EOF and fails over to another shard.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::config::Config;
+use crate::engine::pool::PoolReporter;
+use crate::engine::protocol::{EmbedKind, GenJob, GenKind};
+use crate::engine::{EngineHandle, EnginePool};
+use crate::error::{Error, Result};
+use crate::util::clock::SharedClock;
+use crate::util::json::Value;
+
+use super::loopback::{AcceptMsg, LoopbackConnector};
+use super::serializer::{JsonCodec, Serializer};
+use super::transport::{recv_msg, send_msg, Conn, TcpConn};
+use super::wire;
+
+/// Immutable per-server context shared by every connection handler.
+pub struct ServeCtx {
+    /// Backend name advertised in the ack (`"sim"` / `"device"`).
+    pub backend: String,
+    /// Engine-fleet size advertised in the ack.
+    pub engines: usize,
+    /// Wire form of the fleet's [`crate::engine::EngineShapes`].
+    pub shapes: Value,
+    /// This build's probe layout stamp.
+    pub layout: wire::ProbeLayout,
+    /// Metrics view over the fleet, for the `metrics` op.
+    pub reporter: PoolReporter,
+    /// The fleet's clock: relative wire deadlines are anchored to it.
+    pub clock: SharedClock,
+}
+
+impl ServeCtx {
+    fn from_pool(pool: &EnginePool, backend: &str) -> Result<ServeCtx> {
+        // The engine's own info() carries the full shapes object (same
+        // key names as the wire form), so the ack works for any backend.
+        let info = pool.handle().info()?;
+        let shapes = info.req("shapes")?.clone();
+        Ok(ServeCtx {
+            backend: backend.to_string(),
+            engines: pool.engines(),
+            shapes,
+            layout: wire::ProbeLayout::current(),
+            reporter: pool.reporter(),
+            clock: pool.clock.clone(),
+        })
+    }
+}
+
+/// Serve one connection to completion: handshake, then request loop.
+/// Transport-level failures and engine shutdown end the loop silently
+/// (the client handles them); protocol violations get an error frame
+/// before the connection closes.
+pub fn serve_conn(
+    mut conn: Box<dyn Conn>,
+    codec: &dyn Serializer,
+    ctx: &ServeCtx,
+    handle: EngineHandle,
+) {
+    let peer = conn.peer();
+    // Handshake. A frame-level version mismatch surfaces here as a
+    // non-transient decode error whose message names both versions —
+    // forward it to the peer before closing.
+    let hello = match recv_msg(conn.as_mut(), codec, None) {
+        Ok(v) => v,
+        Err(e) => {
+            if !e.is_transient_net() {
+                let _ = send_msg(conn.as_mut(), codec, &wire::err_envelope(&e), None);
+                crate::log_warn!("engine-serve: {peer}: bad handshake: {e}");
+            }
+            return;
+        }
+    };
+    if let Err(e) = wire::check_hello(&hello) {
+        let _ = send_msg(conn.as_mut(), codec, &wire::err_envelope(&e), None);
+        crate::log_warn!("engine-serve: {peer}: rejected handshake: {e}");
+        return;
+    }
+    let ack = wire::ack(
+        super::frame::PROTOCOL_VERSION,
+        ctx.layout,
+        &ctx.backend,
+        ctx.engines,
+        ctx.shapes.clone(),
+    );
+    if send_msg(conn.as_mut(), codec, &ack, None).is_err() {
+        return;
+    }
+
+    loop {
+        let req = match recv_msg(conn.as_mut(), codec, None) {
+            Ok(v) => v,
+            Err(e) => {
+                if !e.is_transient_net() {
+                    let _ = send_msg(conn.as_mut(), codec, &wire::err_envelope(&e), None);
+                }
+                return;
+            }
+        };
+        let reply = match dispatch_op(&req, ctx, &handle) {
+            Ok(result) => wire::ok_envelope(result),
+            Err(e) if is_engine_down(&e) => {
+                // The fleet is shutting down: close instead of replying
+                // so the client treats this shard as dead and reroutes.
+                crate::log_warn!("engine-serve: {peer}: fleet down mid-call, closing");
+                return;
+            }
+            Err(e) => wire::err_envelope(&e),
+        };
+        if send_msg(conn.as_mut(), codec, &reply, None).is_err() {
+            return;
+        }
+    }
+}
+
+/// True for errors that mean the engine fleet itself is gone (as
+/// opposed to a request-level failure the client should see).
+fn is_engine_down(e: &Error) -> bool {
+    match e {
+        Error::Engine(msg) => {
+            msg.contains("is gone")
+                || msg.contains("shut down")
+                || msg.contains("down —")
+                || msg.contains("dropped the reply")
+        }
+        _ => false,
+    }
+}
+
+/// Execute one request against the fleet.
+fn dispatch_op(req: &Value, ctx: &ServeCtx, handle: &EngineHandle) -> Result<Value> {
+    let op = req.req_str("op")?;
+    match op {
+        "generate" => {
+            let kind = GenKind::parse(req.req_str("kind")?)?;
+            let temperature = req.req_f64("temperature")? as f32;
+            let max_steps = req.opt_usize("max_steps");
+            let rows = req.req_arr("prompts")?;
+            let mut jobs = Vec::with_capacity(rows.len());
+            for row in rows {
+                let tokens = wire::tokens_from_value(row, "generate.prompts")?;
+                let mut job = GenJob::new(tokens, kind, temperature);
+                if let Some(cap) = max_steps {
+                    job = job.with_max_new_tokens(cap);
+                }
+                jobs.push(job);
+            }
+            // Deadlines cross the wire relative (clocks differ across
+            // processes) and are re-anchored to the server's clock.
+            let deadline = req
+                .opt_f64("deadline_rel_ms")
+                .map(|rel| ctx.clock.now_ms() + rel.max(0.0));
+            let results = handle.generate_with_deadline(jobs, deadline)?;
+            Ok(Value::obj().with(
+                "rows",
+                Value::Arr(
+                    results
+                        .iter()
+                        .map(|r| wire::tokens_to_value(&r.tokens))
+                        .collect(),
+                ),
+            ))
+        }
+        "prm_score" => {
+            let prefixes = req
+                .req_arr("prefixes")?
+                .iter()
+                .map(|p| wire::tokens_from_value(p, "prm_score.prefixes"))
+                .collect::<Result<Vec<_>>>()?;
+            let scores = handle.prm_score(prefixes)?;
+            Ok(Value::obj().with("scores", wire::f32s_to_value(&scores)))
+        }
+        "embed" => {
+            let kind = EmbedKind::parse(req.req_str("kind")?)?;
+            let queries = req
+                .req_arr("queries")?
+                .iter()
+                .map(|q| wire::tokens_from_value(q, "embed.queries"))
+                .collect::<Result<Vec<_>>>()?;
+            let vectors = handle.embed(kind, queries)?;
+            Ok(Value::obj().with(
+                "vectors",
+                Value::Arr(vectors.iter().map(|v| wire::f32s_to_value(v)).collect()),
+            ))
+        }
+        "probe_fwd" => {
+            let feats = req
+                .req_arr("feats")?
+                .iter()
+                .map(|f| wire::f32s_from_value(f, "probe_fwd.feats"))
+                .collect::<Result<Vec<_>>>()?;
+            let logits = handle.probe_fwd(feats)?;
+            Ok(Value::obj().with("logits", wire::f32s_to_value(&logits)))
+        }
+        "probe_train" => {
+            let rows = |key: &str| -> Result<Vec<Vec<f32>>> {
+                req.req_arr(key)?
+                    .iter()
+                    .map(|f| wire::f32s_from_value(f, key))
+                    .collect()
+            };
+            let report = handle.probe_train(
+                rows("train_feats")?,
+                wire::f32s_from_value(req.req("train_labels")?, "train_labels")?,
+                rows("val_feats")?,
+                wire::f32s_from_value(req.req("val_labels")?, "val_labels")?,
+                req.req_usize("epochs")?,
+                req.req_usize("patience")?,
+            )?;
+            Ok(Value::obj()
+                .with("steps", report.steps)
+                .with("final_train_loss", report.final_train_loss)
+                .with("best_val_loss", report.best_val_loss)
+                .with(
+                    "curve",
+                    Value::Arr(
+                        report
+                            .curve
+                            .iter()
+                            .map(|&(e, tl, vl)| {
+                                Value::Arr(vec![
+                                    Value::from(e),
+                                    Value::from(tl),
+                                    Value::from(vl),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                )
+                .with("params", wire::f32s_to_value(&report.params)))
+        }
+        "probe_load" => {
+            let params = wire::f32s_from_value(req.req("params")?, "probe_load.params")?;
+            handle.probe_load(params)?;
+            Ok(Value::obj())
+        }
+        "info" => handle.info(),
+        "metrics" => Ok(Value::obj().with("pool", ctx.reporter.report())),
+        other => Err(Error::net(format!(
+            "unknown op '{other}' (this server speaks wire protocol v{})",
+            super::frame::PROTOCOL_VERSION
+        ))),
+    }
+}
+
+/// A TCP-fronted engine fleet (`ttc engine-serve`).
+pub struct TcpEngineServer {
+    pool: Option<EnginePool>,
+    accept: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    local_addr: std::net::SocketAddr,
+}
+
+impl TcpEngineServer {
+    /// Start the fleet from `cfg` and listen on `addr`.
+    pub fn bind(cfg: &Config, addr: &str) -> Result<TcpEngineServer> {
+        let pool = EnginePool::start(cfg)?;
+        let ctx = Arc::new(ServeCtx::from_pool(&pool, cfg.engine.backend.as_str())?);
+        let handle = pool.handle();
+        let listener = std::net::TcpListener::bind(addr)
+            .map_err(|e| Error::net(format!("cannot listen on {addr}: {e}")))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| Error::net(format!("no local addr: {e}")))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = stop.clone();
+        let accept = std::thread::Builder::new()
+            .name("ttc-accept".to_string())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if stop_flag.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match stream {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    let ctx = ctx.clone();
+                    let handle = handle.clone();
+                    // Connection handlers are detached: they exit on
+                    // client EOF or fleet shutdown.
+                    let _ = std::thread::Builder::new()
+                        .name("ttc-conn".to_string())
+                        .spawn(move || {
+                            serve_conn(Box::new(TcpConn::new(stream)), &JsonCodec, &ctx, handle)
+                        });
+                }
+            })
+            .map_err(|e| Error::internal(format!("cannot spawn accept thread: {e}")))?;
+        Ok(TcpEngineServer {
+            pool: Some(pool),
+            accept: Some(accept),
+            stop,
+            local_addr,
+        })
+    }
+
+    /// The bound address (useful when `addr` used port 0).
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting, join the accept thread and shut the fleet down.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway dial.
+        let _ = std::net::TcpStream::connect(self.local_addr);
+        if let Some(j) = self.accept.take() {
+            let _ = j.join();
+        }
+        self.pool.take();
+    }
+}
+
+impl Drop for TcpEngineServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// An in-process engine fleet reachable through [`LoopbackConnector`] —
+/// the whole remote path minus real sockets, for deterministic tests.
+pub struct LoopbackEngineServer {
+    pool: Option<EnginePool>,
+    accept: Option<JoinHandle<()>>,
+    accept_tx: Sender<AcceptMsg>,
+}
+
+impl LoopbackEngineServer {
+    /// Start a fleet from `cfg` (clock chosen by the config, as
+    /// [`EnginePool::start`] does).
+    pub fn spawn(cfg: &Config) -> Result<(LoopbackConnector, LoopbackEngineServer)> {
+        let pool = EnginePool::start(cfg)?;
+        Self::with_pool(cfg, pool)
+    }
+
+    /// Start a fleet sharing an explicit clock — the loopback-only
+    /// virtual-timeline exception documented in `docs/remote.md`:
+    /// client and server live in one process, so tests may hand both
+    /// the same sim clock.
+    pub fn spawn_with_clock(
+        cfg: &Config,
+        clock: SharedClock,
+    ) -> Result<(LoopbackConnector, LoopbackEngineServer)> {
+        let pool = EnginePool::start_with_clock(cfg, clock)?;
+        Self::with_pool(cfg, pool)
+    }
+
+    fn with_pool(
+        cfg: &Config,
+        pool: EnginePool,
+    ) -> Result<(LoopbackConnector, LoopbackEngineServer)> {
+        let ctx = Arc::new(ServeCtx::from_pool(&pool, cfg.engine.backend.as_str())?);
+        let handle = pool.handle();
+        let (accept_tx, accept_rx) = channel::<AcceptMsg>();
+        let accept = std::thread::Builder::new()
+            .name("ttc-loopback-accept".to_string())
+            .spawn(move || {
+                while let Ok(AcceptMsg::Conn(conn)) = accept_rx.recv() {
+                    let ctx = ctx.clone();
+                    let handle = handle.clone();
+                    let _ = std::thread::Builder::new()
+                        .name("ttc-loopback-conn".to_string())
+                        .spawn(move || serve_conn(Box::new(conn), &JsonCodec, &ctx, handle));
+                }
+            })
+            .map_err(|e| Error::internal(format!("cannot spawn accept thread: {e}")))?;
+        let connector = LoopbackConnector::new(accept_tx.clone(), "loopback://engine-serve");
+        Ok((
+            connector,
+            LoopbackEngineServer {
+                pool: Some(pool),
+                accept: Some(accept),
+                accept_tx,
+            },
+        ))
+    }
+
+    /// Kill the server: stop accepting, join the acceptor and shut the
+    /// engine fleet down. In-flight connections observe engine-down and
+    /// close, which clients see as a transient EOF.
+    pub fn kill(&mut self) {
+        let _ = self.accept_tx.send(AcceptMsg::Stop);
+        if let Some(j) = self.accept.take() {
+            let _ = j.join();
+        }
+        self.pool.take();
+    }
+}
+
+impl Drop for LoopbackEngineServer {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BackendKind;
+
+    fn sim_cfg(engines: usize) -> Config {
+        let mut cfg = Config::default();
+        cfg.engine.backend = BackendKind::Sim;
+        cfg.engine.sim_clock = true;
+        cfg.engine.engines = engines;
+        cfg
+    }
+
+    #[test]
+    fn tcp_server_answers_a_handshake_and_info() {
+        use super::super::transport::Connector;
+        let mut server = TcpEngineServer::bind(&sim_cfg(1), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let connector = super::super::transport::TcpConnector::new(
+            addr,
+            std::time::Duration::from_secs(5),
+        );
+        let mut conn = connector.connect().unwrap();
+        let codec = JsonCodec;
+        let hello = wire::hello(super::super::frame::PROTOCOL_VERSION, wire::ProbeLayout::current());
+        send_msg(conn.as_mut(), &codec, &hello, None).unwrap();
+        let ack = recv_msg(conn.as_mut(), &codec, None).unwrap();
+        let (backend, engines, shapes) = wire::check_ack(&ack).unwrap();
+        assert_eq!(backend, "sim");
+        assert_eq!(engines, 1);
+        assert!(shapes.gen_max_new > 0);
+
+        send_msg(conn.as_mut(), &codec, &Value::obj().with("op", "info"), None).unwrap();
+        let info = wire::unwrap_response(recv_msg(conn.as_mut(), &codec, None).unwrap()).unwrap();
+        assert_eq!(info.req_str("backend").unwrap(), "sim");
+        server.stop();
+    }
+
+    #[test]
+    fn unknown_op_is_a_net_error_but_keeps_the_connection() {
+        use super::super::transport::Connector;
+        let (connector, _server) = LoopbackEngineServer::spawn(&sim_cfg(1)).unwrap();
+        let mut conn = connector.connect().unwrap();
+        let codec = JsonCodec;
+        let hello = wire::hello(super::super::frame::PROTOCOL_VERSION, wire::ProbeLayout::current());
+        send_msg(conn.as_mut(), &codec, &hello, None).unwrap();
+        wire::check_ack(&recv_msg(conn.as_mut(), &codec, None).unwrap()).unwrap();
+
+        send_msg(conn.as_mut(), &codec, &Value::obj().with("op", "nope"), None).unwrap();
+        let err =
+            wire::unwrap_response(recv_msg(conn.as_mut(), &codec, None).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("unknown op"), "{err}");
+
+        // The connection survives a request-level error.
+        send_msg(conn.as_mut(), &codec, &Value::obj().with("op", "metrics"), None).unwrap();
+        let m = wire::unwrap_response(recv_msg(conn.as_mut(), &codec, None).unwrap()).unwrap();
+        assert!(m.req("pool").is_ok());
+    }
+}

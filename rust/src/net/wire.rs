@@ -1,0 +1,341 @@
+//! Wire message schema: handshake, shape exchange and the
+//! request/response envelope.
+//!
+//! The first frame in each direction is the handshake: the client
+//! sends a `hello` carrying its [`super::frame::PROTOCOL_VERSION`] and
+//! [`ProbeLayout`] stamp; the server answers with an `ack` carrying its
+//! own plus its backend identity and [`EngineShapes`]. Version
+//! disagreement is caught twice — at the frame layer (header stamp) and
+//! here (explicit field) — so a mismatch always produces a clear
+//! [`Error::Net`] naming both versions rather than a decode failure.
+//!
+//! After the handshake every client frame is a request object
+//! (`{"op": ..., ...}`) and every server frame is an envelope:
+//! `{"ok": <result>}` on success, `{"err": {"kind", "message"}}` on
+//! failure. Server-reported errors are *non-transient* by construction
+//! (the server executed the call and it failed); transient faults are
+//! transport-level only (EOF, timeouts, refused dials).
+
+use crate::engine::EngineShapes;
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+/// The probe feature/method layout both sides must agree on: probe
+/// params trained under one layout are garbage under another.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProbeLayout {
+    /// [`crate::probe::PROBE_LAYOUT_VERSION`] of this build.
+    pub layout_version: usize,
+    /// Number of registered decoding methods (feature one-hot width).
+    pub n_methods: usize,
+}
+
+impl ProbeLayout {
+    /// The layout stamp of this build.
+    pub fn current() -> ProbeLayout {
+        ProbeLayout {
+            layout_version: crate::probe::PROBE_LAYOUT_VERSION,
+            n_methods: crate::strategies::registry::len(),
+        }
+    }
+
+    pub fn to_value(self) -> Value {
+        Value::obj()
+            .with("layout_version", self.layout_version)
+            .with("n_methods", self.n_methods)
+    }
+
+    pub fn from_value(v: &Value) -> Result<ProbeLayout> {
+        Ok(ProbeLayout {
+            layout_version: v.req_usize("layout_version")?,
+            n_methods: v.req_usize("n_methods")?,
+        })
+    }
+
+    /// Check a peer's stamp against ours, naming both on mismatch.
+    pub fn check(self, peer: ProbeLayout, peer_role: &str) -> Result<()> {
+        if self != peer {
+            return Err(Error::net(format!(
+                "probe layout mismatch: {peer_role} has layout v{} with {} methods, \
+                 this build has layout v{} with {} methods — retrain or upgrade",
+                peer.layout_version, peer.n_methods, self.layout_version, self.n_methods
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Build the client hello with explicit version/layout (tests fabricate
+/// mismatches by passing non-current values).
+pub fn hello(protocol: u16, layout: ProbeLayout) -> Value {
+    Value::obj()
+        .with("type", "hello")
+        .with("protocol", protocol as usize)
+        .with("probe_layout", layout.to_value())
+        .with("client", "ttc-remote-backend")
+}
+
+/// Build the server ack.
+pub fn ack(
+    protocol: u16,
+    layout: ProbeLayout,
+    backend: &str,
+    engines: usize,
+    shapes: Value,
+) -> Value {
+    Value::obj()
+        .with("type", "ack")
+        .with("protocol", protocol as usize)
+        .with("probe_layout", layout.to_value())
+        .with("server", "ttc-engine-serve")
+        .with("backend", backend)
+        .with("engines", engines)
+        .with("shapes", shapes)
+}
+
+/// Validate an incoming hello against this build. Returns nothing on
+/// success; errors name both sides' stamps.
+pub fn check_hello(v: &Value) -> Result<()> {
+    if v.req_str("type")? != "hello" {
+        return Err(Error::net("expected a hello as the first frame"));
+    }
+    let peer_protocol = v.req_usize("protocol")?;
+    if peer_protocol != super::frame::PROTOCOL_VERSION as usize {
+        return Err(Error::net(format!(
+            "protocol version mismatch: client speaks v{peer_protocol}, server speaks v{}",
+            super::frame::PROTOCOL_VERSION
+        )));
+    }
+    let peer = ProbeLayout::from_value(v.req("probe_layout")?)?;
+    ProbeLayout::current().check(peer, "client")
+}
+
+/// Validate a server ack; returns (backend name, engines, shapes).
+pub fn check_ack(v: &Value) -> Result<(String, usize, EngineShapes)> {
+    // The server reports handshake rejections through the error
+    // envelope; surface those as-is.
+    if let Some(err) = v.get("err") {
+        return Err(envelope_error(err));
+    }
+    if v.req_str("type")? != "ack" {
+        return Err(Error::net("expected an ack to the hello"));
+    }
+    let peer_protocol = v.req_usize("protocol")?;
+    if peer_protocol != super::frame::PROTOCOL_VERSION as usize {
+        return Err(Error::net(format!(
+            "protocol version mismatch: server speaks v{peer_protocol}, client speaks v{}",
+            super::frame::PROTOCOL_VERSION
+        )));
+    }
+    let peer = ProbeLayout::from_value(v.req("probe_layout")?)?;
+    ProbeLayout::current().check(peer, "server")?;
+    let shapes = shapes_from_value(v.req("shapes")?)?;
+    Ok((
+        v.req_str("backend")?.to_string(),
+        v.req_usize("engines")?,
+        shapes,
+    ))
+}
+
+/// Serialize [`EngineShapes`] for the ack (flat wire form; key names
+/// match the engine `info()` shapes object).
+pub fn shapes_to_value(s: &EngineShapes) -> Value {
+    Value::obj()
+        .with(
+            "batch_buckets",
+            Value::Arr(s.batch_buckets.iter().map(|&b| Value::from(b)).collect()),
+        )
+        .with(
+            "chunk_lens",
+            Value::Arr(s.chunk_lens.iter().map(|&l| Value::from(l)).collect()),
+        )
+        .with("query_len", s.query_len)
+        .with("prm_len", s.prm_len)
+        .with("gen_max_new", s.gen_max_new)
+        .with("chunk_max_new", s.chunk_max_new)
+        .with("probe_fwd_batch", s.probe_fwd_batch)
+        .with("probe_train_batch", s.probe_train_batch)
+        .with("probe_features", s.probe_features)
+        .with("d_model", s.d_model)
+}
+
+/// Parse the flat wire form back into [`EngineShapes`].
+pub fn shapes_from_value(v: &Value) -> Result<EngineShapes> {
+    let usizes = |key: &str| -> Result<Vec<usize>> {
+        v.req_arr(key)?
+            .iter()
+            .map(|x| {
+                x.as_usize()
+                    .ok_or_else(|| Error::net(format!("shapes.{key}: bad entry")))
+            })
+            .collect()
+    };
+    Ok(EngineShapes {
+        batch_buckets: usizes("batch_buckets")?,
+        chunk_lens: usizes("chunk_lens")?,
+        query_len: v.req_usize("query_len")?,
+        prm_len: v.req_usize("prm_len")?,
+        gen_max_new: v.req_usize("gen_max_new")?,
+        chunk_max_new: v.req_usize("chunk_max_new")?,
+        probe_fwd_batch: v.req_usize("probe_fwd_batch")?,
+        probe_train_batch: v.req_usize("probe_train_batch")?,
+        probe_features: v.req_usize("probe_features")?,
+        d_model: v.req_usize("d_model")?,
+    })
+}
+
+/// Wrap a successful result for the wire.
+pub fn ok_envelope(result: Value) -> Value {
+    Value::obj().with("ok", result)
+}
+
+/// Wrap an error for the wire.
+pub fn err_envelope(e: &Error) -> Value {
+    Value::obj().with(
+        "err",
+        Value::obj()
+            .with("kind", e.kind_str())
+            .with("message", e.to_string()),
+    )
+}
+
+/// Unwrap a response envelope: `ok` payload, or the server's error as a
+/// non-transient [`Error::Net`].
+pub fn unwrap_response(v: Value) -> Result<Value> {
+    if let Some(err) = v.get("err") {
+        return Err(envelope_error(err));
+    }
+    match v {
+        Value::Obj(mut pairs) => {
+            let pos = pairs.iter().position(|(k, _)| k == "ok").ok_or_else(|| {
+                Error::net("response envelope has neither 'ok' nor 'err'")
+            })?;
+            Ok(pairs.swap_remove(pos).1)
+        }
+        _ => Err(Error::net("response envelope is not an object")),
+    }
+}
+
+fn envelope_error(err: &Value) -> Error {
+    let kind = err.req_str("kind").unwrap_or("unknown");
+    let message = err.req_str("message").unwrap_or("<no message>");
+    Error::net(format!("remote {kind} error: {message}"))
+}
+
+/// Encode a token row for the wire.
+pub fn tokens_to_value(tokens: &[u32]) -> Value {
+    Value::Arr(tokens.iter().map(|&t| Value::from(t as u64)).collect())
+}
+
+/// Decode a token row.
+pub fn tokens_from_value(v: &Value, what: &str) -> Result<Vec<u32>> {
+    v.as_arr()
+        .ok_or_else(|| Error::net(format!("{what}: expected a token array")))?
+        .iter()
+        .map(|t| {
+            t.as_i64()
+                .filter(|&x| (0..=u32::MAX as i64).contains(&x))
+                .map(|x| x as u32)
+                .ok_or_else(|| Error::net(format!("{what}: bad token value")))
+        })
+        .collect()
+}
+
+/// Encode an f32 row for the wire.
+pub fn f32s_to_value(row: &[f32]) -> Value {
+    Value::from(row)
+}
+
+/// Decode an f32 row.
+pub fn f32s_from_value(v: &Value, what: &str) -> Result<Vec<f32>> {
+    v.as_arr()
+        .ok_or_else(|| Error::net(format!("{what}: expected a float array")))?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .ok_or_else(|| Error::net(format!("{what}: bad float value")))
+                .map(|f| f as f32)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+
+    #[test]
+    fn shapes_roundtrip() {
+        let s = EngineShapes::sim_default(&EngineConfig::default());
+        let back = shapes_from_value(&shapes_to_value(&s)).unwrap();
+        assert_eq!(back.batch_buckets, s.batch_buckets);
+        assert_eq!(back.chunk_lens, s.chunk_lens);
+        assert_eq!(back.query_len, s.query_len);
+        assert_eq!(back.prm_len, s.prm_len);
+        assert_eq!(back.gen_max_new, s.gen_max_new);
+        assert_eq!(back.chunk_max_new, s.chunk_max_new);
+        assert_eq!(back.probe_fwd_batch, s.probe_fwd_batch);
+        assert_eq!(back.probe_train_batch, s.probe_train_batch);
+        assert_eq!(back.probe_features, s.probe_features);
+        assert_eq!(back.d_model, s.d_model);
+    }
+
+    #[test]
+    fn handshake_accepts_current_build() {
+        let h = hello(super::super::frame::PROTOCOL_VERSION, ProbeLayout::current());
+        check_hello(&h).unwrap();
+        let s = EngineShapes::sim_default(&EngineConfig::default());
+        let a = ack(
+            super::super::frame::PROTOCOL_VERSION,
+            ProbeLayout::current(),
+            "sim",
+            2,
+            shapes_to_value(&s),
+        );
+        let (backend, engines, shapes) = check_ack(&a).unwrap();
+        assert_eq!(backend, "sim");
+        assert_eq!(engines, 2);
+        assert_eq!(shapes.d_model, s.d_model);
+    }
+
+    #[test]
+    fn handshake_rejects_version_skew_naming_both() {
+        let h = hello(super::super::frame::PROTOCOL_VERSION + 1, ProbeLayout::current());
+        let err = check_hello(&h).unwrap_err();
+        assert_eq!(err.kind_str(), "net");
+        assert!(!err.is_transient_net());
+        let msg = err.to_string();
+        assert!(msg.contains("v2") && msg.contains("v1"), "{msg}");
+    }
+
+    #[test]
+    fn handshake_rejects_probe_layout_skew() {
+        let mut wrong = ProbeLayout::current();
+        wrong.layout_version += 1;
+        let h = hello(super::super::frame::PROTOCOL_VERSION, wrong);
+        let err = check_hello(&h).unwrap_err();
+        assert!(err.to_string().contains("probe layout mismatch"), "{err}");
+    }
+
+    #[test]
+    fn envelopes_roundtrip_ok_and_err() {
+        let ok = ok_envelope(Value::obj().with("scores", vec![0.5f64]));
+        let v = unwrap_response(ok).unwrap();
+        assert_eq!(v.req_arr("scores").unwrap().len(), 1);
+
+        let err_v = err_envelope(&Error::Engine("bucket overflow".into()));
+        let err = unwrap_response(err_v).unwrap_err();
+        assert!(!err.is_transient_net());
+        let msg = err.to_string();
+        assert!(msg.contains("remote engine error") && msg.contains("bucket overflow"), "{msg}");
+    }
+
+    #[test]
+    fn token_rows_roundtrip() {
+        let row = vec![0u32, 1, 65535, u32::MAX];
+        let back = tokens_from_value(&tokens_to_value(&row), "row").unwrap();
+        assert_eq!(back, row);
+        let bad = Value::Arr(vec![Value::from(-1i64)]);
+        assert!(tokens_from_value(&bad, "row").is_err());
+    }
+}

@@ -391,7 +391,7 @@ pub fn cmd_serve(raw: &[String]) -> Result<()> {
         COMMON_VALUES,
         &[
             "rate", "requests", "workers", "lambda-t", "lambda-l", "strategy", "embedding",
-            "deadline-ms", "max-tokens", "budget-mix", "engines", "backend",
+            "deadline-ms", "max-tokens", "budget-mix", "engines", "backend", "remote",
         ],
     ]
     .concat();
@@ -404,6 +404,24 @@ pub fn cmd_serve(raw: &[String]) -> Result<()> {
         cfg.engine.backend = BackendKind::parse(b)?;
     }
     cfg.engine.engines = args.usize_or("engines", cfg.engine.engines)?;
+    if let Some(remote) = args.opt_str("remote") {
+        // --remote host:port[,host:port...] shards the engine pool over a
+        // `ttc engine-serve` fleet (one RemoteBackend per engine slot)
+        cfg.engine.backend = BackendKind::Remote;
+        cfg.engine.remote_addrs = remote
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        if cfg.engine.remote_addrs.is_empty() {
+            return Err(Error::Config(
+                "--remote needs host:port[,host:port...]".into(),
+            ));
+        }
+        if args.opt_str("engines").is_none() {
+            cfg.engine.engines = cfg.engine.remote_addrs.len();
+        }
+    }
     if cfg.engine.backend == BackendKind::Sim && !cfg.engine.sim_clock {
         // the sim backend computes device calls in microseconds; its
         // latency semantics come from the sim clock's cost model
@@ -422,7 +440,8 @@ pub fn cmd_serve(raw: &[String]) -> Result<()> {
     // the data directory is absent so a fresh checkout can serve
     let splits = match Splits::load(&cfg.paths().data_dir()) {
         Ok(s) => s,
-        Err(e) if cfg.engine.backend == BackendKind::Sim => {
+        // sim and remote backends need no local artifacts
+        Err(e) if cfg.engine.backend != BackendKind::Device => {
             log_info!("serve: no data splits ({e}); synthesizing sim queries");
             Splits::synthesize(cfg.seed)
         }
@@ -438,13 +457,14 @@ pub fn cmd_serve(raw: &[String]) -> Result<()> {
         }
         None => match adaptive_mode(&cfg, &args, &handle) {
             Ok(mode) => mode,
-            Err(e) if cfg.engine.backend == BackendKind::Sim => {
-                // the sim backend exists to run engine-full without any
-                // trained artifacts; don't let missing probe/cost files
-                // kill the run — serve a static baseline instead
+            Err(e) if cfg.engine.backend != BackendKind::Device => {
+                // sim/remote backends exist to run engine-full without
+                // local trained artifacts; don't let missing probe/cost
+                // files kill the run — serve a static baseline instead
                 log_info!(
-                    "serve: adaptive routing unavailable ({e}); sim backend falls back \
-                     to static majority_vote@4 (pass --strategy to choose)"
+                    "serve: adaptive routing unavailable ({e}); {} backend falls back \
+                     to static majority_vote@4 (pass --strategy to choose)",
+                    cfg.engine.backend.as_str()
                 );
                 Mode::Static(Strategy::mv(4))
             }
@@ -509,6 +529,50 @@ pub fn cmd_serve(raw: &[String]) -> Result<()> {
     )?;
     println!("{}", report.to_json().pretty());
     Ok(())
+}
+
+// ---------------------------------------------------------------------
+// engine-serve
+// ---------------------------------------------------------------------
+
+/// `ttc engine-serve`: expose a local engine fleet (device or sim) over
+/// TCP for remote `ttc serve --remote` clients — see `docs/remote.md`.
+pub fn cmd_engine_serve(raw: &[String]) -> Result<()> {
+    let values: Vec<&str> = [COMMON_VALUES, &["addr", "backend", "engines"]].concat();
+    let args = Args::parse(raw, &values, &["sim"])?;
+    let mut cfg = load_config(&args)?;
+    if args.flag("sim") {
+        cfg.engine.backend = BackendKind::Sim;
+    }
+    if let Some(b) = args.opt_str("backend") {
+        cfg.engine.backend = BackendKind::parse(b)?;
+    }
+    if cfg.engine.backend == BackendKind::Remote {
+        return Err(Error::Config(
+            "engine-serve executes work locally; --backend must be 'device' or 'sim' \
+             (chaining remote tiers is not supported)"
+                .into(),
+        ));
+    }
+    cfg.engine.engines = args.usize_or("engines", cfg.engine.engines)?;
+    if cfg.engine.backend == BackendKind::Sim && !cfg.engine.sim_clock {
+        // same rule as serve: the sim backend's latency semantics come
+        // from the sim clock's cost model
+        log_info!("engine-serve: sim backend — enabling the sim clock for modeled latencies");
+        cfg.engine.sim_clock = true;
+    }
+    let addr = args.str_or("addr", "127.0.0.1:7070");
+    let server = crate::net::TcpEngineServer::bind(&cfg, addr)?;
+    log_info!(
+        "engine-serve: {} engine(s), {} backend, listening on {}",
+        cfg.engine.engines.max(1),
+        cfg.engine.backend.as_str(),
+        server.local_addr()
+    );
+    // the accept loop runs on its own thread; serve until killed
+    loop {
+        std::thread::park();
+    }
 }
 
 // ---------------------------------------------------------------------

@@ -338,6 +338,20 @@ pub fn parse(text: &str) -> Result<Value> {
     Ok(v)
 }
 
+/// [`parse`] with a hard input-size ceiling — the variant for
+/// *adversarial* inputs (network payloads): a peer can then cost at most
+/// `max_bytes` of parse work/memory per document. Local artifacts and
+/// configs keep using [`parse`] unbounded.
+pub fn parse_bounded(text: &str, max_bytes: usize) -> Result<Value> {
+    if text.len() > max_bytes {
+        return Err(Error::Json(format!(
+            "document of {} bytes exceeds the {max_bytes}-byte parse limit",
+            text.len()
+        )));
+    }
+    parse(text)
+}
+
 const MAX_DEPTH: usize = 128;
 
 struct Parser<'a> {
@@ -563,9 +577,15 @@ impl<'a> Parser<'a> {
             }
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
-        text.parse::<f64>()
-            .map(Value::Num)
-            .map_err(|_| self.err("invalid number"))
+        let n = text
+            .parse::<f64>()
+            .map_err(|_| self.err("invalid number"))?;
+        // "1e999999" parses to +inf; JSON has no non-finite numbers, and
+        // letting one in here would silently become `null` on re-dump
+        if !n.is_finite() {
+            return Err(self.err("number overflows f64"));
+        }
+        Ok(Value::Num(n))
     }
 }
 
@@ -649,5 +669,144 @@ mod tests {
     #[test]
     fn nan_serializes_as_null() {
         assert_eq!(Value::Num(f64::NAN).dumps(), "null");
+    }
+
+    #[test]
+    fn nonfinite_numbers_are_rejected() {
+        // "1e999999" parses to +inf under f64 — must not become a Value
+        assert!(parse("1e999999").is_err());
+        assert!(parse("-1e999999").is_err());
+        assert!(parse("[1, 2e308]").is_err());
+        // extreme but finite magnitudes are fine
+        assert!(parse("1e308").is_ok());
+        assert!(parse("5e-324").is_ok());
+        assert!(parse("0.00000000000000000000001").is_ok());
+    }
+
+    #[test]
+    fn parse_bounded_enforces_the_ceiling() {
+        let doc = r#"{"a": [1, 2, 3]}"#;
+        assert_eq!(parse_bounded(doc, doc.len()).unwrap(), parse(doc).unwrap());
+        let err = parse_bounded(doc, doc.len() - 1).unwrap_err().to_string();
+        assert!(err.contains("parse limit"), "{err}");
+        // the limit is on input bytes, not parse progress: a huge doc is
+        // rejected without any parsing work
+        let big = format!("[{}]", "0,".repeat(10_000) + "0");
+        assert!(parse_bounded(&big, 64).is_err());
+    }
+
+    #[test]
+    fn deep_object_nesting_is_rejected() {
+        let deep = r#"{"a":"#.repeat(200) + "1" + &"}".repeat(200);
+        assert!(parse(&deep).is_err());
+        // and mixed nesting
+        let mixed = r#"[{"a":"#.repeat(100) + "1" + &"}]".repeat(100);
+        assert!(parse(&mixed).is_err());
+    }
+
+    #[test]
+    fn escape_torture() {
+        // every single-char escape plus a surrogate pair
+        let v = parse(r#""\"\\\/\b\f\n\r\tA😀""#).unwrap();
+        assert_eq!(v.as_str(), Some("\"\\/\u{8}\u{c}\n\r\tA😀"));
+        // malformed escapes must error, not panic or mis-decode
+        for bad in [
+            r#""\x""#,     // unknown escape
+            r#""\u12""#,   // truncated hex
+            r#""\uZZZZ""#, // bad hex digits
+            r#""\ud800""#, // lone high surrogate
+            "\"a\u{1}b\"", // unescaped control char
+            r#""unterminated"#,
+        ] {
+            assert!(parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    /// A random JSON value with bounded depth/width; every number is
+    /// finite and every string exercises escapes and unicode.
+    fn gen_value(rng: &mut crate::util::rng::Rng, depth: usize) -> Value {
+        let roll = if depth == 0 { rng.below(4) } else { rng.below(6) };
+        match roll {
+            0 => Value::Null,
+            1 => Value::Bool(rng.below(2) == 0),
+            2 => match rng.below(4) {
+                0 => Value::Num(rng.range(-1_000_000, 1_000_000) as f64),
+                1 => Value::Num(rng.range(-1000, 1000) as f64 / 64.0),
+                2 => Value::Num(rng.range(1, 1_000_000) as f64 * 1e-12),
+                _ => Value::Num(rng.range(-1_000_000, 1_000_000) as f64 * 1e9),
+            },
+            3 => {
+                let s: String = (0..rng.below(12))
+                    .map(|_| match rng.below(8) {
+                        0 => '"',
+                        1 => '\\',
+                        2 => '\n',
+                        3 => '\u{1}',
+                        4 => 'é',
+                        5 => '😀',
+                        _ => (b'a' + rng.below(26) as u8) as char,
+                    })
+                    .collect();
+                Value::Str(s)
+            }
+            4 => Value::Arr(
+                (0..rng.below(4))
+                    .map(|_| gen_value(rng, depth - 1))
+                    .collect(),
+            ),
+            _ => {
+                let mut obj = Value::obj();
+                for i in 0..rng.below(4) {
+                    let v = gen_value(rng, depth - 1);
+                    obj = obj.with(&format!("k{i}"), v);
+                }
+                obj
+            }
+        }
+    }
+
+    #[test]
+    fn prop_random_values_roundtrip_exactly() {
+        crate::testkit::forall(
+            "json roundtrip",
+            200,
+            |rng| gen_value(rng, 3),
+            |v| {
+                let text = v.dumps();
+                let back = parse(&text)
+                    .map_err(|e| format!("re-parse of {text:?} failed: {e}"))?;
+                crate::testkit::prop_assert(
+                    &back == v,
+                    format!("roundtrip changed the value: {text:?}"),
+                )?;
+                // bounded parse agrees with unbounded on in-limit docs
+                let bounded = parse_bounded(&text, text.len())
+                    .map_err(|e| format!("parse_bounded rejected its own dump: {e}"))?;
+                crate::testkit::prop_assert(bounded == back, "bounded parse differs".to_string())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_truncated_documents_always_error() {
+        crate::testkit::forall(
+            "json truncation",
+            150,
+            // root is an array, so every strict prefix leaves an
+            // unclosed bracket and must be rejected
+            |rng| Value::Arr(vec![gen_value(rng, 3)]).dumps(),
+            |text| {
+                for cut in 0..text.len() {
+                    if !text.is_char_boundary(cut) {
+                        continue;
+                    }
+                    crate::testkit::prop_assert(
+                        parse(&text[..cut]).is_err(),
+                        format!("prefix {:?} of {text:?} parsed", &text[..cut]),
+                    )?;
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -175,13 +175,47 @@ fn submission_to_a_shut_down_pool_is_a_descriptive_error() {
     let (pool, executor) = pool(2);
     let handle = executor.engine.clone();
     drop(pool); // joins every engine thread
+    // with failover, single-engine deaths reroute silently; only the
+    // every-engine-down case surfaces, and it must say so
     let err = handle
         .prm_score(vec![vec![1u32, 2, 3]])
         .unwrap_err()
         .to_string();
     assert!(
-        err.contains("pool engine #") && err.contains("shut down"),
-        "error should name the engine and the shutdown: {err}"
+        err.contains("all 2 pool engines are down"),
+        "error should say the whole pool is down: {err}"
     );
     assert!(err.contains("prm_score"), "error should name the op: {err}");
+}
+
+#[test]
+fn killing_one_shard_mid_run_reroutes_and_completes_everything() {
+    let (mut pool, executor) = pool(2);
+    let mut stepper = Stepper::new(executor.clone());
+    for i in 0..6u64 {
+        stepper
+            .admit(Ticket {
+                query: format!("Q:7+{i}-2+8=?\n"),
+                strategy: Strategy::beam(3, 2, 10),
+                budget: Budget::unlimited(),
+                tag: i,
+            })
+            .unwrap();
+    }
+    // progress a little, then lose a shard mid-flight
+    for _ in 0..2 {
+        stepper.advance(None).unwrap();
+    }
+    pool.kill_engine(0);
+    stepper.run_to_completion().unwrap();
+    let done = stepper.drain_completed();
+    assert_eq!(done.len(), 6, "every request must complete despite the kill");
+
+    let report = pool.report();
+    assert!(
+        report.req_f64("rerouted_submits").unwrap() >= 1.0,
+        "failover must be visible in the pool report: {report:?}"
+    );
+    assert_eq!(report.req_f64("engines_marked_dead").unwrap(), 1.0);
+    assert_eq!(report.req_f64("live_engines").unwrap(), 1.0);
 }

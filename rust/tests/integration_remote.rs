@@ -1,0 +1,240 @@
+//! The remote engine tier end-to-end over the in-process loopback
+//! transport (full wire protocol, no real sockets — CI has no network):
+//!
+//! * a client pool of [`RemoteBackend`]s fronting a loopback
+//!   `engine-serve` fleet produces results identical to the local sim
+//!   backend at temperature 0, for client pool sizes 1, 2 and 4;
+//! * killing one remote shard mid-run fails over: every admitted
+//!   request still completes and the pool report shows
+//!   `rerouted_submits > 0`;
+//! * protocol-version and probe-layout mismatches surface as clear,
+//!   non-transient `Error::Net`s naming both sides.
+//!
+//! Client and server pools share one sim clock — the loopback-only
+//! virtual-timeline exception documented in `docs/remote.md`.
+
+use ttc::config::{BackendKind, Config};
+use ttc::engine::EnginePool;
+use ttc::net::transport::{recv_msg, send_msg};
+use ttc::net::{frame, wire};
+use ttc::net::{JsonCodec, LoopbackConnector, NetMetrics, RemoteBackend, RemoteConfig};
+use ttc::strategies::stepper::{Stepper, Ticket};
+use ttc::strategies::{registry, Budget, Executor, Outcome, Strategy, StrategyParams};
+use ttc::util::clock::{self, SharedClock};
+use ttc::util::rng::Rng;
+
+fn sim_cfg(engines: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.engine.backend = BackendKind::Sim;
+    cfg.engine.sim_clock = true;
+    cfg.engine.engines = engines;
+    cfg
+}
+
+/// Tight timeouts/backoff so failover paths resolve in test time.
+fn quick_remote() -> RemoteConfig {
+    RemoteConfig {
+        call_timeout_ms: 10_000.0,
+        connect_timeout_ms: 1_000.0,
+        retries: 1,
+        backoff_ms: 1.0,
+    }
+}
+
+/// A client pool of `engines` RemoteBackends, every slot dialing
+/// `connector`, sharing the server fleet's sim clock.
+fn remote_pool(
+    engines: usize,
+    clock: SharedClock,
+    connector: LoopbackConnector,
+) -> (EnginePool, Executor) {
+    let metrics = NetMetrics::new();
+    let pool = EnginePool::start_with_factories(
+        &sim_cfg(engines),
+        clock.clone(),
+        "remote backend",
+        |_| RemoteBackend::factory(connector.clone(), quick_remote(), clock.clone(), metrics.clone()),
+    )
+    .unwrap();
+    let executor = Executor::new(pool.handle(), pool.clock.clone(), 0.0);
+    (pool, executor)
+}
+
+/// Everything except latency must match (remote calls interleave their
+/// clock charges differently, but temp-0 results are time-independent).
+fn assert_same_result(a: &Outcome, b: &Outcome, label: &str) {
+    assert_eq!(a.answer, b.answer, "{label}: answer diverged");
+    assert_eq!(a.chosen, b.chosen, "{label}: chosen diverged");
+    assert_eq!(a.tokens, b.tokens, "{label}: tokens diverged");
+    assert_eq!(a.engine_calls, b.engine_calls, "{label}: engine calls diverged");
+    assert_eq!(a.rounds, b.rounds, "{label}: rounds diverged");
+    assert_eq!(
+        a.budget_exhausted, b.budget_exhausted,
+        "{label}: budget_exhausted diverged"
+    );
+    assert_eq!(a.stopped_early, b.stopped_early, "{label}: stopped_early diverged");
+    assert_eq!(a.preempted, b.preempted, "{label}: preempted diverged");
+}
+
+#[test]
+fn remote_loopback_matches_local_sim_for_pool_sizes_1_2_4() {
+    let mut rng = Rng::new(0xC0DE, 0);
+    // per-method cases, no deadlines: outcomes are time-independent, so
+    // they cannot depend on transport or client pool size
+    let mut cases: Vec<(Strategy, Budget, String)> = Vec::new();
+    for method in registry::all() {
+        let params = if method.uses_rounds() {
+            StrategyParams::beam(
+                rng.range(1, 3) as usize,
+                rng.range(1, 3) as usize,
+                rng.range(6, 12) as usize,
+            )
+        } else {
+            StrategyParams::parallel(rng.range(1, 4) as usize)
+        };
+        let budget = if rng.below(2) == 0 {
+            Budget::unlimited()
+        } else {
+            Budget::unlimited().with_max_tokens(rng.range(8, 48) as usize)
+        };
+        let query = format!("Q:7+{}-2+8=?\n", rng.range(0, 9));
+        cases.push((Strategy::new(method.name(), params), budget, query));
+    }
+
+    // reference: one local sim engine, blocking, one request at a time
+    let ref_pool = EnginePool::start(&sim_cfg(1)).unwrap();
+    let serial = Executor::new(ref_pool.handle(), ref_pool.clock.clone(), 0.0);
+    let reference: Vec<Outcome> = cases
+        .iter()
+        .map(|(s, b, q)| serial.run_budgeted(s, q, b.clone()).unwrap())
+        .collect();
+
+    for engines in [1usize, 2, 4] {
+        let clock = clock::sim_clock();
+        let (connector, _server) =
+            ttc::net::LoopbackEngineServer::spawn_with_clock(&sim_cfg(2), clock.clone()).unwrap();
+        let (_pool, executor) = remote_pool(engines, clock, connector);
+        let mut stepper = Stepper::new(executor.clone());
+        for (i, (s, b, q)) in cases.iter().enumerate() {
+            stepper
+                .admit(Ticket {
+                    query: q.clone(),
+                    strategy: s.clone(),
+                    budget: b.clone(),
+                    tag: i as u64,
+                })
+                .unwrap();
+        }
+        stepper.run_to_completion().unwrap();
+        let mut done = stepper.drain_completed();
+        assert_eq!(done.len(), cases.len());
+        done.sort_by_key(|c| c.tag);
+        for (c, r) in done.iter().zip(&reference) {
+            assert_same_result(
+                &c.outcome,
+                r,
+                &format!("{} via {engines} remote engine(s)", c.strategy_id),
+            );
+        }
+    }
+}
+
+#[test]
+fn killing_a_remote_shard_mid_run_fails_over_and_completes() {
+    let clock = clock::sim_clock();
+    let (conn_a, _server_a) =
+        ttc::net::LoopbackEngineServer::spawn_with_clock(&sim_cfg(1), clock.clone()).unwrap();
+    let (conn_b, mut server_b) =
+        ttc::net::LoopbackEngineServer::spawn_with_clock(&sim_cfg(1), clock.clone()).unwrap();
+    let connectors = [conn_a, conn_b];
+    let metrics = NetMetrics::new();
+    let pool = EnginePool::start_with_factories(&sim_cfg(2), clock.clone(), "remote backend", |i| {
+        RemoteBackend::factory(
+            connectors[i % 2].clone(),
+            quick_remote(),
+            clock.clone(),
+            metrics.clone(),
+        )
+    })
+    .unwrap();
+    let executor = Executor::new(pool.handle(), pool.clock.clone(), 0.0);
+
+    let mut stepper = Stepper::new(executor.clone());
+    for i in 0..6u64 {
+        stepper
+            .admit(Ticket {
+                query: format!("Q:7+{i}-2+8=?\n"),
+                strategy: Strategy::beam(3, 2, 10),
+                budget: Budget::unlimited(),
+                tag: i,
+            })
+            .unwrap();
+    }
+    // progress a little, then lose the shard client slot 1 dials
+    for _ in 0..2 {
+        stepper.advance(None).unwrap();
+    }
+    server_b.kill();
+    stepper.run_to_completion().unwrap();
+    let done = stepper.drain_completed();
+    assert_eq!(done.len(), 6, "every request must survive the shard kill");
+
+    let report = pool.report();
+    assert!(
+        report.req_f64("rerouted_submits").unwrap() >= 1.0,
+        "failover must be visible in the pool report: {report:?}"
+    );
+    assert_eq!(report.req_f64("live_engines").unwrap(), 1.0);
+    assert_eq!(report.req_f64("engines_marked_dead").unwrap(), 1.0);
+    assert!(
+        metrics.retries.get() >= 1,
+        "the client should have retried the dying shard before failing over"
+    );
+}
+
+#[test]
+fn protocol_version_mismatch_is_a_clear_net_error() {
+    use ttc::net::transport::Connector;
+    let (connector, _server) = ttc::net::LoopbackEngineServer::spawn(&sim_cfg(1)).unwrap();
+    let codec = JsonCodec;
+
+    // Handshake-level skew: the hello's explicit protocol field.
+    let mut conn = connector.connect().unwrap();
+    let hello = wire::hello(frame::PROTOCOL_VERSION + 1, wire::ProbeLayout::current());
+    send_msg(conn.as_mut(), &codec, &hello, None).unwrap();
+    let err = wire::check_ack(&recv_msg(conn.as_mut(), &codec, None).unwrap()).unwrap_err();
+    assert_eq!(err.kind_str(), "net");
+    assert!(!err.is_transient_net(), "a version mismatch must not be retried: {err}");
+    let msg = err.to_string();
+    assert!(msg.contains("v2") && msg.contains("v1"), "must name both versions: {msg}");
+
+    // Frame-level skew: a header stamped with a foreign version is
+    // rejected before the payload is decoded.
+    let mut conn = connector.connect().unwrap();
+    let good_hello = wire::hello(frame::PROTOCOL_VERSION, wire::ProbeLayout::current());
+    let payload = codec.encode(&good_hello).unwrap();
+    frame::write_frame_versioned(&mut conn.as_mut(), 9, frame::CODEC_JSON, &payload).unwrap();
+    let err = wire::check_ack(&recv_msg(conn.as_mut(), &codec, None).unwrap()).unwrap_err();
+    assert_eq!(err.kind_str(), "net");
+    let msg = err.to_string();
+    assert!(msg.contains("v9") && msg.contains("v1"), "must name both versions: {msg}");
+}
+
+#[test]
+fn probe_layout_mismatch_is_a_clear_net_error() {
+    use ttc::net::transport::Connector;
+    let (connector, _server) = ttc::net::LoopbackEngineServer::spawn(&sim_cfg(1)).unwrap();
+    let codec = JsonCodec;
+    let mut conn = connector.connect().unwrap();
+    let mut wrong = wire::ProbeLayout::current();
+    wrong.layout_version += 1;
+    let hello = wire::hello(frame::PROTOCOL_VERSION, wrong);
+    send_msg(conn.as_mut(), &codec, &hello, None).unwrap();
+    let err = wire::check_ack(&recv_msg(conn.as_mut(), &codec, None).unwrap()).unwrap_err();
+    assert_eq!(err.kind_str(), "net");
+    assert!(!err.is_transient_net());
+    assert!(
+        err.to_string().contains("probe layout mismatch"),
+        "must say what is skewed: {err}"
+    );
+}
