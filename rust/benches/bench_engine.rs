@@ -24,9 +24,54 @@ fn main() {
     // the pool bench rides the artifact-free sim backend, so it runs
     // (and its balance stat gates) on every checkout
     pool_bench();
+    // cross-request cache tier: shared-stem workload, sim backend, so
+    // the hit-rate stats gate on every checkout too
+    cache_bench();
     // the remote bench rides the loopback transport (full wire
     // protocol, no sockets), so it also runs everywhere
     remote_bench();
+}
+
+/// Cross-request cache workload: 8 concurrent requests sharing one stem
+/// (identical query, temp-0 beam decoding) on a 2-engine sim pool with
+/// the cache tier enabled. Repeated requests replay cached rows instead
+/// of re-decoding, so the run emits the two stats the bench gate floors:
+/// `cache_hit_fraction` and `decode_steps_saved`.
+fn cache_bench() {
+    let mut cfg = Config::default();
+    cfg.engine.backend = BackendKind::Sim;
+    cfg.engine.sim_clock = true;
+    cfg.engine.engines = 2;
+    cfg.engine.cache.enabled = true;
+    let pool = EnginePool::start(&cfg).expect("sim pool start (cache)");
+    let executor = Executor::new(pool.handle(), pool.clock.clone(), 0.0);
+    bench("cached_8x_shared_stem", || {
+        let mut stepper = Stepper::new(executor.clone());
+        for i in 0..8u64 {
+            stepper
+                .admit(Ticket {
+                    // the shared stem: every request asks the same query
+                    query: "Q:7+3-2+8=?\n".to_string(),
+                    strategy: Strategy::beam(4, 2, 12),
+                    budget: Budget::unlimited(),
+                    tag: i,
+                })
+                .unwrap();
+        }
+        stepper.run_to_completion().unwrap();
+        std::hint::black_box(stepper.drain_completed());
+    });
+    let report = pool.report();
+    let cache = report.req("cache").expect("cache report section");
+    println!(
+        "stat,cache_hit_fraction,{}",
+        cache.req_f64("hit_fraction").unwrap_or(0.0)
+    );
+    println!(
+        "stat,decode_steps_saved,{}",
+        cache.req_f64("decode_steps_saved").unwrap_or(0.0)
+    );
+    println!("# cache pool report: {}", report.dumps());
 }
 
 /// Sharded-pool workload: 4 concurrent beam requests multiplexed by the

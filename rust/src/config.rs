@@ -101,6 +101,37 @@ pub struct EngineConfig {
     /// Same-shard retries per remote call before the pool's failover
     /// takes over.
     pub remote_retries: usize,
+    /// Cross-request cache tier (`docs/caching.md`); default-off so
+    /// every existing path stays byte-identical unless opted in.
+    pub cache: CacheConfig,
+}
+
+/// The cross-request cache tier
+/// ([`crate::engine::cache::EngineCache`]): prefix-trie generation
+/// reuse + sharded PRM/embed score cache, shared by every engine of a
+/// pool. CLI: `ttc serve`/`ttc engine-serve`
+/// `--cache [--cache-entries N] [--cache-shards N]`.
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// Off by default: the engine carries no cache at all and every
+    /// code path is byte-identical to the pre-cache engine.
+    pub enabled: bool,
+    /// Entry bound for the generation store and the score store (each
+    /// is bounded to `max_entries` independently, LRU-evicted).
+    pub max_entries: usize,
+    /// Lock shards per store (per-shard capacity is
+    /// `max_entries / shards`).
+    pub shards: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            enabled: false,
+            max_entries: 4096,
+            shards: 8,
+        }
+    }
 }
 
 impl Default for EngineConfig {
@@ -119,6 +150,7 @@ impl Default for EngineConfig {
             remote_addrs: Vec::new(),
             remote_timeout_ms: 30_000.0,
             remote_retries: 2,
+            cache: CacheConfig::default(),
         }
     }
 }
@@ -359,6 +391,11 @@ impl Config {
                     .ok_or_else(|| Error::Config("engine.backend must be a string".into()))?,
             )?;
         }
+        if let Some(c) = v.get("cache") {
+            e.cache.enabled = c.opt_bool("enabled", e.cache.enabled);
+            e.cache.max_entries = c.opt_usize("max_entries", e.cache.max_entries);
+            e.cache.shards = c.opt_usize("shards", e.cache.shards);
+        }
         if let Some(buckets) = v.get("buckets") {
             e.buckets = buckets
                 .as_arr()
@@ -554,6 +591,22 @@ mod tests {
         assert_eq!(BackendKind::parse("remote").unwrap().as_str(), "remote");
         let bad = parse(r#"{"engine": {"remote_addrs": [7]}}"#).unwrap();
         assert!(c.merge_json(&bad).is_err());
+    }
+
+    #[test]
+    fn cache_config_merge() {
+        let mut c = Config::default();
+        assert!(!c.engine.cache.enabled, "cache must be default-off");
+        assert_eq!(c.engine.cache.max_entries, 4096);
+        assert_eq!(c.engine.cache.shards, 8);
+        let v = parse(
+            r#"{"engine": {"cache": {"enabled": true, "max_entries": 128, "shards": 2}}}"#,
+        )
+        .unwrap();
+        c.merge_json(&v).unwrap();
+        assert!(c.engine.cache.enabled);
+        assert_eq!(c.engine.cache.max_entries, 128);
+        assert_eq!(c.engine.cache.shards, 2);
     }
 
     #[test]

@@ -1,0 +1,717 @@
+//! Cross-request cache tier: prefix-trie generation reuse + a sharded
+//! PRM/embed score cache, shared by every engine of a pool.
+//!
+//! The cache sits *behind* the engine thread, in front of the
+//! [`crate::engine::backend::Backend`]: sim, device and remote paths
+//! all consult it before planning a call, so a `RemoteBackend` client
+//! fills it from remote replies exactly like a local backend does.
+//! [`docs/caching.md`](../../../docs/caching.md) is the full contract;
+//! the short version:
+//!
+//! * **Generation** entries live in a per-shard *prefix trie* keyed on
+//!   token stems (one trie walk per prompt, entries at exact stem
+//!   depth), so the beam family's chained prompts — each round's prompt
+//!   extends the previous round's — share stem storage instead of
+//!   duplicating it. A hit requires the *exact* prompt at temperature 0
+//!   for the same [`GenKind`]: the `Backend` contract guarantees temp-0
+//!   purity per prompt, **not** that a longer prompt's output extends a
+//!   shorter one's, so stem-extension reuse would silently change
+//!   results (the sim backend re-parses chunk boundaries, for one).
+//!   The cached value is the row's *natural* (pre-budget-cut) output;
+//!   budget/deadline cuts replay per request in
+//!   [`crate::engine::preempt::cut_replayed_row`] without charging the
+//!   clock, which is where `decode_steps_saved` comes from.
+//! * **Scores** (PRM + both embed kinds, pure at any temperature) live
+//!   in a sharded size-bounded map consulted before bin-packing, so
+//!   cached rows are subtracted from the batch plan entirely.
+//! * Both stores use per-shard locks (the coalescing scheduler never
+//!   serializes on one global lock), exact per-shard LRU eviction, and
+//!   a probe-generation stamp: `probe_load` / `probe_train` bump the
+//!   generation and clear the shards, and inserts stamped with an
+//!   older generation are dropped (a backend call that raced a probe
+//!   swap cannot resurrect pre-swap scores).
+//!
+//! `max_entries` bounds the generation store and the score store
+//! independently (each is split over `shards` shards of
+//! `max_entries / shards` slots).
+
+use crate::config::CacheConfig;
+use crate::engine::protocol::{EmbedKind, GenKind};
+use crate::metrics::CacheMetrics;
+use crate::util::json::Value;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{BTreeMap, HashMap};
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// How many leading prompt tokens pick a generation shard: stems that
+/// agree on their first tokens land on the same shard, so a chain of
+/// extending prompts shares one trie.
+const GEN_SHARD_STEM: usize = 8;
+
+/// Key of one cached score row.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum ScoreKey {
+    /// PRM score of a prefix, pre-truncated to `prm_len` by the caller
+    /// (both backends score only the first `prm_len` tokens, so longer
+    /// prefixes sharing that window share the entry).
+    Prm(Vec<u32>),
+    /// Embedding of a full query for one [`EmbedKind`].
+    Embed(EmbedKind, Vec<u32>),
+}
+
+/// One cached score row.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScoreValue {
+    Prm(f32),
+    Embed(Vec<f32>),
+}
+
+fn hash64(h: &impl Hash) -> u64 {
+    let mut s = DefaultHasher::new();
+    h.hash(&mut s);
+    s.finish()
+}
+
+// ---------------------------------------------------------------------
+// generation store: per-shard prefix trie with exact LRU
+// ---------------------------------------------------------------------
+
+const NO_NODE: u32 = u32::MAX;
+
+struct GenEntry {
+    /// The row's natural (pre-budget-cut) output tokens.
+    natural: Vec<u32>,
+    /// Probe generation the producing backend call observed.
+    probe_gen: u64,
+    /// Current LRU stamp (key into `GenShard::lru`).
+    seq: u64,
+}
+
+struct GenNode {
+    token: u32,
+    parent: u32,
+    children: HashMap<u32, u32>,
+    entry: Option<GenEntry>,
+}
+
+impl GenNode {
+    fn new(token: u32, parent: u32) -> GenNode {
+        GenNode {
+            token,
+            parent,
+            children: HashMap::new(),
+            entry: None,
+        }
+    }
+}
+
+/// One generation shard: an arena-backed trie (two roots, one per
+/// [`GenKind`]) plus an LRU index over the nodes that hold entries.
+struct GenShard {
+    nodes: Vec<GenNode>,
+    free: Vec<u32>,
+    /// LRU order: seq -> node index (oldest first).
+    lru: BTreeMap<u64, u32>,
+    seq: u64,
+    entries: usize,
+    cap: usize,
+}
+
+impl GenShard {
+    fn new(cap: usize) -> GenShard {
+        GenShard {
+            // nodes[0] / nodes[1]: Full / Chunk roots
+            nodes: vec![GenNode::new(0, NO_NODE), GenNode::new(0, NO_NODE)],
+            free: Vec::new(),
+            lru: BTreeMap::new(),
+            seq: 0,
+            entries: 0,
+            cap,
+        }
+    }
+
+    fn root(kind: GenKind) -> u32 {
+        match kind {
+            GenKind::Full => 0,
+            GenKind::Chunk => 1,
+        }
+    }
+
+    /// Walk the trie to the node at exact stem depth, if present.
+    fn find(&self, kind: GenKind, prompt: &[u32]) -> Option<u32> {
+        let mut at = Self::root(kind);
+        for &t in prompt {
+            at = *self.nodes[at as usize].children.get(&t)?;
+        }
+        Some(at)
+    }
+
+    fn touch(&mut self, node: u32) -> u64 {
+        self.seq += 1;
+        let seq = self.seq;
+        if let Some(e) = self.nodes[node as usize].entry.as_mut() {
+            self.lru.remove(&e.seq);
+            e.seq = seq;
+        }
+        self.lru.insert(seq, node);
+        seq
+    }
+
+    fn lookup(&mut self, kind: GenKind, prompt: &[u32], current_gen: u64) -> Option<Vec<u32>> {
+        let node = self.find(kind, prompt)?;
+        let fresh = match self.nodes[node as usize].entry {
+            Some(ref e) if e.probe_gen == current_gen => Some(e.natural.clone()),
+            Some(_) => None, // stale (pre-probe-swap): drop it lazily
+            None => return None,
+        };
+        match fresh {
+            Some(natural) => {
+                self.touch(node);
+                Some(natural)
+            }
+            None => {
+                self.remove_entry(node);
+                None
+            }
+        }
+    }
+
+    fn insert(&mut self, kind: GenKind, prompt: &[u32], natural: &[u32], probe_gen: u64) -> u64 {
+        let mut at = Self::root(kind);
+        for &t in prompt {
+            at = match self.nodes[at as usize].children.get(&t) {
+                Some(&c) => c,
+                None => {
+                    let idx = match self.free.pop() {
+                        Some(idx) => {
+                            self.nodes[idx as usize] = GenNode::new(t, at);
+                            idx
+                        }
+                        None => {
+                            self.nodes.push(GenNode::new(t, at));
+                            (self.nodes.len() - 1) as u32
+                        }
+                    };
+                    self.nodes[at as usize].children.insert(t, idx);
+                    idx
+                }
+            };
+        }
+        if self.nodes[at as usize].entry.is_none() {
+            self.entries += 1;
+        } else if let Some(e) = self.nodes[at as usize].entry.take() {
+            self.lru.remove(&e.seq);
+        }
+        self.seq += 1;
+        let seq = self.seq;
+        self.nodes[at as usize].entry = Some(GenEntry {
+            natural: natural.to_vec(),
+            probe_gen,
+            seq,
+        });
+        self.lru.insert(seq, at);
+
+        let mut evicted = 0u64;
+        while self.entries > self.cap {
+            if let Some((&oldest, &victim)) = self.lru.iter().next() {
+                debug_assert_ne!(victim, at, "just-inserted entry evicted (cap 0?)");
+                self.lru.remove(&oldest);
+                self.drop_entry_and_prune(victim);
+                evicted += 1;
+            } else {
+                break;
+            }
+        }
+        evicted
+    }
+
+    /// Remove a node's entry (including its LRU stamp) and prune the
+    /// now-useless leaf chain back toward the root.
+    fn remove_entry(&mut self, node: u32) {
+        if let Some(e) = self.nodes[node as usize].entry.take() {
+            self.lru.remove(&e.seq);
+            self.entries -= 1;
+        }
+        self.prune(node);
+    }
+
+    /// As [`remove_entry`], for entries whose LRU stamp the caller
+    /// already removed.
+    fn drop_entry_and_prune(&mut self, node: u32) {
+        if self.nodes[node as usize].entry.take().is_some() {
+            self.entries -= 1;
+        }
+        self.prune(node);
+    }
+
+    fn prune(&mut self, mut node: u32) {
+        while node != NO_NODE {
+            let n = &self.nodes[node as usize];
+            if n.parent == NO_NODE || n.entry.is_some() || !n.children.is_empty() {
+                break;
+            }
+            let (parent, token) = (n.parent, n.token);
+            self.nodes[parent as usize].children.remove(&token);
+            self.free.push(node);
+            node = parent;
+        }
+    }
+
+    fn clear(&mut self) {
+        *self = GenShard::new(self.cap);
+    }
+}
+
+// ---------------------------------------------------------------------
+// score store: per-shard map with exact LRU
+// ---------------------------------------------------------------------
+
+struct ScoreSlot {
+    value: ScoreValue,
+    probe_gen: u64,
+    seq: u64,
+}
+
+struct ScoreShard {
+    map: HashMap<ScoreKey, ScoreSlot>,
+    /// LRU order: seq -> key (oldest first).
+    lru: BTreeMap<u64, ScoreKey>,
+    seq: u64,
+    cap: usize,
+}
+
+impl ScoreShard {
+    fn new(cap: usize) -> ScoreShard {
+        ScoreShard {
+            map: HashMap::new(),
+            lru: BTreeMap::new(),
+            seq: 0,
+            cap,
+        }
+    }
+
+    fn lookup(&mut self, key: &ScoreKey, current_gen: u64) -> Option<ScoreValue> {
+        let stale = match self.map.get(key) {
+            Some(slot) if slot.probe_gen == current_gen => false,
+            Some(_) => true,
+            None => return None,
+        };
+        if stale {
+            if let Some(slot) = self.map.remove(key) {
+                self.lru.remove(&slot.seq);
+            }
+            return None;
+        }
+        self.seq += 1;
+        let seq = self.seq;
+        let slot = self.map.get_mut(key).unwrap();
+        self.lru.remove(&slot.seq);
+        slot.seq = seq;
+        let value = slot.value.clone();
+        self.lru.insert(seq, key.clone());
+        Some(value)
+    }
+
+    fn insert(&mut self, key: ScoreKey, value: ScoreValue, probe_gen: u64) -> u64 {
+        self.seq += 1;
+        let seq = self.seq;
+        if let Some(old) = self.map.insert(
+            key.clone(),
+            ScoreSlot {
+                value,
+                probe_gen,
+                seq,
+            },
+        ) {
+            self.lru.remove(&old.seq);
+        }
+        self.lru.insert(seq, key);
+
+        let mut evicted = 0u64;
+        while self.map.len() > self.cap {
+            if let Some((&oldest, _)) = self.lru.iter().next() {
+                if let Some(victim) = self.lru.remove(&oldest) {
+                    self.map.remove(&victim);
+                    evicted += 1;
+                }
+            } else {
+                break;
+            }
+        }
+        evicted
+    }
+
+    fn clear(&mut self) {
+        self.map.clear();
+        self.lru.clear();
+    }
+}
+
+// ---------------------------------------------------------------------
+// EngineCache
+// ---------------------------------------------------------------------
+
+/// The shared cross-request cache tier. One instance per
+/// [`crate::engine::pool::EnginePool`] (every engine of a pool shares
+/// it via `Arc`), or per single engine.
+pub struct EngineCache {
+    gen_shards: Vec<Mutex<GenShard>>,
+    score_shards: Vec<Mutex<ScoreShard>>,
+    /// Bumped by [`invalidate`](EngineCache::invalidate); entries and
+    /// inserts stamped with an older generation are ignored.
+    probe_gen: AtomicU64,
+    pub metrics: CacheMetrics,
+    max_entries: usize,
+}
+
+impl EngineCache {
+    pub fn new(cfg: &CacheConfig) -> EngineCache {
+        let shards = cfg.shards.max(1);
+        let cap = (cfg.max_entries / shards).max(1);
+        EngineCache {
+            gen_shards: (0..shards).map(|_| Mutex::new(GenShard::new(cap))).collect(),
+            score_shards: (0..shards)
+                .map(|_| Mutex::new(ScoreShard::new(cap)))
+                .collect(),
+            probe_gen: AtomicU64::new(0),
+            metrics: CacheMetrics::new(),
+            max_entries: cap * shards,
+        }
+    }
+
+    /// `Some(shared cache)` when the config enables it, else `None` —
+    /// the disabled path carries no cache at all, so every engine code
+    /// path stays byte-identical to the pre-cache engine.
+    pub fn from_config(cfg: &CacheConfig) -> Option<Arc<EngineCache>> {
+        if cfg.enabled {
+            Some(Arc::new(EngineCache::new(cfg)))
+        } else {
+            None
+        }
+    }
+
+    /// The current probe generation. Capture this *before* a backend
+    /// call and pass it to the insert: an insert that raced a probe
+    /// swap is then dropped instead of poisoning the post-swap cache.
+    pub fn generation(&self) -> u64 {
+        self.probe_gen.load(Ordering::Acquire)
+    }
+
+    /// Drop everything and start a new generation — hooked into
+    /// `probe_load` / `probe_train`, whose parameter swaps change what
+    /// the backends would answer.
+    pub fn invalidate(&self) {
+        self.probe_gen.fetch_add(1, Ordering::AcqRel);
+        for s in &self.gen_shards {
+            s.lock().unwrap().clear();
+        }
+        for s in &self.score_shards {
+            s.lock().unwrap().clear();
+        }
+        self.metrics.invalidations.inc();
+    }
+
+    fn gen_shard(&self, kind: GenKind, prompt: &[u32]) -> &Mutex<GenShard> {
+        let stem = &prompt[..prompt.len().min(GEN_SHARD_STEM)];
+        let h = hash64(&(kind, stem));
+        &self.gen_shards[(h % self.gen_shards.len() as u64) as usize]
+    }
+
+    fn score_shard(&self, key: &ScoreKey) -> &Mutex<ScoreShard> {
+        let h = hash64(key);
+        &self.score_shards[(h % self.score_shards.len() as u64) as usize]
+    }
+
+    /// Exact-prompt generation lookup (counts a hit or a miss). Only
+    /// meaningful at temperature 0 — the caller gates on that.
+    pub fn lookup_gen(&self, kind: GenKind, prompt: &[u32]) -> Option<Vec<u32>> {
+        let gen = self.generation();
+        let hit = self.gen_shard(kind, prompt).lock().unwrap().lookup(kind, prompt, gen);
+        match hit {
+            Some(natural) => {
+                self.metrics.hits.inc();
+                Some(natural)
+            }
+            None => {
+                self.metrics.misses.inc();
+                None
+            }
+        }
+    }
+
+    /// Insert a row's *natural* (pre-budget-cut) output, stamped with
+    /// the generation captured before the producing backend call.
+    pub fn insert_gen(&self, kind: GenKind, prompt: &[u32], natural: &[u32], gen: u64) {
+        if gen != self.generation() {
+            return; // raced a probe swap; drop
+        }
+        let evicted = self
+            .gen_shard(kind, prompt)
+            .lock()
+            .unwrap()
+            .insert(kind, prompt, natural, gen);
+        self.metrics.evictions.add(evicted);
+    }
+
+    /// Score lookup (counts a hit or a miss). Pure at any temperature.
+    pub fn lookup_score(&self, key: &ScoreKey) -> Option<ScoreValue> {
+        let gen = self.generation();
+        let hit = self.score_shard(key).lock().unwrap().lookup(key, gen);
+        match hit {
+            Some(v) => {
+                self.metrics.hits.inc();
+                Some(v)
+            }
+            None => {
+                self.metrics.misses.inc();
+                None
+            }
+        }
+    }
+
+    pub fn insert_score(&self, key: ScoreKey, value: ScoreValue, gen: u64) {
+        if gen != self.generation() {
+            return;
+        }
+        let evicted = self.score_shard(&key).lock().unwrap().insert(key, value, gen);
+        self.metrics.evictions.add(evicted);
+    }
+
+    /// Current entry counts: `(generation store, score store)`.
+    pub fn len(&self) -> (usize, usize) {
+        let g = self.gen_shards.iter().map(|s| s.lock().unwrap().entries).sum();
+        let s = self
+            .score_shards
+            .iter()
+            .map(|s| s.lock().unwrap().map.len())
+            .sum();
+        (g, s)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == (0, 0)
+    }
+
+    /// Counters + configuration snapshot for `info()` / pool / serve
+    /// reports.
+    pub fn to_json(&self) -> Value {
+        let (gen_entries, score_entries) = self.len();
+        self.metrics
+            .to_json()
+            .with("max_entries", self.max_entries)
+            .with("shards", self.gen_shards.len())
+            .with("gen_entries", gen_entries)
+            .with("score_entries", score_entries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::backend::{Backend, SimBackend};
+    use crate::testkit::{forall, gen_vec, prop_assert};
+
+    fn cache(max_entries: usize, shards: usize) -> EngineCache {
+        EngineCache::new(&CacheConfig {
+            enabled: true,
+            max_entries,
+            shards,
+        })
+    }
+
+    #[test]
+    fn gen_roundtrip_and_kind_isolation() {
+        let c = cache(64, 4);
+        let g = c.generation();
+        c.insert_gen(GenKind::Full, &[1, 2, 3], &[9, 8], g);
+        assert_eq!(c.lookup_gen(GenKind::Full, &[1, 2, 3]), Some(vec![9, 8]));
+        // same tokens, other kind: a different trie root
+        assert_eq!(c.lookup_gen(GenKind::Chunk, &[1, 2, 3]), None);
+        // stems are not entries: the prefix node exists but holds no row
+        assert_eq!(c.lookup_gen(GenKind::Full, &[1, 2]), None);
+        assert_eq!(c.len(), (1, 0));
+    }
+
+    #[test]
+    fn shared_stems_share_trie_nodes() {
+        let c = cache(64, 1);
+        let g = c.generation();
+        // a beam chain: each prompt extends the previous one
+        c.insert_gen(GenKind::Chunk, &[5, 6, 7], &[1], g);
+        c.insert_gen(GenKind::Chunk, &[5, 6, 7, 8], &[2], g);
+        c.insert_gen(GenKind::Chunk, &[5, 6, 7, 8, 9], &[3], g);
+        let shard = c.gen_shards[0].lock().unwrap();
+        // 2 roots + 5 distinct tokens: extensions reuse the shared stem
+        assert_eq!(shard.nodes.len() - shard.free.len(), 2 + 5);
+        assert_eq!(shard.entries, 3);
+    }
+
+    #[test]
+    fn lru_evicts_the_oldest_entry_and_prunes_its_chain() {
+        let c = cache(2, 1);
+        let g = c.generation();
+        c.insert_gen(GenKind::Full, &[1, 1, 1], &[1], g);
+        c.insert_gen(GenKind::Full, &[2], &[2], g);
+        // touch [1,1,1] so [2] is now oldest
+        assert!(c.lookup_gen(GenKind::Full, &[1, 1, 1]).is_some());
+        c.insert_gen(GenKind::Full, &[3], &[3], g);
+        assert_eq!(c.metrics.evictions.get(), 1);
+        assert_eq!(c.lookup_gen(GenKind::Full, &[2]), None);
+        assert!(c.lookup_gen(GenKind::Full, &[1, 1, 1]).is_some());
+        assert!(c.lookup_gen(GenKind::Full, &[3]).is_some());
+    }
+
+    #[test]
+    fn score_roundtrip_and_lru() {
+        let c = cache(2, 1);
+        let g = c.generation();
+        c.insert_score(ScoreKey::Prm(vec![1]), ScoreValue::Prm(0.5), g);
+        c.insert_score(
+            ScoreKey::Embed(EmbedKind::Pool, vec![1]),
+            ScoreValue::Embed(vec![1.0, 2.0]),
+            g,
+        );
+        // PRM and embed keys don't collide even on equal tokens
+        assert_eq!(
+            c.lookup_score(&ScoreKey::Prm(vec![1])),
+            Some(ScoreValue::Prm(0.5))
+        );
+        c.insert_score(ScoreKey::Prm(vec![2]), ScoreValue::Prm(0.7), g);
+        // the embed row was oldest
+        assert_eq!(
+            c.lookup_score(&ScoreKey::Embed(EmbedKind::Pool, vec![1])),
+            None
+        );
+        assert_eq!(c.len().1, 2);
+    }
+
+    #[test]
+    fn invalidate_clears_and_drops_racing_inserts() {
+        let c = cache(64, 4);
+        let old = c.generation();
+        c.insert_gen(GenKind::Full, &[1], &[1], old);
+        c.insert_score(ScoreKey::Prm(vec![1]), ScoreValue::Prm(0.5), old);
+        c.invalidate();
+        assert!(c.is_empty());
+        assert_eq!(c.lookup_gen(GenKind::Full, &[1]), None);
+        assert_eq!(c.lookup_score(&ScoreKey::Prm(vec![1])), None);
+        // inserts stamped with the pre-swap generation are dropped
+        c.insert_gen(GenKind::Full, &[2], &[2], old);
+        c.insert_score(ScoreKey::Prm(vec![2]), ScoreValue::Prm(0.9), old);
+        assert!(c.is_empty());
+        assert_eq!(c.metrics.invalidations.get(), 1);
+    }
+
+    // ---- properties ----
+
+    #[test]
+    fn prop_stores_never_exceed_max_entries() {
+        forall(
+            "cache stays within max_entries",
+            120,
+            |rng| {
+                let max_entries = rng.range(1, 24) as usize;
+                let shards = rng.range(1, 5) as usize;
+                let ops = gen_vec(rng, 1..80, |r| {
+                    let prompt: Vec<u32> = gen_vec(r, 1..6, |r2| r2.below(8) as u32);
+                    (r.below(4), prompt)
+                });
+                (max_entries, shards, ops)
+            },
+            |(max_entries, shards, ops)| {
+                let c = cache(*max_entries, *shards);
+                let g = c.generation();
+                // per-shard caps round down, so the effective global
+                // bound is cap * shards (≤ max(max_entries, shards))
+                let bound = (*max_entries / *shards).max(1) * *shards;
+                for (op, prompt) in ops {
+                    match *op {
+                        0 => c.insert_gen(GenKind::Full, prompt, &[1, 2], g),
+                        1 => c.insert_gen(GenKind::Chunk, prompt, &[3], g),
+                        2 => c.insert_score(
+                            ScoreKey::Prm(prompt.clone()),
+                            ScoreValue::Prm(0.5),
+                            g,
+                        ),
+                        _ => c.insert_score(
+                            ScoreKey::Embed(EmbedKind::Small, prompt.clone()),
+                            ScoreValue::Embed(vec![0.0]),
+                            g,
+                        ),
+                    }
+                    let (gen_n, score_n) = c.len();
+                    prop_assert(
+                        gen_n <= bound && score_n <= bound,
+                        format!("({gen_n}, {score_n}) entries > bound {bound}"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_hit_is_byte_identical_to_a_fresh_backend_call() {
+        // The property the integration tier relies on: serving a score
+        // or a temp-0 generation from the cache returns bit-for-bit
+        // what calling the backend again would return.
+        let mut backend = SimBackend::new(
+            crate::engine::backend::EngineShapes::sim_default(&crate::config::EngineConfig::default()),
+            crate::util::clock::sim_clock(),
+            7,
+            0,
+        );
+        let c = cache(4096, 8);
+        forall(
+            "cache hit == fresh backend call",
+            60,
+            |rng| gen_vec(rng, 1..12, |r| r.below(40) as u32 + 1),
+            |prefix| {
+                let g = c.generation();
+                let fresh = backend.prm_score(1, &[prefix.clone()]).unwrap()[0];
+                c.insert_score(ScoreKey::Prm(prefix.clone()), ScoreValue::Prm(fresh), g);
+                let again = backend.prm_score(1, &[prefix.clone()]).unwrap()[0];
+                let cached = match c.lookup_score(&ScoreKey::Prm(prefix.clone())) {
+                    Some(ScoreValue::Prm(v)) => v,
+                    other => return Err(format!("expected a PRM hit, got {other:?}")),
+                };
+                prop_assert(
+                    cached.to_bits() == again.to_bits() && cached.to_bits() == fresh.to_bits(),
+                    format!("cached {cached} != fresh {again}"),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn prop_probe_swap_invalidates_everything() {
+        forall(
+            "probe swap leaves no pre-swap entry reachable",
+            60,
+            |rng| {
+                gen_vec(rng, 1..20, |r| {
+                    gen_vec(r, 1..6, |r2| r2.below(10) as u32)
+                })
+            },
+            |prompts| {
+                let c = cache(1024, 4);
+                let g = c.generation();
+                for p in prompts {
+                    c.insert_gen(GenKind::Full, p, &[7], g);
+                    c.insert_score(ScoreKey::Prm(p.clone()), ScoreValue::Prm(0.25), g);
+                }
+                c.invalidate();
+                for p in prompts {
+                    prop_assert(
+                        c.lookup_gen(GenKind::Full, p).is_none()
+                            && c.lookup_score(&ScoreKey::Prm(p.clone())).is_none(),
+                        format!("pre-swap entry for {p:?} survived invalidation"),
+                    )?;
+                }
+                prop_assert(c.is_empty(), "stores not empty after invalidation")
+            },
+        );
+    }
+}

@@ -13,6 +13,7 @@
 
 use crate::config::{BackendKind, Config};
 use crate::engine::backend::{Backend, BackendFactory, EngineShapes, SimBackend};
+use crate::engine::cache::EngineCache;
 use crate::engine::pool::{MsgFactory, PoolGuard, PoolRouter};
 use crate::engine::protocol::*;
 use crate::engine::thread::{DeviceBackend, EngineThread};
@@ -505,21 +506,27 @@ impl Engine {
     }
 
     pub fn start_with_clock(cfg: &Config, clock: SharedClock) -> Result<Engine> {
-        Self::start_member(cfg, clock, 0)
+        Self::start_member(cfg, clock, 0, EngineCache::from_config(&cfg.engine.cache))
     }
 
     /// Spawn pool member `index`: same artifacts/config, its own RNG
     /// stream (member 0 reproduces the historical single-engine stream
     /// exactly) and its own thread, sharing `clock` with its siblings so
-    /// deadlines mean the same thing on every engine.
-    pub(crate) fn start_member(cfg: &Config, clock: SharedClock, index: usize) -> Result<Engine> {
+    /// deadlines mean the same thing on every engine. `cache` is the
+    /// pool-shared cross-request cache tier (`None` when disabled).
+    pub(crate) fn start_member(
+        cfg: &Config,
+        clock: SharedClock,
+        index: usize,
+        cache: Option<Arc<EngineCache>>,
+    ) -> Result<Engine> {
         let factory = Self::backend_factory(cfg, clock.clone(), index);
         let label = match cfg.engine.backend {
             BackendKind::Device => "device backend",
             BackendKind::Sim => "sim backend",
             BackendKind::Remote => "remote backend",
         };
-        Self::start_member_with_factory(clock, index, factory, label)
+        Self::start_member_with_factory(clock, index, factory, label, cache)
     }
 
     /// Spawn pool member `index` around a caller-supplied backend
@@ -531,6 +538,7 @@ impl Engine {
         index: usize,
         factory: BackendFactory,
         label: &str,
+        cache: Option<Arc<EngineCache>>,
     ) -> Result<Engine> {
         let metrics = Arc::new(EngineMetrics::new());
         let (tx, rx) = channel();
@@ -542,7 +550,9 @@ impl Engine {
             .spawn(move || match factory() {
                 Ok(backend) => {
                     let _ = ready_tx.send(Ok(()));
-                    EngineThread::new(backend, thread_clock, thread_metrics).serve(rx);
+                    EngineThread::new(backend, thread_clock, thread_metrics)
+                        .with_cache(cache)
+                        .serve(rx);
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));

@@ -56,9 +56,19 @@
 //! into shared bucket-shaped calls (bin-packed to minimize padding), and
 //! planned generate calls dispatch earliest-deadline-first. See
 //! `docs/engine.md` and `docs/backends.md` for the full contracts.
+//!
+//! ## Cross-request cache tier
+//!
+//! [`cache::EngineCache`] (default-off, `CacheConfig`) sits in front of
+//! every backend: a sharded prefix-trie replays temp-0 generations for
+//! exact prompt hits without charging decode steps, and a sharded LRU
+//! score cache subtracts already-scored PRM/embed rows from the batch
+//! plan before bin-packing. Probe swaps invalidate everything. See
+//! `docs/caching.md`.
 
 pub mod backend;
 pub mod batcher;
+pub mod cache;
 pub mod handle;
 pub mod pool;
 pub mod preempt;
@@ -68,6 +78,7 @@ pub mod thread;
 
 pub use backend::{Backend, BackendFactory, EngineShapes, SimBackend};
 pub use batcher::{pack_bins, plan_batches, plan_batches_edf, BatchPlan};
+pub use cache::EngineCache;
 pub use handle::{Engine, EngineHandle, PendingReply};
 pub use pool::{EngineLoad, EnginePool, PoolReporter};
 pub use protocol::{EmbedKind, GenJob, GenKind, GenResult, ProbeTrainReport};

@@ -57,6 +57,7 @@
 
 use crate::config::Config;
 use crate::engine::backend::BackendFactory;
+use crate::engine::cache::EngineCache;
 use crate::engine::handle::{Engine, EngineHandle};
 use crate::engine::protocol::EngineMsg;
 use crate::error::{Error, Result};
@@ -163,6 +164,9 @@ pub struct PoolRouter {
     /// Health mask: `dead[i]` set once engine `i` stops accepting work.
     dead: Vec<AtomicBool>,
     pub metrics: PoolMetrics,
+    /// The pool-shared cross-request cache tier (`None` when disabled);
+    /// held here so the pool report can include its counters.
+    cache: Option<Arc<EngineCache>>,
 }
 
 impl PoolRouter {
@@ -357,7 +361,12 @@ impl PoolRouter {
     /// and the serve report).
     pub fn report(&self) -> Value {
         let engines: Vec<&Arc<EngineMetrics>> = self.slots.iter().map(|s| &s.metrics).collect();
-        build_report(&engines, Some(&self.metrics), Some(&self.dead_snapshot()))
+        build_report(
+            &engines,
+            Some(&self.metrics),
+            Some(&self.dead_snapshot()),
+            self.cache.as_deref(),
+        )
     }
 }
 
@@ -368,6 +377,7 @@ fn build_report(
     engines: &[&Arc<EngineMetrics>],
     pool: Option<&PoolMetrics>,
     dead: Option<&[bool]>,
+    cache: Option<&EngineCache>,
 ) -> Value {
     let is_dead = |i: usize| dead.and_then(|d| d.get(i)).copied().unwrap_or(false);
     let mut per_engine = Vec::with_capacity(engines.len());
@@ -393,7 +403,7 @@ fn build_report(
     }
     let total: u64 = served.iter().sum();
     let live = engines.len() - (0..engines.len()).filter(|&i| is_dead(i)).count();
-    Value::obj()
+    let mut v = Value::obj()
         .with("engines", engines.len())
         .with("live_engines", live)
         .with("placements", pool.map_or(0, |p| p.placements.get()))
@@ -408,7 +418,14 @@ fn build_report(
         )
         .with("balance_ratio", balance_ratio(&served))
         .with("rows_served_total", total)
-        .with("per_engine", Value::Arr(per_engine))
+        .with("per_engine", Value::Arr(per_engine));
+    // the cache section appears only when the tier is enabled, so
+    // consumers of the historical report shape see no new keys by
+    // default
+    if let Some(c) = cache {
+        v.set("cache", c.to_json());
+    }
+    v
 }
 
 fn balance_ratio(served: &[u64]) -> f64 {
@@ -447,6 +464,7 @@ impl Drop for PoolGuard {
 pub struct PoolReporter {
     engines: Vec<Arc<EngineMetrics>>,
     router: Option<Arc<PoolRouter>>,
+    cache: Option<Arc<EngineCache>>,
 }
 
 impl PoolReporter {
@@ -456,7 +474,7 @@ impl PoolReporter {
             Some(router) => router.report(),
             None => {
                 let engines: Vec<&Arc<EngineMetrics>> = self.engines.iter().collect();
-                build_report(&engines, None, None)
+                build_report(&engines, None, None, self.cache.as_deref())
             }
         }
     }
@@ -466,6 +484,9 @@ impl PoolReporter {
 pub struct EnginePool {
     engines: Vec<Engine>,
     router: Option<Arc<PoolRouter>>,
+    /// The cross-request cache tier shared by every engine of this pool
+    /// (`None` when `engine.cache.enabled` is off).
+    cache: Option<Arc<EngineCache>>,
     pub clock: SharedClock,
 }
 
@@ -485,11 +506,14 @@ impl EnginePool {
 
     pub fn start_with_clock(cfg: &Config, clock: SharedClock) -> Result<EnginePool> {
         let n = cfg.engine.engines.max(1);
+        // one cache for the whole pool: a stem decoded (or a prefix
+        // scored) on any engine is a hit on every other
+        let cache = EngineCache::from_config(&cfg.engine.cache);
         let mut engines = Vec::with_capacity(n);
         for i in 0..n {
-            engines.push(Engine::start_member(cfg, clock.clone(), i)?);
+            engines.push(Engine::start_member(cfg, clock.clone(), i, cache.clone())?);
         }
-        Ok(Self::assemble(engines, clock))
+        Ok(Self::assemble(engines, clock, cache))
     }
 
     /// Spawn a pool whose engines run caller-supplied backends —
@@ -505,6 +529,7 @@ impl EnginePool {
         mut make: impl FnMut(usize) -> BackendFactory,
     ) -> Result<EnginePool> {
         let n = cfg.engine.engines.max(1);
+        let cache = EngineCache::from_config(&cfg.engine.cache);
         let mut engines = Vec::with_capacity(n);
         for i in 0..n {
             engines.push(Engine::start_member_with_factory(
@@ -512,12 +537,17 @@ impl EnginePool {
                 i,
                 make(i),
                 label,
+                cache.clone(),
             )?);
         }
-        Ok(Self::assemble(engines, clock))
+        Ok(Self::assemble(engines, clock, cache))
     }
 
-    fn assemble(engines: Vec<Engine>, clock: SharedClock) -> EnginePool {
+    fn assemble(
+        engines: Vec<Engine>,
+        clock: SharedClock,
+        cache: Option<Arc<EngineCache>>,
+    ) -> EnginePool {
         let n = engines.len();
         let router = if n > 1 {
             Some(Arc::new(PoolRouter {
@@ -531,6 +561,7 @@ impl EnginePool {
                 loads: Mutex::new(vec![EngineLoad::default(); n]),
                 dead: (0..n).map(|_| AtomicBool::new(false)).collect(),
                 metrics: PoolMetrics::new(n),
+                cache: cache.clone(),
             }))
         } else {
             None
@@ -538,8 +569,14 @@ impl EnginePool {
         EnginePool {
             engines,
             router,
+            cache,
             clock,
         }
+    }
+
+    /// The pool-shared cross-request cache tier (`None` when disabled).
+    pub fn cache(&self) -> Option<&Arc<EngineCache>> {
+        self.cache.as_ref()
     }
 
     pub fn engines(&self) -> usize {
@@ -578,6 +615,7 @@ impl EnginePool {
         PoolReporter {
             engines: self.engines.iter().map(|e| e.metrics.clone()).collect(),
             router: self.router.clone(),
+            cache: self.cache.clone(),
         }
     }
 
@@ -590,7 +628,7 @@ impl EnginePool {
             None => {
                 let engines: Vec<&Arc<EngineMetrics>> =
                     self.engines.iter().map(|e| &e.metrics).collect();
-                build_report(&engines, None, None)
+                build_report(&engines, None, None, self.cache.as_deref())
             }
         }
     }

@@ -120,6 +120,30 @@ pub fn run_decode_accounting(
     (cuts, steps)
 }
 
+/// Cut one row that is *replayed from the cross-request cache*
+/// ([`crate::engine::cache::EngineCache`]) instead of decoded: the same
+/// cap / deadline / cancel semantics as [`run_decode_accounting`], but
+/// **zero** decode steps are charged to the clock — the tokens already
+/// exist, so serving them consumes no engine time. Because the clock
+/// never advances, the row either is already halted at `now_ms` (spent
+/// deadline or preset cancel → nothing emitted, like the engine's
+/// dead-plan fast path) or emits instantly up to its cap. The emitted
+/// count is exactly the decode steps a fresh call would have charged
+/// for this row — the `decode_steps_saved` metric sums it.
+pub fn cut_replayed_row(row: &RowBudget, now_ms: f64) -> RowCut {
+    if row.halted(now_ms) {
+        return RowCut {
+            emitted: 0,
+            preempted: true,
+        };
+    }
+    let emitted = row.target();
+    RowCut {
+        emitted,
+        preempted: emitted < row.natural_len,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -228,6 +252,75 @@ mod tests {
         assert!(cuts[0].preempted);
         assert_eq!(cuts[0].emitted, 3);
         assert_eq!(cuts[1], RowCut { emitted: 20, preempted: false });
+    }
+
+    #[test]
+    fn replayed_rows_cut_like_decoded_rows_but_charge_nothing() {
+        // uncut replay: full natural output, not preempted
+        assert_eq!(
+            cut_replayed_row(&row(7), 0.0),
+            RowCut { emitted: 7, preempted: false }
+        );
+        // token cap bites below the natural length
+        let mut capped = row(10);
+        capped.cap = 4;
+        assert_eq!(
+            cut_replayed_row(&capped, 0.0),
+            RowCut { emitted: 4, preempted: true }
+        );
+        // spent deadline / preset cancel: nothing emitted, like the
+        // engine's dead-plan fast path
+        let mut dead = row(10);
+        dead.deadline_ms = 5.0;
+        assert_eq!(
+            cut_replayed_row(&dead, 5.0),
+            RowCut { emitted: 0, preempted: true }
+        );
+        let mut cancelled = row(10);
+        cancelled.cancel = Some(Arc::new(AtomicBool::new(true)));
+        assert_eq!(
+            cut_replayed_row(&cancelled, 0.0),
+            RowCut { emitted: 0, preempted: true }
+        );
+        // a live deadline in the future never halts a replay (no time
+        // passes while serving from cache)
+        let mut live = row(3);
+        live.deadline_ms = 5.0;
+        assert_eq!(
+            cut_replayed_row(&live, 4.999),
+            RowCut { emitted: 3, preempted: false }
+        );
+    }
+
+    #[test]
+    fn prop_replayed_cut_matches_decode_accounting_when_time_is_free() {
+        // With an infinite deadline budget the replay cut must agree
+        // with what the charging loop would emit for the same row.
+        forall(
+            "replay cut == accounting cut (cap-only budgets)",
+            100,
+            |rng| {
+                let natural = rng.below(40) as usize;
+                let cap = if rng.below(2) == 0 {
+                    rng.below(30) as usize
+                } else {
+                    usize::MAX
+                };
+                (natural, cap)
+            },
+            |&(natural, cap)| {
+                let mut r = row(natural);
+                r.cap = cap;
+                let clock = SimClock::new(LatencyModel::default());
+                let (cuts, _) =
+                    run_decode_accounting(&clock, 1, std::slice::from_ref(&r), None);
+                let replay = cut_replayed_row(&r, 0.0);
+                prop_assert(
+                    replay == cuts[0],
+                    format!("replay {replay:?} != accounting {:?}", cuts[0]),
+                )
+            },
+        );
     }
 
     #[test]

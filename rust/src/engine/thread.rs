@@ -21,7 +21,8 @@
 
 use crate::engine::backend::{Backend, EngineShapes};
 use crate::engine::batcher::{pack_bins, plan_batches_edf, BatchPlan};
-use crate::engine::preempt::{run_decode_accounting, RowBudget};
+use crate::engine::cache::{EngineCache, ScoreKey, ScoreValue};
+use crate::engine::preempt::{cut_replayed_row, run_decode_accounting, RowBudget};
 use crate::engine::protocol::*;
 use crate::engine::scheduler::{self, drain_round, EmbedReq, GenerateReq, PrmReq, Round};
 use crate::error::{Error, Result};
@@ -32,6 +33,7 @@ use crate::util::json::Value;
 use crate::util::rng::Rng;
 use crate::util::stats;
 use crate::{log_debug, log_info};
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
@@ -69,6 +71,10 @@ pub struct EngineThread {
     pub shapes: EngineShapes,
     clock: SharedClock,
     metrics: Arc<EngineMetrics>,
+    /// Cross-request cache tier ([`crate::engine::cache`]). `None`
+    /// (the default-off config) keeps every code path byte-identical
+    /// to the uncached build — see `docs/caching.md`.
+    cache: Option<Arc<EngineCache>>,
 }
 
 impl EngineThread {
@@ -83,7 +89,16 @@ impl EngineThread {
             shapes,
             clock,
             metrics,
+            cache: None,
         }
+    }
+
+    /// Attach the shared cross-request cache tier. Every engine of a
+    /// pool shares one [`EngineCache`], so a stem decoded on engine 0
+    /// is a hit on engine 3.
+    pub fn with_cache(mut self, cache: Option<Arc<EngineCache>>) -> EngineThread {
+        self.cache = cache;
+        self
     }
 
     /// Blocking serve loop. Consumes messages until `Shutdown` or channel
@@ -176,22 +191,39 @@ impl EngineThread {
                 patience,
                 reply,
             } => {
-                let _ = reply.send(self.backend.probe_train(
+                let out = self.backend.probe_train(
                     &train_feats,
                     &train_labels,
                     &val_feats,
                     &val_labels,
                     epochs,
                     patience,
-                ));
+                );
+                if out.is_ok() {
+                    self.invalidate_cache();
+                }
+                let _ = reply.send(out);
             }
             EngineMsg::ProbeLoad { params, reply } => {
-                let _ = reply.send(self.backend.probe_load(params));
+                let out = self.backend.probe_load(params);
+                if out.is_ok() {
+                    self.invalidate_cache();
+                }
+                let _ = reply.send(out);
             }
             EngineMsg::Info { reply } => {
                 let _ = reply.send(Ok(self.info()));
             }
             EngineMsg::Shutdown => {}
+        }
+    }
+
+    /// A successful probe swap changes what cached scores mean — drop
+    /// every entry (generation-stamped, so racing inserts stamped with
+    /// the old layout are dropped too).
+    fn invalidate_cache(&self) {
+        if let Some(c) = &self.cache {
+            c.invalidate();
         }
     }
 
@@ -227,6 +259,162 @@ impl EngineThread {
     }
 
     fn generate_all(&mut self, jobs: &[GenJob], deadlines: &[f64]) -> Result<Vec<GenResult>> {
+        debug_assert_eq!(jobs.len(), deadlines.len());
+        let Some(cache) = self.cache.clone() else {
+            return self.generate_executed(jobs, deadlines, None);
+        };
+
+        // Classify every temp-0 job before planning. Reuse is *exact
+        // prompt* only — the Backend contract guarantees a temp-0 row
+        // depends on nothing but its prompt, so an exact (kind, prompt)
+        // hit replays byte-identically; extending a cached stem with
+        // fresh decoding would not (docs/caching.md has the argument).
+        // Identical live temp-0 jobs in one round dedup onto a single
+        // "leader" row; followers replay its natural row.
+        enum Role {
+            Live,
+            Follower(usize),
+            Replay(Vec<u32>),
+        }
+        let stamp = cache.generation();
+        let now = self.clock.now_ms();
+        let mut leader_of: HashMap<(GenKind, &[u32]), usize> = HashMap::new();
+        let mut roles: Vec<Role> = Vec::with_capacity(jobs.len());
+        let mut n_cached = 0usize;
+        for (ji, job) in jobs.iter().enumerate() {
+            // Dead rows (spent deadline / preset cancel) stay on the
+            // executed path so they take the same all-dead fast path
+            // as the uncached build — and a dead leader never absorbs
+            // a live follower.
+            let dead = now >= deadlines[ji] || job.cancelled();
+            let role = if job.temperature != 0.0 || dead {
+                Role::Live
+            } else if let Some(&leader) = leader_of.get(&(job.kind, job.tokens.as_slice())) {
+                // counted before the cache lookup: 8 identical jobs in
+                // one round are 1 miss + 7 hits, not 8 misses
+                cache.metrics.hits.inc();
+                Role::Follower(leader)
+            } else if let Some(natural) = cache.lookup_gen(job.kind, &job.tokens) {
+                Role::Replay(natural)
+            } else {
+                leader_of.insert((job.kind, job.tokens.as_slice()), ji);
+                Role::Live
+            };
+            if !matches!(role, Role::Live) {
+                n_cached += 1;
+            }
+            roles.push(role);
+        }
+
+        if n_cached == 0 {
+            // nothing to replay: execute as usual, keeping natural rows
+            // so this round's temp-0 leaders seed the cache
+            let mut naturals: Vec<Option<Vec<u32>>> = vec![None; jobs.len()];
+            let results = self.generate_executed(jobs, deadlines, Some(&mut naturals))?;
+            for (ji, job) in jobs.iter().enumerate() {
+                if job.temperature == 0.0 {
+                    if let Some(nat) = naturals[ji].take() {
+                        cache.insert_gen(job.kind, &job.tokens, &nat, stamp);
+                    }
+                }
+            }
+            return Ok(results);
+        }
+
+        // Execute only the live subset — cached rows are subtracted
+        // from the batch plan entirely (smaller buckets, fewer charged
+        // decode steps), which is the whole speed win.
+        let mut live_jobs: Vec<GenJob> = Vec::with_capacity(jobs.len() - n_cached);
+        let mut live_deadlines: Vec<f64> = Vec::with_capacity(jobs.len() - n_cached);
+        let mut live_pos: Vec<Option<usize>> = vec![None; jobs.len()];
+        for (ji, role) in roles.iter().enumerate() {
+            if matches!(role, Role::Live) {
+                live_pos[ji] = Some(live_jobs.len());
+                live_jobs.push(jobs[ji].clone());
+                live_deadlines.push(deadlines[ji]);
+            }
+        }
+        let mut naturals: Vec<Option<Vec<u32>>> = vec![None; live_jobs.len()];
+        let live_results =
+            self.generate_executed(&live_jobs, &live_deadlines, Some(&mut naturals))?;
+
+        let mut results: Vec<Option<GenResult>> = vec![None; jobs.len()];
+        for (ji, job) in jobs.iter().enumerate() {
+            if let Some(p) = live_pos[ji] {
+                if job.temperature == 0.0 {
+                    if let Some(nat) = naturals[p].as_deref() {
+                        cache.insert_gen(job.kind, &job.tokens, nat, stamp);
+                    }
+                }
+                results[ji] = Some(live_results[p].clone());
+            }
+        }
+        for (ji, role) in roles.iter().enumerate() {
+            let natural = match role {
+                Role::Live => continue,
+                Role::Replay(nat) => Some(nat.clone()),
+                Role::Follower(leader) => live_pos[*leader].and_then(|p| naturals[p].clone()),
+            };
+            results[ji] = Some(self.replay_row(&cache, &jobs[ji], deadlines[ji], natural));
+        }
+        Ok(results
+            .into_iter()
+            .map(|r| r.expect("every job is live, replayed or deduped"))
+            .collect())
+    }
+
+    /// Serve one cached or deduplicated row: the same cap/deadline/
+    /// cancel cut an executed row gets, but zero decode steps charged —
+    /// the clock does not move ([`cut_replayed_row`]). A follower whose
+    /// leader emitted nothing (its plan was already dead by dispatch
+    /// time) gets the same empty preempted result the leader got.
+    fn replay_row(
+        &self,
+        cache: &EngineCache,
+        job: &GenJob,
+        deadline_ms: f64,
+        natural: Option<Vec<u32>>,
+    ) -> GenResult {
+        let Some(natural) = natural else {
+            self.metrics.preempted_rows.inc();
+            return GenResult {
+                tokens: Vec::new(),
+                call_ms: 0.0,
+                batch_size: 1,
+                preempted: true,
+            };
+        };
+        let budget = RowBudget {
+            natural_len: natural.len(),
+            cap: job.max_new_tokens.unwrap_or(usize::MAX),
+            deadline_ms,
+            cancel: job.cancel.clone(),
+        };
+        let cut = cut_replayed_row(&budget, self.clock.now_ms());
+        cache.metrics.decode_steps_saved.add(cut.emitted as u64);
+        self.metrics.tokens_generated.add(cut.emitted as u64);
+        if cut.preempted {
+            self.metrics.preempted_rows.inc();
+        }
+        GenResult {
+            tokens: natural[..cut.emitted].to_vec(),
+            call_ms: 0.0,
+            batch_size: 1,
+            preempted: cut.preempted,
+        }
+    }
+
+    /// The uncached execution path: bin-packed EDF plans against the
+    /// backend, with full decode accounting. When `naturals` is given
+    /// (cache enabled), each executed row's full pre-cut output is
+    /// stored there so the caller can seed the cache — entries stay
+    /// `None` for rows whose plan was skipped as all-dead.
+    fn generate_executed(
+        &mut self,
+        jobs: &[GenJob],
+        deadlines: &[f64],
+        mut naturals: Option<&mut Vec<Option<Vec<u32>>>>,
+    ) -> Result<Vec<GenResult>> {
         debug_assert_eq!(jobs.len(), deadlines.len());
         // bin-packed plans, dispatched earliest-deadline-first
         let plans = plan_batches_edf(
@@ -289,7 +477,7 @@ impl EngineThread {
             self.backend.deadline_hint(plan_deadline);
 
             let t0 = self.clock.now_ms();
-            let rows = self.backend.generate(plan, &prompts)?;
+            let mut rows = self.backend.generate(plan, &prompts)?;
             if rows.len() < plan.job_indices.len() {
                 return Err(Error::Engine(format!(
                     "backend generated {} of {} rows",
@@ -366,6 +554,11 @@ impl EngineThread {
                     batch_size: plan.job_indices.len(),
                     preempted: cuts[row].preempted,
                 });
+                if let Some(nat) = naturals.as_deref_mut() {
+                    // the full pre-cut row: what the cache stores, so a
+                    // later hit can be re-cut against *its* budget
+                    nat[ji] = Some(std::mem::take(&mut rows[row]));
+                }
             }
         }
         Ok(results
@@ -397,6 +590,59 @@ impl EngineThread {
     }
 
     fn prm_score(&mut self, prefixes: &[Vec<u32>]) -> Result<Vec<f32>> {
+        let Some(cache) = self.cache.clone() else {
+            return self.prm_executed(prefixes);
+        };
+        // Cached rows are subtracted from the batch *before* bin-
+        // packing, so a round of mostly-known prefixes packs into
+        // smaller buckets. Backends truncate prefixes to `prm_len`, so
+        // the key does too: a longer prefix with an identical scored
+        // window is still a hit.
+        let stamp = cache.generation();
+        let l = self.shapes.prm_len;
+        let mut out: Vec<Option<f32>> = vec![None; prefixes.len()];
+        let mut leader_of: HashMap<&[u32], usize> = HashMap::new();
+        let mut followers: Vec<(usize, usize)> = Vec::new();
+        let mut miss_rows: Vec<usize> = Vec::new();
+        for (i, p) in prefixes.iter().enumerate() {
+            let window = &p[..p.len().min(l)];
+            if let Some(&leader) = leader_of.get(window) {
+                // intra-round dedup, counted before the cache lookup
+                cache.metrics.hits.inc();
+                followers.push((i, leader));
+            } else {
+                match cache.lookup_score(&ScoreKey::Prm(window.to_vec())) {
+                    Some(ScoreValue::Prm(s)) => out[i] = Some(s),
+                    _ => {
+                        leader_of.insert(window, i);
+                        miss_rows.push(i);
+                    }
+                }
+            }
+        }
+        if !miss_rows.is_empty() {
+            let missing: Vec<Vec<u32>> =
+                miss_rows.iter().map(|&i| prefixes[i].clone()).collect();
+            let scores = self.prm_executed(&missing)?;
+            for (&i, &s) in miss_rows.iter().zip(scores.iter()) {
+                let window = &prefixes[i][..prefixes[i].len().min(l)];
+                cache.insert_score(ScoreKey::Prm(window.to_vec()), ScoreValue::Prm(s), stamp);
+                out[i] = Some(s);
+            }
+        }
+        for (i, leader) in followers {
+            out[i] = out[leader];
+        }
+        Ok(out
+            .into_iter()
+            .map(|s| s.expect("every prefix scored"))
+            .collect())
+    }
+
+    /// The uncached PRM scoring path: bin-packed calls with full cost
+    /// charges. With the cache enabled only the misses come through
+    /// here.
+    fn prm_executed(&mut self, prefixes: &[Vec<u32>]) -> Result<Vec<f32>> {
         let l = self.shapes.prm_len;
         let mut scores = Vec::with_capacity(prefixes.len());
         let bins = pack_bins(prefixes.len(), &self.shapes.batch_buckets);
@@ -455,6 +701,54 @@ impl EngineThread {
     }
 
     fn embed(&mut self, kind: EmbedKind, queries: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        let Some(cache) = self.cache.clone() else {
+            return self.embed_executed(kind, queries);
+        };
+        let stamp = cache.generation();
+        let mut out: Vec<Option<Vec<f32>>> = vec![None; queries.len()];
+        let mut leader_of: HashMap<&[u32], usize> = HashMap::new();
+        let mut followers: Vec<(usize, usize)> = Vec::new();
+        let mut miss_rows: Vec<usize> = Vec::new();
+        for (i, q) in queries.iter().enumerate() {
+            if let Some(&leader) = leader_of.get(q.as_slice()) {
+                cache.metrics.hits.inc();
+                followers.push((i, leader));
+            } else {
+                match cache.lookup_score(&ScoreKey::Embed(kind, q.clone())) {
+                    Some(ScoreValue::Embed(v)) => out[i] = Some(v),
+                    _ => {
+                        leader_of.insert(q.as_slice(), i);
+                        miss_rows.push(i);
+                    }
+                }
+            }
+        }
+        if !miss_rows.is_empty() {
+            let missing: Vec<Vec<u32>> =
+                miss_rows.iter().map(|&i| queries[i].clone()).collect();
+            let vecs = self.embed_executed(kind, &missing)?;
+            for (&i, v) in miss_rows.iter().zip(vecs.into_iter()) {
+                cache.insert_score(
+                    ScoreKey::Embed(kind, queries[i].clone()),
+                    ScoreValue::Embed(v.clone()),
+                    stamp,
+                );
+                out[i] = Some(v);
+            }
+        }
+        for (i, leader) in followers {
+            out[i] = out[leader].clone();
+        }
+        Ok(out
+            .into_iter()
+            .map(|v| v.expect("every query embedded"))
+            .collect())
+    }
+
+    /// The uncached embedding path: bin-packed calls with full cost
+    /// charges. With the cache enabled only the misses come through
+    /// here.
+    fn embed_executed(&mut self, kind: EmbedKind, queries: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
         let l = self.shapes.query_len;
         let mut out = Vec::with_capacity(queries.len());
         let bins = pack_bins(queries.len(), &self.shapes.batch_buckets);
@@ -491,6 +785,9 @@ impl EngineThread {
     fn info(&self) -> Value {
         let mut v = self.backend.describe();
         v.set("metrics", self.metrics.to_json());
+        if let Some(c) = &self.cache {
+            v.set("cache", c.to_json());
+        }
         // the full shape contract — the engine server's handshake ack
         // forwards this object verbatim, so every field the client-side
         // EngineShapes needs must be here

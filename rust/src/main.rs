@@ -48,8 +48,10 @@ fn print_help() {
                         [--remote host:port[,host:port...]]\n\
                         [--deadline-ms X] [--max-tokens N]\n\
                         [--budget-mix W:SPEC,... e.g. 30:d500,30:d5000,40:unlimited]\n\
+                        [--cache] [--cache-entries N] [--cache-shards N]\n\
            engine-serve [--config F] [--addr HOST:PORT] [--backend device|sim]\n\
                         [--engines N] [--sim]\n\
+                        [--cache] [--cache-entries N] [--cache-shards N]\n\
            pipeline     [--config F] [--artifacts DIR] [--out DIR] [--quick]\n\
            info         [--artifacts DIR]"
     );

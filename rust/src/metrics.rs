@@ -209,6 +209,55 @@ impl EngineMetrics {
     }
 }
 
+/// Counters for the cross-request cache tier
+/// ([`crate::engine::cache::EngineCache`]): lookup outcomes, LRU
+/// evictions, probe-swap invalidations, and the decode work that cache
+/// replays avoided. One bundle per cache (shared by every engine of a
+/// pool), surfaced in engine `info()`, the pool report and the serve
+/// report.
+#[derive(Debug, Default)]
+pub struct CacheMetrics {
+    /// Lookups served from the cache — exact generation hits, score
+    /// hits, and intra-round duplicates that rode a leader's call.
+    pub hits: Counter,
+    /// Lookups that went to the backend (and seeded an insert).
+    pub misses: Counter,
+    /// Entries dropped by per-shard LRU eviction.
+    pub evictions: Counter,
+    /// Probe-swap invalidations (`probe_load` / `probe_train`).
+    pub invalidations: Counter,
+    /// Decode steps the engine did *not* execute because a generation
+    /// row replayed from the cache (the per-row emitted lengths; the
+    /// clock is never charged for these).
+    pub decode_steps_saved: Counter,
+}
+
+impl CacheMetrics {
+    pub fn new() -> CacheMetrics {
+        CacheMetrics::default()
+    }
+
+    /// hits / (hits + misses); 0 before any lookup.
+    pub fn hit_fraction(&self) -> f64 {
+        let (h, m) = (self.hits.get(), self.misses.get());
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("hits", self.hits.get())
+            .with("misses", self.misses.get())
+            .with("hit_fraction", self.hit_fraction())
+            .with("evictions", self.evictions.get())
+            .with("invalidations", self.invalidations.get())
+            .with("decode_steps_saved", self.decode_steps_saved.get())
+    }
+}
+
 /// Per-engine routing counters inside a [`PoolMetrics`].
 #[derive(Debug, Default)]
 pub struct PoolEngineMetrics {
@@ -401,6 +450,20 @@ mod tests {
         assert_eq!(per[1].req_f64("rows_submitted").unwrap(), 8.0);
         assert_eq!(per[0].req_f64("submits").unwrap(), 0.0);
         assert_eq!(per[0].req_f64("rejected_submits").unwrap(), 1.0);
+    }
+
+    #[test]
+    fn cache_metrics_hit_fraction() {
+        let m = CacheMetrics::new();
+        assert_eq!(m.hit_fraction(), 0.0); // no lookups yet
+        m.hits.add(3);
+        m.misses.add(1);
+        m.decode_steps_saved.add(12);
+        assert!((m.hit_fraction() - 0.75).abs() < 1e-12);
+        let v = m.to_json();
+        assert_eq!(v.req_f64("hits").unwrap(), 3.0);
+        assert!((v.req_f64("hit_fraction").unwrap() - 0.75).abs() < 1e-12);
+        assert_eq!(v.req_f64("decode_steps_saved").unwrap(), 12.0);
     }
 
     #[test]

@@ -386,20 +386,38 @@ fn adaptive_mode(cfg: &Config, args: &Args, handle: &EngineHandle) -> Result<Mod
     Ok(Mode::Adaptive(router, lambdas))
 }
 
+/// Shared `--cache` / `--cache-entries` / `--cache-shards` handling for
+/// `serve` and `engine-serve`: the cross-request cache tier
+/// (`docs/caching.md`), default-off. `--cache-entries`/`--cache-shards`
+/// imply `--cache`.
+fn apply_cache_args(args: &Args, cfg: &mut Config) -> Result<()> {
+    if args.flag("cache")
+        || args.opt_str("cache-entries").is_some()
+        || args.opt_str("cache-shards").is_some()
+    {
+        cfg.engine.cache.enabled = true;
+    }
+    cfg.engine.cache.max_entries = args.usize_or("cache-entries", cfg.engine.cache.max_entries)?;
+    cfg.engine.cache.shards = args.usize_or("cache-shards", cfg.engine.cache.shards)?;
+    Ok(())
+}
+
 pub fn cmd_serve(raw: &[String]) -> Result<()> {
     let values: Vec<&str> = [
         COMMON_VALUES,
         &[
             "rate", "requests", "workers", "lambda-t", "lambda-l", "strategy", "embedding",
             "deadline-ms", "max-tokens", "budget-mix", "engines", "backend", "remote",
+            "cache-entries", "cache-shards",
         ],
     ]
     .concat();
-    let args = Args::parse(raw, &values, &["sim", "closed", "no-warmup"])?;
+    let args = Args::parse(raw, &values, &["sim", "closed", "no-warmup", "cache"])?;
     let mut cfg = load_config(&args)?;
     if args.flag("sim") {
         cfg.engine.sim_clock = true;
     }
+    apply_cache_args(&args, &mut cfg)?;
     if let Some(b) = args.opt_str("backend") {
         cfg.engine.backend = BackendKind::parse(b)?;
     }
@@ -538,12 +556,17 @@ pub fn cmd_serve(raw: &[String]) -> Result<()> {
 /// `ttc engine-serve`: expose a local engine fleet (device or sim) over
 /// TCP for remote `ttc serve --remote` clients — see `docs/remote.md`.
 pub fn cmd_engine_serve(raw: &[String]) -> Result<()> {
-    let values: Vec<&str> = [COMMON_VALUES, &["addr", "backend", "engines"]].concat();
-    let args = Args::parse(raw, &values, &["sim"])?;
+    let values: Vec<&str> = [
+        COMMON_VALUES,
+        &["addr", "backend", "engines", "cache-entries", "cache-shards"],
+    ]
+    .concat();
+    let args = Args::parse(raw, &values, &["sim", "cache"])?;
     let mut cfg = load_config(&args)?;
     if args.flag("sim") {
         cfg.engine.backend = BackendKind::Sim;
     }
+    apply_cache_args(&args, &mut cfg)?;
     if let Some(b) = args.opt_str("backend") {
         cfg.engine.backend = BackendKind::parse(b)?;
     }

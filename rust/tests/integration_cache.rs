@@ -1,0 +1,277 @@
+//! The cross-request cache tier end-to-end, on the artifact-free sim
+//! backend (so this suite runs engine-full on a fresh checkout):
+//!
+//! * cache-on == cache-off results at temperature 0, for every
+//!   registered decoding method, across pool sizes 1, 2 and 4 — the
+//!   cache is a pure speed multiplier, never a behavior change;
+//! * the same equivalence through the loopback remote path (the cache
+//!   sits client-side in front of `RemoteBackend`, so remote replies
+//!   count as fills);
+//! * a shared-stem workload actually hits: `cache_hits > 0` and
+//!   `decode_steps_saved > 0` in the pool report;
+//! * repeated PRM / embed batches are served from the score cache and
+//!   the counters surface through `info()` and the pool report.
+
+use ttc::config::{BackendKind, Config};
+use ttc::engine::EnginePool;
+use ttc::strategies::stepper::{Stepper, Ticket};
+use ttc::strategies::{registry, Budget, Executor, Outcome, Strategy, StrategyParams};
+use ttc::util::rng::Rng;
+
+fn pool_with_cache(engines: usize, cache: bool) -> (EnginePool, Executor) {
+    let mut cfg = Config::default();
+    cfg.engine.backend = BackendKind::Sim;
+    cfg.engine.sim_clock = true; // deterministic modeled latencies
+    cfg.engine.engines = engines;
+    cfg.engine.cache.enabled = cache;
+    let pool = EnginePool::start(&cfg).unwrap();
+    // temperature 0: generation is a pure function of the prompt, so a
+    // replayed row must be byte-identical to a fresh decode
+    let executor = Executor::new(pool.handle(), pool.clock.clone(), 0.0);
+    (pool, executor)
+}
+
+/// Everything except latency must match (latencies differ because the
+/// cache's whole purpose is to not advance the clock for cached rows).
+fn assert_same_result(a: &Outcome, b: &Outcome, label: &str) {
+    assert_eq!(a.answer, b.answer, "{label}: answer diverged");
+    assert_eq!(a.chosen, b.chosen, "{label}: chosen diverged");
+    assert_eq!(a.tokens, b.tokens, "{label}: tokens diverged");
+    assert_eq!(a.engine_calls, b.engine_calls, "{label}: engine calls diverged");
+    assert_eq!(a.rounds, b.rounds, "{label}: rounds diverged");
+    assert_eq!(
+        a.budget_exhausted, b.budget_exhausted,
+        "{label}: budget_exhausted diverged"
+    );
+    assert_eq!(a.stopped_early, b.stopped_early, "{label}: stopped_early diverged");
+    // token-cap preemption is time-independent, so it must agree too
+    assert_eq!(a.preempted, b.preempted, "{label}: preempted diverged");
+}
+
+/// Per-method cases with no deadlines, so outcomes are time-independent
+/// and comparable between a cached and an uncached deployment.
+fn cases() -> Vec<(Strategy, Budget, String)> {
+    let mut rng = Rng::new(0xCACE, 0);
+    let mut cases: Vec<(Strategy, Budget, String)> = Vec::new();
+    for method in registry::all() {
+        let params = if method.uses_rounds() {
+            StrategyParams::beam(
+                rng.range(1, 4) as usize,
+                rng.range(1, 3) as usize,
+                rng.range(6, 16) as usize,
+            )
+        } else {
+            StrategyParams::parallel(rng.range(1, 6) as usize)
+        };
+        let budget = if rng.below(2) == 0 {
+            Budget::unlimited()
+        } else {
+            Budget::unlimited().with_max_tokens(rng.range(8, 64) as usize)
+        };
+        let query = format!("Q:7+{}-2+8=?\n", rng.range(0, 9));
+        cases.push((Strategy::new(method.name(), params), budget, query));
+    }
+    cases
+}
+
+#[test]
+fn cache_on_equals_cache_off_at_temp0_for_pool_sizes_1_2_4() {
+    let cases = cases();
+
+    // reference: cache OFF, one engine, blocking, one request at a time
+    let (_p0, uncached) = pool_with_cache(1, false);
+    let reference: Vec<Outcome> = cases
+        .iter()
+        .map(|(s, b, q)| uncached.run_budgeted(s, q, b.clone()).unwrap())
+        .collect();
+
+    for engines in [1usize, 2, 4] {
+        let (pool, executor) = pool_with_cache(engines, true);
+        let mut stepper = Stepper::new(executor.clone());
+        // all cases in flight concurrently, and the query set repeats
+        // prompts across requests — replayed rows must still reproduce
+        // the uncached outcomes exactly
+        for (i, (s, b, q)) in cases.iter().enumerate() {
+            stepper
+                .admit(Ticket {
+                    query: q.clone(),
+                    strategy: s.clone(),
+                    budget: b.clone(),
+                    tag: i as u64,
+                })
+                .unwrap();
+        }
+        stepper.run_to_completion().unwrap();
+        let mut done = stepper.drain_completed();
+        assert_eq!(done.len(), cases.len());
+        done.sort_by_key(|c| c.tag);
+        for (c, r) in done.iter().zip(&reference) {
+            assert_same_result(
+                &c.outcome,
+                r,
+                &format!("{} cached on {engines} engine(s)", c.strategy_id),
+            );
+        }
+        // the cache must have been exercised, not just bypassed
+        let report = pool.report();
+        let cache = report.req("cache").expect("cache section in pool report");
+        let lookups =
+            cache.req_f64("hits").unwrap_or(0.0) + cache.req_f64("misses").unwrap_or(0.0);
+        assert!(lookups > 0.0, "cache saw no lookups on {engines} engine(s)");
+    }
+}
+
+#[test]
+fn shared_stem_workload_reports_hits_and_decode_steps_saved() {
+    let (pool, executor) = pool_with_cache(2, true);
+    let mut stepper = Stepper::new(executor.clone());
+    // 8 concurrent requests sharing one stem: the first decodes, the
+    // rest dedup/replay
+    for i in 0..8u64 {
+        stepper
+            .admit(Ticket {
+                query: "Q:7+3-2+8=?\n".to_string(),
+                strategy: Strategy::beam(4, 2, 12),
+                budget: Budget::unlimited(),
+                tag: i,
+            })
+            .unwrap();
+    }
+    stepper.run_to_completion().unwrap();
+    let done = stepper.drain_completed();
+    assert_eq!(done.len(), 8);
+    // identical requests at temp 0 must all agree
+    for c in &done[1..] {
+        assert_same_result(&c.outcome, &done[0].outcome, "shared-stem request");
+    }
+
+    let report = pool.report();
+    let cache = report.req("cache").expect("cache section in pool report");
+    assert!(
+        cache.req_f64("hits").unwrap() > 0.0,
+        "shared-stem workload produced no cache hits: {report:?}"
+    );
+    assert!(
+        cache.req_f64("decode_steps_saved").unwrap() > 0.0,
+        "shared-stem workload saved no decode steps: {report:?}"
+    );
+    assert!(cache.req_f64("hit_fraction").unwrap() > 0.0);
+}
+
+#[test]
+fn score_caches_serve_repeats_and_surface_in_info() {
+    use ttc::engine::EmbedKind;
+
+    let (pool, executor) = pool_with_cache(1, true);
+    let handle = executor.engine.clone();
+    let prefixes: Vec<Vec<u32>> = (0..5).map(|i| vec![1u32, 2, 3, 4, i as u32]).collect();
+    let first = handle.prm_score(prefixes.clone()).unwrap();
+    let second = handle.prm_score(prefixes.clone()).unwrap();
+    assert_eq!(first, second, "cached PRM scores must be byte-identical");
+
+    let queries: Vec<Vec<u32>> = (0..3).map(|i| vec![7u32, 8, 9, i as u32]).collect();
+    let e1 = handle.embed(EmbedKind::Pool, queries.clone()).unwrap();
+    let e2 = handle.embed(EmbedKind::Pool, queries.clone()).unwrap();
+    assert_eq!(e1, e2, "cached embeddings must be byte-identical");
+
+    // the second passes were served from the score cache
+    let report = pool.report();
+    let cache = report.req("cache").expect("cache section in pool report");
+    assert!(
+        cache.req_f64("hits").unwrap() >= (prefixes.len() + queries.len()) as f64,
+        "repeat batches should be all hits: {report:?}"
+    );
+    // the same counters surface on the engine's own info()
+    let info = handle.info().unwrap();
+    let info_cache = info.req("cache").expect("cache section in engine info");
+    assert_eq!(
+        info_cache.req_f64("hits").unwrap(),
+        cache.req_f64("hits").unwrap()
+    );
+}
+
+#[test]
+fn loopback_remote_with_client_cache_matches_uncached() {
+    use ttc::net::{LoopbackEngineServer, NetMetrics, RemoteBackend, RemoteConfig};
+    use ttc::util::clock;
+
+    // two identical client-pool-over-loopback deployments; only the
+    // client-side cache differs. The cache wraps `RemoteBackend` inside
+    // the client engine thread, so remote replies count as fills and no
+    // wire change is involved.
+    let deploy = |cache: bool| {
+        let mut server_cfg = Config::default();
+        server_cfg.engine.backend = BackendKind::Sim;
+        server_cfg.engine.sim_clock = true;
+        server_cfg.engine.engines = 1;
+        // loopback-only exception (docs/remote.md): client and servers
+        // live in one process, so all of them may share one sim clock
+        let clock = clock::sim_clock();
+        let (conn_a, server_a) =
+            LoopbackEngineServer::spawn_with_clock(&server_cfg, clock.clone()).unwrap();
+        let (conn_b, server_b) =
+            LoopbackEngineServer::spawn_with_clock(&server_cfg, clock.clone()).unwrap();
+        let connectors = [conn_a, conn_b];
+        let metrics = NetMetrics::new();
+        let remote_cfg = RemoteConfig {
+            retries: 1,
+            backoff_ms: 1.0,
+            ..RemoteConfig::default()
+        };
+        let mut client_cfg = Config::default();
+        client_cfg.engine.engines = 2;
+        client_cfg.engine.cache.enabled = cache;
+        let pool = EnginePool::start_with_factories(
+            &client_cfg,
+            clock.clone(),
+            "remote backend",
+            |i| {
+                RemoteBackend::factory(
+                    connectors[i % 2].clone(),
+                    remote_cfg.clone(),
+                    clock.clone(),
+                    metrics.clone(),
+                )
+            },
+        )
+        .unwrap();
+        let executor = Executor::new(pool.handle(), pool.clock.clone(), 0.0);
+        (pool, executor, server_a, server_b)
+    };
+
+    let run = |executor: &Executor| -> Vec<Outcome> {
+        let mut stepper = Stepper::new(executor.clone());
+        // repeated queries so the cached deployment actually replays
+        for i in 0..6u64 {
+            stepper
+                .admit(Ticket {
+                    query: format!("Q:7+{}-2+8=?\n", i % 2),
+                    strategy: Strategy::beam(3, 2, 10),
+                    budget: Budget::unlimited(),
+                    tag: i,
+                })
+                .unwrap();
+        }
+        stepper.run_to_completion().unwrap();
+        let mut done = stepper.drain_completed();
+        done.sort_by_key(|c| c.tag);
+        done.into_iter().map(|c| c.outcome).collect()
+    };
+
+    let (_pool_off, uncached, _sa1, _sb1) = deploy(false);
+    let reference = run(&uncached);
+
+    let (pool_on, cached, _sa2, _sb2) = deploy(true);
+    let got = run(&cached);
+
+    assert_eq!(reference.len(), got.len());
+    for (i, (a, b)) in got.iter().zip(&reference).enumerate() {
+        assert_same_result(a, b, &format!("remote request {i}"));
+    }
+    let report = pool_on.report();
+    let cache = report.req("cache").expect("cache section in remote pool report");
+    assert!(
+        cache.req_f64("hits").unwrap() > 0.0,
+        "remote client cache saw no hits: {report:?}"
+    );
+}
