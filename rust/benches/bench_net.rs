@@ -1,0 +1,142 @@
+//! Wire hot path: codec micro-benches (JSON vs the TTCB binary codec on
+//! a realistic 32-row generate envelope) plus a multiplexed loopback
+//! pool workload. Everything here rides the sim backend and in-process
+//! transports, so it runs (and its stats gate) on every checkout.
+//!
+//! Gated stats (see `benches/baseline.json`):
+//! * `wire_bytes_ratio_ttcb_vs_json` — ceiling 0.5: TTCB must encode
+//!   the generate envelope in at most half the JSON bytes;
+//! * `mux_inflight_peak` — floor 1: the shared connection must actually
+//!   carry correlation-id-tagged calls.
+
+use ttc::config::{BackendKind, Config, WireCodec};
+use ttc::engine::EnginePool;
+use ttc::net::{
+    LoopbackEngineServer, MuxTransport, NetMetrics, RemoteBackend, RemoteConfig, Serializer,
+    JSON, TTCB,
+};
+use ttc::strategies::stepper::{Stepper, Ticket};
+use ttc::strategies::{Budget, Executor, Strategy};
+use ttc::util::bench::{bench, header};
+use ttc::util::clock;
+use ttc::util::json::Value;
+
+fn main() {
+    header("bench_net");
+    codec_bench();
+    mux_bench();
+}
+
+/// A wire-realistic generate request: `rows` prompts of `len` tokens
+/// each, ids spread over a 32k vocab (the regime where JSON's decimal
+/// digits cost the most against TTCB's varint token runs).
+fn generate_envelope(rows: usize, len: usize) -> Value {
+    let prompts: Vec<Value> = (0..rows)
+        .map(|i| {
+            Value::Arr(
+                (0..len)
+                    .map(|j| Value::from(((i * 37 + j * 101) % 32_000) as u64))
+                    .collect(),
+            )
+        })
+        .collect();
+    Value::obj()
+        .with("op", "generate")
+        .with("kind", "full")
+        .with("temperature", 0.8)
+        .with("bucket", 32usize)
+        .with("id", 12_345usize)
+        .with("prompts", Value::Arr(prompts))
+}
+
+fn codec_bench() {
+    let envelope = generate_envelope(32, 48);
+    let json_bytes = JSON.encode(&envelope).expect("json encode");
+    let ttcb_bytes = TTCB.encode(&envelope).expect("ttcb encode");
+    // sanity: the codecs must agree before we time them
+    assert_eq!(
+        JSON.decode(&json_bytes).unwrap(),
+        TTCB.decode(&ttcb_bytes).unwrap(),
+        "codecs must roundtrip to the same value"
+    );
+
+    bench("codec_json_encode_32row", || {
+        std::hint::black_box(JSON.encode(&envelope).unwrap());
+    });
+    bench("codec_ttcb_encode_32row", || {
+        std::hint::black_box(TTCB.encode(&envelope).unwrap());
+    });
+    bench("codec_json_decode_32row", || {
+        std::hint::black_box(JSON.decode(&json_bytes).unwrap());
+    });
+    bench("codec_ttcb_decode_32row", || {
+        std::hint::black_box(TTCB.decode(&ttcb_bytes).unwrap());
+    });
+
+    println!("stat,wire_bytes_per_call_json,{}", json_bytes.len());
+    println!("stat,wire_bytes_per_call_ttcb,{}", ttcb_bytes.len());
+    println!(
+        "stat,wire_bytes_ratio_ttcb_vs_json,{}",
+        ttcb_bytes.len() as f64 / json_bytes.len() as f64
+    );
+}
+
+/// Multiplexed remote pool: 4 client engine slots sharing ONE loopback
+/// connection (binary codec negotiated), driving concurrent beam
+/// requests into a 2-engine sim fleet. The in-flight peak proves calls
+/// actually overlapped on the shared socket instead of serializing.
+fn mux_bench() {
+    let mut server_cfg = Config::default();
+    server_cfg.engine.backend = BackendKind::Sim;
+    server_cfg.engine.sim_clock = true;
+    server_cfg.engine.engines = 2;
+    server_cfg.engine.wire_codec = WireCodec::Binary;
+    // loopback-only exception (docs/remote.md): client and server live
+    // in one process, so both may share one sim clock
+    let clock = clock::sim_clock();
+    let (connector, _server) =
+        LoopbackEngineServer::spawn_with_clock(&server_cfg, clock.clone()).expect("server");
+    let transport = MuxTransport::new(
+        Box::new(connector),
+        RemoteConfig {
+            retries: 1,
+            backoff_ms: 1.0,
+            wire_codec: WireCodec::Binary,
+            ..RemoteConfig::default()
+        },
+        NetMetrics::new(),
+    );
+    let mut client_cfg = Config::default();
+    client_cfg.engine.engines = 4;
+    let pool = EnginePool::start_with_factories(&client_cfg, clock.clone(), "remote backend", |_| {
+        RemoteBackend::mux_factory(transport.clone(), clock.clone())
+    })
+    .expect("mux pool start");
+    let executor = Executor::new(pool.handle(), pool.clock.clone(), 0.0);
+
+    bench("remote_loopback_mux_4x", || {
+        let mut stepper = Stepper::new(executor.clone());
+        for i in 0..8u64 {
+            stepper
+                .admit(Ticket {
+                    query: format!("Q:7+{i}-2+8=?\n"),
+                    strategy: Strategy::beam(4, 2, 12),
+                    budget: Budget::unlimited(),
+                    tag: i,
+                })
+                .unwrap();
+        }
+        stepper.run_to_completion().unwrap();
+        std::hint::black_box(stepper.drain_completed());
+    });
+
+    let m = transport.metrics();
+    println!("stat,mux_inflight_peak,{}", m.mux_inflight_peak.get());
+    let calls = m.frames_sent.get().max(1);
+    println!(
+        "stat,wire_bytes_per_call,{}",
+        m.bytes_sent.get() as f64 / calls as f64
+    );
+    println!("stat,wire_bytes_saved_vs_json,{}", m.bytes_saved_vs_json.get());
+    println!("# mux net metrics: {}", m.to_json().dumps());
+}

@@ -39,8 +39,9 @@ pub enum BackendKind {
     /// ([`crate::engine::backend::SimBackend`]); latencies come from the
     /// sim clock's cost model.
     Sim,
-    /// A [`crate::net::RemoteBackend`] per engine slot, each dialing one
-    /// of `engine.remote_addrs` (round-robin) — the client side of `ttc
+    /// A [`crate::net::RemoteBackend`] per engine slot, slot `i` mapped
+    /// to `engine.remote_addrs[i % len]`; slots aimed at the same host
+    /// share one multiplexed connection — the client side of `ttc
     /// engine-serve` (see `docs/remote.md`).
     Remote,
 }
@@ -63,6 +64,40 @@ impl BackendKind {
             BackendKind::Device => "device",
             BackendKind::Sim => "sim",
             BackendKind::Remote => "remote",
+        }
+    }
+}
+
+/// Which payload codec the remote wire's data plane prefers (see
+/// `docs/remote.md`). The actual codec is negotiated per connection in
+/// the hello/ack handshake, so mixed fleets interoperate: a `binary`
+/// peer talking to a `json`-only peer falls back to JSON.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireCodec {
+    /// JSON only — the PR 6 wire format, and the control-plane codec in
+    /// every configuration.
+    Json,
+    /// Advertise the TTCB binary codec for the data plane (falls back
+    /// to JSON when the peer doesn't speak it).
+    Binary,
+}
+
+impl WireCodec {
+    /// Parse a CLI/config spelling (`json` | `binary`).
+    pub fn parse(s: &str) -> Result<WireCodec> {
+        match s {
+            "json" => Ok(WireCodec::Json),
+            "binary" => Ok(WireCodec::Binary),
+            other => Err(Error::Config(format!(
+                "unknown wire codec '{other}' (expected 'json' or 'binary')"
+            ))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WireCodec::Json => "json",
+            WireCodec::Binary => "binary",
         }
     }
 }
@@ -101,6 +136,9 @@ pub struct EngineConfig {
     /// Same-shard retries per remote call before the pool's failover
     /// takes over.
     pub remote_retries: usize,
+    /// Preferred data-plane codec for the remote wire (`--wire-codec`);
+    /// negotiated down to JSON when the peer doesn't speak it.
+    pub wire_codec: WireCodec,
     /// Cross-request cache tier (`docs/caching.md`); default-off so
     /// every existing path stays byte-identical unless opted in.
     pub cache: CacheConfig,
@@ -150,6 +188,7 @@ impl Default for EngineConfig {
             remote_addrs: Vec::new(),
             remote_timeout_ms: 30_000.0,
             remote_retries: 2,
+            wire_codec: WireCodec::Json,
             cache: CacheConfig::default(),
         }
     }
@@ -391,6 +430,12 @@ impl Config {
                     .ok_or_else(|| Error::Config("engine.backend must be a string".into()))?,
             )?;
         }
+        if let Some(c) = v.get("wire_codec") {
+            e.wire_codec = WireCodec::parse(
+                c.as_str()
+                    .ok_or_else(|| Error::Config("engine.wire_codec must be a string".into()))?,
+            )?;
+        }
         if let Some(c) = v.get("cache") {
             e.cache.enabled = c.opt_bool("enabled", e.cache.enabled);
             e.cache.max_entries = c.opt_usize("max_entries", e.cache.max_entries);
@@ -590,6 +635,21 @@ mod tests {
         assert_eq!(c.engine.remote_retries, 1);
         assert_eq!(BackendKind::parse("remote").unwrap().as_str(), "remote");
         let bad = parse(r#"{"engine": {"remote_addrs": [7]}}"#).unwrap();
+        assert!(c.merge_json(&bad).is_err());
+    }
+
+    #[test]
+    fn wire_codec_merge() {
+        let mut c = Config::default();
+        assert_eq!(c.engine.wire_codec, WireCodec::Json, "json must be the default");
+        let v = parse(r#"{"engine": {"wire_codec": "binary"}}"#).unwrap();
+        c.merge_json(&v).unwrap();
+        assert_eq!(c.engine.wire_codec, WireCodec::Binary);
+        assert_eq!(WireCodec::Binary.as_str(), "binary");
+        assert_eq!(WireCodec::parse("json").unwrap(), WireCodec::Json);
+        let bad = parse(r#"{"engine": {"wire_codec": "msgpack"}}"#).unwrap();
+        assert!(c.merge_json(&bad).is_err());
+        let bad = parse(r#"{"engine": {"wire_codec": 2}}"#).unwrap();
         assert!(c.merge_json(&bad).is_err());
     }
 

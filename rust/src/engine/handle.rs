@@ -583,6 +583,7 @@ impl Engine {
         let remote_cfg = crate::net::RemoteConfig {
             call_timeout_ms: cfg.engine.remote_timeout_ms,
             retries: cfg.engine.remote_retries,
+            wire_codec: cfg.engine.wire_codec,
             ..crate::net::RemoteConfig::default()
         };
         Box::new(move || -> Result<Box<dyn Backend>> {

@@ -505,6 +505,19 @@ impl EnginePool {
     }
 
     pub fn start_with_clock(cfg: &Config, clock: SharedClock) -> Result<EnginePool> {
+        // Remote pools share one multiplexed connection per distinct
+        // host instead of dialing a socket per slot: build the per-host
+        // transports once, then hand each slot its host's Arc.
+        if matches!(cfg.engine.backend, crate::config::BackendKind::Remote) {
+            let transports = crate::net::MuxTransport::per_host(&cfg.engine)?;
+            let slot_clock = clock.clone();
+            return Self::start_with_factories(cfg, clock, "remote backend", move |i| {
+                crate::net::RemoteBackend::mux_factory(
+                    transports[i % transports.len()].clone(),
+                    slot_clock.clone(),
+                )
+            });
+        }
         let n = cfg.engine.engines.max(1);
         // one cache for the whole pool: a stem decoded (or a prefix
         // scored) on any engine is a hit on every other

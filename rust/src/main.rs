@@ -45,12 +45,12 @@ fn print_help() {
            serve        [--config F] [--artifacts DIR] [--rate R] [--requests N]\n\
                         [--lambda-t X] [--lambda-l X] [--strategy S] [--sim]\n\
                         [--engines N] [--backend device|sim|remote]\n\
-                        [--remote host:port[,host:port...]]\n\
+                        [--remote host:port[,host:port...]] [--wire-codec json|binary]\n\
                         [--deadline-ms X] [--max-tokens N]\n\
                         [--budget-mix W:SPEC,... e.g. 30:d500,30:d5000,40:unlimited]\n\
                         [--cache] [--cache-entries N] [--cache-shards N]\n\
            engine-serve [--config F] [--addr HOST:PORT] [--backend device|sim]\n\
-                        [--engines N] [--sim]\n\
+                        [--engines N] [--sim] [--wire-codec json|binary]\n\
                         [--cache] [--cache-entries N] [--cache-shards N]\n\
            pipeline     [--config F] [--artifacts DIR] [--out DIR] [--quick]\n\
            info         [--artifacts DIR]"

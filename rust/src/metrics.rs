@@ -24,6 +24,12 @@ impl Counter {
     pub fn get(&self) -> u64 {
         self.value.load(Ordering::Relaxed)
     }
+    /// Raise the counter to `n` if `n` is larger than the current value.
+    /// Used for high-water marks (e.g. peak in-flight calls on a
+    /// multiplexed connection) rather than monotone accumulation.
+    pub fn record_max(&self, n: u64) {
+        self.value.fetch_max(n, Ordering::Relaxed);
+    }
 }
 
 /// Latency histogram: keeps raw samples (bounded) for exact percentiles.

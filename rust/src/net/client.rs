@@ -1,11 +1,13 @@
 //! [`RemoteBackend`]: the existing [`Backend`] trait over a framed
 //! connection to a `ttc engine-serve` fleet.
 //!
-//! One `RemoteBackend` owns one connection to one remote shard; the
-//! [`crate::engine::EnginePool`] runs N of them (one per engine slot)
-//! to shard across servers. Faults are handled in two tiers:
+//! A `RemoteBackend` is a thin request-builder over a shared
+//! [`super::mux::MuxTransport`]: the transport owns the connection,
+//! the hello/ack codec + mux negotiation and the retry loop, and N
+//! engine slots pointed at the same host share one multiplexed socket
+//! (see [`super::mux`]). Faults are handled in two tiers:
 //!
-//! * **in here** — transient faults (refused dials, dropped
+//! * **in the transport** — transient faults (refused dials, dropped
 //!   connections, timeouts) get bounded retry-with-backoff against the
 //!   same endpoint, reconnecting each time;
 //! * **above** — when retries are exhausted the call fails with a
@@ -17,8 +19,8 @@
 //! so retrying — on this shard or another — is always safe.
 
 use std::sync::Arc;
-use std::time::Duration;
 
+use crate::config::WireCodec;
 use crate::engine::batcher::BatchPlan;
 use crate::engine::protocol::{EmbedKind, ProbeTrainReport};
 use crate::engine::{Backend, BackendFactory, EngineShapes};
@@ -26,8 +28,8 @@ use crate::error::{Error, Result};
 use crate::util::clock::SharedClock;
 use crate::util::json::Value;
 
-use super::serializer::{JsonCodec, Serializer};
-use super::transport::{recv_msg, send_msg, Conn, Connector, NetMetrics};
+use super::mux::MuxTransport;
+use super::transport::{Connector, NetMetrics};
 use super::wire;
 
 /// Client-side fault-handling knobs.
@@ -43,6 +45,9 @@ pub struct RemoteConfig {
     pub retries: usize,
     /// Initial backoff between retries (doubles per retry).
     pub backoff_ms: f64,
+    /// Preferred data-plane codec; the handshake negotiates down to
+    /// JSON when the peer doesn't speak it.
+    pub wire_codec: WireCodec,
 }
 
 impl Default for RemoteConfig {
@@ -52,17 +57,15 @@ impl Default for RemoteConfig {
             connect_timeout_ms: 5_000.0,
             retries: 2,
             backoff_ms: 10.0,
+            wire_codec: WireCodec::Json,
         }
     }
 }
 
 /// A [`Backend`] whose bucket-shaped calls execute on a remote fleet.
 pub struct RemoteBackend {
-    connector: Box<dyn Connector>,
-    codec: JsonCodec,
-    cfg: RemoteConfig,
+    transport: Arc<MuxTransport>,
     clock: SharedClock,
-    conn: Option<Box<dyn Conn>>,
     shapes: EngineShapes,
     remote_backend: String,
     remote_engines: usize,
@@ -73,32 +76,38 @@ pub struct RemoteBackend {
 }
 
 impl RemoteBackend {
-    /// Dial and handshake eagerly, so a bad address, version skew or
-    /// probe-layout mismatch fails engine startup with a clear error
-    /// instead of poisoning the first request.
+    /// Dial and handshake eagerly over a private transport, so a bad
+    /// address, version skew or probe-layout mismatch fails engine
+    /// startup with a clear error instead of poisoning the first
+    /// request.
     pub fn connect(
         connector: Box<dyn Connector>,
         cfg: RemoteConfig,
         clock: SharedClock,
         metrics: Arc<NetMetrics>,
     ) -> Result<RemoteBackend> {
-        let codec = JsonCodec;
-        let (conn, backend, engines, shapes) = Self::dial(&*connector, &codec, &cfg, &metrics)?;
+        Self::over(MuxTransport::new(connector, cfg, metrics), clock)
+    }
+
+    /// Build a backend over an existing (possibly shared) transport.
+    /// This is how N pool slots multiplex one socket: they all hold the
+    /// same `Arc<MuxTransport>`.
+    pub fn over(transport: Arc<MuxTransport>, clock: SharedClock) -> Result<RemoteBackend> {
+        let ack = transport.ensure()?;
+        let metrics = transport.metrics().clone();
         Ok(RemoteBackend {
-            connector,
-            codec,
-            cfg,
+            transport,
             clock,
-            conn: Some(conn),
-            shapes,
-            remote_backend: backend,
-            remote_engines: engines,
+            shapes: ack.shapes,
+            remote_backend: ack.backend,
+            remote_engines: ack.engines,
             metrics,
             next_deadline_ms: f64::INFINITY,
         })
     }
 
-    /// A [`BackendFactory`] for [`crate::engine::EnginePool`] slots.
+    /// A [`BackendFactory`] for [`crate::engine::EnginePool`] slots with
+    /// a private connection per slot.
     pub fn factory(
         connector: impl Connector + 'static,
         cfg: RemoteConfig,
@@ -111,73 +120,16 @@ impl RemoteBackend {
         })
     }
 
-    /// One dial + handshake. Returns the live connection and the
-    /// server's identity/shapes.
-    fn dial(
-        connector: &dyn Connector,
-        codec: &dyn Serializer,
-        cfg: &RemoteConfig,
-        metrics: &NetMetrics,
-    ) -> Result<(Box<dyn Conn>, String, usize, EngineShapes)> {
-        let mut conn = connector.connect()?;
-        conn.set_read_timeout(Some(Duration::from_secs_f64(
-            (cfg.call_timeout_ms / 1e3).max(1e-3),
-        )))
-        .map_err(|e| Error::net(format!("cannot set read timeout: {e}")))?;
-        metrics.reconnects.inc();
-        let hello = wire::hello(super::frame::PROTOCOL_VERSION, wire::ProbeLayout::current());
-        send_msg(conn.as_mut(), codec, &hello, Some(metrics))?;
-        let ack = recv_msg(conn.as_mut(), codec, Some(metrics))?;
-        let (backend, engines, shapes) = wire::check_ack(&ack)?;
-        Ok((conn, backend, engines, shapes))
+    /// A [`BackendFactory`] over a shared transport: every slot built
+    /// from the same `Arc` shares one multiplexed connection.
+    pub fn mux_factory(transport: Arc<MuxTransport>, clock: SharedClock) -> BackendFactory {
+        Box::new(move || {
+            RemoteBackend::over(transport, clock).map(|b| Box::new(b) as Box<dyn Backend>)
+        })
     }
 
-    /// Execute one request with bounded retry on transient faults.
-    fn call(&mut self, req: &Value) -> Result<Value> {
-        let mut backoff_ms = self.cfg.backoff_ms;
-        let mut last: Option<Error> = None;
-        for attempt in 0..=self.cfg.retries {
-            if attempt > 0 {
-                self.metrics.retries.inc();
-                if backoff_ms > 0.0 {
-                    std::thread::sleep(Duration::from_secs_f64(backoff_ms / 1e3));
-                }
-                backoff_ms *= 2.0;
-            }
-            match self.try_once(req) {
-                Ok(v) => return Ok(v),
-                Err(e) if e.is_transient_net() => {
-                    // The connection is suspect: drop it so the next
-                    // attempt redials.
-                    self.conn = None;
-                    last = Some(e);
-                }
-                Err(e) => return Err(e),
-            }
-        }
-        let last = last.map(|e| e.to_string()).unwrap_or_default();
-        // Still transient: the *shard* is down, but the pool can rescue
-        // the request on another one.
-        Err(Error::net_transient(format!(
-            "{} unreachable after {} attempt(s): {last}",
-            self.connector.addr(),
-            self.cfg.retries + 1
-        )))
-    }
-
-    fn try_once(&mut self, req: &Value) -> Result<Value> {
-        if self.conn.is_none() {
-            let (conn, backend, engines, shapes) =
-                Self::dial(&*self.connector, &self.codec, &self.cfg, &self.metrics)?;
-            self.remote_backend = backend;
-            self.remote_engines = engines;
-            self.shapes = shapes;
-            self.conn = Some(conn);
-        }
-        let conn = self.conn.as_mut().expect("connection just established");
-        send_msg(conn.as_mut(), &self.codec, req, Some(&self.metrics))?;
-        let resp = recv_msg(conn.as_mut(), &self.codec, Some(&self.metrics))?;
-        wire::unwrap_response(resp)
+    fn call(&mut self, req: Value) -> Result<Value> {
+        self.transport.call(req)
     }
 
     /// Decode an array-of-token-rows response field, checking arity.
@@ -207,11 +159,14 @@ impl Backend for RemoteBackend {
     }
 
     fn describe(&self) -> Value {
+        let (codec, mux) = self.transport.wire_status();
         Value::obj()
             .with("backend", "remote")
-            .with("addr", self.connector.addr())
+            .with("addr", self.transport.addr())
             .with("remote_backend", self.remote_backend.as_str())
             .with("remote_engines", self.remote_engines)
+            .with("wire_codec", codec)
+            .with("mux", mux)
             .with("net", self.metrics.to_json())
     }
 
@@ -239,8 +194,9 @@ impl Backend for RemoteBackend {
             let rel = (deadline - self.clock.now_ms()).max(0.0);
             req = req.with("deadline_rel_ms", rel);
         }
-        let resp = self.call(&req)?;
-        Self::expect_rows(&resp, "rows", prompts.len())
+        let want = prompts.len();
+        let resp = self.call(req)?;
+        Self::expect_rows(&resp, "rows", want)
     }
 
     fn prm_score(&mut self, bucket: usize, prefixes: &[Vec<u32>]) -> Result<Vec<f32>> {
@@ -251,7 +207,7 @@ impl Backend for RemoteBackend {
                 "prefixes",
                 Value::Arr(prefixes.iter().map(|p| wire::tokens_to_value(p)).collect()),
             );
-        let resp = self.call(&req)?;
+        let resp = self.call(req)?;
         let scores = wire::f32s_from_value(resp.req("scores")?, "scores")?;
         if scores.len() != prefixes.len() {
             return Err(Error::net(format!(
@@ -272,7 +228,7 @@ impl Backend for RemoteBackend {
                 "queries",
                 Value::Arr(queries.iter().map(|q| wire::tokens_to_value(q)).collect()),
             );
-        let resp = self.call(&req)?;
+        let resp = self.call(req)?;
         let vectors = resp
             .req_arr("vectors")?
             .iter()
@@ -293,7 +249,7 @@ impl Backend for RemoteBackend {
             "feats",
             Value::Arr(feats.iter().map(|f| wire::f32s_to_value(f)).collect()),
         );
-        let resp = self.call(&req)?;
+        let resp = self.call(req)?;
         wire::f32s_from_value(resp.req("logits")?, "logits")
     }
 
@@ -317,7 +273,7 @@ impl Backend for RemoteBackend {
             .with("val_labels", wire::f32s_to_value(&val_labels))
             .with("epochs", epochs)
             .with("patience", patience);
-        let resp = self.call(&req)?;
+        let resp = self.call(req)?;
         let curve = resp
             .req_arr("curve")?
             .iter()
@@ -347,7 +303,7 @@ impl Backend for RemoteBackend {
         let req = Value::obj()
             .with("op", "probe_load")
             .with("params", wire::f32s_to_value(&params));
-        self.call(&req)?;
+        self.call(req)?;
         Ok(())
     }
 }
@@ -373,6 +329,7 @@ mod tests {
             connect_timeout_ms: 1_000.0,
             retries: 1,
             backoff_ms: 0.0,
+            ..RemoteConfig::default()
         }
     }
 
@@ -435,5 +392,29 @@ mod tests {
         let err = remote.prm_score(8, &[vec![1, 2, 3]]).unwrap_err();
         assert!(err.is_transient_net(), "dead shard must be transient: {err}");
         assert!(remote.metrics.retries.get() >= 1);
+    }
+
+    #[test]
+    fn shared_transport_backends_report_mux_wire_status() {
+        let mut cfg = sim_cfg(2);
+        cfg.engine.wire_codec = WireCodec::Binary;
+        let (connector, _server) = LoopbackEngineServer::spawn(&cfg).unwrap();
+        let transport = MuxTransport::new(
+            Box::new(connector),
+            RemoteConfig {
+                wire_codec: WireCodec::Binary,
+                ..quick_remote()
+            },
+            NetMetrics::new(),
+        );
+        let a = RemoteBackend::over(transport.clone(), crate::util::clock::sim_clock()).unwrap();
+        let b = RemoteBackend::over(transport, crate::util::clock::sim_clock()).unwrap();
+        for backend in [&a, &b] {
+            let d = backend.describe();
+            assert_eq!(d.req_str("wire_codec").unwrap(), "ttcb");
+            assert_eq!(d.req("mux").unwrap().as_bool(), Some(true));
+        }
+        // one shared socket: exactly one dial across both backends
+        assert_eq!(a.metrics.reconnects.get(), 1);
     }
 }

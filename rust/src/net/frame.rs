@@ -6,7 +6,7 @@
 //! offset  size  field
 //! 0       4     magic  b"TTCW"
 //! 4       2     protocol version, big-endian u16
-//! 6       1     codec id (1 = JSON)
+//! 6       1     codec id (1 = JSON, 2 = TTCB binary)
 //! 7       1     reserved, must be 0
 //! 8       4     payload length, big-endian u32
 //! 12      n     payload bytes (codec-encoded message)
@@ -17,8 +17,10 @@
 //! non-transient [`Error::Net`] naming both versions, before any
 //! payload is decoded. Payload length is validated against
 //! [`MAX_FRAME_BYTES`] *before* allocation so a malformed or hostile
-//! frame cannot OOM the server. See `docs/remote.md` for a worked
-//! byte-level example.
+//! frame cannot OOM the server. Header and payload are coalesced into a
+//! single buffered write, so a frame is one syscall on the way out and
+//! two writers sharing a transport can never interleave halves of a
+//! frame. See `docs/remote.md` for a worked byte-level example.
 
 use std::io::{Read, Write};
 
@@ -32,6 +34,9 @@ pub const MAGIC: [u8; 4] = *b"TTCW";
 
 /// Codec id for the JSON serializer.
 pub const CODEC_JSON: u8 = 1;
+
+/// Codec id for the TTCB binary serializer.
+pub const CODEC_TTCB: u8 = 2;
 
 /// Size of the fixed frame header in bytes.
 pub const HEADER_BYTES: usize = 12;
@@ -58,14 +63,17 @@ pub fn write_frame_versioned(
             payload.len()
         )));
     }
-    let mut header = [0u8; HEADER_BYTES];
-    header[0..4].copy_from_slice(&MAGIC);
-    header[4..6].copy_from_slice(&version.to_be_bytes());
-    header[6] = codec_id;
-    header[7] = 0;
-    header[8..12].copy_from_slice(&(payload.len() as u32).to_be_bytes());
-    w.write_all(&header)?;
-    w.write_all(payload)?;
+    // One buffer, one write, one flush: header and payload must hit the
+    // transport as a unit so concurrent writers on a shared (multiplexed)
+    // connection cannot interleave halves of different frames.
+    let mut buf = Vec::with_capacity(HEADER_BYTES + payload.len());
+    buf.extend_from_slice(&MAGIC);
+    buf.extend_from_slice(&version.to_be_bytes());
+    buf.push(codec_id);
+    buf.push(0);
+    buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    buf.extend_from_slice(payload);
+    w.write_all(&buf)?;
     w.flush()?;
     Ok(())
 }
@@ -78,8 +86,22 @@ pub fn write_frame_versioned(
 /// so callers can retry on another shard. Anything structurally wrong
 /// with the header is a permanent protocol error.
 pub fn read_frame(r: &mut dyn Read, expect_codec: u8) -> Result<Vec<u8>> {
+    match read_frame_poll(r, expect_codec)? {
+        Some(payload) => Ok(payload),
+        None => Err(Error::net_transient("read timed out waiting for a frame")),
+    }
+}
+
+/// Like [`read_frame`], but a read timeout that fires before *any*
+/// header byte arrived returns `Ok(None)` instead of an error. The
+/// multiplexer's reader thread polls with a short timeout so it can
+/// notice a dying link between frames; a timeout mid-header or
+/// mid-payload is still a (transient) fault.
+pub fn read_frame_poll(r: &mut dyn Read, expect_codec: u8) -> Result<Option<Vec<u8>>> {
     let mut header = [0u8; HEADER_BYTES];
-    read_exact_or_eof(r, &mut header)?;
+    if !read_exact_or_eof(r, &mut header)? {
+        return Ok(None);
+    }
     if header[0..4] != MAGIC {
         return Err(Error::net(format!(
             "bad frame magic {:02x?} (expected {:02x?} — not a ttc wire peer?)",
@@ -115,12 +137,14 @@ pub fn read_frame(r: &mut dyn Read, expect_codec: u8) -> Result<Vec<u8>> {
     r.read_exact(&mut payload).map_err(|e| {
         Error::net_transient(format!("connection dropped mid-frame ({len} byte payload): {e}"))
     })?;
-    Ok(payload)
+    Ok(Some(payload))
 }
 
-/// Read the full header, mapping EOF-before-first-byte to a transient
-/// "peer closed" error and partial reads to a mid-frame drop.
-fn read_exact_or_eof(r: &mut dyn Read, buf: &mut [u8]) -> Result<()> {
+/// Read the full header. Returns `Ok(false)` when a read timeout fired
+/// before the first byte (the poll case); maps EOF-before-first-byte to
+/// a transient "peer closed" error and partial reads to a mid-frame
+/// drop.
+fn read_exact_or_eof(r: &mut dyn Read, buf: &mut [u8]) -> Result<bool> {
     let mut filled = 0usize;
     while filled < buf.len() {
         match r.read(&mut buf[filled..]) {
@@ -140,12 +164,18 @@ fn read_exact_or_eof(r: &mut dyn Read, buf: &mut [u8]) -> Result<()> {
                 if e.kind() == std::io::ErrorKind::TimedOut
                     || e.kind() == std::io::ErrorKind::WouldBlock =>
             {
-                return Err(Error::net_transient(format!("read timed out: {e}")));
+                if filled == 0 {
+                    return Ok(false);
+                }
+                return Err(Error::net_transient(format!(
+                    "read timed out mid-header ({filled} of {} bytes): {e}",
+                    buf.len()
+                )));
             }
             Err(e) => return Err(Error::net_transient(format!("read failed: {e}"))),
         }
     }
-    Ok(())
+    Ok(true)
 }
 
 #[cfg(test)]
@@ -228,8 +258,60 @@ mod tests {
     #[test]
     fn codec_mismatch_rejected() {
         let mut buf = Vec::new();
-        write_frame(&mut buf, 2, b"{}").unwrap();
+        write_frame(&mut buf, CODEC_TTCB, b"{}").unwrap();
         let err = read_frame(&mut &buf[..], CODEC_JSON).unwrap_err();
         assert!(err.to_string().contains("codec"));
+    }
+
+    #[test]
+    fn frame_is_a_single_write() {
+        /// Writer that records each `write` call separately.
+        struct CallCounter {
+            calls: Vec<usize>,
+        }
+        impl std::io::Write for CallCounter {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.calls.push(buf.len());
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut w = CallCounter { calls: Vec::new() };
+        write_frame(&mut w, CODEC_JSON, br#"{"op":"info"}"#).unwrap();
+        assert_eq!(
+            w.calls,
+            vec![HEADER_BYTES + 13],
+            "header and payload must be coalesced into one write"
+        );
+    }
+
+    /// Adversarial single-byte mutation of a valid frame must never
+    /// panic: every outcome is either the original payload (mutating
+    /// payload bytes still frames correctly) or a classified error.
+    #[test]
+    fn prop_mutated_frames_never_panic() {
+        crate::testkit::forall(
+            "frame mutation",
+            300,
+            |rng| {
+                let payload: Vec<u8> = (0..rng.below(24)).map(|_| rng.below(256) as u8).collect();
+                let mut buf = Vec::new();
+                write_frame(&mut buf, CODEC_JSON, &payload).unwrap();
+                let pos = rng.below(buf.len());
+                let byte = rng.below(256) as u8;
+                (buf, pos, byte)
+            },
+            |(buf, pos, byte)| {
+                let mut mutated = buf.clone();
+                mutated[*pos] ^= *byte;
+                let _ = read_frame(&mut &mutated[..], CODEC_JSON);
+                // truncation after mutation must also be handled
+                let cut = mutated.len() / 2;
+                let _ = read_frame(&mut &mutated[..cut], CODEC_JSON);
+                Ok(())
+            },
+        );
     }
 }

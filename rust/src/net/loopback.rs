@@ -15,7 +15,7 @@ use std::time::Duration;
 
 use crate::error::Result;
 
-use super::transport::{Conn, Connector};
+use super::transport::{Conn, Connector, ReadHalf, WriteHalf};
 
 /// One end of an in-process duplex byte pipe.
 pub struct LoopbackConn {
@@ -99,6 +99,105 @@ impl Conn for LoopbackConn {
     fn peer(&self) -> String {
         self.label.clone()
     }
+    fn split(self: Box<Self>) -> Result<(Box<dyn ReadHalf>, Box<dyn WriteHalf>)> {
+        let this = *self;
+        Ok((
+            Box::new(LoopbackReadHalf {
+                rx: this.rx,
+                buf: this.buf,
+                pos: this.pos,
+                timeout: this.timeout,
+                label: this.label.clone(),
+            }),
+            Box::new(LoopbackWriteHalf {
+                tx: Some(this.tx),
+                label: this.label,
+            }),
+        ))
+    }
+}
+
+/// Read side of a split [`LoopbackConn`].
+pub struct LoopbackReadHalf {
+    rx: Receiver<Vec<u8>>,
+    buf: Vec<u8>,
+    pos: usize,
+    timeout: Option<Duration>,
+    label: String,
+}
+
+impl Read for LoopbackReadHalf {
+    fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+        if self.pos >= self.buf.len() {
+            let chunk = match self.timeout {
+                Some(t) => match self.rx.recv_timeout(t) {
+                    Ok(c) => c,
+                    Err(RecvTimeoutError::Timeout) => {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::TimedOut,
+                            "loopback read timed out",
+                        ));
+                    }
+                    Err(RecvTimeoutError::Disconnected) => return Ok(0),
+                },
+                None => match self.rx.recv() {
+                    Ok(c) => c,
+                    Err(_) => return Ok(0),
+                },
+            };
+            self.buf = chunk;
+            self.pos = 0;
+            if self.buf.is_empty() {
+                return Ok(0);
+            }
+        }
+        let n = out.len().min(self.buf.len() - self.pos);
+        out[..n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+impl ReadHalf for LoopbackReadHalf {
+    fn set_read_timeout(&mut self, timeout: Option<Duration>) -> std::io::Result<()> {
+        self.timeout = timeout;
+        Ok(())
+    }
+    fn peer(&self) -> String {
+        self.label.clone()
+    }
+}
+
+/// Write side of a split [`LoopbackConn`]. `shutdown` drops the sender,
+/// which the peer observes as EOF — the loopback equivalent of closing
+/// a socket.
+pub struct LoopbackWriteHalf {
+    tx: Option<Sender<Vec<u8>>>,
+    label: String,
+}
+
+impl Write for LoopbackWriteHalf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let tx = self.tx.as_ref().ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::BrokenPipe, "loopback write half shut down")
+        })?;
+        tx.send(buf.to_vec()).map_err(|_| {
+            std::io::Error::new(std::io::ErrorKind::BrokenPipe, "loopback peer is gone")
+        })?;
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+impl WriteHalf for LoopbackWriteHalf {
+    fn peer(&self) -> String {
+        self.label.clone()
+    }
+    fn shutdown(&mut self) {
+        self.tx = None;
+    }
 }
 
 /// Message to a loopback accept loop.
@@ -175,6 +274,24 @@ mod tests {
         let mut buf = [0u8; 4];
         let err = b.read(&mut buf).unwrap_err();
         assert_eq!(err.kind(), std::io::ErrorKind::TimedOut);
+    }
+
+    #[test]
+    fn split_halves_keep_the_pipe_and_shutdown_eofs_the_peer() {
+        let (a, mut b) = pair();
+        let (mut rd, mut wr) = (Box::new(a) as Box<dyn Conn>).split().unwrap();
+        b.write_all(b"pong").unwrap();
+        wr.write_all(b"ping").unwrap();
+        let mut got = [0u8; 4];
+        rd.read_exact(&mut got).unwrap();
+        assert_eq!(&got, b"pong");
+        let mut got = [0u8; 4];
+        b.read_exact(&mut got).unwrap();
+        assert_eq!(&got, b"ping");
+        wr.shutdown();
+        let mut buf = [0u8; 1];
+        assert_eq!(b.read(&mut buf).unwrap(), 0, "shutdown must read as EOF");
+        assert!(wr.write_all(b"x").is_err(), "writes after shutdown must fail");
     }
 
     #[test]

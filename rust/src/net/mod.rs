@@ -5,31 +5,34 @@
 //!
 //! | layer | module | contents |
 //! |---|---|---|
-//! | framing | [`frame`] | `TTCW` magic, version stamp, length prefix |
-//! | codec | [`serializer`] | [`serializer::Serializer`] trait, JSON first |
-//! | transport | [`transport`], [`loopback`] | [`transport::Conn`]/[`transport::Connector`]: TCP and in-process pipes |
-//! | schema | [`wire`] | handshake, shapes, request/response envelopes |
-//! | server | [`server`] | accept loops fronting an [`crate::engine::EnginePool`] |
-//! | client | [`client`] | [`RemoteBackend`] with retry/backoff |
+//! | framing | [`frame`] | `TTCW` magic, version stamp, codec id, length prefix |
+//! | codec | [`serializer`] | [`serializer::Serializer`] trait: JSON (id 1) and the TTCB binary codec (id 2) |
+//! | transport | [`transport`], [`loopback`] | [`transport::Conn`]/[`transport::Connector`]: TCP and in-process pipes, splittable into read/write halves |
+//! | schema | [`wire`] | handshake (with codec/mux negotiation), shapes, request/response envelopes |
+//! | mux | [`mux`] | [`MuxTransport`]: one shared connection per host, correlation-id demux, retry/backoff |
+//! | server | [`server`] | accept loops fronting an [`crate::engine::EnginePool`], serial + mux request loops |
+//! | client | [`client`] | [`RemoteBackend`] request builders over a (possibly shared) transport |
 //!
 //! The loopback transport runs the full protocol (same bytes as TCP)
 //! inside one process, which is how CI exercises every handshake,
-//! failover and kill path deterministically with the sim backend. See
-//! `docs/remote.md` for the frame format, version negotiation and the
-//! clock model.
+//! codec negotiation, failover and kill path deterministically with the
+//! sim backend. See `docs/remote.md` for the frame format, the TTCB
+//! byte grammar, codec negotiation and the clock model.
 
 pub mod client;
 pub mod frame;
 pub mod loopback;
+pub mod mux;
 pub mod serializer;
 pub mod server;
 pub mod transport;
 pub mod wire;
 
 pub use client::{RemoteBackend, RemoteConfig};
-pub use frame::{PROTOCOL_VERSION, MAX_FRAME_BYTES};
+pub use frame::{CODEC_JSON, CODEC_TTCB, MAX_FRAME_BYTES, PROTOCOL_VERSION};
 pub use loopback::LoopbackConnector;
-pub use serializer::{JsonCodec, Serializer};
+pub use mux::MuxTransport;
+pub use serializer::{codec_by_id, supported_ids, JsonCodec, Serializer, TtcbCodec, JSON, TTCB};
 pub use server::{LoopbackEngineServer, TcpEngineServer};
-pub use transport::{Conn, Connector, NetMetrics, TcpConnector};
-pub use wire::ProbeLayout;
+pub use transport::{Conn, Connector, NetMetrics, ReadHalf, TcpConnector, WriteHalf};
+pub use wire::{ProbeLayout, WireCaps};

@@ -1,16 +1,54 @@
 //! Payload codecs: the wire format is decoupled from the transport.
 //!
 //! A [`Serializer`] turns a [`Value`] message into payload bytes and
-//! back. JSON ships first (the crate already carries a hand-rolled
-//! parser in [`crate::util::json`]); a binary codec can slot in later
-//! by claiming a new codec id in [`super::frame`] without touching the
-//! transport or the request schema.
+//! back. Two codecs ship:
+//!
+//! * [`JsonCodec`] (frame codec id 1) — the control-plane and fallback
+//!   codec, over the hand-rolled parser in [`crate::util::json`].
+//! * [`TtcbCodec`] (frame codec id 2) — "TTC Binary", a compact
+//!   tag-length-value encoding for the data-plane envelopes. Strings are
+//!   raw length-prefixed UTF-8 (no escaping), numbers are 8-byte IEEE-754
+//!   (no float-to-text round-trips), and homogeneous numeric arrays —
+//!   token blocks, score vectors, embeddings — collapse into typed runs
+//!   (LEB128 varints for token ids, raw f64 words for scores).
+//!
+//! Which codec a connection uses is negotiated in the hello/ack
+//! handshake (see [`super::wire`]): the client advertises the ids it
+//! speaks, the server answers with its own, and both sides pick the
+//! highest common id, falling back to JSON. The handshake itself is
+//! always JSON-framed so peers that predate the binary codec
+//! interoperate unchanged.
+//!
+//! ## TTCB payload grammar
+//!
+//! ```text
+//! value   := tag(1 byte) body
+//! 0x00    null
+//! 0x01    false
+//! 0x02    true
+//! 0x03    number   f64, 8 bytes big-endian, finite
+//! 0x04    string   varint byte-length, raw UTF-8 bytes
+//! 0x05    array    varint count, then count values
+//! 0x06    object   varint count, then count * (varint key-length,
+//!                  raw key bytes, value)
+//! 0x07    u32 run  varint count, then count varints (token blocks)
+//! 0x08    f64 run  varint count, then count * 8 bytes big-endian
+//! varint  := LEB128, at most 5 bytes, value < 2^32
+//! ```
+//!
+//! Non-finite numbers encode as null, matching what the JSON codec's
+//! `dumps` emits for them, so the two codecs agree on every envelope.
+//! The decoder validates every count against the bytes actually
+//! remaining *before* allocating, caps nesting depth, and rejects
+//! trailing bytes — a truncated or hostile payload fails with a
+//! non-transient [`Error::Net`], never a panic or an OOM.
 
+use crate::config::WireCodec;
 use crate::error::{Error, Result};
 use crate::util::json::{self, Value};
 
 /// Message codec: encode/decode one [`Value`] per frame payload.
-pub trait Serializer: Send {
+pub trait Serializer: Send + Sync {
     /// Human-readable codec name.
     fn name(&self) -> &'static str;
     /// Codec id stamped into the frame header.
@@ -20,6 +58,30 @@ pub trait Serializer: Send {
     /// Decode payload bytes into a message. Must enforce resource
     /// limits (depth, size) — the payload may come from a hostile peer.
     fn decode(&self, bytes: &[u8]) -> Result<Value>;
+}
+
+/// Shared instance of the JSON codec (codec id 1).
+pub static JSON: JsonCodec = JsonCodec;
+
+/// Shared instance of the TTCB binary codec (codec id 2).
+pub static TTCB: TtcbCodec = TtcbCodec;
+
+/// Look up a codec by its frame id.
+pub fn codec_by_id(id: u8) -> Option<&'static dyn Serializer> {
+    match id {
+        super::frame::CODEC_JSON => Some(&JSON),
+        super::frame::CODEC_TTCB => Some(&TTCB),
+        _ => None,
+    }
+}
+
+/// The codec ids a peer configured with `wire_codec` advertises in the
+/// handshake, lowest to highest preference.
+pub fn supported_ids(codec: WireCodec) -> &'static [u8] {
+    match codec {
+        WireCodec::Json => &[super::frame::CODEC_JSON],
+        WireCodec::Binary => &[super::frame::CODEC_JSON, super::frame::CODEC_TTCB],
+    }
 }
 
 /// JSON codec over [`crate::util::json`]. The parser enforces a
@@ -49,6 +111,279 @@ impl Serializer for JsonCodec {
     }
 }
 
+const TAG_NULL: u8 = 0x00;
+const TAG_FALSE: u8 = 0x01;
+const TAG_TRUE: u8 = 0x02;
+const TAG_NUM: u8 = 0x03;
+const TAG_STR: u8 = 0x04;
+const TAG_ARR: u8 = 0x05;
+const TAG_OBJ: u8 = 0x06;
+const TAG_U32_RUN: u8 = 0x07;
+const TAG_F64_RUN: u8 = 0x08;
+
+/// Nesting cap for hostile payloads, matching the JSON parser's.
+const TTCB_MAX_DEPTH: usize = 128;
+
+/// TTC Binary codec (codec id 2). See the module docs for the grammar.
+#[derive(Debug, Clone, Default)]
+pub struct TtcbCodec;
+
+impl Serializer for TtcbCodec {
+    fn name(&self) -> &'static str {
+        "ttcb"
+    }
+
+    fn codec_id(&self) -> u8 {
+        super::frame::CODEC_TTCB
+    }
+
+    fn encode(&self, v: &Value) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(64);
+        enc_value(&mut out, v);
+        Ok(out)
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Result<Value> {
+        let mut dec = Dec { bytes, pos: 0 };
+        let v = dec.value(0)?;
+        if dec.pos != bytes.len() {
+            return Err(Error::net(format!(
+                "ttcb: {} trailing bytes after the value",
+                bytes.len() - dec.pos
+            )));
+        }
+        Ok(v)
+    }
+}
+
+/// True when a value fits the token-run element type (finite integer in
+/// u32 range).
+fn is_u32(v: &Value) -> bool {
+    matches!(v, Value::Num(n) if n.is_finite() && n.fract() == 0.0 && *n >= 0.0 && *n <= u32::MAX as f64)
+}
+
+fn is_finite_num(v: &Value) -> bool {
+    matches!(v, Value::Num(n) if n.is_finite())
+}
+
+fn enc_varint(out: &mut Vec<u8>, mut n: u32) {
+    loop {
+        let byte = (n & 0x7f) as u8;
+        n >>= 7;
+        if n == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+fn enc_value(out: &mut Vec<u8>, v: &Value) {
+    match v {
+        Value::Null => out.push(TAG_NULL),
+        Value::Bool(false) => out.push(TAG_FALSE),
+        Value::Bool(true) => out.push(TAG_TRUE),
+        Value::Num(n) => {
+            if n.is_finite() {
+                out.push(TAG_NUM);
+                out.extend_from_slice(&n.to_be_bytes());
+            } else {
+                // JSON parity: dumps() writes null for NaN/Inf
+                out.push(TAG_NULL);
+            }
+        }
+        Value::Str(s) => {
+            out.push(TAG_STR);
+            enc_varint(out, s.len() as u32);
+            out.extend_from_slice(s.as_bytes());
+        }
+        Value::Arr(items) => {
+            if !items.is_empty() && items.iter().all(is_u32) {
+                // token block: varint run, 1-2 bytes per typical token id
+                out.push(TAG_U32_RUN);
+                enc_varint(out, items.len() as u32);
+                for item in items {
+                    if let Value::Num(n) = item {
+                        enc_varint(out, *n as u32);
+                    }
+                }
+            } else if !items.is_empty() && items.iter().all(is_finite_num) {
+                // score/embedding vector: raw f64 words
+                out.push(TAG_F64_RUN);
+                enc_varint(out, items.len() as u32);
+                for item in items {
+                    if let Value::Num(n) = item {
+                        out.extend_from_slice(&n.to_be_bytes());
+                    }
+                }
+            } else {
+                out.push(TAG_ARR);
+                enc_varint(out, items.len() as u32);
+                for item in items {
+                    enc_value(out, item);
+                }
+            }
+        }
+        Value::Obj(fields) => {
+            out.push(TAG_OBJ);
+            enc_varint(out, fields.len() as u32);
+            for (k, v) in fields {
+                enc_varint(out, k.len() as u32);
+                out.extend_from_slice(k.as_bytes());
+                enc_value(out, v);
+            }
+        }
+    }
+}
+
+/// Bounds-checked TTCB decoder.
+struct Dec<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn fail(&self, msg: &str) -> Error {
+        Error::net(format!("ttcb: {msg} at byte {}", self.pos))
+    }
+
+    fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    fn byte(&mut self) -> Result<u8> {
+        let b = *self
+            .bytes
+            .get(self.pos)
+            .ok_or_else(|| self.fail("truncated"))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            return Err(self.fail(&format!("{n} bytes announced, {} remain", self.remaining())));
+        }
+        let slice = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(slice)
+    }
+
+    fn varint(&mut self) -> Result<u32> {
+        let mut value: u32 = 0;
+        for shift in [0u32, 7, 14, 21, 28] {
+            let byte = self.byte()?;
+            if shift == 28 && byte > 0x0f {
+                return Err(self.fail("varint overflows u32"));
+            }
+            value |= u32::from(byte & 0x7f) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(value);
+            }
+        }
+        Err(self.fail("varint longer than 5 bytes"))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        let raw = self.take(8)?;
+        let mut word = [0u8; 8];
+        word.copy_from_slice(raw);
+        let n = f64::from_be_bytes(word);
+        if !n.is_finite() {
+            return Err(self.fail("non-finite number"));
+        }
+        Ok(n)
+    }
+
+    fn str_of(&mut self, len: usize) -> Result<String> {
+        let raw = self.take(len)?;
+        std::str::from_utf8(raw)
+            .map(|s| s.to_string())
+            .map_err(|e| self.fail(&format!("invalid UTF-8: {e}")))
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Value> {
+        if depth >= TTCB_MAX_DEPTH {
+            return Err(self.fail("nesting too deep"));
+        }
+        match self.byte()? {
+            TAG_NULL => Ok(Value::Null),
+            TAG_FALSE => Ok(Value::Bool(false)),
+            TAG_TRUE => Ok(Value::Bool(true)),
+            TAG_NUM => Ok(Value::Num(self.f64()?)),
+            TAG_STR => {
+                let len = self.varint()? as usize;
+                Ok(Value::Str(self.str_of(len)?))
+            }
+            TAG_ARR => {
+                let count = self.varint()? as usize;
+                // every element is at least one tag byte
+                if count > self.remaining() {
+                    return Err(self.fail(&format!(
+                        "array announces {count} elements, {} bytes remain",
+                        self.remaining()
+                    )));
+                }
+                let mut items = Vec::with_capacity(count);
+                for _ in 0..count {
+                    items.push(self.value(depth + 1)?);
+                }
+                Ok(Value::Arr(items))
+            }
+            TAG_OBJ => {
+                let count = self.varint()? as usize;
+                if count > self.remaining() {
+                    return Err(self.fail(&format!(
+                        "object announces {count} fields, {} bytes remain",
+                        self.remaining()
+                    )));
+                }
+                let mut fields = Vec::with_capacity(count);
+                for _ in 0..count {
+                    let klen = self.varint()? as usize;
+                    let key = self.str_of(klen)?;
+                    let v = self.value(depth + 1)?;
+                    fields.push((key, v));
+                }
+                Ok(Value::Obj(fields))
+            }
+            TAG_U32_RUN => {
+                let count = self.varint()? as usize;
+                // every varint is at least one byte
+                if count > self.remaining() {
+                    return Err(self.fail(&format!(
+                        "token run announces {count} entries, {} bytes remain",
+                        self.remaining()
+                    )));
+                }
+                let mut items = Vec::with_capacity(count);
+                for _ in 0..count {
+                    items.push(Value::Num(self.varint()? as f64));
+                }
+                Ok(Value::Arr(items))
+            }
+            TAG_F64_RUN => {
+                let count = self.varint()? as usize;
+                match count.checked_mul(8) {
+                    Some(need) if need <= self.remaining() => {}
+                    _ => {
+                        return Err(self.fail(&format!(
+                            "f64 run announces {count} entries, {} bytes remain",
+                            self.remaining()
+                        )));
+                    }
+                }
+                let mut items = Vec::with_capacity(count);
+                for _ in 0..count {
+                    items.push(Value::Num(self.f64()?));
+                }
+                Ok(Value::Arr(items))
+            }
+            tag => Err(self.fail(&format!("unknown tag 0x{tag:02x}"))),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -74,5 +409,207 @@ mod tests {
         assert!(!err.is_transient_net());
         let err = codec.decode(&[0xff, 0xfe]).unwrap_err();
         assert!(err.to_string().contains("UTF-8"));
+    }
+
+    #[test]
+    fn ttcb_golden_bytes() {
+        // This exact layout is documented in docs/remote.md — keep the
+        // two in sync.
+        let v = Value::obj()
+            .with("op", "generate")
+            .with("tokens", vec![1.0f64, 2.0, 300.0]);
+        let bytes = TtcbCodec.encode(&v).unwrap();
+        assert_eq!(
+            bytes,
+            vec![
+                0x06, 0x02, // object, 2 fields
+                0x02, b'o', b'p', // key "op"
+                0x04, 0x08, b'g', b'e', b'n', b'e', b'r', b'a', b't', b'e', // str "generate"
+                0x06, b't', b'o', b'k', b'e', b'n', b's', // key "tokens"
+                0x07, 0x03, // u32 run, 3 entries
+                0x01, 0x02, 0xac, 0x02, // varints 1, 2, 300
+            ]
+        );
+        assert_eq!(TtcbCodec.decode(&bytes).unwrap(), v);
+        // the empty object is two bytes
+        assert_eq!(TtcbCodec.encode(&Value::obj()).unwrap(), vec![0x06, 0x00]);
+    }
+
+    #[test]
+    fn ttcb_registry_and_ids() {
+        assert_eq!(codec_by_id(1).unwrap().name(), "json");
+        assert_eq!(codec_by_id(2).unwrap().name(), "ttcb");
+        assert!(codec_by_id(3).is_none());
+        assert_eq!(supported_ids(WireCodec::Json), &[1]);
+        assert_eq!(supported_ids(WireCodec::Binary), &[1, 2]);
+    }
+
+    #[test]
+    fn non_finite_numbers_agree_with_json() {
+        let v = Value::obj().with("x", f64::NAN).with("y", f64::INFINITY);
+        let via_json = JSON.decode(&JSON.encode(&v).unwrap()).unwrap();
+        let via_ttcb = TTCB.decode(&TTCB.encode(&v).unwrap()).unwrap();
+        assert_eq!(via_json, via_ttcb);
+        assert_eq!(via_ttcb.get("x"), Some(&Value::Null));
+    }
+
+    #[test]
+    fn ttcb_rejects_hostile_payloads() {
+        // announced size far beyond the buffer must fail before allocating
+        for bytes in [
+            &[TAG_STR, 0xff, 0xff, 0xff, 0xff, 0x0f][..], // 4 GiB string
+            &[TAG_ARR, 0xff, 0xff, 0xff, 0xff, 0x0f][..], // 4 G elements
+            &[TAG_F64_RUN, 0xff, 0xff, 0xff, 0xff, 0x0f][..],
+            &[TAG_U32_RUN, 0x05, 0x01][..],               // run cut short
+            &[TAG_NUM, 0x00][..],                         // truncated f64
+            &[0x4f][..],                                  // unknown tag
+            &[][..],                                      // empty payload
+            &[TAG_NULL, TAG_NULL][..],                    // trailing bytes
+            &[TAG_STR, 0x02, 0xff, 0xfe][..],             // invalid UTF-8
+        ] {
+            let err = TtcbCodec.decode(bytes).unwrap_err();
+            assert_eq!(err.kind_str(), "net", "{bytes:?}");
+            assert!(!err.is_transient_net(), "{bytes:?}: {err}");
+        }
+        // unbounded nesting must hit the depth cap, not the stack
+        let mut deep = vec![0u8; 0];
+        for _ in 0..4096 {
+            deep.extend_from_slice(&[TAG_ARR, 0x01]);
+        }
+        deep.push(TAG_NULL);
+        assert!(TtcbCodec.decode(&deep).is_err());
+    }
+
+    /// Random wire-envelope-shaped value: the op/ok envelopes the data
+    /// plane actually sends, with token blocks, score vectors and
+    /// escape-heavy prompt strings, plus arbitrary nested extras.
+    fn gen_envelope(rng: &mut crate::util::rng::Rng) -> Value {
+        fn gen_str(rng: &mut crate::util::rng::Rng) -> String {
+            (0..rng.below(16))
+                .map(|_| match rng.below(8) {
+                    0 => '"',
+                    1 => '\\',
+                    2 => '\n',
+                    3 => 'é',
+                    4 => '😀',
+                    _ => (b'a' + rng.below(26) as u8) as char,
+                })
+                .collect()
+        }
+        fn gen_tokens(rng: &mut crate::util::rng::Rng) -> Value {
+            Value::Arr(
+                (0..rng.below(24))
+                    .map(|_| Value::Num(rng.below(50_000) as f64))
+                    .collect(),
+            )
+        }
+        fn gen_scores(rng: &mut crate::util::rng::Rng) -> Value {
+            Value::Arr(
+                (0..rng.below(8))
+                    .map(|_| Value::Num(rng.range(-1000, 1000) as f64 / 256.0))
+                    .collect(),
+            )
+        }
+        match rng.below(4) {
+            0 => Value::obj()
+                .with("op", "generate")
+                .with("kind", "sample")
+                .with("temperature", rng.below(100) as f64 / 100.0)
+                .with("bucket", rng.below(4096) as f64)
+                .with(
+                    "prompts",
+                    Value::Arr((0..1 + rng.below(4)).map(|_| gen_tokens(rng)).collect()),
+                )
+                .with("id", rng.below(1_000_000) as f64),
+            1 => Value::obj().with(
+                "ok",
+                Value::obj()
+                    .with(
+                        "rows",
+                        Value::Arr((0..1 + rng.below(4)).map(|_| gen_tokens(rng)).collect()),
+                    )
+                    .with("scores", gen_scores(rng)),
+            ),
+            2 => Value::obj()
+                .with("op", "prm_score")
+                .with("bucket", rng.below(4096) as f64)
+                .with(
+                    "prefixes",
+                    Value::Arr((0..1 + rng.below(4)).map(|_| Value::Str(gen_str(rng))).collect()),
+                ),
+            _ => Value::obj().with(
+                "err",
+                Value::obj()
+                    .with("kind", "engine")
+                    .with("message", gen_str(rng)),
+            ),
+        }
+    }
+
+    #[test]
+    fn prop_envelopes_roundtrip_identically_through_both_codecs() {
+        crate::testkit::forall(
+            "cross-codec equivalence",
+            300,
+            |rng| gen_envelope(rng),
+            |v| {
+                let via_json = JSON
+                    .decode(&JSON.encode(v).unwrap())
+                    .map_err(|e| format!("json roundtrip failed: {e}"))?;
+                let bytes = TTCB.encode(v).unwrap();
+                let via_ttcb = TTCB
+                    .decode(&bytes)
+                    .map_err(|e| format!("ttcb roundtrip of {v:?} failed: {e}"))?;
+                crate::testkit::prop_assert(
+                    via_json == via_ttcb,
+                    format!("codecs disagree: json {via_json:?} != ttcb {via_ttcb:?}"),
+                )?;
+                crate::testkit::prop_assert(
+                    &via_ttcb == v,
+                    format!("ttcb roundtrip changed the value: {v:?} -> {via_ttcb:?}"),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn prop_truncated_ttcb_always_errors() {
+        crate::testkit::forall(
+            "ttcb truncation",
+            200,
+            |rng| TTCB.encode(&gen_envelope(rng)).unwrap(),
+            |bytes| {
+                for cut in 0..bytes.len() {
+                    crate::testkit::prop_assert(
+                        TTCB.decode(&bytes[..cut]).is_err(),
+                        format!("prefix of length {cut} of {bytes:02x?} decoded"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_mutated_ttcb_never_panics() {
+        crate::testkit::forall(
+            "ttcb mutation",
+            300,
+            |rng| {
+                let bytes = TTCB.encode(&gen_envelope(rng)).unwrap();
+                let pos = rng.below(bytes.len());
+                (bytes, pos, rng.below(256) as u8)
+            },
+            |(bytes, pos, byte)| {
+                let mut mutated = bytes.clone();
+                mutated[*pos] ^= *byte;
+                // decode must classify, never panic; a successful decode
+                // must re-encode without panicking either
+                if let Ok(v) = TTCB.decode(&mutated) {
+                    let _ = TTCB.encode(&v).unwrap();
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -8,29 +8,42 @@
 //! * [`LoopbackEngineServer`] — the in-process [`super::loopback`]
 //!   transport, used by tests and benches (no network in CI).
 //!
-//! A connection speaks the handshake first (hello → ack with shapes and
-//! layout stamps), then a request loop. Engine-fleet shutdown mid-call
-//! is deliberately *not* reported through the error envelope: the
-//! handler closes the connection instead, so the client observes a
-//! transient EOF and fails over to another shard.
+//! A connection speaks the JSON-framed handshake first (hello → ack
+//! with shapes, layout stamps and capability keys), negotiating the
+//! data-plane codec and whether the link multiplexes:
+//!
+//! * **serial** (old peers, or peers that didn't ask for mux): one
+//!   request/response at a time, with a lazy-JSON fast path that
+//!   answers control-plane ops (`info`, `metrics`) without
+//!   materializing the request;
+//! * **mux** : each frame carries a correlation `id`; every request
+//!   runs on its own worker thread and replies are written id-tagged
+//!   under a writer lock, so a slow `generate` never head-of-line
+//!   blocks a quick `prm_score` sharing the socket.
+//!
+//! Engine-fleet shutdown mid-call is deliberately *not* reported
+//! through the error envelope: the handler closes the connection
+//! instead, so the client observes a transient EOF and fails over to
+//! another shard.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use crate::config::Config;
+use crate::config::{Config, WireCodec};
 use crate::engine::pool::PoolReporter;
 use crate::engine::protocol::{EmbedKind, GenJob, GenKind};
 use crate::engine::{EngineHandle, EnginePool};
 use crate::error::{Error, Result};
 use crate::util::clock::SharedClock;
+use crate::util::json::lazy::LazyDoc;
 use crate::util::json::Value;
 
 use super::loopback::{AcceptMsg, LoopbackConnector};
-use super::serializer::{JsonCodec, Serializer};
-use super::transport::{recv_msg, send_msg, Conn, TcpConn};
-use super::wire;
+use super::serializer::{self, Serializer};
+use super::transport::{send_msg, Conn, TcpConn, WriteHalf};
+use super::{frame, wire};
 
 /// Immutable per-server context shared by every connection handler.
 pub struct ServeCtx {
@@ -46,68 +59,115 @@ pub struct ServeCtx {
     pub reporter: PoolReporter,
     /// The fleet's clock: relative wire deadlines are anchored to it.
     pub clock: SharedClock,
+    /// Richest codec this server is willing to speak on the data plane
+    /// (`engine.wire_codec`); each connection negotiates down from it.
+    pub wire_codec: WireCodec,
 }
 
 impl ServeCtx {
-    fn from_pool(pool: &EnginePool, backend: &str) -> Result<ServeCtx> {
+    fn from_pool(pool: &EnginePool, cfg: &Config) -> Result<ServeCtx> {
         // The engine's own info() carries the full shapes object (same
         // key names as the wire form), so the ack works for any backend.
         let info = pool.handle().info()?;
         let shapes = info.req("shapes")?.clone();
         Ok(ServeCtx {
-            backend: backend.to_string(),
+            backend: cfg.engine.backend.as_str().to_string(),
             engines: pool.engines(),
             shapes,
             layout: wire::ProbeLayout::current(),
             reporter: pool.reporter(),
             clock: pool.clock.clone(),
+            wire_codec: cfg.engine.wire_codec,
         })
     }
 }
 
-/// Serve one connection to completion: handshake, then request loop.
-/// Transport-level failures and engine shutdown end the loop silently
-/// (the client handles them); protocol violations get an error frame
-/// before the connection closes.
-pub fn serve_conn(
-    mut conn: Box<dyn Conn>,
-    codec: &dyn Serializer,
-    ctx: &ServeCtx,
-    handle: EngineHandle,
-) {
+/// What one request produced, and what it means for the connection.
+enum Outcome {
+    /// Write the reply, keep serving.
+    Reply(Value),
+    /// Write the reply, then close (protocol violation).
+    Fatal(Value),
+    /// Close without replying: the fleet is down and the client should
+    /// observe EOF and fail over.
+    Close,
+}
+
+/// Serve one connection to completion: JSON-framed handshake with
+/// codec/mux negotiation, then the negotiated request loop.
+pub fn serve_conn(mut conn: Box<dyn Conn>, ctx: Arc<ServeCtx>, handle: EngineHandle) {
     let peer = conn.peer();
     // Handshake. A frame-level version mismatch surfaces here as a
-    // non-transient decode error whose message names both versions —
-    // forward it to the peer before closing.
-    let hello = match recv_msg(conn.as_mut(), codec, None) {
-        Ok(v) => v,
+    // non-transient error whose message names both versions — forward
+    // it to the peer before closing. The hello is indexed lazily: the
+    // accept loop touches only its top-level keys.
+    let payload = match frame::read_frame(conn.as_mut(), frame::CODEC_JSON) {
+        Ok(p) => p,
         Err(e) => {
             if !e.is_transient_net() {
-                let _ = send_msg(conn.as_mut(), codec, &wire::err_envelope(&e), None);
+                let _ = send_msg(conn.as_mut(), &serializer::JSON, &wire::err_envelope(&e), None);
                 crate::log_warn!("engine-serve: {peer}: bad handshake: {e}");
             }
             return;
         }
     };
-    if let Err(e) = wire::check_hello(&hello) {
-        let _ = send_msg(conn.as_mut(), codec, &wire::err_envelope(&e), None);
-        crate::log_warn!("engine-serve: {peer}: rejected handshake: {e}");
-        return;
+    let caps = match check_hello_payload(&payload) {
+        Ok(caps) => caps,
+        Err(e) => {
+            let _ = send_msg(conn.as_mut(), &serializer::JSON, &wire::err_envelope(&e), None);
+            crate::log_warn!("engine-serve: {peer}: rejected handshake: {e}");
+            return;
+        }
+    };
+    let ours = serializer::supported_ids(ctx.wire_codec);
+    let ack = wire::WireCaps {
+        codecs: ours.to_vec(),
+        // The server always supports multiplexing; the link uses it iff
+        // the client asked. Echoing the choice keeps negotiation
+        // symmetric with no extra round-trip.
+        mux: caps.mux,
     }
-    let ack = wire::ack(
-        super::frame::PROTOCOL_VERSION,
+    .stamp(wire::ack(
+        frame::PROTOCOL_VERSION,
         ctx.layout,
         &ctx.backend,
         ctx.engines,
         ctx.shapes.clone(),
-    );
-    if send_msg(conn.as_mut(), codec, &ack, None).is_err() {
+    ));
+    if send_msg(conn.as_mut(), &serializer::JSON, &ack, None).is_err() {
         return;
     }
+    let codec_id = wire::negotiate_codec(ours, &caps.codecs);
+    let Some(codec) = serializer::codec_by_id(codec_id) else {
+        return; // unreachable: negotiation picks from our own list
+    };
+    if caps.mux {
+        serve_mux(conn, codec, ctx, handle, peer);
+    } else {
+        serve_serial(conn, codec, ctx, handle, peer);
+    }
+}
 
+/// Validate a raw hello payload without materializing it.
+fn check_hello_payload(payload: &[u8]) -> Result<wire::WireCaps> {
+    let text = std::str::from_utf8(payload)
+        .map_err(|_| Error::net("hello is not valid UTF-8"))?;
+    let doc = LazyDoc::index(text)?;
+    wire::check_hello_lazy(&doc)
+}
+
+/// One request/response at a time over the whole connection — the PR 6
+/// semantics, kept for old peers and non-mux clients.
+fn serve_serial(
+    mut conn: Box<dyn Conn>,
+    codec: &'static dyn Serializer,
+    ctx: Arc<ServeCtx>,
+    handle: EngineHandle,
+    peer: String,
+) {
     loop {
-        let req = match recv_msg(conn.as_mut(), codec, None) {
-            Ok(v) => v,
+        let payload = match frame::read_frame(conn.as_mut(), codec.codec_id()) {
+            Ok(p) => p,
             Err(e) => {
                 if !e.is_transient_net() {
                     let _ = send_msg(conn.as_mut(), codec, &wire::err_envelope(&e), None);
@@ -115,19 +175,143 @@ pub fn serve_conn(
                 return;
             }
         };
-        let reply = match dispatch_op(&req, ctx, &handle) {
-            Ok(result) => wire::ok_envelope(result),
-            Err(e) if is_engine_down(&e) => {
-                // The fleet is shutting down: close instead of replying
-                // so the client treats this shard as dead and reroutes.
-                crate::log_warn!("engine-serve: {peer}: fleet down mid-call, closing");
+        match answer(&payload, codec, &ctx, &handle, &peer) {
+            Outcome::Reply(reply) => {
+                if send_msg(conn.as_mut(), codec, &reply, None).is_err() {
+                    return;
+                }
+            }
+            Outcome::Fatal(reply) => {
+                let _ = send_msg(conn.as_mut(), codec, &reply, None);
                 return;
             }
-            Err(e) => wire::err_envelope(&e),
-        };
-        if send_msg(conn.as_mut(), codec, &reply, None).is_err() {
+            Outcome::Close => return,
+        }
+    }
+}
+
+/// Correlation-id multiplexing: the reader keeps draining frames while
+/// each request runs on its own worker; replies are written id-tagged
+/// under the writer lock. Closing is one-way: once any worker takes the
+/// writer (fleet down / protocol violation), later workers drop their
+/// replies and the reader exits on the client's EOF.
+fn serve_mux(
+    conn: Box<dyn Conn>,
+    codec: &'static dyn Serializer,
+    ctx: Arc<ServeCtx>,
+    handle: EngineHandle,
+    peer: String,
+) {
+    let (mut rd, wr) = match conn.split() {
+        Ok(halves) => halves,
+        Err(e) => {
+            crate::log_warn!("engine-serve: {peer}: cannot split connection: {e}");
             return;
         }
+    };
+    let writer: Arc<Mutex<Option<Box<dyn WriteHalf>>>> = Arc::new(Mutex::new(Some(wr)));
+    loop {
+        let payload = match frame::read_frame(&mut *rd, codec.codec_id()) {
+            Ok(p) => p,
+            Err(e) => {
+                if !e.is_transient_net() {
+                    if let Some(w) = writer.lock().unwrap().as_mut() {
+                        let _ = send_msg(&mut **w, codec, &wire::err_envelope(&e), None);
+                    }
+                }
+                return;
+            }
+        };
+        let ctx = ctx.clone();
+        let handle = handle.clone();
+        let writer = writer.clone();
+        let peer = peer.clone();
+        let spawned = std::thread::Builder::new()
+            .name("ttc-mux-op".to_string())
+            .spawn(move || match answer(&payload, codec, &ctx, &handle, &peer) {
+                Outcome::Reply(reply) => {
+                    let mut w = writer.lock().unwrap();
+                    if let Some(w) = w.as_mut() {
+                        let _ = send_msg(&mut **w, codec, &reply, None);
+                    }
+                }
+                Outcome::Fatal(reply) => {
+                    if let Some(mut w) = writer.lock().unwrap().take() {
+                        let _ = send_msg(&mut *w, codec, &reply, None);
+                        w.shutdown();
+                    }
+                }
+                Outcome::Close => {
+                    crate::log_warn!("engine-serve: {peer}: fleet down mid-call, closing");
+                    if let Some(mut w) = writer.lock().unwrap().take() {
+                        w.shutdown();
+                    }
+                }
+            });
+        if spawned.is_err() {
+            return;
+        }
+    }
+}
+
+/// Execute one raw request payload. Echoes the request's correlation
+/// `id` (when present) into the reply so the client's demux layer can
+/// route it.
+fn answer(
+    payload: &[u8],
+    codec: &'static dyn Serializer,
+    ctx: &ServeCtx,
+    handle: &EngineHandle,
+    peer: &str,
+) -> Outcome {
+    // Control-plane fast path: on a JSON link, `info` and `metrics`
+    // need only the `op` (and `id`) keys — index the payload lazily
+    // instead of materializing the whole document.
+    if codec.codec_id() == frame::CODEC_JSON {
+        if let Some(outcome) = lazy_control_answer(payload, ctx, handle) {
+            return outcome;
+        }
+    }
+    let req = match codec.decode(payload) {
+        Ok(v) => v,
+        Err(e) => return Outcome::Fatal(wire::err_envelope(&e)),
+    };
+    let id = req.get("id").and_then(Value::as_usize);
+    match dispatch_op(&req, ctx, handle) {
+        Ok(result) => Outcome::Reply(stamp_id(wire::ok_envelope(result), id)),
+        Err(e) if is_engine_down(&e) => {
+            // The fleet is shutting down: close instead of replying so
+            // the client treats this shard as dead and reroutes.
+            crate::log_warn!("engine-serve: {peer}: fleet down mid-call, closing");
+            Outcome::Close
+        }
+        Err(e) => Outcome::Reply(stamp_id(wire::err_envelope(&e), id)),
+    }
+}
+
+/// Answer `info`/`metrics` from a lazily indexed JSON payload, or
+/// `None` when the op needs (or the payload defies) a full parse.
+fn lazy_control_answer(payload: &[u8], ctx: &ServeCtx, handle: &EngineHandle) -> Option<Outcome> {
+    let text = std::str::from_utf8(payload).ok()?;
+    let doc = LazyDoc::index(text).ok()?;
+    let result = match doc.str_of("op") {
+        Some("info") => handle.info(),
+        Some("metrics") => Ok(Value::obj().with("pool", ctx.reporter.report())),
+        _ => return None,
+    };
+    let reply = match result {
+        Ok(v) => wire::ok_envelope(v),
+        // Fleet down: let the eager path re-discover it and close.
+        Err(e) if is_engine_down(&e) => return None,
+        Err(e) => wire::err_envelope(&e),
+    };
+    Some(Outcome::Reply(stamp_id(reply, doc.usize_of("id"))))
+}
+
+fn stamp_id(reply: Value, id: Option<usize>) -> Value {
+    match id {
+        Some(id) => reply.with("id", id),
+        None => reply,
     }
 }
 
@@ -152,7 +336,7 @@ fn dispatch_op(req: &Value, ctx: &ServeCtx, handle: &EngineHandle) -> Result<Val
         "generate" => {
             let kind = GenKind::parse(req.req_str("kind")?)?;
             let temperature = req.req_f64("temperature")? as f32;
-            let max_steps = req.opt_usize("max_steps");
+            let max_steps = req.get("max_steps").and_then(Value::as_usize);
             let rows = req.req_arr("prompts")?;
             let mut jobs = Vec::with_capacity(rows.len());
             for row in rows {
@@ -166,7 +350,8 @@ fn dispatch_op(req: &Value, ctx: &ServeCtx, handle: &EngineHandle) -> Result<Val
             // Deadlines cross the wire relative (clocks differ across
             // processes) and are re-anchored to the server's clock.
             let deadline = req
-                .opt_f64("deadline_rel_ms")
+                .get("deadline_rel_ms")
+                .and_then(Value::as_f64)
                 .map(|rel| ctx.clock.now_ms() + rel.max(0.0));
             let results = handle.generate_with_deadline(jobs, deadline)?;
             Ok(Value::obj().with(
@@ -256,7 +441,7 @@ fn dispatch_op(req: &Value, ctx: &ServeCtx, handle: &EngineHandle) -> Result<Val
         "metrics" => Ok(Value::obj().with("pool", ctx.reporter.report())),
         other => Err(Error::net(format!(
             "unknown op '{other}' (this server speaks wire protocol v{})",
-            super::frame::PROTOCOL_VERSION
+            frame::PROTOCOL_VERSION
         ))),
     }
 }
@@ -273,7 +458,7 @@ impl TcpEngineServer {
     /// Start the fleet from `cfg` and listen on `addr`.
     pub fn bind(cfg: &Config, addr: &str) -> Result<TcpEngineServer> {
         let pool = EnginePool::start(cfg)?;
-        let ctx = Arc::new(ServeCtx::from_pool(&pool, cfg.engine.backend.as_str())?);
+        let ctx = Arc::new(ServeCtx::from_pool(&pool, cfg)?);
         let handle = pool.handle();
         let listener = std::net::TcpListener::bind(addr)
             .map_err(|e| Error::net(format!("cannot listen on {addr}: {e}")))?;
@@ -299,9 +484,7 @@ impl TcpEngineServer {
                     // client EOF or fleet shutdown.
                     let _ = std::thread::Builder::new()
                         .name("ttc-conn".to_string())
-                        .spawn(move || {
-                            serve_conn(Box::new(TcpConn::new(stream)), &JsonCodec, &ctx, handle)
-                        });
+                        .spawn(move || serve_conn(Box::new(TcpConn::new(stream)), ctx, handle));
                 }
             })
             .map_err(|e| Error::internal(format!("cannot spawn accept thread: {e}")))?;
@@ -368,7 +551,7 @@ impl LoopbackEngineServer {
         cfg: &Config,
         pool: EnginePool,
     ) -> Result<(LoopbackConnector, LoopbackEngineServer)> {
-        let ctx = Arc::new(ServeCtx::from_pool(&pool, cfg.engine.backend.as_str())?);
+        let ctx = Arc::new(ServeCtx::from_pool(&pool, cfg)?);
         let handle = pool.handle();
         let (accept_tx, accept_rx) = channel::<AcceptMsg>();
         let accept = std::thread::Builder::new()
@@ -379,7 +562,7 @@ impl LoopbackEngineServer {
                     let handle = handle.clone();
                     let _ = std::thread::Builder::new()
                         .name("ttc-loopback-conn".to_string())
-                        .spawn(move || serve_conn(Box::new(conn), &JsonCodec, &ctx, handle));
+                        .spawn(move || serve_conn(Box::new(conn), ctx, handle));
                 }
             })
             .map_err(|e| Error::internal(format!("cannot spawn accept thread: {e}")))?;
@@ -416,6 +599,8 @@ impl Drop for LoopbackEngineServer {
 mod tests {
     use super::*;
     use crate::config::BackendKind;
+    use crate::net::serializer::JsonCodec;
+    use crate::net::transport::recv_msg;
 
     fn sim_cfg(engines: usize) -> Config {
         let mut cfg = Config::default();
@@ -469,5 +654,27 @@ mod tests {
         send_msg(conn.as_mut(), &codec, &Value::obj().with("op", "metrics"), None).unwrap();
         let m = wire::unwrap_response(recv_msg(conn.as_mut(), &codec, None).unwrap()).unwrap();
         assert!(m.req("pool").is_ok());
+    }
+
+    #[test]
+    fn old_style_hello_gets_a_serial_json_connection_with_id_echo() {
+        use super::super::transport::Connector;
+        let (connector, _server) = LoopbackEngineServer::spawn(&sim_cfg(1)).unwrap();
+        let mut conn = connector.connect().unwrap();
+        let codec = JsonCodec;
+        // a hello with NO capability keys — a PR 6-era client
+        let hello = wire::hello(super::super::frame::PROTOCOL_VERSION, wire::ProbeLayout::current());
+        send_msg(conn.as_mut(), &codec, &hello, None).unwrap();
+        let ack = recv_msg(conn.as_mut(), &codec, None).unwrap();
+        // the ack advertises the new capability keys additively
+        let caps = wire::WireCaps::of(&ack);
+        assert!(caps.codecs.contains(&super::super::frame::CODEC_JSON));
+        assert!(!caps.mux, "mux must only engage when the client asks");
+        // replies on a serial link echo a correlation id if one is sent
+        let req = Value::obj().with("op", "metrics").with("id", 7usize);
+        send_msg(conn.as_mut(), &codec, &req, None).unwrap();
+        let reply = recv_msg(conn.as_mut(), &codec, None).unwrap();
+        assert_eq!(reply.req_usize("id").unwrap(), 7);
+        wire::unwrap_response(reply).unwrap();
     }
 }

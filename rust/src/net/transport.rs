@@ -22,6 +22,29 @@ pub trait Conn: Read + Write + Send {
     fn set_read_timeout(&mut self, timeout: Option<Duration>) -> std::io::Result<()>;
     /// Human-readable peer description for log/error messages.
     fn peer(&self) -> String;
+    /// Split into independently owned read and write halves so a reader
+    /// thread can demultiplex replies while writers enqueue frames.
+    fn split(self: Box<Self>) -> Result<(Box<dyn ReadHalf>, Box<dyn WriteHalf>)>;
+}
+
+/// The read side of a split [`Conn`], owned by a demux reader thread.
+pub trait ReadHalf: Read + Send {
+    /// Set (or clear) the blocking-read timeout (the reader polls with a
+    /// short timeout so it can notice a dying link between frames).
+    fn set_read_timeout(&mut self, timeout: Option<Duration>) -> std::io::Result<()>;
+    /// Human-readable peer description for log/error messages.
+    fn peer(&self) -> String;
+}
+
+/// The write side of a split [`Conn`], shared behind a mutex by
+/// concurrent callers.
+pub trait WriteHalf: Write + Send {
+    /// Human-readable peer description for log/error messages.
+    fn peer(&self) -> String;
+    /// Best-effort full-connection shutdown: after this the peer sees
+    /// EOF, which is how a multiplexed server signals "engine down,
+    /// fail over" without a per-call error.
+    fn shutdown(&mut self);
 }
 
 /// Dials new [`Conn`]s to one remote endpoint.
@@ -49,6 +72,12 @@ pub struct NetMetrics {
     pub retries: Counter,
     /// Fresh dials (first connect and every reconnect).
     pub reconnects: Counter,
+    /// High-water mark of concurrent in-flight calls on a multiplexed
+    /// connection (1 means the link never actually overlapped calls).
+    pub mux_inflight_peak: Counter,
+    /// Payload bytes the binary codec saved versus the JSON encoding of
+    /// the same envelopes (0 when the negotiated codec is JSON).
+    pub bytes_saved_vs_json: Counter,
 }
 
 impl NetMetrics {
@@ -64,12 +93,35 @@ impl NetMetrics {
             .with("bytes_received", self.bytes_received.get())
             .with("retries", self.retries.get())
             .with("reconnects", self.reconnects.get())
+            .with("mux_inflight_peak", self.mux_inflight_peak.get())
+            .with("bytes_saved_vs_json", self.bytes_saved_vs_json.get())
+    }
+
+    /// Account one sent frame; credits `bytes_saved_vs_json` when a
+    /// non-JSON codec beat the JSON encoding of the same envelope.
+    pub fn note_sent(&self, codec: &dyn Serializer, v: &Value, payload_len: usize) {
+        self.frames_sent.inc();
+        self.bytes_sent.add(payload_len as u64);
+        if codec.codec_id() != super::frame::CODEC_JSON {
+            self.bytes_saved_vs_json
+                .add(v.encoded_len().saturating_sub(payload_len) as u64);
+        }
+    }
+
+    /// Account one received frame (see [`NetMetrics::note_sent`]).
+    pub fn note_received(&self, codec: &dyn Serializer, v: &Value, payload_len: usize) {
+        self.frames_received.inc();
+        self.bytes_received.add(payload_len as u64);
+        if codec.codec_id() != super::frame::CODEC_JSON {
+            self.bytes_saved_vs_json
+                .add(v.encoded_len().saturating_sub(payload_len) as u64);
+        }
     }
 }
 
 /// Encode `v` with `codec` and write it as one frame.
 pub fn send_msg(
-    conn: &mut dyn Conn,
+    conn: &mut dyn Write,
     codec: &dyn Serializer,
     v: &Value,
     metrics: Option<&NetMetrics>,
@@ -77,24 +129,23 @@ pub fn send_msg(
     let payload = codec.encode(v)?;
     super::frame::write_frame(conn, codec.codec_id(), &payload)?;
     if let Some(m) = metrics {
-        m.frames_sent.inc();
-        m.bytes_sent.add(payload.len() as u64);
+        m.note_sent(codec, v, payload.len());
     }
     Ok(())
 }
 
 /// Read one frame and decode it with `codec`.
 pub fn recv_msg(
-    conn: &mut dyn Conn,
+    conn: &mut dyn Read,
     codec: &dyn Serializer,
     metrics: Option<&NetMetrics>,
 ) -> Result<Value> {
     let payload = super::frame::read_frame(conn, codec.codec_id())?;
+    let v = codec.decode(&payload)?;
     if let Some(m) = metrics {
-        m.frames_received.inc();
-        m.bytes_received.add(payload.len() as u64);
+        m.note_received(codec, &v, payload.len());
     }
-    codec.decode(&payload)
+    Ok(v)
 }
 
 /// A real TCP connection (nodelay, blocking I/O).
@@ -135,6 +186,66 @@ impl Conn for TcpConn {
     }
     fn peer(&self) -> String {
         self.peer.clone()
+    }
+    fn split(self: Box<Self>) -> Result<(Box<dyn ReadHalf>, Box<dyn WriteHalf>)> {
+        let write = self.stream.try_clone().map_err(|e| {
+            Error::net_transient(format!("cannot split connection to {}: {e}", self.peer))
+        })?;
+        Ok((
+            Box::new(TcpReadHalf {
+                stream: self.stream,
+                peer: self.peer.clone(),
+            }),
+            Box::new(TcpWriteHalf {
+                stream: write,
+                peer: self.peer,
+            }),
+        ))
+    }
+}
+
+/// Read side of a split [`TcpConn`] (a `try_clone` of the socket).
+pub struct TcpReadHalf {
+    stream: TcpStream,
+    peer: String,
+}
+
+impl Read for TcpReadHalf {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        self.stream.read(buf)
+    }
+}
+
+impl ReadHalf for TcpReadHalf {
+    fn set_read_timeout(&mut self, timeout: Option<Duration>) -> std::io::Result<()> {
+        self.stream.set_read_timeout(timeout)
+    }
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+}
+
+/// Write side of a split [`TcpConn`].
+pub struct TcpWriteHalf {
+    stream: TcpStream,
+    peer: String,
+}
+
+impl Write for TcpWriteHalf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.stream.write(buf)
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.stream.flush()
+    }
+}
+
+impl WriteHalf for TcpWriteHalf {
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+    fn shutdown(&mut self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
     }
 }
 

@@ -93,6 +93,63 @@ pub fn ack(
         .with("shapes", shapes)
 }
 
+/// Codec/multiplexing capabilities riding on a hello or ack. Both
+/// fields are *additive* handshake keys: a PR 6-era peer neither sends
+/// nor reads them, and [`WireCaps::of`] defaults their absence to
+/// "JSON only, serial", so old and new builds interoperate.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireCaps {
+    /// Frame codec ids the peer speaks (see [`super::serializer`]).
+    pub codecs: Vec<u8>,
+    /// True when the peer can run correlation-id-tagged frames
+    /// concurrently on this connection.
+    pub mux: bool,
+}
+
+impl WireCaps {
+    /// Read the capability fields from a materialized hello/ack.
+    pub fn of(v: &Value) -> WireCaps {
+        let codecs = v
+            .get("codecs")
+            .and_then(Value::as_arr)
+            .map(|items| {
+                items
+                    .iter()
+                    .filter_map(Value::as_usize)
+                    .filter(|&id| id > 0 && id <= u8::MAX as usize)
+                    .map(|id| id as u8)
+                    .collect()
+            })
+            .unwrap_or_else(|| vec![super::frame::CODEC_JSON]);
+        WireCaps {
+            codecs,
+            mux: v.get("mux").and_then(Value::as_bool).unwrap_or(false),
+        }
+    }
+
+    /// Attach the capability fields to a hello or ack.
+    pub fn stamp(&self, mut msg: Value) -> Value {
+        msg.set(
+            "codecs",
+            Value::Arr(self.codecs.iter().map(|&c| Value::from(c as u64)).collect()),
+        );
+        msg.set("mux", self.mux);
+        msg
+    }
+}
+
+/// Pick the data-plane codec: the highest id both sides advertise,
+/// falling back to JSON (which every build speaks). Run independently
+/// on both ends of the handshake it yields the same answer, so the
+/// choice never needs a confirmation round-trip.
+pub fn negotiate_codec(ours: &[u8], theirs: &[u8]) -> u8 {
+    ours.iter()
+        .copied()
+        .filter(|c| theirs.contains(c))
+        .max()
+        .unwrap_or(super::frame::CODEC_JSON)
+}
+
 /// Validate an incoming hello against this build. Returns nothing on
 /// success; errors name both sides' stamps.
 pub fn check_hello(v: &Value) -> Result<()> {
@@ -108,6 +165,37 @@ pub fn check_hello(v: &Value) -> Result<()> {
     }
     let peer = ProbeLayout::from_value(v.req("probe_layout")?)?;
     ProbeLayout::current().check(peer, "client")
+}
+
+/// Validate an incoming hello through the lazy cursor — the server
+/// accept path. Peeks `type`/`protocol` without materializing anything
+/// and only parses the small `probe_layout`/`codecs` fields; the
+/// (potentially large) rest of the document is never built. Returns the
+/// client's capabilities.
+pub fn check_hello_lazy(doc: &crate::util::json::lazy::LazyDoc) -> Result<WireCaps> {
+    if doc.str_of("type") != Some("hello") {
+        return Err(Error::net("expected a hello as the first frame"));
+    }
+    let peer_protocol = doc
+        .usize_of("protocol")
+        .ok_or_else(|| Error::Json("missing or non-integer key 'protocol'".to_string()))?;
+    if peer_protocol != super::frame::PROTOCOL_VERSION as usize {
+        return Err(Error::net(format!(
+            "protocol version mismatch: client speaks v{peer_protocol}, server speaks v{}",
+            super::frame::PROTOCOL_VERSION
+        )));
+    }
+    let peer = ProbeLayout::from_value(&doc.field("probe_layout")?)?;
+    ProbeLayout::current().check(peer, "client")?;
+    let codecs = if doc.has("codecs") {
+        WireCaps::of(&Value::obj().with("codecs", doc.field("codecs")?)).codecs
+    } else {
+        vec![super::frame::CODEC_JSON]
+    };
+    Ok(WireCaps {
+        codecs,
+        mux: doc.bool_of("mux").unwrap_or(false),
+    })
 }
 
 /// Validate a server ack; returns (backend name, engines, shapes).
@@ -328,6 +416,59 @@ mod tests {
         assert!(!err.is_transient_net());
         let msg = err.to_string();
         assert!(msg.contains("remote engine error") && msg.contains("bucket overflow"), "{msg}");
+    }
+
+    #[test]
+    fn caps_default_to_json_serial_for_old_peers() {
+        // a PR 6-era hello carries neither "codecs" nor "mux"
+        let h = hello(super::super::frame::PROTOCOL_VERSION, ProbeLayout::current());
+        let caps = WireCaps::of(&h);
+        assert_eq!(caps.codecs, vec![super::super::frame::CODEC_JSON]);
+        assert!(!caps.mux);
+
+        let stamped = WireCaps {
+            codecs: vec![1, 2],
+            mux: true,
+        }
+        .stamp(h);
+        let caps = WireCaps::of(&stamped);
+        assert_eq!(caps.codecs, vec![1, 2]);
+        assert!(caps.mux);
+        // the stamped hello still validates for old-style readers
+        check_hello(&stamped).unwrap();
+    }
+
+    #[test]
+    fn codec_negotiation_picks_highest_common_id() {
+        assert_eq!(negotiate_codec(&[1, 2], &[1, 2]), 2);
+        assert_eq!(negotiate_codec(&[1, 2], &[1]), 1);
+        assert_eq!(negotiate_codec(&[1], &[1, 2]), 1);
+        // pathological: no overlap still falls back to JSON
+        assert_eq!(negotiate_codec(&[2], &[7]), 1);
+    }
+
+    #[test]
+    fn lazy_hello_check_matches_eager() {
+        let h = WireCaps {
+            codecs: vec![1, 2],
+            mux: true,
+        }
+        .stamp(hello(super::super::frame::PROTOCOL_VERSION, ProbeLayout::current()));
+        let text = h.dumps();
+        let doc = crate::util::json::lazy::LazyDoc::index(&text).unwrap();
+        let caps = check_hello_lazy(&doc).unwrap();
+        assert_eq!(caps.codecs, vec![1, 2]);
+        assert!(caps.mux);
+
+        let skewed = hello(super::super::frame::PROTOCOL_VERSION + 1, ProbeLayout::current());
+        let text = skewed.dumps();
+        let doc = crate::util::json::lazy::LazyDoc::index(&text).unwrap();
+        let err = check_hello_lazy(&doc).unwrap_err();
+        assert!(err.to_string().contains("version mismatch"), "{err}");
+
+        let not_hello = Value::obj().with("type", "ping").dumps();
+        let doc = crate::util::json::lazy::LazyDoc::index(&not_hello).unwrap();
+        assert!(check_hello_lazy(&doc).is_err());
     }
 
     #[test]

@@ -408,7 +408,7 @@ pub fn cmd_serve(raw: &[String]) -> Result<()> {
         &[
             "rate", "requests", "workers", "lambda-t", "lambda-l", "strategy", "embedding",
             "deadline-ms", "max-tokens", "budget-mix", "engines", "backend", "remote",
-            "cache-entries", "cache-shards",
+            "wire-codec", "cache-entries", "cache-shards",
         ],
     ]
     .concat();
@@ -422,9 +422,13 @@ pub fn cmd_serve(raw: &[String]) -> Result<()> {
         cfg.engine.backend = BackendKind::parse(b)?;
     }
     cfg.engine.engines = args.usize_or("engines", cfg.engine.engines)?;
+    if let Some(c) = args.opt_str("wire-codec") {
+        cfg.engine.wire_codec = crate::config::WireCodec::parse(c)?;
+    }
     if let Some(remote) = args.opt_str("remote") {
-        // --remote host:port[,host:port...] shards the engine pool over a
-        // `ttc engine-serve` fleet (one RemoteBackend per engine slot)
+        // --remote host:port[,host:port...] shards the engine pool over
+        // a `ttc engine-serve` fleet; slots aimed at the same host share
+        // one multiplexed connection
         cfg.engine.backend = BackendKind::Remote;
         cfg.engine.remote_addrs = remote
             .split(',')
@@ -558,7 +562,7 @@ pub fn cmd_serve(raw: &[String]) -> Result<()> {
 pub fn cmd_engine_serve(raw: &[String]) -> Result<()> {
     let values: Vec<&str> = [
         COMMON_VALUES,
-        &["addr", "backend", "engines", "cache-entries", "cache-shards"],
+        &["addr", "backend", "engines", "wire-codec", "cache-entries", "cache-shards"],
     ]
     .concat();
     let args = Args::parse(raw, &values, &["sim", "cache"])?;
@@ -578,6 +582,9 @@ pub fn cmd_engine_serve(raw: &[String]) -> Result<()> {
         ));
     }
     cfg.engine.engines = args.usize_or("engines", cfg.engine.engines)?;
+    if let Some(c) = args.opt_str("wire-codec") {
+        cfg.engine.wire_codec = crate::config::WireCodec::parse(c)?;
+    }
     if cfg.engine.backend == BackendKind::Sim && !cfg.engine.sim_clock {
         // same rule as serve: the sim backend's latency semantics come
         // from the sim clock's cost model

@@ -15,6 +15,10 @@
 use crate::error::{Error, Result};
 use std::fmt::Write as _;
 
+/// Zero-copy lazy field access over serialized JSON (see `json/lazy.rs`).
+#[path = "json/lazy.rs"]
+pub mod lazy;
+
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
@@ -183,18 +187,33 @@ impl Value {
         out
     }
 
-    fn write_to(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+    /// Byte length `dumps()` would produce, computed without allocating.
+    /// The wire layer uses this to report how many bytes the binary codec
+    /// saved versus the JSON encoding of the same envelope.
+    pub fn encoded_len(&self) -> usize {
+        let mut counter = CountWriter(0);
+        self.write_to(&mut counter, None, 0);
+        counter.0
+    }
+
+    fn write_to<W: std::fmt::Write>(&self, out: &mut W, indent: Option<usize>, depth: usize) {
         match self {
-            Value::Null => out.push_str("null"),
-            Value::Bool(true) => out.push_str("true"),
-            Value::Bool(false) => out.push_str("false"),
+            Value::Null => {
+                let _ = out.write_str("null");
+            }
+            Value::Bool(true) => {
+                let _ = out.write_str("true");
+            }
+            Value::Bool(false) => {
+                let _ = out.write_str("false");
+            }
             Value::Num(n) => write_number(out, *n),
             Value::Str(s) => write_escaped(out, s),
             Value::Arr(items) => {
-                out.push('[');
+                let _ = out.write_char('[');
                 for (i, item) in items.iter().enumerate() {
                     if i > 0 {
-                        out.push(',');
+                        let _ = out.write_char(',');
                     }
                     newline_indent(out, indent, depth + 1);
                     item.write_to(out, indent, depth + 1);
@@ -202,45 +221,55 @@ impl Value {
                 if !items.is_empty() {
                     newline_indent(out, indent, depth);
                 }
-                out.push(']');
+                let _ = out.write_char(']');
             }
             Value::Obj(fields) => {
-                out.push('{');
+                let _ = out.write_char('{');
                 for (i, (k, v)) in fields.iter().enumerate() {
                     if i > 0 {
-                        out.push(',');
+                        let _ = out.write_char(',');
                     }
                     newline_indent(out, indent, depth + 1);
                     write_escaped(out, k);
-                    out.push(':');
+                    let _ = out.write_char(':');
                     if indent.is_some() {
-                        out.push(' ');
+                        let _ = out.write_char(' ');
                     }
                     v.write_to(out, indent, depth + 1);
                 }
                 if !fields.is_empty() {
                     newline_indent(out, indent, depth);
                 }
-                out.push('}');
+                let _ = out.write_char('}');
             }
         }
     }
 }
 
-fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
+/// `fmt::Write` sink that only counts bytes; backs `Value::encoded_len`.
+struct CountWriter(usize);
+
+impl std::fmt::Write for CountWriter {
+    fn write_str(&mut self, s: &str) -> std::fmt::Result {
+        self.0 += s.len();
+        Ok(())
+    }
+}
+
+fn newline_indent<W: std::fmt::Write>(out: &mut W, indent: Option<usize>, depth: usize) {
     if let Some(w) = indent {
-        out.push('\n');
+        let _ = out.write_char('\n');
         for _ in 0..(w * depth) {
-            out.push(' ');
+            let _ = out.write_char(' ');
         }
     }
 }
 
-fn write_number(out: &mut String, n: f64) {
+fn write_number<W: std::fmt::Write>(out: &mut W, n: f64) {
     if n.is_nan() || n.is_infinite() {
         // JSON has no NaN/Inf; emit null (matches python json.dumps default
         // behaviour closely enough for metric outputs, and parses back).
-        out.push_str("null");
+        let _ = out.write_str("null");
     } else if n.fract() == 0.0 && n.abs() < 1e15 {
         let _ = write!(out, "{}", n as i64);
     } else {
@@ -248,22 +277,34 @@ fn write_number(out: &mut String, n: f64) {
     }
 }
 
-fn write_escaped(out: &mut String, s: &str) {
-    out.push('"');
+fn write_escaped<W: std::fmt::Write>(out: &mut W, s: &str) {
+    let _ = out.write_char('"');
     for c in s.chars() {
         match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
+            '"' => {
+                let _ = out.write_str("\\\"");
+            }
+            '\\' => {
+                let _ = out.write_str("\\\\");
+            }
+            '\n' => {
+                let _ = out.write_str("\\n");
+            }
+            '\r' => {
+                let _ = out.write_str("\\r");
+            }
+            '\t' => {
+                let _ = out.write_str("\\t");
+            }
             c if (c as u32) < 0x20 => {
                 let _ = write!(out, "\\u{:04x}", c as u32);
             }
-            c => out.push(c),
+            c => {
+                let _ = out.write_char(c);
+            }
         }
     }
-    out.push('"');
+    let _ = out.write_char('"');
 }
 
 impl From<bool> for Value {
@@ -778,6 +819,14 @@ mod tests {
                 crate::testkit::prop_assert(
                     &back == v,
                     format!("roundtrip changed the value: {text:?}"),
+                )?;
+                crate::testkit::prop_assert(
+                    v.encoded_len() == text.len(),
+                    format!(
+                        "encoded_len {} != dumps len {} for {text:?}",
+                        v.encoded_len(),
+                        text.len()
+                    ),
                 )?;
                 // bounded parse agrees with unbounded on in-limit docs
                 let bounded = parse_bounded(&text, text.len())

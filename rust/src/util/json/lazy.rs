@@ -1,0 +1,465 @@
+//! Zero-copy lazy access over a serialized JSON object.
+//!
+//! [`LazyDoc::index`] scans a JSON document once and records a borrowed
+//! byte span per top-level field, without materializing any values. The
+//! server accept loop and `engine-serve` control-plane paths (hello,
+//! info, metrics) use it to peek at one or two routing fields (`type`,
+//! `op`, `id`) and only pay a full [`super::parse`] for the envelopes
+//! that actually need it.
+//!
+//! Scope and limitations, by design:
+//! * The document root must be an object — the only shape the wire
+//!   protocol sends.
+//! * Field lookup compares the *raw* key bytes between the quotes, so a
+//!   key written with escape sequences (`"type"`) will not match a
+//!   literal lookup name. The protocol only emits plain ASCII keys.
+//! * The scanner validates structure (brackets, strings, delimiters)
+//!   but not scalar spelling; a malformed number inside a field is only
+//!   caught if that field is materialized with [`LazyDoc::field`].
+
+use super::Value;
+use crate::error::{Error, Result};
+
+/// A lazily indexed view of a serialized JSON object.
+pub struct LazyDoc<'a> {
+    /// `(raw key bytes, raw value slice)` in document order.
+    fields: Vec<(&'a str, &'a str)>,
+}
+
+impl<'a> LazyDoc<'a> {
+    /// Index the top-level fields of a serialized JSON object.
+    pub fn index(text: &'a str) -> Result<LazyDoc<'a>> {
+        let mut s = Scan {
+            text,
+            bytes: text.as_bytes(),
+            pos: 0,
+        };
+        s.skip_ws();
+        s.expect(b'{', "an object")?;
+        let mut fields = Vec::new();
+        s.skip_ws();
+        if s.peek() == Some(b'}') {
+            s.pos += 1;
+        } else {
+            loop {
+                s.skip_ws();
+                let key = s.scan_string()?;
+                // strip the surrounding quotes: raw key bytes only
+                let key = &key[1..key.len() - 1];
+                s.skip_ws();
+                s.expect(b':', "':' after a key")?;
+                s.skip_ws();
+                let val = s.scan_value()?;
+                fields.push((key, val));
+                s.skip_ws();
+                match s.next_byte() {
+                    Some(b',') => continue,
+                    Some(b'}') => break,
+                    _ => return Err(s.fail("expected ',' or '}' after a field")),
+                }
+            }
+        }
+        s.skip_ws();
+        if s.pos != s.bytes.len() {
+            return Err(s.fail("trailing data after the object"));
+        }
+        Ok(LazyDoc { fields })
+    }
+
+    /// Like [`LazyDoc::index`] with a size cap, mirroring
+    /// [`super::parse_bounded`].
+    pub fn index_bounded(text: &'a str, max_bytes: usize) -> Result<LazyDoc<'a>> {
+        if text.len() > max_bytes {
+            return Err(Error::Json(format!(
+                "lazy: document is {} bytes, limit {max_bytes}",
+                text.len()
+            )));
+        }
+        LazyDoc::index(text)
+    }
+
+    /// Number of top-level fields.
+    pub fn len(&self) -> usize {
+        self.fields.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fields.is_empty()
+    }
+
+    /// Top-level keys in document order (raw bytes between the quotes).
+    pub fn keys(&self) -> impl Iterator<Item = &'a str> + '_ {
+        self.fields.iter().map(|(k, _)| *k)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.raw(key).is_some()
+    }
+
+    /// The raw serialized slice of a field's value, if present.
+    pub fn raw(&self, key: &str) -> Option<&'a str> {
+        self.fields
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|(_, v)| *v)
+    }
+
+    /// Borrowed string value of a field — the fast path. Returns `None`
+    /// if the field is missing, not a string, or contains escape
+    /// sequences (the caller falls back to [`LazyDoc::field`] then).
+    pub fn str_of(&self, key: &str) -> Option<&'a str> {
+        let raw = self.raw(key)?;
+        if raw.len() >= 2 && raw.starts_with('"') && !raw.contains('\\') {
+            Some(&raw[1..raw.len() - 1])
+        } else {
+            None
+        }
+    }
+
+    /// Numeric value of a field, parsed in place.
+    pub fn num(&self, key: &str) -> Option<f64> {
+        let raw = self.raw(key)?;
+        match raw.as_bytes().first() {
+            Some(b'-') | Some(b'0'..=b'9') => raw.parse::<f64>().ok().filter(|n| n.is_finite()),
+            _ => None,
+        }
+    }
+
+    /// Integer value of a field (round-trip checked, like
+    /// [`Value::as_usize`]).
+    pub fn usize_of(&self, key: &str) -> Option<usize> {
+        let n = self.num(key)?;
+        if n.fract() == 0.0 && n >= 0.0 && n <= u64::MAX as f64 {
+            Some(n as usize)
+        } else {
+            None
+        }
+    }
+
+    pub fn bool_of(&self, key: &str) -> Option<bool> {
+        match self.raw(key) {
+            Some("true") => Some(true),
+            Some("false") => Some(false),
+            _ => None,
+        }
+    }
+
+    /// Materialize a single field through the eager parser. Error
+    /// messages match [`Value::req`] so callers can switch between the
+    /// lazy and eager paths without changing their error contract.
+    pub fn field(&self, key: &str) -> Result<Value> {
+        let raw = self
+            .raw(key)
+            .ok_or_else(|| Error::Json(format!("missing key '{key}'")))?;
+        super::parse(raw)
+    }
+}
+
+/// Byte scanner that finds value spans without building anything.
+struct Scan<'a> {
+    text: &'a str,
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Scan<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn next_byte(&mut self) -> Option<u8> {
+        let b = self.peek()?;
+        self.pos += 1;
+        Some(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, want: u8, what: &str) -> Result<()> {
+        if self.peek() == Some(want) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.fail(&format!("expected {what}")))
+        }
+    }
+
+    fn fail(&self, msg: &str) -> Error {
+        Error::Json(format!("lazy: {msg} at byte {}", self.pos))
+    }
+
+    /// Scan a string (cursor on the opening quote); returns the slice
+    /// including both quotes.
+    fn scan_string(&mut self) -> Result<&'a str> {
+        let start = self.pos;
+        self.expect(b'"', "a string")?;
+        loop {
+            match self.next_byte() {
+                Some(b'"') => return Ok(&self.text[start..self.pos]),
+                // skip the escaped byte; multi-byte escapes (\uXXXX) are
+                // plain ASCII after the backslash, so byte-stepping is safe
+                Some(b'\\') => {
+                    self.pos += 1;
+                }
+                Some(_) => {}
+                None => return Err(self.fail("unterminated string")),
+            }
+        }
+    }
+
+    /// Scan one value of any shape; returns its serialized slice.
+    fn scan_value(&mut self) -> Result<&'a str> {
+        let start = self.pos;
+        match self.peek() {
+            Some(b'"') => {
+                self.scan_string()?;
+            }
+            Some(b'{') | Some(b'[') => {
+                // non-recursive bracket matcher, string-aware and
+                // kind-aware (a '}' cannot close a '[')
+                let mut stack: Vec<u8> = Vec::new();
+                loop {
+                    match self.peek() {
+                        Some(b'"') => {
+                            self.scan_string()?;
+                        }
+                        Some(open @ (b'{' | b'[')) => {
+                            stack.push(open);
+                            self.pos += 1;
+                        }
+                        Some(close @ (b'}' | b']')) => {
+                            let want = if close == b'}' { b'{' } else { b'[' };
+                            if stack.pop() != Some(want) {
+                                return Err(self.fail("mismatched bracket"));
+                            }
+                            self.pos += 1;
+                            if stack.is_empty() {
+                                break;
+                            }
+                        }
+                        Some(_) => {
+                            self.pos += 1;
+                        }
+                        None => return Err(self.fail("unterminated container")),
+                    }
+                }
+            }
+            Some(b't') => self.literal("true")?,
+            Some(b'f') => self.literal("false")?,
+            Some(b'n') => self.literal("null")?,
+            Some(b'-') | Some(b'0'..=b'9') => {
+                self.pos += 1;
+                while matches!(
+                    self.peek(),
+                    Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+                ) {
+                    self.pos += 1;
+                }
+            }
+            _ => return Err(self.fail("expected a value")),
+        }
+        Ok(&self.text[start..self.pos])
+    }
+
+    fn literal(&mut self, word: &str) -> Result<()> {
+        if self.text[self.pos..].starts_with(word) {
+            self.pos += word.len();
+            Ok(())
+        } else {
+            Err(self.fail(&format!("expected '{word}'")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{parse, Value};
+    use super::*;
+
+    #[test]
+    fn indexes_a_hello_without_materializing() {
+        let text = r#"{"type":"hello","protocol":1,"probe_layout":{"layout_version":1,"n_methods":5},"client":"ttc","codecs":[1,2],"mux":true}"#;
+        let doc = LazyDoc::index(text).unwrap();
+        assert_eq!(doc.str_of("type"), Some("hello"));
+        assert_eq!(doc.num("protocol"), Some(1.0));
+        assert_eq!(doc.bool_of("mux"), Some(true));
+        assert!(doc.has("codecs"));
+        assert!(!doc.has("nope"));
+        // only probe_layout gets materialized
+        let layout = doc.field("probe_layout").unwrap();
+        assert_eq!(layout.req_usize("layout_version").unwrap(), 1);
+        let err = doc.field("missing").unwrap_err().to_string();
+        assert!(err.contains("missing key"), "{err}");
+    }
+
+    #[test]
+    fn raw_spans_cover_nested_values() {
+        let text = r#"{ "a" : [1, {"b": "}]"}], "c": "x\"y", "d": -1.5e3 }"#;
+        let doc = LazyDoc::index(text).unwrap();
+        assert_eq!(doc.raw("a"), Some(r#"[1, {"b": "}]"}]"#));
+        assert_eq!(doc.raw("c"), Some(r#""x\"y""#));
+        // escaped string: fast path declines, field() materializes
+        assert_eq!(doc.str_of("c"), None);
+        assert_eq!(doc.field("c").unwrap().as_str(), Some("x\"y"));
+        assert_eq!(doc.num("d"), Some(-1.5e3));
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in [
+            "",
+            "[1]",
+            "{",
+            r#"{"a"}"#,
+            r#"{"a":}"#,
+            r#"{"a":1,}"#,
+            r#"{"a":1} extra"#,
+            r#"{"a":"unterminated"#,
+            r#"{"a":[1,2}"#,
+        ] {
+            assert!(LazyDoc::index(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn bounded_index_enforces_the_cap() {
+        let text = r#"{"a":1}"#;
+        assert!(LazyDoc::index_bounded(text, text.len()).is_ok());
+        assert!(LazyDoc::index_bounded(text, text.len() - 1).is_err());
+    }
+
+    /// Random top-level object with plain keys and arbitrary nested
+    /// values (every scalar shape, escape-heavy strings).
+    fn gen_doc(rng: &mut crate::util::rng::Rng) -> Value {
+        fn gen(rng: &mut crate::util::rng::Rng, depth: usize) -> Value {
+            let roll = if depth == 0 {
+                rng.below(4)
+            } else {
+                rng.below(6)
+            };
+            match roll {
+                0 => Value::Null,
+                1 => Value::Bool(rng.below(2) == 0),
+                2 => match rng.below(3) {
+                    0 => Value::Num(rng.range(-1_000_000, 1_000_000) as f64),
+                    1 => Value::Num(rng.range(-1000, 1000) as f64 / 64.0),
+                    _ => Value::Num(rng.range(1, 1_000_000) as f64 * 1e-9),
+                },
+                3 => {
+                    let s: String = (0..rng.below(10))
+                        .map(|_| match rng.below(8) {
+                            0 => '"',
+                            1 => '\\',
+                            2 => '\n',
+                            3 => '\u{1}',
+                            4 => 'é',
+                            5 => '😀',
+                            _ => (b'a' + rng.below(26) as u8) as char,
+                        })
+                        .collect();
+                    Value::Str(s)
+                }
+                4 => Value::Arr((0..rng.below(4)).map(|_| gen(rng, depth - 1)).collect()),
+                _ => {
+                    let mut obj = Value::obj();
+                    for i in 0..rng.below(4) {
+                        let v = gen(rng, depth - 1);
+                        obj = obj.with(&format!("n{i}"), v);
+                    }
+                    obj
+                }
+            }
+        }
+        let mut obj = Value::obj();
+        for i in 0..1 + rng.below(5) {
+            let v = gen(rng, 3);
+            obj = obj.with(&format!("k{i}"), v);
+        }
+        obj
+    }
+
+    #[test]
+    fn prop_lazy_fields_agree_with_eager_parse() {
+        crate::testkit::forall(
+            "lazy vs eager",
+            200,
+            |rng| gen_doc(rng),
+            |v| {
+                let text = v.dumps();
+                let doc = LazyDoc::index(&text)
+                    .map_err(|e| format!("index of {text:?} failed: {e}"))?;
+                let fields = v.as_obj().expect("gen_doc returns objects");
+                crate::testkit::prop_assert(
+                    doc.len() == fields.len(),
+                    format!("field count {} != {}", doc.len(), fields.len()),
+                )?;
+                for (key, want) in fields {
+                    let got = doc
+                        .field(key)
+                        .map_err(|e| format!("field '{key}' of {text:?} failed: {e}"))?;
+                    crate::testkit::prop_assert(
+                        &got == want,
+                        format!("field '{key}' of {text:?}: lazy {got:?} != eager {want:?}"),
+                    )?;
+                    if let Some(s) = doc.str_of(key) {
+                        crate::testkit::prop_assert(
+                            want.as_str() == Some(s),
+                            format!("str_of '{key}' returned {s:?}"),
+                        )?;
+                    }
+                    if let Some(n) = doc.num(key) {
+                        crate::testkit::prop_assert(
+                            want.as_f64() == Some(n),
+                            format!("num '{key}' returned {n}"),
+                        )?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_truncated_and_mutated_docs_never_panic() {
+        crate::testkit::forall(
+            "lazy adversarial",
+            150,
+            |rng| {
+                let text = gen_doc(rng).dumps();
+                let flip = rng.below(text.len().max(1));
+                (text, flip, rng.below(256) as u8)
+            },
+            |(text, flip, byte)| {
+                // every strict prefix must be rejected (root is an object)
+                for cut in 0..text.len() {
+                    if !text.is_char_boundary(cut) {
+                        continue;
+                    }
+                    crate::testkit::prop_assert(
+                        LazyDoc::index(&text[..cut]).is_err(),
+                        format!("prefix {:?} of {text:?} indexed", &text[..cut]),
+                    )?;
+                }
+                // single-byte mutation: indexing must not panic; if it
+                // succeeds, materializing every field must not panic
+                let mut bytes = text.clone().into_bytes();
+                if !bytes.is_empty() {
+                    bytes[*flip] = *byte;
+                }
+                if let Ok(mutated) = String::from_utf8(bytes) {
+                    if let Ok(doc) = LazyDoc::index(&mutated) {
+                        let keys: Vec<&str> = doc.keys().collect();
+                        for key in keys {
+                            let _ = doc.field(key);
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -3,21 +3,29 @@
 //!
 //! * a client pool of [`RemoteBackend`]s fronting a loopback
 //!   `engine-serve` fleet produces results identical to the local sim
-//!   backend at temperature 0, for client pool sizes 1, 2 and 4;
+//!   backend at temperature 0, for client pool sizes 1, 2 and 4 — on
+//!   both the per-slot serial JSON path and the shared multiplexed
+//!   connection speaking the TTCB binary codec;
+//! * a binary-preferring client facing a JSON-only server negotiates
+//!   the codec down cleanly and still completes calls;
 //! * killing one remote shard mid-run fails over: every admitted
 //!   request still completes and the pool report shows
-//!   `rerouted_submits > 0`;
+//!   `rerouted_submits > 0` (also exercised on the mux/binary path);
 //! * protocol-version and probe-layout mismatches surface as clear,
-//!   non-transient `Error::Net`s naming both sides.
+//!   non-transient `Error::Net`s naming both sides, and malformed TTCB
+//!   payloads are non-transient decode errors.
 //!
 //! Client and server pools share one sim clock — the loopback-only
 //! virtual-timeline exception documented in `docs/remote.md`.
 
-use ttc::config::{BackendKind, Config};
+use ttc::config::{BackendKind, Config, WireCodec};
 use ttc::engine::EnginePool;
 use ttc::net::transport::{recv_msg, send_msg};
 use ttc::net::{frame, wire};
-use ttc::net::{JsonCodec, LoopbackConnector, NetMetrics, RemoteBackend, RemoteConfig};
+use ttc::net::{
+    JsonCodec, LoopbackConnector, MuxTransport, NetMetrics, RemoteBackend, RemoteConfig,
+    Serializer, TTCB,
+};
 use ttc::strategies::stepper::{Stepper, Ticket};
 use ttc::strategies::{registry, Budget, Executor, Outcome, Strategy, StrategyParams};
 use ttc::util::clock::{self, SharedClock};
@@ -38,6 +46,15 @@ fn quick_remote() -> RemoteConfig {
         connect_timeout_ms: 1_000.0,
         retries: 1,
         backoff_ms: 1.0,
+        ..RemoteConfig::default()
+    }
+}
+
+/// Same, but preferring the TTCB binary codec on the data plane.
+fn quick_binary() -> RemoteConfig {
+    RemoteConfig {
+        wire_codec: WireCodec::Binary,
+        ..quick_remote()
     }
 }
 
@@ -76,11 +93,10 @@ fn assert_same_result(a: &Outcome, b: &Outcome, label: &str) {
     assert_eq!(a.preempted, b.preempted, "{label}: preempted diverged");
 }
 
-#[test]
-fn remote_loopback_matches_local_sim_for_pool_sizes_1_2_4() {
+/// Per-method cases, no deadlines: outcomes are time-independent, so
+/// they cannot depend on transport, wire codec or client pool size.
+fn method_cases() -> Vec<(Strategy, Budget, String)> {
     let mut rng = Rng::new(0xC0DE, 0);
-    // per-method cases, no deadlines: outcomes are time-independent, so
-    // they cannot depend on transport or client pool size
     let mut cases: Vec<(Strategy, Budget, String)> = Vec::new();
     for method in registry::all() {
         let params = if method.uses_rounds() {
@@ -100,43 +116,138 @@ fn remote_loopback_matches_local_sim_for_pool_sizes_1_2_4() {
         let query = format!("Q:7+{}-2+8=?\n", rng.range(0, 9));
         cases.push((Strategy::new(method.name(), params), budget, query));
     }
+    cases
+}
 
-    // reference: one local sim engine, blocking, one request at a time
+/// Reference outcomes: one local sim engine, blocking, one request at
+/// a time.
+fn reference_outcomes(cases: &[(Strategy, Budget, String)]) -> Vec<Outcome> {
     let ref_pool = EnginePool::start(&sim_cfg(1)).unwrap();
     let serial = Executor::new(ref_pool.handle(), ref_pool.clock.clone(), 0.0);
-    let reference: Vec<Outcome> = cases
+    cases
         .iter()
         .map(|(s, b, q)| serial.run_budgeted(s, q, b.clone()).unwrap())
-        .collect();
+        .collect()
+}
+
+/// Drive every case through `executor` concurrently and check each
+/// outcome against the local-sim reference.
+fn run_cases_and_compare(
+    executor: &Executor,
+    cases: &[(Strategy, Budget, String)],
+    reference: &[Outcome],
+    label: &str,
+) {
+    let mut stepper = Stepper::new(executor.clone());
+    for (i, (s, b, q)) in cases.iter().enumerate() {
+        stepper
+            .admit(Ticket {
+                query: q.clone(),
+                strategy: s.clone(),
+                budget: b.clone(),
+                tag: i as u64,
+            })
+            .unwrap();
+    }
+    stepper.run_to_completion().unwrap();
+    let mut done = stepper.drain_completed();
+    assert_eq!(done.len(), cases.len());
+    done.sort_by_key(|c| c.tag);
+    for (c, r) in done.iter().zip(reference) {
+        assert_same_result(&c.outcome, r, &format!("{} via {label}", c.strategy_id));
+    }
+}
+
+#[test]
+fn remote_loopback_matches_local_sim_for_pool_sizes_1_2_4() {
+    let cases = method_cases();
+    let reference = reference_outcomes(&cases);
 
     for engines in [1usize, 2, 4] {
         let clock = clock::sim_clock();
         let (connector, _server) =
             ttc::net::LoopbackEngineServer::spawn_with_clock(&sim_cfg(2), clock.clone()).unwrap();
         let (_pool, executor) = remote_pool(engines, clock, connector);
-        let mut stepper = Stepper::new(executor.clone());
-        for (i, (s, b, q)) in cases.iter().enumerate() {
-            stepper
-                .admit(Ticket {
-                    query: q.clone(),
-                    strategy: s.clone(),
-                    budget: b.clone(),
-                    tag: i as u64,
-                })
-                .unwrap();
-        }
-        stepper.run_to_completion().unwrap();
-        let mut done = stepper.drain_completed();
-        assert_eq!(done.len(), cases.len());
-        done.sort_by_key(|c| c.tag);
-        for (c, r) in done.iter().zip(&reference) {
-            assert_same_result(
-                &c.outcome,
-                r,
-                &format!("{} via {engines} remote engine(s)", c.strategy_id),
-            );
-        }
+        run_cases_and_compare(
+            &executor,
+            &cases,
+            &reference,
+            &format!("{engines} serial-json remote engine(s)"),
+        );
     }
+}
+
+#[test]
+fn binary_mux_loopback_matches_local_sim_for_pool_sizes_1_2_4() {
+    let cases = method_cases();
+    let reference = reference_outcomes(&cases);
+
+    for engines in [1usize, 2, 4] {
+        let clock = clock::sim_clock();
+        let mut server_cfg = sim_cfg(2);
+        server_cfg.engine.wire_codec = WireCodec::Binary;
+        let (connector, _server) =
+            ttc::net::LoopbackEngineServer::spawn_with_clock(&server_cfg, clock.clone()).unwrap();
+        // ALL client slots share this one multiplexed connection.
+        let transport =
+            MuxTransport::new(Box::new(connector), quick_binary(), NetMetrics::new());
+        let pool = EnginePool::start_with_factories(
+            &sim_cfg(engines),
+            clock.clone(),
+            "remote backend",
+            |_| RemoteBackend::mux_factory(transport.clone(), clock.clone()),
+        )
+        .unwrap();
+        assert_eq!(
+            transport.wire_status(),
+            ("ttcb", true),
+            "both sides speak binary, so TTCB must be negotiated"
+        );
+        let executor = Executor::new(pool.handle(), pool.clock.clone(), 0.0);
+        run_cases_and_compare(
+            &executor,
+            &cases,
+            &reference,
+            &format!("{engines} mux-ttcb slot(s) on one connection"),
+        );
+        assert_eq!(
+            transport.metrics().reconnects.get(),
+            1,
+            "{engines} slots must share one dial"
+        );
+        assert!(
+            transport.metrics().bytes_saved_vs_json.get() > 0,
+            "the binary codec must beat JSON on the data plane"
+        );
+    }
+}
+
+#[test]
+fn binary_client_negotiates_down_to_json_with_a_json_only_server() {
+    let clock = clock::sim_clock();
+    // server keeps the default engine.wire_codec = json
+    let (connector, _server) =
+        ttc::net::LoopbackEngineServer::spawn_with_clock(&sim_cfg(1), clock.clone()).unwrap();
+    let transport = MuxTransport::new(Box::new(connector), quick_binary(), NetMetrics::new());
+    let pool = EnginePool::start_with_factories(&sim_cfg(1), clock.clone(), "remote backend", |_| {
+        RemoteBackend::mux_factory(transport.clone(), clock.clone())
+    })
+    .unwrap();
+    assert_eq!(
+        transport.wire_status(),
+        ("json", true),
+        "codec must fall back to JSON without giving up multiplexing"
+    );
+    let executor = Executor::new(pool.handle(), pool.clock.clone(), 0.0);
+    let out = executor
+        .run_budgeted(&Strategy::beam(2, 2, 8), "Q:7+1-2+8=?\n", Budget::unlimited())
+        .unwrap();
+    assert!(out.engine_calls > 0, "calls must succeed on the downgraded link");
+    assert_eq!(
+        transport.metrics().bytes_saved_vs_json.get(),
+        0,
+        "a JSON link cannot claim binary byte savings"
+    );
 }
 
 #[test]
@@ -190,6 +301,99 @@ fn killing_a_remote_shard_mid_run_fails_over_and_completes() {
         metrics.retries.get() >= 1,
         "the client should have retried the dying shard before failing over"
     );
+}
+
+#[test]
+fn killing_a_mux_shard_mid_run_fails_over_and_completes() {
+    let clock = clock::sim_clock();
+    let mut shard_cfg = sim_cfg(1);
+    shard_cfg.engine.wire_codec = WireCodec::Binary;
+    let (conn_a, _server_a) =
+        ttc::net::LoopbackEngineServer::spawn_with_clock(&shard_cfg, clock.clone()).unwrap();
+    let (conn_b, mut server_b) =
+        ttc::net::LoopbackEngineServer::spawn_with_clock(&shard_cfg, clock.clone()).unwrap();
+    // one multiplexed connection per shard, shared by the slots aimed
+    // at it (the per-host sharing EnginePool does for real addresses)
+    let transports = [
+        MuxTransport::new(Box::new(conn_a), quick_binary(), NetMetrics::new()),
+        MuxTransport::new(Box::new(conn_b), quick_binary(), NetMetrics::new()),
+    ];
+    let pool = EnginePool::start_with_factories(&sim_cfg(2), clock.clone(), "remote backend", |i| {
+        RemoteBackend::mux_factory(transports[i % 2].clone(), clock.clone())
+    })
+    .unwrap();
+    let executor = Executor::new(pool.handle(), pool.clock.clone(), 0.0);
+
+    let mut stepper = Stepper::new(executor.clone());
+    for i in 0..6u64 {
+        stepper
+            .admit(Ticket {
+                query: format!("Q:7+{i}-2+8=?\n"),
+                strategy: Strategy::beam(3, 2, 10),
+                budget: Budget::unlimited(),
+                tag: i,
+            })
+            .unwrap();
+    }
+    // progress a little, then lose the shard behind transport 1
+    for _ in 0..2 {
+        stepper.advance(None).unwrap();
+    }
+    server_b.kill();
+    stepper.run_to_completion().unwrap();
+    let done = stepper.drain_completed();
+    assert_eq!(done.len(), 6, "every request must survive the mux shard kill");
+
+    let report = pool.report();
+    assert!(
+        report.req_f64("rerouted_submits").unwrap() >= 1.0,
+        "failover must be visible in the pool report: {report:?}"
+    );
+    assert_eq!(report.req_f64("live_engines").unwrap(), 1.0);
+    assert_eq!(report.req_f64("engines_marked_dead").unwrap(), 1.0);
+}
+
+#[test]
+fn malformed_ttcb_payloads_are_non_transient_net_errors() {
+    use ttc::net::transport::Connector;
+
+    // codec-level: a truncated TTCB document must fail cleanly
+    let bytes = TTCB
+        .encode(&wire::hello(frame::PROTOCOL_VERSION, wire::ProbeLayout::current()))
+        .unwrap();
+    let err = TTCB.decode(&bytes[..bytes.len() - 1]).unwrap_err();
+    assert_eq!(err.kind_str(), "net");
+    assert!(!err.is_transient_net(), "truncated TTCB must not be retried: {err}");
+
+    // wire-level: after negotiating binary, a garbage TTCB frame draws
+    // a fatal error envelope (the server closes the connection after).
+    let mut cfg = sim_cfg(1);
+    cfg.engine.wire_codec = WireCodec::Binary;
+    let (connector, _server) = ttc::net::LoopbackEngineServer::spawn(&cfg).unwrap();
+    let mut conn = connector.connect().unwrap();
+    let json = JsonCodec;
+    let hello = wire::WireCaps {
+        codecs: vec![frame::CODEC_JSON, frame::CODEC_TTCB],
+        mux: false,
+    }
+    .stamp(wire::hello(frame::PROTOCOL_VERSION, wire::ProbeLayout::current()));
+    send_msg(conn.as_mut(), &json, &hello, None).unwrap();
+    let ack = recv_msg(conn.as_mut(), &json, None).unwrap();
+    wire::check_ack(&ack).unwrap();
+    assert_eq!(
+        wire::negotiate_codec(
+            &[frame::CODEC_JSON, frame::CODEC_TTCB],
+            &wire::WireCaps::of(&ack).codecs,
+        ),
+        frame::CODEC_TTCB,
+        "a binary server must advertise TTCB"
+    );
+
+    // tag 0x04 = string, varint length 100, but no bytes behind it
+    frame::write_frame(conn.as_mut(), frame::CODEC_TTCB, &[0x04, 100]).unwrap();
+    let err = wire::unwrap_response(recv_msg(conn.as_mut(), &TTCB, None).unwrap()).unwrap_err();
+    assert_eq!(err.kind_str(), "net");
+    assert!(!err.is_transient_net(), "a decode failure must not be retried: {err}");
 }
 
 #[test]

@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Run the router + engine + batcher + prm benches, emit BENCH_<sha>.json
+# Run the router + engine + batcher + prm + net benches, emit BENCH_<sha>.json
 # at the repo root, and gate on p50 regressions against the committed
 # baseline (rust/benches/baseline.json).
 #
@@ -27,8 +27,8 @@ OUT="$ROOT/BENCH_${SHA}.json"
 RAW="$(mktemp)"
 trap 'rm -f "$RAW"' EXIT
 
-echo "==> cargo bench (router + engine + batcher + prm)"
-cargo bench --bench bench_router --bench bench_engine --bench bench_batcher --bench bench_prm | tee "$RAW"
+echo "==> cargo bench (router + engine + batcher + prm + net)"
+cargo bench --bench bench_router --bench bench_engine --bench bench_batcher --bench bench_prm --bench bench_net | tee "$RAW"
 
 python3 - "$RAW" "$OUT" "$SHA" <<'PY'
 import json, sys
