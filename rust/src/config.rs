@@ -123,6 +123,13 @@ pub struct EngineConfig {
     pub sim_clock: bool,
     /// Micro-batch wait window (ms) for the continuous batcher.
     pub batch_window_ms: f64,
+    /// Iteration-level (continuous-batching) decode scheduling: retire
+    /// finished/expired rows between decode steps and admit new arrivals
+    /// into the freed slots mid-decode. Only takes effect on steppable
+    /// backends (sim, device); adapter backends (remote) always use the
+    /// round-based path. `false` forces round-based scheduling everywhere
+    /// (the equivalence baseline).
+    pub continuous: bool,
     /// Execution backend the engine threads drive.
     pub backend: BackendKind,
     /// Engines in the pool (`ttc serve --engines N`); 1 = the classic
@@ -183,6 +190,7 @@ impl Default for EngineConfig {
             max_new_tokens: 96,
             sim_clock: false,
             batch_window_ms: 0.3,
+            continuous: true,
             backend: BackendKind::Device,
             engines: 1,
             remote_addrs: Vec::new(),
@@ -409,6 +417,7 @@ impl Config {
         e.max_new_tokens = v.opt_usize("max_new_tokens", e.max_new_tokens);
         e.sim_clock = v.opt_bool("sim_clock", e.sim_clock);
         e.batch_window_ms = v.opt_f64("batch_window_ms", e.batch_window_ms);
+        e.continuous = v.opt_bool("continuous", e.continuous);
         e.engines = v.opt_usize("engines", e.engines);
         e.remote_timeout_ms = v.opt_f64("remote_timeout_ms", e.remote_timeout_ms);
         e.remote_retries = v.opt_usize("remote_retries", e.remote_retries);
@@ -651,6 +660,15 @@ mod tests {
         assert!(c.merge_json(&bad).is_err());
         let bad = parse(r#"{"engine": {"wire_codec": 2}}"#).unwrap();
         assert!(c.merge_json(&bad).is_err());
+    }
+
+    #[test]
+    fn continuous_merge() {
+        let mut c = Config::default();
+        assert!(c.engine.continuous, "continuous must be the default");
+        let v = parse(r#"{"engine": {"continuous": false}}"#).unwrap();
+        c.merge_json(&v).unwrap();
+        assert!(!c.engine.continuous);
     }
 
     #[test]

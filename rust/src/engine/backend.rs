@@ -27,6 +27,17 @@
 //!   tokens (batch-shape invariant) — this is what makes
 //!   stepped == blocking and serial == pool equivalences hold;
 //! * `prm_score` / `embed` must be pure functions of their inputs.
+//!
+//! Backends may additionally implement the **steppable session API**
+//! (`prefill` → [`DecodeSession`] → `decode_step`): the engine thread's
+//! continuous-batching path drives it iteration-by-iteration, retiring
+//! finished/expired rows between steps and admitting newly-arrived jobs
+//! into freed slots. A provided run-to-completion adapter (the default
+//! method bodies) makes every legacy backend steppable by buffering one
+//! `generate` call — correct but saving no real compute — so only
+//! backends whose `stepping()` returns `true` are routed through the
+//! continuous path. At temperature 0 the stepped output must be
+//! byte-identical to `generate`'s for the same prompt.
 
 use crate::config::EngineConfig;
 use crate::engine::batcher::BatchPlan;
@@ -106,6 +117,94 @@ impl EngineShapes {
     }
 }
 
+/// One live row's output for a single decode step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepTok {
+    /// The token generated this step.
+    pub token: u32,
+    /// This was the row's *last* natural token. The natural end rides
+    /// along *with* the final token (rather than being discovered by an
+    /// empty follow-up step) so the engine never charges a decode step
+    /// that produced nothing.
+    pub last: bool,
+}
+
+/// Per-slot output of one decode step, indexed by slot (`0..bucket`):
+/// `None` for slots that produced nothing (free or retired), `Some` for
+/// each live row's next token.
+pub type StepRows = Vec<Option<StepTok>>;
+
+/// A live decode session over one bucket-shaped call. The engine thread
+/// owns the scheduling view — which request each slot serves, per-row
+/// budgets, emitted prefixes — while the backend parks its execution
+/// state (buffers, cursors, device handles) behind the type-erased
+/// `state` box.
+pub struct DecodeSession {
+    pub kind: GenKind,
+    pub temperature: f32,
+    /// Slot count (the planned batch bucket).
+    pub bucket: usize,
+    pub len_bucket: usize,
+    /// Initial slots whose natural output was already empty at prefill.
+    /// The engine retires them before charging any decode step,
+    /// mirroring the legacy accounting loop where a zero-length row
+    /// never keeps a call alive.
+    pub empty_rows: Vec<usize>,
+    state: Box<dyn std::any::Any>,
+}
+
+impl DecodeSession {
+    /// A session shaped like `plan` holding backend-specific `state`.
+    pub fn new(plan: &BatchPlan, state: Box<dyn std::any::Any>) -> DecodeSession {
+        DecodeSession {
+            kind: plan.kind,
+            temperature: plan.temperature,
+            bucket: plan.bucket,
+            len_bucket: plan.len_bucket,
+            empty_rows: Vec::new(),
+            state,
+        }
+    }
+
+    /// The backend's parked state, downcast back to its concrete type.
+    /// Errs if the session was prefilled by a different backend.
+    pub fn state_mut<T: 'static>(&mut self) -> Result<&mut T> {
+        self.state.downcast_mut::<T>().ok_or_else(|| {
+            Error::Engine(
+                "decode session state does not belong to this backend".into(),
+            )
+        })
+    }
+}
+
+/// One buffered row of a decode session: the precomputed natural tokens
+/// plus the replay cursor. Shared by the run-to-completion adapter and
+/// the sim backend's native stepping.
+struct BufferedRow {
+    natural: Vec<u32>,
+    cursor: usize,
+}
+
+impl BufferedRow {
+    fn step(&mut self) -> Option<StepTok> {
+        if self.cursor >= self.natural.len() {
+            return None;
+        }
+        let token = self.natural[self.cursor];
+        self.cursor += 1;
+        Some(StepTok {
+            token,
+            last: self.cursor == self.natural.len(),
+        })
+    }
+}
+
+/// Session state of the default run-to-completion adapter: the full
+/// `generate` output buffered per slot, replayed one token per step.
+struct BufferedSession {
+    rows: Vec<Option<BufferedRow>>,
+}
+
 /// One bucket-shaped execution surface. Implementations live on the
 /// engine thread (they may hold `!Send` state, e.g. PJRT handles); the
 /// factory that *builds* them crosses the thread boundary instead
@@ -167,6 +266,101 @@ pub trait Backend {
 
     /// Replace the backend's probe parameters (e.g. from a checkpoint).
     fn probe_load(&mut self, params: Vec<f32>) -> Result<()>;
+
+    // -- steppable decode sessions (iteration-level scheduling) -------
+
+    /// Whether the steppable API below is implemented *natively* —
+    /// i.e. retiring a row between steps genuinely skips its remaining
+    /// decode work. The default method bodies are a run-to-completion
+    /// adapter over `generate`: correct (so callers never branch) but
+    /// compute is already spent by prefill time, so the engine thread
+    /// only routes generates through the continuous-batching path when
+    /// this returns `true`.
+    fn stepping(&self) -> bool {
+        false
+    }
+
+    /// Open a decode session for one bucket-shaped plan, admitting the
+    /// initial rows (`prompts[i]` occupies slot `i`; slots
+    /// `prompts.len()..bucket` start free). Slots whose natural output
+    /// is already empty are listed in the session's `empty_rows`.
+    fn prefill(&mut self, plan: &BatchPlan, prompts: &[&[u32]]) -> Result<DecodeSession> {
+        let naturals = self.generate(plan, prompts)?;
+        let mut rows: Vec<Option<BufferedRow>> = (0..plan.bucket).map(|_| None).collect();
+        let mut empty = Vec::new();
+        for (slot, natural) in naturals.into_iter().enumerate() {
+            if natural.is_empty() {
+                empty.push(slot);
+            }
+            rows[slot] = Some(BufferedRow { natural, cursor: 0 });
+        }
+        let mut session = DecodeSession::new(plan, Box::new(BufferedSession { rows }));
+        session.empty_rows = empty;
+        Ok(session)
+    }
+
+    /// Advance every live row by one token. A `None` on a slot the
+    /// caller believes occupied means the row has nothing further
+    /// (already past its natural end) — with well-behaved callers that
+    /// retire rows on `last`, it only happens for free slots.
+    fn decode_step(&mut self, session: &mut DecodeSession) -> Result<StepRows> {
+        let bucket = session.bucket;
+        let buf = session.state_mut::<BufferedSession>()?;
+        let mut out: StepRows = (0..bucket).map(|_| None).collect();
+        for (slot, row) in buf.rows.iter_mut().enumerate() {
+            if let Some(row) = row {
+                out[slot] = row.step();
+            }
+        }
+        Ok(out)
+    }
+
+    /// Admit one newly-arrived row into a free slot mid-decode. Returns
+    /// whether the row has any natural output (`false` = the engine
+    /// should retire it immediately, before the next charged step). The
+    /// adapter runs a single-row `generate` and buffers it.
+    fn admit_row(&mut self, session: &mut DecodeSession, slot: usize, prompt: &[u32]) -> Result<bool> {
+        let plan = BatchPlan {
+            job_indices: vec![0],
+            bucket: 1,
+            len_bucket: session.len_bucket,
+            kind: session.kind,
+            temperature: session.temperature,
+            max_steps: None,
+        };
+        let natural = self
+            .generate(&plan, &[prompt])?
+            .pop()
+            .ok_or_else(|| Error::Engine("backend returned no rows for admitted job".into()))?;
+        let has_work = !natural.is_empty();
+        let buf = session.state_mut::<BufferedSession>()?;
+        match buf.rows.get_mut(slot) {
+            Some(free @ None) => *free = Some(BufferedRow { natural, cursor: 0 }),
+            Some(Some(_)) => {
+                return Err(Error::Engine(format!("slot {slot} is already occupied")))
+            }
+            None => {
+                return Err(Error::Engine(format!(
+                    "slot {slot} out of range for bucket {}",
+                    session.bucket
+                )))
+            }
+        }
+        Ok(has_work)
+    }
+
+    /// Free one slot, abandoning whatever decode work the row had left.
+    /// Returns a lower bound on the decode steps genuinely *not*
+    /// executed thanks to the retirement — the adapter already ran
+    /// `generate` to completion, so it reports 0.
+    fn retire_row(&mut self, session: &mut DecodeSession, slot: usize) -> usize {
+        if let Ok(buf) = session.state_mut::<BufferedSession>() {
+            if let Some(row) = buf.rows.get_mut(slot) {
+                *row = None;
+            }
+        }
+        0
+    }
 }
 
 /// Builds a [`Backend`] *on* the engine thread. The closure is `Send`
@@ -526,6 +720,108 @@ impl Backend for SimBackend {
         self.probe_params = Some(params);
         Ok(())
     }
+
+    // -- native stepping ----------------------------------------------
+    //
+    // The emulator has no real decoder, so "stepping" precomputes each
+    // row's natural continuation at admission and replays it one token
+    // per step — but unlike the buffered adapter it *reports* the
+    // unemitted tail on retirement: exactly the steps a real
+    // iteration-level decoder would have skipped, which is what the sim
+    // clock's cost model is standing in for.
+
+    fn stepping(&self) -> bool {
+        true
+    }
+
+    fn prefill(&mut self, plan: &BatchPlan, prompts: &[&[u32]]) -> Result<DecodeSession> {
+        // same one-key-per-call draw as `generate`, so the RNG stream
+        // (and with it any later sampled call) does not depend on which
+        // path the engine routed this plan through
+        let call_key = self.rng.next_u64();
+        let mut rows: Vec<Option<BufferedRow>> = (0..plan.bucket).map(|_| None).collect();
+        let mut empty = Vec::new();
+        for (slot, p) in prompts.iter().enumerate() {
+            let row_key = mix(call_key, slot as u64);
+            let natural = self.continue_row(p, plan.kind, plan.temperature, row_key)?;
+            if natural.is_empty() {
+                empty.push(slot);
+            }
+            rows[slot] = Some(BufferedRow { natural, cursor: 0 });
+        }
+        let mut session = DecodeSession::new(
+            plan,
+            Box::new(SimSession {
+                call_key,
+                admits: 0,
+                rows,
+            }),
+        );
+        session.empty_rows = empty;
+        Ok(session)
+    }
+
+    fn decode_step(&mut self, session: &mut DecodeSession) -> Result<StepRows> {
+        let bucket = session.bucket;
+        let s = session.state_mut::<SimSession>()?;
+        let mut out: StepRows = (0..bucket).map(|_| None).collect();
+        for (slot, row) in s.rows.iter_mut().enumerate() {
+            if let Some(row) = row {
+                out[slot] = row.step();
+            }
+        }
+        Ok(out)
+    }
+
+    fn admit_row(&mut self, session: &mut DecodeSession, slot: usize, prompt: &[u32]) -> Result<bool> {
+        let kind = session.kind;
+        let temperature = session.temperature;
+        // the admitted row's key derives from the session key without
+        // touching the RNG stream: temp-0 byte equivalence with the
+        // round path survives mid-decode admission, and sampled rows
+        // stay reproducible (the salt is disjoint from initial slots)
+        let row_key = {
+            let s = session.state_mut::<SimSession>()?;
+            match s.rows.get(slot) {
+                Some(None) => {}
+                Some(Some(_)) => {
+                    return Err(Error::Engine(format!("slot {slot} is already occupied")))
+                }
+                None => {
+                    return Err(Error::Engine(format!(
+                        "slot {slot} out of range for bucket {}",
+                        session.bucket
+                    )))
+                }
+            }
+            s.admits += 1;
+            mix(s.call_key, (1u64 << 32) + (s.admits << 8) + slot as u64)
+        };
+        let natural = self.continue_row(prompt, kind, temperature, row_key)?;
+        let has_work = !natural.is_empty();
+        let s = session.state_mut::<SimSession>()?;
+        s.rows[slot] = Some(BufferedRow { natural, cursor: 0 });
+        Ok(has_work)
+    }
+
+    fn retire_row(&mut self, session: &mut DecodeSession, slot: usize) -> usize {
+        let Ok(s) = session.state_mut::<SimSession>() else {
+            return 0;
+        };
+        match s.rows.get_mut(slot).and_then(|r| r.take()) {
+            Some(row) => row.natural.len().saturating_sub(row.cursor),
+            None => 0,
+        }
+    }
+}
+
+/// Native stepping state of [`SimBackend`] — see the `impl` comment.
+struct SimSession {
+    /// The per-call RNG key drawn at prefill (mirrors `generate`).
+    call_key: u64,
+    /// Mid-decode admissions so far (salts admitted rows' keys).
+    admits: u64,
+    rows: Vec<Option<BufferedRow>>,
 }
 
 #[cfg(test)]
@@ -682,5 +978,154 @@ mod tests {
         assert_eq!(r1, r2);
         let text = tok.decode(&r1[0]).unwrap();
         assert!(text.starts_with("A:") && text.ends_with('\n'), "{text:?}");
+    }
+
+    // -- steppable session API ----------------------------------------
+
+    /// A backend that does NOT override the steppable methods, to
+    /// exercise the provided run-to-completion adapter.
+    struct Legacy(SimBackend);
+
+    impl Backend for Legacy {
+        fn name(&self) -> &'static str {
+            "legacy"
+        }
+        fn shapes(&self) -> &EngineShapes {
+            self.0.shapes()
+        }
+        fn describe(&self) -> Value {
+            self.0.describe()
+        }
+        fn generate(&mut self, plan: &BatchPlan, prompts: &[&[u32]]) -> Result<Vec<Vec<u32>>> {
+            self.0.generate(plan, prompts)
+        }
+        fn prm_score(&mut self, bucket: usize, prefixes: &[Vec<u32>]) -> Result<Vec<f32>> {
+            self.0.prm_score(bucket, prefixes)
+        }
+        fn embed(&mut self, kind: EmbedKind, bucket: usize, queries: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+            self.0.embed(kind, bucket, queries)
+        }
+        fn probe_fwd(&mut self, feats: &[Vec<f32>]) -> Result<Vec<f32>> {
+            self.0.probe_fwd(feats)
+        }
+        fn probe_train(
+            &mut self,
+            a: &[Vec<f32>],
+            b: &[f32],
+            c: &[Vec<f32>],
+            d: &[f32],
+            e: usize,
+            f: usize,
+        ) -> Result<ProbeTrainReport> {
+            self.0.probe_train(a, b, c, d, e, f)
+        }
+        fn probe_load(&mut self, params: Vec<f32>) -> Result<()> {
+            self.0.probe_load(params)
+        }
+    }
+
+    /// Drive a session to completion, returning per-slot token vectors.
+    fn step_to_end(b: &mut dyn Backend, session: &mut DecodeSession) -> Vec<Vec<u32>> {
+        let mut out = vec![Vec::new(); session.bucket];
+        let mut live: Vec<bool> = (0..session.bucket).map(|_| true).collect();
+        for e in &session.empty_rows {
+            live[*e] = false;
+        }
+        loop {
+            let rows = b.decode_step(session).unwrap();
+            let mut any = false;
+            for (slot, tok) in rows.into_iter().enumerate() {
+                let Some(tok) = tok else { continue };
+                any = true;
+                out[slot].push(tok.token);
+                if tok.last {
+                    live[slot] = false;
+                    b.retire_row(session, slot);
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn stepping_flags_native_vs_adapter() {
+        assert!(sim().stepping());
+        assert!(!Legacy(sim()).stepping());
+    }
+
+    #[test]
+    fn stepped_session_matches_generate_at_temp0() {
+        let tok = Tokenizer::new();
+        let p1 = tok.encode("Q:7+8-5=?\nS:").unwrap();
+        let p2 = tok.encode("Q:2*3+4=?\nS:").unwrap();
+        let pl = plan(GenKind::Full, 0.0, 2);
+        let expect = sim().generate(&pl, &[&p1, &p2]).unwrap();
+        // native sim stepping
+        let mut nat = sim();
+        let mut session = nat.prefill(&pl, &[&p1, &p2]).unwrap();
+        assert_eq!(step_to_end(&mut nat, &mut session), expect);
+        // buffered adapter over a legacy backend
+        let mut leg = Legacy(sim());
+        let mut session = leg.prefill(&pl, &[&p1, &p2]).unwrap();
+        assert_eq!(step_to_end(&mut leg, &mut session), expect);
+    }
+
+    #[test]
+    fn native_retire_reports_unspent_tail_adapter_reports_zero() {
+        let tok = Tokenizer::new();
+        let prompt = tok.encode("Q:7+8-5+2*6=?\nS:").unwrap();
+        let pl = plan(GenKind::Full, 0.0, 1);
+        let natural_len = sim().generate(&pl, &[&prompt]).unwrap()[0].len();
+        assert!(natural_len > 3, "need a multi-step natural for this test");
+
+        let mut nat = sim();
+        let mut session = nat.prefill(&pl, &[&prompt]).unwrap();
+        for _ in 0..3 {
+            let rows = nat.decode_step(&mut session).unwrap();
+            assert!(rows[0].is_some());
+        }
+        assert_eq!(nat.retire_row(&mut session, 0), natural_len - 3);
+        // the slot is free now: nothing further steps
+        assert!(nat.decode_step(&mut session).unwrap()[0].is_none());
+        // double-retire is a no-op
+        assert_eq!(nat.retire_row(&mut session, 0), 0);
+
+        let mut leg = Legacy(sim());
+        let mut session = leg.prefill(&pl, &[&prompt]).unwrap();
+        leg.decode_step(&mut session).unwrap();
+        assert_eq!(leg.retire_row(&mut session, 0), 0, "adapter saves nothing");
+    }
+
+    #[test]
+    fn admit_row_mid_session_matches_temp0_generate() {
+        let tok = Tokenizer::new();
+        let p1 = tok.encode("Q:7+8-5=?\nS:").unwrap();
+        let p2 = tok.encode("Q:2*3+4=?\nS:").unwrap();
+        let expect2 = sim().generate(&plan(GenKind::Full, 0.0, 1), &[&p2]).unwrap();
+        let mut b = sim();
+        // bucket of 2 with one initial row; the second joins mid-decode
+        let mut pl = plan(GenKind::Full, 0.0, 1);
+        pl.bucket = 2;
+        let mut session = b.prefill(&pl, &[&p1]).unwrap();
+        assert_eq!(session.bucket, 2);
+        b.decode_step(&mut session).unwrap();
+        assert!(b.admit_row(&mut session, 1, &p2).unwrap());
+        // occupied / out-of-range slots are rejected
+        assert!(b.admit_row(&mut session, 1, &p2).is_err());
+        assert!(b.admit_row(&mut session, 9, &p2).is_err());
+        let out = step_to_end(&mut b, &mut session);
+        assert_eq!(out[1], expect2[0], "admitted temp-0 row matches generate");
+    }
+
+    #[test]
+    fn prefill_leaves_empty_rows_clear_for_live_prompts() {
+        let tok = Tokenizer::new();
+        let p1 = tok.encode("Q:7+8-5=?\nS:").unwrap();
+        let mut b = sim();
+        let session = b.prefill(&plan(GenKind::Full, 0.0, 1), &[&p1]).unwrap();
+        assert!(session.empty_rows.is_empty());
     }
 }

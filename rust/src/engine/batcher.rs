@@ -99,6 +99,56 @@ pub fn pack_bins(n: usize, buckets: &[usize]) -> Vec<usize> {
     out
 }
 
+/// The padded-length bucket a job decodes under: the single `query_len`
+/// for full generation, the smallest covering chunk bucket otherwise.
+pub fn job_len_bucket(job: &GenJob, len_buckets: &[usize], query_len: usize) -> usize {
+    match job.kind {
+        GenKind::Full => query_len,
+        GenKind::Chunk => pick_bucket(len_buckets, job.tokens.len()),
+    }
+}
+
+/// Slot-admission policy for the continuous decode path: pick which
+/// queued job should fill a freed slot of a *running* session.
+///
+/// `queued` holds candidate indices into `jobs`, in arrival order. A job
+/// is compatible when its generation kind, temperature and padded-length
+/// bucket all match the session's executable shape (rows of one call
+/// must stay homogeneous, exactly as in [`plan_batches_edf`]). Among
+/// compatible jobs the earliest deadline wins; ties keep arrival order —
+/// the same EDF tiebreak the round planner applies, so mid-decode
+/// admission never reorders against it. Returns the *position in
+/// `queued`* (so the caller can `remove` it), or `None` when nothing
+/// compatible is waiting.
+#[allow(clippy::too_many_arguments)]
+pub fn pick_slot_admission(
+    jobs: &[GenJob],
+    queued: &[usize],
+    deadlines: &[f64],
+    kind: GenKind,
+    len_bucket: usize,
+    temperature: f32,
+    len_buckets: &[usize],
+    query_len: usize,
+) -> Option<usize> {
+    let mut best: Option<(f64, usize)> = None; // (deadline, position)
+    for (pos, &ji) in queued.iter().enumerate() {
+        let job = &jobs[ji];
+        if job.kind != kind
+            || job.temperature.to_bits() != temperature.to_bits()
+            || job_len_bucket(job, len_buckets, query_len) != len_bucket
+        {
+            continue;
+        }
+        let d = deadlines[ji];
+        // strictly-earlier wins; equal keeps the earlier queue position
+        if best.map_or(true, |(bd, _)| d < bd) {
+            best = Some((d, pos));
+        }
+    }
+    best.map(|(_, pos)| pos)
+}
+
 /// Earliest deadline among a plan's rows (`f64::INFINITY` when none).
 pub fn plan_deadline(plan: &BatchPlan, deadlines: &[f64]) -> f64 {
     plan.job_indices
@@ -157,10 +207,7 @@ pub fn plan_batches_edf(
     // group key: (kind, len bucket, temperature bits)
     let mut groups: Vec<((GenKind, usize, u32), Vec<usize>)> = Vec::new();
     for (i, job) in jobs.iter().enumerate() {
-        let len_bucket = match job.kind {
-            GenKind::Full => query_len,
-            GenKind::Chunk => pick_bucket(len_buckets, job.tokens.len()),
-        };
+        let len_bucket = job_len_bucket(job, len_buckets, query_len);
         let key = (job.kind, len_bucket, job.temperature.to_bits());
         match groups.iter_mut().find(|(k, _)| *k == key) {
             Some((_, v)) => v.push(i),
@@ -478,6 +525,95 @@ mod tests {
                 "n={n}: packed padding {packed} > greedy {greedy}"
             );
         }
+    }
+
+    #[test]
+    fn slot_admission_prefers_earliest_deadline() {
+        let jobs = vec![
+            job(8, GenKind::Full, 0.8),  // 0: compatible, no deadline
+            job(8, GenKind::Full, 0.5),  // 1: wrong temperature
+            job(40, GenKind::Chunk, 0.8), // 2: wrong kind
+            job(8, GenKind::Full, 0.8),  // 3: compatible, deadline 50
+            job(8, GenKind::Full, 0.8),  // 4: compatible, deadline 10
+        ];
+        let deadlines = vec![f64::INFINITY, 5.0, 1.0, 50.0, 10.0];
+        let queued = vec![0, 1, 2, 3, 4];
+        let pos = pick_slot_admission(
+            &jobs, &queued, &deadlines, GenKind::Full, 32, 0.8, LENS, 32,
+        );
+        assert_eq!(pos, Some(4), "earliest compatible deadline wins");
+        // nothing compatible waiting
+        let none = pick_slot_admission(
+            &jobs, &queued[1..3], &deadlines, GenKind::Full, 32, 0.8, LENS, 32,
+        );
+        assert_eq!(none, None);
+        // deadline tie keeps arrival order
+        let tied = pick_slot_admission(
+            &jobs, &[3, 0, 4], &vec![7.0; 5], GenKind::Full, 32, 0.8, LENS, 32,
+        );
+        assert_eq!(tied, Some(0));
+    }
+
+    #[test]
+    fn prop_slot_admission_compatible_and_edf_minimal() {
+        // the admitted job is always shape-compatible with the session
+        // and has the minimum deadline among compatible queued jobs;
+        // None is returned iff nothing compatible is queued
+        forall(
+            "slot admission is EDF over compatible jobs",
+            200,
+            |rng| {
+                let jobs = random_jobs(rng);
+                let deadlines = random_deadlines(rng, jobs.len());
+                let kind = if rng.below(2) == 0 {
+                    GenKind::Full
+                } else {
+                    GenKind::Chunk
+                };
+                let len_bucket = match kind {
+                    GenKind::Full => 32,
+                    GenKind::Chunk => LENS[rng.below(LENS.len() as u64) as usize],
+                };
+                let temp = if rng.below(2) == 0 { 0.5 } else { 0.8 };
+                (jobs, deadlines, kind, len_bucket, temp)
+            },
+            |(jobs, deadlines, kind, len_bucket, temp)| {
+                let queued: Vec<usize> = (0..jobs.len()).collect();
+                let got = pick_slot_admission(
+                    jobs, &queued, deadlines, *kind, *len_bucket, *temp, LENS, 32,
+                );
+                let compatible: Vec<usize> = queued
+                    .iter()
+                    .copied()
+                    .filter(|&i| {
+                        jobs[i].kind == *kind
+                            && jobs[i].temperature.to_bits() == temp.to_bits()
+                            && job_len_bucket(&jobs[i], LENS, 32) == *len_bucket
+                    })
+                    .collect();
+                match got {
+                    None => prop_assert(
+                        compatible.is_empty(),
+                        format!("returned None with {} compatible jobs", compatible.len()),
+                    ),
+                    Some(pos) => {
+                        let ji = queued[pos];
+                        prop_assert(
+                            compatible.contains(&ji),
+                            format!("admitted incompatible job {ji}"),
+                        )?;
+                        let min = compatible
+                            .iter()
+                            .map(|&i| deadlines[i])
+                            .fold(f64::INFINITY, f64::min);
+                        prop_assert(
+                            deadlines[ji] == min,
+                            format!("admitted deadline {} > min {min}", deadlines[ji]),
+                        )
+                    }
+                }
+            },
+        );
     }
 
     #[test]

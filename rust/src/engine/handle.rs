@@ -526,7 +526,7 @@ impl Engine {
             BackendKind::Sim => "sim backend",
             BackendKind::Remote => "remote backend",
         };
-        Self::start_member_with_factory(clock, index, factory, label, cache)
+        Self::start_member_with_factory(clock, index, factory, label, cache, cfg.engine.continuous)
     }
 
     /// Spawn pool member `index` around a caller-supplied backend
@@ -539,6 +539,7 @@ impl Engine {
         factory: BackendFactory,
         label: &str,
         cache: Option<Arc<EngineCache>>,
+        continuous: bool,
     ) -> Result<Engine> {
         let metrics = Arc::new(EngineMetrics::new());
         let (tx, rx) = channel();
@@ -552,6 +553,7 @@ impl Engine {
                     let _ = ready_tx.send(Ok(()));
                     EngineThread::new(backend, thread_clock, thread_metrics)
                         .with_cache(cache)
+                        .with_continuous(continuous)
                         .serve(rx);
                 }
                 Err(e) => {

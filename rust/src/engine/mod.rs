@@ -48,14 +48,21 @@
 //! rows mid-call the moment their deadline/cancel/token budget runs out —
 //! the engine-level enforcement half of the paper's latency story.
 //!
-//! ## Scheduling rounds
+//! ## Scheduling rounds and continuous batching
 //!
 //! Each engine's serve loop works in rounds ([`scheduler`]): every
-//! message queued on its channel is drained into per-op queues, so
-//! concurrent `Generate`, `PrmScore` and `Embed` requests each merge
-//! into shared bucket-shaped calls (bin-packed to minimize padding), and
-//! planned generate calls dispatch earliest-deadline-first. See
-//! `docs/engine.md` and `docs/backends.md` for the full contracts.
+//! message queued on its channel is drained (bounded by
+//! [`scheduler::DRAIN_CAP`]) into per-op queues, so concurrent
+//! `Generate`, `PrmScore` and `Embed` requests each merge into shared
+//! bucket-shaped calls (bin-packed to minimize padding), and planned
+//! generate calls dispatch earliest-deadline-first. On backends that
+//! step natively ([`backend::Backend::stepping`]), generates go further:
+//! the engine runs them **continuously** — a persistent slot table per
+//! session, per-step retirement of finished/expired/cancelled rows, and
+//! mid-decode admission of newly-arrived jobs into freed slots
+//! ([`batcher::pick_slot_admission`]) — instead of waiting for the next
+//! round. See `docs/engine.md` and `docs/backends.md` for the full
+//! contracts.
 //!
 //! ## Cross-request cache tier
 //!
@@ -76,8 +83,12 @@ pub mod protocol;
 pub mod scheduler;
 pub mod thread;
 
-pub use backend::{Backend, BackendFactory, EngineShapes, SimBackend};
-pub use batcher::{pack_bins, plan_batches, plan_batches_edf, BatchPlan};
+pub use backend::{
+    Backend, BackendFactory, DecodeSession, EngineShapes, SimBackend, StepRows, StepTok,
+};
+pub use batcher::{
+    job_len_bucket, pack_bins, pick_slot_admission, plan_batches, plan_batches_edf, BatchPlan,
+};
 pub use cache::EngineCache;
 pub use handle::{Engine, EngineHandle, PendingReply};
 pub use pool::{EngineLoad, EnginePool, PoolReporter};

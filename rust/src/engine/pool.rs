@@ -398,7 +398,11 @@ fn build_report(
                 .with("prm_rows", m.prm_rows.get())
                 .with("embed_rows", m.embed_rows.get())
                 .with("preempted_rows", m.preempted_rows.get())
-                .with("tokens_generated", m.tokens_generated.get()),
+                .with("tokens_generated", m.tokens_generated.get())
+                .with("slot_occupancy", m.slot_occupancy())
+                .with("decode_steps_saved_live", m.decode_steps_saved_live.get())
+                .with("mid_decode_admits", m.mid_decode_admits.get())
+                .with("retired_rows", m.retired_rows.get()),
         );
     }
     let total: u64 = served.iter().sum();
@@ -551,6 +555,7 @@ impl EnginePool {
                 make(i),
                 label,
                 cache.clone(),
+                cfg.engine.continuous,
             )?);
         }
         Ok(Self::assemble(engines, clock, cache))

@@ -28,6 +28,9 @@ pub struct RowBudget {
     pub deadline_ms: f64,
     /// Shared cooperative cancel flag.
     pub cancel: Option<Arc<AtomicBool>>,
+    /// Secondary job-subset stop flag ([`crate::engine::GenJob::stop`]);
+    /// either flag halts the row.
+    pub stop: Option<Arc<AtomicBool>>,
 }
 
 impl RowBudget {
@@ -36,12 +39,11 @@ impl RowBudget {
         self.natural_len.min(self.cap)
     }
 
-    fn halted(&self, now_ms: f64) -> bool {
-        now_ms >= self.deadline_ms
-            || self
-                .cancel
-                .as_ref()
-                .is_some_and(|f| f.load(Ordering::Relaxed))
+    pub(crate) fn halted(&self, now_ms: f64) -> bool {
+        let up = |f: &Option<Arc<AtomicBool>>| {
+            f.as_ref().is_some_and(|f| f.load(Ordering::Relaxed))
+        };
+        now_ms >= self.deadline_ms || up(&self.cancel) || up(&self.stop)
     }
 }
 
@@ -156,6 +158,7 @@ mod tests {
             cap: usize::MAX,
             deadline_ms: f64::INFINITY,
             cancel: None,
+            stop: None,
         }
     }
 
@@ -237,6 +240,17 @@ mod tests {
         let flag = Arc::new(AtomicBool::new(true));
         let mut rows = vec![row(10), row(10)];
         rows[0].cancel = Some(flag);
+        let (cuts, steps) = run_decode_accounting(&clock, 2, &rows, None);
+        assert_eq!(cuts[0], RowCut { emitted: 0, preempted: true });
+        assert_eq!(cuts[1], RowCut { emitted: 10, preempted: false });
+        assert_eq!(steps, 10);
+    }
+
+    #[test]
+    fn stop_flag_halts_like_cancel() {
+        let clock = SimClock::new(LatencyModel::default());
+        let mut rows = vec![row(10), row(10)];
+        rows[0].stop = Some(Arc::new(AtomicBool::new(true)));
         let (cuts, steps) = run_decode_accounting(&clock, 2, &rows, None);
         assert_eq!(cuts[0], RowCut { emitted: 0, preempted: true });
         assert_eq!(cuts[1], RowCut { emitted: 10, preempted: false });
@@ -355,6 +369,7 @@ mod tests {
                         cap,
                         deadline_ms: deadline,
                         cancel: None,
+                        stop: None,
                     })
                     .collect();
                 let (cuts, steps) = run_decode_accounting(&clock, *batch, &rows, None);

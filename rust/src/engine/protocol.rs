@@ -54,6 +54,13 @@ pub struct GenJob {
     /// Shared cooperative cancel flag (typically the request's
     /// `Budget::cancel`); checked between decode steps.
     pub cancel: Option<Arc<AtomicBool>>,
+    /// Second cooperative stop flag, independent of the request-level
+    /// cancel: strategies scope it to a *subset* of their jobs (e.g.
+    /// `mv_early` shares one per wave so a decided vote retires the
+    /// wave's still-decoding rows) without displacing `Budget::cancel`.
+    /// Atomics cannot be OR-combined after the fact, so the job carries
+    /// both and the decode loop checks either.
+    pub stop: Option<Arc<AtomicBool>>,
 }
 
 impl GenJob {
@@ -65,6 +72,7 @@ impl GenJob {
             temperature,
             max_new_tokens: None,
             cancel: None,
+            stop: None,
         }
     }
 
@@ -78,11 +86,18 @@ impl GenJob {
         self
     }
 
-    /// The job's cancel flag is set.
+    /// Attach the secondary (job-subset) stop flag.
+    pub fn with_stop(mut self, flag: Arc<AtomicBool>) -> GenJob {
+        self.stop = Some(flag);
+        self
+    }
+
+    /// Either cooperative stop flag is set.
     pub fn cancelled(&self) -> bool {
-        self.cancel
-            .as_ref()
-            .is_some_and(|f| f.load(Ordering::Relaxed))
+        let up = |f: &Option<Arc<AtomicBool>>| {
+            f.as_ref().is_some_and(|f| f.load(Ordering::Relaxed))
+        };
+        up(&self.cancel) || up(&self.stop)
     }
 }
 

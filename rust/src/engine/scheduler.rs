@@ -124,15 +124,25 @@ impl Round {
     }
 }
 
+/// Most messages one round drains (`first` included). A sustained burst
+/// of arrivals could otherwise keep the drain loop pulling forever and
+/// starve the already-queued work's dispatch; past the cap the rest
+/// simply waits for the next round.
+pub const DRAIN_CAP: usize = 256;
+
 /// Build one round: classify `first`, then keep pulling from `next`
 /// (non-blocking, e.g. `|| rx.try_recv().ok()`) until the channel is
-/// momentarily empty or a `Shutdown` arrives.
+/// momentarily empty, [`DRAIN_CAP`] messages are in, or a `Shutdown`
+/// arrives.
 pub fn drain_round(first: EngineMsg, mut next: impl FnMut() -> Option<EngineMsg>) -> Round {
     let mut round = Round::new();
+    let mut drained = 1usize;
     if !round.push(first) {
         return round;
     }
-    while let Some(msg) = next() {
+    while drained < DRAIN_CAP {
+        let Some(msg) = next() else { break };
+        drained += 1;
         if !round.push(msg) {
             break;
         }
@@ -225,6 +235,22 @@ mod tests {
         let round = drain_round(EngineMsg::Shutdown, || queued.next());
         assert!(round.shutdown);
         assert!(round.is_empty());
+    }
+
+    #[test]
+    fn drain_caps_a_burst_and_leaves_the_rest_queued() {
+        // an endless supply of messages must not extend the round past
+        // DRAIN_CAP; the supply is untouched beyond the cap
+        let mut pulled = 0usize;
+        let round = drain_round(gen_msg(1), || {
+            pulled += 1;
+            Some(prm_msg(1))
+        });
+        assert_eq!(round.len(), DRAIN_CAP);
+        assert_eq!(round.generates.len(), 1);
+        assert_eq!(round.prm.len(), DRAIN_CAP - 1);
+        assert_eq!(pulled, DRAIN_CAP - 1, "no message pulled past the cap");
+        assert!(!round.shutdown);
     }
 
     #[test]

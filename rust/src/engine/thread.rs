@@ -18,9 +18,20 @@
 //! ([`crate::engine::scheduler`]): all queued `Generate`, `PrmScore` and
 //! `Embed` messages coalesce into shared bucket-shaped calls, and
 //! planned generate calls dispatch earliest-deadline-first.
+//!
+//! On backends that step natively ([`Backend::stepping`]), generates run
+//! through the **continuous-batching** path instead of round-at-a-time:
+//! each planned session keeps a persistent slot table, rows retire the
+//! moment their budget runs out (freeing real decode steps, not just
+//! trimming the accounting), newly-arrived `Generate` jobs are admitted
+//! into freed slots mid-decode, and each request's reply fires as soon
+//! as its own jobs finish — mid-session, not at the round boundary. At
+//! temperature 0 the continuous path is byte-identical to the round
+//! path, and under the sim clock it charges the identical cost sequence
+//! when no mid-decode arrivals occur.
 
-use crate::engine::backend::{Backend, EngineShapes};
-use crate::engine::batcher::{pack_bins, plan_batches_edf, BatchPlan};
+use crate::engine::backend::{Backend, DecodeSession, EngineShapes};
+use crate::engine::batcher::{pack_bins, pick_slot_admission, plan_batches_edf, BatchPlan};
 use crate::engine::cache::{EngineCache, ScoreKey, ScoreValue};
 use crate::engine::preempt::{cut_replayed_row, run_decode_accounting, RowBudget};
 use crate::engine::protocol::*;
@@ -75,6 +86,11 @@ pub struct EngineThread {
     /// (the default-off config) keeps every code path byte-identical
     /// to the uncached build — see `docs/caching.md`.
     cache: Option<Arc<EngineCache>>,
+    /// Serve generates iteration-by-iteration when the backend steps
+    /// natively ([`EngineConfig::continuous`]
+    /// (crate::config::EngineConfig)). `false` forces the round path —
+    /// the equivalence baseline.
+    continuous: bool,
 }
 
 impl EngineThread {
@@ -90,6 +106,7 @@ impl EngineThread {
             clock,
             metrics,
             cache: None,
+            continuous: true,
         }
     }
 
@@ -99,6 +116,23 @@ impl EngineThread {
     pub fn with_cache(mut self, cache: Option<Arc<EngineCache>>) -> EngineThread {
         self.cache = cache;
         self
+    }
+
+    /// Enable/disable the continuous generate path (it only takes
+    /// effect on backends whose [`Backend::stepping`] is `true`).
+    pub fn with_continuous(mut self, continuous: bool) -> EngineThread {
+        self.continuous = continuous;
+        self
+    }
+
+    /// Generates run iteration-level iff the config asked for it *and*
+    /// the backend steps natively. Buffered adapters (remote links,
+    /// legacy backends) stay on the round path, where run-to-completion
+    /// semantics — including the real-clock proration fallback — are
+    /// exactly right because the compute is already spent when the call
+    /// returns.
+    fn continuous_active(&self) -> bool {
+        self.continuous && self.backend.stepping()
     }
 
     /// Blocking serve loop. Consumes messages until `Shutdown` or channel
@@ -112,8 +146,7 @@ impl EngineThread {
                 Err(_) => return,
             };
             let round = drain_round(first, || rx.try_recv().ok());
-            let shutdown = round.shutdown;
-            self.run_round(round);
+            let shutdown = self.run_round(round, &mut || rx.try_recv().ok());
             if shutdown {
                 return;
             }
@@ -124,8 +157,11 @@ impl EngineThread {
     /// then coalesced PRM scoring, coalesced embeds, and finally the
     /// merged generate round (EDF-ordered plans). Scoring and embeds run
     /// before generation because they are short and unblock workers to
-    /// contribute generate jobs to the next round.
-    fn run_round(&mut self, round: Round) {
+    /// contribute generate jobs to the next round. `poll` lets the
+    /// continuous generate path keep admitting arrivals mid-decode;
+    /// returns whether a `Shutdown` was seen (in the round or while
+    /// polling).
+    fn run_round(&mut self, round: Round, poll: &mut dyn FnMut() -> Option<EngineMsg>) -> bool {
         let n_msgs = round.len();
         if n_msgs > 1 {
             self.metrics.coalesced_msgs.add((n_msgs - 1) as u64);
@@ -138,7 +174,7 @@ impl EngineThread {
             prm,
             embeds,
             others,
-            ..
+            shutdown,
         } = round;
         for msg in others {
             self.dispatch(msg);
@@ -150,8 +186,12 @@ impl EngineThread {
             self.embed_round(embeds);
         }
         if !generates.is_empty() {
+            if self.continuous_active() {
+                return self.generate_continuous(generates, poll, shutdown);
+            }
             self.generate_merged(generates);
         }
+        shutdown
     }
 
     /// Serve one control-plane message (the non-coalesced ops).
@@ -389,6 +429,7 @@ impl EngineThread {
             cap: job.max_new_tokens.unwrap_or(usize::MAX),
             deadline_ms,
             cancel: job.cancel.clone(),
+            stop: job.stop.clone(),
         };
         let cut = cut_replayed_row(&budget, self.clock.now_ms());
         cache.metrics.decode_steps_saved.add(cut.emitted as u64);
@@ -501,12 +542,16 @@ impl EngineThread {
                     let mut cap = jobs[ji].max_new_tokens.unwrap_or(usize::MAX);
                     let mut deadline_ms = deadlines[ji];
                     if !is_sim && after_call >= deadline_ms {
-                        // Real clock: the call already happened by the
-                        // time we account for it, so exact per-step
-                        // preemption is impossible — prorate the row's
-                        // output to the fraction of the call that fit
-                        // before its deadline (partial results, not a
-                        // zeroed request).
+                        // Real clock on the *round* path: the call
+                        // already happened by the time we account for
+                        // it, so exact per-step preemption is
+                        // impossible — prorate the row's output to the
+                        // fraction of the call that fit before its
+                        // deadline (partial results, not a zeroed
+                        // request). Steppable backends never get here:
+                        // the continuous path checks the real clock
+                        // between decode steps, making preemption
+                        // step-granular with no proration needed.
                         let frac = ((deadline_ms - t0) / (after_call - t0).max(1e-9))
                             .clamp(0.0, 1.0);
                         cap = cap.min((natural_len as f64 * frac).floor() as usize);
@@ -517,6 +562,7 @@ impl EngineThread {
                         cap,
                         deadline_ms,
                         cancel: jobs[ji].cancel.clone(),
+                        stop: jobs[ji].stop.clone(),
                     }
                 })
                 .collect();
@@ -565,6 +611,464 @@ impl EngineThread {
             .into_iter()
             .map(|r| r.expect("batcher covered every job"))
             .collect())
+    }
+
+    // ------------------------------------------------------------------
+    // continuous generation (iteration-level scheduling)
+    // ------------------------------------------------------------------
+
+    /// The continuous generate path: plan the queued jobs into
+    /// EDF-ordered sessions, run each session one decode step at a
+    /// time, and between steps retire rows whose budget ran out, admit
+    /// newly-arrived jobs into freed slots, and answer each request the
+    /// moment its own jobs finish. Returns whether a `Shutdown` was
+    /// seen; work already accepted still completes first.
+    fn generate_continuous(
+        &mut self,
+        requests: Vec<GenerateReq>,
+        poll: &mut dyn FnMut() -> Option<EngineMsg>,
+        no_new: bool,
+    ) -> bool {
+        if requests.len() > 1 {
+            self.metrics
+                .coalesced_generates
+                .add((requests.len() - 1) as u64);
+        }
+        let mut st = Continuous {
+            requests: Vec::new(),
+            queue: ContQueue::default(),
+            followers: HashMap::new(),
+            shutdown: no_new,
+        };
+        for req in requests {
+            self.cont_intake(&mut st, req);
+        }
+        if let Err(e) = self.cont_drive(&mut st, poll) {
+            // a backend error fails every request still in flight;
+            // requests that fully resolved mid-session already replied
+            for r in &st.requests {
+                if r.remaining > 0 {
+                    let _ = r.reply.send(Err(e.replicate()));
+                }
+            }
+        }
+        st.shutdown
+    }
+
+    /// Accept one request into the continuous run: zero-job requests
+    /// answer immediately; with the cache enabled, temp-0 jobs go
+    /// through the same replay / leader-dedup fronting as the round
+    /// path (dead rows skip it, so a dead leader never absorbs a live
+    /// follower); everything else queues for a slot.
+    fn cont_intake(&mut self, st: &mut Continuous, req: GenerateReq) {
+        let deadline = req.deadline_ms.unwrap_or(f64::INFINITY);
+        let rid = st.requests.len();
+        let n = req.jobs.len();
+        st.requests.push(ContRequest {
+            reply: req.reply,
+            results: vec![None; n],
+            remaining: n,
+        });
+        if n == 0 {
+            let _ = st.requests[rid].reply.send(Ok(Vec::new()));
+            return;
+        }
+        let cache = self.cache.clone();
+        let now = self.clock.now_ms();
+        for (pos, job) in req.jobs.into_iter().enumerate() {
+            let route = (rid, pos);
+            let Some(cache) = cache.as_deref() else {
+                st.queue.push(job, deadline, route, false);
+                continue;
+            };
+            let dead = now >= deadline || job.cancelled();
+            if job.temperature != 0.0 || dead {
+                st.queue.push(job, deadline, route, false);
+                continue;
+            }
+            let key = (job.kind, job.tokens.clone());
+            if let Some(parked) = st.followers.get_mut(&key) {
+                // a live leader for this exact prompt is queued or
+                // decoding: count the dedup hit now (like the round
+                // path) and resolve when its natural row lands
+                cache.metrics.hits.inc();
+                parked.push((job, deadline, route));
+            } else if let Some(natural) = cache.lookup_gen(job.kind, &job.tokens) {
+                let result = self.replay_row(cache, &job, deadline, Some(natural));
+                st.resolve(route, result);
+            } else {
+                st.followers.insert(key, Vec::new());
+                st.queue.push(job, deadline, route, true);
+            }
+        }
+    }
+
+    /// Run planned sessions until the queue drains (arrivals during a
+    /// session refill it, so the loop replans as long as work exists).
+    fn cont_drive(
+        &mut self,
+        st: &mut Continuous,
+        poll: &mut dyn FnMut() -> Option<EngineMsg>,
+    ) -> Result<()> {
+        while !st.queue.is_empty() {
+            let q = std::mem::take(&mut st.queue);
+            let plans = plan_batches_edf(
+                &q.jobs,
+                &q.deadlines,
+                &self.shapes.batch_buckets,
+                &self.shapes.chunk_lens,
+                self.shapes.query_len,
+            );
+            for plan in &plans {
+                self.run_session(st, plan, &q, poll)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Run one planned session to exhaustion: prefill, then the charged
+    /// step loop with per-step retirement and admission. Charge order
+    /// mirrors [`run_decode_accounting`] exactly — halt pass, any-live
+    /// check, `DecodeStep` charge, emit — so at temp 0 with no arrivals
+    /// the sim clock advances identically to the round path.
+    fn run_session(
+        &mut self,
+        st: &mut Continuous,
+        plan: &BatchPlan,
+        q: &ContQueue,
+        poll: &mut dyn FnMut() -> Option<EngineMsg>,
+    ) -> Result<()> {
+        let b = plan.bucket;
+        let l = plan.len_bucket;
+
+        // the all-dead fast path, identical to the round engine: refuse
+        // to start work for requests that are already expired
+        let now = self.clock.now_ms();
+        let all_dead = plan
+            .job_indices
+            .iter()
+            .all(|&ji| now >= q.deadlines[ji] || q.jobs[ji].cancelled());
+        if all_dead {
+            for &ji in &plan.job_indices {
+                self.metrics.preempted_rows.inc();
+                if q.leader[ji] {
+                    self.cont_promote(st, (q.jobs[ji].kind, q.jobs[ji].tokens.clone()));
+                }
+                st.resolve(
+                    q.routes[ji],
+                    GenResult {
+                        tokens: Vec::new(),
+                        call_ms: 0.0,
+                        batch_size: plan.job_indices.len(),
+                        preempted: true,
+                    },
+                );
+            }
+            return Ok(());
+        }
+
+        // shape validation is backend-independent, as on the round path
+        let mut prompts: Vec<&[u32]> = Vec::with_capacity(plan.job_indices.len());
+        for &ji in &plan.job_indices {
+            let t = &q.jobs[ji].tokens;
+            if t.len() > l {
+                return Err(Error::Engine(format!(
+                    "prompt of {} tokens exceeds length bucket {l}",
+                    t.len()
+                )));
+            }
+            prompts.push(t);
+        }
+        let plan_deadline = plan
+            .job_indices
+            .iter()
+            .map(|&ji| q.deadlines[ji])
+            .fold(f64::INFINITY, f64::min);
+        self.backend.deadline_hint(plan_deadline);
+
+        let t0 = self.clock.now_ms();
+        let mut session = self.backend.prefill(plan, &prompts)?;
+        self.clock.charge(CostEvent::Prefill { batch: b, len: l });
+        self.metrics.prefill_calls.inc();
+        self.metrics.decode_calls.inc();
+
+        // the persistent slot table
+        let mut slots: Vec<Option<SlotRow>> = (0..b).map(|_| None).collect();
+        for (slot, &ji) in plan.job_indices.iter().enumerate() {
+            slots[slot] = Some(SlotRow {
+                cap: q.jobs[ji].max_new_tokens.unwrap_or(usize::MAX),
+                job: q.jobs[ji].clone(),
+                deadline_ms: q.deadlines[ji],
+                route: q.routes[ji],
+                leader: q.leader[ji],
+                tokens: Vec::new(),
+            });
+        }
+        // rows with no natural output finish before any step is
+        // charged — like a zero-length row never keeping a round call
+        // alive
+        let n_rows = plan.job_indices.len();
+        for slot in std::mem::take(&mut session.empty_rows) {
+            if let Some(row) = slots[slot].take() {
+                self.backend.retire_row(&mut session, slot);
+                self.cont_finish_row(st, row, false, n_rows, 0.0);
+            }
+        }
+
+        let mut steps = 0usize;
+        let mut emitted_total = 0usize;
+        loop {
+            // arrivals first: new jobs may join this session's free
+            // slots instead of waiting for the next planning round
+            if !st.shutdown {
+                self.cont_poll(st, poll);
+            }
+            self.cont_admit(st, &mut session, &mut slots, t0)?;
+
+            // halt pass: retire rows whose budget ran out as of now
+            let now = self.clock.now_ms();
+            let occupied = slots.iter().filter(|s| s.is_some()).count();
+            for slot in 0..b {
+                let Some(row) = &slots[slot] else { continue };
+                let halted = now >= row.deadline_ms
+                    || row.job.cancelled()
+                    || row.tokens.len() >= row.cap;
+                if halted {
+                    let row = slots[slot].take().expect("slot occupied");
+                    let saved = self.backend.retire_row(&mut session, slot);
+                    self.metrics.retired_rows.inc();
+                    self.metrics.decode_steps_saved_live.add(saved as u64);
+                    self.cont_finish_row(st, row, true, occupied, now - t0);
+                }
+            }
+
+            let live = slots.iter().filter(|s| s.is_some()).count();
+            if live == 0 {
+                break;
+            }
+
+            // one iteration: charge at the machine batch shape, step
+            // the backend, hand out tokens, finish natural completions
+            self.clock.charge(CostEvent::DecodeStep { batch: b });
+            steps += 1;
+            self.metrics.slot_steps_total.add(b as u64);
+            self.metrics.slot_steps_occupied.add(live as u64);
+            let rows = self.backend.decode_step(&mut session)?;
+            let now = self.clock.now_ms();
+            for slot in 0..b {
+                let Some(tok) = rows.get(slot).copied().flatten() else {
+                    continue;
+                };
+                let Some(row) = slots[slot].as_mut() else { continue };
+                row.tokens.push(tok.token);
+                emitted_total += 1;
+                if tok.last {
+                    let row = slots[slot].take().expect("row just stepped");
+                    self.backend.retire_row(&mut session, slot);
+                    self.metrics.retired_rows.inc();
+                    self.cont_finish_row(st, row, false, live, now - t0);
+                }
+            }
+        }
+
+        let call_ms = self.clock.now_ms() - t0;
+        self.metrics.decode_rows.add(emitted_total as u64);
+        self.metrics
+            .padded_rows
+            .add((b * steps).saturating_sub(emitted_total) as u64);
+        self.metrics.tokens_generated.add(emitted_total as u64);
+        self.metrics.decode_latency.record(call_ms);
+        log_debug!(
+            "{} {:?} b{b} continuous: {} initial rows, {} steps, {:.1}ms",
+            self.backend.name(),
+            plan.kind,
+            n_rows,
+            steps,
+            call_ms
+        );
+        Ok(())
+    }
+
+    /// Drain arrivals between decode steps (bounded like
+    /// [`scheduler::drain_round`] so a burst cannot stall the step
+    /// loop). Generates join the continuous run; PRM / embed / control
+    /// messages execute immediately as their own mini-rounds — they
+    /// keep round coalescing and never enter the slot table. A polled
+    /// `Shutdown` stops further intake; accepted work still finishes.
+    fn cont_poll(&mut self, st: &mut Continuous, poll: &mut dyn FnMut() -> Option<EngineMsg>) {
+        let mut drained = 0usize;
+        while !st.shutdown && drained < scheduler::DRAIN_CAP {
+            let Some(msg) = poll() else { break };
+            drained += 1;
+            match msg {
+                EngineMsg::Generate {
+                    jobs,
+                    deadline_ms,
+                    reply,
+                } => {
+                    self.metrics.coalesced_generates.inc();
+                    self.cont_intake(
+                        st,
+                        GenerateReq {
+                            jobs,
+                            deadline_ms,
+                            reply,
+                        },
+                    );
+                }
+                EngineMsg::PrmScore { prefixes, reply } => {
+                    self.prm_round(vec![PrmReq { prefixes, reply }])
+                }
+                EngineMsg::Embed {
+                    kind,
+                    queries,
+                    reply,
+                } => self.embed_round(vec![EmbedReq {
+                    kind,
+                    queries,
+                    reply,
+                }]),
+                EngineMsg::Shutdown => st.shutdown = true,
+                other => self.dispatch(other),
+            }
+        }
+    }
+
+    /// Fill the session's free slots with compatible queued jobs, in
+    /// EDF order ([`pick_slot_admission`]). Each admitted row pays a
+    /// batch-1 prefill and joins the live session immediately; a job
+    /// already dead when its turn comes is answered empty instead of
+    /// admitted, like the all-dead fast path.
+    fn cont_admit(
+        &mut self,
+        st: &mut Continuous,
+        session: &mut DecodeSession,
+        slots: &mut [Option<SlotRow>],
+        t0: f64,
+    ) -> Result<()> {
+        while !st.queue.is_empty() {
+            let Some(free) = slots.iter().position(|s| s.is_none()) else {
+                break;
+            };
+            let queued: Vec<usize> = (0..st.queue.len()).collect();
+            let Some(qpos) = pick_slot_admission(
+                &st.queue.jobs,
+                &queued,
+                &st.queue.deadlines,
+                session.kind,
+                session.len_bucket,
+                session.temperature,
+                &self.shapes.chunk_lens,
+                self.shapes.query_len,
+            ) else {
+                break;
+            };
+            let (job, deadline_ms, route, leader) = st.queue.remove(qpos);
+            let now = self.clock.now_ms();
+            let row = SlotRow {
+                cap: job.max_new_tokens.unwrap_or(usize::MAX),
+                job,
+                deadline_ms,
+                route,
+                leader,
+                tokens: Vec::new(),
+            };
+            if now >= row.deadline_ms || row.job.cancelled() {
+                self.metrics.preempted_rows.inc();
+                if row.leader {
+                    self.cont_promote(st, (row.job.kind, row.job.tokens.clone()));
+                }
+                st.resolve(
+                    row.route,
+                    GenResult {
+                        tokens: Vec::new(),
+                        call_ms: 0.0,
+                        batch_size: 1,
+                        preempted: true,
+                    },
+                );
+                continue;
+            }
+            let has_work = self.backend.admit_row(session, free, &row.job.tokens)?;
+            self.clock.charge(CostEvent::Prefill {
+                batch: 1,
+                len: session.len_bucket,
+            });
+            self.metrics.prefill_calls.inc();
+            self.metrics.mid_decode_admits.inc();
+            if has_work {
+                slots[free] = Some(row);
+            } else {
+                self.backend.retire_row(session, free);
+                let occupied = slots.iter().filter(|s| s.is_some()).count().max(1);
+                self.cont_finish_row(st, row, false, occupied, self.clock.now_ms() - t0);
+            }
+        }
+        Ok(())
+    }
+
+    /// Close out one row leaving the slot table: metrics, cache
+    /// bookkeeping (a naturally-finished temp-0 leader seeds the cache
+    /// and resolves its parked followers; a preempted leader promotes
+    /// them instead), and the per-request reply.
+    fn cont_finish_row(
+        &mut self,
+        st: &mut Continuous,
+        row: SlotRow,
+        preempted: bool,
+        batch_size: usize,
+        call_ms: f64,
+    ) {
+        if preempted {
+            self.metrics.preempted_rows.inc();
+        }
+        if row.leader {
+            if preempted {
+                self.cont_promote(st, (row.job.kind, row.job.tokens.clone()));
+            } else {
+                self.cont_leader_done(st, &row.job, &row.tokens);
+            }
+        }
+        st.resolve(
+            row.route,
+            GenResult {
+                tokens: row.tokens,
+                call_ms,
+                batch_size,
+                preempted,
+            },
+        );
+    }
+
+    /// A temp-0 leader finished its natural row: seed the cache and
+    /// replay the followers parked on it (each re-cut against its own
+    /// budget, zero decode steps charged — same as the round path).
+    fn cont_leader_done(&mut self, st: &mut Continuous, job: &GenJob, natural: &[u32]) {
+        let Some(cache) = self.cache.clone() else {
+            return;
+        };
+        cache.insert_gen(job.kind, &job.tokens, natural, cache.generation());
+        if let Some(parked) = st.followers.remove(&(job.kind, job.tokens.clone())) {
+            for (fjob, fdeadline, froute) in parked {
+                let result = self.replay_row(&cache, &fjob, fdeadline, Some(natural.to_vec()));
+                st.resolve(froute, result);
+            }
+        }
+    }
+
+    /// A leader was preempted before its natural end, so its followers
+    /// have nothing to replay: the first one is promoted to be the new
+    /// leader (re-queued as a live job), the rest stay parked on it.
+    fn cont_promote(&mut self, st: &mut Continuous, key: (GenKind, Vec<u32>)) {
+        let Some(parked) = st.followers.remove(&key) else {
+            return;
+        };
+        let mut parked = parked.into_iter();
+        let Some((job, deadline, route)) = parked.next() else {
+            return;
+        };
+        st.queue.push(job, deadline, route, true);
+        st.followers.insert(key, parked.collect());
     }
 
     // ------------------------------------------------------------------
@@ -807,6 +1311,100 @@ impl EngineThread {
         );
         v
     }
+}
+
+// ---------------------------------------------------------------------
+// continuous-path bookkeeping
+// ---------------------------------------------------------------------
+
+/// One in-flight `Generate` request inside a continuous run: its jobs
+/// finish independently (different sessions, different steps), so the
+/// reply fires exactly when the last one lands.
+struct ContRequest {
+    reply: std::sync::mpsc::Sender<Result<Vec<GenResult>>>,
+    results: Vec<Option<GenResult>>,
+    remaining: usize,
+}
+
+/// Jobs waiting for a slot, columns-of-arrays so the EDF planner and
+/// [`pick_slot_admission`] can index them directly. `routes[i]` is the
+/// (request, position) address of job `i`'s result; `leader[i]` marks a
+/// temp-0 job other identical-prompt jobs are parked behind.
+#[derive(Default)]
+struct ContQueue {
+    jobs: Vec<GenJob>,
+    deadlines: Vec<f64>,
+    routes: Vec<(usize, usize)>,
+    leader: Vec<bool>,
+}
+
+impl ContQueue {
+    fn push(&mut self, job: GenJob, deadline: f64, route: (usize, usize), leader: bool) {
+        self.jobs.push(job);
+        self.deadlines.push(deadline);
+        self.routes.push(route);
+        self.leader.push(leader);
+    }
+
+    /// Remove job `i`, preserving queue order (arrival order is the EDF
+    /// tiebreak, so swap-remove would reorder ties).
+    fn remove(&mut self, i: usize) -> (GenJob, f64, (usize, usize), bool) {
+        (
+            self.jobs.remove(i),
+            self.deadlines.remove(i),
+            self.routes.remove(i),
+            self.leader.remove(i),
+        )
+    }
+
+    fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+}
+
+/// The whole state of one continuous generate run: open requests, the
+/// slot-less queue, and temp-0 followers parked behind a live leader
+/// keyed by (kind, prompt). `shutdown` stops further message intake
+/// while accepted work finishes.
+struct Continuous {
+    requests: Vec<ContRequest>,
+    queue: ContQueue,
+    followers: HashMap<(GenKind, Vec<u32>), Vec<(GenJob, f64, (usize, usize))>>,
+    shutdown: bool,
+}
+
+impl Continuous {
+    /// Land one job's result; replies to the owning request when it was
+    /// the last one outstanding.
+    fn resolve(&mut self, route: (usize, usize), result: GenResult) {
+        let req = &mut self.requests[route.0];
+        debug_assert!(req.results[route.1].is_none(), "row resolved twice");
+        req.results[route.1] = Some(result);
+        req.remaining -= 1;
+        if req.remaining == 0 {
+            let results = req
+                .results
+                .iter_mut()
+                .map(|r| r.take().expect("remaining hit zero with a hole"))
+                .collect();
+            let _ = req.reply.send(Ok(results));
+        }
+    }
+}
+
+/// One occupied row of a session's slot table.
+struct SlotRow {
+    job: GenJob,
+    deadline_ms: f64,
+    route: (usize, usize),
+    leader: bool,
+    /// `max_new_tokens` cap (usize::MAX when uncapped).
+    cap: usize,
+    tokens: Vec<u32>,
 }
 
 // ---------------------------------------------------------------------
@@ -1278,5 +1876,462 @@ impl Backend for DeviceBackend {
         }
         self.probe.set_params(params);
         Ok(())
+    }
+
+    fn stepping(&self) -> bool {
+        true
+    }
+
+    fn prefill(&mut self, plan: &BatchPlan, prompts: &[&[u32]]) -> Result<DecodeSession> {
+        let chunked = self.chunked_decode_available(plan);
+        let rows: Vec<DevRow> = if chunked {
+            // first segment only — continuation segments run on demand
+            // between engine steps, so retirement/admission change what
+            // the device actually computes next
+            let firsts = self.run_segment(plan.temperature, prompts)?;
+            prompts
+                .iter()
+                .zip(firsts)
+                .map(|(p, buf)| self.dev_row(p.to_vec(), buf, false))
+                .collect()
+        } else {
+            // one in-graph call computes the whole natural row (the
+            // single-sample contract for temp>0, and the only option
+            // when no chunk bucket covers the composed prefix length)
+            self.generate(plan, prompts)?
+                .into_iter()
+                .zip(prompts)
+                .map(|(buf, p)| self.dev_row(p.to_vec(), buf, true))
+                .collect()
+        };
+        let mut slots: Vec<Option<DevRow>> = (0..plan.bucket).map(|_| None).collect();
+        let mut empty = Vec::new();
+        for (slot, row) in rows.into_iter().enumerate() {
+            if row.ended && row.buf.is_empty() {
+                empty.push(slot);
+            } else {
+                slots[slot] = Some(row);
+            }
+        }
+        let mut session =
+            DecodeSession::new(plan, Box::new(DeviceSession { rows: slots, chunked }));
+        session.empty_rows = empty;
+        Ok(session)
+    }
+
+    fn decode_step(&mut self, session: &mut DecodeSession) -> Result<StepRows> {
+        let temperature = session.temperature;
+        let state: &mut DeviceSession = session.state_mut()?;
+        // rows at a segment boundary (or holding only their final
+        // buffered token) need the next chunk before this step can tell
+        // the engine whether that token is the last one
+        let needs: Vec<usize> = state
+            .rows
+            .iter()
+            .enumerate()
+            .filter_map(|(slot, r)| match r {
+                Some(r) if !r.ended && r.cursor + 1 >= r.buf.len() => Some(slot),
+                _ => None,
+            })
+            .collect();
+        if !needs.is_empty() {
+            let prefixes: Vec<Vec<u32>> = needs
+                .iter()
+                .map(|&s| {
+                    let r = state.rows[s].as_ref().expect("selected above");
+                    let mut p = r.prompt.clone();
+                    p.extend_from_slice(&r.buf);
+                    p
+                })
+                .collect();
+            let refs: Vec<&[u32]> = prefixes.iter().map(|p| p.as_slice()).collect();
+            let segments = self.run_segment(temperature, &refs)?;
+            let state: &mut DeviceSession = session.state_mut()?;
+            for (&slot, seg) in needs.iter().zip(segments) {
+                let row = state.rows[slot].as_mut().expect("selected above");
+                row.extend(seg, self.shapes.gen_max_new, self.shapes.chunk_max_new);
+            }
+        }
+        let state: &mut DeviceSession = session.state_mut()?;
+        Ok(state
+            .rows
+            .iter_mut()
+            .map(|r| r.as_mut().and_then(DevRow::step))
+            .collect())
+    }
+
+    fn admit_row(&mut self, session: &mut DecodeSession, slot: usize, prompt: &[u32]) -> Result<bool> {
+        let chunked = session.state_mut::<DeviceSession>()?.chunked;
+        let row = if chunked {
+            let buf = self
+                .run_segment(session.temperature, &[prompt])?
+                .remove(0);
+            self.dev_row(prompt.to_vec(), buf, false)
+        } else {
+            let plan = BatchPlan {
+                job_indices: vec![0],
+                bucket: 1,
+                len_bucket: session.len_bucket,
+                kind: session.kind,
+                temperature: session.temperature,
+                max_steps: None,
+            };
+            let buf = self.generate(&plan, &[prompt])?.remove(0);
+            self.dev_row(prompt.to_vec(), buf, true)
+        };
+        let state: &mut DeviceSession = session.state_mut()?;
+        match state.rows.get_mut(slot) {
+            Some(free @ None) => {
+                if row.ended && row.buf.is_empty() {
+                    return Ok(false);
+                }
+                *free = Some(row);
+                Ok(true)
+            }
+            Some(Some(_)) => Err(Error::Engine(format!("slot {slot} already occupied"))),
+            None => Err(Error::Engine(format!("slot {slot} out of range"))),
+        }
+    }
+
+    fn retire_row(&mut self, session: &mut DecodeSession, slot: usize) -> usize {
+        // retiring drops the row from every future segment call — the
+        // compute genuinely stops — but the device cannot know how many
+        // steps the unseen natural tail would have taken, so it reports
+        // none rather than guess
+        if let Ok(state) = session.state_mut::<DeviceSession>() {
+            if let Some(r) = state.rows.get_mut(slot) {
+                r.take();
+            }
+        }
+        0
+    }
+}
+
+// ---------------------------------------------------------------------
+// DeviceBackend native stepping
+// ---------------------------------------------------------------------
+
+/// Session state for the device backend's native stepping. The device
+/// executables decode in-graph, so "stepping" means **chunked decode**:
+/// temp-0 full generation runs as a sequence of `lm_chunk` continuation
+/// segments (each over prompt + tokens-so-far, staged through the same
+/// reusable arenas as every other call), with tokens replayed to the
+/// engine one step at a time between segments. Retiring a row really
+/// does stop its compute — it is simply absent from every later segment
+/// call. Sampled (temp>0) and chunk-kind sessions stay single-call
+/// buffered: re-sampling a continuation would change the distribution
+/// the round path defines, so their one in-graph call *is* the
+/// contract.
+struct DeviceSession {
+    rows: Vec<Option<DevRow>>,
+    /// Whether rows decode via continuation segments (temp-0 full
+    /// generation with chunk-length coverage) or were fully buffered at
+    /// prefill.
+    chunked: bool,
+}
+
+/// One device session row: the growing computed continuation (`buf`)
+/// and the engine-facing replay cursor. `ended` means the natural end
+/// is *known* — a segment came back short of `chunk_max_new`, the
+/// total hit `gen_max_new`, or the row was fully buffered at prefill.
+struct DevRow {
+    prompt: Vec<u32>,
+    buf: Vec<u32>,
+    cursor: usize,
+    ended: bool,
+}
+
+impl DevRow {
+    /// Absorb one continuation segment's fresh tokens.
+    fn extend(&mut self, seg: Vec<u32>, gen_max_new: usize, chunk_max_new: usize) {
+        let seg_len = seg.len();
+        self.buf.extend(seg);
+        if self.buf.len() >= gen_max_new {
+            self.buf.truncate(gen_max_new);
+            self.ended = true;
+        } else if seg_len < chunk_max_new {
+            // the segment stopped before its capacity: EOS inside it
+            self.ended = true;
+        }
+    }
+
+    fn step(&mut self) -> Option<StepTok> {
+        if self.cursor >= self.buf.len() {
+            return None;
+        }
+        let token = self.buf[self.cursor];
+        self.cursor += 1;
+        Some(StepTok {
+            token,
+            // decode_step ran a segment for any non-ended row down to
+            // its final buffered token, so `ended` is decided by the
+            // time that token is handed out
+            last: self.ended && self.cursor == self.buf.len(),
+        })
+    }
+}
+
+impl DeviceBackend {
+    /// Whether this plan can decode via continuation segments: greedy
+    /// full generation only (a re-sampled continuation is a different
+    /// draw), with a chunk length bucket wide enough for the longest
+    /// possible composed prefix, so every mid-session segment is
+    /// guaranteed an executable. `chunk_max_new >= 2` keeps the
+    /// final-token hold-back invariant (a 1-token segment could
+    /// otherwise leave a row's last token unflagged).
+    fn chunked_decode_available(&self, plan: &BatchPlan) -> bool {
+        plan.temperature == 0.0
+            && plan.kind == GenKind::Full
+            && self.shapes.chunk_max_new >= 2
+            && {
+                let need = plan.len_bucket + self.shapes.gen_max_new;
+                self.shapes.chunk_lens.iter().any(|&x| x >= need)
+            }
+    }
+
+    /// One batched continuation segment: each prefix is a row's prompt
+    /// plus everything generated so far; returns the fresh tokens per
+    /// row. Rides the ordinary chunk executables (and the staging
+    /// arenas) through `generate`.
+    fn run_segment(&mut self, temperature: f32, prefixes: &[&[u32]]) -> Result<Vec<Vec<u32>>> {
+        let n = prefixes.len();
+        let b = self
+            .shapes
+            .batch_buckets
+            .iter()
+            .copied()
+            .filter(|&x| x >= n)
+            .min()
+            .ok_or_else(|| Error::Engine(format!("no batch bucket covers {n} segment rows")))?;
+        let need = prefixes.iter().map(|p| p.len()).max().unwrap_or(1).max(1);
+        let l = self
+            .shapes
+            .chunk_lens
+            .iter()
+            .copied()
+            .filter(|&x| x >= need)
+            .min()
+            .ok_or_else(|| {
+                Error::Engine(format!("no chunk length bucket covers a {need}-token prefix"))
+            })?;
+        let plan = BatchPlan {
+            job_indices: (0..n).collect(),
+            bucket: b,
+            len_bucket: l,
+            kind: GenKind::Chunk,
+            temperature,
+            max_steps: None,
+        };
+        self.generate(&plan, prefixes)
+    }
+
+    /// Build a session row. `buffered` rows hold their whole natural
+    /// output (ended by construction); segment-fed rows absorb their
+    /// first segment through the same cap/EOS logic as later ones.
+    fn dev_row(&self, prompt: Vec<u32>, buf: Vec<u32>, buffered: bool) -> DevRow {
+        let mut row = DevRow {
+            prompt,
+            buf: Vec::new(),
+            cursor: 0,
+            ended: buffered,
+        };
+        if buffered {
+            row.buf = buf;
+        } else {
+            row.extend(buf, self.shapes.gen_max_new, self.shapes.chunk_max_new);
+        }
+        row
+    }
+}
+
+// ---------------------------------------------------------------------
+// tests
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::engine::backend::SimBackend;
+    use crate::tokenizer::Tokenizer;
+    use crate::util::clock;
+    use std::sync::mpsc::channel;
+
+    fn sim_thread(seed: u64, stream: u64, continuous: bool) -> EngineThread {
+        let clock = clock::sim_clock();
+        let backend = Box::new(SimBackend::new(
+            EngineShapes::sim_default(&EngineConfig::default()),
+            clock.clone(),
+            seed,
+            stream,
+        ));
+        EngineThread::new(backend, clock, Arc::new(EngineMetrics::new()))
+            .with_continuous(continuous)
+    }
+
+    fn job(tok: &Tokenizer, text: &str) -> GenJob {
+        GenJob::new(tok.encode(text).unwrap(), GenKind::Full, 0.0)
+    }
+
+    /// Temp-0 reference row: what a fresh solo engine generates for the
+    /// prompt (pure function of the prompt, so any seed/stream works).
+    fn solo(tok: &Tokenizer, text: &str) -> Vec<u32> {
+        let shapes = EngineShapes::sim_default(&EngineConfig::default());
+        let query_len = shapes.query_len;
+        let mut b = SimBackend::new(shapes, clock::sim_clock(), 99, 5);
+        let plan = BatchPlan {
+            job_indices: vec![0],
+            bucket: 1,
+            len_bucket: query_len,
+            kind: GenKind::Full,
+            temperature: 0.0,
+            max_steps: None,
+        };
+        let prompt = tok.encode(text).unwrap();
+        b.generate(&plan, &[&prompt]).unwrap().remove(0)
+    }
+
+    /// With no mid-decode arrivals, the continuous path must be
+    /// byte-identical to the round path — same tokens, same preemption
+    /// verdicts, and the same sim-clock cost sequence (charge
+    /// equivalence), cap cuts included.
+    #[test]
+    fn continuous_quiet_run_matches_round_path() {
+        let tok = Tokenizer::new();
+        let prompts = ["Q:7+8-5=?\nS:", "Q:2*3+4=?\nS:", "Q:9-2*3=?\nS:"];
+        let run = |continuous: bool| {
+            let mut t = sim_thread(7, 0, continuous);
+            let mut jobs: Vec<GenJob> = prompts.iter().map(|p| job(&tok, p)).collect();
+            jobs[1] = jobs.remove(1).with_max_new_tokens(4);
+            let (reply, rx) = channel();
+            let req = GenerateReq {
+                jobs,
+                deadline_ms: None,
+                reply,
+            };
+            if continuous {
+                assert!(t.continuous_active(), "sim backend steps natively");
+                t.generate_continuous(vec![req], &mut || None, false);
+            } else {
+                t.generate_merged(vec![req]);
+            }
+            let results = rx.recv().unwrap().unwrap();
+            (results, t.clock.now_ms())
+        };
+        let (cont, cont_ms) = run(true);
+        let (round, round_ms) = run(false);
+        assert_eq!(cont.len(), round.len());
+        for (c, r) in cont.iter().zip(&round) {
+            assert_eq!(c.tokens, r.tokens, "temp-0 byte equivalence");
+            assert_eq!(c.preempted, r.preempted);
+        }
+        assert!(cont[1].preempted, "cap 4 must cut row 1");
+        assert_eq!(cont[1].tokens.len(), 4);
+        assert_eq!(
+            cont_ms, round_ms,
+            "identical charge sequence on the sim clock"
+        );
+    }
+
+    /// A row whose deadline expires mid-decode is retired between steps
+    /// (step-granular, no proration), its slot is re-used by a job that
+    /// arrives mid-session, and the freed decode steps are recorded.
+    #[test]
+    fn deadline_cut_frees_slot_for_mid_decode_admit() {
+        let tok = Tokenizer::new();
+        let (a_text, b_text, e_text) = ("Q:7+8-5=?\nS:", "Q:2*3+4=?\nS:", "Q:9-2*3=?\nS:");
+        let solo_a = solo(&tok, a_text);
+        let solo_b = solo(&tok, b_text);
+        let solo_e = solo(&tok, e_text);
+        assert!(solo_a.len() > 4 && solo_b.len() > 6, "need a long decode");
+
+        let mut t = sim_thread(7, 0, true);
+        // place the deadline 2.5 decode steps past the batch-2 prefill,
+        // measured on a scratch clock with the same latency model
+        let probe = clock::sim_clock();
+        probe.charge(CostEvent::Prefill {
+            batch: 2,
+            len: t.shapes.query_len,
+        });
+        let p = probe.now_ms();
+        probe.charge(CostEvent::DecodeStep { batch: 2 });
+        let s = probe.now_ms() - p;
+        let deadline = p + 2.5 * s;
+
+        // A and B are separate requests sharing one planned session:
+        // only A carries the tight deadline, so B keeps the session
+        // alive after A is cut and the freed slot is observable
+        let (reply_a, rx_a) = channel();
+        let req_a = GenerateReq {
+            jobs: vec![job(&tok, a_text)],
+            deadline_ms: Some(deadline),
+            reply: reply_a,
+        };
+        let (reply_b, rx_b) = channel();
+        let req_b = GenerateReq {
+            jobs: vec![job(&tok, b_text)],
+            deadline_ms: None,
+            reply: reply_b,
+        };
+        let (reply_e, rx_e) = channel();
+        let mut pending = Some(EngineMsg::Generate {
+            jobs: vec![job(&tok, e_text)],
+            deadline_ms: None,
+            reply: reply_e,
+        });
+        t.generate_continuous(vec![req_a, req_b], &mut || pending.take(), false);
+
+        let a = rx_a.recv().unwrap().unwrap();
+        let b = rx_b.recv().unwrap().unwrap();
+        let e = rx_e.recv().unwrap().unwrap();
+        // A was cut between steps the moment the clock crossed its
+        // deadline — a true prefix of its natural row, no proration
+        assert!(a[0].preempted, "A's deadline expired mid-decode");
+        assert!(!a[0].tokens.is_empty(), "deadline allowed ~2.5 steps");
+        assert!(a[0].tokens.len() < solo_a.len(), "cut short of natural end");
+        assert_eq!(a[0].tokens, solo_a[..a[0].tokens.len()], "prefix purity");
+        // B never had a deadline: untouched by A's preemption
+        assert_eq!(b[0].tokens, solo_b);
+        assert!(!b[0].preempted);
+        // E arrived mid-session, took A's freed slot, ran to its end
+        assert_eq!(e[0].tokens, solo_e, "admitted row matches a solo run");
+        assert!(!e[0].preempted);
+        assert_eq!(t.metrics.mid_decode_admits.get(), 1);
+        assert!(t.metrics.retired_rows.get() >= 3);
+        assert!(
+            t.metrics.decode_steps_saved_live.get() >= 1,
+            "retiring A mid-decode must free real steps"
+        );
+        assert!(t.metrics.slot_occupancy() > 0.0);
+    }
+
+    /// A `Generate` that arrives while a session is stepping joins the
+    /// run and is answered without waiting for the next scheduling
+    /// round — through a freed slot if one opens (a row finishing its
+    /// natural decode frees one too), or a follow-up session otherwise.
+    #[test]
+    fn straggler_generate_is_served_within_the_run() {
+        let tok = Tokenizer::new();
+        let solo_e = solo(&tok, "Q:9-2*3=?\nS:");
+        let mut t = sim_thread(7, 0, true);
+        let (reply_ab, rx_ab) = channel();
+        let req = GenerateReq {
+            jobs: vec![job(&tok, "Q:7+8-5=?\nS:"), job(&tok, "Q:2*3+4=?\nS:")],
+            deadline_ms: None,
+            reply: reply_ab,
+        };
+        let (reply_e, rx_e) = channel();
+        let mut pending = Some(EngineMsg::Generate {
+            jobs: vec![job(&tok, "Q:9-2*3=?\nS:")],
+            deadline_ms: None,
+            reply: reply_e,
+        });
+        t.generate_continuous(vec![req], &mut || pending.take(), false);
+        let ab = rx_ab.recv().unwrap().unwrap();
+        assert!(ab.iter().all(|r| !r.preempted));
+        let e = rx_e.recv().unwrap().unwrap();
+        assert_eq!(e[0].tokens, solo_e);
+        assert!(!e[0].preempted);
+        assert!(t.metrics.coalesced_generates.get() >= 1);
     }
 }

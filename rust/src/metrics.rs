@@ -143,6 +143,25 @@ pub struct EngineMetrics {
     pub preempted_rows: Counter,
     /// Tokens generated (actual, not padded).
     pub tokens_generated: Counter,
+    /// Slot-steps actually occupied by an emitting row on the continuous
+    /// decode path (numerator of the occupancy fraction; the denominator
+    /// is `slot_steps_total`).
+    pub slot_steps_occupied: Counter,
+    /// Slot-steps offered by continuous decode sessions (bucket ×
+    /// charged steps).
+    pub slot_steps_total: Counter,
+    /// Decode steps the backend genuinely did *not* execute because a
+    /// row was retired live (deadline / cancel / stop flag) before its
+    /// natural end — real compute saved, distinct from the cache tier's
+    /// zero-charge replays.
+    pub decode_steps_saved_live: Counter,
+    /// Generate jobs admitted into a free slot of an already-decoding
+    /// session instead of waiting for the next scheduling round.
+    pub mid_decode_admits: Counter,
+    /// Rows retired live between decode steps (finished, deadline
+    /// expired, cancelled or stop-flagged) — their slots freed while the
+    /// session kept decoding.
+    pub retired_rows: Counter,
     /// Wall-time per batched decode call (ms).
     pub decode_latency: Histogram,
     /// End-to-end per-request latency (ms).
@@ -185,6 +204,17 @@ impl EngineMetrics {
         }
     }
 
+    /// Fraction of continuous-decode slot-steps occupied by an emitting
+    /// row (0 when the continuous path never ran).
+    pub fn slot_occupancy(&self) -> f64 {
+        let total = self.slot_steps_total.get();
+        if total == 0 {
+            0.0
+        } else {
+            self.slot_steps_occupied.get() as f64 / total as f64
+        }
+    }
+
     pub fn to_json(&self) -> Value {
         Value::obj()
             .with("decode_calls", self.decode_calls.get())
@@ -207,6 +237,12 @@ impl EngineMetrics {
             .with("coalesced_embeds", self.coalesced_embeds.get())
             .with("preempted_rows", self.preempted_rows.get())
             .with("tokens_generated", self.tokens_generated.get())
+            .with("slot_steps_occupied", self.slot_steps_occupied.get())
+            .with("slot_steps_total", self.slot_steps_total.get())
+            .with("slot_occupancy", self.slot_occupancy())
+            .with("decode_steps_saved_live", self.decode_steps_saved_live.get())
+            .with("mid_decode_admits", self.mid_decode_admits.get())
+            .with("retired_rows", self.retired_rows.get())
             .with("decode_latency_ms", self.decode_latency.summary().to_json())
             .with(
                 "request_latency_ms",
@@ -470,6 +506,23 @@ mod tests {
         assert_eq!(v.req_f64("hits").unwrap(), 3.0);
         assert!((v.req_f64("hit_fraction").unwrap() - 0.75).abs() < 1e-12);
         assert_eq!(v.req_f64("decode_steps_saved").unwrap(), 12.0);
+    }
+
+    #[test]
+    fn slot_occupancy_fraction() {
+        let m = EngineMetrics::new();
+        assert_eq!(m.slot_occupancy(), 0.0); // continuous path never ran
+        m.slot_steps_occupied.add(3);
+        m.slot_steps_total.add(4);
+        assert!((m.slot_occupancy() - 0.75).abs() < 1e-12);
+        m.decode_steps_saved_live.add(7);
+        m.mid_decode_admits.add(2);
+        m.retired_rows.add(5);
+        let v = m.to_json();
+        assert!((v.req_f64("slot_occupancy").unwrap() - 0.75).abs() < 1e-12);
+        assert_eq!(v.req_f64("decode_steps_saved_live").unwrap(), 7.0);
+        assert_eq!(v.req_f64("mid_decode_admits").unwrap(), 2.0);
+        assert_eq!(v.req_f64("retired_rows").unwrap(), 5.0);
     }
 
     #[test]

@@ -20,12 +20,19 @@
 //! checkpoints.
 //!
 //! Execution is a per-wave step machine: each wave is one
-//! [`StepYield::Generate`], and the budget is re-read from the step
-//! context before every wave — so a mid-flight reallocation grant
-//! (extra deadline or token budget from a request that finished early)
-//! widens what the remaining waves can spend.
+//! [`StepYield::GenerateEach`] fan-out, so per-row results stream back
+//! as they finish. When the early rows of a wave already decide the
+//! vote, the machine sets the wave's shared stop flag
+//! ([`crate::engine::GenJob::with_stop`]) and the continuous engine
+//! retires the still-decoding rows at the next step boundary — decode
+//! steps the round-based engine would have spent finishing a wave whose
+//! outcome was already known (`decode_steps_saved_live` in the engine
+//! metrics). The budget is re-read from the step context before every
+//! wave — so a mid-flight reallocation grant (extra deadline or token
+//! budget from a request that finished early) widens what the remaining
+//! waves can spend.
 
-use crate::engine::GenKind;
+use crate::engine::{GenKind, GenResult};
 use crate::error::{Error, Result};
 use crate::eval::{self, Candidate};
 use crate::strategies::method::{
@@ -33,6 +40,8 @@ use crate::strategies::method::{
     StrategyState,
 };
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 pub struct EarlyStopMajority;
 
@@ -79,9 +88,32 @@ struct MvEarlyState {
     /// Jobs in the wave currently in flight (counted into `issued` when
     /// the results arrive, matching the blocking loop's accounting).
     pending_batch: usize,
+    /// Shared stop flag attached to every job of the in-flight wave:
+    /// setting it makes the continuous engine retire the wave's
+    /// still-decoding rows at the next step boundary (recorded in
+    /// `decode_steps_saved_live`).
+    wave_stop: Option<Arc<AtomicBool>>,
+    /// Answers heard from the in-flight wave so far (per-row results
+    /// stream in via [`StrategyState::on_row_result`]).
+    wave_counts: HashMap<String, usize>,
+    /// Rows of the in-flight wave heard so far.
+    wave_seen: usize,
+    /// The vote crossed the decided margin mid-wave and the stop flag
+    /// was set; the wave's assembled results finish the request as
+    /// `stopped_early`, not as a budget hit.
+    wave_decided: bool,
     budget_exhausted: bool,
     preempted: bool,
     stopped_early: bool,
+}
+
+/// `lead > second + unknown`: even if every unheard candidate voted for
+/// the runner-up, the leader would still win.
+fn decided(tallies: &mut Vec<usize>, unknown: usize) -> bool {
+    tallies.sort_unstable_by(|a, b| b.cmp(a));
+    let lead = tallies.first().copied().unwrap_or(0);
+    let second = tallies.get(1).copied().unwrap_or(0);
+    lead > second + unknown
 }
 
 impl MvEarlyState {
@@ -94,12 +126,23 @@ impl MvEarlyState {
                 return self.finish(ctx);
             }
             let batch = self.wave.min(self.n - self.issued);
+            let stop = Arc::new(AtomicBool::new(false));
             let jobs = (0..batch)
-                .map(|_| ctx.gen_job(self.prompt_ids.clone(), GenKind::Full, self.tokens_total))
+                .map(|_| {
+                    ctx.gen_job(self.prompt_ids.clone(), GenKind::Full, self.tokens_total)
+                        .with_stop(stop.clone())
+                })
                 .collect();
             self.pending_batch = batch;
+            self.wave_stop = Some(stop);
+            self.wave_counts.clear();
+            self.wave_seen = 0;
+            self.wave_decided = false;
             self.phase = Phase::Generating;
-            return Ok(StepYield::Generate {
+            // GenerateEach (not Generate): per-row results stream back
+            // through `on_row_result`, so a wave whose early rows
+            // already decide the vote can stop its own tail mid-decode.
+            return Ok(StepYield::GenerateEach {
                 jobs,
                 deadline_ms: ctx.budget.deadline_at(self.t0),
             });
@@ -135,12 +178,23 @@ impl StrategyState for MvEarlyState {
                 self.engine_calls += 1;
                 self.issued += self.pending_batch;
                 self.pending_batch = 0;
+                self.wave_stop = None;
                 let acc = accumulate_candidates(
                     ctx,
                     &results,
                     &mut self.tokens_total,
                     &mut self.candidates,
                 )?;
+                if self.wave_decided {
+                    // We halted the rest of the wave ourselves once the
+                    // vote crossed the margin: the engine tags those
+                    // rows `preempted`, but that is a deliberate early
+                    // stop, not a budget hit (a genuine token-cap
+                    // truncation in the same batch still reports).
+                    self.budget_exhausted = acc.truncated;
+                    self.stopped_early = true;
+                    return self.finish(ctx);
+                }
                 if acc.preempted {
                     self.preempted = true;
                 }
@@ -148,8 +202,9 @@ impl StrategyState for MvEarlyState {
                     self.budget_exhausted = true;
                     return self.finish(ctx);
                 }
-                // Decided? Even if every unissued candidate voted for
-                // the runner-up, the leader would still win.
+                // Decided at the wave boundary? Even if every unissued
+                // candidate voted for the runner-up, the leader would
+                // still win.
                 let mut counts: HashMap<String, usize> = HashMap::new();
                 for c in &self.candidates {
                     if let Some(a) = eval::extract_answer(&c.text) {
@@ -157,17 +212,47 @@ impl StrategyState for MvEarlyState {
                     }
                 }
                 let mut tallies: Vec<usize> = counts.values().copied().collect();
-                tallies.sort_unstable_by(|a, b| b.cmp(a));
-                let lead = tallies.first().copied().unwrap_or(0);
-                let second = tallies.get(1).copied().unwrap_or(0);
                 let remaining = self.n - self.issued;
-                if remaining > 0 && lead > second + remaining {
+                if remaining > 0 && decided(&mut tallies, remaining) {
                     self.stopped_early = true;
                     return self.finish(ctx);
                 }
                 self.next_wave(ctx)
             }
             _ => Err(Error::internal("mv_early stepped with mismatched input")),
+        }
+    }
+
+    /// Streamed per-row arrival for the in-flight wave: tally the row's
+    /// answer and, the moment the vote can no longer flip — counting
+    /// every unheard row (in-flight and unissued) for the runner-up —
+    /// set the wave's stop flag so the continuous engine retires the
+    /// rows still decoding instead of finishing them.
+    fn on_row_result(&mut self, ctx: &RunCtx<'_>, _row: usize, result: &GenResult) {
+        if !matches!(self.phase, Phase::Generating) || self.wave_decided {
+            return;
+        }
+        self.wave_seen += 1;
+        if !result.preempted {
+            if let Ok(text) = ctx.tokenizer.decode(&result.tokens) {
+                if let Some(a) = eval::extract_answer(&format!("S:{text}")) {
+                    *self.wave_counts.entry(a).or_default() += 1;
+                }
+            }
+        }
+        let mut counts = self.wave_counts.clone();
+        for c in &self.candidates {
+            if let Some(a) = eval::extract_answer(&c.text) {
+                *counts.entry(a).or_default() += 1;
+            }
+        }
+        let mut tallies: Vec<usize> = counts.values().copied().collect();
+        let unknown = (self.n - self.issued).saturating_sub(self.wave_seen);
+        if unknown > 0 && decided(&mut tallies, unknown) {
+            self.wave_decided = true;
+            if let Some(stop) = &self.wave_stop {
+                stop.store(true, Ordering::Relaxed);
+            }
         }
     }
 }
@@ -216,6 +301,10 @@ impl DecodingMethod for EarlyStopMajority {
             engine_calls: 0,
             issued: 0,
             pending_batch: 0,
+            wave_stop: None,
+            wave_counts: HashMap::new(),
+            wave_seen: 0,
+            wave_decided: false,
             budget_exhausted: false,
             preempted: false,
             stopped_early: false,
@@ -242,6 +331,218 @@ mod tests {
         assert_eq!(EarlyStopMajority::wave(&StrategyParams::waves(4, 9)), 4);
         assert_eq!(EarlyStopMajority::wave(&StrategyParams::waves(16, 1)), 4);
         assert_eq!(EarlyStopMajority::wave(&StrategyParams::waves(16, 0)), 4);
+    }
+
+    use crate::config::EngineConfig;
+    use crate::engine::{
+        Backend, BatchPlan, DecodeSession, EmbedKind, Engine, EngineShapes, ProbeTrainReport,
+        StepRows, StepTok,
+    };
+    use crate::strategies::executor::Executor;
+    use crate::strategies::method::Budget;
+    use crate::strategies::space::Strategy;
+    use crate::strategies::stepper::{Stepper, Ticket};
+    use crate::tokenizer::Tokenizer;
+    use crate::util::clock;
+    use crate::util::json::Value;
+
+    /// Scripted steppable backend: slot `s` always answers "3" but with
+    /// a CoT whose length grows steeply with the slot index, so a
+    /// wave's rows finish many decode steps apart. Each decode step
+    /// also sleeps briefly in *real* time, so reply handling on the
+    /// stepper thread (hear the early rows, flip the wave's stop flag)
+    /// comfortably outruns the rows still decoding — the stand-in for
+    /// a device whose step latency dwarfs channel latency.
+    struct StaggerBackend {
+        shapes: EngineShapes,
+        naturals: Vec<Vec<u32>>,
+    }
+
+    struct StaggerRow {
+        natural: Vec<u32>,
+        cursor: usize,
+    }
+
+    struct StaggerSession {
+        rows: Vec<Option<StaggerRow>>,
+    }
+
+    impl StaggerBackend {
+        fn new() -> StaggerBackend {
+            let tok = Tokenizer::new();
+            let naturals = (0..8)
+                .map(|slot| {
+                    let text = format!("{}A:3\n", "1+2=3;".repeat(1 + slot * 4));
+                    tok.encode(&text).unwrap()
+                })
+                .collect();
+            StaggerBackend {
+                shapes: EngineShapes::sim_default(&EngineConfig::default()),
+                naturals,
+            }
+        }
+
+        fn natural(&self, slot: usize) -> Vec<u32> {
+            self.naturals[slot % self.naturals.len()].clone()
+        }
+    }
+
+    impl Backend for StaggerBackend {
+        fn name(&self) -> &'static str {
+            "stagger"
+        }
+
+        fn shapes(&self) -> &EngineShapes {
+            &self.shapes
+        }
+
+        fn describe(&self) -> Value {
+            Value::obj().with("backend", "stagger")
+        }
+
+        fn generate(&mut self, _plan: &BatchPlan, prompts: &[&[u32]]) -> Result<Vec<Vec<u32>>> {
+            Ok((0..prompts.len()).map(|slot| self.natural(slot)).collect())
+        }
+
+        fn prm_score(&mut self, _bucket: usize, _prefixes: &[Vec<u32>]) -> Result<Vec<f32>> {
+            Err(Error::Engine("stagger backend has no PRM".into()))
+        }
+
+        fn embed(
+            &mut self,
+            _kind: EmbedKind,
+            _bucket: usize,
+            _queries: &[Vec<u32>],
+        ) -> Result<Vec<Vec<f32>>> {
+            Err(Error::Engine("stagger backend has no embedder".into()))
+        }
+
+        fn probe_fwd(&mut self, _feats: &[Vec<f32>]) -> Result<Vec<f32>> {
+            Err(Error::Engine("stagger backend has no probe".into()))
+        }
+
+        fn probe_train(
+            &mut self,
+            _train_feats: &[Vec<f32>],
+            _train_labels: &[f32],
+            _val_feats: &[Vec<f32>],
+            _val_labels: &[f32],
+            _epochs: usize,
+            _patience: usize,
+        ) -> Result<ProbeTrainReport> {
+            Err(Error::Engine("stagger backend has no probe".into()))
+        }
+
+        fn probe_load(&mut self, _params: Vec<f32>) -> Result<()> {
+            Err(Error::Engine("stagger backend has no probe".into()))
+        }
+
+        fn stepping(&self) -> bool {
+            true
+        }
+
+        fn prefill(&mut self, plan: &BatchPlan, prompts: &[&[u32]]) -> Result<DecodeSession> {
+            let mut rows: Vec<Option<StaggerRow>> = (0..plan.bucket).map(|_| None).collect();
+            for slot in 0..prompts.len() {
+                rows[slot] = Some(StaggerRow {
+                    natural: self.natural(slot),
+                    cursor: 0,
+                });
+            }
+            Ok(DecodeSession::new(plan, Box::new(StaggerSession { rows })))
+        }
+
+        fn decode_step(&mut self, session: &mut DecodeSession) -> Result<StepRows> {
+            // the real-time throttle: one step is long against reply
+            // handling on the stepper thread
+            std::thread::sleep(std::time::Duration::from_micros(300));
+            let bucket = session.bucket;
+            let s = session.state_mut::<StaggerSession>()?;
+            let mut out: StepRows = (0..bucket).map(|_| None).collect();
+            for (slot, row) in s.rows.iter_mut().enumerate() {
+                if let Some(r) = row {
+                    if r.cursor < r.natural.len() {
+                        let token = r.natural[r.cursor];
+                        r.cursor += 1;
+                        out[slot] = Some(StepTok {
+                            token,
+                            last: r.cursor == r.natural.len(),
+                        });
+                    }
+                }
+            }
+            Ok(out)
+        }
+
+        fn admit_row(
+            &mut self,
+            session: &mut DecodeSession,
+            slot: usize,
+            _prompt: &[u32],
+        ) -> Result<bool> {
+            let natural = self.natural(slot);
+            let s = session.state_mut::<StaggerSession>()?;
+            s.rows[slot] = Some(StaggerRow { natural, cursor: 0 });
+            Ok(true)
+        }
+
+        fn retire_row(&mut self, session: &mut DecodeSession, slot: usize) -> usize {
+            let Ok(s) = session.state_mut::<StaggerSession>() else {
+                return 0;
+            };
+            match s.rows.get_mut(slot).and_then(|r| r.take()) {
+                Some(r) => r.natural.len().saturating_sub(r.cursor),
+                None => 0,
+            }
+        }
+    }
+
+    /// ISSUE 9 satellite: a decided vote mid-wave sets the wave's stop
+    /// flag, and the continuous engine retires the still-decoding rows
+    /// — live decode steps genuinely saved, not just relabeled.
+    ///
+    /// With N=8, wave=4 and every row answering "3": the wave-1
+    /// boundary is undecided (lead 4 = remaining 4), so wave 2 is
+    /// issued. Its shortest row lands first → lead 5 > 3 unheard →
+    /// decided mid-wave while the three longer rows are still many
+    /// (throttled) steps from their ends.
+    #[test]
+    fn decided_wave_stops_live_rows_and_saves_decode_steps() {
+        let clock = clock::sim_clock();
+        let engine = Engine::start_member_with_factory(
+            clock.clone(),
+            0,
+            Box::new(|| Ok(Box::new(StaggerBackend::new()) as Box<dyn Backend>)),
+            "stagger backend",
+            None,
+            true,
+        )
+        .unwrap();
+        let ex = Executor::new(engine.handle(), clock, 0.0);
+        let mut stepper = Stepper::new(ex);
+        stepper
+            .admit(Ticket {
+                query: "Q:1+2=?\n".into(),
+                strategy: Strategy::mv_early_wave(8, 4),
+                budget: Budget::unlimited(),
+                tag: 0,
+            })
+            .unwrap();
+        stepper.run_to_completion().unwrap();
+        let done = stepper.drain_completed();
+        assert_eq!(done.len(), 1);
+        let o = &done[0].outcome;
+        assert_eq!(o.answer.as_deref(), Some("3"));
+        assert!(o.stopped_early, "decided mid-wave must report stopped_early");
+        assert!(
+            !o.budget_exhausted,
+            "a deliberate stop is not a budget hit"
+        );
+        assert!(
+            engine.metrics.decode_steps_saved_live.get() > 0,
+            "stop flag must retire rows before their natural ends"
+        );
+        assert!(engine.metrics.retired_rows.get() > 0);
     }
 
     #[test]

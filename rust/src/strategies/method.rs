@@ -378,6 +378,22 @@ pub enum StepYield {
         /// budget's relative deadline at its own start time), or `None`.
         deadline_ms: Option<f64>,
     },
+    /// Like [`StepYield::Generate`], but each job is submitted as its
+    /// own engine request so results stream back per row as they
+    /// finish: the serving layer fires
+    /// [`StrategyState::on_row_result`] for every arriving row, and
+    /// resumes the machine with [`StepInput::Generated`] (results in
+    /// job order) once all rows are in. On the continuous engine the
+    /// rows still coalesce into shared bucket-shaped sessions — the
+    /// per-request split only changes when *replies* fire. This is how
+    /// `mv_early` watches a wave mid-flight and stops the rest of it
+    /// (via each job's shared stop flag) the moment the vote is
+    /// decided.
+    GenerateEach {
+        jobs: Vec<GenJob>,
+        /// Absolute deadline for the calls, or `None`.
+        deadline_ms: Option<f64>,
+    },
     /// Score these CoT prefixes with the PRM and resume with
     /// [`StepInput::Scored`].
     PrmScore(Vec<Vec<u32>>),
@@ -410,6 +426,16 @@ pub enum StepYield {
 pub trait StrategyState: Send {
     /// Advance the strategy by one step.
     fn step(&mut self, ctx: &RunCtx<'_>, input: StepInput) -> Result<StepYield>;
+
+    /// Streamed notification for [`StepYield::GenerateEach`]: called
+    /// once per row as its result arrives, *before* the machine is
+    /// resumed with the full result set. The machine may only update
+    /// internal state or flip shared flags here (e.g. set the wave's
+    /// stop flag when the vote is decided so the engine retires the
+    /// rows still decoding); it must not assume the remaining rows have
+    /// run, and it still receives every row — this one included —
+    /// through [`StepInput::Generated`] afterwards.
+    fn on_row_result(&mut self, _ctx: &RunCtx<'_>, _row: usize, _result: &GenResult) {}
 }
 
 /// Drive a step machine to completion against the blocking engine API —
@@ -424,12 +450,77 @@ pub fn drive(ctx: &RunCtx<'_>, state: &mut (dyn StrategyState + '_)) -> Result<O
             StepYield::Generate { jobs, deadline_ms } => {
                 input = StepInput::Generated(ctx.engine.generate_with_deadline(jobs, deadline_ms)?);
             }
+            StepYield::GenerateEach { jobs, deadline_ms } => {
+                input = StepInput::Generated(drive_each(ctx, state, jobs, deadline_ms)?);
+            }
             StepYield::PrmScore(prefixes) => {
                 input = StepInput::Scored(ctx.prm_score(prefixes)?);
             }
             StepYield::Done(outcome) => return Ok(outcome),
         }
     }
+}
+
+/// Blocking half of [`StepYield::GenerateEach`]: submit every job as
+/// its own engine request, fire [`StrategyState::on_row_result`] as
+/// each row's reply lands, and return the results in job order. Rows
+/// are polled non-blockingly first so late rows hear about early ones
+/// (that ordering is the whole point of the variant); when nothing is
+/// ready we block briefly on the oldest outstanding reply.
+fn drive_each(
+    ctx: &RunCtx<'_>,
+    state: &mut (dyn StrategyState + '_),
+    jobs: Vec<GenJob>,
+    deadline_ms: Option<f64>,
+) -> Result<Vec<GenResult>> {
+    let pending = jobs
+        .into_iter()
+        .map(|job| ctx.engine.submit_generate(vec![job], deadline_ms))
+        .collect::<Result<Vec<_>>>()?;
+    let mut results: Vec<Option<GenResult>> = (0..pending.len()).map(|_| None).collect();
+    let mut outstanding: Vec<usize> = (0..pending.len()).collect();
+    while !outstanding.is_empty() {
+        let mut progressed = false;
+        outstanding.retain(|&row| match pending[row].try_wait() {
+            Some(reply) => {
+                progressed = true;
+                results[row] = Some(settle_row(ctx, state, row, reply));
+                false
+            }
+            None => true,
+        });
+        if !progressed {
+            let row = outstanding[0];
+            let wait = Some(std::time::Duration::from_millis(2));
+            if let Some(reply) = pending[row].wait_timeout(wait) {
+                results[row] = Some(settle_row(ctx, state, row, reply));
+                outstanding.remove(0);
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(results.len());
+    for (row, slot) in results.into_iter().enumerate() {
+        out.push(slot.expect("outstanding drained")?.into_iter().next().ok_or_else(|| {
+            Error::internal(format!("engine returned no rows for single-job request {row}"))
+        })?);
+    }
+    Ok(out)
+}
+
+/// Fire the per-row hook for one arrived [`drive_each`] reply. Errors
+/// are deferred to final assembly so every submitted row is joined.
+fn settle_row(
+    ctx: &RunCtx<'_>,
+    state: &mut (dyn StrategyState + '_),
+    row: usize,
+    reply: Result<Vec<GenResult>>,
+) -> Result<Vec<GenResult>> {
+    if let Ok(rows) = &reply {
+        if let Some(result) = rows.first() {
+            state.on_row_result(ctx, row, result);
+        }
+    }
+    reply
 }
 
 /// Fallback step machine for methods that only implement the blocking

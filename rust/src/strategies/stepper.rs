@@ -30,8 +30,8 @@
 //! treat any strategy error as a failed run (same contract as the
 //! blocking driver), so [`Stepper::advance`] propagates the first one.
 
-use crate::engine::PendingReply;
-use crate::error::Result;
+use crate::engine::{GenResult, PendingReply};
+use crate::error::{Error, Result};
 use crate::metrics::StepperMetrics;
 use crate::router::{FinishedRequest, Reallocator, RunningView};
 use crate::strategies::executor::{resolve, Executor};
@@ -77,6 +77,19 @@ enum Waiting {
     Ready(StepInput),
     /// A generate call is in flight.
     Generate(PendingReply<Vec<crate::engine::GenResult>>),
+    /// A [`StepYield::GenerateEach`] fan-out is in flight: one
+    /// single-job engine request per row, harvested independently so
+    /// the machine's [`StrategyState::on_row_result`] hook fires the
+    /// moment each row finishes (that is what lets `mv_early` stop the
+    /// rest of a wave mid-decode). Flips to `Ready(Generated)` once
+    /// every row is in.
+    GenerateMulti {
+        /// Outstanding replies by row; harvested slots become `None`.
+        pending: Vec<Option<PendingReply<Vec<GenResult>>>>,
+        /// Arrived results by row, awaiting assembly.
+        results: Vec<Option<GenResult>>,
+        outstanding: usize,
+    },
     /// A PRM scoring call is in flight.
     Score(PendingReply<Vec<f32>>),
 }
@@ -196,6 +209,24 @@ impl Stepper {
                     self.active[i].waiting = Waiting::Generate(reply);
                     i += 1;
                 }
+                StepYield::GenerateEach { jobs, deadline_ms } => {
+                    let n = jobs.len();
+                    let mut pending = Vec::with_capacity(n);
+                    for job in jobs {
+                        pending.push(Some(self.executor.engine.submit_generate(vec![job], deadline_ms)?));
+                        self.metrics.engine_submits.inc();
+                    }
+                    self.active[i].waiting = if n == 0 {
+                        Waiting::Ready(StepInput::Generated(Vec::new()))
+                    } else {
+                        Waiting::GenerateMulti {
+                            pending,
+                            results: (0..n).map(|_| None).collect(),
+                            outstanding: n,
+                        }
+                    };
+                    i += 1;
+                }
                 StepYield::PrmScore(prefixes) => {
                     let reply = self.executor.engine.submit_prm_score(prefixes)?;
                     self.metrics.engine_submits.inc();
@@ -230,11 +261,22 @@ impl Stepper {
             return Ok(Progress::Stepped);
         }
         // …and only then block for slot 0's reply.
+        if matches!(self.active[0].waiting, Waiting::GenerateMulti { .. }) {
+            // Block on the fan-out's first outstanding row; even a
+            // partial arrival is progress (the per-row hook ran), but
+            // only a fully-assembled set makes the machine runnable.
+            let became_ready = poll_generate_multi(&self.executor, &mut self.active[0], Some(wait))?;
+            if became_ready || self.harvest_replies()? {
+                return Ok(Progress::Stepped);
+            }
+            return Ok(Progress::TimedOut);
+        }
         let ready = match &self.active[0].waiting {
             Waiting::Generate(reply) => reply
                 .wait_timeout(wait)
                 .map(|r| r.map(StepInput::Generated)),
             Waiting::Score(reply) => reply.wait_timeout(wait).map(|r| r.map(StepInput::Scored)),
+            Waiting::GenerateMulti { .. } => unreachable!("handled above"),
             Waiting::Ready(_) => unreachable!("no machine was runnable"),
         };
         match ready {
@@ -260,12 +302,20 @@ impl Stepper {
     /// runnable.
     fn harvest_replies(&mut self) -> Result<bool> {
         let mut any = false;
+        let executor = &self.executor;
         for m in self.active.iter_mut() {
+            if matches!(m.waiting, Waiting::GenerateMulti { .. }) {
+                if poll_generate_multi(executor, m, None)? {
+                    any = true;
+                }
+                continue;
+            }
             let harvested = match &m.waiting {
                 Waiting::Generate(reply) => {
                     reply.try_wait().map(|r| r.map(StepInput::Generated))
                 }
                 Waiting::Score(reply) => reply.try_wait().map(|r| r.map(StepInput::Scored)),
+                Waiting::GenerateMulti { .. } => unreachable!("handled above"),
                 Waiting::Ready(_) => None,
             };
             if let Some(input) = harvested {
@@ -353,6 +403,77 @@ impl Stepper {
     }
 }
 
+/// Poll one [`Waiting::GenerateMulti`] fan-out: harvest every arrived
+/// row (firing the machine's [`StrategyState::on_row_result`] hook as
+/// each lands). `block` is two-level: `None` = non-blocking sweep only
+/// (the harvest pass); `Some(wait)` = first block on the earliest
+/// outstanding reply with [`PendingReply::wait_timeout`] semantics
+/// (inner `None` = indefinitely). Returns whether the machine became
+/// runnable (all rows in → `Ready(Generated)` in row order). A free
+/// function — not a method — so callers can hold `&executor` and
+/// `&mut active[i]` as disjoint field borrows.
+fn poll_generate_multi(
+    executor: &Executor,
+    m: &mut Active,
+    block: Option<Option<Duration>>,
+) -> Result<bool> {
+    let Active {
+        query,
+        budget,
+        state,
+        waiting,
+        ..
+    } = m;
+    let Waiting::GenerateMulti {
+        pending,
+        results,
+        outstanding,
+    } = waiting
+    else {
+        return Ok(false);
+    };
+    let ctx = executor.ctx(query, budget.clone());
+    let settle = |reply: Result<Vec<GenResult>>| -> Result<GenResult> {
+        reply?
+            .into_iter()
+            .next()
+            .ok_or_else(|| Error::internal("engine returned no rows for a single-job request"))
+    };
+    // Blocking pass first (the caller had nothing runnable)…
+    if let Some(wait) = block {
+        if let Some(row) = pending.iter().position(Option::is_some) {
+            let reply = pending[row].as_ref().expect("position found Some");
+            if let Some(r) = reply.wait_timeout(wait) {
+                let result = settle(r)?;
+                state.on_row_result(&ctx, row, &result);
+                results[row] = Some(result);
+                pending[row] = None;
+                *outstanding -= 1;
+            }
+        }
+    }
+    // …then sweep the rest non-blockingly.
+    for (row, slot) in pending.iter_mut().enumerate() {
+        let Some(reply) = slot else { continue };
+        if let Some(r) = reply.try_wait() {
+            let result = settle(r)?;
+            state.on_row_result(&ctx, row, &result);
+            results[row] = Some(result);
+            *slot = None;
+            *outstanding -= 1;
+        }
+    }
+    if *outstanding == 0 {
+        let collected: Vec<GenResult> = results
+            .iter_mut()
+            .map(|r| r.take().expect("all rows arrived"))
+            .collect();
+        *waiting = Waiting::Ready(StepInput::Generated(collected));
+        return Ok(true);
+    }
+    Ok(false)
+}
+
 #[cfg(test)]
 mod tests {
     //! Machine-level tests against the sim execution backend: step
@@ -406,6 +527,14 @@ mod tests {
                 StepYield::Generate { jobs, .. } => {
                     let batch = answers.next().expect("machine wanted another wave");
                     assert_eq!(jobs.len(), batch.len(), "job/result count mismatch");
+                    input = StepInput::Generated(batch);
+                }
+                StepYield::GenerateEach { jobs, .. } => {
+                    let batch = answers.next().expect("machine wanted another wave");
+                    assert_eq!(jobs.len(), batch.len(), "job/result count mismatch");
+                    for (row, result) in batch.iter().enumerate() {
+                        state.on_row_result(&ctx, row, result);
+                    }
                     input = StepInput::Generated(batch);
                 }
                 StepYield::PrmScore(prefixes) => {

@@ -1,0 +1,189 @@
+//! Continuous batching end-to-end, on the artifact-free sim backend:
+//!
+//! * temperature-0 equivalence — the continuous engine (persistent slot
+//!   table, per-step retirement, mid-decode admission) returns results
+//!   byte-identical to the round-based engine, for every registered
+//!   decoding method, for pool sizes 1, 2 and 4, blocking and stepped;
+//! * the cross-request cache tier keeps fronting the continuous path
+//!   (leader/follower dedup and replay do not change results);
+//! * the new slot-table metrics flow through the pool report.
+//!
+//! Straggler-join and deadline-cut slot reuse are covered at the unit
+//! level in `engine::thread`; this suite pins the external contract.
+
+use ttc::config::{BackendKind, Config};
+use ttc::engine::EnginePool;
+use ttc::strategies::stepper::{Stepper, Ticket};
+use ttc::strategies::{registry, Budget, Executor, Outcome, Strategy, StrategyParams};
+use ttc::util::rng::Rng;
+
+fn pool_with(engines: usize, continuous: bool, cache: bool) -> (EnginePool, Executor) {
+    let mut cfg = Config::default();
+    cfg.engine.backend = BackendKind::Sim;
+    cfg.engine.sim_clock = true; // deterministic modeled latencies
+    cfg.engine.engines = engines;
+    cfg.engine.continuous = continuous;
+    cfg.engine.cache.enabled = cache;
+    let pool = EnginePool::start(&cfg).unwrap();
+    // temperature 0: generation is a pure function of the prompt, so
+    // results cannot depend on scheduling — round vs continuous, serial
+    // vs pool, cached vs uncached
+    let executor = Executor::new(pool.handle(), pool.clock.clone(), 0.0);
+    (pool, executor)
+}
+
+/// One deterministic case per registered method (no deadlines, so
+/// outcomes are time-independent and comparable across schedulers).
+fn method_cases() -> Vec<(Strategy, Budget, String)> {
+    let mut rng = Rng::new(0xC0_17_11, 0);
+    let mut cases: Vec<(Strategy, Budget, String)> = Vec::new();
+    for method in registry::all() {
+        let params = if method.name() == "mv_early" {
+            // wave shape where a unanimous vote can only cross the
+            // decided margin once a full wave has been heard (n=6, w=2:
+            // wave 2's trigger needs both rows) — so the mid-wave stop
+            // flag never halts a live row, and the comparison with the
+            // round path stays byte-exact under any admission stagger
+            StrategyParams::waves(6, 2)
+        } else if method.uses_rounds() {
+            StrategyParams::beam(
+                rng.range(1, 4) as usize,
+                rng.range(1, 3) as usize,
+                rng.range(6, 16) as usize,
+            )
+        } else {
+            StrategyParams::parallel(rng.range(2, 8) as usize)
+        };
+        let budget = if rng.below(2) == 0 {
+            Budget::unlimited()
+        } else {
+            Budget::unlimited().with_max_tokens(rng.range(8, 64) as usize)
+        };
+        let query = format!("Q:9-{}*2+7=?\n", rng.range(0, 9));
+        cases.push((Strategy::new(method.name(), params), budget, query));
+    }
+    cases
+}
+
+/// Everything except latency must match (latencies differ when
+/// concurrent machines interleave their clock charges).
+fn assert_same_result(a: &Outcome, b: &Outcome, label: &str) {
+    assert_eq!(a.answer, b.answer, "{label}: answer diverged");
+    assert_eq!(a.chosen, b.chosen, "{label}: chosen diverged");
+    assert_eq!(a.tokens, b.tokens, "{label}: tokens diverged");
+    assert_eq!(a.engine_calls, b.engine_calls, "{label}: engine calls diverged");
+    assert_eq!(a.rounds, b.rounds, "{label}: rounds diverged");
+    assert_eq!(
+        a.budget_exhausted, b.budget_exhausted,
+        "{label}: budget_exhausted diverged"
+    );
+    assert_eq!(a.stopped_early, b.stopped_early, "{label}: stopped_early diverged");
+    assert_eq!(a.preempted, b.preempted, "{label}: preempted diverged");
+}
+
+/// The round-based reference: one engine, blocking, one case at a time.
+fn round_reference(cases: &[(Strategy, Budget, String)]) -> Vec<Outcome> {
+    let (_p, round) = pool_with(1, false, false);
+    cases
+        .iter()
+        .map(|(s, b, q)| round.run_budgeted(s, q, b.clone()).unwrap())
+        .collect()
+}
+
+#[test]
+fn continuous_matches_round_for_every_method_blocking() {
+    let cases = method_cases();
+    let reference = round_reference(&cases);
+    let (_p, cont) = pool_with(1, true, false);
+    for ((s, b, q), r) in cases.iter().zip(&reference) {
+        let o = cont.run_budgeted(s, q, b.clone()).unwrap();
+        assert_same_result(&o, r, &format!("{} continuous-blocking", s.id()));
+    }
+}
+
+#[test]
+fn continuous_matches_round_for_pool_sizes_1_2_4() {
+    let cases = method_cases();
+    let reference = round_reference(&cases);
+    for engines in [1usize, 2, 4] {
+        let (_pn, executor) = pool_with(engines, true, false);
+        let mut stepper = Stepper::new(executor.clone());
+        // all cases in flight concurrently: their jobs land mid-decode
+        // in each other's sessions and must not care
+        for (i, (s, b, q)) in cases.iter().enumerate() {
+            stepper
+                .admit(Ticket {
+                    query: q.clone(),
+                    strategy: s.clone(),
+                    budget: b.clone(),
+                    tag: i as u64,
+                })
+                .unwrap();
+        }
+        stepper.run_to_completion().unwrap();
+        let mut done = stepper.drain_completed();
+        assert_eq!(done.len(), cases.len());
+        done.sort_by_key(|c| c.tag);
+        for (c, r) in done.iter().zip(&reference) {
+            assert_same_result(
+                &c.outcome,
+                r,
+                &format!("{} continuous on {engines} engine(s)", c.strategy_id),
+            );
+        }
+    }
+}
+
+#[test]
+fn cache_front_keeps_continuous_results_identical() {
+    let cases = method_cases();
+    let reference = round_reference(&cases);
+    let (_p, cont) = pool_with(1, true, true);
+    // two passes: the first warms the generation/score stores, the
+    // second replays through leader/follower dedup — both must match
+    // the uncached round-based reference byte for byte
+    for pass in 0..2 {
+        for ((s, b, q), r) in cases.iter().zip(&reference) {
+            let o = cont.run_budgeted(s, q, b.clone()).unwrap();
+            assert_same_result(
+                &o,
+                r,
+                &format!("{} continuous+cache pass {pass}", s.id()),
+            );
+        }
+    }
+}
+
+#[test]
+fn slot_metrics_flow_into_the_pool_report() {
+    let (pool, executor) = pool_with(2, true, false);
+    let mut stepper = Stepper::new(executor.clone());
+    for i in 0..8u64 {
+        stepper
+            .admit(Ticket {
+                query: format!("Q:7+{i}-2+8=?\n"),
+                strategy: Strategy::mv(4),
+                budget: Budget::unlimited(),
+                tag: i,
+            })
+            .unwrap();
+    }
+    stepper.run_to_completion().unwrap();
+    assert_eq!(stepper.drain_completed().len(), 8);
+
+    let report = pool.report();
+    let per_engine = report.req_arr("per_engine").unwrap();
+    assert_eq!(per_engine.len(), 2);
+    for e in per_engine {
+        // the slot-table counters exist per engine; occupancy is a
+        // ratio in (0, 1] wherever that engine decoded anything
+        let occ = e.req_f64("slot_occupancy").unwrap();
+        assert!((0.0..=1.0).contains(&occ), "slot_occupancy {occ}");
+        if e.req_f64("rows_served").unwrap() > 0.0 {
+            assert!(occ > 0.0, "engine decoded rows but reports zero occupancy");
+            assert!(e.req_f64("retired_rows").unwrap() > 0.0);
+        }
+        assert!(e.req_f64("decode_steps_saved_live").unwrap() >= 0.0);
+        assert!(e.req_f64("mid_decode_admits").unwrap() >= 0.0);
+    }
+}
