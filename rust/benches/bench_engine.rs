@@ -33,6 +33,57 @@ fn main() {
     // the remote bench rides the loopback transport (full wire
     // protocol, no sockets), so it also runs everywhere
     remote_bench();
+    // agentic chain tier: shared chain budgets on a sim pool, so the
+    // goodput / cross-step grant stats gate on every checkout
+    chain_bench();
+}
+
+/// Chain-tier workload: 4 concurrent 3-step chains, each under one
+/// shared token budget, interleaved through `run_traffic` on a
+/// 2-engine sim pool. Every chain's cheap first step underspends its
+/// nominal share, so the allocator re-splits the surplus into later
+/// steps — the two stats the bench gate floors (`chain_goodput` and
+/// `chain_realloc_grants`) assert the banking path keeps working.
+fn chain_bench() {
+    use ttc::server::chain::ChainSpec;
+    use ttc::server::driver::{self, Mode};
+    use ttc::taskgen::ChainProblem;
+
+    let mut cfg = Config::default();
+    cfg.engine.backend = BackendKind::Sim;
+    cfg.engine.sim_clock = true;
+    cfg.engine.engines = 2;
+    let pool = EnginePool::start(&cfg).expect("sim pool start (chains)");
+    let executor = Executor::new(pool.handle(), pool.clock.clone(), 0.0);
+    let mode = Mode::Static(Strategy::mv(2));
+    let chains: Vec<ChainSpec> = (0..4)
+        .map(|i| ChainSpec {
+            id: format!("bench-c{i}"),
+            arrival_ms: 0.0,
+            // ample shared pool: the chain completes, but the equal
+            // per-step nominals leave the first step's surplus to bank
+            budget: Budget::unlimited().with_max_tokens(400),
+            steps: ["7+8-5*2", "max(3,8,5)", "1+2+3"]
+                .iter()
+                .map(|e| ChainProblem::parse_expr(e).expect("valid step expr"))
+                .collect(),
+        })
+        .collect();
+    let run = || driver::run_traffic(&executor, &mode, Vec::new(), chains.clone(), 4).unwrap();
+    bench("chain_4x_shared_budget", || {
+        std::hint::black_box(run());
+    });
+    let report = run();
+    let chain = report.chain.as_ref().expect("chain report section");
+    println!(
+        "stat,chain_goodput,{}",
+        chain.req_f64("goodput").unwrap_or(0.0)
+    );
+    println!(
+        "stat,chain_realloc_grants,{}",
+        chain.req_f64("realloc_grants").unwrap_or(0.0)
+    );
+    println!("# chain report section: {}", chain.dumps());
 }
 
 /// Cross-request cache workload: 8 concurrent requests sharing one stem

@@ -143,6 +143,13 @@ pub struct EngineConfig {
     /// Same-shard retries per remote call before the pool's failover
     /// takes over.
     pub remote_retries: usize,
+    /// Bound on concurrently in-flight calls per multiplexed remote
+    /// connection ([`crate::net::MuxTransport`]); submitters past the
+    /// bound block (counted in `NetMetrics.mux_backpressure_waits`)
+    /// until a reply frees a slot. Generous by default — a safety net
+    /// against a slow engine absorbing unbounded queued work, not a
+    /// throughput knob.
+    pub mux_max_inflight: usize,
     /// Preferred data-plane codec for the remote wire (`--wire-codec`);
     /// negotiated down to JSON when the peer doesn't speak it.
     pub wire_codec: WireCodec,
@@ -196,6 +203,7 @@ impl Default for EngineConfig {
             remote_addrs: Vec::new(),
             remote_timeout_ms: 30_000.0,
             remote_retries: 2,
+            mux_max_inflight: 256,
             wire_codec: WireCodec::Json,
             cache: CacheConfig::default(),
         }
@@ -421,6 +429,7 @@ impl Config {
         e.engines = v.opt_usize("engines", e.engines);
         e.remote_timeout_ms = v.opt_f64("remote_timeout_ms", e.remote_timeout_ms);
         e.remote_retries = v.opt_usize("remote_retries", e.remote_retries);
+        e.mux_max_inflight = v.opt_usize("mux_max_inflight", e.mux_max_inflight);
         if let Some(addrs) = v.get("remote_addrs") {
             e.remote_addrs = addrs
                 .as_arr()
@@ -642,6 +651,10 @@ mod tests {
         assert_eq!(c.engine.remote_addrs, vec!["h1:7070", "h2:7070"]);
         assert_eq!(c.engine.remote_timeout_ms, 500.0);
         assert_eq!(c.engine.remote_retries, 1);
+        assert_eq!(c.engine.mux_max_inflight, 256, "generous default bound");
+        let v = parse(r#"{"engine": {"mux_max_inflight": 8}}"#).unwrap();
+        c.merge_json(&v).unwrap();
+        assert_eq!(c.engine.mux_max_inflight, 8);
         assert_eq!(BackendKind::parse("remote").unwrap().as_str(), "remote");
         let bad = parse(r#"{"engine": {"remote_addrs": [7]}}"#).unwrap();
         assert!(c.merge_json(&bad).is_err());

@@ -9,7 +9,7 @@
 //! * [`crate::engine::thread::DeviceBackend`] — the PJRT device path
 //!   (AOT'd executables, device-resident weights); and
 //! * [`SimBackend`] (below) — a deterministic model-free emulator of the
-//!   trained LM/PRM over the synthetic arithmetic domain. It needs no
+//!   trained LM/PRM over the synthetic task domains. It needs no
 //!   artifacts, so every serve / stepper / pool / bench path can run
 //!   engine-full on a fresh checkout, with latencies supplied by the
 //!   calibrated [`crate::util::clock::SimClock`] cost model.
@@ -43,7 +43,7 @@ use crate::config::EngineConfig;
 use crate::engine::batcher::BatchPlan;
 use crate::engine::protocol::{EmbedKind, GenKind, ProbeTrainReport};
 use crate::error::{Error, Result};
-use crate::taskgen::{Op, Problem};
+use crate::taskgen::ChainProblem;
 use crate::tokenizer::Tokenizer;
 use crate::util::clock::{CostEvent, SharedClock};
 use crate::util::json::Value;
@@ -401,10 +401,10 @@ fn unit(h: u64) -> f64 {
 // SimBackend
 // ---------------------------------------------------------------------
 
-/// The parsed state of a generation prompt over the arithmetic domain:
-/// the query's op chain plus how far the written CoT has progressed.
+/// The parsed state of a generation prompt over the task domains: the
+/// query's step chain plus how far the written CoT has progressed.
 struct ChainState {
-    problem: Problem,
+    problem: ChainProblem,
     /// Steps already written in the prompt's `S:` section.
     steps_done: usize,
     /// Accumulator after the written steps (the last *written* result —
@@ -412,46 +412,19 @@ struct ChainState {
     acc: i64,
 }
 
-fn take_int(chars: &mut std::iter::Peekable<std::str::Chars<'_>>) -> Option<i64> {
-    let mut s = String::new();
-    while let Some(&c) = chars.peek() {
-        if c.is_ascii_digit() {
-            s.push(c);
-            chars.next();
-        } else {
-            break;
-        }
-    }
-    s.parse().ok()
-}
-
-/// Parse `Q:<expr>=?\nS:<step;>*` into a [`ChainState`]. Returns `None`
-/// for anything outside the domain (the caller falls back to a
+/// Parse `Q:<expr>=?\nS:<step;>*` into a [`ChainState`]. The expression
+/// grammar (both domains) lives in [`ChainProblem::parse_expr`]. Returns
+/// `None` for anything outside the domains (the caller falls back to a
 /// deterministic degenerate completion, the way a real LM emits
 /// something for any prompt).
 fn parse_prompt(text: &str) -> Option<ChainState> {
     let rest = text.strip_prefix("Q:")?;
     let (expr, rest) = rest.split_once("=?")?;
     let rest = rest.strip_prefix('\n')?;
-    let mut chars = expr.chars().peekable();
-    let first = take_int(&mut chars)?;
-    let mut chain = Vec::new();
-    while let Some(&c) = chars.peek() {
-        let op = match c {
-            '+' => Op::Add,
-            '-' => Op::Sub,
-            '*' => Op::Mul,
-            _ => return None,
-        };
-        chars.next();
-        chain.push((op, take_int(&mut chars)?));
-    }
-    if chain.is_empty() {
-        return None;
-    }
+    let problem = ChainProblem::parse_expr(expr)?;
     let body = rest.strip_prefix("S:")?;
     let mut steps_done = 0usize;
-    let mut acc = first;
+    let mut acc = problem.start();
     if !body.is_empty() {
         // chunk prompts always end at a `;` step boundary
         let body = body.strip_suffix(';')?;
@@ -461,18 +434,19 @@ fn parse_prompt(text: &str) -> Option<ChainState> {
             steps_done += 1;
         }
     }
-    if steps_done > chain.len() {
+    if steps_done > problem.k() {
         return None;
     }
     Some(ChainState {
-        problem: Problem { first, chain },
+        problem,
         steps_done,
         acc,
     })
 }
 
 /// A deterministic, artifact-free emulation of the trained generator +
-/// PRM + embedders over the synthetic arithmetic domain.
+/// PRM + embedders over the synthetic task domains (modular arithmetic
+/// and max-value chains — see [`ChainProblem`]).
 ///
 /// Determinism guarantees (relied on by the pool equivalence tests, see
 /// `docs/backends.md`):
@@ -523,26 +497,30 @@ impl SimBackend {
                 format!("A:{}\n", fnv_tokens(7, prompt) % 10)
             }
             Some(state) => {
-                let k = state.problem.chain.len();
+                let k = state.problem.k();
                 let mut acc = state.acc;
                 let mut out = String::new();
                 let until = match kind {
                     GenKind::Full => k,
                     GenKind::Chunk => (state.steps_done + 1).min(k),
                 };
+                // per-domain slip difficulty: comparison steps (max
+                // domain) slip half as often as arithmetic steps
+                let slip_p = (SLIP_PER_TEMPERATURE
+                    * temperature as f64
+                    * state.problem.slip_factor())
+                .min(0.9);
                 for i in state.steps_done..until {
-                    let (op, rhs) = state.problem.chain[i];
-                    let correct = op.apply(acc, rhs);
-                    let slips = temperature > 0.0
-                        && unit(mix(row_key, i as u64))
-                            < (SLIP_PER_TEMPERATURE * temperature as f64).min(0.9);
+                    let (stem, correct) =
+                        state.problem.step_stem(i, acc).expect("step in range");
+                    let slips = temperature > 0.0 && unit(mix(row_key, i as u64)) < slip_p;
                     let result = if slips {
                         // deterministic wrong digit, never the correct one
                         (correct + 1 + (mix(row_key, i as u64 * 2 + 1) % 8) as i64) % 10
                     } else {
                         correct
                     };
-                    out.push_str(&format!("{acc}{}{rhs}={result};", op.symbol()));
+                    out.push_str(&format!("{stem}{result};"));
                     acc = result;
                 }
                 // Full runs finish with the answer; a chunk only does
@@ -578,7 +556,7 @@ impl SimBackend {
         let Some(state) = parse_prompt(&format!("{query}\nS:")) else {
             return (0.08 + jitter(11)).clamp(0.01, 0.99);
         };
-        let truth = state.problem.steps();
+        let truth = state.problem.step_texts();
         let answer = state.problem.answer().to_string();
         let mut wrongs = 0usize;
         let mut idx = 0usize;
@@ -591,7 +569,7 @@ impl SimBackend {
                 if ans != answer || idx != truth.len() {
                     wrongs += 1;
                 }
-            } else if idx >= truth.len() || seg != truth[idx].text() {
+            } else if idx >= truth.len() || seg != truth[idx] {
                 wrongs += 1;
                 idx += 1;
             } else {
@@ -827,6 +805,7 @@ struct SimSession {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::taskgen::{MaxProblem, Problem};
     use crate::util::clock;
 
     fn sim() -> SimBackend {
@@ -978,6 +957,80 @@ mod tests {
         assert_eq!(r1, r2);
         let text = tok.decode(&r1[0]).unwrap();
         assert!(text.starts_with("A:") && text.ends_with('\n'), "{text:?}");
+    }
+
+    // -- max-value domain ---------------------------------------------
+
+    #[test]
+    fn temp0_solves_max_chains_too() {
+        let mut b = sim();
+        let tok = Tokenizer::new();
+        let mut rng = Rng::new(41, 0);
+        for k in 2..=8 {
+            let p = MaxProblem::sample(&mut rng, k);
+            let prompt = tok.encode(&format!("{}S:", p.query_text())).unwrap();
+            let rows = b.generate(&plan(GenKind::Full, 0.0, 1), &[&prompt]).unwrap();
+            let text = tok.decode(&rows[0]).unwrap();
+            assert_eq!(format!("S:{text}"), p.solution_text(), "k={k}");
+        }
+    }
+
+    #[test]
+    fn chunk_steps_the_max_domain() {
+        let mut b = sim();
+        let tok = Tokenizer::new();
+        let prompt = tok.encode("Q:max(3,8,5)=?\nS:").unwrap();
+        let step1 = b.generate(&plan(GenKind::Chunk, 0.0, 1), &[&prompt]).unwrap();
+        assert_eq!(tok.decode(&step1[0]).unwrap(), "max(3,8)=8;");
+        let prompt2 = tok.encode("Q:max(3,8,5)=?\nS:max(3,8)=8;").unwrap();
+        let step2 = b.generate(&plan(GenKind::Chunk, 0.0, 1), &[&prompt2]).unwrap();
+        assert_eq!(tok.decode(&step2[0]).unwrap(), "max(8,5)=8;");
+        let prompt3 = tok
+            .encode("Q:max(3,8,5)=?\nS:max(3,8)=8;max(8,5)=8;")
+            .unwrap();
+        let fin = b.generate(&plan(GenKind::Chunk, 0.0, 1), &[&prompt3]).unwrap();
+        assert_eq!(tok.decode(&fin[0]).unwrap(), "A:8\n");
+    }
+
+    #[test]
+    fn prm_separates_max_domain_prefixes() {
+        let mut b = sim();
+        let tok = Tokenizer::new();
+        let good = tok
+            .encode("Q:max(3,8,5)=?\nS:max(3,8)=8;max(8,5)=8;A:8\n")
+            .unwrap();
+        let bad = tok
+            .encode("Q:max(3,8,5)=?\nS:max(3,8)=3;max(3,5)=5;A:5\n")
+            .unwrap();
+        let scores = b.prm_score(4, &[good, bad]).unwrap();
+        assert!(scores[0] > 0.8, "correct max solution: {}", scores[0]);
+        assert!(scores[1] < 0.3, "corrupted max solution: {}", scores[1]);
+    }
+
+    #[test]
+    fn max_steps_slip_less_than_arith_at_equal_keys() {
+        // Same seed + call sequence ⇒ identical row keys, so each
+        // row/step draws the same uniform on both backends. The max
+        // domain's slip threshold is half the arith one
+        // (slip_factor 0.5), so its slip set is a strict subset across
+        // 16 rows × 8 steps — the heterogeneous difficulty gradient
+        // agentic chains mix.
+        let tok = Tokenizer::new();
+        let arith = tok.encode("Q:7+8-5+2*6-3+4+8=?\nS:").unwrap();
+        let maxq = tok.encode("Q:max(1,2,3,4,5,6,7,8,9)=?\nS:").unwrap();
+        let count_slipped = |prompt: &[u32]| {
+            let mut b = sim();
+            let truth = run_temp0(prompt);
+            let prompts: Vec<&[u32]> = (0..16).map(|_| prompt).collect();
+            let rows = b.generate(&plan(GenKind::Full, 0.9, 16), &prompts).unwrap();
+            rows.iter().filter(|r| *r != &truth).count()
+        };
+        let arith_slipped = count_slipped(&arith);
+        let max_slipped = count_slipped(&maxq);
+        assert!(
+            arith_slipped > max_slipped,
+            "arith rows slipped {arith_slipped}, max rows slipped {max_slipped}"
+        );
     }
 
     // -- steppable session API ----------------------------------------

@@ -48,6 +48,9 @@ fn print_help() {
                         [--remote host:port[,host:port...]] [--wire-codec json|binary]\n\
                         [--deadline-ms X] [--max-tokens N]\n\
                         [--budget-mix W:SPEC,... e.g. 30:d500,30:d5000,40:unlimited]\n\
+                        [--arrivals poisson|gamma:SHAPE|onoff:BURST:IDLE_S]\n\
+                        [--chains N] [--chain-budget SPEC e.g. d8000t1200]\n\
+                        [--trace FILE.json]  (agentic chains: docs/chains.md)\n\
                         [--cache] [--cache-entries N] [--cache-shards N]\n\
            engine-serve [--config F] [--addr HOST:PORT] [--backend device|sim]\n\
                         [--engines N] [--sim] [--wire-codec json|binary]\n\

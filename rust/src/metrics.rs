@@ -425,6 +425,77 @@ impl StepperMetrics {
     }
 }
 
+/// Counters for the agentic chain tier
+/// ([`crate::server::chain`]): session progress, cross-step budget
+/// banking, and chain goodput — the fraction of finished chains that
+/// were fully correct AND under their chain SLO. Surfaced as the
+/// `chain` section of the serve report, next to `stepper`/`pool`.
+#[derive(Debug, Default)]
+pub struct ChainMetrics {
+    /// Chains whose first step was admitted.
+    pub chains_admitted: Counter,
+    /// Chains that ran every configured step.
+    pub chains_completed: Counter,
+    /// Chains cut short by their chain-level budget (partial steps).
+    pub chains_exhausted: Counter,
+    /// Individual chain steps completed.
+    pub steps_completed: Counter,
+    /// Fully-correct-and-under-SLO chains (the goodput numerator).
+    pub goodput_ok: Counter,
+    /// Budget slices that exceeded their frozen nominal share — one
+    /// early cheap step buying a later step a wider slice.
+    pub realloc_grants: Counter,
+    /// Deadline headroom granted beyond nominal shares, microseconds
+    /// (integral so the counter stays atomic; read via
+    /// [`ChainMetrics::realloc_ms_granted`]).
+    pub realloc_us_granted: Counter,
+    /// Tokens granted beyond nominal shares.
+    pub realloc_tokens_granted: Counter,
+    /// Per-chain end-to-end latency (arrival → last step), ms.
+    pub e2e: Histogram,
+}
+
+impl ChainMetrics {
+    pub fn new() -> ChainMetrics {
+        ChainMetrics::default()
+    }
+
+    /// Chains that reached a terminal state (all steps or exhausted).
+    pub fn chains_finished(&self) -> u64 {
+        self.chains_completed.get() + self.chains_exhausted.get()
+    }
+
+    /// goodput = fully correct AND under SLO, over finished chains
+    /// (0 before any chain finishes).
+    pub fn goodput(&self) -> f64 {
+        let n = self.chains_finished();
+        if n == 0 {
+            0.0
+        } else {
+            self.goodput_ok.get() as f64 / n as f64
+        }
+    }
+
+    /// Total deadline headroom granted across steps, in milliseconds.
+    pub fn realloc_ms_granted(&self) -> f64 {
+        self.realloc_us_granted.get() as f64 / 1e3
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("chains_admitted", self.chains_admitted.get())
+            .with("chains_completed", self.chains_completed.get())
+            .with("chains_exhausted", self.chains_exhausted.get())
+            .with("steps_completed", self.steps_completed.get())
+            .with("goodput_ok", self.goodput_ok.get())
+            .with("goodput", self.goodput())
+            .with("realloc_grants", self.realloc_grants.get())
+            .with("realloc_ms_granted", self.realloc_ms_granted())
+            .with("realloc_tokens_granted", self.realloc_tokens_granted.get())
+            .with("e2e_ms", self.e2e.summary().to_json())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -460,6 +531,31 @@ mod tests {
         assert!((s.p50 - 50.5).abs() < 1.0);
         assert!(s.p99 >= 98.0);
         assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn chain_metrics_goodput() {
+        let m = ChainMetrics::new();
+        assert_eq!(m.goodput(), 0.0); // nothing finished yet
+        m.chains_admitted.add(4);
+        m.chains_completed.add(3);
+        m.chains_exhausted.inc();
+        m.goodput_ok.add(2);
+        m.steps_completed.add(9);
+        m.realloc_grants.add(5);
+        m.realloc_us_granted.add(1500);
+        m.realloc_tokens_granted.add(40);
+        m.e2e.record(120.0);
+        assert_eq!(m.chains_finished(), 4);
+        assert!((m.goodput() - 0.5).abs() < 1e-12);
+        let v = m.to_json();
+        assert!((v.req_f64("goodput").unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(v.req_f64("realloc_grants").unwrap(), 5.0);
+        assert!((v.req_f64("realloc_ms_granted").unwrap() - 1.5).abs() < 1e-12);
+        assert_eq!(
+            v.req("e2e_ms").unwrap().req_f64("count").unwrap(),
+            1.0
+        );
     }
 
     #[test]

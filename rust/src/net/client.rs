@@ -48,6 +48,11 @@ pub struct RemoteConfig {
     /// Preferred data-plane codec; the handshake negotiates down to
     /// JSON when the peer doesn't speak it.
     pub wire_codec: WireCodec,
+    /// Bound on concurrently in-flight calls per multiplexed
+    /// connection (`engine.mux_max_inflight`). Submitters past the
+    /// bound block until a reply frees a slot; the waits are counted in
+    /// [`NetMetrics`]`.mux_backpressure_waits`.
+    pub max_inflight: usize,
 }
 
 impl Default for RemoteConfig {
@@ -58,6 +63,7 @@ impl Default for RemoteConfig {
             retries: 2,
             backoff_ms: 10.0,
             wire_codec: WireCodec::Json,
+            max_inflight: 256,
         }
     }
 }

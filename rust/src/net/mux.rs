@@ -30,7 +30,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::engine::EngineShapes;
@@ -74,8 +74,13 @@ enum LinkMode {
 struct MuxIo {
     /// `None` once the link is torn down — writers then fail fast.
     writer: Mutex<Option<Box<dyn WriteHalf>>>,
-    /// Reply channels keyed by correlation id.
+    /// Reply channels keyed by correlation id. Bounded at
+    /// `RemoteConfig::max_inflight` entries: callers at the bound park
+    /// on `slot_freed` until a removal makes room.
     pending: Mutex<HashMap<u64, mpsc::Sender<Result<Value>>>>,
+    /// Signalled on every `pending` removal (reply routed, call timed
+    /// out, link torn down), so bounded callers re-check.
+    slot_freed: Condvar,
     next_id: AtomicU64,
 }
 
@@ -235,6 +240,7 @@ impl MuxTransport {
                 mode: LinkMode::Mux(MuxIo {
                     writer: Mutex::new(Some(wr)),
                     pending: Mutex::new(HashMap::new()),
+                    slot_freed: Condvar::new(),
                     next_id: AtomicU64::new(0),
                 }),
             });
@@ -275,6 +281,18 @@ impl MuxTransport {
                 let (tx, rx) = mpsc::channel();
                 {
                     let mut pending = io.pending.lock().unwrap();
+                    // backpressure: bound the in-flight set so a slow
+                    // server can't absorb unbounded queued work
+                    let bound = self.cfg.max_inflight.max(1);
+                    if pending.len() >= bound {
+                        self.metrics.mux_backpressure_waits.inc();
+                        while pending.len() >= bound && !link.dead.load(Ordering::Relaxed) {
+                            pending = io.slot_freed.wait(pending).unwrap();
+                        }
+                    }
+                    if link.dead.load(Ordering::Relaxed) {
+                        return Err(Error::net_transient("connection closed"));
+                    }
                     pending.insert(id, tx);
                     self.metrics.mux_inflight_peak.record_max(pending.len() as u64);
                 }
@@ -290,6 +308,7 @@ impl MuxTransport {
                 })();
                 if let Err(e) = sent {
                     io.pending.lock().unwrap().remove(&id);
+                    io.slot_freed.notify_one();
                     return Err(e);
                 }
                 let timeout =
@@ -298,6 +317,7 @@ impl MuxTransport {
                     Ok(result) => result.and_then(wire::unwrap_response),
                     Err(_) => {
                         io.pending.lock().unwrap().remove(&id);
+                        io.slot_freed.notify_one();
                         Err(Error::net_transient(format!(
                             "call timed out after {:.0}ms",
                             self.cfg.call_timeout_ms
@@ -326,6 +346,7 @@ impl MuxTransport {
             call_timeout_ms: cfg.remote_timeout_ms,
             retries: cfg.remote_retries,
             wire_codec: cfg.wire_codec,
+            max_inflight: cfg.mux_max_inflight,
             ..RemoteConfig::default()
         };
         let mut by_addr: HashMap<&str, Arc<MuxTransport>> = HashMap::new();
@@ -390,6 +411,7 @@ fn reader_loop(mut rd: Box<dyn ReadHalf>, link: Arc<Link>, metrics: Arc<NetMetri
                         break Error::net("multiplexed reply is missing its correlation id");
                     };
                     let waiter = io.pending.lock().unwrap().remove(&(id as u64));
+                    io.slot_freed.notify_one();
                     if let Some(tx) = waiter {
                         let _ = tx.send(Ok(reply));
                     }
@@ -410,6 +432,8 @@ fn reader_loop(mut rd: Box<dyn ReadHalf>, link: Arc<Link>, metrics: Arc<NetMetri
         let mut pending = io.pending.lock().unwrap();
         pending.drain().collect()
     };
+    // wake every caller parked on the in-flight bound: the link is dead
+    io.slot_freed.notify_all();
     for (_, tx) in waiters {
         let _ = tx.send(Err(failure.replicate()));
     }
@@ -428,6 +452,7 @@ mod tests {
             retries: 1,
             backoff_ms: 0.0,
             wire_codec: codec,
+            max_inflight: 256,
         }
     }
 
@@ -521,6 +546,92 @@ mod tests {
             t.metrics().bytes_saved_vs_json.get() > 0,
             "binary codec must beat JSON on these envelopes"
         );
+    }
+
+    #[test]
+    fn bounds_inflight_and_counts_backpressure_waits() {
+        let (tx, rx) = mpsc::channel();
+        let (got_first_tx, got_first_rx) = mpsc::channel();
+        let (go_tx, go_rx) = mpsc::channel::<()>();
+        // Echo peer that answers one frame at a time, holding the FIRST
+        // reply until released — so the connection sits at 1 in-flight
+        // call for as long as the test wants.
+        let peer = std::thread::spawn(move || {
+            let AcceptMsg::Conn(conn) = rx.recv().unwrap() else {
+                return;
+            };
+            let mut conn: Box<dyn super::super::transport::Conn> = Box::new(conn);
+            let hello_payload = frame::read_frame(&mut *conn, frame::CODEC_JSON).unwrap();
+            let hello = serializer::JSON.decode(&hello_payload).unwrap();
+            let client_caps = wire::WireCaps::of(&hello);
+            let shapes =
+                wire::shapes_to_value(&EngineShapes::sim_default(&EngineConfig::default()));
+            let server_caps = wire::WireCaps {
+                codecs: vec![1],
+                mux: true,
+            };
+            let ack = server_caps.clone().stamp(wire::ack(
+                frame::PROTOCOL_VERSION,
+                wire::ProbeLayout::current(),
+                "sim",
+                1,
+                shapes,
+            ));
+            let payload = serializer::JSON.encode(&ack).unwrap();
+            frame::write_frame(&mut *conn, frame::CODEC_JSON, &payload).unwrap();
+            let codec_id = wire::negotiate_codec(&client_caps.codecs, &server_caps.codecs);
+            let codec = serializer::codec_by_id(codec_id).unwrap();
+            for i in 0..2 {
+                let p = frame::read_frame(&mut *conn, codec_id).unwrap();
+                let req = codec.decode(&p).unwrap();
+                if i == 0 {
+                    got_first_tx.send(()).unwrap();
+                    go_rx.recv().unwrap();
+                }
+                let reply = wire::ok_envelope(
+                    Value::obj().with("echo", req.req_str("tag").unwrap()),
+                )
+                .with("id", req.req_usize("id").unwrap());
+                let p = codec.encode(&reply).unwrap();
+                frame::write_frame(&mut *conn, codec_id, &p).unwrap();
+            }
+            let _ = frame::read_frame(&mut *conn, codec_id);
+        });
+        let connector = LoopbackConnector::new(tx, "loopback://mux-bound");
+        let mut cfg = quick_cfg(WireCodec::Json);
+        cfg.max_inflight = 1;
+        let t = MuxTransport::new(Box::new(connector), cfg, NetMetrics::new());
+        t.ensure().unwrap();
+        let t1 = t.clone();
+        let first = std::thread::spawn(move || {
+            t1.call(Value::obj().with("op", "x").with("tag", "a")).unwrap()
+        });
+        got_first_rx.recv().unwrap(); // "a" is on the wire, unanswered
+        let frames_before = t.metrics().frames_sent.get();
+        let t2 = t.clone();
+        let second = std::thread::spawn(move || {
+            t2.call(Value::obj().with("op", "x").with("tag", "b")).unwrap()
+        });
+        // the second call must park on the bound *before* writing its
+        // frame; the wait is counted as soon as it parks
+        while t.metrics().mux_backpressure_waits.get() == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(
+            t.metrics().frames_sent.get(),
+            frames_before,
+            "bounded call must not reach the wire while at the bound"
+        );
+        go_tx.send(()).unwrap(); // release reply "a" → frees the slot
+        assert_eq!(first.join().unwrap().req_str("echo").unwrap(), "a");
+        assert_eq!(second.join().unwrap().req_str("echo").unwrap(), "b");
+        assert_eq!(
+            t.metrics().mux_inflight_peak.get(),
+            1,
+            "the bound must hold the in-flight set at 1"
+        );
+        assert!(t.metrics().mux_backpressure_waits.get() >= 1);
+        peer.join().unwrap();
     }
 
     #[test]

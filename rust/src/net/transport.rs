@@ -75,6 +75,9 @@ pub struct NetMetrics {
     /// High-water mark of concurrent in-flight calls on a multiplexed
     /// connection (1 means the link never actually overlapped calls).
     pub mux_inflight_peak: Counter,
+    /// Calls that blocked because the multiplexed connection was at its
+    /// `max_inflight` bound and had to wait for a reply to free a slot.
+    pub mux_backpressure_waits: Counter,
     /// Payload bytes the binary codec saved versus the JSON encoding of
     /// the same envelopes (0 when the negotiated codec is JSON).
     pub bytes_saved_vs_json: Counter,
@@ -94,6 +97,7 @@ impl NetMetrics {
             .with("retries", self.retries.get())
             .with("reconnects", self.reconnects.get())
             .with("mux_inflight_peak", self.mux_inflight_peak.get())
+            .with("mux_backpressure_waits", self.mux_backpressure_waits.get())
             .with("bytes_saved_vs_json", self.bytes_saved_vs_json.get())
     }
 

@@ -303,6 +303,152 @@ impl Reallocator for EvenShareReallocator {
     }
 }
 
+/// Splits ONE chain-level budget across a chain's dependent steps and
+/// re-splits the remainder after every completion — the cross-step
+/// sibling of [`Reallocator`] (which moves leftover budget *between*
+/// unrelated requests; this moves it *along* one chain).
+///
+/// At construction the chain totals (deadline headroom relative to the
+/// chain's start, token cap) are divided over all steps proportionally
+/// to their difficulty weights, and those *nominal* shares are frozen.
+/// Each [`ChainAllocator::slice`] call instead divides what is actually
+/// left — total minus elapsed wall-clock, total minus charged tokens —
+/// over the *remaining* steps, so a step that under-spends banks its
+/// surplus for every later step. The positive excess of a slice over
+/// its frozen nominal share is reported as a [`Grant`] and counted:
+/// routed through `Router::select_budgeted`, a widened slice can make a
+/// stronger strategy feasible for a later, harder step.
+#[derive(Debug, Clone)]
+pub struct ChainAllocator {
+    /// Chain-wide deadline (ms, relative to chain start); `None` = none.
+    total_ms: Option<f64>,
+    /// Chain-wide token cap; `None` = uncapped.
+    total_tokens: Option<usize>,
+    /// Per-step difficulty weights (all > 0).
+    weights: Vec<f64>,
+    /// Per-step shares of the static split, frozen at construction.
+    nominal_ms: Vec<f64>,
+    nominal_tokens: Vec<usize>,
+    spent_tokens: usize,
+    /// Number of slices that exceeded their nominal share.
+    pub grants: usize,
+    /// Total deadline headroom granted beyond nominal shares, ms.
+    pub granted_ms: f64,
+    /// Total tokens granted beyond nominal shares.
+    pub granted_tokens: usize,
+}
+
+impl ChainAllocator {
+    /// `budget` carries the chain totals (an unlimited budget yields
+    /// unlimited slices and no grants); `weights` is one positive
+    /// difficulty weight per step.
+    pub fn new(budget: &Budget, weights: &[f64]) -> ChainAllocator {
+        assert!(!weights.is_empty(), "a chain has at least one step");
+        assert!(
+            weights.iter().all(|w| w.is_finite() && *w > 0.0),
+            "step weights must be positive"
+        );
+        let wsum: f64 = weights.iter().sum();
+        let nominal_ms = weights
+            .iter()
+            .map(|w| budget.deadline_ms.map_or(0.0, |t| t * w / wsum))
+            .collect();
+        let nominal_tokens = weights
+            .iter()
+            .map(|w| {
+                budget
+                    .max_tokens
+                    .map_or(0, |t| ((t as f64) * w / wsum).floor() as usize)
+            })
+            .collect();
+        ChainAllocator {
+            total_ms: budget.deadline_ms,
+            total_tokens: budget.max_tokens,
+            weights: weights.to_vec(),
+            nominal_ms,
+            nominal_tokens,
+            spent_tokens: 0,
+            grants: 0,
+            granted_ms: 0.0,
+            granted_tokens: 0,
+        }
+    }
+
+    /// Number of steps this allocator splits over.
+    pub fn steps(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// The current slice for `step`, given the chain's elapsed
+    /// wall-clock: the remaining pool divided over the remaining steps
+    /// by weight (the final step takes the whole remainder). Pure in
+    /// its inputs apart from the grant counters. The returned deadline
+    /// is relative to the *step machine's* start, which is how
+    /// [`Budget`] deadlines are interpreted everywhere.
+    pub fn slice(&mut self, step: usize, elapsed_ms: f64) -> (Budget, Grant) {
+        assert!(step < self.weights.len(), "step {step} out of range");
+        let wsum: f64 = self.weights[step..].iter().sum();
+        let frac = self.weights[step] / wsum;
+        let last = step + 1 == self.weights.len();
+        let mut budget = Budget::unlimited();
+        let mut grant = Grant::default();
+        if let Some(total) = self.total_ms {
+            let remaining = (total - elapsed_ms).max(0.0);
+            let share = remaining * frac;
+            budget = budget.with_deadline_ms(share);
+            let excess = share - self.nominal_ms[step];
+            if excess > 1e-9 {
+                grant.extra_ms = excess;
+            }
+        }
+        if let Some(total) = self.total_tokens {
+            let remaining = total.saturating_sub(self.spent_tokens);
+            let share = if last {
+                remaining
+            } else {
+                ((remaining as f64) * frac).floor() as usize
+            };
+            budget = budget.with_max_tokens(share);
+            if share > self.nominal_tokens[step] {
+                grant.extra_tokens = share - self.nominal_tokens[step];
+            }
+        }
+        if !grant.is_empty() {
+            self.grants += 1;
+            self.granted_ms += grant.extra_ms;
+            self.granted_tokens += grant.extra_tokens;
+        }
+        (budget, grant)
+    }
+
+    /// Charge a completed step's token spend against the chain pool.
+    pub fn charge(&mut self, tokens: usize) {
+        self.spent_tokens = self.spent_tokens.saturating_add(tokens);
+    }
+
+    /// True once the chain pool is spent — past the chain deadline or
+    /// out of tokens. An exhausted chain admits no further steps and
+    /// reports partial completion with `budget_exhausted`.
+    pub fn exhausted(&self, elapsed_ms: f64) -> bool {
+        self.total_ms.is_some_and(|t| elapsed_ms >= t)
+            || self.total_tokens.is_some_and(|t| self.spent_tokens >= t)
+    }
+
+    /// The frozen static split for one step — what the step would get
+    /// with no cross-step reallocation. The equal-total-budget baseline
+    /// the chain tier's accuracy tests compare against.
+    pub fn nominal_budget(&self, step: usize) -> Budget {
+        let mut b = Budget::unlimited();
+        if self.total_ms.is_some() {
+            b = b.with_deadline_ms(self.nominal_ms[step]);
+        }
+        if self.total_tokens.is_some() {
+            b = b.with_max_tokens(self.nominal_tokens[step]);
+        }
+        b
+    }
+}
+
 /// Offline argmax over precomputed per-strategy (â, cost) tables — the
 /// figure-sweep hot path. Returns the winning index.
 pub fn select_offline(probs: &[f64], costs: &[CostEstimate], lambdas: Lambdas) -> usize {
@@ -579,6 +725,121 @@ mod tests {
                         "grant to a request without that limit".to_string(),
                     )?;
                 }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn chain_allocator_nominal_split_and_banking() {
+        let budget = Budget::unlimited()
+            .with_deadline_ms(3000.0)
+            .with_max_tokens(600);
+        let mut a = ChainAllocator::new(&budget, &[1.0, 1.0, 1.0]);
+        assert_eq!(a.steps(), 3);
+        let (b0, g0) = a.slice(0, 0.0);
+        assert!((b0.deadline_ms.unwrap() - 1000.0).abs() < 1e-9);
+        assert_eq!(b0.max_tokens, Some(200));
+        assert!(g0.is_empty(), "first slice at t=0 is exactly nominal");
+        // step 0 finishes early and cheap: banks 600 ms and 100 tokens
+        a.charge(100);
+        let (b1, g1) = a.slice(1, 400.0);
+        assert!((b1.deadline_ms.unwrap() - 1300.0).abs() < 1e-9);
+        assert_eq!(b1.max_tokens, Some(250));
+        assert!((g1.extra_ms - 300.0).abs() < 1e-9);
+        assert_eq!(g1.extra_tokens, 50);
+        assert_eq!(a.grants, 1);
+        // the final step takes the whole remainder
+        a.charge(250);
+        let (b2, _) = a.slice(2, 1700.0);
+        assert!((b2.deadline_ms.unwrap() - 1300.0).abs() < 1e-9);
+        assert_eq!(b2.max_tokens, Some(250));
+        assert!((a.granted_ms - 600.0).abs() < 1e-9);
+        assert_eq!(a.granted_tokens, 100);
+    }
+
+    #[test]
+    fn chain_allocator_overrun_and_exhaustion() {
+        let mut a =
+            ChainAllocator::new(&Budget::unlimited().with_deadline_ms(1000.0), &[1.0, 1.0]);
+        assert!(!a.exhausted(999.0));
+        // blowing the chain deadline leaves a zero slice, not a negative one
+        let (b, g) = a.slice(1, 1500.0);
+        assert_eq!(b.deadline_ms, Some(0.0));
+        assert!(g.is_empty());
+        assert!(a.exhausted(1500.0));
+        // token-side exhaustion
+        let mut t = ChainAllocator::new(&Budget::unlimited().with_max_tokens(100), &[1.0]);
+        assert!(!t.exhausted(0.0));
+        t.charge(100);
+        assert!(t.exhausted(0.0));
+    }
+
+    #[test]
+    fn chain_allocator_unlimited_budget_slices_unlimited() {
+        let mut a = ChainAllocator::new(&Budget::unlimited(), &[1.0, 2.0]);
+        let (b, g) = a.slice(0, 123.0);
+        assert!(b.deadline_ms.is_none() && b.max_tokens.is_none());
+        assert!(g.is_empty());
+        assert_eq!(a.grants, 0);
+    }
+
+    #[test]
+    fn prop_chain_allocator_conserves_and_banks() {
+        // Running each step inside its slice must (a) never let the
+        // chain exceed its totals and (b) never shrink a later slice
+        // below its frozen nominal share — under-spending can only buy
+        // later steps more, which is the whole point of the banking.
+        forall(
+            "chain slices conserve the pool",
+            200,
+            |rng| {
+                let n = rng.range(1, 6) as usize;
+                let weights = gen_vec(rng, n..n + 1, |r| 0.5 + r.f64() * 2.0);
+                let total_ms = 500.0 + rng.f64() * 5000.0;
+                let total_tokens = 100 + rng.below(2000) as usize;
+                // per-step fraction of its slice actually spent
+                let spend = gen_vec(rng, n..n + 1, |r| r.f64());
+                (weights, total_ms, total_tokens, spend)
+            },
+            |(weights, total_ms, total_tokens, spend)| {
+                let budget = Budget::unlimited()
+                    .with_deadline_ms(*total_ms)
+                    .with_max_tokens(*total_tokens);
+                let mut a = ChainAllocator::new(&budget, weights);
+                let mut elapsed = 0.0f64;
+                let mut spent = 0usize;
+                for (i, frac) in spend.iter().enumerate() {
+                    let (b, grant) = a.slice(i, elapsed);
+                    let slice_ms = b.deadline_ms.expect("deadline slice");
+                    let slice_toks = b.max_tokens.expect("token slice");
+                    let nominal = a.nominal_budget(i);
+                    prop_assert(
+                        slice_ms >= nominal.deadline_ms.unwrap() - 1e-9,
+                        "under-spending predecessors shrank a later ms slice".to_string(),
+                    )?;
+                    prop_assert(
+                        slice_toks >= nominal.max_tokens.unwrap(),
+                        "under-spending predecessors shrank a later token slice".to_string(),
+                    )?;
+                    prop_assert(
+                        grant.extra_tokens == slice_toks - nominal.max_tokens.unwrap(),
+                        "token grant must equal the excess over nominal".to_string(),
+                    )?;
+                    let used_ms = slice_ms * frac;
+                    let used_toks = ((slice_toks as f64) * frac) as usize;
+                    elapsed += used_ms;
+                    spent += used_toks;
+                    a.charge(used_toks);
+                }
+                prop_assert(
+                    elapsed <= *total_ms + 1e-6,
+                    format!("chain wall-clock {elapsed} exceeds total {total_ms}"),
+                )?;
+                prop_assert(
+                    spent <= *total_tokens,
+                    format!("chain tokens {spent} exceed cap {total_tokens}"),
+                )?;
                 Ok(())
             },
         );

@@ -1,0 +1,680 @@
+//! The agentic chain tier: sessions of dependent steps under ONE
+//! chain-level budget.
+//!
+//! The paper motivates latency-aware allocation with *agentic workflows
+//! where models issue multiple dependent queries*; the unit that
+//! matters there is the **chain**, not the step (goodput = fraction of
+//! chains fully correct AND under the chain SLO). A [`ChainSpec`] is a
+//! session of N dependent steps: step k+1's prompt is the step
+//! template re-seeded with step k's *selected* answer
+//! ([`ChainProblem::with_first`]), so errors cascade exactly the way an
+//! agent's do. Steps mix the modular-arithmetic and max-value domains,
+//! so per-step difficulty is genuinely heterogeneous and the router has
+//! something to exploit.
+//!
+//! The chain budget is split across steps and *re-split after every
+//! completion* by [`ChainAllocator`]: an early step that finishes cheap
+//! banks its surplus, the next slice widens, and
+//! `Router::select_budgeted` can upgrade a later, harder step to a
+//! stronger strategy. Execution lives in the serving driver
+//! ([`crate::server::driver::run_traffic`], stepped/interleaved) and in
+//! [`run_chain_blocking`] (the blocking reference used by equivalence
+//! tests); trace-driven replay ([`parse_trace`]) makes runs exactly
+//! reproducible. See `docs/chains.md`.
+
+use crate::data::Query;
+use crate::error::{Error, Result};
+use crate::router::{ChainAllocator, Grant};
+use crate::server::driver::{route, Mode};
+use crate::server::loadgen::{arrival_gap_s, Arrivals, Request};
+use crate::strategies::{Budget, Executor};
+use crate::taskgen::arith::MODULUS;
+use crate::taskgen::{ChainProblem, MaxProblem, Problem};
+use crate::util::json::{self, Value};
+use crate::util::rng::Rng;
+
+/// Chain lengths are heavy-tailed within these bounds (sessions of a
+/// couple of steps dominate; long sessions are rare but present).
+pub const MIN_CHAIN_STEPS: usize = 2;
+/// See [`MIN_CHAIN_STEPS`].
+pub const MAX_CHAIN_STEPS: usize = 6;
+
+/// One scheduled chain: N dependent step templates under one
+/// chain-level budget. Step 0 runs its template verbatim; step k+1's
+/// template is re-seeded with step k's selected answer at admission.
+#[derive(Debug, Clone)]
+pub struct ChainSpec {
+    pub id: String,
+    /// Offset from run start, ms.
+    pub arrival_ms: f64,
+    /// Chain-level totals (deadline headroom from arrival, token cap) —
+    /// the pool [`ChainAllocator`] splits across steps.
+    pub budget: Budget,
+    pub steps: Vec<ChainProblem>,
+}
+
+// [`Budget`] carries a non-comparable cancel flag, so spec equality
+// (trace roundtrip tests) compares its two limit fields explicitly.
+impl PartialEq for ChainSpec {
+    fn eq(&self, other: &ChainSpec) -> bool {
+        self.id == other.id
+            && self.arrival_ms == other.arrival_ms
+            && self.budget.deadline_ms == other.budget.deadline_ms
+            && self.budget.max_tokens == other.budget.max_tokens
+            && self.steps == other.steps
+    }
+}
+
+/// Difficulty weight of one step for the budget split: its CoT length
+/// scaled by the domain's relative slip difficulty, so an 8-step
+/// arithmetic chain claims a larger slice than a 3-item max chain.
+pub fn step_weight(p: &ChainProblem) -> f64 {
+    (p.k() as f64 * p.slip_factor()).max(0.5)
+}
+
+impl ChainSpec {
+    /// The allocator for this chain's budget, weighted by per-step
+    /// difficulty.
+    pub fn allocator(&self) -> ChainAllocator {
+        let weights: Vec<f64> = self.steps.iter().map(step_weight).collect();
+        ChainAllocator::new(&self.budget, &weights)
+    }
+}
+
+/// One completed step of a running chain.
+#[derive(Debug, Clone)]
+pub struct ChainStepResult {
+    pub strategy: String,
+    /// Strategy chosen by the adaptive router (vs a static baseline).
+    pub routed: bool,
+    /// Correct *given the step's actual input* (the re-seeded template's
+    /// ground truth) — a chain is fully correct iff every step is.
+    pub correct: bool,
+    pub tokens: usize,
+    /// The step's slice ran out mid-strategy.
+    pub budget_exhausted: bool,
+    /// What the slice granted beyond the step's frozen nominal share.
+    pub grant: Grant,
+    pub service_ms: f64,
+    /// The selected answer, carried into the next step's template.
+    pub answer: Option<String>,
+}
+
+/// Runtime state of one chain: the spec, its allocator, and the results
+/// so far. Pure state transitions — the driver and the blocking runner
+/// share them, which is what the stepped-vs-blocking equivalence test
+/// pins.
+#[derive(Debug)]
+pub struct ChainState {
+    pub spec: ChainSpec,
+    pub alloc: ChainAllocator,
+    /// Index of the next step to admit.
+    pub next_step: usize,
+    /// Previous step's selected answer, reduced to a domain digit.
+    carry: Option<i64>,
+    pub steps: Vec<ChainStepResult>,
+}
+
+impl ChainState {
+    pub fn new(spec: ChainSpec) -> ChainState {
+        let alloc = spec.allocator();
+        ChainState {
+            spec,
+            alloc,
+            next_step: 0,
+            carry: None,
+            steps: Vec::new(),
+        }
+    }
+
+    pub fn finished(&self) -> bool {
+        self.next_step >= self.spec.steps.len()
+    }
+
+    /// True when the chain pool is spent with steps still pending —
+    /// the chain must stop and report partial completion.
+    pub fn exhausted(&self, elapsed_ms: f64) -> bool {
+        !self.finished() && self.alloc.exhausted(elapsed_ms)
+    }
+
+    /// The next step's query: its template re-seeded with the carried
+    /// answer, with the re-seeded ground truth attached (each step is
+    /// judged given its actual input).
+    pub fn next_query(&self) -> Query {
+        let template = &self.spec.steps[self.next_step];
+        let problem = match self.carry {
+            Some(v) => template.with_first(v),
+            None => template.clone(),
+        };
+        Query {
+            id: format!("{}.s{}", self.spec.id, self.next_step),
+            query: problem.query_text(),
+            answer: problem.answer().to_string(),
+            k: problem.k(),
+        }
+    }
+
+    /// The next step's budget slice given the chain's elapsed time
+    /// (ms since arrival), plus the grant beyond its nominal share.
+    pub fn slice(&mut self, elapsed_ms: f64) -> (Budget, Grant) {
+        self.alloc.slice(self.next_step, elapsed_ms)
+    }
+
+    /// Record a completed step: charge the pool, carry the selected
+    /// answer into the next template (a step with no answer carries 0 —
+    /// the chain keeps going, it just went wrong).
+    pub fn complete_step(&mut self, result: ChainStepResult) {
+        self.alloc.charge(result.tokens);
+        let digit = result
+            .answer
+            .as_deref()
+            .and_then(|a| a.trim().parse::<i64>().ok())
+            .map(|v| v.rem_euclid(MODULUS))
+            .unwrap_or(0);
+        self.carry = Some(digit);
+        self.steps.push(result);
+        self.next_step += 1;
+    }
+
+    /// Final per-chain record. `exhausted` marks a chain cut short by
+    /// its pool (partial steps), as opposed to one that ran them all.
+    pub fn into_outcome(self, e2e_ms: f64, exhausted: bool) -> ChainOutcome {
+        let steps_total = self.spec.steps.len();
+        let all_correct = self.steps.len() == steps_total && self.steps.iter().all(|s| s.correct);
+        // the goodput SLO check: no chain deadline means always in SLO
+        let under_slo = match self.spec.budget.deadline_ms {
+            None => true,
+            Some(d) => e2e_ms <= d,
+        };
+        ChainOutcome {
+            id: self.spec.id,
+            steps_total,
+            all_correct,
+            goodput_ok: all_correct && under_slo,
+            tokens: self.steps.iter().map(|s| s.tokens).sum(),
+            realloc_grants: self.alloc.grants,
+            granted_ms: self.alloc.granted_ms,
+            granted_tokens: self.alloc.granted_tokens,
+            budget_exhausted: exhausted || self.steps.iter().any(|s| s.budget_exhausted),
+            e2e_ms,
+            deadline_ms: self.spec.budget.deadline_ms,
+            steps: self.steps,
+        }
+    }
+}
+
+/// Final record of one chain.
+#[derive(Debug, Clone)]
+pub struct ChainOutcome {
+    pub id: String,
+    pub steps_total: usize,
+    pub steps: Vec<ChainStepResult>,
+    /// Every step ran and was correct given its actual input.
+    pub all_correct: bool,
+    /// Fully correct AND under the chain SLO — the goodput numerator.
+    pub goodput_ok: bool,
+    pub tokens: usize,
+    /// Slices that exceeded their nominal share (cross-step banking).
+    pub realloc_grants: usize,
+    pub granted_ms: f64,
+    pub granted_tokens: usize,
+    /// The chain pool (or a step slice) ran out before the chain's
+    /// configured work finished.
+    pub budget_exhausted: bool,
+    /// Arrival → last step completion, ms.
+    pub e2e_ms: f64,
+    /// The chain SLO the goodput check compared `e2e_ms` against.
+    pub deadline_ms: Option<f64>,
+}
+
+impl ChainOutcome {
+    pub fn steps_completed(&self) -> usize {
+        self.steps.len()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Traffic generation
+// ---------------------------------------------------------------------
+
+/// Heavy-tailed session length: a bounded Pareto (α = 1.5) over
+/// `[MIN_CHAIN_STEPS, MAX_CHAIN_STEPS]` — most sessions are short, the
+/// tail is fat enough that long sessions shape the goodput picture.
+pub fn sample_chain_len(rng: &mut Rng) -> usize {
+    let u = rng.f64().min(1.0 - 1e-12);
+    let len = (MIN_CHAIN_STEPS as f64) / (1.0 - u).powf(1.0 / 1.5);
+    (len.floor() as usize).clamp(MIN_CHAIN_STEPS, MAX_CHAIN_STEPS)
+}
+
+/// Sample `n` chains: heavy-tailed lengths, steps drawn evenly from
+/// both task domains with per-step difficulty `k ∈ [2, 5]`, arrivals
+/// from the given process, every chain carrying (a clone of) `budget`.
+/// A pure function of the rng seed, like every schedule in
+/// [`crate::server::loadgen`].
+pub fn sample_chains(
+    n: usize,
+    budget: &Budget,
+    arrivals: Arrivals,
+    rng: &mut Rng,
+) -> Vec<ChainSpec> {
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|i| {
+            t += arrival_gap_s(arrivals, rng, i) * 1e3;
+            let len = sample_chain_len(rng);
+            let steps = (0..len)
+                .map(|_| {
+                    let k = rng.range(2, 6) as usize;
+                    if rng.below(2) == 0 {
+                        ChainProblem::Arith(Problem::sample(rng, k))
+                    } else {
+                        ChainProblem::Max(MaxProblem::sample(rng, k))
+                    }
+                })
+                .collect();
+            ChainSpec {
+                id: format!("c{i}"),
+                arrival_ms: t,
+                budget: budget.clone(),
+                steps,
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Trace files
+// ---------------------------------------------------------------------
+
+/// Trace file format version (see `docs/chains.md` for the golden
+/// example).
+pub const TRACE_VERSION: usize = 1;
+
+fn expr_of(p: &ChainProblem) -> String {
+    let q = p.query_text();
+    q.strip_prefix("Q:")
+        .and_then(|r| r.strip_suffix("=?\n"))
+        .expect("query_text shape")
+        .to_string()
+}
+
+/// Serialize chains as a deterministic JSON trace:
+///
+/// ```json
+/// {"version":1,"chains":[{"id":"c0","arrival_ms":0.0,
+///   "budget":{"deadline_ms":4000.0,"max_tokens":600},
+///   "steps":["7+3-5*2","max(0,4,9)"]}]}
+/// ```
+///
+/// Step expressions are the `Q:`/`=?` payload of [`ChainProblem`]
+/// (`parse_expr` grammar); `budget` keys are optional (absent =
+/// unlimited on that axis).
+pub fn emit_trace(chains: &[ChainSpec]) -> Value {
+    let arr = chains
+        .iter()
+        .map(|c| {
+            let mut budget = Value::obj();
+            if let Some(d) = c.budget.deadline_ms {
+                budget.set("deadline_ms", d);
+            }
+            if let Some(t) = c.budget.max_tokens {
+                budget.set("max_tokens", t);
+            }
+            Value::obj()
+                .with("id", c.id.as_str())
+                .with("arrival_ms", c.arrival_ms)
+                .with("budget", budget)
+                .with(
+                    "steps",
+                    Value::Arr(c.steps.iter().map(|s| Value::Str(expr_of(s))).collect()),
+                )
+        })
+        .collect();
+    Value::obj()
+        .with("version", TRACE_VERSION)
+        .with("chains", Value::Arr(arr))
+}
+
+/// Parse a trace file produced by [`emit_trace`] (or written by hand).
+/// Strict: unknown versions, empty/invalid step expressions,
+/// non-finite/negative arrivals and non-positive budget limits are
+/// rejected — replay must be exact or not at all.
+pub fn parse_trace(text: &str) -> Result<Vec<ChainSpec>> {
+    let v = json::parse(text)?;
+    let version = v.req_usize("version")?;
+    if version != TRACE_VERSION {
+        return Err(Error::Config(format!(
+            "trace version {version} unsupported (expected {TRACE_VERSION})"
+        )));
+    }
+    let mut out = Vec::new();
+    for (i, c) in v.req_arr("chains")?.iter().enumerate() {
+        let id = c.req_str("id")?.to_string();
+        let arrival_ms = c.req_f64("arrival_ms")?;
+        if !arrival_ms.is_finite() || arrival_ms < 0.0 {
+            return Err(Error::Config(format!(
+                "trace chain {id}: bad arrival_ms {arrival_ms}"
+            )));
+        }
+        let mut budget = Budget::unlimited();
+        if let Some(b) = c.get("budget") {
+            if let Some(d) = b.get("deadline_ms").and_then(Value::as_f64) {
+                if !d.is_finite() || d <= 0.0 {
+                    return Err(Error::Config(format!(
+                        "trace chain {id}: deadline_ms must be > 0 (omit for unlimited)"
+                    )));
+                }
+                budget = budget.with_deadline_ms(d);
+            }
+            if let Some(t) = b.get("max_tokens").and_then(Value::as_usize) {
+                if t == 0 {
+                    return Err(Error::Config(format!(
+                        "trace chain {id}: max_tokens must be > 0 (omit for unlimited)"
+                    )));
+                }
+                budget = budget.with_max_tokens(t);
+            }
+        }
+        let steps_json = c.req_arr("steps")?;
+        if steps_json.is_empty() {
+            return Err(Error::Config(format!("trace chain {id}: no steps")));
+        }
+        let mut steps = Vec::with_capacity(steps_json.len());
+        for s in steps_json {
+            let expr = s
+                .as_str()
+                .ok_or_else(|| Error::Config(format!("trace chain {id}: step is not a string")))?;
+            let p = ChainProblem::parse_expr(expr).ok_or_else(|| {
+                Error::Config(format!("trace chain {id}: unparseable step expr '{expr}'"))
+            })?;
+            steps.push(p);
+        }
+        // arrivals must be sorted so the driver can admit in order
+        let prev_arrival = out.last().map_or(0.0, |p: &ChainSpec| p.arrival_ms);
+        if arrival_ms < prev_arrival {
+            return Err(Error::Config(format!(
+                "trace chain {id} (index {i}): arrivals must be non-decreasing"
+            )));
+        }
+        out.push(ChainSpec {
+            id,
+            arrival_ms,
+            budget,
+            steps,
+        });
+    }
+    if out.is_empty() {
+        return Err(Error::Config("trace has no chains".into()));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Blocking reference runner
+// ---------------------------------------------------------------------
+
+/// Run one chain to completion on the blocking path: route each step
+/// against its current slice, run it, re-split. The reference the
+/// stepped driver is equivalence-tested against (temp 0, SimBackend),
+/// and the engine of the static-vs-shared budget comparison: pass
+/// `shared_pool = false` to freeze every slice at its nominal share
+/// (no cross-step banking) at equal total budget.
+pub fn run_chain_blocking(
+    executor: &Executor,
+    mode: &Mode,
+    spec: ChainSpec,
+    shared_pool: bool,
+) -> Result<ChainOutcome> {
+    let t0 = executor.clock.now_ms();
+    let mut state = ChainState::new(spec);
+    loop {
+        let elapsed = executor.clock.now_ms() - t0;
+        if state.finished() {
+            return Ok(state.into_outcome(elapsed, false));
+        }
+        if state.exhausted(elapsed) {
+            return Ok(state.into_outcome(elapsed, true));
+        }
+        let (budget, grant) = if shared_pool {
+            state.slice(elapsed)
+        } else {
+            (state.alloc.nominal_budget(state.next_step), Grant::default())
+        };
+        let query = state.next_query();
+        let req = Request {
+            query: query.clone(),
+            arrival_ms: 0.0,
+            seq: state.next_step,
+            budget: budget.clone(),
+        };
+        let (strategy, routed, _predicted) = route(executor, mode, &req)?;
+        let s0 = executor.clock.now_ms();
+        let outcome = executor.run_budgeted(&strategy, &query.query, budget)?;
+        state.complete_step(ChainStepResult {
+            strategy: strategy.id(),
+            routed,
+            correct: outcome.is_correct(&query.answer),
+            tokens: outcome.tokens,
+            budget_exhausted: outcome.budget_exhausted,
+            grant,
+            service_ms: executor.clock.now_ms() - s0,
+            answer: outcome.answer,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, prop_assert};
+
+    fn spec(id: &str, arrival_ms: f64, budget: Budget, exprs: &[&str]) -> ChainSpec {
+        ChainSpec {
+            id: id.to_string(),
+            arrival_ms,
+            budget,
+            steps: exprs
+                .iter()
+                .map(|e| ChainProblem::parse_expr(e).unwrap())
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn next_query_reseeds_with_carried_answer() {
+        let c = spec(
+            "c0",
+            0.0,
+            Budget::unlimited(),
+            &["7+8-5", "max(0,4,9)", "1*2+3"],
+        );
+        let mut state = ChainState::new(c);
+        let q0 = state.next_query();
+        assert_eq!(q0.id, "c0.s0");
+        assert_eq!(q0.query, "Q:7+8-5=?\n");
+        assert_eq!(q0.answer, "0");
+        state.complete_step(ChainStepResult {
+            strategy: "mv@2".into(),
+            routed: false,
+            correct: true,
+            tokens: 10,
+            budget_exhausted: false,
+            grant: Grant::default(),
+            service_ms: 1.0,
+            answer: Some("0".into()),
+        });
+        // step 1's template first item is replaced by the carry (0)
+        let q1 = state.next_query();
+        assert_eq!(q1.query, "Q:max(0,4,9)=?\n");
+        assert_eq!(q1.answer, "9");
+        // a wrong carry changes the next step's ground truth: the chain
+        // is judged on what actually flowed, not on the template
+        state.complete_step(ChainStepResult {
+            strategy: "mv@2".into(),
+            routed: false,
+            correct: true,
+            tokens: 10,
+            budget_exhausted: false,
+            grant: Grant::default(),
+            service_ms: 1.0,
+            answer: Some("7".into()),
+        });
+        let q2 = state.next_query();
+        assert_eq!(q2.query, "Q:7*2+3=?\n");
+        assert_eq!(q2.answer, "7"); // (7*2+3) mod 10
+    }
+
+    #[test]
+    fn missing_answer_carries_zero_and_marks_partial() {
+        let c = spec("c1", 0.0, Budget::unlimited(), &["7+8-5", "2+2"]);
+        let mut state = ChainState::new(c);
+        state.complete_step(ChainStepResult {
+            strategy: "mv@2".into(),
+            routed: false,
+            correct: false,
+            tokens: 4,
+            budget_exhausted: true,
+            grant: Grant::default(),
+            service_ms: 1.0,
+            answer: None,
+        });
+        assert_eq!(state.next_query().query, "Q:0+2=?\n");
+        let out = state.into_outcome(50.0, true);
+        assert_eq!(out.steps_completed(), 1);
+        assert!(!out.all_correct);
+        assert!(out.budget_exhausted);
+        assert!(!out.goodput_ok);
+    }
+
+    #[test]
+    fn goodput_requires_correct_and_under_slo() {
+        let full = |e2e_ms: f64, deadline: Option<f64>| {
+            let mut budget = Budget::unlimited();
+            if let Some(d) = deadline {
+                budget = budget.with_deadline_ms(d);
+            }
+            let mut state = ChainState::new(spec("c2", 0.0, budget, &["7+8-5"]));
+            state.complete_step(ChainStepResult {
+                strategy: "mv@2".into(),
+                routed: false,
+                correct: true,
+                tokens: 4,
+                budget_exhausted: false,
+                grant: Grant::default(),
+                service_ms: 1.0,
+                answer: Some("0".into()),
+            });
+            state.into_outcome(e2e_ms, false)
+        };
+        assert!(full(100.0, None).goodput_ok);
+        assert!(full(100.0, Some(200.0)).goodput_ok);
+        assert!(!full(300.0, Some(200.0)).goodput_ok, "over SLO");
+    }
+
+    #[test]
+    fn chain_exhaustion_is_detected_before_admission() {
+        let c = spec(
+            "c3",
+            0.0,
+            Budget::unlimited().with_deadline_ms(100.0),
+            &["7+8-5", "2+2"],
+        );
+        let state = ChainState::new(c);
+        assert!(!state.exhausted(50.0));
+        assert!(state.exhausted(150.0));
+    }
+
+    #[test]
+    fn sampled_chains_are_deterministic_and_bounded() {
+        let sample = |seed| {
+            let mut rng = Rng::new(seed, 0);
+            sample_chains(
+                30,
+                &Budget::unlimited().with_deadline_ms(4000.0),
+                Arrivals::Poisson { rate: 5.0 },
+                &mut rng,
+            )
+        };
+        let a = sample(9);
+        assert_eq!(a, sample(9), "same seed must reproduce exactly");
+        assert_ne!(a, sample(10), "different seeds should differ");
+        for c in &a {
+            assert!((MIN_CHAIN_STEPS..=MAX_CHAIN_STEPS).contains(&c.steps.len()));
+            assert_eq!(c.budget.deadline_ms, Some(4000.0));
+        }
+        assert!(
+            a.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms),
+            "arrivals sorted"
+        );
+        // both domains appear across 30 heterogeneous chains
+        let domains: Vec<&str> = a
+            .iter()
+            .flat_map(|c| c.steps.iter().map(|s| s.domain()))
+            .collect();
+        assert!(domains.contains(&"arith") && domains.contains(&"max"));
+    }
+
+    #[test]
+    fn trace_golden_example_parses() {
+        let text = r#"{"version":1,"chains":[
+            {"id":"c0","arrival_ms":0.0,
+             "budget":{"deadline_ms":4000.0,"max_tokens":600},
+             "steps":["7+3-5*2","max(0,4,9)"]},
+            {"id":"c1","arrival_ms":120.5,"steps":["1+2"]}]}"#;
+        let chains = parse_trace(text).unwrap();
+        assert_eq!(chains.len(), 2);
+        assert_eq!(chains[0].id, "c0");
+        assert_eq!(chains[0].budget.deadline_ms, Some(4000.0));
+        assert_eq!(chains[0].budget.max_tokens, Some(600));
+        assert_eq!(chains[0].steps[1].domain(), "max");
+        assert!(chains[1].budget.is_unlimited());
+    }
+
+    #[test]
+    fn trace_rejects_malformed() {
+        for bad in [
+            "{}",
+            r#"{"version":2,"chains":[]}"#,
+            r#"{"version":1,"chains":[]}"#,
+            r#"{"version":1,"chains":[{"id":"c","arrival_ms":0.0,"steps":[]}]}"#,
+            r#"{"version":1,"chains":[{"id":"c","arrival_ms":0.0,"steps":["7/2"]}]}"#,
+            r#"{"version":1,"chains":[{"id":"c","arrival_ms":-1.0,"steps":["1+2"]}]}"#,
+            r#"{"version":1,"chains":[{"id":"c","arrival_ms":0.0,
+                "budget":{"deadline_ms":0.0},"steps":["1+2"]}]}"#,
+            r#"{"version":1,"chains":[{"id":"c","arrival_ms":0.0,
+                "budget":{"max_tokens":0},"steps":["1+2"]}]}"#,
+            r#"{"version":1,"chains":[
+                {"id":"a","arrival_ms":5.0,"steps":["1+2"]},
+                {"id":"b","arrival_ms":1.0,"steps":["1+2"]}]}"#,
+        ] {
+            assert!(parse_trace(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn prop_trace_roundtrips_sampled_chains() {
+        forall(
+            "emit_trace ∘ parse_trace is identity",
+            50,
+            |rng| {
+                let n = rng.range(1, 8) as usize;
+                let budget = match rng.below(4) {
+                    0 => Budget::unlimited(),
+                    1 => Budget::unlimited().with_deadline_ms(1.0 + rng.f64() * 5000.0),
+                    2 => Budget::unlimited().with_max_tokens(1 + rng.below(1000) as usize),
+                    _ => Budget::unlimited()
+                        .with_deadline_ms(1.0 + rng.f64() * 5000.0)
+                        .with_max_tokens(1 + rng.below(1000) as usize),
+                };
+                let mut rng2 = rng.split();
+                sample_chains(n, &budget, Arrivals::Poisson { rate: 20.0 }, &mut rng2)
+            },
+            |chains| {
+                let text = emit_trace(chains).dumps();
+                let back = parse_trace(&text).map_err(|e| format!("parse failed: {e}"))?;
+                prop_assert(back == *chains, "trace roundtrip mismatch".to_string())?;
+                Ok(())
+            },
+        );
+    }
+}

@@ -12,6 +12,7 @@ use crate::matrix::{self, Matrix};
 use crate::probe::{train::build_rows, train::embed_queries, CalibratedProbe, FeatureBuilder,
                    ProbeCheckpoint};
 use crate::router::{Lambdas, Router};
+use crate::server::chain::{self, ChainSpec};
 use crate::server::driver::{self, Mode};
 use crate::server::loadgen::{self, Arrivals};
 use crate::strategies::{Budget, Executor, Strategy};
@@ -402,13 +403,67 @@ fn apply_cache_args(args: &Args, cfg: &mut Config) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--arrivals poisson | gamma:<shape> | onoff:<burst>:<idle_s>`
+/// into an open-loop arrival process at `rate` req/s (see
+/// [`Arrivals`]). Gamma shape < 1 is burstier than Poisson; on-off
+/// inserts an idle gap after every `burst` arrivals.
+fn parse_arrivals(spec: &str, rate: f64) -> Result<Arrivals> {
+    let bad = || {
+        Error::Config(format!(
+            "bad --arrivals '{spec}'; expected poisson | gamma:<shape> | onoff:<burst>:<idle_s>"
+        ))
+    };
+    let mut parts = spec.split(':');
+    match parts.next() {
+        Some("poisson") => {
+            if parts.next().is_some() {
+                return Err(bad());
+            }
+            Ok(Arrivals::Poisson { rate })
+        }
+        Some("gamma") => {
+            let shape: f64 = parts
+                .next()
+                .ok_or_else(bad)?
+                .parse()
+                .map_err(|_| bad())?;
+            if parts.next().is_some() || !shape.is_finite() || shape <= 0.0 {
+                return Err(bad());
+            }
+            Ok(Arrivals::Gamma { rate, shape })
+        }
+        Some("onoff") => {
+            let burst: usize = parts
+                .next()
+                .ok_or_else(bad)?
+                .parse()
+                .map_err(|_| bad())?;
+            let idle_s: f64 = parts
+                .next()
+                .ok_or_else(bad)?
+                .parse()
+                .map_err(|_| bad())?;
+            if parts.next().is_some() || burst == 0 || !idle_s.is_finite() || idle_s <= 0.0 {
+                return Err(bad());
+            }
+            Ok(Arrivals::OnOff {
+                rate,
+                burst,
+                idle_s,
+            })
+        }
+        _ => Err(bad()),
+    }
+}
+
 pub fn cmd_serve(raw: &[String]) -> Result<()> {
     let values: Vec<&str> = [
         COMMON_VALUES,
         &[
             "rate", "requests", "workers", "lambda-t", "lambda-l", "strategy", "embedding",
             "deadline-ms", "max-tokens", "budget-mix", "engines", "backend", "remote",
-            "wire-codec", "cache-entries", "cache-shards",
+            "wire-codec", "cache-entries", "cache-shards", "arrivals", "chains",
+            "chain-budget", "trace",
         ],
     ]
     .concat();
@@ -502,19 +557,58 @@ pub fn cmd_serve(raw: &[String]) -> Result<()> {
         driver::warmup(&executor, &strategies, &splits.test[0].query)?;
     }
 
-    let n = args.usize_or("requests", 32)?;
     let workers = args.usize_or("workers", 4)?;
+    if args.flag("closed") && args.opt_str("arrivals").is_some() {
+        return Err(Error::Config(
+            "--closed replaces --arrivals; pass one or the other".into(),
+        ));
+    }
     let arrivals = if args.flag("closed") {
         Arrivals::Closed
     } else {
-        Arrivals::Poisson {
-            rate: args.f64_or("rate", 1.0)?,
-        }
+        parse_arrivals(args.str_or("arrivals", "poisson"), args.f64_or("rate", 1.0)?)?
     };
+    let mut rng = Rng::new(cfg.seed, 0x5E7E);
+    // agentic chains (docs/chains.md): --trace replays an exact chain
+    // schedule from a JSON file; --chains N samples heavy-tailed
+    // synthetic sessions, each under one --chain-budget pool
+    let chains: Vec<ChainSpec> = if let Some(path) = args.opt_str("trace") {
+        if args.opt_str("budget-mix").is_some()
+            || args.opt_str("chains").is_some()
+            || args.opt_str("chain-budget").is_some()
+        {
+            return Err(Error::Config(
+                "--trace replays an exact chain schedule; it replaces \
+                 --budget-mix/--chains/--chain-budget — pass one or the other"
+                    .into(),
+            ));
+        }
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read trace '{path}': {e}")))?;
+        let chains = chain::parse_trace(&text)?;
+        log_info!("serve: trace replay of {} chain(s) from {path}", chains.len());
+        chains
+    } else if let Some(n_chains) = args.opt_str("chains") {
+        let n_chains: usize = n_chains
+            .parse()
+            .map_err(|_| Error::Config(format!("bad --chains '{n_chains}'")))?;
+        let spec = args.str_or("chain-budget", "d8000t1200");
+        let chain_budget = loadgen::parse_budget_spec(spec)?;
+        log_info!("serve: {n_chains} chain(s), chain budget {spec}");
+        chain::sample_chains(n_chains, &chain_budget, arrivals, &mut rng)
+    } else if args.opt_str("chain-budget").is_some() {
+        return Err(Error::Config(
+            "--chain-budget needs --chains N (or use --trace)".into(),
+        ));
+    } else {
+        Vec::new()
+    };
+    // trace replay is chains-only unless --requests is passed explicitly
+    let default_requests = if args.opt_str("trace").is_some() { 0 } else { 32 };
+    let n = args.usize_or("requests", default_requests)?;
     // per-request budgets, enforced mid-strategy by the decoding method:
     // one cloned budget (--deadline-ms/--max-tokens) or a weighted
     // heterogeneous mix (--budget-mix "30:d500,30:d5000,40:unlimited")
-    let mut rng = Rng::new(cfg.seed, 0x5E7E);
     let schedule = if let Some(mix_spec) = args.opt_str("budget-mix") {
         if args.opt_str("deadline-ms").is_some() || args.opt_str("max-tokens").is_some() {
             return Err(Error::Config(
@@ -542,7 +636,7 @@ pub fn cmd_serve(raw: &[String]) -> Result<()> {
         }
         loadgen::schedule_budgeted(&splits.test, n, arrivals, budget, &mut rng)
     };
-    let report = driver::run(&executor, &mode, schedule, workers)?;
+    let report = driver::run_traffic(&executor, &mode, schedule, chains, workers)?;
     report.log_summary("test");
     std::fs::create_dir_all(&cfg.paths.results)?;
     std::fs::write(

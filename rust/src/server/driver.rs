@@ -18,14 +18,25 @@
 //! bounds how many machines are in flight at once; admission stays
 //! strictly in schedule order.
 //!
+//! Agentic chains ([`crate::server::chain`]) are first-class citizens
+//! of the same event loop ([`run_traffic`]): a chain's first step is
+//! admitted at its arrival like any request, each later step is
+//! admitted the moment its predecessor completes (ahead of waiting new
+//! arrivals), and every step is routed against its chain's *current*
+//! budget slice — re-split by [`crate::router::ChainAllocator`] after
+//! each completion, so early cheap steps bank budget for later hard
+//! ones.
+//!
 //! The driver reports accuracy / tokens / latency percentiles /
 //! throughput plus budget-enforcement fractions, preemption counts,
-//! realized-vs-predicted latency, and the stepper's reallocation
-//! counters.
+//! realized-vs-predicted latency, the stepper's reallocation counters,
+//! and (when chains ran) the chain tier's goodput section.
 
+use crate::data::Query;
 use crate::error::Result;
-use crate::metrics::Histogram;
-use crate::router::{EvenShareReallocator, Lambdas, Router};
+use crate::metrics::{ChainMetrics, Histogram};
+use crate::router::{EvenShareReallocator, Grant, Lambdas, Router};
+use crate::server::chain::{ChainOutcome, ChainSpec, ChainState, ChainStepResult};
 use crate::server::loadgen::Request;
 use crate::strategies::stepper::{Progress, Stepper, Ticket};
 use crate::strategies::{Executor, Strategy};
@@ -88,8 +99,9 @@ pub fn warmup(executor: &Executor, strategies: &[Strategy], query: &str) -> Resu
 }
 
 /// Route one request: pick its strategy (and predicted latency when
-/// adaptive) under the request's budget.
-fn route(
+/// adaptive) under the request's budget. Shared with the chain tier,
+/// which routes each step against its *current* budget slice.
+pub(crate) fn route(
     executor: &Executor,
     mode: &Mode,
     req: &Request,
@@ -107,21 +119,133 @@ fn route(
     })
 }
 
-/// Run the driver over a schedule. `concurrency` bounds the number of
-/// in-flight step machines (the budget the old thread-per-worker pool
-/// expressed as thread count); requests are admitted strictly in
-/// schedule order, when due *and* when a slot is free — so queue wait
-/// still shows up in `e2e_ms`. The whole run is pumped by this one
-/// thread: routing happens at admission, strategy rounds interleave
-/// through the stepper, and finished requests' leftover budgets are
-/// reallocated to running ones between steps.
+/// Run the driver over a schedule of independent requests. Thin wrapper
+/// over [`run_traffic`] with no chains.
 pub fn run(
     executor: &Executor,
     mode: &Mode,
     requests: Vec<Request>,
     concurrency: usize,
 ) -> Result<ServeReport> {
-    let n = requests.len();
+    run_traffic(executor, mode, requests, Vec::new(), concurrency)
+}
+
+/// Tag bit marking a stepper ticket as a chain step; the low bits carry
+/// `(chain_index << 16) | step_index`.
+const CHAIN_TAG: u64 = 1 << 63;
+
+/// Per-step context captured at admission of a chain step, joined back
+/// against the stepper completion.
+struct PendingStep {
+    query: Query,
+    routed: bool,
+    grant: Grant,
+}
+
+/// Driver-side state of one chain.
+struct ChainRun {
+    /// `Some` while the chain is live; taken at finalization.
+    state: Option<ChainState>,
+    pending: Option<PendingStep>,
+    outcome: Option<ChainOutcome>,
+}
+
+/// Fold a finished chain into the run's [`ChainMetrics`].
+fn finalize_chain(
+    metrics: &ChainMetrics,
+    run: &mut ChainRun,
+    outcome: ChainOutcome,
+    chains_done: &mut usize,
+) {
+    if outcome.steps_completed() == outcome.steps_total {
+        metrics.chains_completed.inc();
+    } else {
+        metrics.chains_exhausted.inc();
+    }
+    if outcome.goodput_ok {
+        metrics.goodput_ok.inc();
+    }
+    metrics.realloc_grants.add(outcome.realloc_grants as u64);
+    metrics.realloc_us_granted.add((outcome.granted_ms * 1e3) as u64);
+    metrics
+        .realloc_tokens_granted
+        .add(outcome.granted_tokens as u64);
+    metrics.e2e.record(outcome.e2e_ms);
+    run.outcome = Some(outcome);
+    *chains_done += 1;
+}
+
+/// Admit the chain's next step: re-split the chain pool against time
+/// elapsed since arrival, route the re-seeded step query against its
+/// slice, and ticket it into the stepper. If the pool is already spent,
+/// the chain is finalized as a partial (`budget_exhausted`) outcome
+/// instead — exhaustion can never hang the loop. Returns whether a
+/// ticket was admitted.
+#[allow(clippy::too_many_arguments)]
+fn admit_chain_step(
+    executor: &Executor,
+    mode: &Mode,
+    stepper: &mut Stepper,
+    metrics: &ChainMetrics,
+    run: &mut ChainRun,
+    ci: usize,
+    now_ms: f64,
+    chains_done: &mut usize,
+) -> Result<bool> {
+    let elapsed = {
+        let state = run.state.as_ref().expect("admit on finalized chain");
+        (now_ms - state.spec.arrival_ms).max(0.0)
+    };
+    if run.state.as_ref().is_some_and(|s| s.exhausted(elapsed)) {
+        let state = run.state.take().expect("state checked above");
+        finalize_chain(metrics, run, state.into_outcome(elapsed, true), chains_done);
+        return Ok(false);
+    }
+    let state = run.state.as_mut().expect("state checked above");
+    let (budget, grant) = state.slice(elapsed);
+    let query = state.next_query();
+    let req = Request {
+        query: query.clone(),
+        arrival_ms: state.spec.arrival_ms,
+        seq: state.next_step,
+        budget: budget.clone(),
+    };
+    let (strategy, routed, _predicted) = route(executor, mode, &req)?;
+    stepper.admit(Ticket {
+        query: query.query.clone(),
+        strategy,
+        budget,
+        tag: CHAIN_TAG | ((ci as u64) << 16) | state.next_step as u64,
+    })?;
+    run.pending = Some(PendingStep {
+        query,
+        routed,
+        grant,
+    });
+    Ok(true)
+}
+
+/// Run the driver over mixed traffic: independent requests plus agentic
+/// chains, interleaved through one stepper. `concurrency` bounds the
+/// number of in-flight step machines; singles and chain *first* steps
+/// are admitted strictly in arrival order, when due and when a slot is
+/// free — so queue wait still shows up in `e2e_ms` (and eats into a
+/// chain's pool: the allocator's elapsed clock is anchored at chain
+/// arrival). A chain's next step is admitted the moment its predecessor
+/// completes, ahead of waiting new arrivals: the session already in
+/// flight keeps its slot. The whole run is pumped by this one thread:
+/// routing happens at admission (each chain step routed against its
+/// *current*, re-split slice), strategy rounds interleave through the
+/// stepper, and finished requests' leftover budgets are reallocated to
+/// running ones between steps.
+pub fn run_traffic(
+    executor: &Executor,
+    mode: &Mode,
+    singles: Vec<Request>,
+    chains: Vec<ChainSpec>,
+    concurrency: usize,
+) -> Result<ServeReport> {
+    let n = singles.len();
     let cap = concurrency.max(1);
     let start = Instant::now();
     let mut stepper =
@@ -129,96 +253,245 @@ pub fn run(
     // (routed, predicted_ms) captured at admission, indexed by seq tag
     let mut admitted_meta: Vec<(bool, Option<f64>)> = vec![(false, None); n];
     let mut served: Vec<Served> = Vec::with_capacity(n);
-    let mut next = 0usize;
+    let chain_metrics = ChainMetrics::new();
+    let chain_arrivals: Vec<f64> = chains.iter().map(|c| c.arrival_ms).collect();
+    let mut runs: Vec<ChainRun> = chains
+        .into_iter()
+        .map(|spec| ChainRun {
+            state: Some(ChainState::new(spec)),
+            pending: None,
+            outcome: None,
+        })
+        .collect();
+    let total_chains = runs.len();
+    let mut next = 0usize; // next single to admit
+    let mut next_chain = 0usize; // next chain to first-admit
+    let mut chains_done = 0usize;
+    // chains whose next step became admissible when the previous one
+    // completed — admitted before waiting new arrivals
+    let mut ready_chains: Vec<usize> = Vec::new();
 
     // Record completions as soon as an advance produced them, so
     // `e2e_ms` is stamped at actual completion — not after the next
     // admission's (blocking, possibly engine-bound) routing calls.
+    // Chain completions fold into their ChainState and queue the
+    // chain's next step for admission.
     let drain = |stepper: &mut Stepper,
                  served: &mut Vec<Served>,
-                 meta: &[(bool, Option<f64>)]| {
+                 meta: &[(bool, Option<f64>)],
+                 runs: &mut [ChainRun],
+                 ready: &mut Vec<usize>,
+                 chains_done: &mut usize| {
         for c in stepper.drain_completed() {
-            let idx = c.tag as usize;
-            let req = &requests[idx];
-            let (routed, predicted_ms) = meta[idx];
             let done_ms = start.elapsed().as_secs_f64() * 1e3;
-            served.push(Served {
-                query_id: req.query.id.clone(),
-                strategy: c.strategy_id,
-                routed,
-                correct: c.outcome.is_correct(&req.query.answer),
-                tokens: c.outcome.tokens,
-                budget_exhausted: c.outcome.budget_exhausted,
-                preempted: c.outcome.preempted,
-                stopped_early: c.outcome.stopped_early,
-                predicted_ms,
-                service_ms: c.outcome.latency_ms,
-                e2e_ms: done_ms - req.arrival_ms.min(done_ms),
-            });
+            if c.tag & CHAIN_TAG != 0 {
+                let ci = ((c.tag & !CHAIN_TAG) >> 16) as usize;
+                let run = &mut runs[ci];
+                let pending = run.pending.take().expect("chain completion without pending");
+                let state = run.state.as_mut().expect("chain completion after finalize");
+                state.complete_step(ChainStepResult {
+                    strategy: c.strategy_id,
+                    routed: pending.routed,
+                    correct: c.outcome.is_correct(&pending.query.answer),
+                    tokens: c.outcome.tokens,
+                    budget_exhausted: c.outcome.budget_exhausted,
+                    grant: pending.grant,
+                    service_ms: c.outcome.latency_ms,
+                    answer: c.outcome.answer,
+                });
+                chain_metrics.steps_completed.inc();
+                if state.finished() {
+                    let state = run.state.take().expect("state present");
+                    let e2e = done_ms - state.spec.arrival_ms.min(done_ms);
+                    finalize_chain(
+                        &chain_metrics,
+                        run,
+                        state.into_outcome(e2e, false),
+                        chains_done,
+                    );
+                } else {
+                    ready.push(ci);
+                }
+            } else {
+                let idx = c.tag as usize;
+                let req = &singles[idx];
+                let (routed, predicted_ms) = meta[idx];
+                served.push(Served {
+                    query_id: req.query.id.clone(),
+                    strategy: c.strategy_id,
+                    routed,
+                    correct: c.outcome.is_correct(&req.query.answer),
+                    tokens: c.outcome.tokens,
+                    budget_exhausted: c.outcome.budget_exhausted,
+                    preempted: c.outcome.preempted,
+                    stopped_early: c.outcome.stopped_early,
+                    predicted_ms,
+                    service_ms: c.outcome.latency_ms,
+                    e2e_ms: done_ms - req.arrival_ms.min(done_ms),
+                });
+            }
         }
     };
 
-    while served.len() < n {
+    while served.len() < n || chains_done < total_chains {
         let now_ms = start.elapsed().as_secs_f64() * 1e3;
-        // Admit due requests into free slots, in schedule order. Each
-        // admission's routing is a blocking engine round-trip on this
-        // pump thread, so between admissions give in-flight machines a
-        // non-blocking advance: arrived replies are harvested and the
-        // next rounds (including the just-admitted machine's first
-        // step) are submitted, overlapping with the next routing call.
-        while next < n && stepper.in_flight() < cap && requests[next].arrival_ms <= now_ms {
-            let req = &requests[next];
-            let (strategy, routed, predicted_ms) = route(executor, mode, req)?;
-            admitted_meta[next] = (routed, predicted_ms);
-            stepper.admit(Ticket {
-                query: req.query.query.clone(),
-                strategy,
-                budget: req.budget.clone(),
-                tag: next as u64,
-            })?;
-            next += 1;
-            stepper.advance(Some(Duration::ZERO))?;
-            drain(&mut stepper, &mut served, &admitted_meta);
+        // In-flight chains' next steps take freed slots first.
+        while !ready_chains.is_empty() && stepper.in_flight() < cap {
+            let ci = ready_chains.remove(0);
+            if admit_chain_step(
+                executor,
+                mode,
+                &mut stepper,
+                &chain_metrics,
+                &mut runs[ci],
+                ci,
+                now_ms,
+                &mut chains_done,
+            )? {
+                stepper.advance(Some(Duration::ZERO))?;
+                drain(
+                    &mut stepper,
+                    &mut served,
+                    &admitted_meta,
+                    &mut runs,
+                    &mut ready_chains,
+                    &mut chains_done,
+                );
+            }
         }
-        if served.len() >= n {
+        // Admit due arrivals (singles and chain first steps) into free
+        // slots, in global arrival order. Each admission's routing is a
+        // blocking engine round-trip on this pump thread, so between
+        // admissions give in-flight machines a non-blocking advance:
+        // arrived replies are harvested and the next rounds (including
+        // the just-admitted machine's first step) are submitted,
+        // overlapping with the next routing call.
+        while stepper.in_flight() < cap {
+            let single_due = next < n && singles[next].arrival_ms <= now_ms;
+            let chain_due = next_chain < total_chains && chain_arrivals[next_chain] <= now_ms;
+            let take_chain = match (single_due, chain_due) {
+                (false, false) => break,
+                (true, false) => false,
+                (false, true) => true,
+                (true, true) => chain_arrivals[next_chain] <= singles[next].arrival_ms,
+            };
+            if take_chain {
+                let ci = next_chain;
+                next_chain += 1;
+                chain_metrics.chains_admitted.inc();
+                if !admit_chain_step(
+                    executor,
+                    mode,
+                    &mut stepper,
+                    &chain_metrics,
+                    &mut runs[ci],
+                    ci,
+                    now_ms,
+                    &mut chains_done,
+                )? {
+                    continue;
+                }
+            } else {
+                let req = &singles[next];
+                let (strategy, routed, predicted_ms) = route(executor, mode, req)?;
+                admitted_meta[next] = (routed, predicted_ms);
+                stepper.admit(Ticket {
+                    query: req.query.query.clone(),
+                    strategy,
+                    budget: req.budget.clone(),
+                    tag: next as u64,
+                })?;
+                next += 1;
+            }
+            stepper.advance(Some(Duration::ZERO))?;
+            drain(
+                &mut stepper,
+                &mut served,
+                &admitted_meta,
+                &mut runs,
+                &mut ready_chains,
+                &mut chains_done,
+            );
+        }
+        if served.len() >= n && chains_done >= total_chains {
             break;
         }
+        let next_arrival = match (next < n, next_chain < total_chains) {
+            (true, true) => Some(singles[next].arrival_ms.min(chain_arrivals[next_chain])),
+            (true, false) => Some(singles[next].arrival_ms),
+            (false, true) => Some(chain_arrivals[next_chain]),
+            (false, false) => None,
+        };
         if stepper.in_flight() == 0 {
-            // Idle with work left: sleep until the next arrival is due.
-            let wait_ms = (requests[next].arrival_ms - now_ms).max(0.0);
-            if wait_ms > 0.0 {
-                std::thread::sleep(Duration::from_micros((wait_ms * 1e3) as u64));
+            if !ready_chains.is_empty() {
+                // next admission attempt happens at loop top
+                continue;
             }
-            continue;
+            // Idle with work left: sleep until the next arrival is due.
+            match next_arrival {
+                Some(a) => {
+                    let wait_ms = (a - now_ms).max(0.0);
+                    if wait_ms > 0.0 {
+                        std::thread::sleep(Duration::from_micros((wait_ms * 1e3) as u64));
+                    }
+                    continue;
+                }
+                // nothing in flight, nothing queued, nothing arriving —
+                // every item must be terminal
+                None => break,
+            }
         }
         // Pump; if an admission could become due while we wait, cap the
         // wait so arrivals are admitted on time.
-        let wait = if next < n && stepper.in_flight() < cap {
-            Some(Duration::from_micros(
-                ((requests[next].arrival_ms - now_ms).max(0.0) * 1e3) as u64 + 1,
-            ))
-        } else {
-            None
+        let wait = match next_arrival {
+            Some(a) if stepper.in_flight() < cap => Some(Duration::from_micros(
+                ((a - now_ms).max(0.0) * 1e3) as u64 + 1,
+            )),
+            _ => None,
         };
         let _progress: Progress = stepper.advance(wait)?;
-        drain(&mut stepper, &mut served, &admitted_meta);
+        drain(
+            &mut stepper,
+            &mut served,
+            &admitted_meta,
+            &mut runs,
+            &mut ready_chains,
+            &mut chains_done,
+        );
     }
 
     let wall_s = start.elapsed().as_secs_f64();
     // per-engine utilization + placement counters, when the executor
     // fronts a sharded pool (None on the classic single-engine path)
     let pool = executor.engine.pool_report();
-    Ok(ServeReport::new(served, wall_s, stepper.metrics.to_json(), pool))
+    let chain = (total_chains > 0).then(|| chain_metrics.to_json());
+    let chain_outcomes: Vec<ChainOutcome> =
+        runs.into_iter().filter_map(|r| r.outcome).collect();
+    Ok(ServeReport::new(
+        served,
+        chain_outcomes,
+        wall_s,
+        stepper.metrics.to_json(),
+        chain,
+        pool,
+    ))
 }
 
 /// Aggregated serving report.
 #[derive(Debug)]
 pub struct ServeReport {
     pub served: Vec<Served>,
+    /// Per-chain terminal records, in chain index order (empty when the
+    /// run carried no chains).
+    pub chains: Vec<ChainOutcome>,
     pub wall_s: f64,
     /// Continuation-executor counters (steps, submissions, reallocation
     /// grants) captured at the end of the run.
     pub stepper: Value,
+    /// Chain-tier counters ([`ChainMetrics`]) when the run carried
+    /// chains: completions, goodput, cross-step realloc grants, chain
+    /// e2e percentiles.
+    pub chain: Option<Value>,
     /// Pool placement + per-engine utilization
     /// ([`crate::engine::pool::PoolRouter::report`]) when serving from a
     /// sharded [`crate::engine::pool::EnginePool`] of 2+ engines.
@@ -226,11 +499,20 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
-    fn new(served: Vec<Served>, wall_s: f64, stepper: Value, pool: Option<Value>) -> ServeReport {
+    fn new(
+        served: Vec<Served>,
+        chains: Vec<ChainOutcome>,
+        wall_s: f64,
+        stepper: Value,
+        chain: Option<Value>,
+        pool: Option<Value>,
+    ) -> ServeReport {
         ServeReport {
             served,
+            chains,
             wall_s,
             stepper,
+            chain,
             pool,
         }
     }
@@ -294,6 +576,9 @@ impl ServeReport {
             .with("service_ms", service.summary().to_json())
             .with("e2e_ms", e2e.summary().to_json())
             .with("selection", strat_json);
+        if let Some(chain) = &self.chain {
+            v.set("chain", chain.clone());
+        }
         if let Some(pool) = &self.pool {
             v.set("pool", pool.clone());
         }
@@ -320,6 +605,23 @@ impl ServeReport {
                 .and_then(|s| s.req_f64("realloc_grants"))
                 .unwrap_or(0.0),
         );
+        if let Some(chain) = &self.chain {
+            log_info!(
+                "serve[{label}]: chains {:.0}/{:.0} completed ({:.0} exhausted), goodput {:.3}, \
+                 {:.0} cross-step grants ({:.0} tokens, {:.0}ms), chain e2e p50 {:.0}ms",
+                chain.req_f64("chains_completed").unwrap_or(0.0),
+                chain.req_f64("chains_admitted").unwrap_or(0.0),
+                chain.req_f64("chains_exhausted").unwrap_or(0.0),
+                chain.req_f64("goodput").unwrap_or(0.0),
+                chain.req_f64("realloc_grants").unwrap_or(0.0),
+                chain.req_f64("realloc_tokens_granted").unwrap_or(0.0),
+                chain.req_f64("realloc_ms_granted").unwrap_or(0.0),
+                chain
+                    .req("e2e_ms")
+                    .and_then(|h| h.req_f64("p50"))
+                    .unwrap_or(0.0),
+            );
+        }
         if let Some(pool) = &self.pool {
             log_info!(
                 "serve[{label}]: pool {} engines, balance ratio {:.2}, placements {:.0} \

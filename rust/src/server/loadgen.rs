@@ -1,11 +1,16 @@
 //! Load generation for the serving driver: open-loop Poisson arrivals
-//! (the standard serving-benchmark model) or closed-loop back-to-back.
-//! Each request carries a per-request [`Budget`] that the decoding
-//! method enforces mid-strategy — either one budget cloned for all
-//! requests ([`schedule_budgeted`]) or sampled per request from a
-//! weighted **budget mix** ([`schedule_mixed`]), so serving runs and
-//! benches exercise heterogeneous budgets (tight-deadline traffic
-//! interleaved with unlimited) the way real fleets see them.
+//! (the standard serving-benchmark model), bursty Gamma / on-off
+//! processes (trace-like burstiness without a trace file), or
+//! closed-loop back-to-back. Each request carries a per-request
+//! [`Budget`] that the decoding method enforces mid-strategy — either
+//! one budget cloned for all requests ([`schedule_budgeted`]) or
+//! sampled per request from a weighted **budget mix**
+//! ([`schedule_mixed`]), so serving runs and benches exercise
+//! heterogeneous budgets (tight-deadline traffic interleaved with
+//! unlimited) the way real fleets see them. Every schedule is a pure
+//! function of the rng seed — property-tested, because serve runs,
+//! benches and the chain tier's trace emission all lean on exact
+//! reproducibility.
 
 use crate::data::Query;
 use crate::error::{Error, Result};
@@ -17,8 +22,67 @@ use crate::util::rng::Rng;
 pub enum Arrivals {
     /// Open loop: exponential inter-arrival gaps at `rate` req/s.
     Poisson { rate: f64 },
+    /// Bursty open loop: Gamma-distributed inter-arrival gaps with mean
+    /// `1/rate`. `shape < 1` over-disperses (clumpier than Poisson —
+    /// the classic trace shape), `shape = 1` *is* Poisson, `shape > 1`
+    /// smooths toward deterministic.
+    Gamma { rate: f64, shape: f64 },
+    /// On-off bursts: `burst` arrivals with exponential gaps at `rate`,
+    /// then an idle period of `idle_s` seconds, repeating.
+    OnOff { rate: f64, burst: usize, idle_s: f64 },
     /// Closed loop: next request issues as soon as a worker frees up.
     Closed,
+}
+
+/// One inter-arrival gap (seconds) for request number `seq` under the
+/// given process. Pure in the rng stream — the single gap definition
+/// shared by request schedules and the chain tier's session arrivals.
+pub fn arrival_gap_s(arrivals: Arrivals, rng: &mut Rng, seq: usize) -> f64 {
+    match arrivals {
+        Arrivals::Poisson { rate } => rng.exponential(rate),
+        // mean(Gamma(shape, θ=1)) = shape, so scale to mean 1/rate
+        Arrivals::Gamma { rate, shape } => sample_gamma(rng, shape) / (rate * shape),
+        Arrivals::OnOff {
+            rate,
+            burst,
+            idle_s,
+        } => {
+            let gap = rng.exponential(rate);
+            if seq > 0 && seq % burst.max(1) == 0 {
+                gap + idle_s
+            } else {
+                gap
+            }
+        }
+        Arrivals::Closed => 0.0,
+    }
+}
+
+/// Marsaglia–Tsang Gamma(shape, 1) sampling; shapes below 1 use the
+/// standard boost `G(a) = G(a+1) · U^{1/a}`.
+fn sample_gamma(rng: &mut Rng, shape: f64) -> f64 {
+    assert!(
+        shape.is_finite() && shape > 0.0,
+        "gamma shape must be positive"
+    );
+    if shape < 1.0 {
+        let u = rng.f64().max(1e-12);
+        return sample_gamma(rng, shape + 1.0) * u.powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.normal();
+        let v = 1.0 + c * x;
+        if v <= 0.0 {
+            continue;
+        }
+        let v = v * v * v;
+        let u = rng.f64().max(1e-300);
+        if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+            return d * v;
+        }
+    }
 }
 
 /// A scheduled request.
@@ -53,13 +117,8 @@ pub fn schedule_budgeted(
     (0..n)
         .map(|seq| {
             let query = rng.choice(queries).clone();
-            let arrival_ms = match arrivals {
-                Arrivals::Poisson { rate } => {
-                    t += rng.exponential(rate) * 1e3;
-                    t
-                }
-                Arrivals::Closed => 0.0,
-            };
+            t += arrival_gap_s(arrivals, rng, seq) * 1e3;
+            let arrival_ms = t; // Closed gaps are all 0 ⇒ arrival 0
             Request {
                 query,
                 arrival_ms,
@@ -91,9 +150,56 @@ pub fn schedule_mixed(
     reqs
 }
 
+/// Parse one budget spec — `unlimited` or `d<deadline_ms>`,
+/// `t<max_tokens>`, or both (`d500t256`). The grammar shared by
+/// `--budget-mix` arms and `--chain-budget`.
+pub fn parse_budget_spec(spec: &str) -> Result<Budget> {
+    let bad = |why: &str| {
+        Error::Config(format!(
+            "bad budget spec '{spec}' ({why}); expected \
+             unlimited | d<ms> | t<tokens> | d<ms>t<tokens>"
+        ))
+    };
+    let spec = spec.trim();
+    if spec == "unlimited" {
+        return Ok(Budget::unlimited());
+    }
+    let mut budget = Budget::unlimited();
+    // d<ms> first (optional), then t<tokens> (optional) — at least one
+    // must be present
+    let mut rest = spec;
+    if let Some(tail) = rest.strip_prefix('d') {
+        let (num, after) = match tail.find(|c: char| !c.is_ascii_digit() && c != '.') {
+            Some(i) => tail.split_at(i),
+            None => (tail, ""),
+        };
+        let ms: f64 = num.parse().map_err(|_| bad("bad deadline"))?;
+        if ms <= 0.0 {
+            // `--deadline-ms 0` means "no deadline" on the
+            // single-budget path; a spec that wants that must say
+            // `unlimited`, not smuggle in an instantly-spent budget
+            return Err(bad("deadline must be > 0 (use 'unlimited')"));
+        }
+        budget = budget.with_deadline_ms(ms);
+        rest = after;
+    }
+    if let Some(tail) = rest.strip_prefix('t') {
+        let toks: usize = tail.parse().map_err(|_| bad("bad token cap"))?;
+        if toks == 0 {
+            return Err(bad("token cap must be > 0 (use 'unlimited')"));
+        }
+        budget = budget.with_max_tokens(toks);
+        rest = "";
+    }
+    if budget.is_unlimited() || !rest.is_empty() {
+        return Err(bad("unrecognized spec"));
+    }
+    Ok(budget)
+}
+
 /// Parse a `--budget-mix` CLI spec into weighted arms:
-/// comma-separated `weight:spec` entries where `spec` is `unlimited`
-/// or `d<deadline_ms>`, `t<max_tokens>`, or both (`d500t256`).
+/// comma-separated `weight:spec` entries with [`parse_budget_spec`]
+/// grammar per arm.
 ///
 /// Example: `30:d500,30:d5000,40:unlimited`.
 pub fn parse_budget_mix(s: &str) -> Result<Vec<(f64, Budget)>> {
@@ -120,43 +226,10 @@ pub fn parse_budget_mix(s: &str) -> Result<Vec<(f64, Budget)>> {
         if weight.is_nan() || weight <= 0.0 {
             return Err(bad(entry, "weight must be positive"));
         }
-        let spec = spec.trim();
-        let budget = if spec == "unlimited" {
-            Budget::unlimited()
-        } else {
-            let mut budget = Budget::unlimited();
-            // d<ms> first (optional), then t<tokens> (optional) — at
-            // least one must be present
-            let mut rest = spec;
-            if let Some(tail) = rest.strip_prefix('d') {
-                let (num, after) = match tail.find(|c: char| !c.is_ascii_digit() && c != '.') {
-                    Some(i) => tail.split_at(i),
-                    None => (tail, ""),
-                };
-                let ms: f64 = num.parse().map_err(|_| bad(entry, "bad deadline"))?;
-                if ms <= 0.0 {
-                    // `--deadline-ms 0` means "no deadline" on the
-                    // single-budget path; a mix arm that wants that
-                    // must say `unlimited`, not smuggle in an
-                    // instantly-spent budget
-                    return Err(bad(entry, "deadline must be > 0 (use 'unlimited')"));
-                }
-                budget = budget.with_deadline_ms(ms);
-                rest = after;
-            }
-            if let Some(tail) = rest.strip_prefix('t') {
-                let toks: usize = tail.parse().map_err(|_| bad(entry, "bad token cap"))?;
-                if toks == 0 {
-                    return Err(bad(entry, "token cap must be > 0 (use 'unlimited')"));
-                }
-                budget = budget.with_max_tokens(toks);
-                rest = "";
-            }
-            if budget.is_unlimited() || !rest.is_empty() {
-                return Err(bad(entry, "unrecognized spec"));
-            }
-            budget
-        };
+        let budget = parse_budget_spec(spec).map_err(|e| match e {
+            Error::Config(why) => Error::Config(format!("in --budget-mix entry '{entry}': {why}")),
+            other => other,
+        })?;
         mix.push((weight, budget));
     }
     if mix.is_empty() {
@@ -295,5 +368,102 @@ mod tests {
         assert!(reqs
             .iter()
             .all(|r| r.budget.deadline_ms == Some(100.0) && r.budget.max_tokens == Some(64)));
+    }
+
+    #[test]
+    fn budget_spec_parses_standalone() {
+        assert!(parse_budget_spec("unlimited").unwrap().is_unlimited());
+        let b = parse_budget_spec(" d250t96 ").unwrap();
+        assert_eq!(b.deadline_ms, Some(250.0));
+        assert_eq!(b.max_tokens, Some(96));
+        for bad in ["", "q5", "d", "t", "d0", "t0", "d5x"] {
+            assert!(parse_budget_spec(bad).is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    #[test]
+    fn gamma_rate_roughly_matches_and_is_burstier() {
+        let mut rng = Rng::new(9, 0);
+        let arrivals = Arrivals::Gamma {
+            rate: 10.0,
+            shape: 0.5,
+        };
+        let reqs = schedule(&queries(), 4000, arrivals, &mut rng);
+        let total_s = reqs.last().unwrap().arrival_ms / 1e3;
+        let rate = 4000.0 / total_s;
+        assert!((rate - 10.0).abs() < 1.0, "empirical rate {rate}");
+        // shape 0.5 ⇒ squared coefficient of variation of gaps ≈ 1/shape
+        // = 2, well above Poisson's 1 — the whole point of the knob
+        let gaps: Vec<f64> = reqs.windows(2).map(|w| w[1].arrival_ms - w[0].arrival_ms).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean).powi(2)).sum::<f64>() / gaps.len() as f64;
+        let scv = var / (mean * mean);
+        assert!(scv > 1.4, "gamma(0.5) gaps should be over-dispersed, scv {scv}");
+    }
+
+    #[test]
+    fn on_off_inserts_idle_gaps_every_burst() {
+        let mut rng = Rng::new(5, 0);
+        let arrivals = Arrivals::OnOff {
+            rate: 1000.0,
+            burst: 4,
+            idle_s: 1.0,
+        };
+        let reqs = schedule(&queries(), 20, arrivals, &mut rng);
+        for w in reqs.windows(2) {
+            let gap_ms = w[1].arrival_ms - w[0].arrival_ms;
+            if w[1].seq % 4 == 0 {
+                assert!(gap_ms >= 1000.0, "burst boundary gap {gap_ms} too small");
+            } else {
+                // in-burst gaps are exponential(1000/s) — overwhelmingly
+                // below the 1 s idle period
+                assert!(gap_ms < 1000.0, "in-burst gap {gap_ms} absorbed an idle");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_schedules_are_pure_functions_of_seed() {
+        use crate::testkit::{forall, prop_assert};
+        let mix = vec![
+            (0.5, Budget::unlimited().with_deadline_ms(200.0)),
+            (0.3, Budget::unlimited().with_max_tokens(96)),
+            (0.2, Budget::unlimited()),
+        ];
+        let qs = queries();
+        forall(
+            "schedules are pure functions of seed",
+            40,
+            |rng| (rng.next_u64(), rng.below(3) as usize),
+            |&(seed, kind)| {
+                let arrivals = match kind {
+                    0 => Arrivals::Poisson { rate: 40.0 },
+                    1 => Arrivals::Gamma {
+                        rate: 40.0,
+                        shape: 0.5,
+                    },
+                    _ => Arrivals::OnOff {
+                        rate: 200.0,
+                        burst: 5,
+                        idle_s: 0.05,
+                    },
+                };
+                let run = || {
+                    let mut rng = Rng::new(seed, 0x5E7E);
+                    schedule_mixed(&qs, 30, arrivals, &mix, &mut rng)
+                        .into_iter()
+                        .map(|r| {
+                            (
+                                r.query.id,
+                                r.arrival_ms.to_bits(),
+                                r.budget.deadline_ms.map(f64::to_bits),
+                                r.budget.max_tokens,
+                            )
+                        })
+                        .collect::<Vec<_>>()
+                };
+                prop_assert(run() == run(), "same seed must replay bit-identically")
+            },
+        );
     }
 }

@@ -1,5 +1,7 @@
-//! Serving driver, load generator and CLI command implementations.
+//! Serving driver, load generator, agentic chain tier and CLI command
+//! implementations.
 
+pub mod chain;
 pub mod commands;
 pub mod driver;
 pub mod loadgen;

@@ -1,0 +1,154 @@
+//! Max-value chain problems — the second task domain.
+//!
+//! A problem is "find the maximum of k+1 single digits", solved as a
+//! left-to-right running-max chain of k comparison steps:
+//!
+//! ```text
+//! query    = "Q:max(3,8,5)=?\n"
+//! solution = "S:max(3,8)=8;max(8,5)=8;A:8\n"
+//! ```
+//!
+//! The surface grammar is disambiguated from the modular-arithmetic
+//! domain by the `max(` prefix, so a prompt parses as exactly one
+//! domain and SimBackend's temp-0 generation stays a pure function of
+//! the prompt. Comparison steps are *easier* than arithmetic steps
+//! (no carry table to learn), which is the point: mixing the two
+//! domains inside one agentic chain gives the router genuinely
+//! heterogeneous per-step difficulty to exploit.
+
+use crate::taskgen::arith::{MAX_OPS, MIN_OPS, MODULUS};
+use crate::util::rng::Rng;
+
+/// One running-max step: `max(lhs, rhs) = result`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MaxStep {
+    pub lhs: i64,
+    pub rhs: i64,
+    pub result: i64,
+}
+
+impl MaxStep {
+    /// Surface form without trailing separator, e.g. `max(3,8)=8`.
+    pub fn text(&self) -> String {
+        format!("max({},{})={}", self.lhs, self.rhs, self.result)
+    }
+}
+
+/// A generated max-chain instance. `items.len() == k + 1` for
+/// difficulty `k` (one comparison per additional item).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MaxProblem {
+    /// The digits to take the maximum over, in presentation order.
+    pub items: Vec<i64>,
+}
+
+impl MaxProblem {
+    /// Sample a problem with exactly `k` comparison steps.
+    pub fn sample(rng: &mut Rng, k: usize) -> MaxProblem {
+        assert!((MIN_OPS..=MAX_OPS).contains(&k), "k={k} out of range");
+        let items = (0..=k).map(|_| rng.range(0, MODULUS)).collect();
+        MaxProblem { items }
+    }
+
+    /// Difficulty = number of comparison steps.
+    pub fn difficulty(&self) -> usize {
+        self.items.len().saturating_sub(1)
+    }
+
+    /// The full step-by-step evaluation.
+    pub fn steps(&self) -> Vec<MaxStep> {
+        let mut acc = self.items[0];
+        self.items[1..]
+            .iter()
+            .map(|&rhs| {
+                let result = acc.max(rhs);
+                let step = MaxStep { lhs: acc, rhs, result };
+                acc = result;
+                step
+            })
+            .collect()
+    }
+
+    /// Ground-truth final answer.
+    pub fn answer(&self) -> i64 {
+        self.items.iter().copied().max().expect("non-empty items")
+    }
+
+    /// `Q:max(3,8,5)=?\n`
+    pub fn query_text(&self) -> String {
+        let digits: Vec<String> = self.items.iter().map(|d| d.to_string()).collect();
+        format!("Q:max({})=?\n", digits.join(","))
+    }
+
+    /// `S:max(3,8)=8;max(8,5)=8;A:8\n`
+    pub fn solution_text(&self) -> String {
+        let mut s = String::from("S:");
+        for step in self.steps() {
+            s.push_str(&step.text());
+            s.push(';');
+        }
+        s.push_str(&format!("A:{}\n", self.answer()));
+        s
+    }
+
+    /// Query + solution — one LM training document.
+    pub fn document(&self) -> String {
+        format!("{}{}", self.query_text(), self.solution_text())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(1234, 0)
+    }
+
+    #[test]
+    fn steps_chain_correctly() {
+        let p = MaxProblem { items: vec![3, 8, 5] };
+        let steps = p.steps();
+        assert_eq!(steps.len(), 2);
+        assert_eq!(steps[0].text(), "max(3,8)=8");
+        assert_eq!(steps[1].text(), "max(8,5)=8");
+        assert_eq!(p.answer(), 8);
+    }
+
+    #[test]
+    fn surface_forms() {
+        let p = MaxProblem { items: vec![3, 8, 5] };
+        assert_eq!(p.query_text(), "Q:max(3,8,5)=?\n");
+        assert_eq!(p.solution_text(), "S:max(3,8)=8;max(8,5)=8;A:8\n");
+    }
+
+    #[test]
+    fn sample_respects_difficulty_and_alphabet() {
+        let tok = crate::tokenizer::Tokenizer::new();
+        let mut r = rng();
+        for k in MIN_OPS..=MAX_OPS {
+            for _ in 0..50 {
+                let p = MaxProblem::sample(&mut r, k);
+                assert_eq!(p.difficulty(), k);
+                tok.encode(&p.document()).unwrap();
+                for s in p.steps() {
+                    assert!((0..MODULUS).contains(&s.result));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn surface_lengths_fit_engine_shapes() {
+        // query must fit prefill_len (32), solution must fit gen_max_new
+        // (96) and query+solution must fit prm_len (128) at the hardest
+        // difficulty — see engine::backend::EngineShapes::sim_default.
+        let mut r = rng();
+        for _ in 0..200 {
+            let p = MaxProblem::sample(&mut r, MAX_OPS);
+            assert!(p.query_text().len() <= 32, "query too long");
+            assert!(p.solution_text().len() <= 96, "solution too long");
+            assert!(p.document().len() <= 128, "document too long");
+        }
+    }
+}

@@ -2,8 +2,10 @@
 //!
 //! Stand-in for the paper's NuminaMath-CoT workload (see DESIGN.md §2):
 //! multi-step **modular-arithmetic chains** with chain-of-thought
-//! solutions. The two properties the paper's evaluation depends on are
-//! preserved:
+//! solutions, plus a second **max-value** domain ([`maxval`]) whose
+//! comparison steps are deliberately easier — agentic chains mix the
+//! two so per-step difficulty is genuinely heterogeneous. The two
+//! properties the paper's evaluation depends on are preserved:
 //!
 //! 1. a *difficulty gradient* — accuracy of a sampled model decays with
 //!    chain length `k`, so routing by predicted difficulty matters;
@@ -17,6 +19,250 @@
 
 pub mod arith;
 pub mod corpus;
+pub mod maxval;
 
 pub use arith::{Op, Problem, StepRecord};
 pub use corpus::{emit_all, CorpusConfig};
+pub use maxval::{MaxProblem, MaxStep};
+
+/// A problem from either task domain, behind one accumulator-chain
+/// interface: every problem is a left-to-right chain of `k` steps, each
+/// combining the running accumulator with the next operand. This is the
+/// single grammar definition shared by the SimBackend emulator (which
+/// parses prompts back into problems) and the agentic chain tier
+/// (`server::chain`, which re-seeds a step's first operand with the
+/// previous step's answer).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ChainProblem {
+    Arith(arith::Problem),
+    Max(maxval::MaxProblem),
+}
+
+impl ChainProblem {
+    /// Parse a query expression (the text between `Q:` and `=?`) into a
+    /// problem. Dispatches on the unambiguous `max(` prefix; anything
+    /// else is tried as an arithmetic op chain. `None` = out of domain.
+    pub fn parse_expr(expr: &str) -> Option<ChainProblem> {
+        if let Some(inner) = expr.strip_prefix("max(") {
+            let inner = inner.strip_suffix(')')?;
+            let items: Vec<i64> = inner
+                .split(',')
+                .map(|d| d.parse().ok())
+                .collect::<Option<_>>()?;
+            if items.len() < 2 {
+                return None;
+            }
+            return Some(ChainProblem::Max(MaxProblem { items }));
+        }
+        let mut chars = expr.chars().peekable();
+        let first = take_int(&mut chars)?;
+        let mut chain = Vec::new();
+        while let Some(&c) = chars.peek() {
+            let op = match c {
+                '+' => Op::Add,
+                '-' => Op::Sub,
+                '*' => Op::Mul,
+                _ => return None,
+            };
+            chars.next();
+            chain.push((op, take_int(&mut chars)?));
+        }
+        if chain.is_empty() {
+            return None;
+        }
+        Some(ChainProblem::Arith(Problem { first, chain }))
+    }
+
+    /// Short domain tag (`arith` | `max`) — the trace-file spelling.
+    pub fn domain(&self) -> &'static str {
+        match self {
+            ChainProblem::Arith(_) => "arith",
+            ChainProblem::Max(_) => "max",
+        }
+    }
+
+    /// Number of CoT steps.
+    pub fn k(&self) -> usize {
+        match self {
+            ChainProblem::Arith(p) => p.chain.len(),
+            ChainProblem::Max(p) => p.difficulty(),
+        }
+    }
+
+    /// Initial accumulator (the first operand / item).
+    pub fn start(&self) -> i64 {
+        match self {
+            ChainProblem::Arith(p) => p.first,
+            ChainProblem::Max(p) => p.items[0],
+        }
+    }
+
+    /// Ground-truth final answer.
+    pub fn answer(&self) -> i64 {
+        match self {
+            ChainProblem::Arith(p) => p.answer(),
+            ChainProblem::Max(p) => p.answer(),
+        }
+    }
+
+    /// The i-th step's surface form up to and including `=`, given the
+    /// running accumulator, plus the correct result: `("7+8=", 5)` or
+    /// `("max(7,8)=", 8)`. The caller appends the (possibly slipped)
+    /// result digit. `None` when `i >= k()`.
+    pub fn step_stem(&self, i: usize, acc: i64) -> Option<(String, i64)> {
+        match self {
+            ChainProblem::Arith(p) => {
+                let &(op, rhs) = p.chain.get(i)?;
+                Some((format!("{acc}{}{rhs}=", op.symbol()), op.apply(acc, rhs)))
+            }
+            ChainProblem::Max(p) => {
+                let &rhs = p.items.get(i + 1)?;
+                Some((format!("max({acc},{rhs})="), acc.max(rhs)))
+            }
+        }
+    }
+
+    /// Ground-truth step texts (no trailing separators), e.g.
+    /// `["7+8=5", "5-5=0"]` — what the PRM scores prefixes against.
+    pub fn step_texts(&self) -> Vec<String> {
+        match self {
+            ChainProblem::Arith(p) => p.steps().iter().map(|s| s.text()).collect(),
+            ChainProblem::Max(p) => p.steps().iter().map(|s| s.text()).collect(),
+        }
+    }
+
+    /// Relative slip difficulty of this domain's steps under sampled
+    /// decoding (1.0 = the arithmetic baseline). Comparison steps carry
+    /// no carry table, so the emulated generator slips on them half as
+    /// often — the cross-domain difficulty gradient agentic chains mix.
+    pub fn slip_factor(&self) -> f64 {
+        match self {
+            ChainProblem::Arith(_) => 1.0,
+            ChainProblem::Max(_) => 0.5,
+        }
+    }
+
+    /// The same problem re-seeded with a new first operand / item — how
+    /// a chain derives step k+1's prompt from step k's selected answer.
+    pub fn with_first(&self, v: i64) -> ChainProblem {
+        match self {
+            ChainProblem::Arith(p) => ChainProblem::Arith(Problem {
+                first: v,
+                chain: p.chain.clone(),
+            }),
+            ChainProblem::Max(p) => {
+                let mut items = p.items.clone();
+                items[0] = v;
+                ChainProblem::Max(MaxProblem { items })
+            }
+        }
+    }
+
+    /// `Q:<expr>=?\n`
+    pub fn query_text(&self) -> String {
+        match self {
+            ChainProblem::Arith(p) => p.query_text(),
+            ChainProblem::Max(p) => p.query_text(),
+        }
+    }
+
+    /// `S:<step;>*A:<answer>\n`
+    pub fn solution_text(&self) -> String {
+        match self {
+            ChainProblem::Arith(p) => p.solution_text(),
+            ChainProblem::Max(p) => p.solution_text(),
+        }
+    }
+}
+
+fn take_int(chars: &mut std::iter::Peekable<std::str::Chars<'_>>) -> Option<i64> {
+    let mut s = String::new();
+    while let Some(&c) = chars.peek() {
+        if c.is_ascii_digit() {
+            s.push(c);
+            chars.next();
+        } else {
+            break;
+        }
+    }
+    s.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_expr_dispatches_on_domain() {
+        let a = ChainProblem::parse_expr("7+8-5").unwrap();
+        assert_eq!(a.domain(), "arith");
+        assert_eq!(a.k(), 2);
+        assert_eq!(a.start(), 7);
+        assert_eq!(a.answer(), 0);
+        let m = ChainProblem::parse_expr("max(3,8,5)").unwrap();
+        assert_eq!(m.domain(), "max");
+        assert_eq!(m.k(), 2);
+        assert_eq!(m.start(), 3);
+        assert_eq!(m.answer(), 8);
+    }
+
+    #[test]
+    fn parse_expr_rejects_out_of_domain() {
+        assert!(ChainProblem::parse_expr("7").is_none()); // no ops
+        assert!(ChainProblem::parse_expr("7/2").is_none()); // unknown op
+        assert!(ChainProblem::parse_expr("max(5)").is_none()); // one item
+        assert!(ChainProblem::parse_expr("max(3,8").is_none()); // unclosed
+        assert!(ChainProblem::parse_expr("max(3,x)").is_none()); // non-digit
+        assert!(ChainProblem::parse_expr("").is_none());
+    }
+
+    #[test]
+    fn step_stem_follows_accumulator() {
+        let a = ChainProblem::parse_expr("7+8-5").unwrap();
+        assert_eq!(a.step_stem(0, 7).unwrap(), ("7+8=".to_string(), 5));
+        // a slipped accumulator is continued from, like a real LM would
+        assert_eq!(a.step_stem(1, 9).unwrap(), ("9-5=".to_string(), 4));
+        assert!(a.step_stem(2, 4).is_none());
+        let m = ChainProblem::parse_expr("max(3,8,5)").unwrap();
+        assert_eq!(m.step_stem(0, 3).unwrap(), ("max(3,8)=".to_string(), 8));
+        assert_eq!(m.step_stem(1, 8).unwrap(), ("max(8,5)=".to_string(), 8));
+        assert!(m.step_stem(2, 8).is_none());
+    }
+
+    #[test]
+    fn step_texts_match_solution_text() {
+        for expr in ["7+8-5*3", "max(1,9,2,7)"] {
+            let p = ChainProblem::parse_expr(expr).unwrap();
+            let joined = format!("S:{};A:{}\n", p.step_texts().join(";"), p.answer());
+            assert_eq!(joined, p.solution_text());
+        }
+    }
+
+    #[test]
+    fn with_first_reseeds_the_chain() {
+        let a = ChainProblem::parse_expr("7+8-5").unwrap().with_first(2);
+        assert_eq!(a.query_text(), "Q:2+8-5=?\n");
+        assert_eq!(a.start(), 2);
+        let m = ChainProblem::parse_expr("max(3,8,5)").unwrap().with_first(9);
+        assert_eq!(m.query_text(), "Q:max(9,8,5)=?\n");
+        assert_eq!(m.answer(), 9);
+    }
+
+    #[test]
+    fn parse_roundtrips_query_text() {
+        let mut rng = crate::util::rng::Rng::new(77, 0);
+        for k in arith::MIN_OPS..=arith::MAX_OPS {
+            for p in [
+                ChainProblem::Arith(Problem::sample(&mut rng, k)),
+                ChainProblem::Max(MaxProblem::sample(&mut rng, k)),
+            ] {
+                let q = p.query_text();
+                let expr = q
+                    .strip_prefix("Q:")
+                    .and_then(|r| r.strip_suffix("=?\n"))
+                    .unwrap();
+                assert_eq!(ChainProblem::parse_expr(expr).unwrap(), p);
+            }
+        }
+    }
+}

@@ -30,6 +30,17 @@ pub const ALPHABET: &[char] = &[
     'Q',  // 19
     'S',  // 20
     'A',  // 21
+    // The max-value domain (taskgen::maxval) extends the alphabet
+    // *append-only*: existing ids above are frozen (the python side
+    // hard-depends on them via vocab.json), new surface forms take the
+    // next free ids. Artifacts lowered against the 22-entry vocab fail
+    // the `check_vocab_json` size check with a clear regen message.
+    'm',  // 22
+    'a',  // 23
+    'x',  // 24
+    '(',  // 25
+    ')',  // 26
+    ',',  // 27
 ];
 
 /// Token id of the padding token.
@@ -199,5 +210,16 @@ mod tests {
         assert_eq!(t.encode("+").unwrap(), vec![12]);
         assert_eq!(t.encode("\n").unwrap(), vec![EOS_ID]);
         assert_eq!(t.encode("Q").unwrap(), vec![19]);
+        // max-domain extension chars are append-only after the frozen ids
+        assert_eq!(t.encode("m").unwrap(), vec![22]);
+        assert_eq!(t.encode(",").unwrap(), vec![27]);
+    }
+
+    #[test]
+    fn max_domain_roundtrip() {
+        let t = Tokenizer::new();
+        let text = "Q:max(3,8,5)=?\nS:max(3,8)=8;max(8,5)=8;A:8\n";
+        let ids = t.encode(text).unwrap();
+        assert_eq!(t.decode(&ids).unwrap(), text);
     }
 }

@@ -1,0 +1,419 @@
+//! The agentic chain tier end-to-end, on the artifact-free sim backend:
+//!
+//! * temp-0 chain results are identical across pool sizes 1, 2 and 4,
+//!   and between the blocking reference runner and the stepped driver;
+//! * one shared chain budget achieves ≥ the accuracy of the same steps
+//!   under a static per-step split at equal total budget — including a
+//!   crafted chain where cross-step banking strictly wins;
+//! * a `ChainAllocator` grant makes a stronger strategy feasible for a
+//!   later step (the router upgrade the re-split exists for);
+//! * chain budget exhaustion mid-chain reports partial steps with
+//!   `budget_exhausted` instead of hanging, on both execution paths;
+//! * a stepped run with chains carries the `chain` section (goodput,
+//!   realloc grants) in its serve report.
+
+use ttc::config::{BackendKind, Config};
+use ttc::costmodel::CostModel;
+use ttc::data::Splits;
+use ttc::engine::{EmbedKind, EnginePool};
+use ttc::matrix::{Matrix, MatrixEntry};
+use ttc::probe::{CalibratedProbe, FeatureBuilder, Platt};
+use ttc::router::{Lambdas, Router};
+use ttc::server::chain::{run_chain_blocking, sample_chains, ChainOutcome, ChainSpec};
+use ttc::server::driver::{self, Mode};
+use ttc::server::loadgen::{self, Arrivals};
+use ttc::strategies::{Budget, Executor, Strategy};
+use ttc::taskgen::ChainProblem;
+use ttc::util::rng::Rng;
+
+fn pool(engines: usize) -> (EnginePool, Executor) {
+    let mut cfg = Config::default();
+    cfg.engine.backend = BackendKind::Sim;
+    cfg.engine.sim_clock = true; // deterministic modeled latencies
+    cfg.engine.engines = engines;
+    let pool = EnginePool::start(&cfg).unwrap();
+    // temperature 0: generation is a pure function of the prompt
+    let executor = Executor::new(pool.handle(), pool.clock.clone(), 0.0);
+    (pool, executor)
+}
+
+fn spec(id: &str, budget: Budget, exprs: &[&str]) -> ChainSpec {
+    ChainSpec {
+        id: id.to_string(),
+        arrival_ms: 0.0,
+        budget,
+        steps: exprs
+            .iter()
+            .map(|e| ChainProblem::parse_expr(e).expect("valid step expr"))
+            .collect(),
+    }
+}
+
+/// Everything time-independent must match between two runs of the same
+/// chain (latencies and ms-axis grant sums legitimately differ).
+fn assert_same_chain(a: &ChainOutcome, b: &ChainOutcome, label: &str) {
+    assert_eq!(a.id, b.id, "{label}: id diverged");
+    assert_eq!(a.steps_total, b.steps_total, "{label}: steps_total diverged");
+    assert_eq!(a.steps.len(), b.steps.len(), "{label}: step count diverged");
+    assert_eq!(a.all_correct, b.all_correct, "{label}: all_correct diverged");
+    assert_eq!(a.tokens, b.tokens, "{label}: tokens diverged");
+    assert_eq!(
+        a.budget_exhausted, b.budget_exhausted,
+        "{label}: budget_exhausted diverged"
+    );
+    // token-axis banking is time-independent, so grant accounting on
+    // that axis must agree exactly
+    assert_eq!(
+        a.granted_tokens, b.granted_tokens,
+        "{label}: granted_tokens diverged"
+    );
+    for (i, (sa, sb)) in a.steps.iter().zip(&b.steps).enumerate() {
+        assert_eq!(sa.strategy, sb.strategy, "{label} step {i}: strategy diverged");
+        assert_eq!(sa.correct, sb.correct, "{label} step {i}: correct diverged");
+        assert_eq!(sa.tokens, sb.tokens, "{label} step {i}: tokens diverged");
+        assert_eq!(sa.answer, sb.answer, "{label} step {i}: answer diverged");
+        assert_eq!(
+            sa.budget_exhausted, sb.budget_exhausted,
+            "{label} step {i}: budget_exhausted diverged"
+        );
+        assert_eq!(
+            sa.grant.extra_tokens, sb.grant.extra_tokens,
+            "{label} step {i}: token grant diverged"
+        );
+    }
+}
+
+#[test]
+fn chain_results_identical_across_pool_sizes_and_blocking() {
+    let mode = Mode::Static(Strategy::mv(2));
+    // no deadlines, so outcomes are wall-clock-independent: unlimited
+    // chains plus token-capped chains (the token axis of the allocator
+    // is a pure function of spends, identical on every path)
+    let specs = vec![
+        spec("c0", Budget::unlimited(), &["7+8-5", "max(0,4,9)", "1*2+3"]),
+        spec("c1", Budget::unlimited(), &["2+2", "9-4*2"]),
+        spec("c2", Budget::unlimited().with_max_tokens(64), &["7+8-5*2", "max(3,8,5)"]),
+        spec("c3", Budget::unlimited().with_max_tokens(48), &["1+2+3", "4*5-6"]),
+    ];
+
+    // reference: one engine, blocking path, one chain at a time
+    let (_p1, serial) = pool(1);
+    let reference: Vec<ChainOutcome> = specs
+        .iter()
+        .map(|s| run_chain_blocking(&serial, &mode, s.clone(), true).unwrap())
+        .collect();
+    assert!(
+        reference.iter().all(|c| c.steps_completed() == c.steps_total),
+        "reference chains must run all their steps"
+    );
+
+    for engines in [1usize, 2, 4] {
+        // concurrency 1: chain steps run one at a time, so the stepper's
+        // between-request reallocator has no running peers to grant to
+        // and the token-capped chains stay exactly comparable
+        let (_pn, executor) = pool(engines);
+        let report = driver::run_traffic(&executor, &mode, Vec::new(), specs.clone(), 1).unwrap();
+        assert_eq!(report.chains.len(), specs.len());
+        for (got, want) in report.chains.iter().zip(&reference) {
+            assert_same_chain(got, want, &format!("{} on {engines} engine(s)", want.id));
+        }
+
+        // interleaved: the unlimited chains in flight concurrently
+        // (unlimited budgets take nothing from the reallocator, so
+        // interleaving cannot change outcomes either)
+        let report =
+            driver::run_traffic(&executor, &mode, Vec::new(), specs[..2].to_vec(), 4).unwrap();
+        for (got, want) in report.chains.iter().zip(&reference[..2]) {
+            assert_same_chain(
+                got,
+                want,
+                &format!("{} interleaved on {engines} engine(s)", want.id),
+            );
+        }
+    }
+}
+
+/// An arith→max chain where the shared pool strictly beats the static
+/// split at equal total: the max step's difficulty weight is half an
+/// arithmetic step's (comparisons don't carry), so its *nominal* token
+/// share undershoots its real cost — only the tokens banked by the
+/// cheap first step let it finish. Sized from measured untruncated
+/// runs, so the construction is exact rather than tuned.
+fn crafted_banking_chain(executor: &Executor, strategy: &Strategy, id: &str) -> (ChainSpec, usize) {
+    let easy = ChainProblem::parse_expr("7+8-5*2+6").unwrap(); // arith, weight 4.0
+    let hard = ChainProblem::parse_expr("max(3,8,5,2,7)").unwrap(); // max, weight 2.0
+    let o_easy = executor
+        .run_budgeted(strategy, &easy.query_text(), Budget::unlimited())
+        .unwrap();
+    assert!(
+        o_easy.is_correct(&easy.answer().to_string()),
+        "temp-0 untruncated run of the easy step must be correct"
+    );
+    let e = o_easy.tokens;
+    // step 2 actually runs re-seeded with step 1's answer
+    let hard_actual = hard.with_first(easy.answer().rem_euclid(10));
+    let o_hard = executor
+        .run_budgeted(strategy, &hard_actual.query_text(), Budget::unlimited())
+        .unwrap();
+    assert!(
+        o_hard.is_correct(&hard_actual.answer().to_string()),
+        "temp-0 untruncated run of the hard step must be correct"
+    );
+    let h = o_hard.tokens;
+
+    // weights 4:2 ⇒ static shares are floor(2T/3) and floor(T/3)
+    let total = e + h + 8;
+    let nominal_hard = total / 3;
+    assert!(
+        nominal_hard + 4 <= h,
+        "static split must truncate the max step before its answer \
+         (nominal {nominal_hard}, needs {h})"
+    );
+    assert!(
+        e <= 2 * total / 3,
+        "easy step must fit its own static share (needs {e}, share {})",
+        2 * total / 3
+    );
+    (
+        spec(id, Budget::unlimited().with_max_tokens(total), &["7+8-5*2+6", "max(3,8,5,2,7)"]),
+        total,
+    )
+}
+
+#[test]
+fn shared_budget_beats_static_split_at_equal_total() {
+    let (_pool, executor) = pool(1);
+    let mode = Mode::Static(Strategy::mv(1));
+    let (chain, total) = crafted_banking_chain(&executor, &Strategy::mv(1), "crafted");
+
+    let shared = run_chain_blocking(&executor, &mode, chain.clone(), true).unwrap();
+    let static_ = run_chain_blocking(&executor, &mode, chain, false).unwrap();
+
+    // shared pool: the easy step banks its surplus, the max step's slice
+    // is the whole remainder — a counted grant — and the chain is fully
+    // correct under the same total budget
+    assert!(shared.all_correct, "shared-pool chain must be fully correct");
+    assert!(shared.goodput_ok);
+    assert!(!shared.budget_exhausted);
+    assert!(shared.tokens <= total, "shared run must respect the chain total");
+    assert!(shared.realloc_grants >= 1, "banking must be counted as a grant");
+    assert!(shared.granted_tokens > 0);
+    assert!(
+        shared.steps[1].grant.extra_tokens > 0,
+        "the later step must receive the banked tokens"
+    );
+
+    // static split: same steps, same total, no banking — the max step is
+    // cut off mid-chain-of-thought and the chain goes wrong
+    assert!(static_.steps[0].correct, "static easy step fits its share");
+    assert!(
+        !static_.steps[1].correct,
+        "static max step must be truncated into a wrong answer"
+    );
+    assert!(static_.steps[1].budget_exhausted);
+    assert!(static_.budget_exhausted);
+    assert!(!static_.all_correct);
+    assert!(!static_.goodput_ok);
+    assert_eq!(static_.realloc_grants, 0, "a static split never grants");
+}
+
+#[test]
+fn shared_budget_accuracy_dominates_static_split_on_sampled_chains() {
+    let (_pool, executor) = pool(1);
+    let mode = Mode::Static(Strategy::mv(2));
+    let mut rng = Rng::new(7, 0);
+    let specs = sample_chains(
+        12,
+        &Budget::unlimited().with_max_tokens(120),
+        Arrivals::Poisson { rate: 50.0 },
+        &mut rng,
+    );
+
+    let mut shared_steps = 0usize;
+    let mut static_steps = 0usize;
+    let mut shared_chains = 0usize;
+    let mut static_chains = 0usize;
+    for s in specs {
+        let shared = run_chain_blocking(&executor, &mode, s.clone(), true).unwrap();
+        let static_ = run_chain_blocking(&executor, &mode, s, false).unwrap();
+        shared_steps += shared.steps.iter().filter(|r| r.correct).count();
+        static_steps += static_.steps.iter().filter(|r| r.correct).count();
+        shared_chains += shared.all_correct as usize;
+        static_chains += static_.all_correct as usize;
+    }
+    // the paper's chain-tier claim at temp 0: re-splitting one shared
+    // budget never loses to freezing the same split up front
+    assert!(
+        shared_steps >= static_steps,
+        "shared pool lost step accuracy: {shared_steps} < {static_steps}"
+    );
+    assert!(
+        shared_chains >= static_chains,
+        "shared pool lost chain accuracy: {shared_chains} < {static_chains}"
+    );
+}
+
+/// A router whose probe predicts the same accuracy for every strategy
+/// (Platt slope 0 ⇒ â ≡ 0.5) and whose negative λ_L *rewards* predicted
+/// latency: it always picks the most expensive strategy the deadline
+/// admits. Against a synthetic cost table (cheap mv@1 at 10ms, pricey
+/// mv@4 at 900ms) that makes strategy choice a pure function of the
+/// budget slice — the deterministic probe an upgrade test needs.
+fn expensive_feasible_router(executor: &Executor) -> (Router, Lambdas) {
+    let cheap = Strategy::mv(1);
+    let pricey = Strategy::mv(4);
+    let entries = |s: &Strategy, tokens: usize, latency_ms: f64| -> Vec<MatrixEntry> {
+        (0..3)
+            .map(|i| MatrixEntry {
+                query_id: format!("q{i}"),
+                split: "train".into(),
+                strategy: s.id(),
+                repeat: 0,
+                k: 2,
+                correct: true,
+                tokens,
+                latency_ms,
+                rounds: 1,
+            })
+            .collect()
+    };
+    let mut matrix = Matrix::default();
+    matrix.entries.extend(entries(&cheap, 10, 10.0));
+    matrix.entries.extend(entries(&pricey, 40, 900.0));
+    let costs = CostModel::fit_with_buckets(&matrix, &[400.0, 800.0, 1600.0, 3200.0]);
+
+    let info = executor.engine.info().unwrap();
+    let d_model = info
+        .req("shapes")
+        .unwrap()
+        .req_usize("probe_features")
+        .unwrap()
+        - FeatureBuilder::aux_dim();
+    let probe = CalibratedProbe {
+        platt: Platt { a: 0.0, b: 0.0 },
+        embed_kind: EmbedKind::Pool,
+        params: Vec::new(),
+    };
+    let router = Router::new(
+        vec![cheap, pricey],
+        probe,
+        costs,
+        FeatureBuilder::new(d_model, 10),
+    );
+    (router, Lambdas::new(0.0, -1e-4))
+}
+
+#[test]
+fn chain_grant_upgrades_later_step_strategy() {
+    let (_pool, executor) = pool(1);
+    let (router, lambdas) = expensive_feasible_router(&executor);
+    let mode = Mode::Adaptive(router, lambdas);
+
+    // two equal-weight steps under a 1700ms chain deadline: each nominal
+    // slice is 850ms, which excludes the 900ms strategy. The first step
+    // finishes in well under its slice on the modeled clock, so the
+    // re-split hands the second step the whole remainder (> 900ms) and
+    // the router upgrades it.
+    let chain = spec(
+        "upgrade",
+        Budget::unlimited().with_deadline_ms(1700.0),
+        &["7+8-5", "1+2-4"],
+    );
+    let out = run_chain_blocking(&executor, &mode, chain, true).unwrap();
+
+    assert_eq!(out.steps_completed(), 2);
+    assert!(out.steps.iter().all(|s| s.routed));
+    assert_eq!(
+        out.steps[0].strategy,
+        Strategy::mv(1).id(),
+        "step 1's nominal slice must exclude the expensive strategy"
+    );
+    assert!(
+        out.steps[1].grant.extra_ms > 0.0,
+        "the early finish must be re-granted to the later step"
+    );
+    assert!(out.realloc_grants >= 1);
+    assert_eq!(
+        out.steps[1].strategy,
+        Strategy::mv(4).id(),
+        "the widened slice must make the expensive strategy feasible"
+    );
+    assert!(!out.budget_exhausted);
+}
+
+#[test]
+fn chain_exhaustion_reports_partial_steps_blocking() {
+    let (_pool, executor) = pool(1);
+    let mode = Mode::Static(Strategy::mv(2));
+    // a chain deadline far below one modeled engine call: step 1 is
+    // admitted (0 < deadline), runs out mid-call, and the charge it
+    // leaves on the sim clock exhausts the pool before step 2
+    let chain = spec(
+        "exhausted",
+        Budget::unlimited().with_deadline_ms(0.01),
+        &["7+8-5", "2+2", "1+2-4"],
+    );
+    let out = run_chain_blocking(&executor, &mode, chain, true).unwrap();
+    assert_eq!(out.steps_total, 3);
+    assert_eq!(out.steps_completed(), 1, "only the first step may run");
+    assert!(out.budget_exhausted);
+    assert!(!out.all_correct);
+    assert!(!out.goodput_ok);
+    assert!(out.steps[0].budget_exhausted);
+}
+
+#[test]
+fn chain_exhaustion_cannot_hang_the_stepped_driver() {
+    let (_pool, executor) = pool(1);
+    let mode = Mode::Static(Strategy::mv(2));
+    let chain = spec(
+        "exhausted",
+        Budget::unlimited().with_deadline_ms(0.01),
+        &["7+8-5", "2+2", "1+2-4"],
+    );
+    // must terminate (wall clock here, so 0 or 1 steps may have run
+    // before the pool is spent) and report a partial, exhausted chain
+    let report = driver::run_traffic(&executor, &mode, Vec::new(), vec![chain], 2).unwrap();
+    assert_eq!(report.chains.len(), 1);
+    let out = &report.chains[0];
+    assert!(out.steps_completed() < out.steps_total);
+    assert!(out.budget_exhausted);
+    assert!(!out.goodput_ok);
+    let chain_json = report.chain.as_ref().expect("chain section in serve report");
+    assert_eq!(chain_json.req_f64("chains_admitted").unwrap(), 1.0);
+    assert_eq!(chain_json.req_f64("chains_exhausted").unwrap(), 1.0);
+    assert_eq!(chain_json.req_f64("chains_completed").unwrap(), 0.0);
+    assert_eq!(chain_json.req_f64("goodput").unwrap(), 0.0);
+}
+
+#[test]
+fn serve_report_carries_chain_goodput_and_grants() {
+    let (_pool, executor) = pool(2);
+    let mode = Mode::Static(Strategy::mv(1));
+    let (c0, _) = crafted_banking_chain(&executor, &Strategy::mv(1), "g0");
+    let (c1, _) = crafted_banking_chain(&executor, &Strategy::mv(1), "g1");
+
+    let splits = Splits::synthesize(5);
+    let mut rng = Rng::new(11, 0);
+    let singles = loadgen::schedule(&splits.test, 3, Arrivals::Closed, &mut rng);
+
+    let report = driver::run_traffic(&executor, &mode, singles, vec![c0, c1], 3).unwrap();
+    assert_eq!(report.served.len(), 3, "singles serve alongside chains");
+    assert_eq!(report.chains.len(), 2);
+    assert!(report.chains.iter().all(|c| c.goodput_ok));
+
+    let v = report.to_json();
+    let chain = v.req("chain").expect("chain section in serve report json");
+    assert_eq!(chain.req_f64("chains_admitted").unwrap(), 2.0);
+    assert_eq!(chain.req_f64("chains_completed").unwrap(), 2.0);
+    assert_eq!(chain.req_f64("chains_exhausted").unwrap(), 0.0);
+    assert_eq!(chain.req_f64("goodput").unwrap(), 1.0);
+    assert_eq!(chain.req_f64("steps_completed").unwrap(), 4.0);
+    // each crafted chain banks its easy step's surplus into the max step
+    assert!(
+        chain.req_f64("realloc_grants").unwrap() >= 2.0,
+        "both chains must report a cross-step grant: {chain:?}"
+    );
+    assert!(chain.req_f64("realloc_tokens_granted").unwrap() > 0.0);
+    report.log_summary("chain-integration");
+}
